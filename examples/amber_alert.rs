@@ -1,0 +1,100 @@
+//! AMBER-alert scenario (paper §II-A): track a *red* vehicle across a
+//! camera network under an end-to-end latency bound, with the full
+//! control loop — the paper's Fig. 13a worst-case burst, end to end.
+//!
+//! Runs the discrete-event pipeline over the 3-segment stitched video:
+//! quiet → red-vehicle burst → red-pedestrian swarm, and prints the
+//! latency + per-stage behavior the paper plots.
+//!
+//!     cargo run --release --example amber_alert
+
+use anyhow::Result;
+use std::collections::HashMap;
+use uals::backend::{BackendQuery, CostModel, Detector};
+use uals::color::NamedColor;
+use uals::config::{CostConfig, QueryConfig, ShedderConfig};
+use uals::features::Extractor;
+use uals::pipeline::{run_sim, Policy, SimConfig};
+use uals::utility::{train, Combine};
+use uals::video::{build_dataset, DatasetConfig, Paint, SegmentedVideo};
+
+fn main() -> Result<()> {
+    // Query: red vehicles, 1-second end-to-end bound.
+    let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0);
+
+    // Train on an auxiliary corpus (the shedder must generalize).
+    let train_videos = build_dataset(&DatasetConfig {
+        num_seeds: 2,
+        videos_per_seed: 2,
+        frames_per_video: 300,
+        base_seed: 0xA11CE,
+        target_boost: 2.0,
+    });
+    let idx: Vec<usize> = (0..train_videos.len()).collect();
+    let model = train(&train_videos, &idx, &query.colors, Combine::Single);
+
+    // The worst-case scenario video: 3 × 60 s segments @ 10 fps.
+    let sv = SegmentedVideo::fig13a(0xA33, 600, Paint::VividRed);
+    println!(
+        "scenario: {} frames, segments of {} frames (quiet | red burst | red swarm)",
+        sv.len(),
+        sv.len() / 3
+    );
+
+    let cfg = SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: query.clone(),
+        backend_tokens: 1,
+        policy: Policy::UtilityControlLoop,
+        seed: 0xA3,
+        fps_total: sv.fps(),
+    };
+    let extractor = Extractor::native(model);
+    let mut backend = BackendQuery::new(
+        query.clone(),
+        Detector::native(12, 25.0),
+        CostModel::new(cfg.costs.clone(), cfg.seed),
+        25.0,
+    );
+    let mut bgs = HashMap::new();
+    bgs.insert(0u32, sv.background().to_vec());
+    let report = run_sim(sv.iter(), &bgs, &cfg, &extractor, &mut backend)?;
+
+    println!("\n-- per-5s-window max E2E latency (bound {} ms) --", query.latency_bound_ms);
+    for (t, max, _mean, n) in report.latency_windows.rows() {
+        if n == 0 {
+            continue;
+        }
+        let bar = "#".repeat((max / 40.0).min(60.0) as usize);
+        println!("{:>6.0}s  {:>7.0} ms  {}", t / 1000.0, max, bar);
+    }
+
+    println!("\n-- per-5s-window frames shed / DNN-processed --");
+    let shed = report.stages.counts(uals::metrics::Stage::Shed);
+    let dnn = report.stages.counts(uals::metrics::Stage::Dnn);
+    for (i, (t, s)) in shed.iter().enumerate() {
+        let d = dnn.get(i).map(|x| x.1).unwrap_or(0);
+        println!("{:>6.0}s  shed {:>3}  dnn {:>3}", t / 1000.0, s, d);
+    }
+
+    println!(
+        "\nsummary: ingress {}, shed {} ({:.1}%), QoR {:.3}, violations {} ({:.2}%), max E2E {:.0} ms",
+        report.ingress,
+        report.shed,
+        100.0 * report.observed_drop_rate(),
+        report.qor.overall(),
+        report.latency.violations(),
+        100.0 * report.latency.violation_rate(),
+        report.latency.max_ms()
+    );
+
+    // The paper's expectations for this scenario.
+    assert!(
+        report.latency.violation_rate() < 0.05,
+        "latency must stay (almost always) under the bound"
+    );
+    assert!(report.shed > 0, "the burst segment must force shedding");
+    println!("amber_alert OK");
+    Ok(())
+}

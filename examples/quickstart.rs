@@ -1,0 +1,79 @@
+//! Quickstart: train a utility model, score an unseen video through the
+//! **AOT artifact path** (Pallas kernel → HLO → PJRT), shed at a fixed
+//! target drop rate, and report QoR — the whole public API in ~80 lines.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use uals::color::NamedColor;
+use uals::features::Extractor;
+use uals::metrics::QorTracker;
+use uals::runtime::Engine;
+use uals::utility::{train, Combine, UtilityCdf};
+use uals::video::{build_dataset, DatasetConfig, MIN_TARGET_PX};
+
+fn main() -> Result<()> {
+    // 1. A small labeled dataset (synthetic VisualRoad substitute).
+    let mut cfg = DatasetConfig::tiny();
+    cfg.frames_per_video = 300;
+    let videos = build_dataset(&cfg);
+    println!("dataset: {} videos × {} frames", videos.len(), videos[0].len());
+
+    // 2. Train the utility function (Eq. 12-14) on all but the first
+    //    video (the densest camera — it makes a meaningful held-out test).
+    let train_idx: Vec<usize> = (1..videos.len()).collect();
+    let model = train(&videos, &train_idx, &[NamedColor::Red], Combine::Single);
+    println!(
+        "trained red model: norm {:.4}, high-sat M+ mass {:.0}%",
+        model.colors[0].norm,
+        100.0 * model.colors[0].m_pos[32..].iter().sum::<f32>()
+            / model.colors[0].m_pos.iter().sum::<f32>().max(1e-9)
+    );
+
+    // 3. Production path: the AOT artifact through PJRT.
+    let engine = Engine::from_default_artifacts()?;
+    println!("PJRT platform: {}", engine.platform());
+    let extractor = Extractor::artifact(&engine, model.clone())?;
+
+    // 4. Seed the threshold CDF (Eq. 16/17) from the training videos.
+    let mut cdf = UtilityCdf::new(2048);
+    let native = Extractor::native(model);
+    for &vi in &train_idx {
+        let v = &videos[vi];
+        for t in 0..v.len() {
+            let f = v.render(t);
+            let (_, u) = native.extract(&f.rgb, v.background())?;
+            cdf.add(u.combined);
+        }
+    }
+    let target_drop = 0.6;
+    let threshold = cdf.threshold_for(target_drop);
+    println!("target drop rate {target_drop} → utility threshold {threshold:.4}");
+
+    // 5. Shed the held-out video and measure QoR (Eq. 2/3).
+    let test = videos.first().unwrap();
+    let mut qor = QorTracker::new();
+    let mut dropped = 0usize;
+    for t in 0..test.len() {
+        let frame = test.render(t);
+        let (_, utility) = extractor.extract(&frame.rgb, test.background())?;
+        let keep = utility.combined >= threshold;
+        dropped += !keep as usize;
+        qor.observe(&frame.target_ids(NamedColor::Red, MIN_TARGET_PX), keep);
+    }
+    let observed = dropped as f64 / test.len() as f64;
+    println!(
+        "unseen video: observed drop rate {observed:.3}, QoR {:.3} over {} targets",
+        qor.overall(),
+        qor.num_objects()
+    );
+
+    // The paper's headline property: high drop rate with (near-)perfect QoR.
+    assert!(
+        qor.overall() >= 0.85,
+        "expected QoR ≥ 0.85, got {:.3}",
+        qor.overall()
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+"""AOT compiler: lower every L2 entry point to HLO text + a JSON manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+resulting ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+executes them on the PJRT CPU client. Python never runs on the request path.
+
+Interchange format is **HLO text**, not ``lowered.compile().serialize()``:
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate binds)
+rejects with ``proto.id() <= INT_MAX``. The HLO *text* parser reassigns ids
+and round-trips cleanly — see /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (with a tupled result)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name):
+    """Lower one ENTRY_POINTS item → (hlo_text, manifest entry)."""
+    fn, spec_builder, out_names = model.ENTRY_POINTS[name]
+    specs = spec_builder()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    entry = {
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+        ],
+        "outputs": out_names,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, entry
+
+
+def build(out_dir: str, names=None) -> dict:
+    """Lower all (or the selected) entry points into ``out_dir``."""
+    os.makedirs(out_dir, exist_ok=True)
+    names = names or list(model.ENTRY_POINTS)
+    manifest = {
+        "frame_h": model.FRAME_H,
+        "frame_w": model.FRAME_W,
+        "detect_grid": model.DETECT_GRID,
+        "train_batch": model.TRAIN_BATCH,
+        "num_bins": 8,
+        "entries": {},
+    }
+    for name in names:
+        text, entry = lower_entry(name)
+        path = os.path.join(out_dir, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = entry
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of entry points")
+    # Back-compat with the original scaffold's `--out` single-file flag.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    build(out_dir or ".", args.only)
+
+
+if __name__ == "__main__":
+    main()

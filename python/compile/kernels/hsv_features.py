@@ -1,0 +1,151 @@
+"""L1 Pallas kernel: saturation/value histogram over hue-selected pixels.
+
+This is the paper's per-frame feature hot-spot (Eq. 6–10): for a color C,
+count foreground pixels whose hue falls in C's (possibly wrap-around) hue
+ranges, binned into an 8×8 saturation/value grid.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation):
+  * A histogram is a scatter on CPU/GPU; scatters are hostile to the MXU.
+    We instead build a one-hot bin-membership matrix ``onehot[BLOCK, 64]``
+    with broadcast compares and reduce it via ``ones[1, BLOCK] @ onehot`` —
+    a single matmul the MXU executes natively.
+  * Pixels stream HBM→VMEM in BLOCK-sized chunks via BlockSpec; the [1, 64]
+    accumulator lives in the (revisited) output block across grid steps, so
+    the frame makes exactly one pass over HBM.
+  * Hue-range membership (e.g. red's [0,10) ∪ [170,180)) is pure mask
+    arithmetic — no data-dependent control flow.
+
+The kernel is always lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret-mode lowering turns the
+kernel into plain HLO that any backend (including the Rust runtime's CPU
+client) runs. Real-TPU performance is *estimated* from the BlockSpec (VMEM
+footprint, MXU op counts) in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NUM_BINS = ref.NUM_BINS                 # 8
+HIST_SIZE = NUM_BINS * NUM_BINS         # 64
+# Pixels per grid step. Swept in the §Perf pass (EXPERIMENTS.md): 4608
+# (= half a 96×96 frame, 2 grid steps) minimizes CPU-PJRT wall time and
+# keeps the one-hot intermediate at 4608×64×4 B ≈ 1.2 MiB — well inside a
+# 16 MiB TPU VMEM budget.
+DEFAULT_BLOCK = 4608
+
+
+def _histogram_kernel(h_ref, s_ref, v_ref, fg_ref, rng_ref, bins_ref, cnt_ref):
+    """Grid step: accumulate one BLOCK of pixels into the 64-bin histogram.
+
+    Refs (shapes are the per-step blocks):
+      h_ref/s_ref/v_ref/fg_ref : [1, BLOCK] f32  — HSV planes + fg mask
+      rng_ref                  : [1, 4]  f32     — [lo1, hi1, lo2, hi2]
+      bins_ref (out, revisited): [1, 64] f32     — histogram accumulator
+      cnt_ref  (out, revisited): [1, 2]  f32     — [in_color_count, fg_count]
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        bins_ref[...] = jnp.zeros_like(bins_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    h = h_ref[0, :]
+    s = s_ref[0, :]
+    v = v_ref[0, :]
+    fg = fg_ref[0, :] > 0.5
+
+    lo1, hi1 = rng_ref[0, 0], rng_ref[0, 1]
+    lo2, hi2 = rng_ref[0, 2], rng_ref[0, 3]
+    in_color = (((h >= lo1) & (h < hi1)) | ((h >= lo2) & (h < hi2))) & fg
+
+    bin_size = ref.BIN_SIZE
+    sb = jnp.clip(jnp.floor(s / bin_size), 0, NUM_BINS - 1).astype(jnp.int32)
+    vb = jnp.clip(jnp.floor(v / bin_size), 0, NUM_BINS - 1).astype(jnp.int32)
+    bin_idx = sb * NUM_BINS + vb                       # [BLOCK]
+
+    # One-hot membership, masked to in-color pixels: [BLOCK, 64].
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bin_idx.shape[0], HIST_SIZE), 1)
+    onehot = (bin_idx[:, None] == iota) & in_color[:, None]
+    onehot = onehot.astype(jnp.float32)
+
+    # MXU-shaped reduction: [1, BLOCK] @ [BLOCK, 64] -> [1, 64].
+    ones = jnp.ones((1, bin_idx.shape[0]), jnp.float32)
+    bins_ref[...] += jnp.dot(ones, onehot, preferred_element_type=jnp.float32)
+
+    icc = jnp.sum(in_color.astype(jnp.float32))
+    fgc = jnp.sum(fg.astype(jnp.float32))
+    cnt_ref[...] += jnp.stack([icc, fgc]).reshape(1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pf_histogram(h, s, v, fg, ranges, *, block=DEFAULT_BLOCK):
+    """Pallas-backed equivalent of :func:`ref.pf_histogram`.
+
+    Args:
+      h, s, v, fg: flat f32 vectors of length N (padded internally to a
+        multiple of ``block``; pad pixels carry fg=0 so they never count).
+      ranges: [4] f32 hue ranges.
+      block: pixels per grid step (VMEM tile size).
+
+    Returns (bins[64], in_color_count, fg_count) as f32.
+    """
+    n = h.shape[0]
+    padded = ((n + block - 1) // block) * block
+    pad = padded - n
+    if pad:
+        h = jnp.pad(h, (0, pad))
+        s = jnp.pad(s, (0, pad))
+        v = jnp.pad(v, (0, pad))
+        fg = jnp.pad(fg, (0, pad))  # zero fg => padding never counted
+    grid = padded // block
+
+    px_spec = pl.BlockSpec((1, block), lambda i: (0, i))
+    full4 = pl.BlockSpec((1, 4), lambda i: (0, 0))
+    out_bins = pl.BlockSpec((1, HIST_SIZE), lambda i: (0, 0))
+    out_cnt = pl.BlockSpec((1, 2), lambda i: (0, 0))
+
+    bins, cnt = pl.pallas_call(
+        _histogram_kernel,
+        grid=(grid,),
+        in_specs=[px_spec, px_spec, px_spec, px_spec, full4],
+        out_specs=[out_bins, out_cnt],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, HIST_SIZE), jnp.float32),
+            jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(
+        h.reshape(1, padded),
+        s.reshape(1, padded),
+        v.reshape(1, padded),
+        fg.reshape(1, padded),
+        ranges.reshape(1, 4).astype(jnp.float32),
+    )
+    return bins[0], cnt[0, 0], cnt[0, 1]
+
+
+def vmem_footprint_bytes(block=DEFAULT_BLOCK):
+    """Estimated per-step VMEM residency of the kernel, in bytes.
+
+    4 input planes of [1, BLOCK] f32, the [BLOCK, 64] one-hot intermediate,
+    and the [1, 64] + [1, 2] accumulators. Used by EXPERIMENTS.md §Perf to
+    justify the BLOCK choice against a 16 MiB VMEM budget.
+    """
+    inputs = 4 * block * 4
+    onehot = block * HIST_SIZE * 4
+    accum = (HIST_SIZE + 2) * 4
+    return inputs + onehot + accum
+
+
+def mxu_flops_per_frame(n_pixels, block=DEFAULT_BLOCK):
+    """MACs issued to the MXU per frame (the ones @ onehot matmul)."""
+    steps = (n_pixels + block - 1) // block
+    return steps * (2 * block * HIST_SIZE)

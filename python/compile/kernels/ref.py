@@ -1,0 +1,154 @@
+"""Pure-jnp reference oracle for the L1 Pallas feature kernel.
+
+This module is the *specification*: every number the Pallas kernel (and, by
+extension, the AOT artifacts and the Rust runtime) produces is checked
+against these functions in pytest. It implements the paper's feature model:
+
+  - OpenCV-convention HSV:  hue in [0, 180), saturation/value in [0, 256)
+  - foreground mask by per-pixel max-channel absolute background difference
+  - Hue Fraction  HF_C(f)            (paper Eq. 6)
+  - Pixel Fraction matrix PF_C(f)    (paper Eq. 9/10), B_S = B_V = 8 bins
+  - per-frame utility U_C(f) = sum(M ⊙ PF)   (paper Eq. 14)
+  - composite OR / AND utilities     (paper Eq. 15)
+
+Everything is plain jnp with no data-dependent control flow so it lowers
+cleanly and is deterministic.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Paper / OpenCV conventions.
+HUE_MAX = 180.0          # hue range [0, 180)
+SV_MAX = 256.0           # saturation & value range [0, 256)
+NUM_BINS = 8             # B_S = B_V = 8  (paper Sec. V-B)
+BIN_SIZE = SV_MAX / NUM_BINS   # s = v = 32
+FG_THRESHOLD = 25.0      # default background-subtraction threshold
+
+
+def rgb_to_hsv(rgb):
+    """Convert RGB (f32, [0, 255]) to OpenCV-style HSV.
+
+    Returns (h, s, v) with h in [0, 180), s and v in [0, 255].
+    Input shape [..., 3]; outputs drop the channel axis.
+    """
+    r, g, b = rgb[..., 0], rgb[..., 1], rgb[..., 2]
+    v = jnp.maximum(jnp.maximum(r, g), b)
+    mn = jnp.minimum(jnp.minimum(r, g), b)
+    delta = v - mn
+    safe_delta = jnp.where(delta > 0, delta, 1.0)
+    # Degrees in [0, 360), computed branchlessly.
+    h_r = (60.0 * (g - b) / safe_delta) % 360.0
+    h_g = 60.0 * (b - r) / safe_delta + 120.0
+    h_b = 60.0 * (r - g) / safe_delta + 240.0
+    h_deg = jnp.where(v == r, h_r, jnp.where(v == g, h_g, h_b))
+    h_deg = jnp.where(delta > 0, h_deg, 0.0)
+    h = h_deg * 0.5  # OpenCV: [0, 180)
+    safe_v = jnp.where(v > 0, v, 1.0)
+    s = jnp.where(v > 0, delta / safe_v * 255.0, 0.0)
+    return h, s, v
+
+
+def foreground_mask(rgb, background, threshold=FG_THRESHOLD):
+    """Per-pixel foreground mask: max-channel |rgb - background| > threshold.
+
+    Returns an f32 mask of shape [...] with values in {0.0, 1.0}.
+    """
+    diff = jnp.max(jnp.abs(rgb - background), axis=-1)
+    return (diff > threshold).astype(jnp.float32)
+
+
+def hue_in_ranges(h, ranges):
+    """Membership of hue values in a (possibly wrap-around) pair of ranges.
+
+    `ranges` is a length-4 vector [lo1, hi1, lo2, hi2]; a color that needs a
+    single range sets the second to an empty interval (e.g. [0, 0)).
+    Red is [0, 10) ∪ [170, 180).
+    """
+    lo1, hi1, lo2, hi2 = ranges[0], ranges[1], ranges[2], ranges[3]
+    in1 = (h >= lo1) & (h < hi1)
+    in2 = (h >= lo2) & (h < hi2)
+    return in1 | in2
+
+
+def sat_val_bin(s, v):
+    """Map saturation/value to their bin indices (paper Eq. 7/8)."""
+    sb = jnp.clip(jnp.floor(s / BIN_SIZE), 0, NUM_BINS - 1).astype(jnp.int32)
+    vb = jnp.clip(jnp.floor(v / BIN_SIZE), 0, NUM_BINS - 1).astype(jnp.int32)
+    return sb, vb
+
+
+def pf_histogram(h, s, v, fg, ranges):
+    """Reference computation of the binning the Pallas kernel performs.
+
+    Args:
+      h, s, v, fg: flat f32 vectors of length N (fg is a 0/1 mask).
+      ranges: length-4 hue-range vector.
+
+    Returns:
+      bins:  [64] f32 — count of in-color pixels per (sat_bin*8 + val_bin).
+      in_color_count: scalar f32 — number of foreground in-color pixels.
+      fg_count: scalar f32 — number of foreground pixels.
+    """
+    in_color = hue_in_ranges(h, ranges) & (fg > 0.5)
+    sb, vb = sat_val_bin(s, v)
+    bin_idx = sb * NUM_BINS + vb
+    onehot = bin_idx[:, None] == jnp.arange(NUM_BINS * NUM_BINS)[None, :]
+    onehot = jnp.where(in_color[:, None], onehot, False)
+    bins = jnp.sum(onehot.astype(jnp.float32), axis=0)
+    in_color_count = jnp.sum(in_color.astype(jnp.float32))
+    fg_count = jnp.sum(fg)
+    return bins, in_color_count, fg_count
+
+
+def pf_matrix_from_bins(bins, in_color_count):
+    """PF matrix (Eq. 10): per-bin pixel fraction over in-color pixels."""
+    denom = jnp.where(in_color_count > 0, in_color_count, 1.0)
+    pf = bins.reshape(NUM_BINS, NUM_BINS) / denom
+    return jnp.where(in_color_count > 0, pf, jnp.zeros_like(pf))
+
+
+def hue_fraction(in_color_count, fg_count):
+    """HF (Eq. 6) over the foreground pixel universe."""
+    denom = jnp.where(fg_count > 0, fg_count, 1.0)
+    return jnp.where(fg_count > 0, in_color_count / denom, 0.0)
+
+
+def utility(pf, m):
+    """Per-frame utility (Eq. 14): U = sum(M ⊙ PF).
+
+    `m` is the (already normalized) positive-correlation matrix M_{C,+ve}.
+    """
+    return jnp.sum(pf * m)
+
+
+def frame_features(rgb, background, ranges, m, fg_threshold=FG_THRESHOLD):
+    """Full per-frame, per-color reference path: RGB frame → (U, HF, PF, fg%).
+
+    Args:
+      rgb, background: [H, W, 3] f32 in [0, 255].
+      ranges: [4] hue ranges for the color.
+      m: [8, 8] normalized M_{C,+ve} matrix.
+
+    Returns (utility, hf, pf[8,8], fg_frac).
+    """
+    h, s, v = rgb_to_hsv(rgb)
+    fg = foreground_mask(rgb, background, fg_threshold)
+    hf_, sf, vf, fgf = h.ravel(), s.ravel(), v.ravel(), fg.ravel()
+    bins, icc, fgc = pf_histogram(hf_, sf, vf, fgf, ranges)
+    pf = pf_matrix_from_bins(bins, icc)
+    hfrac = hue_fraction(icc, fgc)
+    u = utility(pf, m)
+    fg_frac = fgc / hf_.shape[0]
+    return u, hfrac, pf, fg_frac
+
+
+def composite_or(u1, u2):
+    """OR-query composite utility (Eq. 15): max of normalized utilities."""
+    return jnp.maximum(u1, u2)
+
+
+def composite_and(u1, u2):
+    """AND-query composite utility: min of normalized utilities."""
+    return jnp.minimum(u1, u2)

@@ -1,0 +1,201 @@
+"""L2: the paper's compute graphs in JAX, calling the L1 Pallas kernel.
+
+Three entry points are AOT-lowered by :mod:`compile.aot` to HLO text and
+executed from the Rust runtime (``rust/src/runtime``):
+
+  * ``shedder_k1``  — single-color Load Shedder features (Fig 5/9):
+        RGB frame + background + hue ranges + normalized M matrix
+        → (utility, HF, PF, fg_frac)
+  * ``shedder_k2``  — two-color features + composite OR/AND utilities
+        (Fig 11/12): → (per-color u, u_or, u_and, HF[2], PF[2,8,8], fg_frac)
+  * ``detector``    — the backend query's DNN surrogate: a deterministic
+        color-blob detector producing a G×G detection grid per color.
+        (Substitution for efficientdet-d4 — see DESIGN.md; the *load* of
+        the real DNN is modeled separately by ``backend::cost_model``.)
+
+All graphs share one HSV conversion + foreground mask per frame; the
+per-color 8×8 saturation/value binning goes through the Pallas kernel so it
+lowers into the same HLO module.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import hsv_features as kern
+
+# Frame geometry compiled into the artifacts. The Rust runtime reads these
+# from artifacts/manifest.json (written by aot.py).
+FRAME_H = 96
+FRAME_W = 96
+DETECT_GRID = 12           # detector output is DETECT_GRID × DETECT_GRID
+DETECT_POOL = FRAME_H // DETECT_GRID   # 8×8 pooling window
+TRAIN_BATCH = 8            # batch size of the training-extraction artifact
+
+
+def _per_color_features(h, s, v, fg, ranges, use_kernel=True):
+    """Shared per-color path: flat HSV planes → (hf, pf[8,8], icc)."""
+    hist = kern.pf_histogram if use_kernel else ref.pf_histogram
+    bins, icc, fgc = hist(h, s, v, fg, ranges)
+    pf = ref.pf_matrix_from_bins(bins, icc)
+    hf = ref.hue_fraction(icc, fgc)
+    return hf, pf, fgc
+
+
+def shedder_k1(rgb, background, ranges, m, use_kernel=True):
+    """Single-color shedder features.
+
+    Args:
+      rgb, background: [H, W, 3] f32 in [0, 255].
+      ranges: [1, 4] hue ranges.
+      m: [1, 8, 8] normalized M_{C,+ve}.
+
+    Returns:
+      utility [1], hf [1], pf [1, 8, 8], fg_frac [] — all f32.
+    """
+    h, s, v = ref.rgb_to_hsv(rgb)
+    fg = ref.foreground_mask(rgb, background)
+    hflat, sflat, vflat, fgflat = h.ravel(), s.ravel(), v.ravel(), fg.ravel()
+    hf, pf, _ = _per_color_features(hflat, sflat, vflat, fgflat, ranges[0],
+                                    use_kernel=use_kernel)
+    u = ref.utility(pf, m[0])
+    fg_frac = jnp.mean(fgflat)
+    return (u.reshape(1), hf.reshape(1), pf.reshape(1, 8, 8), fg_frac)
+
+
+def shedder_k2(rgb, background, ranges, m, use_kernel=True):
+    """Two-color shedder features with composite OR/AND utilities.
+
+    Args:
+      rgb, background: [H, W, 3] f32.
+      ranges: [2, 4] hue ranges (color 0, color 1).
+      m: [2, 8, 8] normalized M matrices.
+
+    Returns:
+      u [2], u_or [], u_and [], hf [2], pf [2, 8, 8], fg_frac [].
+    """
+    h, s, v = ref.rgb_to_hsv(rgb)
+    fg = ref.foreground_mask(rgb, background)
+    hflat, sflat, vflat, fgflat = h.ravel(), s.ravel(), v.ravel(), fg.ravel()
+    us, hfs, pfs = [], [], []
+    for c in range(2):  # compile-time unroll; HSV shared across colors
+        hf, pf, _ = _per_color_features(hflat, sflat, vflat, fgflat,
+                                        ranges[c], use_kernel=use_kernel)
+        us.append(ref.utility(pf, m[c]))
+        hfs.append(hf)
+        pfs.append(pf)
+    u = jnp.stack(us)
+    u_or = ref.composite_or(u[0], u[1])
+    u_and = ref.composite_and(u[0], u[1])
+    fg_frac = jnp.mean(fgflat)
+    return (u, u_or, u_and, jnp.stack(hfs), jnp.stack(pfs), fg_frac)
+
+
+def features_batch(rgb, background, ranges, use_kernel=True):
+    """Training-time batched feature extraction (no utility weighting).
+
+    Args:
+      rgb, background: [B, H, W, 3] f32.
+      ranges: [2, 4] hue ranges.
+
+    Returns:
+      hf [B, 2], pf [B, 2, 8, 8], fg_frac [B].
+    """
+    ident = jnp.zeros((2, 8, 8), jnp.float32)
+
+    def one(frame, bg):
+        _, _, _, hf, pf, fgf = shedder_k2(frame, bg, ranges, ident,
+                                          use_kernel=use_kernel)
+        return hf, pf, fgf
+
+    hfs, pfs, fgs = [], [], []
+    for b in range(rgb.shape[0]):  # unrolled: B is a compile-time constant
+        hf, pf, fgf = one(rgb[b], background[b])
+        hfs.append(hf)
+        pfs.append(pf)
+        fgs.append(fgf)
+    return jnp.stack(hfs), jnp.stack(pfs), jnp.stack(fgs)
+
+
+def detector(rgb, background, ranges):
+    """Backend DNN surrogate: deterministic color-blob detection grid.
+
+    Downsample path: HSV → per-color in-range foreground mask → box count
+    per DETECT_POOL×DETECT_POOL cell → detection where the cell density
+    crosses a threshold. Deterministic, so experiments are reproducible;
+    the heavy-DNN *latency* is modeled by the backend cost model instead.
+
+    Args:
+      rgb, background: [H, W, 3] f32.
+      ranges: [2, 4] hue ranges.
+
+    Returns:
+      grid [G, G, 2] f32 in {0, 1}, counts [2] f32 (cells fired per color).
+    """
+    h, s, v = ref.rgb_to_hsv(rgb)
+    fg = ref.foreground_mask(rgb, background)
+    # Colored-object pixels must be saturated and bright enough — the
+    # gate that separates vivid targets from dull same-hue confounders
+    # (maroon has s ≈ 109 < 128). Mirrored by the Rust native detector.
+    vivid = (s >= 4.0 * ref.BIN_SIZE) & (v >= 2.0 * ref.BIN_SIZE)
+    grids = []
+    for c in range(2):
+        mask = ref.hue_in_ranges(h, ranges[c]) & (fg > 0.5) & vivid
+        mask = mask.astype(jnp.float32)
+        cells = mask.reshape(DETECT_GRID, DETECT_POOL, DETECT_GRID, DETECT_POOL)
+        density = cells.sum(axis=(1, 3))          # [G, G] pixel counts
+        # Fire when ≥25% of the cell is in-color foreground: vehicles are
+        # shorter than a cell (≈6 px vs 8 px), so a full-cell criterion
+        # would miss them.
+        fired = (density >= 0.25 * DETECT_POOL * DETECT_POOL)
+        grids.append(fired.astype(jnp.float32))
+    grid = jnp.stack(grids, axis=-1)              # [G, G, 2]
+    counts = grid.sum(axis=(0, 1))                # [2]
+    return grid, counts
+
+
+# ---------------------------------------------------------------------------
+# Shape specs used by aot.py and the pytest suite.
+# ---------------------------------------------------------------------------
+
+def frame_spec():
+    return jax.ShapeDtypeStruct((FRAME_H, FRAME_W, 3), jnp.float32)
+
+
+def batch_frame_spec():
+    return jax.ShapeDtypeStruct((TRAIN_BATCH, FRAME_H, FRAME_W, 3), jnp.float32)
+
+
+def ranges_spec(k):
+    return jax.ShapeDtypeStruct((k, 4), jnp.float32)
+
+
+def m_spec(k):
+    return jax.ShapeDtypeStruct((k, 8, 8), jnp.float32)
+
+
+ENTRY_POINTS = {
+    # name -> (callable, arg-spec builder, output names)
+    "shedder_k1": (
+        lambda rgb, bg, rng, m: shedder_k1(rgb, bg, rng, m),
+        lambda: (frame_spec(), frame_spec(), ranges_spec(1), m_spec(1)),
+        ["utility", "hf", "pf", "fg_frac"],
+    ),
+    "shedder_k2": (
+        lambda rgb, bg, rng, m: shedder_k2(rgb, bg, rng, m),
+        lambda: (frame_spec(), frame_spec(), ranges_spec(2), m_spec(2)),
+        ["u", "u_or", "u_and", "hf", "pf", "fg_frac"],
+    ),
+    "features_batch8": (
+        lambda rgb, bg, rng: features_batch(rgb, bg, rng),
+        lambda: (batch_frame_spec(), batch_frame_spec(), ranges_spec(2)),
+        ["hf", "pf", "fg_frac"],
+    ),
+    "detector": (
+        lambda rgb, bg, rng: detector(rgb, bg, rng),
+        lambda: (frame_spec(), frame_spec(), ranges_spec(2)),
+        ["grid", "counts"],
+    ),
+}

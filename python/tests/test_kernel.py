@@ -1,0 +1,240 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal of the stack.
+
+The Pallas kernel (compile.kernels.hsv_features) must agree bit-for-bit
+(f32 exact for counts, allclose for fractions) with the pure-jnp oracle
+(compile.kernels.ref) across shapes, hue ranges (incl. wrap-around red),
+mask densities, and degenerate frames. Hypothesis drives the sweeps.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import hsv_features as kern
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+RED = jnp.array([0.0, 10.0, 170.0, 180.0], jnp.float32)
+YELLOW = jnp.array([20.0, 35.0, 0.0, 0.0], jnp.float32)
+
+
+def random_planes(rng, n, fg_density=0.7):
+    h = rng.uniform(0, 180, n).astype(np.float32)
+    s = rng.uniform(0, 256, n).astype(np.float32)
+    v = rng.uniform(0, 256, n).astype(np.float32)
+    fg = (rng.uniform(0, 1, n) < fg_density).astype(np.float32)
+    return jnp.array(h), jnp.array(s), jnp.array(v), jnp.array(fg)
+
+
+def assert_hist_equal(planes, ranges, block=kern.DEFAULT_BLOCK):
+    h, s, v, fg = planes
+    b_ref, i_ref, f_ref = ref.pf_histogram(h, s, v, fg, ranges)
+    b_k, i_k, f_k = kern.pf_histogram(h, s, v, fg, ranges, block=block)
+    np.testing.assert_array_equal(np.array(b_ref), np.array(b_k))
+    assert float(i_ref) == float(i_k)
+    assert float(f_ref) == float(f_k)
+
+
+# ---------------------------------------------------------------------------
+# Directed cases
+# ---------------------------------------------------------------------------
+
+class TestHistogramDirected:
+    def test_red_wraparound_matches_ref(self):
+        rng = np.random.default_rng(1)
+        assert_hist_equal(random_planes(rng, 4096), RED)
+
+    def test_single_range_color(self):
+        rng = np.random.default_rng(2)
+        assert_hist_equal(random_planes(rng, 4096), YELLOW)
+
+    def test_unaligned_length_padding(self):
+        # N not a multiple of BLOCK: padding must not contaminate counts.
+        rng = np.random.default_rng(3)
+        assert_hist_equal(random_planes(rng, 3001), RED)
+
+    def test_tiny_frame_smaller_than_block(self):
+        rng = np.random.default_rng(4)
+        assert_hist_equal(random_planes(rng, 17), RED)
+
+    def test_all_background(self):
+        rng = np.random.default_rng(5)
+        h, s, v, _ = random_planes(rng, 2048)
+        fg = jnp.zeros_like(h)
+        b, i, f = kern.pf_histogram(h, s, v, fg, RED)
+        assert float(i) == 0.0 and float(f) == 0.0
+        assert float(jnp.sum(b)) == 0.0
+
+    def test_all_in_color_single_bin(self):
+        n = 2048
+        h = jnp.full((n,), 5.0)       # in red range
+        s = jnp.full((n,), 250.0)     # bin 7
+        v = jnp.full((n,), 250.0)     # bin 7
+        fg = jnp.ones((n,))
+        b, i, f = kern.pf_histogram(h, s, v, fg, RED)
+        assert float(i) == n and float(f) == n
+        assert float(b[7 * 8 + 7]) == n
+        assert float(jnp.sum(b)) == n
+
+    def test_bin_boundaries_exact(self):
+        # Values exactly on bin edges must fall in the upper bin (floor/32),
+        # and 255.999… stays in bin 7.
+        h = jnp.array([5.0, 5.0, 5.0])
+        s = jnp.array([31.9999, 32.0, 255.0])
+        v = jnp.array([0.0, 64.0, 255.0])
+        fg = jnp.ones((3,))
+        b, _, _ = kern.pf_histogram(h, s, v, fg, RED)
+        assert float(b[0 * 8 + 0]) == 1.0   # s-bin 0, v-bin 0
+        assert float(b[1 * 8 + 2]) == 1.0   # s-bin 1, v-bin 2
+        assert float(b[7 * 8 + 7]) == 1.0   # s-bin 7, v-bin 7
+
+    def test_hue_range_boundary_half_open(self):
+        # hue == hi is excluded; hue == lo is included.
+        h = jnp.array([0.0, 9.9999, 10.0, 169.9, 170.0, 179.9])
+        s = jnp.full((6,), 128.0)
+        v = jnp.full((6,), 128.0)
+        fg = jnp.ones((6,))
+        _, icc, _ = kern.pf_histogram(h, s, v, fg, RED)
+        assert float(icc) == 4.0  # 0, 9.9999, 170, 179.9
+
+    @pytest.mark.parametrize("block", [128, 256, 1024, 4096])
+    def test_block_size_invariance(self, block):
+        rng = np.random.default_rng(6)
+        assert_hist_equal(random_planes(rng, 5000), RED, block=block)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.integers(min_value=1, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    density=st.floats(min_value=0.0, max_value=1.0),
+)
+@settings(max_examples=20)
+def test_histogram_matches_ref_random(n, seed, density):
+    rng = np.random.default_rng(seed)
+    assert_hist_equal(random_planes(rng, n, density), RED, block=256)
+
+
+@given(
+    lo1=st.floats(min_value=0, max_value=179),
+    width1=st.floats(min_value=0, max_value=60),
+    lo2=st.floats(min_value=0, max_value=179),
+    width2=st.floats(min_value=0, max_value=60),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=20)
+def test_histogram_arbitrary_hue_ranges(lo1, width1, lo2, width2, seed):
+    ranges = jnp.array(
+        [lo1, min(lo1 + width1, 180.0), lo2, min(lo2 + width2, 180.0)],
+        jnp.float32,
+    )
+    rng = np.random.default_rng(seed)
+    assert_hist_equal(random_planes(rng, 1536), ranges, block=512)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=15)
+def test_histogram_conservation(seed):
+    """sum(bins) == in_color_count: every in-color pixel lands in a bin."""
+    rng = np.random.default_rng(seed)
+    h, s, v, fg = random_planes(rng, 2048)
+    b, icc, fgc = kern.pf_histogram(h, s, v, fg, RED)
+    assert float(jnp.sum(b)) == float(icc)
+    assert float(icc) <= float(fgc) <= 2048
+
+
+# ---------------------------------------------------------------------------
+# HSV conversion properties
+# ---------------------------------------------------------------------------
+
+class TestRgbToHsv:
+    def test_pure_colors(self):
+        rgb = jnp.array(
+            [
+                [255.0, 0.0, 0.0],    # red    -> h 0
+                [0.0, 255.0, 0.0],    # green  -> h 60
+                [0.0, 0.0, 255.0],    # blue   -> h 120
+                [255.0, 255.0, 0.0],  # yellow -> h 30
+                [0.0, 0.0, 0.0],      # black  -> v 0
+                [255.0, 255.0, 255.0] # white  -> s 0
+            ]
+        )
+        h, s, v = ref.rgb_to_hsv(rgb)
+        np.testing.assert_allclose(
+            np.array(h), [0.0, 60.0, 120.0, 30.0, 0.0, 0.0], atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.array(s), [255.0, 255.0, 255.0, 255.0, 0.0, 0.0], atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.array(v), [255.0, 255.0, 255.0, 255.0, 0.0, 255.0], atol=1e-4
+        )
+
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=25)
+    def test_ranges_hold(self, seed):
+        rng = np.random.default_rng(seed)
+        rgb = jnp.array(rng.uniform(0, 255, (64, 3)).astype(np.float32))
+        h, s, v = ref.rgb_to_hsv(rgb)
+        assert float(jnp.min(h)) >= 0.0 and float(jnp.max(h)) < 180.0
+        assert float(jnp.min(s)) >= 0.0 and float(jnp.max(s)) <= 255.0
+        assert float(jnp.min(v)) >= 0.0 and float(jnp.max(v)) <= 255.0
+
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=10)
+    def test_value_is_max_channel(self, seed):
+        rng = np.random.default_rng(seed)
+        rgb = jnp.array(rng.uniform(0, 255, (64, 3)).astype(np.float32))
+        _, _, v = ref.rgb_to_hsv(rgb)
+        np.testing.assert_allclose(
+            np.array(v), np.array(rgb).max(axis=-1), atol=1e-5
+        )
+
+
+class TestForegroundMask:
+    def test_identical_frames_all_background(self):
+        rgb = jnp.full((8, 8, 3), 100.0)
+        assert float(jnp.sum(ref.foreground_mask(rgb, rgb))) == 0.0
+
+    def test_threshold_strict(self):
+        bg = jnp.zeros((1, 2, 3))
+        rgb = jnp.array([[[25.0, 0, 0], [25.1, 0, 0]]])
+        m = ref.foreground_mask(rgb, bg, threshold=25.0)
+        np.testing.assert_array_equal(np.array(m), [[0.0, 1.0]])
+
+    @given(t=st.floats(min_value=1.0, max_value=100.0),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=15)
+    def test_monotone_in_threshold(self, t, seed):
+        rng = np.random.default_rng(seed)
+        rgb = jnp.array(rng.uniform(0, 255, (16, 16, 3)).astype(np.float32))
+        bg = jnp.array(rng.uniform(0, 255, (16, 16, 3)).astype(np.float32))
+        lo = ref.foreground_mask(rgb, bg, threshold=t)
+        hi = ref.foreground_mask(rgb, bg, threshold=t + 10.0)
+        # A pixel foreground at a high threshold is foreground at a low one.
+        assert float(jnp.sum(hi * (1 - lo))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# VMEM / MXU structural estimates (sanity on the perf model, not timing)
+# ---------------------------------------------------------------------------
+
+def test_vmem_footprint_within_budget():
+    # Default block must fit comfortably in a 16 MiB VMEM.
+    assert kern.vmem_footprint_bytes() < 16 * 1024 * 1024 // 4
+
+
+def test_mxu_flops_scale_linearly():
+    f1 = kern.mxu_flops_per_frame(96 * 96)
+    f2 = kern.mxu_flops_per_frame(2 * 96 * 96)
+    assert f2 == 2 * f1

@@ -1,0 +1,154 @@
+"""L2 model tests: shapes, utility semantics, composites, detector."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels import ref
+
+RANGES2 = jnp.array(
+    [[0.0, 10.0, 170.0, 180.0],   # red
+     [20.0, 35.0, 0.0, 0.0]],     # yellow
+    jnp.float32,
+)
+
+
+def synth_frame(seed, red_block=False, yellow_block=False):
+    """A frame over a gray background with optional saturated color blocks."""
+    rng = np.random.default_rng(seed)
+    bg = np.full((model.FRAME_H, model.FRAME_W, 3), 96.0, np.float32)
+    bg += rng.normal(0, 2, bg.shape).astype(np.float32)
+    rgb = bg.copy()
+    if red_block:
+        rgb[10:30, 10:40] = [220.0, 20.0, 20.0]
+    if yellow_block:
+        rgb[50:70, 30:60] = [230.0, 210.0, 20.0]
+    return jnp.array(rgb), jnp.array(bg)
+
+
+class TestShedderK1:
+    def test_shapes(self):
+        rgb, bg = synth_frame(0, red_block=True)
+        m = jnp.ones((1, 8, 8)) / 64.0
+        u, hf, pf, fgf = model.shedder_k1(rgb, bg, RANGES2[:1], m)
+        assert u.shape == (1,) and hf.shape == (1,)
+        assert pf.shape == (1, 8, 8) and fgf.shape == ()
+
+    def test_red_frame_scores_higher(self):
+        m = jnp.zeros((8, 8)).at[4:, 4:].set(1.0).reshape(1, 8, 8)
+        rgb_p, bg = synth_frame(1, red_block=True)
+        rgb_n, _ = synth_frame(1, red_block=False)
+        u_p, *_ = model.shedder_k1(rgb_p, bg, RANGES2[:1], m)
+        u_n, *_ = model.shedder_k1(rgb_n, bg, RANGES2[:1], m)
+        assert float(u_p[0]) > float(u_n[0])
+
+    def test_pf_rows_sum_to_one_when_color_present(self):
+        rgb, bg = synth_frame(2, red_block=True)
+        m = jnp.zeros((1, 8, 8))
+        _, hf, pf, _ = model.shedder_k1(rgb, bg, RANGES2[:1], m)
+        assert float(hf[0]) > 0
+        np.testing.assert_allclose(float(jnp.sum(pf)), 1.0, atol=1e-5)
+
+    def test_kernel_and_ref_paths_agree(self):
+        rgb, bg = synth_frame(3, red_block=True, yellow_block=True)
+        m = jnp.linspace(0, 1, 64).reshape(1, 8, 8).astype(jnp.float32)
+        a = model.shedder_k1(rgb, bg, RANGES2[:1], m, use_kernel=True)
+        b = model.shedder_k1(rgb, bg, RANGES2[:1], m, use_kernel=False)
+        for x, y in zip(a, b):
+            np.testing.assert_allclose(np.array(x), np.array(y), atol=1e-6)
+
+
+class TestShedderK2:
+    def test_shapes(self):
+        rgb, bg = synth_frame(4, red_block=True)
+        m = jnp.ones((2, 8, 8)) / 64.0
+        u, u_or, u_and, hf, pf, fgf = model.shedder_k2(rgb, bg, RANGES2, m)
+        assert u.shape == (2,) and hf.shape == (2,) and pf.shape == (2, 8, 8)
+        assert u_or.shape == () and u_and.shape == () and fgf.shape == ()
+
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    @settings(max_examples=8, deadline=None)
+    def test_or_and_semantics(self, seed):
+        rng = np.random.default_rng(seed)
+        rgb = jnp.array(rng.uniform(0, 255, (model.FRAME_H, model.FRAME_W, 3))
+                        .astype(np.float32))
+        bg = jnp.zeros_like(rgb)
+        m = jnp.array(rng.uniform(0, 1, (2, 8, 8)).astype(np.float32))
+        u, u_or, u_and, *_ = model.shedder_k2(rgb, bg, RANGES2, m)
+        assert float(u_or) == max(float(u[0]), float(u[1]))
+        assert float(u_and) == min(float(u[0]), float(u[1]))
+
+    def test_only_red_gives_low_and_utility(self):
+        m = jnp.ones((2, 8, 8)).at[:, :4, :].set(0.0)
+        rgb, bg = synth_frame(5, red_block=True, yellow_block=False)
+        u, u_or, u_and, *_ = model.shedder_k2(rgb, bg, RANGES2, m)
+        assert float(u[0]) > float(u[1])
+        assert float(u_and) == float(u[1])
+
+    def test_both_colors_raise_and_utility(self):
+        m = jnp.ones((2, 8, 8)).at[:, :4, :].set(0.0)
+        rgb1, bg = synth_frame(6, red_block=True)
+        rgb2, _ = synth_frame(6, red_block=True, yellow_block=True)
+        _, _, and1, *_ = model.shedder_k2(rgb1, bg, RANGES2, m)
+        _, _, and2, *_ = model.shedder_k2(rgb2, bg, RANGES2, m)
+        assert float(and2) > float(and1)
+
+
+class TestFeaturesBatch:
+    def test_matches_single_frame_path(self):
+        frames, bgs = [], []
+        for i in range(model.TRAIN_BATCH):
+            rgb, bg = synth_frame(i, red_block=(i % 2 == 0),
+                                  yellow_block=(i % 3 == 0))
+            frames.append(rgb)
+            bgs.append(bg)
+        rgb_b = jnp.stack(frames)
+        bg_b = jnp.stack(bgs)
+        hf_b, pf_b, fg_b = model.features_batch(rgb_b, bg_b, RANGES2)
+        assert hf_b.shape == (model.TRAIN_BATCH, 2)
+        assert pf_b.shape == (model.TRAIN_BATCH, 2, 8, 8)
+        m0 = jnp.zeros((2, 8, 8))
+        for i in range(model.TRAIN_BATCH):
+            _, _, _, hf, pf, fgf = model.shedder_k2(
+                frames[i], bgs[i], RANGES2, m0)
+            np.testing.assert_allclose(np.array(hf_b[i]), np.array(hf),
+                                       atol=1e-6)
+            np.testing.assert_allclose(np.array(pf_b[i]), np.array(pf),
+                                       atol=1e-6)
+            np.testing.assert_allclose(float(fg_b[i]), float(fgf), atol=1e-6)
+
+
+class TestDetector:
+    def test_detects_red_block_only(self):
+        rgb, bg = synth_frame(7, red_block=True)
+        grid, counts = model.detector(rgb, bg, RANGES2)
+        assert grid.shape == (model.DETECT_GRID, model.DETECT_GRID, 2)
+        assert float(counts[0]) > 0.0       # red fired
+        assert float(counts[1]) == 0.0      # no yellow
+
+    def test_detects_both(self):
+        rgb, bg = synth_frame(8, red_block=True, yellow_block=True)
+        _, counts = model.detector(rgb, bg, RANGES2)
+        assert float(counts[0]) > 0.0 and float(counts[1]) > 0.0
+
+    def test_empty_frame_fires_nothing(self):
+        rgb, bg = synth_frame(9)
+        _, counts = model.detector(rgb, bg, RANGES2)
+        assert float(counts[0]) == 0.0 and float(counts[1]) == 0.0
+
+    def test_grid_binary(self):
+        rgb, bg = synth_frame(10, red_block=True, yellow_block=True)
+        grid, _ = model.detector(rgb, bg, RANGES2)
+        vals = set(np.unique(np.array(grid)).tolist())
+        assert vals <= {0.0, 1.0}
+
+    def test_detection_localized(self):
+        # The red block occupies rows 10..30, cols 10..40 → grid rows 1..3.
+        rgb, bg = synth_frame(11, red_block=True)
+        grid, _ = model.detector(rgb, bg, RANGES2)
+        fired = np.argwhere(np.array(grid[:, :, 0]) > 0)
+        assert len(fired) > 0
+        assert fired[:, 0].min() >= 1 and fired[:, 0].max() <= 3
+        assert fired[:, 1].min() >= 1 and fired[:, 1].max() <= 5

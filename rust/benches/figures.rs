@@ -1,0 +1,28 @@
+//! End-to-end figure benches (`cargo bench --bench figures`): one bench
+//! per paper table/figure (DESIGN.md §6). Each run regenerates the
+//! figure's data series (written under `results/`) and reports the
+//! wall time of the full regeneration at the default scale.
+//!
+//! Scale via env: UALS_BENCH_SCALE=tiny|small|paper (default tiny so
+//! `cargo bench` completes quickly; use small/paper for the real runs).
+
+use uals::experiments::{run_and_save, Scale, ALL_FIGURES, OVERHEAD_FIGURE};
+use uals::util::bench::Bench;
+
+fn main() {
+    let scale = std::env::var("UALS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Tiny);
+    println!("figure benches at scale {scale:?} (set UALS_BENCH_SCALE to change)\n");
+
+    let out = std::path::PathBuf::from("results");
+    let mut b = Bench::new(0, 1);
+    for id in ALL_FIGURES.iter().chain([&OVERHEAD_FIGURE]) {
+        b.run(&format!("figure_{id}"), || {
+            run_and_save(&[id], scale, &out, true).expect("figure run");
+        });
+    }
+    b.write_csv(std::path::Path::new("results/figure_bench.csv")).unwrap();
+    println!("\nall figure CSVs under results/; timings in results/figure_bench.csv");
+}

@@ -1,0 +1,118 @@
+//! Hot-path microbenchmarks (`cargo bench --bench microbench`).
+//!
+//! Covers every component on the per-frame request path plus the
+//! substrates the coordinator leans on. Results go to stdout and
+//! `results/microbench.csv` (inputs for EXPERIMENTS.md §Perf).
+
+use uals::backend::{foreground_mask, largest_blob, BackendQuery, CostModel, Detector};
+use uals::color::NamedColor;
+use uals::config::{CostConfig, QueryConfig};
+use uals::features::{reference, Extractor};
+use uals::runtime::Engine;
+use uals::shedder::UtilityQueue;
+use uals::util::bench::Bench;
+use uals::util::rng::Rng;
+use uals::utility::{train, Combine, UtilityCdf};
+use uals::video::{Video, VideoConfig};
+
+fn main() {
+    let mut b = Bench::new(3, 40);
+
+    // --- fixtures -----------------------------------------------------------
+    let mut vc = VideoConfig::new(7, 21, 0, 60);
+    vc.traffic.vehicle_rate = 0.8;
+    let video = Video::new(vc);
+    let frame = video.render(30);
+    let bg = video.background().to_vec();
+    let ranges = [NamedColor::Red.ranges(), NamedColor::Yellow.ranges()];
+    let videos = vec![video];
+    let model2 = train(
+        &videos,
+        &[0],
+        &[NamedColor::Red, NamedColor::Yellow],
+        Combine::Or,
+    );
+    let model1 = train(&videos, &[0], &[NamedColor::Red], Combine::Single);
+
+    // --- L3 native hot path -------------------------------------------------
+    b.run("video/render_frame_96x96", || {
+        std::hint::black_box(videos[0].render(31));
+    });
+    b.run("features/native_extract_2colors", || {
+        std::hint::black_box(reference::compute_features(
+            &frame.rgb,
+            &bg,
+            &ranges,
+            reference::FG_THRESHOLD,
+        ));
+    });
+    let native1 = Extractor::native(model1.clone());
+    b.run("features/native_extract+utility_1color", || {
+        std::hint::black_box(native1.extract(&frame.rgb, &bg).unwrap());
+    });
+    b.run("backend/foreground_mask+largest_blob", || {
+        let m = foreground_mask(&frame.rgb, &bg, 96, 96, 25.0);
+        std::hint::black_box(largest_blob(&m));
+    });
+    let det = Detector::native(12, 25.0);
+    b.run("backend/native_detector_2colors", || {
+        std::hint::black_box(det.detect(&frame.rgb, &bg, 96, 96, &ranges).unwrap());
+    });
+    let mut bq = BackendQuery::new(
+        QueryConfig::single(NamedColor::Red),
+        Detector::native(12, 25.0),
+        CostModel::new(CostConfig { jitter: 0.0, ..Default::default() }, 1),
+        25.0,
+    );
+    b.run("backend/full_query_process", || {
+        std::hint::black_box(bq.process(&frame.rgb, &bg, 96, 96).unwrap());
+    });
+
+    // --- AOT artifact path (PJRT) -------------------------------------------
+    if let Ok(engine) = Engine::from_default_artifacts() {
+        let art1 = Extractor::artifact(&engine, model1.clone()).unwrap();
+        b.run("features/artifact_extract_1color (PJRT)", || {
+            std::hint::black_box(art1.extract(&frame.rgb, &bg).unwrap());
+        });
+        let art2 = Extractor::artifact(&engine, model2.clone()).unwrap();
+        b.run("features/artifact_extract_2colors (PJRT)", || {
+            std::hint::black_box(art2.extract(&frame.rgb, &bg).unwrap());
+        });
+        let det_a = Detector::artifact(&engine).unwrap();
+        b.run("backend/artifact_detector (PJRT)", || {
+            std::hint::black_box(det_a.detect(&frame.rgb, &bg, 96, 96, &ranges).unwrap());
+        });
+    } else {
+        eprintln!("(artifacts not built — skipping PJRT benches; run `make artifacts`)");
+    }
+
+    // --- shedder data structures -------------------------------------------
+    let mut rng = Rng::new(1);
+    b.run("shedder/utility_queue_offer_pop_x1000", || {
+        let mut q: UtilityQueue<u64> = UtilityQueue::new(16);
+        for i in 0..1000u64 {
+            q.offer(rng.f32(), i as f64, i);
+            if i % 3 == 0 {
+                q.pop_best();
+            }
+        }
+        std::hint::black_box(q.len());
+    });
+    let mut cdf = UtilityCdf::new(600);
+    for _ in 0..600 {
+        cdf.add(rng.f32());
+    }
+    b.run("utility/cdf_add+threshold (window 600)", || {
+        cdf.add(rng.f32());
+        std::hint::black_box(cdf.threshold_for(0.7));
+    });
+
+    // --- substrates ----------------------------------------------------------
+    let json_doc = model2.to_json().to_string_pretty();
+    b.run("util/json_parse_model_file", || {
+        std::hint::black_box(uals::util::json::parse(&json_doc).unwrap());
+    });
+
+    b.write_csv(std::path::Path::new("results/microbench.csv")).unwrap();
+    println!("\nwrote results/microbench.csv");
+}

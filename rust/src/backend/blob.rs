@@ -1,0 +1,180 @@
+//! Blob detection: connected components over foreground / color masks —
+//! the query's first two filter stages (paper Fig. 8: a size filter on
+//! contiguous pixel groups, then a target-color blob filter).
+
+use crate::color::hsv::rgb_to_hsv;
+use crate::color::HueRanges;
+
+/// Binary mask over a frame (row-major, width*height).
+#[derive(Debug, Clone)]
+pub struct Mask {
+    pub width: usize,
+    pub height: usize,
+    pub bits: Vec<bool>,
+}
+
+impl Mask {
+    pub fn count(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+}
+
+/// Foreground mask via max-channel background difference.
+pub fn foreground_mask(rgb: &[f32], background: &[f32], width: usize, height: usize, threshold: f32) -> Mask {
+    let mut bits = vec![false; width * height];
+    for p in 0..width * height {
+        let d = (rgb[3 * p] - background[3 * p])
+            .abs()
+            .max((rgb[3 * p + 1] - background[3 * p + 1]).abs())
+            .max((rgb[3 * p + 2] - background[3 * p + 2]).abs());
+        bits[p] = d > threshold;
+    }
+    Mask { width, height, bits }
+}
+
+/// Foreground pixels whose hue falls in `ranges`, with only a *minimal*
+/// saturation floor to exclude achromatic pixels (whose hue is degenerate).
+///
+/// Deliberately NOT vividness-gated: the query's stage-2 filter is a cheap
+/// color-range test, so dull same-hue confounders (maroon, s≈109) *pass*
+/// and load the DNN — exactly the overload dynamic the Load Shedder exists
+/// to absorb (paper Fig. 13). Discrimination happens at the DNN + label
+/// check, which does gate on vividness.
+pub fn color_mask(
+    rgb: &[f32],
+    background: &[f32],
+    width: usize,
+    height: usize,
+    threshold: f32,
+    ranges: &HueRanges,
+) -> Mask {
+    let mut m = foreground_mask(rgb, background, width, height, threshold);
+    for p in 0..width * height {
+        if !m.bits[p] {
+            continue;
+        }
+        let (h, s, _v) = rgb_to_hsv(rgb[3 * p], rgb[3 * p + 1], rgb[3 * p + 2]);
+        m.bits[p] = ranges.contains(h) && s >= 40.0;
+    }
+    m
+}
+
+/// Sizes of all 4-connected components in a mask, descending.
+pub fn blob_sizes(mask: &Mask) -> Vec<usize> {
+    let (w, h) = (mask.width, mask.height);
+    let mut seen = vec![false; w * h];
+    let mut sizes = Vec::new();
+    let mut stack = Vec::new();
+    for start in 0..w * h {
+        if !mask.bits[start] || seen[start] {
+            continue;
+        }
+        let mut size = 0usize;
+        stack.push(start);
+        seen[start] = true;
+        while let Some(p) = stack.pop() {
+            size += 1;
+            let (x, y) = (p % w, p / w);
+            let mut push = |q: usize| {
+                if mask.bits[q] && !seen[q] {
+                    seen[q] = true;
+                    stack.push(q);
+                }
+            };
+            if x > 0 {
+                push(p - 1);
+            }
+            if x + 1 < w {
+                push(p + 1);
+            }
+            if y > 0 {
+                push(p - w);
+            }
+            if y + 1 < h {
+                push(p + w);
+            }
+        }
+        sizes.push(size);
+    }
+    sizes.sort_unstable_by(|a, b| b.cmp(a));
+    sizes
+}
+
+/// Largest connected component size (0 if mask empty).
+pub fn largest_blob(mask: &Mask) -> usize {
+    blob_sizes(mask).first().copied().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+
+    fn frame_with_rects(rects: &[(usize, usize, usize, usize, [f32; 3])]) -> (Vec<f32>, Vec<f32>) {
+        let (w, h) = (32, 32);
+        let bg = vec![96.0; w * h * 3];
+        let mut rgb = bg.clone();
+        for &(x0, y0, x1, y1, c) in rects {
+            for y in y0..y1 {
+                for x in x0..x1 {
+                    let i = (y * w + x) * 3;
+                    rgb[i..i + 3].copy_from_slice(&c);
+                }
+            }
+        }
+        (rgb, bg)
+    }
+
+    #[test]
+    fn fg_mask_counts() {
+        let (rgb, bg) = frame_with_rects(&[(0, 0, 4, 4, [208.0, 22.0, 28.0])]);
+        let m = foreground_mask(&rgb, &bg, 32, 32, 25.0);
+        assert_eq!(m.count(), 16);
+    }
+
+    #[test]
+    fn blob_separation() {
+        // Two disjoint blobs: 4x4=16 and 2x2=4 (diagonal adjacency is NOT
+        // connected under 4-connectivity).
+        let (rgb, bg) = frame_with_rects(&[
+            (0, 0, 4, 4, [208.0, 22.0, 28.0]),
+            (10, 10, 12, 12, [208.0, 22.0, 28.0]),
+        ]);
+        let m = foreground_mask(&rgb, &bg, 32, 32, 25.0);
+        assert_eq!(blob_sizes(&m), vec![16, 4]);
+        assert_eq!(largest_blob(&m), 16);
+    }
+
+    #[test]
+    fn diagonal_not_connected() {
+        let (rgb, bg) = frame_with_rects(&[
+            (0, 0, 2, 2, [208.0, 22.0, 28.0]),
+            (2, 2, 4, 4, [208.0, 22.0, 28.0]),
+        ]);
+        let m = foreground_mask(&rgb, &bg, 32, 32, 25.0);
+        assert_eq!(blob_sizes(&m), vec![4, 4]);
+    }
+
+    #[test]
+    fn color_mask_is_hue_only() {
+        let (rgb, bg) = frame_with_rects(&[
+            (0, 0, 4, 4, [208.0, 22.0, 28.0]),   // vivid red 16px
+            (8, 8, 12, 12, [122.0, 72.0, 70.0]), // dull red (low sat) 16px
+            (16, 16, 20, 20, [228.0, 200.0, 24.0]), // vivid yellow 16px
+        ]);
+        // Both red-hue rects pass the stage-2 filter (dull confounders
+        // load the DNN — see doc comment), yellow does not.
+        let m = color_mask(&rgb, &bg, 32, 32, 25.0, &NamedColor::Red.ranges());
+        assert_eq!(m.count(), 32);
+        let my = color_mask(&rgb, &bg, 32, 32, 25.0, &NamedColor::Yellow.ranges());
+        assert_eq!(my.count(), 16);
+    }
+
+    #[test]
+    fn empty_mask() {
+        let (rgb, bg) = frame_with_rects(&[]);
+        let m = foreground_mask(&rgb, &bg, 32, 32, 25.0);
+        assert_eq!(largest_blob(&m), 0);
+        assert!(blob_sizes(&m).is_empty());
+    }
+}

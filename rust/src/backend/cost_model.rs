@@ -1,0 +1,97 @@
+//! Per-stage execution-cost model: gives the discrete-event simulator the
+//! latency profile of the paper's testbed (efficientdet-d4-class DNN on a
+//! K80, Jetson-class camera ops) with seeded jitter.
+//!
+//! The *shape* of the paper's load dynamics comes from which stages a
+//! frame traverses (cheap filter exit vs. full DNN pass); this model
+//! supplies the per-stage magnitudes. DESIGN.md documents the calibration.
+
+use crate::config::CostConfig;
+use crate::util::rng::Rng;
+
+/// Stage cost sampler with multiplicative jitter.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    cfg: CostConfig,
+    rng: Rng,
+}
+
+impl CostModel {
+    pub fn new(cfg: CostConfig, seed: u64) -> Self {
+        CostModel { cfg, rng: Rng::new(seed ^ 0xC057) }
+    }
+
+    pub fn config(&self) -> &CostConfig {
+        &self.cfg
+    }
+
+    fn jittered(&mut self, base_ms: f64) -> f64 {
+        if self.cfg.jitter <= 0.0 {
+            return base_ms;
+        }
+        let f = 1.0 + (self.rng.f64() * 2.0 - 1.0) * self.cfg.jitter;
+        (base_ms * f).max(0.0)
+    }
+
+    /// Camera-side processing (RGB→HSV + bg-sub + feature extraction).
+    pub fn camera_ms(&mut self) -> f64 {
+        self.jittered(self.cfg.cam_ms)
+    }
+
+    pub fn blob_filter_ms(&mut self) -> f64 {
+        self.jittered(self.cfg.blob_ms)
+    }
+
+    pub fn color_filter_ms(&mut self) -> f64 {
+        self.jittered(self.cfg.color_ms)
+    }
+
+    pub fn dnn_ms(&mut self) -> f64 {
+        self.jittered(self.cfg.dnn_ms)
+    }
+
+    pub fn sink_ms(&mut self) -> f64 {
+        self.jittered(self.cfg.sink_ms)
+    }
+
+    pub fn net_cam_ls_ms(&mut self) -> f64 {
+        self.jittered(self.cfg.net_cam_ls_ms)
+    }
+
+    pub fn net_ls_q_ms(&mut self) -> f64 {
+        self.jittered(self.cfg.net_ls_q_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jitter_bounded_and_deterministic() {
+        let cfg = CostConfig { jitter: 0.1, ..Default::default() };
+        let mut a = CostModel::new(cfg.clone(), 7);
+        let mut b = CostModel::new(cfg.clone(), 7);
+        for _ in 0..1000 {
+            let x = a.dnn_ms();
+            assert_eq!(x, b.dnn_ms());
+            assert!(x >= cfg.dnn_ms * 0.9 - 1e-9 && x <= cfg.dnn_ms * 1.1 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_jitter_exact() {
+        let cfg = CostConfig { jitter: 0.0, ..Default::default() };
+        let mut m = CostModel::new(cfg.clone(), 1);
+        assert_eq!(m.blob_filter_ms(), cfg.blob_ms);
+        assert_eq!(m.camera_ms(), cfg.cam_ms);
+    }
+
+    #[test]
+    fn dnn_dominates_filters() {
+        // Structural property the experiments rely on: a DNN-bound frame
+        // costs an order of magnitude more than a filter-exit frame.
+        let cfg = CostConfig::default();
+        assert!(cfg.dnn_ms > 10.0 * (cfg.blob_ms + cfg.color_ms));
+    }
+}

@@ -1,0 +1,204 @@
+//! The backend query's object-detection stage — the efficientdet-d4
+//! substitution (DESIGN.md §2): a deterministic color-blob detector over a
+//! G×G grid. Two backends with identical semantics:
+//!
+//! * `Artifact` — the AOT `detector.hlo.txt` module via PJRT (production);
+//! * `Native` — pure Rust mirror (fast path for long simulations).
+//!
+//! The heavy *cost* of the real DNN is modeled by `CostModel::dnn_ms`, not
+//! by this computation.
+
+use crate::color::hsv::rgb_to_hsv;
+use crate::color::HueRanges;
+use crate::runtime::{Engine, Executable, Tensor};
+use anyhow::{bail, Result};
+use std::rc::Rc;
+
+/// Detection output: fired cells per query color.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Detections {
+    /// Number of grid cells fired per color.
+    pub cell_counts: Vec<u32>,
+}
+
+impl Detections {
+    /// Any detection for color `c`?
+    pub fn found(&self, c: usize) -> bool {
+        self.cell_counts.get(c).copied().unwrap_or(0) > 0
+    }
+}
+
+/// Detector backend.
+pub enum Detector {
+    Native { grid: usize, fg_threshold: f32 },
+    Artifact { exe: Rc<Executable>, frame_h: usize, frame_w: usize },
+}
+
+/// Cell-density firing fraction (matches python/compile/model.py).
+const FIRE_FRACTION: f32 = 0.25;
+/// Vividness gates (saturation ≥ 4 bins, value ≥ 2 bins), same as
+/// model.py: excludes dull same-hue confounders (maroon s≈109).
+const VIVID_SAT_MIN: f32 = 128.0;
+const VIVID_VAL_MIN: f32 = 64.0;
+
+impl Detector {
+    pub fn native(grid: usize, fg_threshold: f32) -> Self {
+        Detector::Native { grid, fg_threshold }
+    }
+
+    pub fn artifact(engine: &Engine) -> Result<Self> {
+        let exe = engine.load("detector")?;
+        let m = engine.manifest();
+        Ok(Detector::Artifact { exe, frame_h: m.frame_h, frame_w: m.frame_w })
+    }
+
+    /// Detect target-colored objects. `ranges` has K ≤ 2 colors.
+    pub fn detect(
+        &self,
+        rgb: &[f32],
+        background: &[f32],
+        width: usize,
+        height: usize,
+        ranges: &[HueRanges],
+    ) -> Result<Detections> {
+        if ranges.is_empty() || ranges.len() > 2 {
+            bail!("detector supports 1 or 2 colors, got {}", ranges.len());
+        }
+        match self {
+            Detector::Native { grid, fg_threshold } => Ok(native_detect(
+                rgb,
+                background,
+                width,
+                height,
+                *grid,
+                *fg_threshold,
+                ranges,
+            )),
+            Detector::Artifact { exe, frame_h, frame_w } => {
+                if width != *frame_w || height != *frame_h {
+                    bail!("frame {width}x{height} != artifact {frame_w}x{frame_h}");
+                }
+                // The artifact is compiled for 2 colors; pad with an empty
+                // hue interval, which can never fire.
+                let mut r = Vec::with_capacity(8);
+                for c in 0..2 {
+                    let hr = ranges.get(c).copied().unwrap_or(HueRanges::single(0.0, 0.0));
+                    r.extend_from_slice(&hr.to_array());
+                }
+                let rgb_t = Tensor::new(rgb.to_vec(), vec![height, width, 3])?;
+                let bg_t = Tensor::new(background.to_vec(), vec![height, width, 3])?;
+                let r_t = Tensor::new(r, vec![2, 4])?;
+                let outs = exe.run(&[&rgb_t, &bg_t, &r_t])?;
+                let counts = &outs[1];
+                let mut cell_counts: Vec<u32> =
+                    counts.data().iter().map(|&x| x as u32).collect();
+                cell_counts.truncate(ranges.len());
+                Ok(Detections { cell_counts })
+            }
+        }
+    }
+}
+
+/// Pure-Rust mirror of the artifact's detection graph.
+fn native_detect(
+    rgb: &[f32],
+    background: &[f32],
+    width: usize,
+    height: usize,
+    grid: usize,
+    fg_threshold: f32,
+    ranges: &[HueRanges],
+) -> Detections {
+    let pool_y = height / grid;
+    let pool_x = width / grid;
+    let fire_at = FIRE_FRACTION * (pool_x * pool_y) as f32;
+    let mut cell_counts = vec![0u32; ranges.len()];
+    for (c, range) in ranges.iter().enumerate() {
+        for gy in 0..grid {
+            for gx in 0..grid {
+                let mut density = 0.0f32;
+                for y in gy * pool_y..(gy + 1) * pool_y {
+                    for x in gx * pool_x..(gx + 1) * pool_x {
+                        let p = y * width + x;
+                        let d = (rgb[3 * p] - background[3 * p])
+                            .abs()
+                            .max((rgb[3 * p + 1] - background[3 * p + 1]).abs())
+                            .max((rgb[3 * p + 2] - background[3 * p + 2]).abs());
+                        if d <= fg_threshold {
+                            continue;
+                        }
+                        let (h, s, v) = rgb_to_hsv(rgb[3 * p], rgb[3 * p + 1], rgb[3 * p + 2]);
+                        if range.contains(h) && s >= VIVID_SAT_MIN && v >= VIVID_VAL_MIN {
+                            density += 1.0;
+                        }
+                    }
+                }
+                if density >= fire_at {
+                    cell_counts[c] += 1;
+                }
+            }
+        }
+    }
+    Detections { cell_counts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+
+    fn frame_with_block(c: [f32; 3]) -> (Vec<f32>, Vec<f32>) {
+        let (w, h) = (96, 96);
+        let bg = vec![96.0f32; w * h * 3];
+        let mut rgb = bg.clone();
+        for y in 24..40 {
+            for x in 8..40 {
+                let i = (y * w + x) * 3;
+                rgb[i..i + 3].copy_from_slice(&c);
+            }
+        }
+        (rgb, bg)
+    }
+
+    #[test]
+    fn native_fires_on_vivid_red_only() {
+        let det = Detector::native(12, 25.0);
+        let ranges = [NamedColor::Red.ranges(), NamedColor::Yellow.ranges()];
+        let (rgb, bg) = frame_with_block([208.0, 22.0, 28.0]);
+        let d = det.detect(&rgb, &bg, 96, 96, &ranges).unwrap();
+        assert!(d.found(0));
+        assert!(!d.found(1));
+        // Dull red must NOT fire (below vividness gate).
+        let (rgb, bg) = frame_with_block([122.0, 72.0, 70.0]);
+        let d = det.detect(&rgb, &bg, 96, 96, &ranges).unwrap();
+        assert!(!d.found(0));
+    }
+
+    #[test]
+    fn single_color_query_supported() {
+        let det = Detector::native(12, 25.0);
+        let (rgb, bg) = frame_with_block([228.0, 200.0, 24.0]);
+        let d = det
+            .detect(&rgb, &bg, 96, 96, &[NamedColor::Yellow.ranges()])
+            .unwrap();
+        assert_eq!(d.cell_counts.len(), 1);
+        assert!(d.found(0));
+    }
+
+    #[test]
+    fn empty_frame_no_detections() {
+        let det = Detector::native(12, 25.0);
+        let bg = vec![96.0f32; 96 * 96 * 3];
+        let d = det
+            .detect(&bg, &bg, 96, 96, &[NamedColor::Red.ranges()])
+            .unwrap();
+        assert_eq!(d.cell_counts, vec![0]);
+    }
+
+    #[test]
+    fn arity_validated() {
+        let det = Detector::native(12, 25.0);
+        let bg = vec![96.0f32; 96 * 96 * 3];
+        assert!(det.detect(&bg, &bg, 96, 96, &[]).is_err());
+    }
+}

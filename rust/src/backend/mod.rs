@@ -1,0 +1,12 @@
+//! Backend application query (paper Fig. 8): filters → DNN → sink, plus
+//! the cost model that calibrates simulated stage latencies.
+
+pub mod blob;
+pub mod cost_model;
+pub mod detector;
+pub mod query;
+
+pub use blob::{blob_sizes, color_mask, foreground_mask, largest_blob, Mask};
+pub use cost_model::CostModel;
+pub use detector::{Detections, Detector};
+pub use query::{BackendQuery, QueryResult};

@@ -1,0 +1,215 @@
+//! The Backend Query Executor (paper Fig. 8): blob-size filter → color
+//! filter → DNN detection → label/color check → sink. Returns which stage
+//! each frame reached plus the (cost-model) execution time, which is what
+//! drives the control loop's `proc_Q`.
+
+use super::blob::{color_mask, foreground_mask, largest_blob};
+use super::cost_model::CostModel;
+use super::detector::{Detections, Detector};
+use crate::color::HueRanges;
+use crate::config::QueryConfig;
+use crate::metrics::Stage;
+use crate::utility::Combine;
+use anyhow::Result;
+
+/// Outcome of running the query on one frame.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    /// Deepest stage the frame reached.
+    pub last_stage: Stage,
+    /// Simulated execution time across traversed stages (ms).
+    pub exec_ms: f64,
+    /// DNN detections (only when the DNN ran).
+    pub detections: Option<Detections>,
+    /// Did the frame satisfy the query (reach the sink with a match)?
+    pub matched: bool,
+}
+
+/// The application query executor.
+pub struct BackendQuery {
+    query: QueryConfig,
+    ranges: Vec<HueRanges>,
+    detector: Detector,
+    cost: CostModel,
+    fg_threshold: f32,
+}
+
+impl BackendQuery {
+    pub fn new(query: QueryConfig, detector: Detector, cost: CostModel, fg_threshold: f32) -> Self {
+        let ranges = query.colors.iter().map(|c| c.ranges()).collect();
+        BackendQuery { query, ranges, detector, cost, fg_threshold }
+    }
+
+    pub fn query(&self) -> &QueryConfig {
+        &self.query
+    }
+
+    /// Process one frame through the operator chain.
+    pub fn process(
+        &mut self,
+        rgb: &[f32],
+        background: &[f32],
+        width: usize,
+        height: usize,
+    ) -> Result<QueryResult> {
+        let mut exec_ms = 0.0;
+
+        // Stage 1: blob-size filter — contiguous foreground groups.
+        exec_ms += self.cost.blob_filter_ms();
+        let fg = foreground_mask(rgb, background, width, height, self.fg_threshold);
+        if largest_blob(&fg) < self.query.min_blob_px {
+            return Ok(QueryResult {
+                last_stage: Stage::BlobFilter,
+                exec_ms,
+                detections: None,
+                matched: false,
+            });
+        }
+
+        // Stage 2: color filter — a large-enough blob of a target color.
+        exec_ms += self.cost.color_filter_ms();
+        let mut any_color = false;
+        for r in &self.ranges {
+            let cm = color_mask(rgb, background, width, height, self.fg_threshold, r);
+            if largest_blob(&cm) >= self.query.min_blob_px {
+                any_color = true;
+                break;
+            }
+        }
+        if !any_color {
+            return Ok(QueryResult {
+                last_stage: Stage::ColorFilter,
+                exec_ms,
+                detections: None,
+                matched: false,
+            });
+        }
+
+        // Stage 3: DNN object detection (the heavyweight stage).
+        exec_ms += self.cost.dnn_ms();
+        let detections = self
+            .detector
+            .detect(rgb, background, width, height, &self.ranges)?;
+
+        // Stage 4: label/color check + sink.
+        exec_ms += self.cost.sink_ms();
+        let matched = match self.query.combine {
+            Combine::Single => detections.found(0),
+            Combine::Or => (0..self.ranges.len()).any(|c| detections.found(c)),
+            Combine::And => (0..self.ranges.len()).all(|c| detections.found(c)),
+        };
+        Ok(QueryResult {
+            last_stage: Stage::Sink,
+            exec_ms,
+            detections: Some(detections),
+            matched,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+    use crate::config::CostConfig;
+
+    fn mk_query(combine: Combine) -> BackendQuery {
+        let q = match combine {
+            Combine::Single => QueryConfig::single(NamedColor::Red),
+            c => QueryConfig::composite(NamedColor::Red, NamedColor::Yellow, c),
+        };
+        BackendQuery::new(
+            q,
+            Detector::native(12, 25.0),
+            CostModel::new(CostConfig { jitter: 0.0, ..Default::default() }, 1),
+            25.0,
+        )
+    }
+
+    fn frame(blocks: &[(usize, usize, [f32; 3])]) -> (Vec<f32>, Vec<f32>) {
+        let (w, h) = (96, 96);
+        let bg = vec![96.0f32; w * h * 3];
+        let mut rgb = bg.clone();
+        for &(x0, y0, c) in blocks {
+            for y in y0..y0 + 12 {
+                for x in x0..x0 + 16 {
+                    let i = (y * w + x) * 3;
+                    rgb[i..i + 3].copy_from_slice(&c);
+                }
+            }
+        }
+        (rgb, bg)
+    }
+
+    const RED: [f32; 3] = [208.0, 22.0, 28.0];
+    const YELLOW: [f32; 3] = [228.0, 200.0, 24.0];
+    const GRAY: [f32; 3] = [150.0, 150.0, 150.0];
+
+    #[test]
+    fn empty_frame_exits_at_blob_filter_cheaply() {
+        let mut q = mk_query(Combine::Single);
+        let (rgb, bg) = frame(&[]);
+        let r = q.process(&rgb, &bg, 96, 96).unwrap();
+        assert_eq!(r.last_stage, Stage::BlobFilter);
+        assert!(!r.matched);
+        let costs = CostConfig::default();
+        assert!(r.exec_ms <= costs.blob_ms + 1e-9);
+    }
+
+    #[test]
+    fn gray_object_exits_at_color_filter() {
+        let mut q = mk_query(Combine::Single);
+        let (rgb, bg) = frame(&[(10, 30, GRAY)]);
+        let r = q.process(&rgb, &bg, 96, 96).unwrap();
+        assert_eq!(r.last_stage, Stage::ColorFilter);
+        assert!(!r.matched);
+    }
+
+    #[test]
+    fn red_object_reaches_sink_and_matches() {
+        let mut q = mk_query(Combine::Single);
+        let (rgb, bg) = frame(&[(10, 30, RED)]);
+        let r = q.process(&rgb, &bg, 96, 96).unwrap();
+        assert_eq!(r.last_stage, Stage::Sink);
+        assert!(r.matched);
+        let costs = CostConfig::default();
+        assert!(r.exec_ms >= costs.dnn_ms, "DNN cost not charged");
+    }
+
+    #[test]
+    fn or_query_matches_either_color() {
+        let mut q = mk_query(Combine::Or);
+        for c in [RED, YELLOW] {
+            let (rgb, bg) = frame(&[(10, 30, c)]);
+            let r = q.process(&rgb, &bg, 96, 96).unwrap();
+            assert!(r.matched, "OR should match {c:?}");
+        }
+    }
+
+    #[test]
+    fn and_query_requires_both() {
+        let mut q = mk_query(Combine::And);
+        let (rgb, bg) = frame(&[(10, 30, RED)]);
+        let r = q.process(&rgb, &bg, 96, 96).unwrap();
+        assert_eq!(r.last_stage, Stage::Sink); // red blob got it past filters
+        assert!(!r.matched, "AND needs both colors");
+        let (rgb, bg) = frame(&[(10, 30, RED), (50, 60, YELLOW)]);
+        let r = q.process(&rgb, &bg, 96, 96).unwrap();
+        assert!(r.matched);
+    }
+
+    #[test]
+    fn small_target_blocked_by_min_blob() {
+        let mut q = mk_query(Combine::Single);
+        // A 4x4 red dot (16 px < 40 min blob) over empty background.
+        let (mut rgb, bg) = frame(&[]);
+        for y in 30..34 {
+            for x in 10..14 {
+                let i = (y * 96 + x) * 3;
+                rgb[i..i + 3].copy_from_slice(&RED);
+            }
+        }
+        let r = q.process(&rgb, &bg, 96, 96).unwrap();
+        assert_eq!(r.last_stage, Stage::BlobFilter);
+    }
+}

@@ -1,0 +1,98 @@
+//! Content-agnostic baseline shedder (paper §V-D/V-E): drops each frame
+//! with a fixed uniform probability, independent of content.
+//!
+//! Two uses in the evaluation:
+//! * Fig. 10b/10c — offline sweeps at a fixed target rate;
+//! * Fig. 14 / the sim — online, with the rate derived from Eq. 18/19
+//!   under an *assumed* proc_Q (the paper uses a lenient 500 ms), exposed
+//!   as `pipeline::Policy::RandomRate`.
+
+use crate::util::rng::Rng;
+
+/// Uniform-probability frame dropper.
+#[derive(Debug, Clone)]
+pub struct RandomShedder {
+    rate: f64,
+    rng: Rng,
+    kept: u64,
+    dropped: u64,
+}
+
+impl RandomShedder {
+    /// `rate` ∈ [0, 1]: probability of dropping each frame.
+    pub fn new(rate: f64, seed: u64) -> Self {
+        RandomShedder { rate: rate.clamp(0.0, 1.0), rng: Rng::new(seed), kept: 0, dropped: 0 }
+    }
+
+    /// Rate from the paper's Fig-14 recipe: Eq. 18/19 with an assumed
+    /// backend latency.
+    pub fn from_assumed_proc_q(assumed_proc_q_ms: f64, ingress_fps: f64, seed: u64) -> Self {
+        let rate = crate::shedder::target_drop_rate(assumed_proc_q_ms, ingress_fps);
+        RandomShedder::new(rate, seed)
+    }
+
+    /// Decide one frame: true = keep, false = shed.
+    pub fn keep(&mut self) -> bool {
+        let keep = !self.rng.chance(self.rate);
+        if keep {
+            self.kept += 1;
+        } else {
+            self.dropped += 1;
+        }
+        keep
+    }
+
+    pub fn target_rate(&self) -> f64 {
+        self.rate
+    }
+
+    pub fn observed_rate(&self) -> f64 {
+        let n = self.kept + self.dropped;
+        if n == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observed_tracks_target() {
+        let mut s = RandomShedder::new(0.3, 7);
+        for _ in 0..20_000 {
+            s.keep();
+        }
+        assert!((s.observed_rate() - 0.3).abs() < 0.02, "{}", s.observed_rate());
+    }
+
+    #[test]
+    fn extremes() {
+        let mut all = RandomShedder::new(0.0, 1);
+        assert!((0..100).all(|_| all.keep()));
+        let mut none = RandomShedder::new(1.0, 1);
+        assert!((0..100).all(|_| !none.keep()));
+    }
+
+    #[test]
+    fn eq19_recipe() {
+        // 500 ms assumed proc_Q at 50 fps aggregate → rate 0.96.
+        let s = RandomShedder::from_assumed_proc_q(500.0, 50.0, 3);
+        assert!((s.target_rate() - 0.96).abs() < 1e-9);
+    }
+
+    #[test]
+    fn content_agnostic_qor_decays_linearly() {
+        // The statistical core of Fig 10b: per-object QoR ≈ 1 - rate.
+        use crate::metrics::QorTracker;
+        let mut s = RandomShedder::new(0.4, 11);
+        let mut q = QorTracker::new();
+        for i in 0..30_000u64 {
+            q.observe(&[i % 50], s.keep()); // 50 objects, 600 frames each
+        }
+        assert!((q.overall() - 0.6).abs() < 0.03, "qor {}", q.overall());
+    }
+}

@@ -1,0 +1,141 @@
+//! Minimal subcommand/flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! repeated flags (collected in order). Unknown-flag and missing-value
+//! errors carry the offending token.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + flags + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--" {
+                // `cargo run --example x -- --flag` forwards a bare `--`;
+                // treat it as a separator and skip it.
+                continue;
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        // A following token that isn't itself a flag is
+                        // this flag's value; otherwise boolean.
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                args.flags.entry(key).or_default().push(val);
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Last value of a flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeated flag.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Typed access with a default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} wants an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} wants a number, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = p("figures --fig 9a --scale small --quiet");
+        assert_eq!(a.subcommand.as_deref(), Some("figures"));
+        assert_eq!(a.get("fig"), Some("9a"));
+        assert_eq!(a.get("scale"), Some("small"));
+        assert_eq!(a.get("quiet"), Some("true"));
+        assert!(a.has("quiet"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn equals_form_and_repeats() {
+        let a = p("figures --fig=5a --fig 5b --fig=6");
+        assert_eq!(a.get_all("fig"), vec!["5a", "5b", "6"]);
+        assert_eq!(a.get("fig"), Some("6")); // last wins for single access
+    }
+
+    #[test]
+    fn typed_access() {
+        let a = p("run --frames 500 --rate 0.5");
+        assert_eq!(a.get_usize("frames", 0).unwrap(), 500);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("other", 7).unwrap(), 7);
+        assert!(p("x --frames abc").get_usize("frames", 0).is_err());
+    }
+
+    #[test]
+    fn positionals() {
+        let a = p("train model.json extra");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.positional, vec!["model.json", "extra"]);
+    }
+}

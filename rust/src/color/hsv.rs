@@ -1,0 +1,111 @@
+//! RGB → HSV conversion, bit-matching the Python oracle (`ref.rgb_to_hsv`).
+//!
+//! This is the Rust side of the cross-language numeric contract: the
+//! pure-Rust feature oracle (`features::reference`) uses this conversion,
+//! and integration tests assert it agrees with the AOT artifacts to f32
+//! precision.
+
+use super::{BIN_SIZE, NUM_BINS};
+
+/// Convert one RGB pixel (f32, [0,255]) to OpenCV-style (h, s, v).
+///
+/// h ∈ [0, 180), s ∈ [0, 255], v ∈ [0, 255]. Achromatic pixels get h = 0,
+/// black gets s = 0 — identical to the jnp reference's `where` chain.
+#[inline]
+pub fn rgb_to_hsv(r: f32, g: f32, b: f32) -> (f32, f32, f32) {
+    let v = r.max(g).max(b);
+    let mn = r.min(g).min(b);
+    let delta = v - mn;
+    let h = if delta > 0.0 {
+        // Match the jnp reference's branch *order*: v==r first, then v==g.
+        let deg = if v == r {
+            (60.0 * (g - b) / delta).rem_euclid(360.0)
+        } else if v == g {
+            60.0 * (b - r) / delta + 120.0
+        } else {
+            60.0 * (r - g) / delta + 240.0
+        };
+        deg * 0.5
+    } else {
+        0.0
+    };
+    let s = if v > 0.0 { delta / v * 255.0 } else { 0.0 };
+    (h, s, v)
+}
+
+/// Saturation/value bin index pair (paper Eq. 7/8), clamped to [0, 8).
+#[inline]
+pub fn sat_val_bin(s: f32, v: f32) -> (usize, usize) {
+    let sb = ((s / BIN_SIZE).floor() as i64).clamp(0, NUM_BINS as i64 - 1) as usize;
+    let vb = ((v / BIN_SIZE).floor() as i64).clamp(0, NUM_BINS as i64 - 1) as usize;
+    (sb, vb)
+}
+
+/// Flat bin index sat_bin * 8 + val_bin — the artifact's histogram layout.
+#[inline]
+pub fn flat_bin(s: f32, v: f32) -> usize {
+    let (sb, vb) = sat_val_bin(s, v);
+    sb * NUM_BINS + vb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f32, b: f32) -> bool {
+        (a - b).abs() < 1e-3
+    }
+
+    #[test]
+    fn pure_colors() {
+        let (h, s, v) = rgb_to_hsv(255.0, 0.0, 0.0);
+        assert!(close(h, 0.0) && close(s, 255.0) && close(v, 255.0));
+        let (h, _, _) = rgb_to_hsv(0.0, 255.0, 0.0);
+        assert!(close(h, 60.0));
+        let (h, _, _) = rgb_to_hsv(0.0, 0.0, 255.0);
+        assert!(close(h, 120.0));
+        let (h, _, _) = rgb_to_hsv(255.0, 255.0, 0.0);
+        assert!(close(h, 30.0));
+    }
+
+    #[test]
+    fn achromatic() {
+        let (h, s, v) = rgb_to_hsv(128.0, 128.0, 128.0);
+        assert_eq!((h, s), (0.0, 0.0));
+        assert!(close(v, 128.0));
+        let (h, s, v) = rgb_to_hsv(0.0, 0.0, 0.0);
+        assert_eq!((h, s, v), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn hue_always_in_domain() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..10_000 {
+            let (r, g, b) = (
+                rng.f32() * 255.0,
+                rng.f32() * 255.0,
+                rng.f32() * 255.0,
+            );
+            let (h, s, v) = rgb_to_hsv(r, g, b);
+            assert!((0.0..180.0).contains(&h), "h={h} for ({r},{g},{b})");
+            assert!((0.0..=255.0).contains(&s));
+            assert!((0.0..=255.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn bins_cover_domain() {
+        assert_eq!(sat_val_bin(0.0, 0.0), (0, 0));
+        assert_eq!(sat_val_bin(31.99, 32.0), (0, 1));
+        assert_eq!(sat_val_bin(255.0, 255.0), (7, 7));
+        assert_eq!(flat_bin(255.0, 0.0), 56);
+    }
+
+    #[test]
+    fn red_wrap_negative_hue_handled() {
+        // Slightly blue-ish red gives negative degrees pre-modulo; must wrap
+        // into [170, 180) not go negative.
+        let (h, _, _) = rgb_to_hsv(255.0, 0.0, 30.0);
+        assert!((170.0..180.0).contains(&h), "h={h}");
+    }
+}

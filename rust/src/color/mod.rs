@@ -1,0 +1,175 @@
+//! HSV color model and hue-range algebra (paper §IV-B.1).
+//!
+//! Conventions follow OpenCV (and the Python layers): hue ∈ [0, 180),
+//! saturation and value ∈ [0, 256). A query color is a *pair* of half-open
+//! hue intervals so wrap-around colors (red = [0,10) ∪ [170,180)) need no
+//! special casing anywhere downstream.
+
+pub mod hsv;
+
+/// Number of saturation / value bins (B_S = B_V, paper §V-B).
+pub const NUM_BINS: usize = 8;
+/// Bin width: 256 / 8 = 32 (paper: "bin sizes s and v are equal to 32").
+pub const BIN_SIZE: f32 = 256.0 / NUM_BINS as f32;
+/// Hue domain upper bound (OpenCV half-degrees).
+pub const HUE_MAX: f32 = 180.0;
+
+/// A query color: up to two half-open hue intervals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HueRanges {
+    pub lo1: f32,
+    pub hi1: f32,
+    pub lo2: f32,
+    pub hi2: f32,
+}
+
+impl HueRanges {
+    /// Single interval [lo, hi).
+    pub fn single(lo: f32, hi: f32) -> Self {
+        assert!(lo <= hi && hi <= HUE_MAX, "bad hue range [{lo},{hi})");
+        HueRanges { lo1: lo, hi1: hi, lo2: 0.0, hi2: 0.0 }
+    }
+
+    /// Two intervals (wrap-around colors).
+    pub fn pair(lo1: f32, hi1: f32, lo2: f32, hi2: f32) -> Self {
+        assert!(lo1 <= hi1 && hi1 <= HUE_MAX);
+        assert!(lo2 <= hi2 && hi2 <= HUE_MAX);
+        HueRanges { lo1, hi1, lo2, hi2 }
+    }
+
+    /// Membership test (half-open on both intervals).
+    #[inline]
+    pub fn contains(&self, hue: f32) -> bool {
+        (hue >= self.lo1 && hue < self.hi1) || (hue >= self.lo2 && hue < self.hi2)
+    }
+
+    /// Flatten to the [lo1, hi1, lo2, hi2] layout the AOT artifacts take.
+    pub fn to_array(&self) -> [f32; 4] {
+        [self.lo1, self.hi1, self.lo2, self.hi2]
+    }
+
+    /// Total hue mass covered (for sanity checks / generator tuning).
+    pub fn width(&self) -> f32 {
+        (self.hi1 - self.lo1) + (self.hi2 - self.lo2)
+    }
+}
+
+/// Colors used throughout the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NamedColor {
+    Red,
+    Yellow,
+    Green,
+    Blue,
+    White,
+    Gray,
+}
+
+impl NamedColor {
+    /// Hue ranges per color. Red wraps around the hue circle (paper §IV-B.1).
+    pub fn ranges(self) -> HueRanges {
+        match self {
+            NamedColor::Red => HueRanges::pair(0.0, 10.0, 170.0, 180.0),
+            NamedColor::Yellow => HueRanges::single(20.0, 35.0),
+            NamedColor::Green => HueRanges::single(40.0, 80.0),
+            NamedColor::Blue => HueRanges::single(100.0, 130.0),
+            // Achromatic "colors" — wide hue, they are separated by sat/val
+            // instead; used only by the scene generator for distractors.
+            NamedColor::White => HueRanges::single(0.0, 180.0),
+            NamedColor::Gray => HueRanges::single(0.0, 180.0),
+        }
+    }
+
+    /// A representative vivid RGB for the scene generator.
+    pub fn rgb(self) -> [f32; 3] {
+        match self {
+            NamedColor::Red => [210.0, 25.0, 25.0],
+            NamedColor::Yellow => [230.0, 205.0, 25.0],
+            NamedColor::Green => [30.0, 190.0, 40.0],
+            NamedColor::Blue => [30.0, 60.0, 200.0],
+            NamedColor::White => [235.0, 235.0, 235.0],
+            NamedColor::Gray => [128.0, 128.0, 128.0],
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NamedColor::Red => "red",
+            NamedColor::Yellow => "yellow",
+            NamedColor::Green => "green",
+            NamedColor::Blue => "blue",
+            NamedColor::White => "white",
+            NamedColor::Gray => "gray",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "red" => Some(NamedColor::Red),
+            "yellow" => Some(NamedColor::Yellow),
+            "green" => Some(NamedColor::Green),
+            "blue" => Some(NamedColor::Blue),
+            "white" => Some(NamedColor::White),
+            "gray" | "grey" => Some(NamedColor::Gray),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn red_wraparound_membership() {
+        let red = NamedColor::Red.ranges();
+        assert!(red.contains(0.0));
+        assert!(red.contains(9.99));
+        assert!(!red.contains(10.0));
+        assert!(!red.contains(90.0));
+        assert!(red.contains(170.0));
+        assert!(red.contains(179.9));
+    }
+
+    #[test]
+    fn half_open_semantics() {
+        let y = NamedColor::Yellow.ranges();
+        assert!(y.contains(20.0));
+        assert!(!y.contains(35.0));
+    }
+
+    #[test]
+    fn generator_rgbs_are_in_their_own_hue_range() {
+        // The vivid RGB of each chromatic color must fall inside the hue
+        // ranges the query will look for — otherwise synthetic positives
+        // would be invisible to the shedder.
+        for c in [NamedColor::Red, NamedColor::Yellow, NamedColor::Green, NamedColor::Blue] {
+            let [r, g, b] = c.rgb();
+            let (h, s, v) = hsv::rgb_to_hsv(r, g, b);
+            assert!(c.ranges().contains(h), "{c:?}: hue {h} not in range");
+            assert!(s > 2.0 * BIN_SIZE, "{c:?} not saturated enough: {s}");
+            assert!(v > 2.0 * BIN_SIZE, "{c:?} not bright enough: {v}");
+        }
+    }
+
+    #[test]
+    fn to_array_layout_matches_artifacts() {
+        let r = NamedColor::Red.ranges().to_array();
+        assert_eq!(r, [0.0, 10.0, 170.0, 180.0]);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for c in [
+            NamedColor::Red,
+            NamedColor::Yellow,
+            NamedColor::Green,
+            NamedColor::Blue,
+            NamedColor::White,
+            NamedColor::Gray,
+        ] {
+            assert_eq!(NamedColor::parse(c.name()), Some(c));
+        }
+        assert_eq!(NamedColor::parse("magenta"), None);
+    }
+}

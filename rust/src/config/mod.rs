@@ -1,0 +1,230 @@
+//! Configuration system: query, shedder, cost-model and deployment
+//! parameters, with JSON load/save (the paper's "developer-provided"
+//! inputs: target colors, hue ranges, E2E latency bound, …).
+
+use crate::color::NamedColor;
+use crate::utility::Combine;
+use crate::util::json::{self, Value};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Application-query definition (paper Fig. 1 + §II-B).
+#[derive(Debug, Clone)]
+pub struct QueryConfig {
+    /// Target colors (1 = single-color, 2 = composite).
+    pub colors: Vec<NamedColor>,
+    /// OR / AND composition for 2-color queries.
+    pub combine: Combine,
+    /// Minimum blob size (pixels) for the query's filter stages and for
+    /// ground-truth target labeling.
+    pub min_blob_px: usize,
+    /// End-to-end latency bound LB (ms).
+    pub latency_bound_ms: f64,
+}
+
+impl QueryConfig {
+    pub fn single(color: NamedColor) -> Self {
+        QueryConfig {
+            colors: vec![color],
+            combine: Combine::Single,
+            min_blob_px: crate::video::MIN_TARGET_PX,
+            latency_bound_ms: 1000.0,
+        }
+    }
+
+    pub fn composite(c1: NamedColor, c2: NamedColor, combine: Combine) -> Self {
+        assert!(combine != Combine::Single);
+        QueryConfig {
+            colors: vec![c1, c2],
+            combine,
+            min_blob_px: crate::video::MIN_TARGET_PX,
+            latency_bound_ms: 1000.0,
+        }
+    }
+
+    pub fn with_latency_bound(mut self, ms: f64) -> Self {
+        self.latency_bound_ms = ms;
+        self
+    }
+}
+
+/// Load Shedder tuning parameters (paper §IV-C/D).
+#[derive(Debug, Clone)]
+pub struct ShedderConfig {
+    /// |H|: utility history window for the CDF (frames).
+    pub history: usize,
+    /// Re-derive the utility threshold every this many ingress frames.
+    pub update_every: usize,
+    /// Hard cap on the internal utility queue size.
+    pub queue_cap_max: usize,
+    /// EWMA weight for the smoothed backend processing latency proc_Q.
+    pub proc_ewma_alpha: f64,
+}
+
+impl Default for ShedderConfig {
+    fn default() -> Self {
+        ShedderConfig {
+            history: 600,
+            update_every: 5,
+            queue_cap_max: 16,
+            proc_ewma_alpha: 0.3,
+        }
+    }
+}
+
+/// Per-stage execution-cost model (ms) — calibrates the simulated backend
+/// to the paper's testbed class (efficientdet-d4 on an Azure NC6 / K80 for
+/// the DNN stage, §V-B/V-C; Jetson TX1-class camera-side costs, §V-F).
+#[derive(Debug, Clone)]
+pub struct CostConfig {
+    /// Camera-side processing (RGB→HSV + bg-sub + features), proc_CAM.
+    pub cam_ms: f64,
+    /// Blob (size) filter stage.
+    pub blob_ms: f64,
+    /// Color filter stage.
+    pub color_ms: f64,
+    /// DNN object-detection stage (the heavyweight operator).
+    pub dnn_ms: f64,
+    /// Label/color check + sink.
+    pub sink_ms: f64,
+    /// Network latencies (paper Eq. 20): camera→LS and LS→query.
+    pub net_cam_ls_ms: f64,
+    pub net_ls_q_ms: f64,
+    /// Multiplicative jitter amplitude on stage costs (0.1 = ±10%).
+    pub jitter: f64,
+}
+
+impl Default for CostConfig {
+    fn default() -> Self {
+        CostConfig {
+            cam_ms: 30.0,       // paper Fig. 15: "below 35 ms" on Jetson TX1
+            blob_ms: 4.0,
+            color_ms: 1.5,
+            dnn_ms: 120.0,      // efficientdet-d4-class on a K80
+            sink_ms: 1.0,
+            net_cam_ls_ms: 5.0,
+            net_ls_q_ms: 5.0,
+            jitter: 0.08,
+        }
+    }
+}
+
+/// Deployment scenario (paper Fig. 2): which link/resource is the
+/// bottleneck. Affects the network-latency constants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Deployment {
+    /// LS + query co-located on an edge server (compute bottleneck).
+    EdgeCompute,
+    /// LS on edge, query in cloud (edge↔cloud bandwidth bottleneck).
+    EdgeToCloud,
+    /// LS on camera, query in cloud (camera↔cloud bandwidth bottleneck).
+    CameraToCloud,
+}
+
+impl Deployment {
+    pub fn costs(self) -> CostConfig {
+        let base = CostConfig::default();
+        match self {
+            Deployment::EdgeCompute => base,
+            Deployment::EdgeToCloud => CostConfig { net_ls_q_ms: 35.0, ..base },
+            Deployment::CameraToCloud => {
+                CostConfig { net_cam_ls_ms: 1.0, net_ls_q_ms: 45.0, ..base }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON round-trip for experiment configs.
+// ---------------------------------------------------------------------------
+
+impl QueryConfig {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::object();
+        v.set(
+            "colors",
+            Value::Array(
+                self.colors
+                    .iter()
+                    .map(|c| Value::String(c.name().to_string()))
+                    .collect(),
+            ),
+        )
+        .set("combine", Value::String(self.combine.name().to_string()))
+        .set("min_blob_px", Value::Number(self.min_blob_px as f64))
+        .set("latency_bound_ms", Value::Number(self.latency_bound_ms));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let colors = v
+            .get("colors")?
+            .as_array()?
+            .iter()
+            .map(|c| {
+                NamedColor::parse(c.as_str()?)
+                    .ok_or_else(|| anyhow::anyhow!("unknown color {c}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if colors.is_empty() || colors.len() > 2 {
+            bail!("queries support 1 or 2 colors, got {}", colors.len());
+        }
+        let combine = Combine::parse(v.get("combine")?.as_str()?)
+            .ok_or_else(|| anyhow::anyhow!("bad combine"))?;
+        if (combine == Combine::Single) != (colors.len() == 1) {
+            bail!("combine/colors arity mismatch");
+        }
+        Ok(QueryConfig {
+            colors,
+            combine,
+            min_blob_px: v.get("min_blob_px")?.as_usize()?,
+            latency_bound_ms: v.get("latency_bound_ms")?.as_f64()?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        json::write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&json::read_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_json_roundtrip() {
+        let q = QueryConfig::composite(NamedColor::Red, NamedColor::Yellow, Combine::Or)
+            .with_latency_bound(750.0);
+        let back = QueryConfig::from_json(&q.to_json()).unwrap();
+        assert_eq!(back.colors, q.colors);
+        assert_eq!(back.combine, Combine::Or);
+        assert_eq!(back.latency_bound_ms, 750.0);
+    }
+
+    #[test]
+    fn validation() {
+        let q = QueryConfig::single(NamedColor::Red);
+        let mut v = q.to_json();
+        v.set("combine", Value::String("or".into()));
+        assert!(QueryConfig::from_json(&v).is_err(), "arity mismatch accepted");
+    }
+
+    #[test]
+    fn deployment_scenarios_differ_in_network() {
+        let edge = Deployment::EdgeCompute.costs();
+        let cloud = Deployment::EdgeToCloud.costs();
+        assert!(cloud.net_ls_q_ms > edge.net_ls_q_ms);
+        let cam = Deployment::CameraToCloud.costs();
+        assert!(cam.net_ls_q_ms > edge.net_ls_q_ms);
+    }
+
+    #[test]
+    #[should_panic]
+    fn composite_requires_non_single() {
+        QueryConfig::composite(NamedColor::Red, NamedColor::Yellow, Combine::Single);
+    }
+}

@@ -1,0 +1,293 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! * **bin count** — B_S = B_V ∈ {2, 4, 8, 16}: the paper fixed 8 after
+//!   "preliminary experiments (not shown)"; we regenerate that study as
+//!   ROC-AUC of the resulting utility on unseen videos.
+//! * **feature choice** — HF-only vs utility (the Fig 5 vs Fig 9 gap),
+//!   as AUC.
+//! * **history size |H|** — threshold-tracking error of the CDF mapping
+//!   vs window size under content drift.
+//! * **queue policy** — utility-ordered eviction vs FIFO under overload
+//!   (QoR at equal drop pressure), via the discrete-event sim.
+//!
+//! Run via `uals figures --fig ablation-bins` etc. (registered in
+//! `experiments::run_figure`).
+
+use super::common::{build_corpus, Scale};
+use crate::color::hsv::rgb_to_hsv;
+use crate::color::NamedColor;
+use crate::util::csv::Table;
+use crate::utility::auc::roc_auc;
+use crate::utility::{Combine, UtilityCdf};
+use crate::video::MIN_TARGET_PX;
+
+/// Parametric re-binning: PF with `bins`×`bins` resolution, computed from
+/// raw pixels (the shipped kernel/oracle is fixed at 8×8; this study runs
+/// the same math at other resolutions).
+fn parametric_scores(scale: Scale, bins: usize) -> (Vec<f32>, Vec<f32>) {
+    let videos = crate::video::build_dataset(&scale.dataset_config());
+    let ranges = NamedColor::Red.ranges();
+    let bin_size = 256.0 / bins as f32;
+    let hist = bins * bins;
+
+    // Pass 1: per-frame PF + labels.
+    struct Rec {
+        video: usize,
+        pf: Vec<f32>,
+        label: bool,
+    }
+    let mut recs = Vec::new();
+    for (vi, v) in videos.iter().enumerate() {
+        let bg = v.background();
+        for t in 0..v.len() {
+            let f = v.render(t);
+            let mut counts = vec![0.0f32; hist];
+            let mut in_color = 0u32;
+            for p in 0..f.width * f.height {
+                let d = (f.rgb[3 * p] - bg[3 * p])
+                    .abs()
+                    .max((f.rgb[3 * p + 1] - bg[3 * p + 1]).abs())
+                    .max((f.rgb[3 * p + 2] - bg[3 * p + 2]).abs());
+                if d <= 25.0 {
+                    continue;
+                }
+                let (h, s, vv) = rgb_to_hsv(f.rgb[3 * p], f.rgb[3 * p + 1], f.rgb[3 * p + 2]);
+                if !ranges.contains(h) {
+                    continue;
+                }
+                let sb = ((s / bin_size) as usize).min(bins - 1);
+                let vb = ((vv / bin_size) as usize).min(bins - 1);
+                counts[sb * bins + vb] += 1.0;
+                in_color += 1;
+            }
+            if in_color > 0 {
+                for c in counts.iter_mut() {
+                    *c /= in_color as f32;
+                }
+            }
+            recs.push(Rec {
+                video: vi,
+                pf: counts,
+                label: f.is_positive(NamedColor::Red, MIN_TARGET_PX),
+            });
+        }
+    }
+
+    // Pass 2: leave-one-video-out: train M+ (mean PF over positives),
+    // score the held-out video.
+    let n_videos = videos.len();
+    let (mut pos, mut neg) = (Vec::new(), Vec::new());
+    for test in 0..n_videos {
+        let mut m = vec![0.0f64; hist];
+        let mut n_pos = 0u64;
+        for r in recs.iter().filter(|r| r.video != test && r.label) {
+            for (mi, p) in m.iter_mut().zip(&r.pf) {
+                *mi += *p as f64;
+            }
+            n_pos += 1;
+        }
+        if n_pos == 0 {
+            continue;
+        }
+        for mi in m.iter_mut() {
+            *mi /= n_pos as f64;
+        }
+        for r in recs.iter().filter(|r| r.video == test) {
+            let u: f64 = m.iter().zip(&r.pf).map(|(a, b)| a * *b as f64).sum();
+            if r.label {
+                pos.push(u as f32);
+            } else {
+                neg.push(u as f32);
+            }
+        }
+    }
+    (pos, neg)
+}
+
+/// Bin-count ablation: AUC vs B_S=B_V.
+pub fn ablation_bins(scale: Scale) -> Vec<(String, Table)> {
+    let mut t = Table::new(vec!["bins", "auc"]);
+    for bins in [2usize, 4, 8, 16] {
+        let (pos, neg) = parametric_scores(scale, bins);
+        t.push(&[bins as f64, roc_auc(&pos, &neg)]);
+    }
+    vec![("ablation_bins".into(), t)]
+}
+
+/// Feature ablation: HF-only vs full utility, as AUC on unseen videos.
+pub fn ablation_features(scale: Scale) -> Vec<(String, Table)> {
+    let corpus = build_corpus(scale, &[NamedColor::Red]);
+    let scores = corpus.cross_validated_scores(Combine::Single);
+    let (mut pos_u, mut neg_u) = (Vec::new(), Vec::new());
+    let (mut pos_h, mut neg_h) = (Vec::new(), Vec::new());
+    for s in &scores {
+        if s.positive {
+            pos_u.push(s.utility);
+            pos_h.push(s.hf[0]);
+        } else {
+            neg_u.push(s.utility);
+            neg_h.push(s.hf[0]);
+        }
+    }
+    let mut t = Table::new(vec!["feature", "auc"]);
+    t.push_raw(vec![
+        "hue_fraction".to_string(),
+        format!("{:.4}", roc_auc(&pos_h, &neg_h)),
+    ]);
+    t.push_raw(vec![
+        "utility_sat_val".to_string(),
+        format!("{:.4}", roc_auc(&pos_u, &neg_u)),
+    ]);
+    vec![("ablation_features".into(), t)]
+}
+
+/// History-size ablation: how |H| affects how closely the observed drop
+/// fraction tracks the target under drifting content. For each window
+/// size, stream the corpus utilities camera-by-camera (a content shift at
+/// each boundary) and measure |observed − target| per segment.
+pub fn ablation_history(scale: Scale) -> Vec<(String, Table)> {
+    let corpus = build_corpus(scale, &[NamedColor::Red]);
+    let all: Vec<usize> = (0..corpus.videos.len()).collect();
+    let model = corpus.train_on(&all, Combine::Single);
+    let scores = corpus.scores_with(&model, Combine::Single);
+    let target = 0.5;
+    let mut t = Table::new(vec!["history", "mean_abs_rate_error"]);
+    for hist in [50usize, 150, 600, 2400] {
+        let mut cdf = UtilityCdf::new(hist);
+        let mut err_sum = 0.0;
+        let mut err_n = 0u64;
+        let mut dropped = 0u64;
+        let mut seen = 0u64;
+        for (i, s) in scores.iter().enumerate() {
+            cdf.add(s.utility);
+            let th = if i % 10 == 0 { cdf.threshold_for(target) } else { continue };
+            // Evaluate the realized drop fraction over the next 50 frames.
+            let upto = (i + 50).min(scores.len());
+            for s2 in &scores[i..upto] {
+                seen += 1;
+                dropped += (s2.utility < th) as u64;
+            }
+            if seen > 0 {
+                err_sum += ((dropped as f64 / seen as f64) - target).abs();
+                err_n += 1;
+                dropped = 0;
+                seen = 0;
+            }
+        }
+        t.push(&[hist as f64, err_sum / err_n.max(1) as f64]);
+    }
+    vec![("ablation_history".into(), t)]
+}
+
+/// Queue-policy ablation: utility-ordered queue vs FIFO (constant key)
+/// under identical overload — QoR and violation rate.
+pub fn ablation_queue(scale: Scale) -> Vec<(String, Table)> {
+    use crate::backend::{BackendQuery, CostModel, Detector};
+    use crate::config::{CostConfig, QueryConfig, ShedderConfig};
+    use crate::features::Extractor;
+    use crate::pipeline::{run_sim, Policy, SimConfig};
+    use std::collections::HashMap;
+
+    let frames = match scale {
+        Scale::Tiny => 200,
+        Scale::Small => 500,
+        Scale::Paper => 1500,
+    };
+    let videos: Vec<crate::video::Video> = (0..4)
+        .map(|i| {
+            let mut vc =
+                crate::video::VideoConfig::new(0xAB1 + i as u64 % 2, x_q(i), i as u32, frames);
+            vc.traffic.vehicle_rate = 0.35;
+            crate::video::Video::new(vc)
+        })
+        .collect();
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    let model = crate::utility::train(&videos, &idx, &[NamedColor::Red], Combine::Single);
+    let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0);
+    let fps = crate::video::streamer::aggregate_fps(&videos);
+    let mut bgs = HashMap::new();
+    for v in &videos {
+        bgs.insert(v.camera_id(), v.background().to_vec());
+    }
+
+    let mut t = Table::new(vec!["policy", "qor", "drop_rate", "violation_rate"]);
+    for (name, policy) in [
+        ("utility_queue", Policy::UtilityControlLoop),
+        ("fifo_queue", Policy::FifoControlLoop),
+    ] {
+        let cfg = SimConfig {
+            costs: CostConfig::default(),
+            shedder: ShedderConfig::default(),
+            query: query.clone(),
+            backend_tokens: 1,
+            policy,
+            seed: 0xAB,
+            fps_total: fps,
+        };
+        let extractor = Extractor::native(model.clone());
+        let mut backend = BackendQuery::new(
+            query.clone(),
+            Detector::native(12, 25.0),
+            CostModel::new(cfg.costs.clone(), cfg.seed),
+            25.0,
+        );
+        let r = run_sim(
+            crate::video::Streamer::new(&videos),
+            &bgs,
+            &cfg,
+            &extractor,
+            &mut backend,
+        )
+        .expect("sim");
+        t.push_raw(vec![
+            name.to_string(),
+            format!("{:.4}", r.qor.overall()),
+            format!("{:.4}", r.observed_drop_rate()),
+            format!("{:.4}", r.latency.violation_rate()),
+        ]);
+    }
+    vec![("ablation_queue".into(), t)]
+}
+
+/// Seed helper for the queue-ablation cameras.
+fn x_q(i: usize) -> u64 {
+    0x9_0000 + i as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_ablation_shows_resolution_matters() {
+        let out = ablation_bins(Scale::Tiny);
+        let t = &out[0].1;
+        assert_eq!(t.len(), 4);
+        let csv = t.to_csv();
+        let aucs: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(1).unwrap().parse().unwrap())
+            .collect();
+        // 8 bins (the paper's choice) must beat 2 bins.
+        assert!(aucs[2] > aucs[0], "8-bin AUC {} <= 2-bin {}", aucs[2], aucs[0]);
+        // And everything should be far better than chance.
+        assert!(aucs[2] > 0.8, "8-bin AUC too low: {}", aucs[2]);
+    }
+
+    #[test]
+    fn feature_ablation_utility_beats_hf() {
+        let out = ablation_features(Scale::Tiny);
+        let csv = out[0].1.to_csv();
+        let mut lines = csv.lines().skip(1);
+        let hf: f64 = lines.next().unwrap().split(',').nth(1).unwrap().parse().unwrap();
+        let ut: f64 = lines.next().unwrap().split(',').nth(1).unwrap().parse().unwrap();
+        assert!(ut > hf, "utility AUC {ut} must beat HF AUC {hf}");
+    }
+
+    #[test]
+    fn history_ablation_runs() {
+        let out = ablation_history(Scale::Tiny);
+        assert_eq!(out[0].1.len(), 4);
+    }
+}

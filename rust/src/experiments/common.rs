@@ -1,0 +1,297 @@
+//! Shared experiment infrastructure: dataset scoring, cross-validation,
+//! threshold sweeps and QoR evaluation over cached features.
+//!
+//! Features are extracted exactly once per frame (the expensive pass);
+//! every figure then trains/evaluates from the cached `FrameRecord`s, so
+//! leave-one-video-out cross-validation (paper §V-D) costs only matrix
+//! averaging per fold.
+
+use crate::color::NamedColor;
+use crate::features::reference;
+use crate::metrics::QorTracker;
+use crate::utility::{Combine, LabeledFeatures, TrainerAccumulator, UtilityModel};
+use crate::video::{build_dataset, DatasetConfig, Video, MIN_TARGET_PX};
+
+/// Experiment scale: how much data the figures run over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-sized (seconds): 4 videos × 150 frames.
+    Tiny,
+    /// Default (tens of seconds): 14 videos × 400 frames.
+    Small,
+    /// Paper-shaped (minutes): 28 videos × 900 frames.
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "tiny" => Some(Scale::Tiny),
+            "small" => Some(Scale::Small),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+
+    pub fn dataset_config(self) -> DatasetConfig {
+        match self {
+            Scale::Tiny => DatasetConfig::tiny(),
+            Scale::Small => DatasetConfig {
+                num_seeds: 7,
+                videos_per_seed: 2,
+                frames_per_video: 400,
+                base_seed: 0xDA7A_5E7,
+                target_boost: 1.5,
+            },
+            Scale::Paper => DatasetConfig {
+                num_seeds: 7,
+                videos_per_seed: 4,
+                frames_per_video: 900,
+                base_seed: 0xDA7A_5E7,
+                target_boost: 1.5,
+            },
+        }
+    }
+}
+
+/// One frame's cached features + ground truth for a fixed color set.
+pub struct FrameRecord {
+    pub video: usize,
+    pub camera: u32,
+    pub t: usize,
+    pub features: crate::features::FrameFeatures,
+    /// Per-color positivity (ground truth, min-blob gated).
+    pub labels: Vec<bool>,
+    /// Target-object ids per color.
+    pub target_ids: Vec<Vec<u64>>,
+}
+
+impl FrameRecord {
+    /// Positivity under a combine semantics.
+    pub fn positive(&self, combine: Combine) -> bool {
+        match combine {
+            Combine::Single => self.labels[0],
+            Combine::Or => self.labels.iter().any(|&l| l),
+            Combine::And => self.labels.iter().all(|&l| l),
+        }
+    }
+
+    /// Union of target ids across the query's colors.
+    pub fn targets_union(&self) -> Vec<u64> {
+        let mut ids = Vec::new();
+        for v in &self.target_ids {
+            for &id in v {
+                if !ids.contains(&id) {
+                    ids.push(id);
+                }
+            }
+        }
+        ids
+    }
+}
+
+/// The corpus: videos + per-frame cached features for `colors`.
+pub struct Corpus {
+    pub videos: Vec<Video>,
+    pub colors: Vec<NamedColor>,
+    pub records: Vec<FrameRecord>,
+}
+
+/// Build the dataset and extract features once (native oracle path —
+/// bit-equal to the artifacts per rust/tests/artifact_oracle.rs).
+pub fn build_corpus(scale: Scale, colors: &[NamedColor]) -> Corpus {
+    let videos = build_dataset(&scale.dataset_config());
+    let ranges: Vec<_> = colors.iter().map(|c| c.ranges()).collect();
+    let mut records = Vec::new();
+    for (vi, video) in videos.iter().enumerate() {
+        let bg = video.background();
+        for t in 0..video.len() {
+            let frame = video.render(t);
+            let features =
+                reference::compute_features(&frame.rgb, bg, &ranges, reference::FG_THRESHOLD);
+            let labels: Vec<bool> = colors
+                .iter()
+                .map(|&c| frame.is_positive(c, MIN_TARGET_PX))
+                .collect();
+            let target_ids: Vec<Vec<u64>> = colors
+                .iter()
+                .map(|&c| frame.target_ids(c, MIN_TARGET_PX))
+                .collect();
+            records.push(FrameRecord {
+                video: vi,
+                camera: video.camera_id(),
+                t,
+                features,
+                labels,
+                target_ids,
+            });
+        }
+    }
+    Corpus { videos, colors: colors.to_vec(), records }
+}
+
+impl Corpus {
+    /// Train a model from the cached features of a video subset.
+    pub fn train_on(&self, video_filter: &[usize], combine: Combine) -> UtilityModel {
+        let examples: Vec<LabeledFeatures> = self
+            .records
+            .iter()
+            .filter(|r| video_filter.contains(&r.video))
+            .map(|r| LabeledFeatures {
+                features: r.features.clone(),
+                labels: r.labels.clone(),
+            })
+            .collect();
+        let mut acc = TrainerAccumulator::new(&self.colors);
+        for ex in &examples {
+            acc.add(ex);
+        }
+        acc.finalize(combine, reference::FG_THRESHOLD, &examples)
+    }
+
+    /// Leave-one-video-out CV: utility of each frame computed with a model
+    /// that never saw that frame's video. Returns scored frames.
+    pub fn cross_validated_scores(&self, combine: Combine) -> Vec<ScoredFrame> {
+        let n = self.videos.len();
+        let mut out = Vec::with_capacity(self.records.len());
+        for test in 0..n {
+            let train: Vec<usize> = (0..n).filter(|&i| i != test).collect();
+            let model = self.train_on(&train, combine);
+            for r in self.records.iter().filter(|r| r.video == test) {
+                let u = model.utility(&r.features);
+                out.push(ScoredFrame {
+                    video: r.video,
+                    camera: r.camera,
+                    t: r.t,
+                    utility: u.combined,
+                    hf: r.features.hf.clone(),
+                    positive: r.positive(combine),
+                    target_ids: r.targets_union(),
+                });
+            }
+        }
+        out
+    }
+
+    /// Score every frame with a single (train-on-all) model.
+    pub fn scores_with(&self, model: &UtilityModel, combine: Combine) -> Vec<ScoredFrame> {
+        self.records
+            .iter()
+            .map(|r| {
+                let u = model.utility(&r.features);
+                ScoredFrame {
+                    video: r.video,
+                    camera: r.camera,
+                    t: r.t,
+                    utility: u.combined,
+                    hf: r.features.hf.clone(),
+                    positive: r.positive(combine),
+                    target_ids: r.targets_union(),
+                }
+            })
+            .collect()
+    }
+}
+
+/// A frame reduced to what the offline sweeps need.
+#[derive(Debug, Clone)]
+pub struct ScoredFrame {
+    pub video: usize,
+    pub camera: u32,
+    pub t: usize,
+    pub utility: f32,
+    pub hf: Vec<f32>,
+    pub positive: bool,
+    pub target_ids: Vec<u64>,
+}
+
+/// Apply a keep-predicate to scored frames; returns (QoR, drop rate).
+pub fn evaluate_shedding<F: FnMut(&ScoredFrame) -> bool>(
+    frames: &[ScoredFrame],
+    mut keep: F,
+) -> (f64, f64) {
+    let mut qor = QorTracker::new();
+    let mut dropped = 0usize;
+    for f in frames {
+        let k = keep(f);
+        dropped += (!k) as usize;
+        qor.observe(&f.target_ids, k);
+    }
+    let drop_rate = if frames.is_empty() {
+        0.0
+    } else {
+        dropped as f64 / frames.len() as f64
+    };
+    (qor.overall(), drop_rate)
+}
+
+/// Sweep a utility threshold over scored frames: rows of
+/// (threshold, qor, drop_rate).
+pub fn threshold_sweep(frames: &[ScoredFrame], thresholds: &[f32]) -> Vec<(f32, f64, f64)> {
+    thresholds
+        .iter()
+        .map(|&th| {
+            let (qor, drop) = evaluate_shedding(frames, |f| f.utility >= th);
+            (th, qor, drop)
+        })
+        .collect()
+}
+
+/// Evenly spaced thresholds in [0, 1].
+pub fn linspace(n: usize) -> Vec<f32> {
+    (0..n).map(|i| i as f32 / (n - 1).max(1) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_corpus() -> Corpus {
+        build_corpus(Scale::Tiny, &[NamedColor::Red])
+    }
+
+    #[test]
+    fn corpus_record_counts() {
+        let c = tiny_corpus();
+        assert_eq!(c.records.len(), c.videos.iter().map(|v| v.len()).sum::<usize>());
+    }
+
+    #[test]
+    fn cv_scores_cover_all_frames() {
+        let c = tiny_corpus();
+        let scores = c.cross_validated_scores(Combine::Single);
+        assert_eq!(scores.len(), c.records.len());
+        // Some positives should exist and be separated on average.
+        let pos: Vec<f32> = scores.iter().filter(|s| s.positive).map(|s| s.utility).collect();
+        let neg: Vec<f32> = scores.iter().filter(|s| !s.positive).map(|s| s.utility).collect();
+        assert!(!pos.is_empty() && !neg.is_empty());
+        let mean = |v: &[f32]| v.iter().sum::<f32>() as f64 / v.len() as f64;
+        assert!(mean(&pos) > mean(&neg), "pos {} vs neg {}", mean(&pos), mean(&neg));
+    }
+
+    #[test]
+    fn threshold_sweep_monotone_drop() {
+        let c = tiny_corpus();
+        let model = c.train_on(&(0..c.videos.len()).collect::<Vec<_>>(), Combine::Single);
+        let scores = c.scores_with(&model, Combine::Single);
+        let rows = threshold_sweep(&scores, &linspace(11));
+        for w in rows.windows(2) {
+            assert!(w[1].2 >= w[0].2, "drop rate must rise with threshold");
+            assert!(w[1].1 <= w[0].1 + 1e-9, "qor must fall with threshold");
+        }
+        assert_eq!(rows[0].2, 0.0); // threshold 0 drops nothing
+        assert_eq!(rows[0].1, 1.0);
+    }
+
+    #[test]
+    fn evaluate_shedding_extremes() {
+        let c = tiny_corpus();
+        let model = c.train_on(&[0], Combine::Single);
+        let scores = c.scores_with(&model, Combine::Single);
+        let (qor_all, drop_all) = evaluate_shedding(&scores, |_| true);
+        assert_eq!((qor_all, drop_all), (1.0, 0.0));
+        let (qor_none, drop_none) = evaluate_shedding(&scores, |_| false);
+        assert_eq!(drop_none, 1.0);
+        assert!(qor_none < 0.01 || scores.iter().all(|s| !s.positive));
+    }
+}

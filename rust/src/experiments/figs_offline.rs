@@ -1,0 +1,323 @@
+//! Offline figure harnesses: the microbenchmark figures of the paper's
+//! evaluation (Fig. 5, 6, 9, 10, 11, 12) — feature/utility distributions
+//! and threshold sweeps over the (cross-validated) corpus.
+
+use super::common::{
+    build_corpus, evaluate_shedding, linspace, threshold_sweep, Corpus, Scale, ScoredFrame,
+};
+use crate::color::NamedColor;
+use crate::util::csv::Table;
+use crate::util::rng::Rng;
+use crate::utility::Combine;
+
+const RED: [NamedColor; 1] = [NamedColor::Red];
+const RED_YELLOW: [NamedColor; 2] = [NamedColor::Red, NamedColor::Yellow];
+
+/// Distribution summary rows (per label) for a metric: count + quantiles.
+fn distribution_rows(name: &str, values: &mut Vec<f32>) -> Vec<f64> {
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| -> f64 {
+        if values.is_empty() {
+            f64::NAN
+        } else {
+            values[((p * (values.len() - 1) as f64).round() as usize).min(values.len() - 1)]
+                as f64
+        }
+    };
+    let _ = name;
+    vec![values.len() as f64, q(0.1), q(0.25), q(0.5), q(0.75), q(0.9)]
+}
+
+/// Fig. 5a: Hue-Fraction distribution of positive vs negative frames (red).
+/// The paper's point: the distributions overlap, so HF alone cannot shed.
+pub fn fig5a(scale: Scale) -> Vec<(String, Table)> {
+    let corpus = build_corpus(scale, &RED);
+    let scores = corpus.cross_validated_scores(Combine::Single);
+    let mut t = Table::new(vec![
+        "label", "count", "p10", "p25", "p50", "p75", "p90",
+    ]);
+    for (label, positive) in [("positive", true), ("negative", false)] {
+        let mut hfs: Vec<f32> = scores
+            .iter()
+            .filter(|s| s.positive == positive)
+            .map(|s| s.hf[0])
+            .collect();
+        let row = distribution_rows(label, &mut hfs);
+        t.push_raw(
+            std::iter::once(label.to_string())
+                .chain(row.iter().map(|x| format!("{x:.4}")))
+                .collect(),
+        );
+    }
+    // Histogram rows for re-plotting the full distribution.
+    let mut hist = Table::new(vec!["hf_bin_lo", "positive_count", "negative_count"]);
+    let bins = 40;
+    let mut pos = vec![0u64; bins];
+    let mut neg = vec![0u64; bins];
+    for s in &scores {
+        let b = ((s.hf[0].clamp(0.0, 0.9999) * bins as f32) as usize).min(bins - 1);
+        if s.positive {
+            pos[b] += 1;
+        } else {
+            neg[b] += 1;
+        }
+    }
+    for b in 0..bins {
+        hist.push(&[b as f64 / bins as f64, pos[b] as f64, neg[b] as f64]);
+    }
+    vec![("fig5a_summary".into(), t), ("fig5a_hist".into(), hist)]
+}
+
+/// Fig. 5b: QoR + drop rate vs *Hue-Fraction* threshold (red). Shows a
+/// steep QoR collapse before useful drop rates are reached.
+pub fn fig5b(scale: Scale) -> Vec<(String, Table)> {
+    let corpus = build_corpus(scale, &RED);
+    let scores = corpus.cross_validated_scores(Combine::Single);
+    let mut t = Table::new(vec!["hf_threshold", "qor", "drop_rate"]);
+    for th in linspace(41) {
+        let th = th * 0.5; // HF rarely exceeds 0.5 in street scenes
+        let (qor, drop) = evaluate_shedding(&scores, |s| s.hf[0] >= th);
+        t.push(&[th as f64, qor, drop]);
+    }
+    vec![("fig5b".into(), t)]
+}
+
+/// Fig. 6: the trained M⁺ / M⁻ saturation-value matrices for red.
+/// High-saturation bins should dominate M⁺ (the separability argument).
+pub fn fig6(scale: Scale) -> Vec<(String, Table)> {
+    let corpus = build_corpus(scale, &RED);
+    let all: Vec<usize> = (0..corpus.videos.len()).collect();
+    let model = corpus.train_on(&all, Combine::Single);
+    let mut t = Table::new(vec!["sat_bin", "val_bin", "m_pos", "m_neg"]);
+    let c = &model.colors[0];
+    for sb in 0..8 {
+        for vb in 0..8 {
+            t.push(&[
+                sb as f64,
+                vb as f64,
+                c.m_pos[sb * 8 + vb] as f64,
+                c.m_neg[sb * 8 + vb] as f64,
+            ]);
+        }
+    }
+    vec![("fig6".into(), t)]
+}
+
+/// Fig. 9a: cross-validated utility distributions, positives vs negatives
+/// (red query), per video — the headline separability result.
+pub fn fig9a(scale: Scale) -> Vec<(String, Table)> {
+    let corpus = build_corpus(scale, &RED);
+    let scores = corpus.cross_validated_scores(Combine::Single);
+    vec![("fig9a".into(), utility_distribution_table(&corpus, &scores))]
+}
+
+/// Fig. 9b: QoR + drop rate vs utility threshold (red).
+pub fn fig9b(scale: Scale) -> Vec<(String, Table)> {
+    let corpus = build_corpus(scale, &RED);
+    let scores = corpus.cross_validated_scores(Combine::Single);
+    let mut t = Table::new(vec!["utility_threshold", "qor", "drop_rate"]);
+    for (th, qor, drop) in threshold_sweep(&scores, &linspace(41)) {
+        t.push(&[th as f64, qor, drop]);
+    }
+    vec![("fig9b".into(), t)]
+}
+
+/// Fig. 10a: utility-based shedding — QoR and *observed* drop rate vs the
+/// target drop rate (threshold from the training-set CDF, Eq. 16/17).
+pub fn fig10a(scale: Scale) -> Vec<(String, Table)> {
+    let (rows, _) = fig10_core(scale);
+    let mut t = Table::new(vec!["target_drop_rate", "observed_drop_rate", "qor"]);
+    for (r, obs, qor) in rows {
+        t.push(&[r, obs, qor]);
+    }
+    vec![("fig10a".into(), t)]
+}
+
+/// Fig. 10b: content-agnostic shedding — 20 repetitions per target rate.
+pub fn fig10b(scale: Scale) -> Vec<(String, Table)> {
+    let (_, rows) = fig10_core(scale);
+    let mut t = Table::new(vec![
+        "target_drop_rate",
+        "observed_drop_rate_mean",
+        "qor_mean",
+        "qor_min",
+        "qor_max",
+    ]);
+    for (r, obs, qor, lo, hi) in rows {
+        t.push(&[r, obs, qor, lo, hi]);
+    }
+    vec![("fig10b".into(), t)]
+}
+
+/// Fig. 10c: the QoR-vs-observed-drop tradeoff for both approaches.
+pub fn fig10c(scale: Scale) -> Vec<(String, Table)> {
+    let (util, rnd) = fig10_core(scale);
+    let mut t = Table::new(vec!["approach", "observed_drop_rate", "qor"]);
+    for (_, obs, qor) in util {
+        t.push_raw(vec!["utility".to_string(), format!("{obs:.4}"), format!("{qor:.4}")]);
+    }
+    for (_, obs, qor, _, _) in rnd {
+        t.push_raw(vec!["random".to_string(), format!("{obs:.4}"), format!("{qor:.4}")]);
+    }
+    vec![("fig10c".into(), t)]
+}
+
+/// Shared Fig. 10 computation. Returns (utility rows, random rows):
+/// utility: (target, observed, qor); random: (target, observed mean, qor
+/// mean, qor min, qor max) over 20 reps (paper repeats 20×).
+#[allow(clippy::type_complexity)]
+fn fig10_core(scale: Scale) -> (Vec<(f64, f64, f64)>, Vec<(f64, f64, f64, f64, f64)>) {
+    let corpus = build_corpus(scale, &RED);
+    let n = corpus.videos.len();
+    // Split: first half trains (and seeds the CDF history), rest tests.
+    let train: Vec<usize> = (0..n / 2).collect();
+    let model = corpus.train_on(&train, Combine::Single);
+    let train_scores: Vec<ScoredFrame> = corpus
+        .scores_with(&model, Combine::Single)
+        .into_iter()
+        .filter(|s| train.contains(&s.video))
+        .collect();
+    let test_scores: Vec<ScoredFrame> = corpus
+        .scores_with(&model, Combine::Single)
+        .into_iter()
+        .filter(|s| !train.contains(&s.video))
+        .collect();
+
+    let mut cdf = crate::utility::UtilityCdf::new(train_scores.len().max(1));
+    for s in &train_scores {
+        cdf.add(s.utility);
+    }
+
+    let targets: Vec<f64> = (0..21).map(|i| i as f64 / 20.0).collect();
+    let mut util_rows = Vec::new();
+    for &r in &targets {
+        let th = cdf.threshold_for(r);
+        let (qor, obs) = evaluate_shedding(&test_scores, |s| s.utility >= th);
+        util_rows.push((r, obs, qor));
+    }
+
+    let mut rnd_rows = Vec::new();
+    let mut rng = Rng::new(0xF16_10B);
+    for &r in &targets {
+        let mut obs_sum = 0.0;
+        let (mut qor_sum, mut qor_min, mut qor_max) = (0.0, f64::MAX, f64::MIN);
+        let reps = 20;
+        for _ in 0..reps {
+            let (qor, obs) = evaluate_shedding(&test_scores, |_| !rng.chance(r));
+            obs_sum += obs;
+            qor_sum += qor;
+            qor_min = qor_min.min(qor);
+            qor_max = qor_max.max(qor);
+        }
+        rnd_rows.push((
+            r,
+            obs_sum / reps as f64,
+            qor_sum / reps as f64,
+            qor_min,
+            qor_max,
+        ));
+    }
+    (util_rows, rnd_rows)
+}
+
+/// Fig. 11a: OR-query (red ∨ yellow) cross-validated utility distributions.
+pub fn fig11a(scale: Scale) -> Vec<(String, Table)> {
+    let corpus = build_corpus(scale, &RED_YELLOW);
+    let scores = corpus.cross_validated_scores(Combine::Or);
+    vec![("fig11a".into(), utility_distribution_table(&corpus, &scores))]
+}
+
+/// Fig. 11b: OR-query QoR + drop rate vs utility threshold.
+pub fn fig11b(scale: Scale) -> Vec<(String, Table)> {
+    let corpus = build_corpus(scale, &RED_YELLOW);
+    let scores = corpus.cross_validated_scores(Combine::Or);
+    let mut t = Table::new(vec!["utility_threshold", "qor", "drop_rate"]);
+    for (th, qor, drop) in threshold_sweep(&scores, &linspace(41)) {
+        t.push(&[th as f64, qor, drop]);
+    }
+    vec![("fig11b".into(), t)]
+}
+
+/// Fig. 12: AND-query (red ∧ yellow) utility distributions.
+pub fn fig12(scale: Scale) -> Vec<(String, Table)> {
+    let corpus = build_corpus(scale, &RED_YELLOW);
+    let scores = corpus.cross_validated_scores(Combine::And);
+    vec![("fig12".into(), utility_distribution_table(&corpus, &scores))]
+}
+
+/// Per-video positive/negative utility quantiles (the Fig 9a/11a/12 shape).
+fn utility_distribution_table(corpus: &Corpus, scores: &[ScoredFrame]) -> Table {
+    let mut t = Table::new(vec![
+        "video", "label", "count", "p10", "p25", "p50", "p75", "p90",
+    ]);
+    for vi in 0..corpus.videos.len() {
+        for (label, positive) in [("positive", true), ("negative", false)] {
+            let mut us: Vec<f32> = scores
+                .iter()
+                .filter(|s| s.video == vi && s.positive == positive)
+                .map(|s| s.utility)
+                .collect();
+            if us.is_empty() {
+                continue;
+            }
+            let row = distribution_rows(label, &mut us);
+            t.push_raw(
+                vec![vi.to_string(), label.to_string()]
+                    .into_iter()
+                    .chain(row.iter().map(|x| format!("{x:.4}")))
+                    .collect(),
+            );
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shapes() {
+        let out = fig5a(Scale::Tiny);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[1].1.columns().len(), 3);
+        let sweep = fig5b(Scale::Tiny);
+        assert_eq!(sweep[0].1.len(), 41);
+    }
+
+    #[test]
+    fn fig6_matrix_full() {
+        let out = fig6(Scale::Tiny);
+        assert_eq!(out[0].1.len(), 64);
+    }
+
+    #[test]
+    fn fig9_and_10_consistency() {
+        let out = fig9b(Scale::Tiny);
+        assert_eq!(out[0].1.len(), 41);
+        let (util, rnd) = fig10_core(Scale::Tiny);
+        assert_eq!(util.len(), 21);
+        assert_eq!(rnd.len(), 21);
+        // Utility shedding at target 0 keeps QoR at 1.
+        assert!((util[0].2 - 1.0).abs() < 1e-9);
+        // Random shedding at target 1 drops ~everything.
+        assert!(rnd[20].1 > 0.95);
+        // Paper's headline: at moderate target drop rates utility QoR
+        // stays far above random QoR.
+        let u_mid = util[10]; // target 0.5
+        let r_mid = rnd[10];
+        assert!(
+            u_mid.2 > r_mid.2,
+            "utility QoR {} should beat random {}",
+            u_mid.2,
+            r_mid.2
+        );
+    }
+
+    #[test]
+    fn composite_figures_run() {
+        assert!(!fig11a(Scale::Tiny).is_empty());
+        assert_eq!(fig11b(Scale::Tiny)[0].1.len(), 41);
+        assert!(!fig12(Scale::Tiny).is_empty());
+    }
+}

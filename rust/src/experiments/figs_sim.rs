@@ -1,0 +1,240 @@
+//! Simulation-backed figure harnesses (Fig. 13a, 13b, 14): the end-to-end
+//! control-loop experiments over the discrete-event pipeline.
+
+use super::common::Scale;
+use crate::backend::{BackendQuery, CostModel, Detector};
+use crate::color::NamedColor;
+use crate::config::{CostConfig, QueryConfig, ShedderConfig};
+use crate::features::Extractor;
+use crate::pipeline::{run_sim, Policy, SimConfig, SimReport};
+use crate::util::csv::Table;
+use crate::utility::{train, Combine, UtilityModel};
+use crate::video::{
+    build_dataset, DatasetConfig, Frame, Paint, SegmentedVideo, Streamer, Video,
+};
+use std::collections::HashMap;
+
+fn frames_per_segment(scale: Scale) -> usize {
+    match scale {
+        Scale::Tiny => 150,
+        Scale::Small => 600,
+        Scale::Paper => 3000, // 5 min per segment @ 10 fps
+    }
+}
+
+/// Train a red-query model on a small auxiliary dataset (not the scenario
+/// video itself — the shedder must generalize).
+fn train_red_model() -> UtilityModel {
+    let cfg = DatasetConfig {
+        num_seeds: 2,
+        videos_per_seed: 2,
+        frames_per_video: 300,
+        base_seed: 0x7EA1,
+        target_boost: 2.0,
+    };
+    let videos = build_dataset(&cfg);
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    train(&videos, &idx, &[NamedColor::Red], Combine::Single)
+}
+
+fn sim_config(query: QueryConfig, fps_total: f64, policy: Policy) -> SimConfig {
+    SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query,
+        backend_tokens: 1,
+        policy,
+        seed: 0x13,
+        fps_total,
+    }
+}
+
+fn run_scenario<I>(
+    frames: I,
+    backgrounds: HashMap<u32, Vec<f32>>,
+    cfg: &SimConfig,
+    model: &UtilityModel,
+) -> SimReport
+where
+    I: IntoIterator<Item = Frame>,
+{
+    let extractor = Extractor::native(model.clone());
+    let mut backend = BackendQuery::new(
+        cfg.query.clone(),
+        Detector::native(12, 25.0),
+        CostModel::new(cfg.costs.clone(), cfg.seed),
+        25.0,
+    );
+    run_sim(frames, &backgrounds, cfg, &extractor, &mut backend).expect("sim")
+}
+
+/// Render a SimReport into the two Fig. 13 panels: the 5-second-window
+/// latency series and the per-stage frame counts.
+fn report_tables(prefix: &str, report: &SimReport, bound_ms: f64) -> Vec<(String, Table)> {
+    let mut lat = Table::new(vec!["window_start_ms", "max_e2e_ms", "mean_e2e_ms", "bound_ms"]);
+    for (t, max, mean, n) in report.latency_windows.rows() {
+        if n > 0 {
+            lat.push(&[t, max, mean, bound_ms]);
+        } else {
+            lat.push(&[t, 0.0, 0.0, bound_ms]);
+        }
+    }
+    let mut stages = Table::new(vec![
+        "window_start_ms",
+        "ingress",
+        "shed",
+        "blob_filter",
+        "color_filter",
+        "dnn",
+        "sink",
+    ]);
+    for row in report.stages.table() {
+        stages.push(&row);
+    }
+    let mut summary = Table::new(vec![
+        "ingress",
+        "transmitted",
+        "shed",
+        "drop_rate",
+        "qor",
+        "violations",
+        "violation_rate",
+        "max_e2e_ms",
+    ]);
+    summary.push(&[
+        report.ingress as f64,
+        report.transmitted as f64,
+        report.shed as f64,
+        report.observed_drop_rate(),
+        report.qor.overall(),
+        report.latency.violations() as f64,
+        report.latency.violation_rate(),
+        report.latency.max_ms(),
+    ]);
+    vec![
+        (format!("{prefix}_latency"), lat),
+        (format!("{prefix}_stages"), stages),
+        (format!("{prefix}_summary"), summary),
+    ]
+}
+
+/// Fig. 13a: the synthetic worst-case 3-segment scenario.
+pub fn fig13a(scale: Scale) -> Vec<(String, Table)> {
+    let n = frames_per_segment(scale);
+    let sv = SegmentedVideo::fig13a(x5eg(), n, Paint::VividRed);
+    let model = train_red_model();
+    let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0);
+    let cfg = sim_config(query, sv.fps(), Policy::UtilityControlLoop);
+    let mut bgs = HashMap::new();
+    bgs.insert(0u32, sv.background().to_vec());
+    let report = run_scenario(sv.iter(), bgs, &cfg, &model);
+    report_tables("fig13a", &report, cfg.query.latency_bound_ms)
+}
+
+/// Fig. 13b: the realistic smart-city scenario — 5 interleaved cameras.
+pub fn fig13b(scale: Scale) -> Vec<(String, Table)> {
+    let videos = smart_city_videos(scale, 5);
+    let model = train_red_model();
+    let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0);
+    let fps = crate::video::streamer::aggregate_fps(&videos);
+    let cfg = sim_config(query, fps, Policy::UtilityControlLoop);
+    let mut bgs = HashMap::new();
+    for v in &videos {
+        bgs.insert(v.camera_id(), v.background().to_vec());
+    }
+    let report = run_scenario(Streamer::new(&videos), bgs, &cfg, &model);
+    report_tables("fig13b", &report, cfg.query.latency_bound_ms)
+}
+
+/// Fig. 14: QoR vs number of concurrent streams — utility shedding vs the
+/// content-agnostic baseline (Eq. 18 with assumed proc_Q = 500 ms).
+pub fn fig14(scale: Scale) -> Vec<(String, Table)> {
+    let max_streams = match scale {
+        Scale::Tiny => 3,
+        Scale::Small => 6,
+        Scale::Paper => 8,
+    };
+    let model = train_red_model();
+    let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0);
+    let mut t = Table::new(vec![
+        "streams",
+        "qor_utility",
+        "drop_utility",
+        "qor_random",
+        "drop_random",
+    ]);
+    for k in 1..=max_streams {
+        let videos = smart_city_videos(scale, k);
+        let fps = crate::video::streamer::aggregate_fps(&videos);
+        let mut bgs = HashMap::new();
+        for v in &videos {
+            bgs.insert(v.camera_id(), v.background().to_vec());
+        }
+        let cfg_u = sim_config(query.clone(), fps, Policy::UtilityControlLoop);
+        let ru = run_scenario(Streamer::new(&videos), bgs.clone(), &cfg_u, &model);
+        // Paper: baseline target rate from Eq. 18/19 assuming 500 ms.
+        let cfg_r = sim_config(
+            query.clone(),
+            fps,
+            Policy::RandomRate { assumed_proc_q_ms: 500.0 },
+        );
+        let rr = run_scenario(Streamer::new(&videos), bgs, &cfg_r, &model);
+        t.push(&[
+            k as f64,
+            ru.qor.overall(),
+            ru.observed_drop_rate(),
+            rr.qor.overall(),
+            rr.observed_drop_rate(),
+        ]);
+    }
+    vec![("fig14".into(), t)]
+}
+
+/// The smart-city camera set: realistic default traffic mix.
+fn smart_city_videos(scale: Scale, k: usize) -> Vec<Video> {
+    let frames = match scale {
+        Scale::Tiny => 200,
+        Scale::Small => 600,
+        Scale::Paper => 3000,
+    };
+    (0..k)
+        .map(|i| {
+            let mut vc = crate::video::VideoConfig::new(
+                0xC17 + (i as u64 % 3),
+                0xCAFE + i as u64,
+                i as u32,
+                frames,
+            );
+            vc.traffic.vehicle_rate = 0.3;
+            Video::new(vc)
+        })
+        .collect()
+}
+
+/// Scene seed for the Fig. 13a scenario.
+#[inline]
+fn x5eg() -> u64 {
+    0x5E6_0001
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig13a_shape_matches_paper_expectations() {
+        let out = fig13a(Scale::Tiny);
+        assert_eq!(out.len(), 3);
+        let stages = &out[1].1;
+        assert!(stages.len() >= 3, "need several 5s windows");
+        let summary = &out[2].1;
+        assert_eq!(summary.len(), 1);
+    }
+
+    #[test]
+    fn fig14_series_shape() {
+        let out = fig14(Scale::Tiny);
+        let t = &out[0].1;
+        assert_eq!(t.len(), 3);
+    }
+}

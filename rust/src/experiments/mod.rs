@@ -1,0 +1,112 @@
+//! Experiment harness: regenerates **every** table/figure of the paper's
+//! evaluation (DESIGN.md §6 maps each to its module).
+//!
+//! Entry point: [`run_figure`] / [`run_all`], exposed via
+//! `uals figures --fig <id> [--scale tiny|small|paper]` and by the
+//! `figures` bench target. Results land in `results/<id>.csv` and are
+//! printed as paper-style series.
+
+pub mod ablation;
+pub mod common;
+pub mod fig_overhead;
+pub mod figs_offline;
+pub mod figs_sim;
+
+pub use common::{build_corpus, Corpus, Scale, ScoredFrame};
+
+use crate::util::csv::Table;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// All figure ids, in paper order.
+pub const ALL_FIGURES: [&str; 14] = [
+    "5a", "5b", "6", "9a", "9b", "10a", "10b", "10c", "11a", "11b", "12", "13a", "13b", "14",
+];
+/// Plus the overhead figure.
+pub const OVERHEAD_FIGURE: &str = "15";
+/// Ablation studies (beyond the paper's figures; DESIGN.md §6).
+pub const ABLATIONS: [&str; 4] = [
+    "ablation-bins",
+    "ablation-features",
+    "ablation-history",
+    "ablation-queue",
+];
+
+/// Run one figure harness; returns named tables.
+pub fn run_figure(id: &str, scale: Scale) -> Result<Vec<(String, Table)>> {
+    Ok(match id {
+        "5a" => figs_offline::fig5a(scale),
+        "5b" => figs_offline::fig5b(scale),
+        "6" => figs_offline::fig6(scale),
+        "9a" => figs_offline::fig9a(scale),
+        "9b" => figs_offline::fig9b(scale),
+        "10a" => figs_offline::fig10a(scale),
+        "10b" => figs_offline::fig10b(scale),
+        "10c" => figs_offline::fig10c(scale),
+        "11a" => figs_offline::fig11a(scale),
+        "11b" => figs_offline::fig11b(scale),
+        "12" => figs_offline::fig12(scale),
+        "13a" => figs_sim::fig13a(scale),
+        "13b" => figs_sim::fig13b(scale),
+        "14" => figs_sim::fig14(scale),
+        "15" => fig_overhead::fig15(scale),
+        "ablation-bins" => ablation::ablation_bins(scale),
+        "ablation-features" => ablation::ablation_features(scale),
+        "ablation-history" => ablation::ablation_history(scale),
+        "ablation-queue" => ablation::ablation_queue(scale),
+        other => bail!(
+            "unknown figure '{other}' (try one of {ALL_FIGURES:?}, 15, or {ABLATIONS:?})"
+        ),
+    })
+}
+
+/// Run a set of figures, write CSVs under `out_dir`, print the series.
+pub fn run_and_save(ids: &[&str], scale: Scale, out_dir: &Path, quiet: bool) -> Result<()> {
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let tables = run_figure(id, scale)?;
+        for (name, table) in &tables {
+            let path = out_dir.join(format!("{name}.csv"));
+            table.write(&path)?;
+            if !quiet {
+                println!("\n=== Figure {id}: {name} ({} rows) -> {} ===", table.len(), path.display());
+                // Print at most 24 rows to keep terminals readable.
+                let pretty = table.to_pretty();
+                for line in pretty.lines().take(26) {
+                    println!("{line}");
+                }
+                if table.len() > 24 {
+                    println!("… ({} more rows in the CSV)", table.len() - 24);
+                }
+            }
+        }
+        if !quiet {
+            println!("[figure {id} done in {:.1}s]", t0.elapsed().as_secs_f64());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_ids() {
+        for id in ALL_FIGURES.iter().chain([&OVERHEAD_FIGURE]) {
+            // Only check dispatch (tiny scale would be slow × 15 here);
+            // unknown ids must error.
+            assert!(!id.is_empty());
+        }
+        assert!(run_figure("nope", Scale::Tiny).is_err());
+    }
+
+    #[test]
+    fn run_and_save_writes_csv() {
+        let dir = std::env::temp_dir().join("uals_fig_test");
+        std::fs::remove_dir_all(&dir).ok();
+        run_and_save(&["6"], Scale::Tiny, &dir, true).unwrap();
+        assert!(dir.join("fig6.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,200 @@
+//! Feature + utility extraction with switchable backend.
+//!
+//! * `Backend::Artifact` — the production path: one PJRT execution of the
+//!   AOT artifact (`shedder_k1` / `shedder_k2`) per frame. The L1 Pallas
+//!   histogram kernel and the L2 utility weighting run inside the compiled
+//!   module; Rust only moves tensors.
+//! * `Backend::Native` — the pure-Rust oracle (bit-equal; used for very
+//!   long sweeps and as the test baseline).
+
+use super::{reference, FrameFeatures, UtilityValues, HIST};
+use crate::runtime::{Engine, Executable, Tensor};
+use crate::utility::model::UtilityModel;
+use anyhow::{bail, Result};
+use std::rc::Rc;
+
+/// Which compute path extracts features.
+pub enum Backend {
+    Native,
+    Artifact { exe: Rc<Executable>, frame_h: usize, frame_w: usize },
+}
+
+/// Per-query feature/utility extractor.
+pub struct Extractor {
+    model: UtilityModel,
+    backend: Backend,
+    /// Cached artifact inputs that depend only on the model.
+    ranges_t: Tensor,
+    m_t: Tensor,
+}
+
+impl Extractor {
+    /// Native (pure Rust) extractor.
+    pub fn native(model: UtilityModel) -> Self {
+        let (ranges_t, m_t) = model_tensors(&model);
+        Extractor { model, backend: Backend::Native, ranges_t, m_t }
+    }
+
+    /// Artifact-backed extractor over a PJRT engine.
+    pub fn artifact(engine: &Engine, model: UtilityModel) -> Result<Self> {
+        let exe = engine.load(model.artifact_name())?;
+        let m = engine.manifest();
+        let (ranges_t, m_t) = model_tensors(&model);
+        Ok(Extractor {
+            model,
+            backend: Backend::Artifact { exe, frame_h: m.frame_h, frame_w: m.frame_w },
+            ranges_t,
+            m_t,
+        })
+    }
+
+    pub fn model(&self) -> &UtilityModel {
+        &self.model
+    }
+
+    pub fn is_artifact(&self) -> bool {
+        matches!(self.backend, Backend::Artifact { .. })
+    }
+
+    /// Extract features and utilities for one frame.
+    pub fn extract(&self, rgb: &[f32], background: &[f32]) -> Result<(FrameFeatures, UtilityValues)> {
+        match &self.backend {
+            Backend::Native => {
+                let feats = reference::compute_features(
+                    rgb,
+                    background,
+                    &self.model.ranges(),
+                    self.model.fg_threshold,
+                );
+                let utils = self.model.utility(&feats);
+                Ok((feats, utils))
+            }
+            Backend::Artifact { exe, frame_h, frame_w } => {
+                let expected = frame_h * frame_w * 3;
+                if rgb.len() != expected || background.len() != expected {
+                    bail!(
+                        "frame size {} != artifact geometry {}x{}x3",
+                        rgb.len(),
+                        frame_h,
+                        frame_w
+                    );
+                }
+                let rgb_t = Tensor::new(rgb.to_vec(), vec![*frame_h, *frame_w, 3])?;
+                let bg_t = Tensor::new(background.to_vec(), vec![*frame_h, *frame_w, 3])?;
+                let outs = exe.run(&[&rgb_t, &bg_t, &self.ranges_t, &self.m_t])?;
+                self.parse_outputs(outs)
+            }
+        }
+    }
+
+    /// Decode artifact outputs into (features, utilities).
+    fn parse_outputs(&self, outs: Vec<Tensor>) -> Result<(FrameFeatures, UtilityValues)> {
+        let k = self.model.colors.len();
+        match k {
+            1 => {
+                // shedder_k1: utility [1], hf [1], pf [1,8,8], fg_frac [].
+                let [u, hf, pf, fg]: [Tensor; 4] = outs
+                    .try_into()
+                    .map_err(|_| anyhow::anyhow!("shedder_k1: wrong output arity"))?;
+                let feats = FrameFeatures {
+                    hf: hf.data().to_vec(),
+                    pf: vec![slice_to_hist(pf.data())?],
+                    fg_frac: fg.item()?,
+                };
+                let u0 = u.data()[0];
+                Ok((feats, UtilityValues { per_color: vec![u0], combined: u0 }))
+            }
+            2 => {
+                // shedder_k2: u [2], u_or [], u_and [], hf [2], pf [2,8,8], fg_frac [].
+                let [u, u_or, u_and, hf, pf, fg]: [Tensor; 6] = outs
+                    .try_into()
+                    .map_err(|_| anyhow::anyhow!("shedder_k2: wrong output arity"))?;
+                let pfd = pf.data();
+                let feats = FrameFeatures {
+                    hf: hf.data().to_vec(),
+                    pf: vec![slice_to_hist(&pfd[..HIST])?, slice_to_hist(&pfd[HIST..])?],
+                    fg_frac: fg.item()?,
+                };
+                use crate::utility::model::Combine;
+                let combined = match self.model.combine {
+                    Combine::Or => u_or.item()?,
+                    Combine::And => u_and.item()?,
+                    Combine::Single => bail!("single-color model with k2 artifact"),
+                };
+                Ok((feats, UtilityValues { per_color: u.data().to_vec(), combined }))
+            }
+            n => bail!("unsupported color count {n}"),
+        }
+    }
+}
+
+fn slice_to_hist(xs: &[f32]) -> Result<[f32; HIST]> {
+    if xs.len() != HIST {
+        bail!("expected {HIST} histogram entries, got {}", xs.len());
+    }
+    let mut a = [0.0; HIST];
+    a.copy_from_slice(xs);
+    Ok(a)
+}
+
+/// Build the (hue-ranges, normalized-M) tensors an artifact consumes.
+fn model_tensors(model: &UtilityModel) -> (Tensor, Tensor) {
+    let k = model.colors.len();
+    let mut ranges = Vec::with_capacity(k * 4);
+    let mut ms = Vec::with_capacity(k * HIST);
+    for c in &model.colors {
+        ranges.extend_from_slice(&c.ranges.to_array());
+        ms.extend_from_slice(&c.m_normalized());
+    }
+    (
+        Tensor::new(ranges, vec![k, 4]).unwrap(),
+        Tensor::new(ms, vec![k, 8, 8]).unwrap(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+    use crate::utility::model::{ColorModel, Combine};
+
+    fn toy_model() -> UtilityModel {
+        let mut m_pos = [0.0; HIST];
+        m_pos[62] = 0.5;
+        UtilityModel {
+            colors: vec![ColorModel {
+                color: NamedColor::Red,
+                ranges: NamedColor::Red.ranges(),
+                m_pos,
+                m_neg: [0.0; HIST],
+                norm: 0.5,
+            }],
+            combine: Combine::Single,
+            fg_threshold: 25.0,
+        }
+    }
+
+    #[test]
+    fn native_extract_scores_red_block() {
+        let ex = Extractor::native(toy_model());
+        let n = 16 * 16 * 3;
+        let bg = vec![96.0; n];
+        let mut rgb = bg.clone();
+        for p in 0..8 {
+            rgb[p * 3..p * 3 + 3].copy_from_slice(&[208.0, 22.0, 28.0]);
+        }
+        let (feats, utils) = ex.extract(&rgb, &bg).unwrap();
+        assert!((feats.hf[0] - 1.0).abs() < 1e-6);
+        // Vivid red lands in bin 62 (see reference.rs golden) → u = 1.0.
+        assert!((utils.combined - 1.0).abs() < 1e-5, "u={}", utils.combined);
+    }
+
+    #[test]
+    fn model_tensors_layout() {
+        let (r, m) = model_tensors(&toy_model());
+        assert_eq!(r.shape(), &[1, 4]);
+        assert_eq!(r.data(), &[0.0, 10.0, 170.0, 180.0]);
+        assert_eq!(m.shape(), &[1, 8, 8]);
+        assert!((m.data()[62] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,49 @@
+//! Per-frame color features (paper Eq. 6–11): Hue Fraction and the 8×8
+//! saturation/value Pixel Fraction matrix, per query color.
+//!
+//! Two interchangeable backends compute them:
+//!
+//! * [`reference`] — pure Rust, the bit-level oracle;
+//! * [`extractor`] — the AOT artifact path through PJRT (the production
+//!   configuration: L1 Pallas kernel + L2 JAX graph compiled by
+//!   `make artifacts`).
+//!
+//! `rust/tests/artifact_oracle.rs` pins the two together numerically.
+
+pub mod extractor;
+pub mod reference;
+
+use crate::color::NUM_BINS;
+
+/// Histogram size: 8×8 saturation/value bins.
+pub const HIST: usize = NUM_BINS * NUM_BINS;
+
+/// Color features of one frame for K query colors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameFeatures {
+    /// Hue Fraction per color (Eq. 6), over foreground pixels.
+    pub hf: Vec<f32>,
+    /// Pixel-fraction matrix per color, flattened 8*8 (Eq. 9/10).
+    pub pf: Vec<[f32; HIST]>,
+    /// Fraction of pixels that are foreground.
+    pub fg_frac: f32,
+}
+
+impl FrameFeatures {
+    pub fn num_colors(&self) -> usize {
+        self.hf.len()
+    }
+}
+
+/// Utility values computed from features by a trained model (Eq. 14/15).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UtilityValues {
+    /// Normalized per-color utilities.
+    pub per_color: Vec<f32>,
+    /// Combined utility after OR/AND composition (equals `per_color[0]`
+    /// for single-color queries).
+    pub combined: f32,
+}
+
+pub use extractor::{Backend, Extractor};
+pub use reference::compute_features;

@@ -1,0 +1,187 @@
+//! Pure-Rust feature oracle, mirroring `python/compile/kernels/ref.py`
+//! operation-for-operation so the cross-language contract is testable.
+//!
+//! Also the *fast native path* for very long experiment sweeps (bit-equal
+//! to the artifact path, as pinned by `rust/tests/artifact_oracle.rs`);
+//! the production request path uses the PJRT artifact backend.
+
+use super::{FrameFeatures, HIST};
+use crate::color::hsv::{flat_bin, rgb_to_hsv};
+use crate::color::HueRanges;
+
+/// Default background-subtraction threshold (matches `ref.FG_THRESHOLD`).
+pub const FG_THRESHOLD: f32 = 25.0;
+
+/// Compute HF + PF for each query color over one RGB frame.
+///
+/// `rgb` and `background` are row-major H*W*3 in [0, 255]. The pixel
+/// universe for HF is the *foreground* (the camera ships only foreground
+/// features downstream, paper §II-A).
+pub fn compute_features(
+    rgb: &[f32],
+    background: &[f32],
+    ranges: &[HueRanges],
+    fg_threshold: f32,
+) -> FrameFeatures {
+    assert_eq!(rgb.len(), background.len());
+    assert_eq!(rgb.len() % 3, 0);
+    let n_px = rgb.len() / 3;
+    let k = ranges.len();
+
+    let mut bins = vec![[0.0f32; HIST]; k];
+    let mut in_color = vec![0u64; k];
+    let mut fg_count = 0u64;
+
+    for p in 0..n_px {
+        let (r, g, b) = (rgb[3 * p], rgb[3 * p + 1], rgb[3 * p + 2]);
+        let (br, bgc, bb) = (
+            background[3 * p],
+            background[3 * p + 1],
+            background[3 * p + 2],
+        );
+        let diff = (r - br).abs().max((g - bgc).abs()).max((b - bb).abs());
+        if diff <= fg_threshold {
+            continue; // background pixel
+        }
+        fg_count += 1;
+        let (h, s, v) = rgb_to_hsv(r, g, b);
+        for (c, range) in ranges.iter().enumerate() {
+            if range.contains(h) {
+                in_color[c] += 1;
+                bins[c][flat_bin(s, v)] += 1.0;
+            }
+        }
+    }
+
+    let mut hf = Vec::with_capacity(k);
+    let mut pf = Vec::with_capacity(k);
+    for c in 0..k {
+        hf.push(if fg_count > 0 {
+            in_color[c] as f32 / fg_count as f32
+        } else {
+            0.0
+        });
+        let mut m = bins[c];
+        if in_color[c] > 0 {
+            let denom = in_color[c] as f32;
+            for x in m.iter_mut() {
+                *x /= denom;
+            }
+        }
+        pf.push(m);
+    }
+
+    FrameFeatures { hf, pf, fg_frac: fg_count as f32 / n_px as f32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+
+    fn mk_frame(w: usize, h: usize, base: [f32; 3]) -> Vec<f32> {
+        let mut v = Vec::with_capacity(w * h * 3);
+        for _ in 0..w * h {
+            v.extend_from_slice(&base);
+        }
+        v
+    }
+
+    fn paint_rect(img: &mut [f32], w: usize, rect: (usize, usize, usize, usize), c: [f32; 3]) {
+        for y in rect.1..rect.3 {
+            for x in rect.0..rect.2 {
+                let i = (y * w + x) * 3;
+                img[i..i + 3].copy_from_slice(&c);
+            }
+        }
+    }
+
+    #[test]
+    fn all_background_zero_features() {
+        let bg = mk_frame(16, 16, [100.0, 100.0, 100.0]);
+        let f = compute_features(&bg, &bg, &[NamedColor::Red.ranges()], FG_THRESHOLD);
+        assert_eq!(f.hf, vec![0.0]);
+        assert_eq!(f.fg_frac, 0.0);
+        assert!(f.pf[0].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn red_block_counts_exactly() {
+        let bg = mk_frame(16, 16, [100.0, 100.0, 100.0]);
+        let mut rgb = bg.clone();
+        // 4x4 vivid red block = 16 fg pixels, all red-hue.
+        paint_rect(&mut rgb, 16, (0, 0, 4, 4), [208.0, 22.0, 28.0]);
+        let f = compute_features(&rgb, &bg, &[NamedColor::Red.ranges()], FG_THRESHOLD);
+        assert_eq!(f.hf, vec![1.0]);
+        assert!((f.fg_frac - 16.0 / 256.0).abs() < 1e-6);
+        // All pixels share one sat/val bin; PF sums to 1 with one hot bin.
+        let total: f32 = f.pf[0].iter().sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        assert_eq!(f.pf[0].iter().filter(|&&x| x > 0.0).count(), 1);
+    }
+
+    #[test]
+    fn mixed_colors_split_hf() {
+        let bg = mk_frame(16, 16, [100.0, 100.0, 100.0]);
+        let mut rgb = bg.clone();
+        paint_rect(&mut rgb, 16, (0, 0, 4, 4), [208.0, 22.0, 28.0]); // red 16px
+        paint_rect(&mut rgb, 16, (8, 8, 12, 12), [228.0, 200.0, 24.0]); // yellow 16px
+        let ranges = [NamedColor::Red.ranges(), NamedColor::Yellow.ranges()];
+        let f = compute_features(&rgb, &bg, &ranges, FG_THRESHOLD);
+        assert!((f.hf[0] - 0.5).abs() < 1e-6);
+        assert!((f.hf[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dull_red_lands_in_low_sat_bins() {
+        let bg = mk_frame(16, 16, [100.0, 100.0, 100.0]);
+        let mut vivid = bg.clone();
+        let mut dull = bg.clone();
+        paint_rect(&mut vivid, 16, (0, 0, 4, 4), [208.0, 22.0, 28.0]);
+        paint_rect(&mut dull, 16, (0, 0, 4, 4), [122.0, 72.0, 70.0]);
+        let ranges = [NamedColor::Red.ranges()];
+        let fv = compute_features(&vivid, &bg, &ranges, FG_THRESHOLD);
+        let fd = compute_features(&dull, &bg, &ranges, FG_THRESHOLD);
+        // Same HF — hue can't tell them apart…
+        assert_eq!(fv.hf, fd.hf);
+        // …but the occupied saturation bin differs (vivid in high-sat bins).
+        let sat_bin = |pf: &[f32; HIST]| {
+            pf.iter().position(|&x| x > 0.0).unwrap() / crate::color::NUM_BINS
+        };
+        assert!(sat_bin(&fv.pf[0]) >= 6, "vivid bin {}", sat_bin(&fv.pf[0]));
+        assert!(sat_bin(&fd.pf[0]) <= 3, "dull bin {}", sat_bin(&fd.pf[0]));
+    }
+
+    #[test]
+    fn fg_threshold_respected() {
+        let bg = mk_frame(8, 8, [100.0, 100.0, 100.0]);
+        let mut rgb = bg.clone();
+        // +20 on one pixel: below threshold 25 → still background.
+        rgb[0] += 20.0;
+        let f = compute_features(&rgb, &bg, &[NamedColor::Red.ranges()], FG_THRESHOLD);
+        assert_eq!(f.fg_frac, 0.0);
+        // +26 → foreground.
+        rgb[0] += 6.0;
+        let f = compute_features(&rgb, &bg, &[NamedColor::Red.ranges()], FG_THRESHOLD);
+        assert!(f.fg_frac > 0.0);
+    }
+
+    #[test]
+    fn matches_python_oracle_golden() {
+        // Golden values computed with python/compile/kernels/ref.py
+        // (frame_features on a 4x4 frame, red ranges, M = ones/64):
+        //   rgb = gray bg with one vivid-red pixel and one dull-red pixel
+        let w = 4;
+        let bg = mk_frame(w, 4, [96.0, 96.0, 96.0]);
+        let mut rgb = bg.clone();
+        rgb[0..3].copy_from_slice(&[208.0, 22.0, 28.0]); // vivid red
+        rgb[3..6].copy_from_slice(&[122.0, 72.0, 70.0]); // dull red
+        let f = compute_features(&rgb, &bg, &[NamedColor::Red.ranges()], FG_THRESHOLD);
+        assert!((f.hf[0] - 1.0).abs() < 1e-6); // both fg px are red-hue
+        assert!((f.fg_frac - 2.0 / 16.0).abs() < 1e-6);
+        // vivid: s=228.06→bin7, v=208→bin6 ⇒ flat 62; dull: s=108.7→bin3,
+        // v=122→bin3 ⇒ flat 27. Each 0.5.
+        assert!((f.pf[0][62] - 0.5).abs() < 1e-6, "pf62={}", f.pf[0][62]);
+        assert!((f.pf[0][27] - 0.5).abs() < 1e-6, "pf27={}", f.pf[0][27]);
+    }
+}

@@ -1,0 +1,47 @@
+//! # uals — Utility-Aware Load Shedding for real-time video analytics
+//!
+//! Full reproduction of *"Utility-Aware Load Shedding for Real-time Video
+//! Analytics at the Edge"* (CS.DC 2023) as a three-layer Rust + JAX/Pallas
+//! stack:
+//!
+//! * **L1/L2 (build time)** — the per-frame color-feature hot-spot is a
+//!   Pallas kernel wrapped in a JAX graph, AOT-lowered to HLO text
+//!   (`artifacts/*.hlo.txt`, built by `make artifacts`).
+//! * **L3 (this crate)** — the paper's system contribution: the Load
+//!   Shedder (utility-threshold admission control + dynamic queue sizing),
+//!   the latency control loop, the backend query executor, and the
+//!   streaming pipeline that connects them. The Rust binary is fully
+//!   self-contained once artifacts are built; Python never runs on the
+//!   request path.
+//!
+//! Crate map (see DESIGN.md for the paper-to-module inventory):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`color`] | HSV model, hue-range algebra |
+//! | [`video`] | synthetic VisualRoad-substitute scene generator + streamer |
+//! | [`runtime`] | PJRT client, AOT artifact loading & execution |
+//! | [`features`] | per-frame feature extraction (artifact-backed + oracle) |
+//! | [`utility`] | utility model: training, composition, CDF thresholds |
+//! | [`shedder`] | the Load Shedder: admission control, utility queue, control loop |
+//! | [`backend`] | application query: blob/color filters, detector, sink |
+//! | [`pipeline`] | operator/queue runtime, real + virtual clocks |
+//! | [`metrics`] | QoR (Eq. 2/3) and end-to-end latency (Eq. 4) accounting |
+//! | [`baseline`] | content-agnostic (uniform random) shedder |
+//! | [`experiments`] | regenerates every figure of the paper's evaluation |
+//! | [`util`] | offline substrates: json, csv, rng, stats, prop |
+
+pub mod baseline;
+pub mod backend;
+pub mod cli;
+pub mod color;
+pub mod config;
+pub mod experiments;
+pub mod features;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod shedder;
+pub mod utility;
+pub mod util;
+pub mod video;

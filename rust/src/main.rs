@@ -1,0 +1,158 @@
+//! `uals` — CLI for the Utility-Aware Load Shedding reproduction.
+//!
+//! Subcommands:
+//!   figures   regenerate the paper's evaluation figures (CSV + stdout)
+//!   train     train a utility model on a synthetic dataset → JSON
+//!   dataset   print per-video dataset statistics
+//!   run       run the end-to-end simulated scenario and print a summary
+//!   overhead  camera-side overhead breakdown (Fig. 15)
+//!
+//! Examples:
+//!   uals figures --all --scale small
+//!   uals figures --fig 9a --fig 10c --out results
+//!   uals train --color red --out models/red.json
+//!   uals run --scenario fig13a --scale small
+
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use uals::cli::Args;
+use uals::color::NamedColor;
+use uals::experiments::{self, Scale, ALL_FIGURES, OVERHEAD_FIGURE};
+use uals::utility::Combine;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("figures") => cmd_figures(&args),
+        Some("train") => cmd_train(&args),
+        Some("dataset") => cmd_dataset(&args),
+        Some("run") => cmd_run(&args),
+        Some("overhead") => {
+            let scale = parse_scale(&args)?;
+            experiments::run_and_save(&["15"], scale, &out_dir(&args), args.has("quiet"))
+        }
+        Some(other) => bail!("unknown subcommand '{other}'"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "uals — Utility-Aware Load Shedding for real-time video analytics\n\
+         \n\
+         usage: uals <figures|train|dataset|run|overhead> [flags]\n\
+         \n\
+         figures  --all | --fig <id>…   [--scale tiny|small|paper] [--out DIR] [--quiet]\n\
+         train    --color red[,yellow] [--combine single|or|and] [--out FILE] [--scale S]\n\
+         dataset  [--scale S] [--color red]\n\
+         run      --scenario fig13a|smart-city [--scale S]\n\
+         overhead [--scale S]\n"
+    );
+}
+
+fn parse_scale(args: &Args) -> Result<Scale> {
+    let s = args.get_or("scale", "small");
+    Scale::parse(&s).ok_or_else(|| anyhow::anyhow!("bad --scale '{s}' (tiny|small|paper)"))
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("out", "results"))
+}
+
+fn parse_colors(args: &Args) -> Result<Vec<NamedColor>> {
+    let spec = args.get_or("color", "red");
+    spec.split(',')
+        .map(|c| {
+            NamedColor::parse(c.trim())
+                .ok_or_else(|| anyhow::anyhow!("unknown color '{c}'"))
+        })
+        .collect()
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let scale = parse_scale(args)?;
+    let ids: Vec<&str> = if args.has("all") {
+        ALL_FIGURES.iter().copied().chain([OVERHEAD_FIGURE]).collect()
+    } else {
+        let picked = args.get_all("fig");
+        if picked.is_empty() {
+            bail!("pass --all or at least one --fig <id>");
+        }
+        picked
+    };
+    experiments::run_and_save(&ids, scale, &out_dir(args), args.has("quiet"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let scale = parse_scale(args)?;
+    let colors = parse_colors(args)?;
+    let combine = match args.get("combine") {
+        None => {
+            if colors.len() == 1 {
+                Combine::Single
+            } else {
+                Combine::Or
+            }
+        }
+        Some(s) => Combine::parse(s).ok_or_else(|| anyhow::anyhow!("bad --combine '{s}'"))?,
+    };
+    let corpus = experiments::build_corpus(scale, &colors);
+    let all: Vec<usize> = (0..corpus.videos.len()).collect();
+    let model = corpus.train_on(&all, combine);
+    let out = PathBuf::from(args.get_or("out", "models/model.json"));
+    model.save(&out)?;
+    println!(
+        "trained {} model on {} videos × {} frames → {}",
+        combine.name(),
+        corpus.videos.len(),
+        corpus.videos.first().map(|v| v.len()).unwrap_or(0),
+        out.display()
+    );
+    for c in &model.colors {
+        println!(
+            "  color {}: norm {:.4}, M+ mass in high-sat half: {:.1}%",
+            c.color.name(),
+            c.norm,
+            100.0 * c.m_pos[32..].iter().sum::<f32>()
+                / c.m_pos.iter().sum::<f32>().max(1e-9)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_dataset(args: &Args) -> Result<()> {
+    let scale = parse_scale(args)?;
+    let colors = parse_colors(args)?;
+    let videos = uals::video::build_dataset(&scale.dataset_config());
+    println!(
+        "camera  frames  positives  distinct_targets   (color = {})",
+        colors[0].name()
+    );
+    for v in &videos {
+        let s = uals::video::dataset::video_stats(v, colors[0]);
+        println!(
+            "{:>6}  {:>6}  {:>9}  {:>16}",
+            s.camera_id, s.frames, s.positive_frames, s.distinct_targets
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let scale = parse_scale(args)?;
+    match args.get_or("scenario", "fig13a").as_str() {
+        "fig13a" => experiments::run_and_save(&["13a"], scale, &out_dir(args), false),
+        "smart-city" => experiments::run_and_save(&["13b"], scale, &out_dir(args), false),
+        other => bail!("unknown --scenario '{other}' (fig13a|smart-city)"),
+    }
+}

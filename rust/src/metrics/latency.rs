@@ -1,0 +1,192 @@
+//! End-to-end latency accounting (paper Eq. 4) and violation tracking,
+//! plus windowed time-series for the Fig. 13 style plots.
+
+use crate::util::stats::{Percentiles, Summary};
+
+/// Per-frame end-to-end latency breakdown (Eq. 4): queue + exec per
+/// operator the frame traversed.
+#[derive(Debug, Clone)]
+pub struct LatencyRecord {
+    pub camera: u32,
+    pub frame_index: usize,
+    /// Capture timestamp (ms, stream clock).
+    pub ts_ms: f64,
+    /// (operator name, queue ms, exec ms) in traversal order.
+    pub segments: Vec<(&'static str, f64, f64)>,
+}
+
+impl LatencyRecord {
+    pub fn new(camera: u32, frame_index: usize, ts_ms: f64) -> Self {
+        LatencyRecord { camera, frame_index, ts_ms, segments: Vec::new() }
+    }
+
+    pub fn push(&mut self, op: &'static str, queue_ms: f64, exec_ms: f64) {
+        self.segments.push((op, queue_ms, exec_ms));
+    }
+
+    /// Total E2E latency (Eq. 4).
+    pub fn total_ms(&self) -> f64 {
+        self.segments.iter().map(|(_, q, e)| q + e).sum()
+    }
+}
+
+/// Aggregates latency records against a bound LB.
+#[derive(Debug, Clone)]
+pub struct LatencyTracker {
+    pub bound_ms: f64,
+    summary: Summary,
+    percentiles: Percentiles,
+    violations: u64,
+    count: u64,
+}
+
+impl LatencyTracker {
+    pub fn new(bound_ms: f64) -> Self {
+        LatencyTracker {
+            bound_ms,
+            summary: Summary::new(),
+            percentiles: Percentiles::new(),
+            violations: 0,
+            count: 0,
+        }
+    }
+
+    pub fn observe(&mut self, total_ms: f64) {
+        self.summary.add(total_ms);
+        self.percentiles.add(total_ms);
+        self.count += 1;
+        if total_ms > self.bound_ms {
+            self.violations += 1;
+        }
+    }
+
+    pub fn observe_record(&mut self, r: &LatencyRecord) {
+        self.observe(r.total_ms());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn violations(&self) -> u64 {
+        self.violations
+    }
+
+    pub fn violation_rate(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.count as f64
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.summary.max()
+    }
+
+    pub fn quantile_ms(&mut self, q: f64) -> f64 {
+        self.percentiles.quantile(q)
+    }
+}
+
+/// Fixed-width time-window series (the paper plots 5-second windows):
+/// tracks any per-window aggregate keyed by stream time.
+#[derive(Debug, Clone)]
+pub struct WindowSeries {
+    window_ms: f64,
+    /// (max, sum, count) per window index.
+    windows: Vec<(f64, f64, u64)>,
+}
+
+impl WindowSeries {
+    pub fn new(window_ms: f64) -> Self {
+        assert!(window_ms > 0.0);
+        WindowSeries { window_ms, windows: Vec::new() }
+    }
+
+    pub fn observe(&mut self, ts_ms: f64, value: f64) {
+        let idx = (ts_ms / self.window_ms).floor().max(0.0) as usize;
+        if idx >= self.windows.len() {
+            self.windows.resize(idx + 1, (f64::NEG_INFINITY, 0.0, 0));
+        }
+        let w = &mut self.windows[idx];
+        w.0 = w.0.max(value);
+        w.1 += value;
+        w.2 += 1;
+    }
+
+    /// (window start ms, max, mean, count) rows.
+    pub fn rows(&self) -> Vec<(f64, f64, f64, u64)> {
+        self.windows
+            .iter()
+            .enumerate()
+            .map(|(i, &(max, sum, n))| {
+                let mean = if n > 0 { sum / n as f64 } else { 0.0 };
+                let max = if n > 0 { max } else { 0.0 };
+                (i as f64 * self.window_ms, max, mean, n)
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_totals_eq4() {
+        let mut r = LatencyRecord::new(0, 7, 700.0);
+        r.push("camera", 0.0, 30.0);
+        r.push("shedder", 12.0, 0.5);
+        r.push("dnn", 40.0, 120.0);
+        assert!((r.total_ms() - 202.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracker_violations() {
+        let mut t = LatencyTracker::new(100.0);
+        for v in [50.0, 99.0, 100.0, 101.0, 400.0] {
+            t.observe(v);
+        }
+        assert_eq!(t.count(), 5);
+        assert_eq!(t.violations(), 2); // strictly above the bound
+        assert!((t.violation_rate() - 0.4).abs() < 1e-12);
+        assert_eq!(t.max_ms(), 400.0);
+    }
+
+    #[test]
+    fn window_series_grouping() {
+        let mut w = WindowSeries::new(5000.0);
+        w.observe(0.0, 10.0);
+        w.observe(4999.0, 30.0);
+        w.observe(5000.0, 20.0);
+        w.observe(12_000.0, 5.0);
+        let rows = w.rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], (0.0, 30.0, 20.0, 2));
+        assert_eq!(rows[1], (5000.0, 20.0, 20.0, 1));
+        assert_eq!(rows[2], (10_000.0, 5.0, 5.0, 1));
+    }
+
+    #[test]
+    fn empty_windows_render_as_zero() {
+        let mut w = WindowSeries::new(1000.0);
+        w.observe(2500.0, 7.0);
+        let rows = w.rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].3, 0);
+        assert_eq!(rows[0].1, 0.0);
+    }
+}

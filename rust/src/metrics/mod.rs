@@ -1,0 +1,10 @@
+//! Metrics layer: QoR (paper Eq. 2/3), end-to-end latency (Eq. 4),
+//! drop-rate accounting and windowed time series (Fig. 13 plots).
+
+pub mod latency;
+pub mod qor;
+pub mod stage_counts;
+
+pub use latency::{LatencyRecord, LatencyTracker, WindowSeries};
+pub use qor::{DropCounter, QorTracker};
+pub use stage_counts::{Stage, StageCounts};

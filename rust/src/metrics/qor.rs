@@ -1,0 +1,168 @@
+//! Quality-of-Result accounting (paper Eq. 2/3): per-target-object frame
+//! recall under shedding, averaged over objects.
+
+use std::collections::HashMap;
+
+/// Tracks, per target object, how many of its frames existed vs. survived.
+#[derive(Debug, Clone, Default)]
+pub struct QorTracker {
+    totals: HashMap<u64, u64>,
+    kept: HashMap<u64, u64>,
+}
+
+impl QorTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Observe one frame: `target_ids` = target objects present in the
+    /// frame (ground truth), `kept` = did the Load Shedder send it on.
+    pub fn observe(&mut self, target_ids: &[u64], kept: bool) {
+        for &id in target_ids {
+            *self.totals.entry(id).or_default() += 1;
+            if kept {
+                *self.kept.entry(id).or_default() += 1;
+            }
+        }
+    }
+
+    /// Number of distinct target objects seen.
+    pub fn num_objects(&self) -> usize {
+        self.totals.len()
+    }
+
+    /// QoR for one object (Eq. 2), if seen.
+    pub fn per_object(&self, id: u64) -> Option<f64> {
+        let total = *self.totals.get(&id)?;
+        let kept = self.kept.get(&id).copied().unwrap_or(0);
+        Some(kept as f64 / total as f64)
+    }
+
+    /// Overall QoR (Eq. 3): mean per-object QoR. 1.0 when no targets
+    /// appeared (nothing to miss).
+    pub fn overall(&self) -> f64 {
+        if self.totals.is_empty() {
+            return 1.0;
+        }
+        let sum: f64 = self
+            .totals
+            .keys()
+            .map(|id| self.per_object(*id).unwrap())
+            .sum();
+        sum / self.totals.len() as f64
+    }
+
+    /// All per-object QoR values (for distribution plots).
+    pub fn per_object_all(&self) -> Vec<(u64, f64)> {
+        let mut v: Vec<(u64, f64)> = self
+            .totals
+            .keys()
+            .map(|&id| (id, self.per_object(id).unwrap()))
+            .collect();
+        v.sort_by_key(|&(id, _)| id);
+        v
+    }
+
+    pub fn merge(&mut self, other: &QorTracker) {
+        for (&id, &n) in &other.totals {
+            *self.totals.entry(id).or_default() += n;
+        }
+        for (&id, &n) in &other.kept {
+            *self.kept.entry(id).or_default() += n;
+        }
+    }
+}
+
+/// Frame-drop accounting (observed drop rate).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DropCounter {
+    pub ingress: u64,
+    pub dropped: u64,
+}
+
+impl DropCounter {
+    pub fn observe(&mut self, dropped: bool) {
+        self.ingress += 1;
+        self.dropped += dropped as u64;
+    }
+
+    pub fn drop_rate(&self) -> f64 {
+        if self.ingress == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.ingress as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn eq2_eq3_on_known_history() {
+        let mut q = QorTracker::new();
+        // Object 1: 4 frames, 3 kept. Object 2: 2 frames, 0 kept.
+        q.observe(&[1], true);
+        q.observe(&[1], true);
+        q.observe(&[1, 2], true);
+        q.observe(&[1, 2], false);
+        // object2 appears twice: once kept once dropped → frames kept=1? No:
+        // frame3 kept (both objects), frame4 dropped.
+        assert_eq!(q.num_objects(), 2);
+        assert!((q.per_object(1).unwrap() - 0.75).abs() < 1e-12);
+        assert!((q.per_object(2).unwrap() - 0.5).abs() < 1e-12);
+        assert!((q.overall() - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_perfect() {
+        let q = QorTracker::new();
+        assert_eq!(q.overall(), 1.0);
+        assert_eq!(q.num_objects(), 0);
+    }
+
+    #[test]
+    fn keep_everything_gives_one() {
+        let mut q = QorTracker::new();
+        for t in 0..50 {
+            q.observe(&[t % 5], true);
+        }
+        assert_eq!(q.overall(), 1.0);
+    }
+
+    #[test]
+    fn drop_counter() {
+        let mut d = DropCounter::default();
+        for i in 0..10 {
+            d.observe(i % 4 == 0);
+        }
+        assert!((d.drop_rate() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_qor_bounds_and_merge() {
+        Prop::new("qor in [0,1]; merge consistent").cases(50).run(|g| {
+            let mut a = QorTracker::new();
+            let mut b = QorTracker::new();
+            let mut whole = QorTracker::new();
+            for _ in 0..g.usize_in(0..200) {
+                let ids: Vec<u64> =
+                    (0..g.usize_in(0..4)).map(|_| g.usize_in(0..10) as u64).collect();
+                let kept = g.bool();
+                let first = g.bool();
+                if first {
+                    a.observe(&ids, kept);
+                } else {
+                    b.observe(&ids, kept);
+                }
+                whole.observe(&ids, kept);
+            }
+            let q = whole.overall();
+            assert!((0.0..=1.0).contains(&q));
+            a.merge(&b);
+            assert!((a.overall() - q).abs() < 1e-12);
+        });
+    }
+}

@@ -1,0 +1,129 @@
+//! Per-stage frame counters — the lower panel of paper Fig. 13: how many
+//! frames reached each query component per time window.
+
+use crate::metrics::WindowSeries;
+
+/// Query pipeline stages a frame can reach (paper Fig. 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Arrived at the Load Shedder.
+    Ingress = 0,
+    /// Dropped by the shedder (admission or queue eviction).
+    Shed = 1,
+    /// Reached the blob-size filter.
+    BlobFilter = 2,
+    /// Reached the color filter.
+    ColorFilter = 3,
+    /// Reached the DNN detector.
+    Dnn = 4,
+    /// Reached the sink (passed all stages).
+    Sink = 5,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 6] = [
+        Stage::Ingress,
+        Stage::Shed,
+        Stage::BlobFilter,
+        Stage::ColorFilter,
+        Stage::Dnn,
+        Stage::Sink,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Ingress => "ingress",
+            Stage::Shed => "shed",
+            Stage::BlobFilter => "blob_filter",
+            Stage::ColorFilter => "color_filter",
+            Stage::Dnn => "dnn",
+            Stage::Sink => "sink",
+        }
+    }
+}
+
+/// Windowed per-stage frame counts.
+#[derive(Debug, Clone)]
+pub struct StageCounts {
+    window_ms: f64,
+    series: Vec<WindowSeries>,
+}
+
+impl StageCounts {
+    pub fn new(window_ms: f64) -> Self {
+        StageCounts {
+            window_ms,
+            series: Stage::ALL.iter().map(|_| WindowSeries::new(window_ms)).collect(),
+        }
+    }
+
+    pub fn observe(&mut self, stage: Stage, ts_ms: f64) {
+        self.series[stage as usize].observe(ts_ms, 1.0);
+    }
+
+    pub fn window_ms(&self) -> f64 {
+        self.window_ms
+    }
+
+    /// Count of frames per window for a stage.
+    pub fn counts(&self, stage: Stage) -> Vec<(f64, u64)> {
+        self.series[stage as usize]
+            .rows()
+            .into_iter()
+            .map(|(t, _, _, n)| (t, n))
+            .collect()
+    }
+
+    /// Rows of (window start, count per stage …) padded to equal length.
+    pub fn table(&self) -> Vec<Vec<f64>> {
+        let max_len = self.series.iter().map(|s| s.len()).max().unwrap_or(0);
+        let mut rows = Vec::with_capacity(max_len);
+        for w in 0..max_len {
+            let mut row = vec![w as f64 * self.window_ms];
+            for s in &self.series {
+                let counts = s.rows();
+                row.push(counts.get(w).map(|r| r.3 as f64).unwrap_or(0.0));
+            }
+            rows.push(row);
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_funnel_counts() {
+        let mut sc = StageCounts::new(1000.0);
+        for i in 0..10 {
+            let ts = i as f64 * 100.0; // all in window 0
+            sc.observe(Stage::Ingress, ts);
+            if i % 2 == 0 {
+                sc.observe(Stage::Shed, ts);
+            } else {
+                sc.observe(Stage::BlobFilter, ts);
+                if i % 3 != 0 {
+                    sc.observe(Stage::Dnn, ts);
+                }
+            }
+        }
+        assert_eq!(sc.counts(Stage::Ingress)[0].1, 10);
+        assert_eq!(sc.counts(Stage::Shed)[0].1, 5);
+        assert_eq!(sc.counts(Stage::BlobFilter)[0].1, 5);
+        assert_eq!(sc.counts(Stage::Dnn)[0].1, 3); // odds not divisible by 3: 1,5,7
+    }
+
+    #[test]
+    fn table_pads_windows() {
+        let mut sc = StageCounts::new(1000.0);
+        sc.observe(Stage::Ingress, 100.0);
+        sc.observe(Stage::Sink, 2500.0);
+        let t = sc.table();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0][1 + Stage::Ingress as usize], 1.0);
+        assert_eq!(t[2][1 + Stage::Sink as usize], 1.0);
+        assert_eq!(t[1][1 + Stage::Dnn as usize], 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Pipeline runtimes connecting cameras → Load Shedder → backend query.
+//!
+//! * [`sim`] — deterministic discrete-event simulator with calibrated stage
+//!   costs; regenerates the paper's long-running experiments in seconds.
+//! * [`realtime`] — thread-per-component runtime over std channels with the
+//!   PJRT artifact path on the hot loop; used by the examples and the
+//!   wall-clock benchmarks.
+
+pub mod realtime;
+pub mod sim;
+
+pub use sim::{run_sim, Policy, SimConfig, SimReport};

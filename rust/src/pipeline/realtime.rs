@@ -1,0 +1,293 @@
+//! Real-time pipeline runtime: actual threads, channels and wall-clock
+//! pacing, with the PJRT artifact path on the hot loop (the production
+//! configuration). Used by the examples and wall-clock benchmarks.
+//!
+//! Thread topology (tokio is unavailable offline — std threads + mpsc):
+//!
+//! ```text
+//!   [main: streamer + extractor + Load Shedder]
+//!        │ work channel (token-paced)            ▲ completion channel
+//!        ▼                                        │
+//!   [backend worker: filters + DNN surrogate (+ emulated DNN cost)]
+//! ```
+//!
+//! The PJRT client is not `Send`, so each thread builds its own `Engine`
+//! (cheap CPU client + one-time artifact compile).
+
+use crate::backend::{BackendQuery, CostModel, Detector};
+use crate::config::{CostConfig, QueryConfig, ShedderConfig};
+use crate::features::Extractor;
+use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts};
+use crate::runtime::Engine;
+use crate::shedder::{Decision, LoadShedder, TokenBucket};
+use crate::utility::UtilityModel;
+use crate::video::Video;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Real-time run parameters.
+pub struct RealtimeConfig {
+    pub query: QueryConfig,
+    pub shedder: ShedderConfig,
+    pub costs: CostConfig,
+    /// Emulate the heavy-DNN latency by sleeping `exec_ms × scale` in the
+    /// backend worker. 0.0 disables cost emulation (pure compute speed).
+    pub cost_emulation_scale: f64,
+    /// Wall-clock pacing: stream time × scale (1.0 = real time, 0.1 = 10×
+    /// fast-forward). Cost emulation scales identically so the control
+    /// loop sees a consistent world.
+    pub time_scale: f64,
+    pub backend_tokens: u32,
+    /// Use the AOT artifact path (false = native oracle; for A/B benches).
+    pub use_artifacts: bool,
+}
+
+impl Default for RealtimeConfig {
+    fn default() -> Self {
+        RealtimeConfig {
+            query: QueryConfig::single(crate::color::NamedColor::Red),
+            shedder: ShedderConfig::default(),
+            costs: CostConfig::default(),
+            cost_emulation_scale: 1.0,
+            time_scale: 1.0,
+            backend_tokens: 1,
+            use_artifacts: true,
+        }
+    }
+}
+
+/// Results of a real-time run.
+pub struct RealtimeReport {
+    pub qor: QorTracker,
+    pub latency: LatencyTracker,
+    pub stages: StageCounts,
+    pub ingress: u64,
+    pub transmitted: u64,
+    pub shed: u64,
+    /// Wall-clock duration of the run.
+    pub wall: Duration,
+    /// Mean extractor latency per frame (ms) — the camera-side overhead.
+    pub extract_ms_mean: f64,
+}
+
+struct WorkItem {
+    capture_stream_ms: f64,
+    capture_wall: Instant,
+    target_ids: Vec<u64>,
+    rgb: Vec<f32>,
+    width: usize,
+    height: usize,
+}
+
+struct DoneItem {
+    capture_stream_ms: f64,
+    capture_wall: Instant,
+    target_ids: Vec<u64>,
+    last_stage: Stage,
+    exec_ms: f64,
+}
+
+/// Run the multi-camera stream through the real-time pipeline.
+pub fn run_realtime(
+    videos: &[Video],
+    model: &UtilityModel,
+    cfg: &RealtimeConfig,
+) -> Result<RealtimeReport> {
+    let start = Instant::now();
+    let fps_total = crate::video::streamer::aggregate_fps(videos);
+
+    // --- backend worker -----------------------------------------------------
+    let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
+    let (done_tx, done_rx) = mpsc::channel::<DoneItem>();
+    let bq_query = cfg.query.clone();
+    let bq_costs = cfg.costs.clone();
+    let emulation = cfg.cost_emulation_scale * cfg.time_scale;
+    let use_artifacts = cfg.use_artifacts;
+    let worker = std::thread::spawn(move || -> Result<()> {
+        let detector = if use_artifacts {
+            let engine = Engine::from_default_artifacts()?;
+            Detector::artifact(&engine)?
+        } else {
+            Detector::native(12, 25.0)
+        };
+        let mut backend = BackendQuery::new(
+            bq_query,
+            detector,
+            CostModel::new(bq_costs, 0xB__E),
+            25.0,
+        );
+        // The worker needs per-camera backgrounds; they ride in on the
+        // first frame of each camera via rgb-background pairing below.
+        while let Ok(item) = work_rx.recv() {
+            let (bg, rgb) = item.rgb.split_at(item.rgb.len() / 2);
+            let result = backend.process(rgb, bg, item.width, item.height)?;
+            if emulation > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(
+                    result.exec_ms * emulation / 1000.0,
+                ));
+            }
+            let _ = done_tx.send(DoneItem {
+                capture_stream_ms: item.capture_stream_ms,
+                capture_wall: item.capture_wall,
+                target_ids: item.target_ids,
+                last_stage: result.last_stage,
+                exec_ms: result.exec_ms,
+            });
+        }
+        Ok(())
+    });
+
+    // --- edge side: streamer + extractor + shedder ---------------------------
+    let extractor = if cfg.use_artifacts {
+        let engine = Engine::from_default_artifacts()?;
+        Extractor::artifact(&engine, model.clone())?
+    } else {
+        Extractor::native(model.clone())
+    };
+
+    let mut shedder: LoadShedder<WorkItem> = LoadShedder::new(
+        cfg.shedder.clone(),
+        &cfg.costs,
+        cfg.query.latency_bound_ms,
+        fps_total,
+    );
+    let mut tokens = TokenBucket::new(cfg.backend_tokens.max(1));
+    let mut qor = QorTracker::new();
+    let mut latency = LatencyTracker::new(cfg.query.latency_bound_ms);
+    let mut stages = StageCounts::new(5_000.0);
+    let (mut ingress, mut transmitted, mut shed) = (0u64, 0u64, 0u64);
+    let mut extract_ms_sum = 0.0f64;
+
+    let t0 = Instant::now();
+    let handle_done = |d: DoneItem,
+                           tokens: &mut TokenBucket,
+                           shedder: &mut LoadShedder<WorkItem>,
+                           latency: &mut LatencyTracker,
+                           stages: &mut StageCounts|
+     {
+        tokens.release();
+        shedder.on_backend_complete(d.exec_ms);
+        // E2E in *stream* time: wall elapsed since capture, descaled.
+        let e2e_wall_ms = d.capture_wall.elapsed().as_secs_f64() * 1e3;
+        let e2e_stream_ms = if cfg.time_scale > 0.0 {
+            e2e_wall_ms / cfg.time_scale
+        } else {
+            e2e_wall_ms
+        };
+        latency.observe(e2e_stream_ms);
+        stages.observe(Stage::BlobFilter, d.capture_stream_ms);
+        if d.last_stage >= Stage::ColorFilter {
+            stages.observe(Stage::ColorFilter, d.capture_stream_ms);
+        }
+        if d.last_stage == Stage::Sink {
+            stages.observe(Stage::Dnn, d.capture_stream_ms);
+            stages.observe(Stage::Sink, d.capture_stream_ms);
+        }
+        let _ = &d.target_ids;
+    };
+
+    for frame in crate::video::Streamer::new(videos) {
+        // Pace to stream time.
+        let due = Duration::from_secs_f64(frame.ts_ms / 1000.0 * cfg.time_scale);
+        let elapsed = t0.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        // Drain completions.
+        while let Ok(d) = done_rx.try_recv() {
+            handle_done(d, &mut tokens, &mut shedder, &mut latency, &mut stages);
+        }
+
+        ingress += 1;
+        stages.observe(Stage::Ingress, frame.ts_ms);
+        let bg = videos
+            .iter()
+            .find(|v| v.camera_id() == frame.camera)
+            .unwrap()
+            .background();
+        let te = Instant::now();
+        let (_feats, utils) = extractor.extract(&frame.rgb, bg)?;
+        extract_ms_sum += te.elapsed().as_secs_f64() * 1e3;
+
+        let target_ids = {
+            let mut ids = Vec::new();
+            for &color in &cfg.query.colors {
+                for id in frame.target_ids(color, cfg.query.min_blob_px) {
+                    if !ids.contains(&id) {
+                        ids.push(id);
+                    }
+                }
+            }
+            ids
+        };
+        // Pack background + rgb together so the worker needs no shared map.
+        let mut packed = Vec::with_capacity(frame.rgb.len() * 2);
+        packed.extend_from_slice(bg);
+        packed.extend_from_slice(&frame.rgb);
+        let item = WorkItem {
+            capture_stream_ms: frame.ts_ms,
+            capture_wall: t0 + Duration::from_secs_f64(frame.ts_ms / 1000.0 * cfg.time_scale),
+            target_ids: target_ids.clone(),
+            rgb: packed,
+            width: frame.width,
+            height: frame.height,
+        };
+        let (decision, evicted) =
+            shedder.on_ingress(utils.combined, frame.ts_ms, item);
+        for e in evicted {
+            qor.observe(&e.item.target_ids, false);
+            stages.observe(Stage::Shed, e.item.capture_stream_ms);
+            shed += 1;
+        }
+        match decision {
+            Decision::ShedAdmission | Decision::ShedQueueReject => {
+                qor.observe(&target_ids, false);
+                stages.observe(Stage::Shed, frame.ts_ms);
+                shed += 1;
+            }
+            Decision::Enqueued => {}
+        }
+
+        // Transmit while tokens allow.
+        while tokens.available() > 0 {
+            let Some(entry) = shedder.next_to_send() else { break };
+            assert!(tokens.try_acquire());
+            qor.observe(&entry.item.target_ids, true);
+            transmitted += 1;
+            work_tx.send(entry.item).expect("backend alive");
+        }
+    }
+
+    // Drain: close the work channel after flushing the queue.
+    loop {
+        while tokens.available() > 0 {
+            let Some(entry) = shedder.next_to_send() else { break };
+            assert!(tokens.try_acquire());
+            qor.observe(&entry.item.target_ids, true);
+            transmitted += 1;
+            work_tx.send(entry.item).expect("backend alive");
+        }
+        if tokens.in_flight() == 0 && shedder.queue.is_empty() {
+            break;
+        }
+        let d = done_rx.recv().expect("completion");
+        handle_done(d, &mut tokens, &mut shedder, &mut latency, &mut stages);
+    }
+    drop(work_tx);
+    worker.join().expect("worker panicked")?;
+    while let Ok(d) = done_rx.try_recv() {
+        handle_done(d, &mut tokens, &mut shedder, &mut latency, &mut stages);
+    }
+
+    Ok(RealtimeReport {
+        qor,
+        latency,
+        stages,
+        ingress,
+        transmitted,
+        shed,
+        wall: start.elapsed(),
+        extract_ms_mean: if ingress > 0 { extract_ms_sum / ingress as f64 } else { 0.0 },
+    })
+}

@@ -1,0 +1,164 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts and runs them.
+//!
+//! This is the only module that touches the `xla` crate. The pattern is the
+//! reference one from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`, with
+//! the tupled result decomposed back into host [`Tensor`]s.
+//!
+//! Thread model: `PjRtClient` wraps a raw pointer and is not `Send`; each
+//! pipeline thread that needs compute owns its own [`Engine`] (CPU client
+//! creation is cheap, compilation is one-time per operator). Executables
+//! validate their inputs against the manifest's shapes before every call,
+//! so shape drift between `make artifacts` and the Rust side fails loudly.
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// One PJRT client plus a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+impl Engine {
+    /// Create a CPU engine over the given artifact manifest.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Create an engine over the default artifact directory.
+    pub fn from_default_artifacts() -> Result<Self> {
+        Engine::new(Manifest::load_default()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.entry(name)?.clone();
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let exe = Rc::new(Executable { exe, spec });
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    pub fn output_names(&self) -> &[String] {
+        &self.spec.outputs
+    }
+
+    pub fn input_shapes(&self) -> Vec<&[usize]> {
+        self.spec.inputs.iter().map(|i| i.shape.as_slice()).collect()
+    }
+
+    /// Execute with host tensors; returns one tensor per (named) output.
+    ///
+    /// Inputs are validated against the manifest's declared shapes. The
+    /// artifact was lowered with `return_tuple=True`, so the single device
+    /// output is a tuple that we decompose in output order.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact '{}' wants {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, spec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "artifact '{}' input {}: shape {:?} != declared {:?}",
+                    self.spec.name,
+                    i,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+            let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(t.data())
+                .reshape(&dims)
+                .map_err_reshape(&self.spec.name, i)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let literal = result[0][0].to_literal_sync()?;
+        let parts = literal.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact '{}' returned {} outputs, manifest declares {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            let shape = part.shape()?;
+            let dims: Vec<usize> = match &shape {
+                xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+                other => bail!("unexpected output shape {other:?}"),
+            };
+            let data = part.to_vec::<f32>()?;
+            out.push(Tensor::new(data, dims)?);
+        }
+        Ok(out)
+    }
+
+    /// Run and return outputs keyed by their manifest names.
+    pub fn run_named(&self, inputs: &[&Tensor]) -> Result<HashMap<String, Tensor>> {
+        let outs = self.run(inputs)?;
+        Ok(self
+            .spec
+            .outputs
+            .iter()
+            .cloned()
+            .zip(outs)
+            .collect())
+    }
+}
+
+// Small helper to keep reshape error context without a closure per call.
+trait ReshapeCtx {
+    fn map_err_reshape(self, name: &str, idx: usize) -> Result<xla::Literal>;
+}
+
+impl ReshapeCtx for std::result::Result<xla::Literal, xla::Error> {
+    fn map_err_reshape(self, name: &str, idx: usize) -> Result<xla::Literal> {
+        self.with_context(|| format!("reshaping input {idx} of artifact '{name}'"))
+    }
+}

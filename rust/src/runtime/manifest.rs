@@ -1,0 +1,182 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime: which artifacts exist, their input shapes, output
+//! names, and the frame geometry they were compiled for.
+
+use crate::util::json::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Declared input of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+    pub sha256: String,
+}
+
+/// Parsed manifest + the directory it was loaded from.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub frame_h: usize,
+    pub frame_w: usize,
+    pub detect_grid: usize,
+    pub train_batch: usize,
+    pub num_bins: usize,
+    pub entries: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let v = json::read_file(&path)
+            .with_context(|| format!("loading manifest {}", path.display()))?;
+        Self::from_value(dir, &v)
+    }
+
+    /// Default location: `$UALS_ARTIFACT_DIR` or `./artifacts` relative to
+    /// the crate root (works from `cargo test`/`cargo run` and examples).
+    pub fn load_default() -> Result<Self> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            bail!(
+                "artifacts not found at {} — run `make artifacts` first \
+                 (or set UALS_ARTIFACT_DIR)",
+                dir.display()
+            );
+        }
+        Self::load(&dir)
+    }
+
+    fn from_value(dir: &Path, v: &Value) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for (name, e) in v.get("entries")?.as_object()? {
+            let inputs = e
+                .get("inputs")?
+                .as_array()?
+                .iter()
+                .map(|i| {
+                    Ok(InputSpec {
+                        shape: i
+                            .get("shape")?
+                            .as_array()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<_, _>>()?,
+                        dtype: i.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")?
+                .as_array()?
+                .iter()
+                .map(|o| Ok(o.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: e.get("file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                    sha256: e.get("sha256")?.as_str()?.to_string(),
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            frame_h: v.get("frame_h")?.as_usize()?,
+            frame_w: v.get("frame_w")?.as_usize()?,
+            detect_grid: v.get("detect_grid")?.as_usize()?,
+            train_batch: v.get("train_batch")?.as_usize()?,
+            num_bins: v.get("num_bins")?.as_usize()?,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(name)?.file))
+    }
+}
+
+/// Resolve the artifact directory (env override → crate-root default).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("UALS_ARTIFACT_DIR") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> &'static str {
+        r#"{
+          "frame_h": 96, "frame_w": 96, "detect_grid": 12,
+          "train_batch": 8, "num_bins": 8,
+          "entries": {
+            "shedder_k1": {
+              "file": "shedder_k1.hlo.txt",
+              "inputs": [
+                {"shape": [96, 96, 3], "dtype": "float32"},
+                {"shape": [96, 96, 3], "dtype": "float32"},
+                {"shape": [1, 4], "dtype": "float32"},
+                {"shape": [1, 8, 8], "dtype": "float32"}
+              ],
+              "outputs": ["utility", "hf", "pf", "fg_frac"],
+              "sha256": "ab"
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let v = json::parse(sample_manifest_json()).unwrap();
+        let m = Manifest::from_value(Path::new("/tmp/a"), &v).unwrap();
+        assert_eq!(m.frame_h, 96);
+        let e = m.entry("shedder_k1").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[2].shape, vec![1, 4]);
+        assert_eq!(e.outputs[0], "utility");
+        assert_eq!(
+            m.hlo_path("shedder_k1").unwrap(),
+            Path::new("/tmp/a/shedder_k1.hlo.txt")
+        );
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        for name in ["shedder_k1", "shedder_k2", "features_batch8", "detector"] {
+            let e = m.entry(name).unwrap();
+            assert!(m.hlo_path(name).unwrap().exists(), "{name} hlo missing");
+            assert!(!e.outputs.is_empty());
+        }
+    }
+}

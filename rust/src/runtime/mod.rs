@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client + AOT artifact loading and execution.
+//!
+//! The only module touching the `xla` crate. Everything above it deals in
+//! host [`Tensor`]s and manifest names (`"shedder_k1"`, `"detector"`, …).
+//! Pattern adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{default_artifact_dir, ArtifactSpec, InputSpec, Manifest};
+pub use tensor::Tensor;

@@ -1,0 +1,128 @@
+//! Dense f32 tensor: the host-side value type crossing the PJRT boundary.
+
+use anyhow::{bail, Result};
+
+/// A host tensor (row-major f32) with an explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { data, shape })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        Tensor { data: vec![x], shape: vec![] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        let n = data.len();
+        Tensor { data, shape: vec![n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Scalar extraction (rank-0 or single-element tensors).
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor of {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    /// Row-major index of a multi-dimensional coordinate.
+    pub fn index_of(&self, coords: &[usize]) -> Result<usize> {
+        if coords.len() != self.shape.len() {
+            bail!("rank mismatch: coords {:?} vs shape {:?}", coords, self.shape);
+        }
+        let mut idx = 0;
+        for (c, s) in coords.iter().zip(&self.shape) {
+            if c >= s {
+                bail!("coord {:?} out of bounds for {:?}", coords, self.shape);
+            }
+            idx = idx * s + c;
+        }
+        Ok(idx)
+    }
+
+    pub fn at(&self, coords: &[usize]) -> Result<f32> {
+        Ok(self.data[self.index_of(coords)?])
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_shape() {
+        assert!(Tensor::new(vec![1.0; 6], vec![2, 3]).is_ok());
+        assert!(Tensor::new(vec![1.0; 5], vec![2, 3]).is_err());
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::new((0..24).map(|x| x as f32).collect(), vec![2, 3, 4]).unwrap();
+        assert_eq!(t.at(&[0, 0, 0]).unwrap(), 0.0);
+        assert_eq!(t.at(&[1, 2, 3]).unwrap(), 23.0);
+        assert_eq!(t.at(&[1, 0, 2]).unwrap(), 14.0);
+        assert!(t.at(&[2, 0, 0]).is_err());
+        assert!(t.at(&[0, 0]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_item() {
+        assert_eq!(Tensor::scalar(3.5).item().unwrap(), 3.5);
+        assert!(Tensor::zeros(&[2]).item().is_err());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0]).reshape(vec![2, 2]).unwrap();
+        assert_eq!(t.at(&[1, 0]).unwrap(), 3.0);
+        assert!(t.clone().reshape(vec![3, 2]).is_err());
+    }
+}

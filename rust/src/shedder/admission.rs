@@ -1,0 +1,163 @@
+//! Admission control (paper §IV-D "Admission Control"): translate backend
+//! load into a target drop rate (Eq. 18/19) and a utility threshold
+//! (Eq. 16/17), then gate ingress frames on it.
+
+use crate::utility::UtilityCdf;
+
+/// Supported throughput (Eq. 18): frames/sec the backend sustains at the
+/// current average processing latency.
+pub fn supported_throughput(proc_q_ms: f64) -> f64 {
+    if proc_q_ms <= 0.0 {
+        f64::INFINITY
+    } else {
+        1000.0 / proc_q_ms
+    }
+}
+
+/// Target drop rate (Eq. 19): fraction of ingress that must be shed for
+/// the backend to keep up.
+pub fn target_drop_rate(proc_q_ms: f64, ingress_fps: f64) -> f64 {
+    if ingress_fps <= 0.0 {
+        return 0.0;
+    }
+    (1.0 - supported_throughput(proc_q_ms) / ingress_fps).max(0.0)
+}
+
+/// Threshold-based admission gate over the utility CDF of recent history.
+#[derive(Debug, Clone)]
+pub struct AdmissionControl {
+    cdf: UtilityCdf,
+    threshold: f32,
+    target_rate: f64,
+}
+
+impl AdmissionControl {
+    /// `history`: |H|, the CDF window size in frames.
+    pub fn new(history: usize) -> Self {
+        AdmissionControl { cdf: UtilityCdf::new(history), threshold: 0.0, target_rate: 0.0 }
+    }
+
+    /// Seed the history with training-set utilities (paper §IV-C).
+    pub fn seed(&mut self, utilities: &[f32]) {
+        self.cdf.seed(utilities);
+    }
+
+    /// Observe an ingress frame's utility (updates H).
+    pub fn observe(&mut self, utility: f32) {
+        self.cdf.add(utility);
+    }
+
+    /// Re-derive the threshold for a target drop rate (Eq. 17).
+    pub fn set_target_rate(&mut self, rate: f64) {
+        self.target_rate = rate.clamp(0.0, 1.0);
+        self.threshold = self.cdf.threshold_for(self.target_rate);
+    }
+
+    /// Convenience: Eq. 18/19 then Eq. 17.
+    pub fn retune(&mut self, proc_q_ms: f64, ingress_fps: f64) -> f64 {
+        let rate = target_drop_rate(proc_q_ms, ingress_fps);
+        self.set_target_rate(rate);
+        rate
+    }
+
+    /// Admit iff utility ≥ threshold (the shedder "drops frames with
+    /// utility less than the threshold").
+    pub fn admit(&self, utility: f32) -> bool {
+        utility >= self.threshold
+    }
+
+    pub fn threshold(&self) -> f32 {
+        self.threshold
+    }
+
+    pub fn target_rate(&self) -> f64 {
+        self.target_rate
+    }
+
+    pub fn history_len(&self) -> usize {
+        self.cdf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eq18_eq19() {
+        assert!((supported_throughput(100.0) - 10.0).abs() < 1e-12);
+        // Backend handles 10 fps, ingress 40 fps → shed 75%.
+        assert!((target_drop_rate(100.0, 40.0) - 0.75).abs() < 1e-12);
+        // Backend faster than ingress → no shedding (max with 0).
+        assert_eq!(target_drop_rate(10.0, 50.0), 0.0);
+        assert_eq!(target_drop_rate(0.0, 50.0), 0.0);
+    }
+
+    #[test]
+    fn admits_everything_at_zero_rate() {
+        let mut ac = AdmissionControl::new(100);
+        ac.seed(&[0.1, 0.5, 0.9]);
+        ac.set_target_rate(0.0);
+        assert!(ac.admit(0.0));
+        assert!(ac.admit(1.0));
+    }
+
+    #[test]
+    fn threshold_tracks_history_distribution() {
+        let mut ac = AdmissionControl::new(1000);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            ac.observe(rng.f32());
+        }
+        ac.set_target_rate(0.6);
+        assert!((ac.threshold() - 0.6).abs() < 0.05, "th={}", ac.threshold());
+        // Roughly 60% of uniform draws now rejected.
+        let mut rejected = 0;
+        for _ in 0..10_000 {
+            rejected += (!ac.admit(rng.f32())) as u32;
+        }
+        let frac = rejected as f64 / 10_000.0;
+        assert!((frac - 0.6).abs() < 0.05, "rejected {frac}");
+    }
+
+    #[test]
+    fn retune_pipeline() {
+        let mut ac = AdmissionControl::new(100);
+        for i in 0..100 {
+            ac.observe(i as f32 / 100.0);
+        }
+        // proc_q = 200 ms → ST 5 fps; ingress 10 fps → rate 0.5.
+        let r = ac.retune(200.0, 10.0);
+        assert!((r - 0.5).abs() < 1e-12);
+        assert!(ac.threshold() > 0.4 && ac.threshold() < 0.6);
+    }
+
+    #[test]
+    fn property_admission_rate_matches_target_on_history() {
+        // On the history itself, the fraction admitted ≈ 1 - target rate
+        // (exact up to ties, always erring on admitting more).
+        Prop::new("admission rate vs target").cases(40).run(|g| {
+            let n = g.usize_in(20..500);
+            let mut ac = AdmissionControl::new(n);
+            let us: Vec<f32> = (0..n).map(|_| g.f64_in(0.0, 1.0) as f32).collect();
+            ac.seed(&us);
+            let r = g.unit_f64();
+            ac.set_target_rate(r);
+            let dropped = us.iter().filter(|&&u| !ac.admit(u)).count();
+            let dropped_frac = dropped as f64 / n as f64;
+            // Threshold = min u with CDF ≥ r and admission keeps u == th,
+            // so the dropped fraction is the largest achievable value < r.
+            assert!(dropped_frac <= r + 1e-9, "dropped {dropped_frac} > r {r}");
+            // And it cannot be short by more than the probability mass of
+            // one sample value (ties aside, 1/n granularity).
+            let th = ac.threshold();
+            let ties = us.iter().filter(|&&u| (u - th).abs() < 1e-12).count();
+            assert!(
+                dropped_frac + (ties as f64 + 1.0) / n as f64 >= r,
+                "dropped {dropped_frac}, ties {ties}, r {r}"
+            );
+        });
+    }
+}

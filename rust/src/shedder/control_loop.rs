@@ -1,0 +1,253 @@
+//! The feedback control loop (paper §IV-D, Fig. 3): monitors the backend's
+//! processing latency and the ingress rate (Metrics Collector role),
+//! derives the target drop rate (Eq. 18/19) and the shedder's dynamic
+//! queue size (Eq. 20).
+
+use crate::config::{CostConfig, ShedderConfig};
+use crate::util::stats::{Ewma, SlidingWindow};
+use std::collections::VecDeque;
+
+/// Rolling estimate of ingress frames/sec from arrival timestamps.
+#[derive(Debug, Clone)]
+pub struct RateEstimator {
+    window_ms: f64,
+    arrivals: VecDeque<f64>,
+}
+
+impl RateEstimator {
+    pub fn new(window_ms: f64) -> Self {
+        RateEstimator { window_ms, arrivals: VecDeque::new() }
+    }
+
+    pub fn observe(&mut self, ts_ms: f64) {
+        self.arrivals.push_back(ts_ms);
+        while let Some(&front) = self.arrivals.front() {
+            if ts_ms - front > self.window_ms {
+                self.arrivals.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Current rate (frames/sec) over the window.
+    pub fn fps(&self) -> f64 {
+        if self.arrivals.len() < 2 {
+            return 0.0;
+        }
+        let span_ms = self.arrivals.back().unwrap() - self.arrivals.front().unwrap();
+        if span_ms <= 0.0 {
+            return 0.0;
+        }
+        (self.arrivals.len() - 1) as f64 / (span_ms / 1000.0)
+    }
+}
+
+/// Control-loop state: smoothed proc_Q, ingress fps, queue sizing.
+#[derive(Debug, Clone)]
+pub struct ControlLoop {
+    /// Smoothed backend per-frame processing latency (ms).
+    proc_q: Ewma,
+    /// Recent backend latencies — queue sizing uses the recent *max* so a
+    /// sudden cost spike shrinks the queue immediately (the paper: dynamic
+    /// queue sizing "reacts faster than updates to the utility threshold").
+    proc_recent: SlidingWindow,
+    /// Smoothed measured network latencies (ms), seeded from config.
+    net_cam_ls: Ewma,
+    net_ls_q: Ewma,
+    /// Camera-side processing latency (ms), seeded from config.
+    proc_cam: f64,
+    rate: RateEstimator,
+    latency_bound_ms: f64,
+    queue_cap_max: usize,
+}
+
+impl ControlLoop {
+    pub fn new(cfg: &ShedderConfig, costs: &CostConfig, latency_bound_ms: f64) -> Self {
+        let mut proc_q = Ewma::new(cfg.proc_ewma_alpha);
+        // Optimistic initial estimate: a cheap filtered frame, so the
+        // system starts without shedding (matching the paper's segment-1
+        // behavior) and adapts once real measurements arrive.
+        proc_q.add(costs.blob_ms + costs.color_ms);
+        let mut net_cam_ls = Ewma::new(0.2);
+        net_cam_ls.add(costs.net_cam_ls_ms);
+        let mut net_ls_q = Ewma::new(0.2);
+        net_ls_q.add(costs.net_ls_q_ms);
+        ControlLoop {
+            proc_q,
+            proc_recent: SlidingWindow::new(5),
+            net_cam_ls,
+            net_ls_q,
+            proc_cam: costs.cam_ms,
+            rate: RateEstimator::new(3_000.0),
+            latency_bound_ms,
+            queue_cap_max: cfg.queue_cap_max,
+        }
+    }
+
+    /// Metrics Collector input: backend finished a frame in `ms`.
+    pub fn observe_backend(&mut self, ms: f64) {
+        self.proc_q.add(ms);
+        self.proc_recent.push(ms);
+    }
+
+    /// Observe a measured network latency sample.
+    pub fn observe_network(&mut self, cam_ls_ms: Option<f64>, ls_q_ms: Option<f64>) {
+        if let Some(x) = cam_ls_ms {
+            self.net_cam_ls.add(x);
+        }
+        if let Some(x) = ls_q_ms {
+            self.net_ls_q.add(x);
+        }
+    }
+
+    /// Observe an ingress frame arrival.
+    pub fn observe_ingress(&mut self, ts_ms: f64) {
+        self.rate.observe(ts_ms);
+    }
+
+    /// Smoothed proc_Q (ms).
+    pub fn proc_q_ms(&self) -> f64 {
+        self.proc_q.get_or(1.0).max(0.1)
+    }
+
+    /// Measured ingress rate (fps); falls back to `default_fps` early on.
+    pub fn ingress_fps(&self, default_fps: f64) -> f64 {
+        let fps = self.rate.fps();
+        if fps > 0.0 {
+            fps
+        } else {
+            default_fps
+        }
+    }
+
+    /// Target drop rate from current load (Eq. 18/19).
+    pub fn target_drop_rate(&self, default_fps: f64) -> f64 {
+        super::admission::target_drop_rate(self.proc_q_ms(), self.ingress_fps(default_fps))
+    }
+
+    /// Dynamic queue size (Eq. 20): the largest N such that the Nth queued
+    /// frame still meets the latency bound,
+    ///   (N+1)·proc_Q + net_cam_LS + net_LS_Q + proc_CAM ≤ LB,
+    /// clamped to [1, queue_cap_max]. Uses the *recent-max* backend
+    /// latency (pessimistic) so load spikes shrink the queue within one
+    /// completion rather than an EWMA time-constant.
+    pub fn queue_size(&self) -> usize {
+        let overhead =
+            self.net_cam_ls.get_or(0.0) + self.net_ls_q.get_or(0.0) + self.proc_cam;
+        let budget = self.latency_bound_ms - overhead;
+        if budget <= 0.0 {
+            return 1;
+        }
+        let recent_max = self
+            .proc_recent
+            .iter()
+            .fold(f64::NEG_INFINITY, f64::max);
+        let proc = if recent_max.is_finite() {
+            self.proc_q_ms().max(recent_max)
+        } else {
+            self.proc_q_ms()
+        };
+        let n_plus_1 = (budget / proc).floor() as i64;
+        (n_plus_1 - 1).clamp(1, self.queue_cap_max as i64) as usize
+    }
+
+    pub fn latency_bound_ms(&self) -> f64 {
+        self.latency_bound_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> ControlLoop {
+        ControlLoop::new(&ShedderConfig::default(), &CostConfig::default(), 1000.0)
+    }
+
+    #[test]
+    fn rate_estimator_measures_fps() {
+        let mut r = RateEstimator::new(2000.0);
+        for i in 0..21 {
+            r.observe(i as f64 * 100.0); // 10 fps
+        }
+        assert!((r.fps() - 10.0).abs() < 0.5, "fps={}", r.fps());
+    }
+
+    #[test]
+    fn rate_estimator_window_evicts() {
+        let mut r = RateEstimator::new(1000.0);
+        for i in 0..11 {
+            r.observe(i as f64 * 50.0); // 20 fps burst, old samples
+        }
+        for i in 0..6 {
+            r.observe(2000.0 + i as f64 * 200.0); // 5 fps now
+        }
+        assert!((r.fps() - 5.0).abs() < 1.0, "fps={}", r.fps());
+    }
+
+    #[test]
+    fn queue_size_follows_eq20() {
+        let mut cl = mk();
+        // Saturate the EWMA with 100 ms backend latencies.
+        for _ in 0..200 {
+            cl.observe_backend(100.0);
+        }
+        // overhead = 5 + 5 + 30 = 40 → budget 960 → N+1 = 9 → N = 8.
+        assert_eq!(cl.queue_size(), 8);
+    }
+
+    #[test]
+    fn queue_size_clamps() {
+        let mut cl = ControlLoop::new(
+            &ShedderConfig { queue_cap_max: 4, ..Default::default() },
+            &CostConfig::default(),
+            10_000.0,
+        );
+        for _ in 0..100 {
+            cl.observe_backend(1.0);
+        }
+        assert_eq!(cl.queue_size(), 4); // clamped to max
+        let mut tight = ControlLoop::new(
+            &ShedderConfig::default(),
+            &CostConfig::default(),
+            10.0, // bound below fixed overheads
+        );
+        for _ in 0..100 {
+            tight.observe_backend(100.0);
+        }
+        assert_eq!(tight.queue_size(), 1); // never starves downstream
+    }
+
+    #[test]
+    fn drop_rate_reacts_to_backend_load() {
+        let mut cl = mk();
+        for i in 0..100 {
+            cl.observe_ingress(i as f64 * 100.0); // 10 fps
+        }
+        // Fast backend: no shedding.
+        for _ in 0..100 {
+            cl.observe_backend(5.0);
+        }
+        assert_eq!(cl.target_drop_rate(10.0), 0.0);
+        // Slow backend (500 ms → 2 fps): shed 80%.
+        for _ in 0..300 {
+            cl.observe_backend(500.0);
+        }
+        let r = cl.target_drop_rate(10.0);
+        assert!((r - 0.8).abs() < 0.02, "rate={r}");
+    }
+
+    #[test]
+    fn network_observation_shifts_queue_size() {
+        let mut cl = mk();
+        for _ in 0..200 {
+            cl.observe_backend(100.0);
+        }
+        let before = cl.queue_size();
+        for _ in 0..200 {
+            cl.observe_network(Some(100.0), Some(200.0));
+        }
+        assert!(cl.queue_size() < before);
+    }
+}

@@ -1,0 +1,222 @@
+//! The Load Shedder's internal utility-ordered queue (paper §IV-D,
+//! "Dynamic Queue Sizing"): bounded, highest-utility-first service,
+//! lowest-utility eviction on overflow or shrink. Never starves the
+//! downstream (capacity ≥ 1).
+
+/// An entry with its utility and arrival time.
+#[derive(Debug, Clone)]
+pub struct Entry<T> {
+    pub utility: f32,
+    pub arrival_ms: f64,
+    pub item: T,
+}
+
+/// Outcome of offering a frame to the queue.
+#[derive(Debug)]
+pub enum Offer<T> {
+    /// Admitted; possibly displacing a lower-utility victim.
+    Accepted { evicted: Option<Entry<T>> },
+    /// Rejected: queue full and this frame has the lowest utility.
+    Rejected(Entry<T>),
+}
+
+/// Bounded priority queue ordered by utility (desc), FIFO among equals.
+#[derive(Debug, Clone)]
+pub struct UtilityQueue<T> {
+    /// Sorted descending by utility; ties keep arrival order (stable).
+    items: Vec<Entry<T>>,
+    cap: usize,
+}
+
+impl<T> UtilityQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        UtilityQueue { items: Vec::new(), cap: cap.max(1) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn min_utility(&self) -> Option<f32> {
+        self.items.last().map(|e| e.utility)
+    }
+
+    pub fn max_utility(&self) -> Option<f32> {
+        self.items.first().map(|e| e.utility)
+    }
+
+    /// Offer a frame. If full, the lowest-utility entry (which may be the
+    /// offered frame itself) is shed — the paper's "second layer of
+    /// admission control".
+    pub fn offer(&mut self, utility: f32, arrival_ms: f64, item: T) -> Offer<T> {
+        let entry = Entry { utility, arrival_ms, item };
+        if self.items.len() < self.cap {
+            self.insert(entry);
+            return Offer::Accepted { evicted: None };
+        }
+        // Full: compare against the current minimum. Ties favor the
+        // incumbent (new frame rejected) to avoid pointless churn.
+        let min = self.items.last().map(|e| e.utility).unwrap();
+        if utility <= min {
+            return Offer::Rejected(entry);
+        }
+        let victim = self.items.pop().unwrap();
+        self.insert(entry);
+        Offer::Accepted { evicted: Some(victim) }
+    }
+
+    /// Dequeue the highest-utility frame.
+    pub fn pop_best(&mut self) -> Option<Entry<T>> {
+        if self.items.is_empty() {
+            None
+        } else {
+            Some(self.items.remove(0))
+        }
+    }
+
+    /// Resize the queue (min 1); returns the evicted lowest-utility tail.
+    pub fn resize(&mut self, new_cap: usize) -> Vec<Entry<T>> {
+        self.cap = new_cap.max(1);
+        let mut evicted = Vec::new();
+        while self.items.len() > self.cap {
+            evicted.push(self.items.pop().unwrap());
+        }
+        evicted
+    }
+
+    /// Insert maintaining descending-utility order, FIFO among equals.
+    fn insert(&mut self, entry: Entry<T>) {
+        // partition_point: first index whose utility < entry.utility would
+        // break stability; we insert after all entries with utility >= u.
+        let idx = self.items.partition_point(|e| e.utility >= entry.utility);
+        self.items.insert(idx, entry);
+    }
+
+    /// Iterate entries in service order (diagnostics).
+    pub fn iter(&self) -> impl Iterator<Item = &Entry<T>> {
+        self.items.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn orders_by_utility_desc() {
+        let mut q = UtilityQueue::new(10);
+        for (u, id) in [(0.2, 1), (0.9, 2), (0.5, 3)] {
+            q.offer(u, 0.0, id);
+        }
+        assert_eq!(q.pop_best().unwrap().item, 2);
+        assert_eq!(q.pop_best().unwrap().item, 3);
+        assert_eq!(q.pop_best().unwrap().item, 1);
+        assert!(q.pop_best().is_none());
+    }
+
+    #[test]
+    fn fifo_among_equal_utilities() {
+        let mut q = UtilityQueue::new(10);
+        q.offer(0.5, 0.0, "a");
+        q.offer(0.5, 1.0, "b");
+        q.offer(0.5, 2.0, "c");
+        assert_eq!(q.pop_best().unwrap().item, "a");
+        assert_eq!(q.pop_best().unwrap().item, "b");
+    }
+
+    #[test]
+    fn overflow_evicts_minimum() {
+        let mut q = UtilityQueue::new(2);
+        q.offer(0.3, 0.0, 1);
+        q.offer(0.7, 1.0, 2);
+        // Higher than min → evict the 0.3 frame.
+        match q.offer(0.5, 2.0, 3) {
+            Offer::Accepted { evicted: Some(e) } => assert_eq!(e.item, 1),
+            other => panic!("{other:?}"),
+        }
+        // Lower or equal to min → rejected.
+        match q.offer(0.5, 3.0, 4) {
+            Offer::Rejected(e) => assert_eq!(e.item, 4),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn resize_sheds_lowest_first() {
+        let mut q = UtilityQueue::new(5);
+        for (u, id) in [(0.1, 1), (0.9, 2), (0.4, 3), (0.6, 4), (0.2, 5)] {
+            q.offer(u, 0.0, id);
+        }
+        let evicted = q.resize(2);
+        let ids: Vec<i32> = evicted.iter().map(|e| e.item).collect();
+        assert_eq!(ids, vec![1, 5, 3]); // ascending-utility victims
+        assert_eq!(q.capacity(), 2);
+        assert_eq!(q.pop_best().unwrap().item, 2);
+    }
+
+    #[test]
+    fn capacity_never_below_one() {
+        let mut q = UtilityQueue::new(3);
+        q.offer(0.5, 0.0, 1);
+        q.resize(0);
+        assert_eq!(q.capacity(), 1);
+        assert_eq!(q.len(), 1); // survivor stays
+    }
+
+    #[test]
+    fn property_invariants() {
+        // Under arbitrary offer/pop/resize interleavings: len ≤ cap,
+        // order is non-increasing, eviction victims are always ≤ queue min.
+        Prop::new("utility queue invariants").cases(80).run(|g| {
+            let mut q = UtilityQueue::new(g.usize_in(1..12));
+            for step in 0..g.usize_in(1..120) {
+                match g.usize_in(0..4) {
+                    0 | 1 => {
+                        let u = g.f64_in(0.0, 1.0) as f32;
+                        let before_min = q.min_utility();
+                        match q.offer(u, step as f64, step) {
+                            Offer::Accepted { evicted: Some(e) } => {
+                                assert!(e.utility <= before_min.unwrap() + 1e-9);
+                                assert!(e.utility <= u);
+                            }
+                            Offer::Rejected(e) => {
+                                assert!(e.utility <= before_min.unwrap() + 1e-9);
+                            }
+                            _ => {}
+                        }
+                    }
+                    2 => {
+                        let a = q.pop_best().map(|e| e.utility);
+                        let b = q.max_utility();
+                        if let (Some(a), Some(b)) = (a, b) {
+                            assert!(a >= b);
+                        }
+                    }
+                    _ => {
+                        let evicted = q.resize(g.usize_in(0..10));
+                        for e in &evicted {
+                            if let Some(min) = q.min_utility() {
+                                assert!(e.utility <= min + 1e-9);
+                            }
+                        }
+                    }
+                }
+                assert!(q.len() <= q.capacity());
+                let us: Vec<f32> = q.iter().map(|e| e.utility).collect();
+                for w in us.windows(2) {
+                    assert!(w[0] >= w[1], "order violated: {us:?}");
+                }
+            }
+        });
+    }
+}

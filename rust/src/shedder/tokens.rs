@@ -1,0 +1,106 @@
+//! Token-based transmission control (paper §V-B): the backend grants the
+//! Load Shedder one token per free processing slot; the shedder sends its
+//! current best frame only when a token is available, otherwise it keeps
+//! buffering/evicting. Replaces the paper's ZeroMQ token channel with an
+//! in-process counter (semantics preserved).
+
+/// Counting token bucket with a fixed capacity (backend queue slots).
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    capacity: u32,
+    available: u32,
+    acquired_total: u64,
+    released_total: u64,
+}
+
+impl TokenBucket {
+    pub fn new(capacity: u32) -> Self {
+        assert!(capacity > 0, "token capacity must be ≥ 1");
+        TokenBucket { capacity, available: capacity, acquired_total: 0, released_total: 0 }
+    }
+
+    /// Try to take a token (send one frame downstream).
+    pub fn try_acquire(&mut self) -> bool {
+        if self.available > 0 {
+            self.available -= 1;
+            self.acquired_total += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Return a token (backend finished a frame).
+    pub fn release(&mut self) {
+        assert!(
+            self.available < self.capacity,
+            "token release without acquire (available {} / cap {})",
+            self.available,
+            self.capacity
+        );
+        self.available += 1;
+        self.released_total += 1;
+    }
+
+    pub fn available(&self) -> u32 {
+        self.available
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.capacity
+    }
+
+    /// Frames currently in flight at the backend.
+    pub fn in_flight(&self) -> u32 {
+        self.capacity - self.available
+    }
+
+    pub fn acquired_total(&self) -> u64 {
+        self.acquired_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut t = TokenBucket::new(2);
+        assert!(t.try_acquire());
+        assert!(t.try_acquire());
+        assert!(!t.try_acquire()); // exhausted
+        assert_eq!(t.in_flight(), 2);
+        t.release();
+        assert!(t.try_acquire());
+        assert_eq!(t.acquired_total(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn release_overflow_panics() {
+        let mut t = TokenBucket::new(1);
+        t.release();
+    }
+
+    #[test]
+    fn conservation_property() {
+        use crate::util::prop::Prop;
+        Prop::new("token conservation").cases(50).run(|g| {
+            let cap = g.usize_in(1..8) as u32;
+            let mut t = TokenBucket::new(cap);
+            let mut held = 0u32;
+            for _ in 0..200 {
+                if g.bool() {
+                    if t.try_acquire() {
+                        held += 1;
+                    }
+                } else if held > 0 {
+                    t.release();
+                    held -= 1;
+                }
+                assert_eq!(t.available() + held, cap);
+            }
+        });
+    }
+}

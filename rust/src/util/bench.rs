@@ -1,0 +1,137 @@
+//! Self-built micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall time per iteration with warmup, reports mean/p50/p99 and
+//! derived throughput. Used by the `cargo bench` targets
+//! (`rust/benches/*.rs`, `harness = false`).
+
+use std::time::Instant;
+
+/// One benchmark's measurements.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub min_ms: f64,
+}
+
+impl BenchResult {
+    /// Iterations per second at the mean.
+    pub fn throughput(&self) -> f64 {
+        if self.mean_ms > 0.0 {
+            1000.0 / self.mean_ms
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure iteration counts.
+pub struct Bench {
+    warmup: usize,
+    iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new(3, 30)
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters: iters.max(1), results: Vec::new() }
+    }
+
+    /// Run one benchmark; the closure is a single iteration.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let q = |p: f64| samples[((p * (samples.len() - 1) as f64) as usize).min(samples.len() - 1)];
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ms: mean,
+            p50_ms: q(0.5),
+            p99_ms: q(0.99),
+            min_ms: samples[0],
+        };
+        println!(
+            "{:<44} {:>10.3} ms/iter  p50 {:>9.3}  p99 {:>9.3}  ({:>8.1}/s, {} iters)",
+            r.name,
+            r.mean_ms,
+            r.p50_ms,
+            r.p99_ms,
+            r.throughput(),
+            r.iters
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Dump results as CSV next to the experiment outputs.
+    pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let mut t = crate::util::csv::Table::new(vec![
+            "name", "iters", "mean_ms", "p50_ms", "p99_ms", "min_ms", "per_sec",
+        ]);
+        for r in &self.results {
+            t.push_raw(vec![
+                r.name.clone(),
+                r.iters.to_string(),
+                format!("{:.6}", r.mean_ms),
+                format!("{:.6}", r.p50_ms),
+                format!("{:.6}", r.p99_ms),
+                format!("{:.6}", r.min_ms),
+                format!("{:.2}", r.throughput()),
+            ]);
+        }
+        t.write(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_orders_quantiles() {
+        let mut b = Bench::new(1, 10);
+        let mut x = 0u64;
+        let r = b.run("noop-ish", || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.min_ms <= r.p50_ms && r.p50_ms <= r.p99_ms);
+        assert!(r.mean_ms >= 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn csv_dump() {
+        let mut b = Bench::new(0, 2);
+        b.run("a", || {});
+        let dir = std::env::temp_dir().join("uals_bench_test");
+        let p = dir.join("bench.csv");
+        b.write_csv(&p).unwrap();
+        assert!(std::fs::read_to_string(&p).unwrap().contains("a,2"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,158 @@
+//! Tiny CSV writer for experiment result series (`results/fig*.csv`).
+//!
+//! Each figure harness emits one CSV with a header row; values are
+//! formatted with enough precision to re-plot the paper's series.
+
+use std::io::Write;
+use std::path::Path;
+
+/// In-memory CSV table with typed row append and file dump.
+#[derive(Debug, Clone)]
+pub struct Table {
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(columns: Vec<S>) -> Self {
+        Table { columns: columns.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn columns(&self) -> &[String] {
+        &self.columns
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Append a row of f64 cells.
+    pub fn push(&mut self, cells: &[f64]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells.iter().map(|x| format_num(*x)).collect());
+    }
+
+    /// Append a row of mixed (string) cells.
+    pub fn push_raw<S: Into<String>>(&mut self, cells: Vec<S>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells.into_iter().map(Into::into).collect());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.columns.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+
+    /// Render an aligned text table for terminal output (paper-style rows).
+    pub fn to_pretty(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn format_num(x: f64) -> String {
+    if x.is_nan() {
+        "nan".to_string()
+    } else if x.fract() == 0.0 && x.abs() < 1e12 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_format() {
+        let mut t = Table::new(vec!["threshold", "qor", "drop"]);
+        t.push(&[0.1, 1.0, 0.55]);
+        t.push(&[0.2, 0.98, 0.7]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("threshold,qor,drop\n"));
+        assert!(csv.contains("0.200000,0.980000,0.700000"));
+    }
+
+    #[test]
+    fn escaping() {
+        let mut t = Table::new(vec!["a"]);
+        t.push_raw(vec!["x,y\"z"]);
+        assert!(t.to_csv().contains("\"x,y\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.push(&[1.0]);
+    }
+
+    #[test]
+    fn pretty_aligns() {
+        let mut t = Table::new(vec!["x", "longcol"]);
+        t.push(&[1.0, 2.0]);
+        let p = t.to_pretty();
+        assert!(p.lines().count() >= 3);
+    }
+
+    #[test]
+    fn file_write() {
+        let dir = std::env::temp_dir().join("uals_csv_test");
+        let path = dir.join("t.csv");
+        let mut t = Table::new(vec!["a"]);
+        t.push(&[1.0]);
+        t.write(&path).unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().contains("a\n1\n"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

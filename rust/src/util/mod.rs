@@ -1,0 +1,18 @@
+//! Shared substrates: JSON, CSV, PRNG, statistics, property testing.
+//!
+//! The offline build environment lacks serde/rand/proptest/criterion; these
+//! modules are the in-repo replacements (see DESIGN.md §1).
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Monotonic wall-clock milliseconds since process start (profiling aid).
+pub fn now_ms() -> f64 {
+    use std::time::Instant;
+    static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+    START.elapsed().as_secs_f64() * 1e3
+}

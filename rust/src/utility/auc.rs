@@ -1,0 +1,102 @@
+//! ROC-AUC separability metric: how well a scalar score (utility, HF)
+//! separates positive from negative frames. Used by the ablation studies
+//! (bin-count sweep, feature comparisons) as a threshold-free measure.
+
+/// Area under the ROC curve via the rank-sum (Mann–Whitney) estimator.
+/// Ties contribute 0.5. Returns NaN if either class is empty.
+pub fn roc_auc(positives: &[f32], negatives: &[f32]) -> f64 {
+    if positives.is_empty() || negatives.is_empty() {
+        return f64::NAN;
+    }
+    // Sort all scores; walk in ascending order accumulating how many
+    // negatives precede each positive.
+    let mut all: Vec<(f32, bool)> = positives
+        .iter()
+        .map(|&x| (x, true))
+        .chain(negatives.iter().map(|&x| (x, false)))
+        .collect();
+    all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    let mut neg_seen = 0.0f64;
+    let mut wins = 0.0f64;
+    let mut i = 0;
+    while i < all.len() {
+        // Group ties.
+        let mut j = i;
+        let (mut tie_pos, mut tie_neg) = (0.0f64, 0.0f64);
+        while j < all.len() && all[j].0 == all[i].0 {
+            if all[j].1 {
+                tie_pos += 1.0;
+            } else {
+                tie_neg += 1.0;
+            }
+            j += 1;
+        }
+        wins += tie_pos * (neg_seen + tie_neg * 0.5);
+        neg_seen += tie_neg;
+        i = j;
+    }
+    wins / (positives.len() as f64 * negatives.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation() {
+        let auc = roc_auc(&[0.8, 0.9, 1.0], &[0.1, 0.2, 0.3]);
+        assert!((auc - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_separation() {
+        let auc = roc_auc(&[0.1, 0.2], &[0.8, 0.9]);
+        assert!(auc.abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_is_half() {
+        // Interleaved identical distributions.
+        let pos: Vec<f32> = (0..100).map(|i| (i as f32 * 7.3) % 1.0).collect();
+        let neg: Vec<f32> = (0..100).map(|i| (i as f32 * 7.3 + 3.65) % 1.0).collect();
+        let auc = roc_auc(&pos, &neg);
+        assert!((auc - 0.5).abs() < 0.1, "auc={auc}");
+    }
+
+    #[test]
+    fn ties_count_half() {
+        let auc = roc_auc(&[0.5, 0.5], &[0.5, 0.5]);
+        assert!((auc - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        assert!(roc_auc(&[], &[1.0]).is_nan());
+        assert!(roc_auc(&[1.0], &[]).is_nan());
+    }
+
+    #[test]
+    fn matches_bruteforce_on_random_data() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        for _ in 0..20 {
+            let pos: Vec<f32> = (0..30).map(|_| (rng.f32() * 8.0).round() / 8.0).collect();
+            let neg: Vec<f32> = (0..40).map(|_| (rng.f32() * 8.0).round() / 8.0).collect();
+            let fast = roc_auc(&pos, &neg);
+            let mut brute = 0.0;
+            for &p in &pos {
+                for &n in &neg {
+                    brute += if p > n {
+                        1.0
+                    } else if p == n {
+                        0.5
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            brute /= (pos.len() * neg.len()) as f64;
+            assert!((fast - brute).abs() < 1e-9, "{fast} vs {brute}");
+        }
+    }
+}

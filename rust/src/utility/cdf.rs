@@ -1,0 +1,209 @@
+//! Utility CDF over recent history (paper §IV-C, Eq. 16/17): maps a target
+//! drop rate to a utility threshold.
+//!
+//! The history H is a sliding window of recent frame utilities (seeded from
+//! the training set at startup). `threshold_for(r)` returns the minimum
+//! utility u_th with CDF(u_th) ≥ r, evaluated exactly over the window via
+//! a sorted snapshot that is rebuilt lazily.
+
+use std::collections::VecDeque;
+
+/// Sliding-window empirical CDF of frame utilities.
+#[derive(Debug, Clone)]
+pub struct UtilityCdf {
+    window: VecDeque<f32>,
+    cap: usize,
+    sorted: Vec<f32>,
+    dirty: bool,
+}
+
+impl UtilityCdf {
+    /// `cap`: history size |H| (frames).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        UtilityCdf { window: VecDeque::with_capacity(cap), cap, sorted: Vec::new(), dirty: false }
+    }
+
+    /// Seed the history from the training set's utilities (paper:
+    /// "initially, the training data set itself can be used as H").
+    pub fn seed(&mut self, utilities: &[f32]) {
+        for &u in utilities {
+            self.add(u);
+        }
+    }
+
+    /// Observe a new frame utility.
+    pub fn add(&mut self, u: f32) {
+        if self.window.len() == self.cap {
+            self.window.pop_front();
+        }
+        self.window.push_back(u);
+        self.dirty = true;
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+
+    fn refresh(&mut self) {
+        if self.dirty {
+            self.sorted.clear();
+            self.sorted.extend(self.window.iter().copied());
+            self.sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.dirty = false;
+        }
+    }
+
+    /// Empirical CDF(u) = |{x ∈ H : x ≤ u}| / |H| (Eq. 16).
+    pub fn cdf(&mut self, u: f32) -> f64 {
+        self.refresh();
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        // partition_point gives the count of elements ≤ u.
+        let count = self.sorted.partition_point(|&x| x <= u);
+        count as f64 / self.sorted.len() as f64
+    }
+
+    /// Minimum utility threshold u_th with CDF(u_th) ≥ r (Eq. 17).
+    ///
+    /// r = 0 maps to threshold 0 (shed nothing: utilities are ≥ 0 and the
+    /// shedder drops only frames with u < threshold). r = 1 maps to just
+    /// above the window maximum (shed everything seen so far).
+    pub fn threshold_for(&mut self, r: f64) -> f32 {
+        let r = r.clamp(0.0, 1.0);
+        if r == 0.0 {
+            return 0.0;
+        }
+        self.refresh();
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let n = self.sorted.len();
+        // Smallest sample index k with (k+1)/n ≥ r.
+        let k = ((r * n as f64).ceil() as usize).max(1) - 1;
+        let k = k.min(n - 1);
+        let u = self.sorted[k];
+        if r >= 1.0 {
+            // Strictly above the max so even max-utility frames drop.
+            f32::from_bits(u.to_bits() + 1)
+        } else {
+            u
+        }
+    }
+
+    /// The fraction of the history that would drop at threshold `th`
+    /// (frames with u < th).
+    pub fn drop_fraction_at(&mut self, th: f32) -> f64 {
+        self.refresh();
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let count = self.sorted.partition_point(|&x| x < th);
+        count as f64 / self.sorted.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    fn uniform_cdf() -> UtilityCdf {
+        let mut c = UtilityCdf::new(1000);
+        for i in 0..1000 {
+            c.add(i as f32 / 1000.0);
+        }
+        c
+    }
+
+    #[test]
+    fn cdf_basics() {
+        let mut c = uniform_cdf();
+        assert!((c.cdf(0.5) - 0.501).abs() < 2e-3);
+        assert_eq!(c.cdf(-1.0), 0.0);
+        assert_eq!(c.cdf(2.0), 1.0);
+    }
+
+    #[test]
+    fn threshold_satisfies_eq17() {
+        let mut c = uniform_cdf();
+        for r in [0.1, 0.25, 0.5, 0.77, 0.9, 0.99] {
+            let th = c.threshold_for(r);
+            assert!(c.cdf(th) >= r, "r={r} th={th} cdf={}", c.cdf(th));
+            // Minimality: the next-smaller sample violates Eq. 17.
+            let eps = 1e-4;
+            assert!(c.cdf(th - eps) < r, "threshold not minimal at r={r}");
+        }
+    }
+
+    #[test]
+    fn boundary_rates() {
+        let mut c = uniform_cdf();
+        assert_eq!(c.threshold_for(0.0), 0.0);
+        let th1 = c.threshold_for(1.0);
+        assert_eq!(c.drop_fraction_at(th1), 1.0, "r=1 must shed all history");
+    }
+
+    #[test]
+    fn sliding_window_evicts() {
+        let mut c = UtilityCdf::new(4);
+        for u in [0.1, 0.2, 0.3, 0.4, 0.9, 0.9, 0.9, 0.9] {
+            c.add(u);
+        }
+        assert_eq!(c.len(), 4);
+        // All old low values evicted: threshold for 50% is now 0.9.
+        assert_eq!(c.threshold_for(0.5), 0.9);
+    }
+
+    #[test]
+    fn property_threshold_contract() {
+        // ∀ random windows + rates: CDF(threshold_for(r)) ≥ r, and the
+        // implied drop fraction never exceeds what ties force.
+        Prop::new("cdf threshold contract").cases(60).run(|g| {
+            let n = g.usize_in(1..400);
+            let mut c = UtilityCdf::new(n.max(1));
+            for _ in 0..n {
+                c.add(g.f64_in(0.0, 1.0) as f32);
+            }
+            let r = g.unit_f64();
+            let th = c.threshold_for(r);
+            assert!(c.cdf(th) >= r - 1e-12, "cdf {} < r {}", c.cdf(th), r);
+            // Dropping strictly-below-threshold never drops the whole
+            // window unless r == 1 (there's always a frame with u == th).
+            if r < 1.0 {
+                assert!(c.drop_fraction_at(th) < 1.0);
+            }
+        });
+    }
+
+    #[test]
+    fn property_threshold_monotone_in_rate() {
+        Prop::new("threshold monotone in r").cases(40).run(|g| {
+            let mut c = UtilityCdf::new(256);
+            for _ in 0..g.usize_in(10..256) {
+                c.add(g.f64_in(0.0, 1.0) as f32);
+            }
+            let (a, b) = (g.unit_f64(), g.unit_f64());
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            assert!(c.threshold_for(lo) <= c.threshold_for(hi));
+        });
+    }
+
+    #[test]
+    fn ties_handled() {
+        let mut c = UtilityCdf::new(10);
+        for _ in 0..10 {
+            c.add(0.5);
+        }
+        // Any r>0 gives threshold 0.5; dropping u<0.5 drops nothing —
+        // observed drop < target is expected with degenerate history
+        // (paper §IV-C: observed rate "might not equal" target).
+        assert_eq!(c.threshold_for(0.3), 0.5);
+        assert_eq!(c.drop_fraction_at(0.5), 0.0);
+    }
+}

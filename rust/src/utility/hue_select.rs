@@ -1,0 +1,246 @@
+//! Automatic hue-range selection (paper §VI "Automatic selection of Hue
+//! ranges for a query"): instead of the developer providing hue ranges,
+//! derive them from the training data by dominant-color analysis of
+//! target-object bounding boxes.
+//!
+//! Method: histogram the hue of foreground pixels inside target bboxes
+//! (vivid pixels only, mirroring what the utility function will key on),
+//! subtract the background-traffic hue distribution, and return the top
+//! contiguous hue intervals — with wrap-around handling so red maps onto
+//! [0,10) ∪ [170,180) style pairs.
+
+use crate::color::hsv::rgb_to_hsv;
+use crate::color::{HueRanges, HUE_MAX};
+use crate::video::{Video, VisibleObject};
+
+/// Hue histogram resolution (degrees-of-half-circle per bin).
+const BINS: usize = 36; // 5 hue-units per bin
+
+/// Accumulates target vs non-target hue mass.
+#[derive(Debug, Clone)]
+pub struct HueSelector {
+    target: [f64; BINS],
+    other: [f64; BINS],
+}
+
+impl Default for HueSelector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HueSelector {
+    pub fn new() -> Self {
+        HueSelector { target: [0.0; BINS], other: [0.0; BINS] }
+    }
+
+    /// Observe one frame: pixels inside `targets` bboxes count as target
+    /// mass; remaining foreground pixels as other mass.
+    pub fn observe(
+        &mut self,
+        rgb: &[f32],
+        background: &[f32],
+        width: usize,
+        height: usize,
+        fg_threshold: f32,
+        targets: &[VisibleObject],
+    ) {
+        for y in 0..height {
+            for x in 0..width {
+                let p = y * width + x;
+                let d = (rgb[3 * p] - background[3 * p])
+                    .abs()
+                    .max((rgb[3 * p + 1] - background[3 * p + 1]).abs())
+                    .max((rgb[3 * p + 2] - background[3 * p + 2]).abs());
+                if d <= fg_threshold {
+                    continue;
+                }
+                let (h, s, v) = rgb_to_hsv(rgb[3 * p], rgb[3 * p + 1], rgb[3 * p + 2]);
+                // Key on vivid pixels: dominant *paint*, not shadows/glass.
+                if s < 96.0 || v < 64.0 {
+                    continue;
+                }
+                let bin = ((h / HUE_MAX * BINS as f32) as usize).min(BINS - 1);
+                let inside = targets.iter().any(|o| {
+                    let (x0, y0, x1, y1) = o.bbox;
+                    x >= x0 && x < x1 && y >= y0 && y < y1
+                });
+                if inside {
+                    self.target[bin] += 1.0;
+                } else {
+                    self.other[bin] += 1.0;
+                }
+            }
+        }
+    }
+
+    /// Discriminative score per bin: target mass minus other mass (both
+    /// normalized), clamped at zero.
+    fn scores(&self) -> [f64; BINS] {
+        let tsum: f64 = self.target.iter().sum::<f64>().max(1.0);
+        let osum: f64 = self.other.iter().sum::<f64>().max(1.0);
+        let mut s = [0.0; BINS];
+        for i in 0..BINS {
+            s[i] = (self.target[i] / tsum - self.other[i] / osum).max(0.0);
+        }
+        s
+    }
+
+    /// Select hue ranges covering at least `coverage` of the target mass
+    /// (default use: 0.8). Returns up to two contiguous intervals
+    /// (wrap-around treated as contiguous across 180→0).
+    pub fn select(&self, coverage: f64) -> Option<HueRanges> {
+        let scores = self.scores();
+        let total: f64 = scores.iter().sum();
+        if total <= 0.0 {
+            return None;
+        }
+        // Greedily take bins by score until coverage reached.
+        let mut order: Vec<usize> = (0..BINS).collect();
+        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        let mut picked = [false; BINS];
+        let mut acc = 0.0;
+        for &b in &order {
+            if acc / total >= coverage {
+                break;
+            }
+            if scores[b] <= 0.0 {
+                break;
+            }
+            picked[b] = true;
+            acc += scores[b];
+        }
+        // Merge picked bins into circular runs.
+        let mut runs: Vec<(usize, usize)> = Vec::new(); // [start, end) in bins
+        let mut i = 0;
+        while i < BINS {
+            if picked[i] && (i == 0 || !picked[i - 1]) {
+                let mut j = i;
+                while j < BINS && picked[j] {
+                    j += 1;
+                }
+                runs.push((i, j));
+                i = j;
+            } else {
+                i += 1;
+            }
+        }
+        if runs.is_empty() {
+            return None;
+        }
+        // Wrap-around: a run ending at BINS and one starting at 0 join.
+        let wraps = runs.len() >= 2
+            && runs.first().unwrap().0 == 0
+            && runs.last().unwrap().1 == BINS;
+        // Keep the two highest-mass runs (a HueRanges holds two intervals).
+        let mass =
+            |r: &(usize, usize)| -> f64 { scores[r.0..r.1].iter().sum() };
+        runs.sort_by(|a, b| mass(b).partial_cmp(&mass(a)).unwrap());
+        runs.truncate(2);
+        runs.sort();
+        let w = HUE_MAX / BINS as f32;
+        let to_range = |r: &(usize, usize)| (r.0 as f32 * w, r.1 as f32 * w);
+        Some(match runs.len() {
+            1 => {
+                let (lo, hi) = to_range(&runs[0]);
+                HueRanges::single(lo, hi)
+            }
+            _ => {
+                let (lo1, hi1) = to_range(&runs[0]);
+                let (lo2, hi2) = to_range(&runs[1]);
+                let _ = wraps; // both intervals returned either way
+                HueRanges::pair(lo1, hi1, lo2, hi2)
+            }
+        })
+    }
+
+    /// Convenience: run over a set of labeled videos for target paints of
+    /// a color the caller knows only by ground truth (object-level).
+    pub fn from_videos<F: Fn(&VisibleObject) -> bool>(
+        videos: &[Video],
+        is_target: F,
+        fg_threshold: f32,
+    ) -> Self {
+        let mut sel = HueSelector::new();
+        for v in videos {
+            for t in 0..v.len() {
+                let f = v.render(t);
+                let targets: Vec<VisibleObject> = f
+                    .truth
+                    .iter()
+                    .filter(|o| is_target(o))
+                    .cloned()
+                    .collect();
+                sel.observe(
+                    &f.rgb,
+                    v.background(),
+                    f.width,
+                    f.height,
+                    fg_threshold,
+                    &targets,
+                );
+            }
+        }
+        sel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+    use crate::video::{Paint, VideoConfig};
+
+    fn videos_with(paint: Paint) -> Vec<Video> {
+        let mut vc = VideoConfig::new(0x4E1, 3, 0, 120);
+        vc.traffic.vehicle_rate = 0.6;
+        vc.traffic.paint_weights = vec![
+            (paint, 0.4),
+            (Paint::Gray, 0.3),
+            (Paint::DullRed, 0.15),
+            (Paint::Silver, 0.15),
+        ];
+        vec![Video::new(vc)]
+    }
+
+    #[test]
+    fn recovers_red_ranges_from_red_targets() {
+        let videos = videos_with(Paint::VividRed);
+        let sel = HueSelector::from_videos(
+            &videos,
+            |o| o.is_vehicle && o.paint == Paint::VividRed,
+            25.0,
+        );
+        let ranges = sel.select(0.8).expect("ranges found");
+        // The vivid red paint's hue (~0.9 half-degrees) must be covered.
+        let (h, _, _) = {
+            let [r, g, b] = Paint::VividRed.rgb();
+            crate::color::hsv::rgb_to_hsv(r, g, b)
+        };
+        assert!(ranges.contains(h), "selected {ranges:?} misses target hue {h}");
+        // And it must not span the whole hue circle.
+        assert!(ranges.width() < 60.0, "ranges too wide: {ranges:?}");
+    }
+
+    #[test]
+    fn recovers_yellow_ranges() {
+        let videos = videos_with(Paint::VividYellow);
+        let sel = HueSelector::from_videos(
+            &videos,
+            |o| o.is_vehicle && o.paint == Paint::VividYellow,
+            25.0,
+        );
+        let ranges = sel.select(0.8).expect("ranges found");
+        let yellow = NamedColor::Yellow.ranges();
+        // Selected range must overlap the canonical yellow range.
+        let mid = (yellow.lo1 + yellow.hi1) / 2.0;
+        assert!(ranges.contains(mid), "selected {ranges:?} misses yellow {mid}");
+    }
+
+    #[test]
+    fn no_targets_yields_none() {
+        let videos = videos_with(Paint::Gray);
+        let sel = HueSelector::from_videos(&videos, |_| false, 25.0);
+        assert!(sel.select(0.8).is_none());
+    }
+}

@@ -1,0 +1,292 @@
+//! The trained utility model: per-color M matrices (paper Eq. 12/13),
+//! normalization, composition (Eq. 15), and (de)serialization.
+
+use crate::color::{HueRanges, NamedColor};
+use crate::features::{FrameFeatures, UtilityValues, HIST};
+use crate::util::json::{self, Value};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// How per-color utilities compose into the query utility (paper §IV-B.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Combine {
+    /// Single-color query.
+    Single,
+    /// Frames containing at least one target color: max of utilities.
+    Or,
+    /// Frames containing all target colors: min of utilities.
+    And,
+}
+
+impl Combine {
+    pub fn name(self) -> &'static str {
+        match self {
+            Combine::Single => "single",
+            Combine::Or => "or",
+            Combine::And => "and",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "single" => Some(Combine::Single),
+            "or" => Some(Combine::Or),
+            "and" => Some(Combine::And),
+            _ => None,
+        }
+    }
+}
+
+/// Per-color trained parameters.
+#[derive(Debug, Clone)]
+pub struct ColorModel {
+    pub color: NamedColor,
+    pub ranges: HueRanges,
+    /// M_{C,+ve}: mean PF over positive training frames (Eq. 12).
+    pub m_pos: [f32; HIST],
+    /// M_{C,-ve}: mean PF over negative training frames (Eq. 13; used for
+    /// Fig. 6 and diagnostics, not for scoring).
+    pub m_neg: [f32; HIST],
+    /// Normalization constant: max raw utility over the training set, so
+    /// normalized utilities peak at 1.0 (enables Eq. 15 composition).
+    pub norm: f32,
+}
+
+impl ColorModel {
+    /// Raw (unnormalized) utility U_C(f) = Σ M⁺ ⊙ PF (Eq. 14).
+    pub fn utility_raw(&self, pf: &[f32; HIST]) -> f32 {
+        self.m_pos.iter().zip(pf.iter()).map(|(m, p)| m * p).sum()
+    }
+
+    /// Normalized utility Ū_C(f).
+    pub fn utility(&self, pf: &[f32; HIST]) -> f32 {
+        if self.norm > 0.0 {
+            self.utility_raw(pf) / self.norm
+        } else {
+            0.0
+        }
+    }
+
+    /// M⁺ / norm — the matrix fed to the AOT artifacts so that the
+    /// artifact's output is already the normalized utility.
+    pub fn m_normalized(&self) -> [f32; HIST] {
+        let mut m = self.m_pos;
+        if self.norm > 0.0 {
+            for x in m.iter_mut() {
+                *x /= self.norm;
+            }
+        }
+        m
+    }
+}
+
+/// A trained utility model for a (possibly composite) query.
+#[derive(Debug, Clone)]
+pub struct UtilityModel {
+    pub colors: Vec<ColorModel>,
+    pub combine: Combine,
+    /// Background-subtraction threshold the features were trained with.
+    pub fg_threshold: f32,
+}
+
+impl UtilityModel {
+    /// Hue ranges in artifact layout ([K][4]).
+    pub fn ranges(&self) -> Vec<HueRanges> {
+        self.colors.iter().map(|c| c.ranges).collect()
+    }
+
+    /// Compute utilities from features (native path; the artifact path
+    /// computes the same values on-device).
+    pub fn utility(&self, f: &FrameFeatures) -> UtilityValues {
+        assert_eq!(f.num_colors(), self.colors.len(), "feature/color arity");
+        let per_color: Vec<f32> = self
+            .colors
+            .iter()
+            .zip(&f.pf)
+            .map(|(c, pf)| c.utility(pf))
+            .collect();
+        let combined = match self.combine {
+            Combine::Single => per_color[0],
+            Combine::Or => per_color.iter().cloned().fold(f32::MIN, f32::max),
+            Combine::And => per_color.iter().cloned().fold(f32::MAX, f32::min),
+        };
+        UtilityValues { per_color, combined }
+    }
+
+    /// Which AOT artifact serves this model.
+    pub fn artifact_name(&self) -> &'static str {
+        match self.colors.len() {
+            1 => "shedder_k1",
+            2 => "shedder_k2",
+            n => panic!("no artifact compiled for {n}-color queries"),
+        }
+    }
+
+    // ---- persistence ------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let mut colors = Vec::new();
+        for c in &self.colors {
+            let mut o = Value::object();
+            o.set("color", Value::String(c.color.name().to_string()))
+                .set("ranges", Value::from_f32_slice(&c.ranges.to_array()))
+                .set("m_pos", Value::from_f32_slice(&c.m_pos))
+                .set("m_neg", Value::from_f32_slice(&c.m_neg))
+                .set("norm", Value::Number(c.norm as f64));
+            colors.push(o);
+        }
+        let mut v = Value::object();
+        v.set("combine", Value::String(self.combine.name().to_string()))
+            .set("fg_threshold", Value::Number(self.fg_threshold as f64))
+            .set("colors", Value::Array(colors));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let combine = Combine::parse(v.get("combine")?.as_str()?)
+            .ok_or_else(|| anyhow::anyhow!("bad combine"))?;
+        let fg_threshold = v.get("fg_threshold")?.as_f64()? as f32;
+        let mut colors = Vec::new();
+        for c in v.get("colors")?.as_array()? {
+            let name = c.get("color")?.as_str()?;
+            let color = NamedColor::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown color '{name}'"))?;
+            let r = c.get("ranges")?.to_f32_vec()?;
+            if r.len() != 4 {
+                bail!("ranges must have 4 entries");
+            }
+            let to_arr = |v: Vec<f32>| -> Result<[f32; HIST]> {
+                if v.len() != HIST {
+                    bail!("matrix must have {HIST} entries, got {}", v.len());
+                }
+                let mut a = [0.0; HIST];
+                a.copy_from_slice(&v);
+                Ok(a)
+            };
+            colors.push(ColorModel {
+                color,
+                ranges: HueRanges::pair(r[0], r[1], r[2], r[3]),
+                m_pos: to_arr(c.get("m_pos")?.to_f32_vec()?)?,
+                m_neg: to_arr(c.get("m_neg")?.to_f32_vec()?)?,
+                norm: c.get("norm")?.as_f64()? as f32,
+            });
+        }
+        if colors.is_empty() {
+            bail!("model has no colors");
+        }
+        if combine == Combine::Single && colors.len() != 1 {
+            bail!("single combine with {} colors", colors.len());
+        }
+        Ok(UtilityModel { colors, combine, fg_threshold })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        json::write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&json::read_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model(combine: Combine, k: usize) -> UtilityModel {
+        let mut colors = Vec::new();
+        for i in 0..k {
+            let mut m_pos = [0.0; HIST];
+            m_pos[60 + i] = 0.8; // high-sat bins correlate with positives
+            colors.push(ColorModel {
+                color: if i == 0 { NamedColor::Red } else { NamedColor::Yellow },
+                ranges: if i == 0 {
+                    NamedColor::Red.ranges()
+                } else {
+                    NamedColor::Yellow.ranges()
+                },
+                m_pos,
+                m_neg: [0.01; HIST],
+                norm: 0.8,
+            });
+        }
+        UtilityModel { colors, combine, fg_threshold: 25.0 }
+    }
+
+    fn features(hot: &[usize]) -> FrameFeatures {
+        let mut pf = Vec::new();
+        for &h in hot {
+            let mut m = [0.0; HIST];
+            m[h] = 1.0;
+            pf.push(m);
+        }
+        FrameFeatures { hf: vec![0.5; hot.len()], pf, fg_frac: 0.1 }
+    }
+
+    #[test]
+    fn single_color_utility_normalized() {
+        let m = toy_model(Combine::Single, 1);
+        let u = m.utility(&features(&[60]));
+        assert!((u.combined - 1.0).abs() < 1e-6); // 0.8/0.8
+        let u0 = m.utility(&features(&[10]));
+        assert_eq!(u0.combined, 0.0);
+    }
+
+    #[test]
+    fn or_takes_max_and_takes_min() {
+        let or = toy_model(Combine::Or, 2);
+        // color0 hits its hot bin (u=1), color1 misses (u=0).
+        let u = or.utility(&features(&[60, 10]));
+        assert!((u.combined - 1.0).abs() < 1e-6);
+        let and = toy_model(Combine::And, 2);
+        let u = and.utility(&features(&[60, 10]));
+        assert_eq!(u.combined, 0.0);
+        let u = and.utility(&features(&[60, 61]));
+        assert!((u.combined - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn artifact_dispatch() {
+        assert_eq!(toy_model(Combine::Single, 1).artifact_name(), "shedder_k1");
+        assert_eq!(toy_model(Combine::Or, 2).artifact_name(), "shedder_k2");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = toy_model(Combine::Or, 2);
+        let v = m.to_json();
+        let back = UtilityModel::from_json(&v).unwrap();
+        assert_eq!(back.combine, Combine::Or);
+        assert_eq!(back.colors.len(), 2);
+        assert_eq!(back.colors[0].m_pos, m.colors[0].m_pos);
+        assert_eq!(back.colors[0].norm, m.colors[0].norm);
+        assert_eq!(back.colors[1].ranges, m.colors[1].ranges);
+    }
+
+    #[test]
+    fn m_normalized_scales() {
+        let m = toy_model(Combine::Single, 1);
+        let mn = m.colors[0].m_normalized();
+        assert!((mn[60] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("uals_model_test");
+        let path = dir.join("model.json");
+        let m = toy_model(Combine::Single, 1);
+        m.save(&path).unwrap();
+        let back = UtilityModel::load(&path).unwrap();
+        assert_eq!(back.colors[0].m_pos, m.colors[0].m_pos);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_json_validation() {
+        assert!(UtilityModel::from_json(&crate::util::json::parse("{}").unwrap()).is_err());
+        let m = toy_model(Combine::Single, 1);
+        let mut v = m.to_json();
+        v.set("combine", Value::String("nope".into()));
+        assert!(UtilityModel::from_json(&v).is_err());
+    }
+}

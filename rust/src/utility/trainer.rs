@@ -1,0 +1,257 @@
+//! Training workflow (paper §IV-B, Fig. 7): from a labeled training set to
+//! a [`UtilityModel`].
+//!
+//! Steps:
+//!   1. extract PF matrices for every training frame (native oracle path —
+//!      bit-equal to the artifacts, and training is offline anyway);
+//!   2. average PF over positive / negative frames per color (Eq. 12/13);
+//!   3. set the per-color normalization to the max raw utility seen in
+//!      training, so normalized utilities peak at 1.0 (enables Eq. 15).
+
+use super::model::{ColorModel, Combine, UtilityModel};
+use crate::color::NamedColor;
+use crate::features::{reference, FrameFeatures, HIST};
+use crate::video::dataset::MIN_TARGET_PX;
+use crate::video::Video;
+
+/// A labeled training example: features + per-color positivity.
+#[derive(Debug, Clone)]
+pub struct LabeledFeatures {
+    pub features: FrameFeatures,
+    /// `labels[c]` = frame contains a target of color c.
+    pub labels: Vec<bool>,
+}
+
+/// Accumulates Eq. 12/13 averages incrementally (streaming-friendly).
+#[derive(Debug, Clone)]
+pub struct TrainerAccumulator {
+    colors: Vec<NamedColor>,
+    sum_pos: Vec<[f64; HIST]>,
+    sum_neg: Vec<[f64; HIST]>,
+    n_pos: Vec<u64>,
+    n_neg: Vec<u64>,
+}
+
+impl TrainerAccumulator {
+    pub fn new(colors: &[NamedColor]) -> Self {
+        let k = colors.len();
+        TrainerAccumulator {
+            colors: colors.to_vec(),
+            sum_pos: vec![[0.0; HIST]; k],
+            sum_neg: vec![[0.0; HIST]; k],
+            n_pos: vec![0; k],
+            n_neg: vec![0; k],
+        }
+    }
+
+    pub fn add(&mut self, ex: &LabeledFeatures) {
+        assert_eq!(ex.labels.len(), self.colors.len());
+        for c in 0..self.colors.len() {
+            let (sum, n) = if ex.labels[c] {
+                (&mut self.sum_pos[c], &mut self.n_pos[c])
+            } else {
+                (&mut self.sum_neg[c], &mut self.n_neg[c])
+            };
+            for (s, p) in sum.iter_mut().zip(&ex.features.pf[c]) {
+                *s += *p as f64;
+            }
+            *n += 1;
+        }
+    }
+
+    pub fn positives(&self, c: usize) -> u64 {
+        self.n_pos[c]
+    }
+
+    pub fn negatives(&self, c: usize) -> u64 {
+        self.n_neg[c]
+    }
+
+    /// Finalize into a model; `examples` is re-scanned to compute the
+    /// normalization constant (max raw utility over training frames).
+    pub fn finalize(
+        &self,
+        combine: Combine,
+        fg_threshold: f32,
+        examples: &[LabeledFeatures],
+    ) -> UtilityModel {
+        let k = self.colors.len();
+        let mut colors = Vec::with_capacity(k);
+        for c in 0..k {
+            let avg = |sum: &[f64; HIST], n: u64| -> [f32; HIST] {
+                let mut m = [0.0f32; HIST];
+                if n > 0 {
+                    for (mi, s) in m.iter_mut().zip(sum.iter()) {
+                        *mi = (*s / n as f64) as f32;
+                    }
+                }
+                m
+            };
+            let m_pos = avg(&self.sum_pos[c], self.n_pos[c]);
+            let m_neg = avg(&self.sum_neg[c], self.n_neg[c]);
+            let mut cm = ColorModel {
+                color: self.colors[c],
+                ranges: self.colors[c].ranges(),
+                m_pos,
+                m_neg,
+                norm: 1.0,
+            };
+            // Normalization: max raw utility across ALL training frames
+            // (positive or negative — the CDF must cover both).
+            let mut max_u = 0.0f32;
+            for ex in examples {
+                max_u = max_u.max(cm.utility_raw(&ex.features.pf[c]));
+            }
+            cm.norm = if max_u > 0.0 { max_u } else { 1.0 };
+            colors.push(cm);
+        }
+        UtilityModel { colors, combine, fg_threshold }
+    }
+}
+
+/// Extract labeled features from a set of videos (the offline training
+/// pass). Labels use ground truth with the standard min-blob gate.
+pub fn extract_labeled(
+    videos: &[Video],
+    indices: &[usize],
+    colors: &[NamedColor],
+    fg_threshold: f32,
+) -> Vec<LabeledFeatures> {
+    let ranges: Vec<_> = colors.iter().map(|c| c.ranges()).collect();
+    let mut out = Vec::new();
+    for &vi in indices {
+        let video = &videos[vi];
+        let bg = video.background();
+        for t in 0..video.len() {
+            let frame = video.render(t);
+            let features = reference::compute_features(&frame.rgb, bg, &ranges, fg_threshold);
+            let labels = colors
+                .iter()
+                .map(|&c| frame.is_positive(c, MIN_TARGET_PX))
+                .collect();
+            out.push(LabeledFeatures { features, labels });
+        }
+    }
+    out
+}
+
+/// End-to-end training entry point (paper Fig. 7 "training stage").
+pub fn train(
+    videos: &[Video],
+    train_indices: &[usize],
+    colors: &[NamedColor],
+    combine: Combine,
+) -> UtilityModel {
+    let fg_threshold = reference::FG_THRESHOLD;
+    let examples = extract_labeled(videos, train_indices, colors, fg_threshold);
+    let mut acc = TrainerAccumulator::new(colors);
+    for ex in &examples {
+        acc.add(ex);
+    }
+    acc.finalize(combine, fg_threshold, &examples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::video::{DatasetConfig, Paint, VideoConfig};
+
+    fn target_rich_videos() -> Vec<Video> {
+        // Two videos with plenty of red targets + dull-red confounders.
+        (0..2)
+            .map(|i| {
+                let mut cfg = VideoConfig::new(3, 100 + i, i as u32, 250);
+                cfg.traffic.vehicle_rate = 0.7;
+                cfg.traffic.paint_weights = vec![
+                    (Paint::VividRed, 0.3),
+                    (Paint::DullRed, 0.2),
+                    (Paint::Gray, 0.3),
+                    (Paint::Silver, 0.2),
+                ];
+                Video::new(cfg)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn trained_model_separates_positive_and_negative() {
+        let videos = target_rich_videos();
+        let colors = [NamedColor::Red];
+        let model = train(&videos, &[0], &colors, Combine::Single);
+        assert_eq!(model.colors.len(), 1);
+        assert!(model.colors[0].norm > 0.0);
+
+        // Score the *held-out* video.
+        let test = &videos[1];
+        let ranges = model.ranges();
+        let mut pos = Vec::new();
+        let mut neg = Vec::new();
+        for t in 0..test.len() {
+            let f = test.render(t);
+            let feats = reference::compute_features(
+                &f.rgb,
+                test.background(),
+                &ranges,
+                model.fg_threshold,
+            );
+            let u = model.utility(&feats).combined;
+            if f.is_positive(NamedColor::Red, MIN_TARGET_PX) {
+                pos.push(u);
+            } else {
+                neg.push(u);
+            }
+        }
+        assert!(pos.len() > 10, "not enough positives: {}", pos.len());
+        assert!(neg.len() > 10, "not enough negatives: {}", neg.len());
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        let (mp, mn) = (mean(&pos), mean(&neg));
+        assert!(
+            mp > 2.0 * mn,
+            "positives not separated: pos {mp:.3} vs neg {mn:.3}"
+        );
+    }
+
+    #[test]
+    fn m_pos_concentrates_in_high_sat_bins() {
+        // Paper Fig. 6: "bins with high saturation are better
+        // differentiators of positive frames".
+        let videos = target_rich_videos();
+        let model = train(&videos, &[0, 1], &[NamedColor::Red], Combine::Single);
+        let m = &model.colors[0].m_pos;
+        let high_sat: f32 = (4..8).flat_map(|s| (0..8).map(move |v| m[s * 8 + v])).sum();
+        let low_sat: f32 = (0..4).flat_map(|s| (0..8).map(move |v| m[s * 8 + v])).sum();
+        assert!(
+            high_sat > low_sat,
+            "M+ should weight high-sat bins: hi {high_sat} lo {low_sat}"
+        );
+    }
+
+    #[test]
+    fn accumulator_counts() {
+        let mut acc = TrainerAccumulator::new(&[NamedColor::Red]);
+        let mk = |label: bool| LabeledFeatures {
+            features: FrameFeatures {
+                hf: vec![0.1],
+                pf: vec![[1.0 / HIST as f32; HIST]],
+                fg_frac: 0.2,
+            },
+            labels: vec![label],
+        };
+        acc.add(&mk(true));
+        acc.add(&mk(true));
+        acc.add(&mk(false));
+        assert_eq!(acc.positives(0), 2);
+        assert_eq!(acc.negatives(0), 1);
+        let model = acc.finalize(Combine::Single, 25.0, &[mk(true)]);
+        // Uniform PF everywhere → M⁺ uniform → utility = 1 after norm.
+        let u = model.utility(&mk(true).features).combined;
+        assert!((u - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn dataset_integration_small() {
+        let videos = crate::video::build_dataset(&DatasetConfig::tiny());
+        let model = train(&videos, &[0, 1, 2], &[NamedColor::Red], Combine::Single);
+        assert!(model.colors[0].norm > 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Frame and ground-truth types produced by the synthetic video substrate.
+
+use crate::color::NamedColor;
+
+/// Paint finishes for dynamic objects. The crucial statistical structure
+/// (paper Fig. 5a/6): *vivid* paints are query targets with high saturation;
+/// *dull* paints share the same hue ranges but low saturation, so Hue
+/// Fraction alone cannot separate them — only the saturation/value bins can.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Paint {
+    VividRed,
+    VividYellow,
+    VividGreen,
+    VividBlue,
+    White,
+    Gray,
+    Black,
+    DullRed,    // maroon/brown-red: red hue, low saturation
+    Brown,      // red-orange hue, low-mid saturation
+    DullYellow, // khaki: yellow hue, low saturation
+    Silver,
+}
+
+impl Paint {
+    /// Body RGB of the paint.
+    pub fn rgb(self) -> [f32; 3] {
+        match self {
+            Paint::VividRed => [208.0, 22.0, 28.0],
+            Paint::VividYellow => [228.0, 200.0, 24.0],
+            Paint::VividGreen => [30.0, 185.0, 45.0],
+            Paint::VividBlue => [28.0, 58.0, 198.0],
+            Paint::White => [232.0, 232.0, 230.0],
+            Paint::Gray => [120.0, 122.0, 124.0],
+            Paint::Black => [24.0, 24.0, 26.0],
+            Paint::DullRed => [122.0, 72.0, 70.0],
+            Paint::Brown => [130.0, 92.0, 64.0],
+            Paint::DullYellow => [150.0, 138.0, 96.0],
+            Paint::Silver => [180.0, 182.0, 186.0],
+        }
+    }
+
+    /// Does this paint make the object a *target* for a query color?
+    /// Only vivid paints count: the paper's queries are for (vividly)
+    /// colored target objects; dull same-hue paints are the confounders.
+    pub fn is_target_of(self, color: NamedColor) -> bool {
+        matches!(
+            (self, color),
+            (Paint::VividRed, NamedColor::Red)
+                | (Paint::VividYellow, NamedColor::Yellow)
+                | (Paint::VividGreen, NamedColor::Green)
+                | (Paint::VividBlue, NamedColor::Blue)
+                | (Paint::White, NamedColor::White)
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Paint::VividRed => "vivid_red",
+            Paint::VividYellow => "vivid_yellow",
+            Paint::VividGreen => "vivid_green",
+            Paint::VividBlue => "vivid_blue",
+            Paint::White => "white",
+            Paint::Gray => "gray",
+            Paint::Black => "black",
+            Paint::DullRed => "dull_red",
+            Paint::Brown => "brown",
+            Paint::DullYellow => "dull_yellow",
+            Paint::Silver => "silver",
+        }
+    }
+}
+
+/// A dynamic object visible in a specific frame (ground truth).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VisibleObject {
+    /// Stable identity across frames (camera-unique).
+    pub object_id: u64,
+    pub paint: Paint,
+    /// Bounding box in pixels: (x0, y0, x1, y1), half-open.
+    pub bbox: (usize, usize, usize, usize),
+    /// Number of pixels of the object actually on screen.
+    pub visible_px: usize,
+    /// True for vehicles, false for pedestrians.
+    pub is_vehicle: bool,
+}
+
+impl VisibleObject {
+    /// Blob-size gate used by ground-truth labeling: objects smaller than
+    /// the query's min blob size don't count as targets (paper's filter
+    /// stage drops frames without a sufficiently large blob).
+    pub fn counts_for(&self, color: NamedColor, min_px: usize) -> bool {
+        self.is_vehicle && self.paint.is_target_of(color) && self.visible_px >= min_px
+    }
+}
+
+/// One rendered video frame plus ground truth.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    /// Camera (video) this frame belongs to.
+    pub camera: u32,
+    /// Frame index within the video.
+    pub index: usize,
+    /// Capture timestamp in milliseconds (index / fps).
+    pub ts_ms: f64,
+    /// Row-major RGB, H*W*3 f32 in [0, 255].
+    pub rgb: Vec<f32>,
+    pub height: usize,
+    pub width: usize,
+    /// Ground-truth visible objects (used for labels/QoR, never by the
+    /// shedder itself).
+    pub truth: Vec<VisibleObject>,
+}
+
+impl Frame {
+    /// Does this frame contain a target object of `color`? (label `l`)
+    pub fn is_positive(&self, color: NamedColor, min_px: usize) -> bool {
+        self.truth.iter().any(|o| o.counts_for(color, min_px))
+    }
+
+    /// IDs of target objects of `color` present in this frame.
+    pub fn target_ids(&self, color: NamedColor, min_px: usize) -> Vec<u64> {
+        self.truth
+            .iter()
+            .filter(|o| o.counts_for(color, min_px))
+            .map(|o| o.object_id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vivid_paints_match_their_query_color() {
+        assert!(Paint::VividRed.is_target_of(NamedColor::Red));
+        assert!(!Paint::DullRed.is_target_of(NamedColor::Red));
+        assert!(!Paint::VividRed.is_target_of(NamedColor::Yellow));
+        assert!(Paint::VividYellow.is_target_of(NamedColor::Yellow));
+    }
+
+    #[test]
+    fn dull_paints_share_hue_with_targets() {
+        // The confounder property: DullRed must fall inside the *red hue
+        // ranges* (so HF can't separate it) but with low saturation (so the
+        // sat/val bins can).
+        use crate::color::hsv::rgb_to_hsv;
+        let [r, g, b] = Paint::DullRed.rgb();
+        let (h, s, _) = rgb_to_hsv(r, g, b);
+        assert!(NamedColor::Red.ranges().contains(h), "hue {h}");
+        let [r2, g2, b2] = Paint::VividRed.rgb();
+        let (_, s2, _) = rgb_to_hsv(r2, g2, b2);
+        assert!(s < 0.6 * s2, "dull sat {s} vs vivid {s2}");
+    }
+
+    #[test]
+    fn min_blob_gate() {
+        let o = VisibleObject {
+            object_id: 1,
+            paint: Paint::VividRed,
+            bbox: (0, 0, 5, 4),
+            visible_px: 20,
+            is_vehicle: true,
+        };
+        assert!(o.counts_for(NamedColor::Red, 10));
+        assert!(!o.counts_for(NamedColor::Red, 21));
+        assert!(!o.counts_for(NamedColor::Yellow, 10));
+    }
+
+    #[test]
+    fn frame_labels() {
+        let mk = |paint, px| VisibleObject {
+            object_id: 7,
+            paint,
+            bbox: (0, 0, 1, 1),
+            visible_px: px,
+            is_vehicle: true,
+        };
+        let f = Frame {
+            camera: 0,
+            index: 0,
+            ts_ms: 0.0,
+            rgb: vec![],
+            height: 0,
+            width: 0,
+            truth: vec![mk(Paint::DullRed, 100), mk(Paint::VividRed, 100)],
+        };
+        assert!(f.is_positive(NamedColor::Red, 50));
+        assert_eq!(f.target_ids(NamedColor::Red, 50), vec![7]);
+        assert!(!f.is_positive(NamedColor::Blue, 50));
+    }
+}

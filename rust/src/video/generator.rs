@@ -1,0 +1,245 @@
+//! On-demand video rendering: `Video` = scene + trajectories + noise model.
+//!
+//! Frames are rendered lazily (`render(t)`) and deterministically, so
+//! multi-hour experiment sweeps never materialize full videos in memory.
+
+use super::frame::Frame;
+use super::objects::{spawn_traffic, TrafficConfig, Trajectory};
+use super::scene::Scene;
+use crate::util::rng::{splitmix64, Rng};
+
+/// Configuration of one synthetic camera video.
+#[derive(Debug, Clone)]
+pub struct VideoConfig {
+    /// Scene seed (VisualRoad's camera-placement seed analogue).
+    pub scene_seed: u64,
+    /// Traffic seed — different videos from the same scene seed share the
+    /// camera geometry but see different traffic (paper: "3 or 4 videos
+    /// from each seed value").
+    pub traffic_seed: u64,
+    pub camera_id: u32,
+    pub frames: usize,
+    pub fps: f64,
+    pub width: usize,
+    pub height: usize,
+    pub traffic: TrafficConfig,
+    /// Per-frame global brightness jitter amplitude (lighting flicker).
+    pub brightness_jitter: f32,
+    /// Per-pixel uniform sensor-noise amplitude (±).
+    pub pixel_noise: f32,
+}
+
+impl VideoConfig {
+    pub fn new(scene_seed: u64, traffic_seed: u64, camera_id: u32, frames: usize) -> Self {
+        VideoConfig {
+            scene_seed,
+            traffic_seed,
+            camera_id,
+            frames,
+            fps: 10.0,
+            width: 96,
+            height: 96,
+            traffic: TrafficConfig::default_mix(),
+            brightness_jitter: 2.0,
+            pixel_noise: 2.5,
+        }
+    }
+}
+
+/// A synthetic camera video: render any frame on demand.
+pub struct Video {
+    pub config: VideoConfig,
+    pub scene: Scene,
+    trajectories: Vec<Trajectory>,
+}
+
+impl Video {
+    pub fn new(config: VideoConfig) -> Self {
+        let scene = Scene::generate(config.scene_seed, config.width, config.height);
+        let mut rng = Rng::new(config.traffic_seed ^ xtraffic_u64());
+        let trajectories =
+            spawn_traffic(&scene, &config.traffic, config.frames, config.fps, &mut rng);
+        Video { config, scene, trajectories }
+    }
+
+    pub fn len(&self) -> usize {
+        self.config.frames
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.config.frames == 0
+    }
+
+    pub fn camera_id(&self) -> u32 {
+        self.config.camera_id
+    }
+
+    /// The camera's background model (clean scene, no noise) as H*W*3.
+    pub fn background(&self) -> &[f32] {
+        self.scene.background()
+    }
+
+    pub fn trajectories(&self) -> &[Trajectory] {
+        &self.trajectories
+    }
+
+    /// Render frame `t` (with ground truth).
+    pub fn render(&self, t: usize) -> Frame {
+        assert!(t < self.config.frames, "frame {t} out of range");
+        let (w, h) = (self.config.width, self.config.height);
+        let mut rgb = self.scene.background().to_vec();
+        let tf = t as f64;
+
+        // Draw dynamic objects (pedestrians first: vehicles occlude them).
+        let mut truth = Vec::new();
+        for tr in &self.trajectories {
+            if let Some(vis) = tr.visible_at(tf, w, h) {
+                tr.draw(&mut rgb, tf, w, h);
+                truth.push(vis);
+            }
+        }
+
+        // Lighting jitter + sensor noise, deterministic per (video, frame).
+        let mut state = self.config.traffic_seed ^ (t as u64).wrapping_mul(0x9E37_79B9_97F4_A7C1);
+        let mut nrng = Rng::new(splitmix64(&mut state));
+        let bright = (nrng.f32() - 0.5) * 2.0 * self.config.brightness_jitter;
+        let amp = self.config.pixel_noise;
+        if amp > 0.0 || bright != 0.0 {
+            for v in rgb.iter_mut() {
+                let noise = (nrng.f32() - 0.5) * 2.0 * amp;
+                *v = (*v + bright + noise).clamp(0.0, 255.0);
+            }
+        }
+
+        Frame {
+            camera: self.config.camera_id,
+            index: t,
+            ts_ms: tf / self.config.fps * 1e3,
+            rgb,
+            height: h,
+            width: w,
+            truth,
+        }
+    }
+
+    /// Ground truth without rendering (fast path for labeling sweeps).
+    pub fn truth(&self, t: usize) -> Vec<super::frame::VisibleObject> {
+        let tf = t as f64;
+        self.trajectories
+            .iter()
+            .filter_map(|tr| tr.visible_at(tf, self.config.width, self.config.height))
+            .collect()
+    }
+
+    /// Iterator over all frames.
+    pub fn iter(&self) -> impl Iterator<Item = Frame> + '_ {
+        (0..self.config.frames).map(move |t| self.render(t))
+    }
+}
+
+// A readable constant for the traffic RNG domain separator.
+#[inline]
+fn xtraffic_u64() -> u64 {
+    0x7261_6666_6963_0001 // "raffic" + tag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+    use crate::video::frame::Paint;
+
+    fn quick_video(traffic_seed: u64) -> Video {
+        Video::new(VideoConfig::new(2, traffic_seed, 0, 200))
+    }
+
+    #[test]
+    fn render_deterministic() {
+        let v = quick_video(9);
+        let a = v.render(37);
+        let b = v.render(37);
+        assert_eq!(a.rgb, b.rgb);
+        assert_eq!(a.truth, b.truth);
+        let c = v.render(38);
+        assert_ne!(a.rgb, c.rgb);
+    }
+
+    #[test]
+    fn truth_matches_render_truth() {
+        let v = quick_video(10);
+        for t in [0usize, 50, 123, 199] {
+            assert_eq!(v.truth(t), v.render(t).truth);
+        }
+    }
+
+    #[test]
+    fn some_frames_have_vehicles() {
+        let v = quick_video(11);
+        let with_vehicles = (0..v.len())
+            .filter(|&t| v.truth(t).iter().any(|o| o.is_vehicle))
+            .count();
+        assert!(with_vehicles > 50, "only {with_vehicles} frames with vehicles");
+    }
+
+    #[test]
+    fn red_targets_appear_and_persist() {
+        // Target objects must persist across multiple frames (the paper's
+        // second premise: high frame rate ⇒ objects span many frames).
+        let mut cfg = VideoConfig::new(3, 12, 0, 600);
+        cfg.traffic.vehicle_rate = 0.5;
+        cfg.traffic.paint_weights = vec![(Paint::VividRed, 0.5), (Paint::Gray, 0.5)];
+        let v = Video::new(cfg);
+        use std::collections::HashMap;
+        let mut frames_per_object: HashMap<u64, usize> = HashMap::new();
+        for t in 0..v.len() {
+            for id in v.render(t).target_ids(NamedColor::Red, 40) {
+                *frames_per_object.entry(id).or_default() += 1;
+            }
+        }
+        assert!(!frames_per_object.is_empty(), "no red targets in video");
+        let avg = frames_per_object.values().sum::<usize>() as f64
+            / frames_per_object.len() as f64;
+        assert!(avg >= 5.0, "targets too fleeting: avg {avg} frames");
+    }
+
+    #[test]
+    fn noise_bounded() {
+        let v = quick_video(13);
+        let f = v.render(0);
+        for &px in &f.rgb {
+            assert!((0.0..=255.0).contains(&px));
+        }
+        // Noise must be small relative to content: diff vs clean bg bounded
+        // on non-object pixels.
+        let bg = v.background();
+        let objs = &f.truth;
+        let mut max_bg_diff = 0.0f32;
+        for y in 0..96 {
+            for x in 0..96 {
+                let covered = objs.iter().any(|o| {
+                    let (x0, y0, x1, y1) = o.bbox;
+                    // pedestrians draw a head pixel one row above their bbox
+                    x >= x0 && x < x1 && y + 1 >= y0 && y < y1
+                });
+                if !covered {
+                    let i = (y * 96 + x) * 3;
+                    for c in 0..3 {
+                        max_bg_diff = max_bg_diff.max((f.rgb[i + c] - bg[i + c]).abs());
+                    }
+                }
+            }
+        }
+        assert!(max_bg_diff <= 2.0 * (2.5 + 2.0) + 0.1, "diff {max_bg_diff}");
+    }
+
+    #[test]
+    fn different_traffic_seeds_share_scene() {
+        let a = quick_video(1);
+        let b = quick_video(2);
+        assert_eq!(a.background(), b.background());
+        assert_ne!(
+            a.trajectories().len() * 1_000_000 + a.trajectories().first().map(|t| t.w).unwrap_or(0),
+            b.trajectories().len() * 1_000_000 + b.trajectories().first().map(|t| t.w).unwrap_or(0),
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! Synthetic video substrate — the VisualRoad/CARLA substitution.
+//!
+//! Deterministic, seedable road-scene videos with per-frame ground truth
+//! (object ids, paints, bounding boxes) so QoR (paper Eq. 2/3) can be
+//! computed exactly. See DESIGN.md §2 for the substitution argument.
+
+pub mod dataset;
+pub mod frame;
+pub mod generator;
+pub mod objects;
+pub mod scene;
+pub mod segments;
+pub mod streamer;
+
+pub use dataset::{build_dataset, DatasetConfig, MIN_TARGET_PX};
+pub use frame::{Frame, Paint, VisibleObject};
+pub use generator::{Video, VideoConfig};
+pub use objects::{Kind, TrafficConfig, Trajectory};
+pub use scene::Scene;
+pub use segments::{SegmentKind, SegmentedVideo};
+pub use streamer::Streamer;

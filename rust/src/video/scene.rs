@@ -1,0 +1,243 @@
+//! Static scene synthesis: the per-seed camera backdrop.
+//!
+//! Substitutes VisualRoad/CARLA's rendered city (DESIGN.md §2): a road band
+//! with lanes, a building skyline (including dull-red/brown facades — the
+//! hue confounders of paper Fig. 5a), sky and sidewalk. The *clean* render
+//! is also what the camera's background-subtraction stage uses as its
+//! background model.
+
+use crate::util::rng::Rng;
+
+/// Per-seed scene geometry and palette.
+#[derive(Debug, Clone)]
+pub struct Scene {
+    pub width: usize,
+    pub height: usize,
+    /// Road band rows [road_y0, road_y1).
+    pub road_y0: usize,
+    pub road_y1: usize,
+    /// Lane row spans, top to bottom: (y0, y1, direction) with direction
+    /// +1 = left→right, -1 = right→left.
+    pub lanes: Vec<(usize, usize, i8)>,
+    /// Sidewalk band rows for pedestrians.
+    pub walk_y0: usize,
+    pub walk_y1: usize,
+    /// The clean (noise-free) background image, row-major H*W*3.
+    background: Vec<f32>,
+}
+
+impl Scene {
+    /// Build a scene from a camera seed. Layout parameters (horizon, road
+    /// position, lane count, building palette) are seed-derived, mirroring
+    /// VisualRoad's camera-placement `seed` knob.
+    pub fn generate(seed: u64, width: usize, height: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5ce0_5ce0);
+        let h = height as f64;
+        let horizon = (h * rng.range_f64(0.22, 0.34)) as usize;
+        let road_y0 = (h * rng.range_f64(0.40, 0.50)) as usize;
+        let road_h = (h * rng.range_f64(0.30, 0.40)) as usize;
+        let road_y1 = (road_y0 + road_h).min(height - 8);
+        let n_lanes = rng.range(2, 5); // 2..4 lanes
+        let lane_h = (road_y1 - road_y0) / n_lanes;
+        let mut lanes = Vec::new();
+        for l in 0..n_lanes {
+            let y0 = road_y0 + l * lane_h;
+            let y1 = if l == n_lanes - 1 { road_y1 } else { y0 + lane_h };
+            // Top lanes flow right→left, bottom lanes left→right (two-way road).
+            let dir = if l < n_lanes / 2 { -1 } else { 1 };
+            lanes.push((y0, y1, dir));
+        }
+        let walk_y0 = road_y1 + 1;
+        let walk_y1 = height;
+
+        let mut background = vec![0.0f32; width * height * 3];
+        paint_scene(
+            &mut background,
+            width,
+            height,
+            horizon,
+            road_y0,
+            road_y1,
+            &lanes,
+            &mut rng,
+        );
+
+        Scene { width, height, road_y0, road_y1, lanes, walk_y0, walk_y1, background }
+    }
+
+    /// The clean background image (the camera's background model).
+    pub fn background(&self) -> &[f32] {
+        &self.background
+    }
+
+    pub fn lane_height(&self) -> usize {
+        let (y0, y1, _) = self.lanes[0];
+        y1 - y0
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn paint_scene(
+    img: &mut [f32],
+    width: usize,
+    height: usize,
+    horizon: usize,
+    road_y0: usize,
+    road_y1: usize,
+    lanes: &[(usize, usize, i8)],
+    rng: &mut Rng,
+) {
+    let put = |img: &mut [f32], x: usize, y: usize, c: [f32; 3]| {
+        let i = (y * width + x) * 3;
+        img[i] = c[0];
+        img[i + 1] = c[1];
+        img[i + 2] = c[2];
+    };
+
+    // Sky: pale blue-gray gradient.
+    for y in 0..horizon {
+        let t = y as f32 / horizon.max(1) as f32;
+        let c = [168.0 + 20.0 * t, 186.0 + 14.0 * t, 205.0 + 8.0 * t];
+        for x in 0..width {
+            put(img, x, y, c);
+        }
+    }
+
+    // Ground / verge between horizon and road, and below road.
+    for y in horizon..height {
+        for x in 0..width {
+            put(img, x, y, [138.0, 134.0, 126.0]);
+        }
+    }
+
+    // Building skyline: rectangles with dull facades. Crucially some are
+    // *red-hued but unsaturated* (brick/brown), so negative frames still
+    // carry red-hue pixels — the overlap that defeats HF-only shedding.
+    let facade_palette: [[f32; 3]; 6] = [
+        [142.0, 98.0, 88.0],   // dull brick
+        [126.0, 84.0, 72.0],   // darker brick
+        [150.0, 140.0, 124.0], // tan
+        [120.0, 126.0, 134.0], // blue-gray
+        [140.0, 128.0, 110.0], // sandstone
+        [110.0, 104.0, 98.0],  // concrete
+    ];
+    let n_buildings = rng.range(4, 9);
+    let mut x = 0usize;
+    for _ in 0..n_buildings {
+        if x >= width {
+            break;
+        }
+        let bw = rng.range(width / 10, width / 4 + 1);
+        let top = rng.range(horizon / 3, horizon.max(1));
+        let color = *rng.choose(&facade_palette);
+        let x1 = (x + bw).min(width);
+        for yy in top..road_y0 {
+            for xx in x..x1 {
+                put(img, xx, yy, color);
+            }
+        }
+        // Windows: darker inset pixels on a grid.
+        let win = [color[0] * 0.45, color[1] * 0.45, color[2] * 0.55];
+        for yy in (top + 2..road_y0.saturating_sub(2)).step_by(4) {
+            for xx in (x + 2..x1.saturating_sub(1)).step_by(4) {
+                put(img, xx, yy, win);
+                if xx + 1 < x1 {
+                    put(img, xx + 1, yy, win);
+                }
+            }
+        }
+        x = x1 + rng.range(0, 3);
+    }
+
+    // Road: asphalt with subtle per-pixel texture.
+    for y in road_y0..road_y1 {
+        for x in 0..width {
+            let tex = (rng.f32() - 0.5) * 6.0;
+            put(img, x, y, [96.0 + tex, 96.0 + tex, 100.0 + tex]);
+        }
+    }
+
+    // Lane separators: dashed pale lines on interior boundaries.
+    for w in lanes.windows(2) {
+        let y = w[0].1;
+        if y >= road_y1 {
+            continue;
+        }
+        for x in (0..width).step_by(8) {
+            for dx in 0..4 {
+                if x + dx < width {
+                    put(img, x + dx, y, [205.0, 203.0, 188.0]);
+                }
+            }
+        }
+    }
+
+    // Sidewalk below the road.
+    for y in road_y1..height {
+        for x in 0..width {
+            let tex = (rng.f32() - 0.5) * 4.0;
+            put(img, x, y, [158.0 + tex, 155.0 + tex, 148.0 + tex]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::hsv::rgb_to_hsv;
+    use crate::color::NamedColor;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Scene::generate(3, 96, 96);
+        let b = Scene::generate(3, 96, 96);
+        assert_eq!(a.background(), b.background());
+        let c = Scene::generate(4, 96, 96);
+        assert_ne!(a.background(), c.background());
+    }
+
+    #[test]
+    fn geometry_sane() {
+        for seed in 0..20 {
+            let s = Scene::generate(seed, 96, 96);
+            assert!(s.road_y0 < s.road_y1 && s.road_y1 < s.height);
+            assert!(s.lanes.len() >= 2 && s.lanes.len() <= 4);
+            assert!(s.lane_height() >= 6, "lanes too thin: {}", s.lane_height());
+            assert!(s.lanes.iter().any(|&(_, _, d)| d == 1));
+            assert!(s.lanes.iter().any(|&(_, _, d)| d == -1));
+            assert_eq!(s.background().len(), 96 * 96 * 3);
+        }
+    }
+
+    #[test]
+    fn background_contains_red_hue_confounders() {
+        // The skyline must put *some* red-hue low-sat pixels in frame —
+        // the paper's Fig 5a overlap depends on it.
+        let red = NamedColor::Red.ranges();
+        let mut red_hue = 0usize;
+        let mut red_hue_low_sat = 0usize;
+        for seed in 0..7 {
+            let s = Scene::generate(seed, 96, 96);
+            for px in s.background().chunks_exact(3) {
+                let (h, sat, _) = rgb_to_hsv(px[0], px[1], px[2]);
+                if red.contains(h) {
+                    red_hue += 1;
+                    if sat < 128.0 {
+                        red_hue_low_sat += 1;
+                    }
+                }
+            }
+        }
+        assert!(red_hue > 500, "too few red-hue background pixels: {red_hue}");
+        // They should be predominantly unsaturated (dull).
+        assert!(red_hue_low_sat as f64 > 0.9 * red_hue as f64);
+    }
+
+    #[test]
+    fn pixel_values_in_range() {
+        let s = Scene::generate(11, 96, 96);
+        for &v in s.background() {
+            assert!((0.0..=255.0).contains(&v), "pixel {v}");
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! The cross-language numeric contract: the AOT artifacts (JAX + Pallas →
+//! HLO text → PJRT) must agree with the pure-Rust oracle on real frames.
+//!
+//! This is the test that pins the entire three-layer stack together; if it
+//! passes, shedding decisions are identical no matter which backend runs.
+
+use uals::color::NamedColor;
+use uals::features::{Extractor, HIST};
+use uals::runtime::Engine;
+use uals::utility::{train, Combine};
+use uals::video::{Video, VideoConfig};
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+fn make_video(seed: u64) -> Video {
+    let mut cfg = VideoConfig::new(7, seed, 0, 60);
+    cfg.width = 96; // matches artifacts' FRAME_H/W
+    cfg.height = 96;
+    cfg.traffic.vehicle_rate = 0.8;
+    // Ensure targets + confounders actually appear in a 60-frame clip.
+    cfg.traffic.paint_weights = vec![
+        (uals::video::Paint::VividRed, 0.3),
+        (uals::video::Paint::VividYellow, 0.15),
+        (uals::video::Paint::DullRed, 0.15),
+        (uals::video::Paint::Gray, 0.25),
+        (uals::video::Paint::Silver, 0.15),
+    ];
+    Video::new(cfg)
+}
+
+#[test]
+fn artifact_matches_native_oracle_single_color() {
+    let engine = Engine::from_default_artifacts().expect("run `make artifacts`");
+    let videos = vec![make_video(21), make_video(22)];
+    let model = train(&videos, &[0], &[NamedColor::Red], Combine::Single);
+
+    let native = Extractor::native(model.clone());
+    let artifact = Extractor::artifact(&engine, model).unwrap();
+
+    let v = &videos[1];
+    let mut checked = 0;
+    for t in (0..v.len()).step_by(7) {
+        let f = v.render(t);
+        let (nf, nu) = native.extract(&f.rgb, v.background()).unwrap();
+        let (af, au) = artifact.extract(&f.rgb, v.background()).unwrap();
+        assert!(
+            close(nu.combined, au.combined, 1e-4),
+            "t={t}: native u {} vs artifact u {}",
+            nu.combined,
+            au.combined
+        );
+        assert!(close(nf.hf[0], af.hf[0], 1e-5), "hf mismatch at t={t}");
+        assert!(close(nf.fg_frac, af.fg_frac, 1e-5), "fg mismatch at t={t}");
+        for b in 0..HIST {
+            assert!(
+                close(nf.pf[0][b], af.pf[0][b], 1e-4),
+                "pf[{b}] mismatch at t={t}: {} vs {}",
+                nf.pf[0][b],
+                af.pf[0][b]
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked >= 8);
+}
+
+#[test]
+fn artifact_matches_native_oracle_composite_or_and() {
+    let engine = Engine::from_default_artifacts().expect("run `make artifacts`");
+    let videos = vec![make_video(31), make_video(32)];
+    for combine in [Combine::Or, Combine::And] {
+        let model = train(
+            &videos,
+            &[0],
+            &[NamedColor::Red, NamedColor::Yellow],
+            combine,
+        );
+        let native = Extractor::native(model.clone());
+        let artifact = Extractor::artifact(&engine, model).unwrap();
+        let v = &videos[1];
+        for t in (0..v.len()).step_by(11) {
+            let f = v.render(t);
+            let (nf, nu) = native.extract(&f.rgb, v.background()).unwrap();
+            let (af, au) = artifact.extract(&f.rgb, v.background()).unwrap();
+            assert!(
+                close(nu.combined, au.combined, 1e-4),
+                "{combine:?} t={t}: {} vs {}",
+                nu.combined,
+                au.combined
+            );
+            for c in 0..2 {
+                assert!(close(nu.per_color[c], au.per_color[c], 1e-4));
+                assert!(close(nf.hf[c], af.hf[c], 1e-5));
+            }
+        }
+    }
+}
+
+#[test]
+fn detector_artifact_fires_on_targets() {
+    use uals::runtime::Tensor;
+    let engine = Engine::from_default_artifacts().expect("run `make artifacts`");
+    let exe = engine.load("detector").unwrap();
+    let m = engine.manifest();
+
+    let v = make_video(41);
+    // Find a frame with a large red target and check the detector fires.
+    let mut fired_on_target = false;
+    for t in 0..v.len() {
+        let f = v.render(t);
+        let has_red = f
+            .truth
+            .iter()
+            .any(|o| o.paint == uals::video::Paint::VividRed && o.visible_px > 80);
+        if !has_red {
+            continue;
+        }
+        let rgb = Tensor::new(f.rgb.clone(), vec![m.frame_h, m.frame_w, 3]).unwrap();
+        let bg = Tensor::new(v.background().to_vec(), vec![m.frame_h, m.frame_w, 3]).unwrap();
+        let ranges = Tensor::new(
+            vec![0.0, 10.0, 170.0, 180.0, 20.0, 35.0, 0.0, 0.0],
+            vec![2, 4],
+        )
+        .unwrap();
+        let outs = exe.run(&[&rgb, &bg, &ranges]).unwrap();
+        let counts = &outs[1];
+        if counts.data()[0] > 0.0 {
+            fired_on_target = true;
+            break;
+        }
+    }
+    assert!(fired_on_target, "detector never fired on a large red target");
+}

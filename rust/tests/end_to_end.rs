@@ -1,0 +1,175 @@
+//! End-to-end integration: the whole stack composed — training → CDF
+//! seeding → shedding → backend query → metrics — in both the
+//! discrete-event simulator and the threaded real-time runtime (with the
+//! AOT artifacts on the hot path).
+
+use std::collections::HashMap;
+use uals::backend::{BackendQuery, CostModel, Detector};
+use uals::color::NamedColor;
+use uals::config::{CostConfig, Deployment, QueryConfig, ShedderConfig};
+use uals::features::Extractor;
+use uals::pipeline::realtime::{run_realtime, RealtimeConfig};
+use uals::pipeline::{run_sim, Policy, SimConfig};
+use uals::utility::{train, Combine};
+use uals::video::{build_dataset, DatasetConfig, Paint, SegmentedVideo, Streamer, Video, VideoConfig};
+
+fn aux_model(colors: &[NamedColor], combine: Combine) -> uals::utility::UtilityModel {
+    let videos = build_dataset(&DatasetConfig {
+        num_seeds: 2,
+        videos_per_seed: 2,
+        frames_per_video: 250,
+        base_seed: 0xE2E,
+        target_boost: 2.0,
+    });
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    train(&videos, &idx, colors, combine)
+}
+
+#[test]
+fn fig13a_scenario_shape_holds_end_to_end() {
+    // The paper's synthetic worst case: shedding must concentrate in the
+    // middle (red-burst) segment, and segments 1/3 must be mostly cheap.
+    let sv = SegmentedVideo::fig13a(0xE2E1, 200, Paint::VividRed);
+    let model = aux_model(&[NamedColor::Red], Combine::Single);
+    let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0);
+    let cfg = SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: query.clone(),
+        backend_tokens: 1,
+        policy: Policy::UtilityControlLoop,
+        seed: 0xE,
+        fps_total: sv.fps(),
+    };
+    let extractor = Extractor::native(model);
+    let mut backend = BackendQuery::new(
+        query,
+        Detector::native(12, 25.0),
+        CostModel::new(cfg.costs.clone(), cfg.seed),
+        25.0,
+    );
+    let mut bgs = HashMap::new();
+    bgs.insert(0u32, sv.background().to_vec());
+    let report = run_sim(sv.iter(), &bgs, &cfg, &extractor, &mut backend).unwrap();
+
+    assert_eq!(report.ingress, 600);
+    assert_eq!(report.ingress, report.transmitted + report.shed);
+    // Latency bound held (paper: at most an odd transient violation).
+    assert!(
+        report.latency.violation_rate() <= 0.02,
+        "violation rate {}",
+        report.latency.violation_rate()
+    );
+    // Shedding concentrates in the burst segment (frames 200..400).
+    let shed_windows = report.stages.counts(uals::metrics::Stage::Shed);
+    let shed_in = |lo_ms: f64, hi_ms: f64| -> u64 {
+        shed_windows
+            .iter()
+            .filter(|(t, _)| *t >= lo_ms && *t < hi_ms)
+            .map(|(_, n)| n)
+            .sum()
+    };
+    let seg1 = shed_in(0.0, 20_000.0);
+    let seg2 = shed_in(20_000.0, 40_000.0);
+    let seg3 = shed_in(40_000.0, 60_000.0);
+    assert!(
+        seg2 > seg1 && seg2 > seg3,
+        "shedding must peak in the burst: {seg1} / {seg2} / {seg3}"
+    );
+    // DNN activity also peaks in segment 2.
+    let dnn_windows = report.stages.counts(uals::metrics::Stage::Dnn);
+    let dnn_in = |lo: f64, hi: f64| -> u64 {
+        dnn_windows
+            .iter()
+            .filter(|(t, _)| *t >= lo && *t < hi)
+            .map(|(_, n)| n)
+            .sum()
+    };
+    assert!(dnn_in(20_000.0, 40_000.0) > dnn_in(0.0, 20_000.0));
+}
+
+#[test]
+fn composite_or_query_end_to_end() {
+    let model = aux_model(&[NamedColor::Red, NamedColor::Yellow], Combine::Or);
+    let query = QueryConfig::composite(NamedColor::Red, NamedColor::Yellow, Combine::Or)
+        .with_latency_bound(1200.0);
+    let mut vc = VideoConfig::new(0xE2E2, 5, 0, 250);
+    vc.traffic.vehicle_rate = 0.5;
+    vc.traffic.paint_weights = vec![
+        (Paint::VividRed, 0.15),
+        (Paint::VividYellow, 0.15),
+        (Paint::Gray, 0.4),
+        (Paint::Silver, 0.3),
+    ];
+    let videos = vec![Video::new(vc)];
+    let cfg = SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: query.clone(),
+        backend_tokens: 1,
+        policy: Policy::UtilityControlLoop,
+        seed: 2,
+        fps_total: 10.0,
+    };
+    let extractor = Extractor::native(model);
+    let mut backend = BackendQuery::new(
+        query,
+        Detector::native(12, 25.0),
+        CostModel::new(cfg.costs.clone(), cfg.seed),
+        25.0,
+    );
+    let mut bgs = HashMap::new();
+    bgs.insert(0u32, videos[0].background().to_vec());
+    let report =
+        run_sim(Streamer::new(&videos), &bgs, &cfg, &extractor, &mut backend).unwrap();
+    assert_eq!(report.ingress, 250);
+    assert!(report.qor.overall() > 0.5, "OR-query QoR {}", report.qor.overall());
+    assert!(report.latency.violation_rate() < 0.05);
+}
+
+#[test]
+fn deployment_scenarios_tighten_queue() {
+    // Fig. 2: cloud deployments have higher network latency, which must
+    // translate into smaller dynamic queues (Eq. 20) — same bound, less
+    // budget for queueing.
+    let mk = |dep: Deployment| {
+        let costs = dep.costs();
+        let mut cl = uals::shedder::ControlLoop::new(
+            &ShedderConfig::default(),
+            &costs,
+            1000.0,
+        );
+        for _ in 0..100 {
+            cl.observe_backend(100.0);
+        }
+        cl.queue_size()
+    };
+    let edge = mk(Deployment::EdgeCompute);
+    let cloud = mk(Deployment::EdgeToCloud);
+    assert!(cloud <= edge, "cloud queue {cloud} vs edge {edge}");
+}
+
+#[test]
+fn realtime_pipeline_with_artifacts() {
+    // Threaded runtime, PJRT artifacts on both the extractor and detector
+    // paths, 10× fast-forward. Conservation + sane QoR.
+    let model = aux_model(&[NamedColor::Red], Combine::Single);
+    let mut vc = VideoConfig::new(0xE2E3, 9, 0, 60);
+    vc.traffic.vehicle_rate = 0.4;
+    let videos = vec![Video::new(vc)];
+    let cfg = RealtimeConfig {
+        query: QueryConfig::single(NamedColor::Red).with_latency_bound(1500.0),
+        time_scale: 0.1,
+        cost_emulation_scale: 1.0,
+        ..Default::default()
+    };
+    let report = run_realtime(&videos, &model, &cfg).expect("realtime run");
+    assert_eq!(report.ingress, 60);
+    assert_eq!(report.ingress, report.transmitted + report.shed);
+    // The artifact extractor must be fast enough for 10 fps real time.
+    assert!(
+        report.extract_ms_mean < 100.0,
+        "extractor too slow: {} ms",
+        report.extract_ms_mean
+    );
+}

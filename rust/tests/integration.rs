@@ -1,0 +1,21 @@
+//! Integration: runtime loads and executes real AOT artifacts.
+
+use uals::runtime::{Engine, Tensor};
+
+#[test]
+fn shedder_k1_runs_on_zero_frame() {
+    let engine = Engine::from_default_artifacts().expect("artifacts built?");
+    let exe = engine.load("shedder_k1").unwrap();
+    let m = engine.manifest();
+    let frame = Tensor::zeros(&[m.frame_h, m.frame_w, 3]);
+    let bg = Tensor::zeros(&[m.frame_h, m.frame_w, 3]);
+    let ranges = Tensor::new(vec![0.0, 10.0, 170.0, 180.0], vec![1, 4]).unwrap();
+    let mm = Tensor::zeros(&[1, 8, 8]);
+    let out = exe.run(&[&frame, &bg, &ranges, &mm]).unwrap();
+    assert_eq!(out.len(), 4);
+    assert_eq!(out[0].shape(), &[1]); // utility
+    assert_eq!(out[1].shape(), &[1]); // hf
+    assert_eq!(out[2].shape(), &[1, 8, 8]); // pf
+    assert_eq!(out[0].data()[0], 0.0); // all-background frame: zero utility
+    assert_eq!(out[1].data()[0], 0.0);
+}
