@@ -1,0 +1,30 @@
+# Build/test/bench entry points for the uals reproduction.
+#
+#   make build      release build of the Rust stack
+#   make test       tier-1 test suite (green without artifacts)
+#   make bench      hot-path microbenchmarks → BENCH_micro.json (repo root)
+#   make figures    regenerate the paper's figures at the default scale
+#   make artifacts  AOT-lower the JAX/Pallas kernels → rust/artifacts/
+#                   (requires jax; the Rust side runs without it, on the
+#                   native LUT fast path)
+
+.PHONY: build test bench figures artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench microbench
+
+figures:
+	cargo run --release --bin uals -- figures --all --scale small
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+
+clean:
+	cargo clean
+	rm -f BENCH_micro.json

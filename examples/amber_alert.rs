@@ -11,6 +11,7 @@
 use anyhow::Result;
 use std::collections::HashMap;
 use uals::backend::{BackendQuery, CostModel, Detector};
+use uals::pipeline::BackgroundMap;
 use uals::color::NamedColor;
 use uals::config::{CostConfig, QueryConfig, ShedderConfig};
 use uals::features::Extractor;
@@ -57,8 +58,8 @@ fn main() -> Result<()> {
         CostModel::new(cfg.costs.clone(), cfg.seed),
         25.0,
     );
-    let mut bgs = HashMap::new();
-    bgs.insert(0u32, sv.background().to_vec());
+    let mut bgs: BackgroundMap<'_> = HashMap::new();
+    bgs.insert(0u32, sv.background());
     let report = run_sim(sv.iter(), &bgs, &cfg, &extractor, &mut backend)?;
 
     println!("\n-- per-5s-window max E2E latency (bound {} ms) --", query.latency_bound_ms);

@@ -41,10 +41,15 @@ fn main() -> Result<()> {
     vc.traffic.vehicle_rate = 0.5;
     let videos = vec![Video::new(vc)];
 
+    let use_artifacts = uals::runtime::artifacts_available();
+    if !use_artifacts {
+        println!("(artifacts/PJRT unavailable — running the native fast path)");
+    }
     let cfg = RealtimeConfig {
         query: QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0),
         time_scale: 0.2,          // 5× fast-forward (10 s of stream in ~2 s)
         cost_emulation_scale: 1.0, // emulate the DNN's latency
+        use_artifacts,
         ..Default::default()
     };
     let report = run_realtime(&videos, &model, &cfg)?;

@@ -30,10 +30,20 @@ fn main() -> Result<()> {
             / model.colors[0].m_pos.iter().sum::<f32>().max(1e-9)
     );
 
-    // 3. Production path: the AOT artifact through PJRT.
-    let engine = Engine::from_default_artifacts()?;
-    println!("PJRT platform: {}", engine.platform());
-    let extractor = Extractor::artifact(&engine, model.clone())?;
+    // 3. Production path: the AOT artifact through PJRT — falling back to
+    //    the native LUT fast path when artifacts aren't built (the two are
+    //    numerically pinned together by rust/tests/artifact_oracle.rs).
+    let engine = Engine::from_default_artifacts();
+    let extractor = match &engine {
+        Ok(engine) => {
+            println!("PJRT platform: {}", engine.platform());
+            Extractor::artifact(engine, model.clone())?
+        }
+        Err(e) => {
+            println!("artifacts unavailable ({e}); using the native fast path");
+            Extractor::native(model.clone())
+        }
+    };
 
     // 4. Seed the threshold CDF (Eq. 16/17) from the training videos.
     let mut cdf = UtilityCdf::new(2048);

@@ -6,13 +6,12 @@
 //!     cargo run --release --example smart_city [-- --streams 5]
 
 use anyhow::Result;
-use std::collections::HashMap;
 use uals::backend::{BackendQuery, CostModel, Detector};
 use uals::cli::Args;
 use uals::color::NamedColor;
 use uals::config::{CostConfig, QueryConfig, ShedderConfig};
 use uals::features::Extractor;
-use uals::pipeline::{run_sim, Policy, SimConfig};
+use uals::pipeline::{backgrounds_of, run_sim, Policy, SimConfig};
 use uals::utility::{train, Combine};
 use uals::video::{build_dataset, streamer::aggregate_fps, DatasetConfig, Streamer, Video, VideoConfig};
 
@@ -46,10 +45,7 @@ fn main() -> Result<()> {
     for k in 1..=max_streams {
         let videos = city_cameras(k, frames);
         let fps = aggregate_fps(&videos);
-        let mut bgs = HashMap::new();
-        for v in &videos {
-            bgs.insert(v.camera_id(), v.background().to_vec());
-        }
+        let bgs = backgrounds_of(&videos);
         let mut run = |policy: Policy| -> Result<_> {
             let cfg = SimConfig {
                 costs: CostConfig::default(),

@@ -1,19 +1,23 @@
-//! Hot-path microbenchmarks (`cargo bench --bench microbench`).
+//! Hot-path microbenchmarks (`cargo bench --bench microbench`, or
+//! `make bench` / `cargo bench-micro` from the repo root).
 //!
 //! Covers every component on the per-frame request path plus the
-//! substrates the coordinator leans on. Results go to stdout and
-//! `results/microbench.csv` (inputs for EXPERIMENTS.md §Perf).
+//! substrates the coordinator leans on. Results go to stdout,
+//! `results/microbench.csv`, and the machine-readable `BENCH_micro.json`
+//! at the repo root (per-bench ns/op — the cross-PR perf trajectory;
+//! see EXPERIMENTS.md §Performance).
 
 use uals::backend::{foreground_mask, largest_blob, BackendQuery, CostModel, Detector};
-use uals::color::NamedColor;
-use uals::config::{CostConfig, QueryConfig};
-use uals::features::{reference, Extractor};
+use uals::color::{ColorLut, NamedColor};
+use uals::config::{CostConfig, QueryConfig, ShedderConfig};
+use uals::features::{reference, Extractor, FrameFeatures, QuantScratch, UtilityValues};
+use uals::pipeline::{run_sharded_sim, Policy, SimConfig};
 use uals::runtime::Engine;
 use uals::shedder::UtilityQueue;
 use uals::util::bench::Bench;
 use uals::util::rng::Rng;
 use uals::utility::{train, Combine, UtilityCdf};
-use uals::video::{Video, VideoConfig};
+use uals::video::{Frame, Video, VideoConfig};
 
 fn main() {
     let mut b = Bench::new(3, 40);
@@ -24,6 +28,10 @@ fn main() {
     let video = Video::new(vc);
     let frame = video.render(30);
     let bg = video.background().to_vec();
+    // u8-camera variants (what real cameras ship): integer-valued pixels
+    // take the LUT fast path; the float fixtures keep the legacy numbers.
+    let frame_u8: Vec<f32> = frame.rgb.iter().map(|x| x.round()).collect();
+    let bg_u8: Vec<f32> = bg.iter().map(|x| x.round()).collect();
     let ranges = [NamedColor::Red.ranges(), NamedColor::Yellow.ranges()];
     let videos = vec![video];
     let model2 = train(
@@ -38,17 +46,43 @@ fn main() {
     b.run("video/render_frame_96x96", || {
         std::hint::black_box(videos[0].render(31));
     });
+    let mut arena = Frame::empty();
+    b.run("video/render_into_96x96 (arena)", || {
+        videos[0].render_into(31, &mut arena);
+        std::hint::black_box(arena.rgb.len());
+    });
+    // The fused LUT fast path vs the reference oracle, same u8 frame.
+    let lut2 = ColorLut::new(&ranges, reference::FG_THRESHOLD);
+    let mut quant = QuantScratch::default();
+    let mut feats_buf = FrameFeatures::empty();
     b.run("features/native_extract_2colors", || {
+        uals::features::compute_features_fast_into(
+            &lut2,
+            &frame_u8,
+            &bg_u8,
+            &mut quant,
+            &mut feats_buf,
+        );
+        std::hint::black_box(feats_buf.fg_frac);
+    });
+    b.run("features/native_extract_2colors_reference", || {
         std::hint::black_box(reference::compute_features(
-            &frame.rgb,
-            &bg,
+            &frame_u8,
+            &bg_u8,
             &ranges,
             reference::FG_THRESHOLD,
         ));
     });
     let native1 = Extractor::native(model1.clone());
     b.run("features/native_extract+utility_1color", || {
-        std::hint::black_box(native1.extract(&frame.rgb, &bg).unwrap());
+        std::hint::black_box(native1.extract(&frame_u8, &bg_u8).unwrap());
+    });
+    let mut utils_buf = UtilityValues::empty();
+    b.run("features/extract_into+utility_1color (0-alloc)", || {
+        native1
+            .extract_into(&frame_u8, &bg_u8, &mut feats_buf, &mut utils_buf)
+            .unwrap();
+        std::hint::black_box(utils_buf.combined);
     });
     b.run("backend/foreground_mask+largest_blob", || {
         let m = foreground_mask(&frame.rgb, &bg, 96, 96, 25.0);
@@ -66,6 +100,35 @@ fn main() {
     );
     b.run("backend/full_query_process", || {
         std::hint::black_box(bq.process(&frame.rgb, &bg, 96, 96).unwrap());
+    });
+
+    // --- multi-camera sweep engine ------------------------------------------
+    let sweep_videos: Vec<Video> = (0..4)
+        .map(|i| {
+            let mut svc = VideoConfig::new(11, 0xBE6 + i as u64, i as u32, 120);
+            svc.traffic.vehicle_rate = 0.35;
+            svc.quantize_u8 = true; // u8 cameras → LUT fast path in the sweep
+            Video::new(svc)
+        })
+        .collect();
+    let sweep_model = train(&sweep_videos, &[0, 1], &[NamedColor::Red], Combine::Single);
+    let sweep_cfg = SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: QueryConfig::single(NamedColor::Red).with_latency_bound(1500.0),
+        backend_tokens: 1,
+        policy: Policy::UtilityControlLoop,
+        seed: 0xBE,
+        fps_total: 10.0,
+    };
+    b.run_n("pipeline/sweep_4cams_serial", 1, 3, || {
+        let r = run_sharded_sim(&sweep_videos, &sweep_cfg, &sweep_model, 1).unwrap();
+        std::hint::black_box(r.0.ingress);
+    });
+    let threads = uals::pipeline::default_threads().min(4);
+    b.run_n("pipeline/sweep_4cams_parallel", 1, 3, || {
+        let r = run_sharded_sim(&sweep_videos, &sweep_cfg, &sweep_model, threads).unwrap();
+        std::hint::black_box(r.0.ingress);
     });
 
     // --- AOT artifact path (PJRT) -------------------------------------------
@@ -113,6 +176,32 @@ fn main() {
         std::hint::black_box(uals::util::json::parse(&json_doc).unwrap());
     });
 
+    // Headline ratios for the PR-perf trajectory.
+    if let (Some(fast), Some(slow)) = (
+        b.result("features/native_extract_2colors"),
+        b.result("features/native_extract_2colors_reference"),
+    ) {
+        println!(
+            "\nLUT fast path speedup (2-color extract): {:.2}x",
+            slow.mean_ms / fast.mean_ms.max(1e-12)
+        );
+    }
+    if let (Some(par), Some(ser)) = (
+        b.result("pipeline/sweep_4cams_parallel"),
+        b.result("pipeline/sweep_4cams_serial"),
+    ) {
+        println!(
+            "parallel 4-camera sweep speedup ({threads} threads): {:.2}x",
+            ser.mean_ms / par.mean_ms.max(1e-12)
+        );
+    }
+
     b.write_csv(std::path::Path::new("results/microbench.csv")).unwrap();
-    println!("\nwrote results/microbench.csv");
+    // BENCH_micro.json lives at the repo root (one dir above the crate).
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate has a parent dir")
+        .join("BENCH_micro.json");
+    b.write_json(&root).unwrap();
+    println!("\nwrote results/microbench.csv and {}", root.display());
 }

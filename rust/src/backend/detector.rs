@@ -10,8 +10,9 @@
 
 use crate::color::hsv::rgb_to_hsv;
 use crate::color::HueRanges;
-use crate::runtime::{Engine, Executable, Tensor};
+use crate::runtime::{fill_cached, Engine, Executable, Tensor};
 use anyhow::{bail, Result};
+use std::cell::RefCell;
 use std::rc::Rc;
 
 /// Detection output: fired cells per query color.
@@ -28,10 +29,26 @@ impl Detections {
     }
 }
 
+/// Reusable PJRT input tensors (frame + background), allocated once so
+/// the artifact path stops copying both images on every call.
+#[derive(Default)]
+struct DetScratch {
+    rgb_t: Option<Tensor>,
+    bg_t: Option<Tensor>,
+}
+
 /// Detector backend.
 pub enum Detector {
-    Native { grid: usize, fg_threshold: f32 },
-    Artifact { exe: Rc<Executable>, frame_h: usize, frame_w: usize },
+    Native {
+        grid: usize,
+        fg_threshold: f32,
+    },
+    Artifact {
+        exe: Rc<Executable>,
+        frame_h: usize,
+        frame_w: usize,
+        scratch: RefCell<DetScratch>,
+    },
 }
 
 /// Cell-density firing fraction (matches python/compile/model.py).
@@ -49,7 +66,12 @@ impl Detector {
     pub fn artifact(engine: &Engine) -> Result<Self> {
         let exe = engine.load("detector")?;
         let m = engine.manifest();
-        Ok(Detector::Artifact { exe, frame_h: m.frame_h, frame_w: m.frame_w })
+        Ok(Detector::Artifact {
+            exe,
+            frame_h: m.frame_h,
+            frame_w: m.frame_w,
+            scratch: RefCell::new(DetScratch::default()),
+        })
     }
 
     /// Detect target-colored objects. `ranges` has K ≤ 2 colors.
@@ -74,7 +96,7 @@ impl Detector {
                 *fg_threshold,
                 ranges,
             )),
-            Detector::Artifact { exe, frame_h, frame_w } => {
+            Detector::Artifact { exe, frame_h, frame_w, scratch } => {
                 if width != *frame_w || height != *frame_h {
                     bail!("frame {width}x{height} != artifact {frame_w}x{frame_h}");
                 }
@@ -85,10 +107,14 @@ impl Detector {
                     let hr = ranges.get(c).copied().unwrap_or(HueRanges::single(0.0, 0.0));
                     r.extend_from_slice(&hr.to_array());
                 }
-                let rgb_t = Tensor::new(rgb.to_vec(), vec![height, width, 3])?;
-                let bg_t = Tensor::new(background.to_vec(), vec![height, width, 3])?;
+                let mut scratch = scratch.borrow_mut();
+                let shape = [height, width, 3];
+                fill_cached(&mut scratch.rgb_t, rgb, &shape)?;
+                fill_cached(&mut scratch.bg_t, background, &shape)?;
+                let rgb_t = scratch.rgb_t.as_ref().unwrap();
+                let bg_t = scratch.bg_t.as_ref().unwrap();
                 let r_t = Tensor::new(r, vec![2, 4])?;
-                let outs = exe.run(&[&rgb_t, &bg_t, &r_t])?;
+                let outs = exe.run(&[rgb_t, bg_t, &r_t])?;
                 let counts = &outs[1];
                 let mut cell_counts: Vec<u32> =
                     counts.data().iter().map(|&x| x as u32).collect();

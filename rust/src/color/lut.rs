@@ -1,0 +1,272 @@
+//! Quantized RGB → (hue-class bitmask, flat sat/val bin) lookup tables —
+//! the fused fast path for per-pixel feature work.
+//!
+//! The reference oracle (`features::reference`) does a branchy float
+//! `rgb_to_hsv` plus a k-way hue-range scan for every foreground pixel.
+//! For **integer-valued** pixels (real cameras ship u8 frames) all of that
+//! is a pure function of at most two small integers:
+//!
+//! * the hue branch (`v==r` / `v==g` / `v==b`) and the pair
+//!   `(num, delta)` with `num ∈ [-255, 255]`, `delta ∈ [1, 255]`, where
+//!   `num` is the branch's chroma numerator (`g-b`, `b-r` or `r-g`) and
+//!   `delta = max - min`. Hue-range membership per query color is
+//!   precomputed into a bitmask table of `3 × 511 × 256` bytes (~384 KiB);
+//! * the flat 8×8 saturation/value bin, a function of `(v, delta)` only,
+//!   precomputed into a `256 × 256` byte table.
+//!
+//! Both tables are built by evaluating the *same f32 expressions* the
+//! reference uses (`60.0 * num / delta`, `delta / v * 255.0`, …) on the
+//! exact integer operands, so classification is **bit-identical** to the
+//! oracle on integer frames — property-pinned by `rust/tests/fast_path.rs`.
+//! Per pixel, the hot loop is then two table reads and a branchless
+//! histogram bump (see `features::fast`).
+
+use super::hsv::flat_bin;
+use super::HueRanges;
+
+/// Hue-branch count (v==r, v==g, v==b).
+const BRANCHES: usize = 3;
+/// `num` spans [-255, 255] → 511 table rows.
+const NUM_SPAN: usize = 511;
+/// `delta` (and `v`) span [0, 255] → 256 table columns.
+const LEVELS: usize = 256;
+
+/// Per-model lookup tables for the fused feature fast path.
+///
+/// Built once per [`crate::utility::model::UtilityModel`] (the hue ranges
+/// and foreground threshold are model parameters); reused for every frame.
+#[derive(Debug, Clone)]
+pub struct ColorLut {
+    ranges: Vec<HueRanges>,
+    fg_threshold: f32,
+    /// Integer foreground gate: a pixel is background iff its integer
+    /// channel diff is `<= fg_floor` (exactly `diff <= fg_threshold` for
+    /// integer diffs and finite thresholds).
+    fg_floor: i32,
+    /// False when `fg_threshold` is not finite — callers must fall back
+    /// to the reference path (NaN thresholds compare unlike any integer).
+    exact: bool,
+    /// Hue-class bitmask for achromatic pixels (`delta == 0` → h = 0).
+    mask_gray: u8,
+    /// `[branch][num + 255][delta]` → per-color hue membership bitmask.
+    hue_mask: Vec<u8>,
+    /// `[v][delta]` → flat sat/val bin (0..64).
+    sv_bin: Vec<u8>,
+}
+
+impl ColorLut {
+    /// Precompute the tables for a query's hue ranges + fg threshold.
+    /// Supports up to 8 colors (bitmask width); queries use 1–2.
+    pub fn new(ranges: &[HueRanges], fg_threshold: f32) -> Self {
+        assert!(
+            ranges.len() <= 8,
+            "ColorLut supports at most 8 colors, got {}",
+            ranges.len()
+        );
+        let mask_of = |h: f32| -> u8 {
+            let mut m = 0u8;
+            for (c, r) in ranges.iter().enumerate() {
+                if r.contains(h) {
+                    m |= 1 << c;
+                }
+            }
+            m
+        };
+
+        let mut hue_mask = vec![0u8; BRANCHES * NUM_SPAN * LEVELS];
+        for branch in 0..BRANCHES {
+            for num in -255i32..=255 {
+                let numf = num as f32;
+                let row = (branch * NUM_SPAN + (num + 255) as usize) * LEVELS;
+                for delta in 1usize..LEVELS {
+                    let deltaf = delta as f32;
+                    // Mirror rgb_to_hsv's branch arms operation-for-operation
+                    // (same literals, same op order) for bit-equality.
+                    let deg = match branch {
+                        0 => (60.0 * numf / deltaf).rem_euclid(360.0),
+                        1 => 60.0 * numf / deltaf + 120.0,
+                        _ => 60.0 * numf / deltaf + 240.0,
+                    };
+                    hue_mask[row + delta] = mask_of(deg * 0.5);
+                }
+            }
+        }
+
+        let mut sv_bin = vec![0u8; LEVELS * LEVELS];
+        for v in 0..LEVELS {
+            let vf = v as f32;
+            for delta in 0..LEVELS {
+                // Same expression as rgb_to_hsv's saturation.
+                let s = if vf > 0.0 { delta as f32 / vf * 255.0 } else { 0.0 };
+                sv_bin[(v << 8) | delta] = flat_bin(s, vf) as u8;
+            }
+        }
+
+        let exact = fg_threshold.is_finite();
+        let fg_floor = if exact {
+            // For integer d ≥ 0: d <= t  ⇔  d <= floor(t).
+            fg_threshold.floor().clamp(-1.0, 256.0) as i32
+        } else {
+            -1
+        };
+
+        ColorLut {
+            ranges: ranges.to_vec(),
+            fg_threshold,
+            fg_floor,
+            exact,
+            mask_gray: mask_of(0.0),
+            hue_mask,
+            sv_bin,
+        }
+    }
+
+    pub fn num_colors(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn ranges(&self) -> &[HueRanges] {
+        &self.ranges
+    }
+
+    pub fn fg_threshold(&self) -> f32 {
+        self.fg_threshold
+    }
+
+    /// Can the integer fast path reproduce the oracle bit-for-bit?
+    pub fn is_exact(&self) -> bool {
+        self.exact
+    }
+
+    /// Foreground gate on the integer channel diff (max over channels).
+    #[inline(always)]
+    pub fn is_foreground(&self, diff: u8) -> bool {
+        diff as i32 > self.fg_floor
+    }
+
+    /// Classify one integer pixel: (hue-class bitmask, flat sat/val bin).
+    /// Two table reads; no floating point.
+    #[inline(always)]
+    pub fn classify(&self, r: u8, g: u8, b: u8) -> (u8, u8) {
+        let v = r.max(g).max(b);
+        let mn = r.min(g).min(b);
+        let delta = v - mn;
+        let mask = if delta == 0 {
+            self.mask_gray
+        } else {
+            // Branch priority matches rgb_to_hsv: v==r first, then v==g.
+            let (branch, num) = if v == r {
+                (0usize, g as i32 - b as i32)
+            } else if v == g {
+                (1, b as i32 - r as i32)
+            } else {
+                (2, r as i32 - g as i32)
+            };
+            self.hue_mask[(branch * NUM_SPAN + (num + 255) as usize) * LEVELS + delta as usize]
+        };
+        let bin = self.sv_bin[((v as usize) << 8) | delta as usize];
+        (mask, bin)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::hsv::rgb_to_hsv;
+    use crate::color::NamedColor;
+    use crate::util::rng::Rng;
+
+    fn reference_classify(lut: &ColorLut, r: u8, g: u8, b: u8) -> (u8, u8) {
+        let (h, s, v) = rgb_to_hsv(r as f32, g as f32, b as f32);
+        let mut mask = 0u8;
+        for (c, range) in lut.ranges().iter().enumerate() {
+            if range.contains(h) {
+                mask |= 1 << c;
+            }
+        }
+        (mask, flat_bin(s, v) as u8)
+    }
+
+    #[test]
+    fn classify_matches_oracle_on_random_pixels() {
+        let lut = ColorLut::new(
+            &[NamedColor::Red.ranges(), NamedColor::Yellow.ranges()],
+            25.0,
+        );
+        let mut rng = Rng::new(0x107);
+        for _ in 0..50_000 {
+            let (r, g, b) = (
+                rng.below(256) as u8,
+                rng.below(256) as u8,
+                rng.below(256) as u8,
+            );
+            assert_eq!(
+                lut.classify(r, g, b),
+                reference_classify(&lut, r, g, b),
+                "pixel ({r},{g},{b})"
+            );
+        }
+    }
+
+    #[test]
+    fn classify_matches_oracle_on_arbitrary_ranges() {
+        // Odd hand-picked ranges exercise boundary hues.
+        let ranges = [
+            HueRanges::pair(0.0, 0.5, 179.5, 180.0),
+            HueRanges::single(59.9, 60.1),
+            HueRanges::single(0.0, 180.0),
+        ];
+        let lut = ColorLut::new(&ranges, 10.0);
+        let mut rng = Rng::new(9);
+        for _ in 0..20_000 {
+            let (r, g, b) = (
+                rng.below(256) as u8,
+                rng.below(256) as u8,
+                rng.below(256) as u8,
+            );
+            assert_eq!(lut.classify(r, g, b), reference_classify(&lut, r, g, b));
+        }
+    }
+
+    #[test]
+    fn gray_pixels_use_h_zero() {
+        // Achromatic pixels have h = 0, which IS inside red's first range.
+        let lut = ColorLut::new(&[NamedColor::Red.ranges()], 25.0);
+        let (mask, _) = lut.classify(128, 128, 128);
+        assert_eq!(mask, 1);
+        let lut_y = ColorLut::new(&[NamedColor::Yellow.ranges()], 25.0);
+        assert_eq!(lut_y.classify(77, 77, 77).0, 0);
+    }
+
+    #[test]
+    fn red_wraparound_negative_numerator() {
+        // (255, 0, 30): negative g-b pre-modulo must wrap into [170, 180).
+        let lut = ColorLut::new(&[NamedColor::Red.ranges()], 25.0);
+        assert_eq!(lut.classify(255, 0, 30).0, 1);
+    }
+
+    #[test]
+    fn foreground_gate_matches_float_compare() {
+        for t in [0.0f32, 24.3, 25.0, 25.9, 255.0, -3.0] {
+            let lut = ColorLut::new(&[NamedColor::Red.ranges()], t);
+            assert!(lut.is_exact());
+            for d in 0..=255u8 {
+                let reference_bg = (d as f32) <= t;
+                assert_eq!(
+                    lut.is_foreground(d),
+                    !reference_bg,
+                    "diff {d} threshold {t}"
+                );
+            }
+        }
+        assert!(!ColorLut::new(&[NamedColor::Red.ranges()], f32::NAN).is_exact());
+    }
+
+    #[test]
+    fn bin_table_spans_domain() {
+        let lut = ColorLut::new(&[NamedColor::Red.ranges()], 25.0);
+        assert_eq!(lut.classify(0, 0, 0).1, 0); // black: s=0, v=0
+        let (_, bin) = lut.classify(255, 0, 0); // pure red: s=255, v=255
+        assert_eq!(bin, 63);
+    }
+}

@@ -6,6 +6,9 @@
 //! special casing anywhere downstream.
 
 pub mod hsv;
+pub mod lut;
+
+pub use lut::ColorLut;
 
 /// Number of saturation / value bins (B_S = B_V, paper §V-B).
 pub const NUM_BINS: usize = 8;

@@ -185,8 +185,7 @@ pub fn ablation_queue(scale: Scale) -> Vec<(String, Table)> {
     use crate::backend::{BackendQuery, CostModel, Detector};
     use crate::config::{CostConfig, QueryConfig, ShedderConfig};
     use crate::features::Extractor;
-    use crate::pipeline::{run_sim, Policy, SimConfig};
-    use std::collections::HashMap;
+    use crate::pipeline::{backgrounds_of, run_sim, Policy, SimConfig};
 
     let frames = match scale {
         Scale::Tiny => 200,
@@ -205,10 +204,7 @@ pub fn ablation_queue(scale: Scale) -> Vec<(String, Table)> {
     let model = crate::utility::train(&videos, &idx, &[NamedColor::Red], Combine::Single);
     let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0);
     let fps = crate::video::streamer::aggregate_fps(&videos);
-    let mut bgs = HashMap::new();
-    for v in &videos {
-        bgs.insert(v.camera_id(), v.background().to_vec());
-    }
+    let bgs = backgrounds_of(&videos);
 
     let mut t = Table::new(vec!["policy", "qor", "drop_rate", "violation_rate"]);
     for (name, policy) in [

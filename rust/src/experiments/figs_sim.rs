@@ -6,7 +6,10 @@ use crate::backend::{BackendQuery, CostModel, Detector};
 use crate::color::NamedColor;
 use crate::config::{CostConfig, QueryConfig, ShedderConfig};
 use crate::features::Extractor;
-use crate::pipeline::{run_sim, Policy, SimConfig, SimReport};
+use crate::pipeline::{
+    backgrounds_of, default_threads, parallel_map, run_sim, BackgroundMap, Policy, SimConfig,
+    SimReport,
+};
 use crate::util::csv::Table;
 use crate::utility::{train, Combine, UtilityModel};
 use crate::video::{
@@ -51,7 +54,7 @@ fn sim_config(query: QueryConfig, fps_total: f64, policy: Policy) -> SimConfig {
 
 fn run_scenario<I>(
     frames: I,
-    backgrounds: HashMap<u32, Vec<f32>>,
+    backgrounds: &BackgroundMap<'_>,
     cfg: &SimConfig,
     model: &UtilityModel,
 ) -> SimReport
@@ -65,7 +68,7 @@ where
         CostModel::new(cfg.costs.clone(), cfg.seed),
         25.0,
     );
-    run_sim(frames, &backgrounds, cfg, &extractor, &mut backend).expect("sim")
+    run_sim(frames, backgrounds, cfg, &extractor, &mut backend).expect("sim")
 }
 
 /// Render a SimReport into the two Fig. 13 panels: the 5-second-window
@@ -125,9 +128,9 @@ pub fn fig13a(scale: Scale) -> Vec<(String, Table)> {
     let model = train_red_model();
     let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0);
     let cfg = sim_config(query, sv.fps(), Policy::UtilityControlLoop);
-    let mut bgs = HashMap::new();
-    bgs.insert(0u32, sv.background().to_vec());
-    let report = run_scenario(sv.iter(), bgs, &cfg, &model);
+    let mut bgs: BackgroundMap<'_> = HashMap::new();
+    bgs.insert(0u32, sv.background());
+    let report = run_scenario(sv.iter(), &bgs, &cfg, &model);
     report_tables("fig13a", &report, cfg.query.latency_bound_ms)
 }
 
@@ -138,11 +141,7 @@ pub fn fig13b(scale: Scale) -> Vec<(String, Table)> {
     let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0);
     let fps = crate::video::streamer::aggregate_fps(&videos);
     let cfg = sim_config(query, fps, Policy::UtilityControlLoop);
-    let mut bgs = HashMap::new();
-    for v in &videos {
-        bgs.insert(v.camera_id(), v.background().to_vec());
-    }
-    let report = run_scenario(Streamer::new(&videos), bgs, &cfg, &model);
+    let report = run_scenario(Streamer::new(&videos), &backgrounds_of(&videos), &cfg, &model);
     report_tables("fig13b", &report, cfg.query.latency_bound_ms)
 }
 
@@ -163,29 +162,32 @@ pub fn fig14(scale: Scale) -> Vec<(String, Table)> {
         "qor_random",
         "drop_random",
     ]);
-    for k in 1..=max_streams {
+    // Each stream count is an independent simulation pair → fan the sweep
+    // out across workers; rows come back in k order (deterministic merge).
+    let ks: Vec<usize> = (1..=max_streams).collect();
+    let rows = parallel_map(&ks, default_threads(), |_, &k| {
         let videos = smart_city_videos(scale, k);
         let fps = crate::video::streamer::aggregate_fps(&videos);
-        let mut bgs = HashMap::new();
-        for v in &videos {
-            bgs.insert(v.camera_id(), v.background().to_vec());
-        }
+        let bgs = backgrounds_of(&videos);
         let cfg_u = sim_config(query.clone(), fps, Policy::UtilityControlLoop);
-        let ru = run_scenario(Streamer::new(&videos), bgs.clone(), &cfg_u, &model);
+        let ru = run_scenario(Streamer::new(&videos), &bgs, &cfg_u, &model);
         // Paper: baseline target rate from Eq. 18/19 assuming 500 ms.
         let cfg_r = sim_config(
             query.clone(),
             fps,
             Policy::RandomRate { assumed_proc_q_ms: 500.0 },
         );
-        let rr = run_scenario(Streamer::new(&videos), bgs, &cfg_r, &model);
-        t.push(&[
+        let rr = run_scenario(Streamer::new(&videos), &bgs, &cfg_r, &model);
+        [
             k as f64,
             ru.qor.overall(),
             ru.observed_drop_rate(),
             rr.qor.overall(),
             rr.observed_drop_rate(),
-        ]);
+        ]
+    });
+    for row in &rows {
+        t.push(row);
     }
     vec![("fig14".into(), t)]
 }

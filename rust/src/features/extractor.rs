@@ -3,20 +3,41 @@
 //! * `Backend::Artifact` — the production path: one PJRT execution of the
 //!   AOT artifact (`shedder_k1` / `shedder_k2`) per frame. The L1 Pallas
 //!   histogram kernel and the L2 utility weighting run inside the compiled
-//!   module; Rust only moves tensors.
-//! * `Backend::Native` — the pure-Rust oracle (bit-equal; used for very
-//!   long sweeps and as the test baseline).
+//!   module; Rust only moves tensors (and, since the zero-allocation
+//!   sweep, reuses the frame/background input tensors across calls).
+//! * `Backend::Native` — the pure-Rust path. It routes through the
+//!   [`ColorLut`] fused fast kernel, which is bit-equal to the reference
+//!   oracle on every input (integer frames take the table path, anything
+//!   else falls back per frame), so it is both the test baseline and the
+//!   default for very long sweeps.
+//!
+//! The allocating [`Extractor::extract`] remains for convenience; hot
+//! loops should prefer [`Extractor::extract_into`] with caller-owned
+//! [`FrameFeatures`] / [`UtilityValues`] to keep the per-frame path
+//! allocation-free.
 
-use super::{reference, FrameFeatures, UtilityValues, HIST};
-use crate::runtime::{Engine, Executable, Tensor};
+use super::fast::{compute_features_fast_into, QuantScratch};
+use super::{FrameFeatures, UtilityValues, HIST};
+use crate::color::ColorLut;
+use crate::runtime::{fill_cached, Engine, Executable, Tensor};
 use crate::utility::model::UtilityModel;
 use anyhow::{bail, Result};
+use std::cell::RefCell;
 use std::rc::Rc;
 
 /// Which compute path extracts features.
 pub enum Backend {
     Native,
     Artifact { exe: Rc<Executable>, frame_h: usize, frame_w: usize },
+}
+
+/// Reusable buffers behind a `RefCell` so `extract*` can stay `&self`.
+#[derive(Default)]
+struct Scratch {
+    quant: QuantScratch,
+    /// Cached PJRT input tensors (frame + background), allocated once.
+    rgb_t: Option<Tensor>,
+    bg_t: Option<Tensor>,
 }
 
 /// Per-query feature/utility extractor.
@@ -26,13 +47,26 @@ pub struct Extractor {
     /// Cached artifact inputs that depend only on the model.
     ranges_t: Tensor,
     m_t: Tensor,
+    /// Precomputed RGB→(hue mask, sat/val bin) tables — native backend
+    /// only (the artifact backend computes features on-device and would
+    /// otherwise pay ~458 KiB + the table build for nothing).
+    lut: Option<ColorLut>,
+    scratch: RefCell<Scratch>,
 }
 
 impl Extractor {
     /// Native (pure Rust) extractor.
     pub fn native(model: UtilityModel) -> Self {
         let (ranges_t, m_t) = model_tensors(&model);
-        Extractor { model, backend: Backend::Native, ranges_t, m_t }
+        let lut = Some(ColorLut::new(&model.ranges(), model.fg_threshold));
+        Extractor {
+            model,
+            backend: Backend::Native,
+            ranges_t,
+            m_t,
+            lut,
+            scratch: RefCell::new(Scratch::default()),
+        }
     }
 
     /// Artifact-backed extractor over a PJRT engine.
@@ -45,6 +79,8 @@ impl Extractor {
             backend: Backend::Artifact { exe, frame_h: m.frame_h, frame_w: m.frame_w },
             ranges_t,
             m_t,
+            lut: None,
+            scratch: RefCell::new(Scratch::default()),
         })
     }
 
@@ -56,18 +92,39 @@ impl Extractor {
         matches!(self.backend, Backend::Artifact { .. })
     }
 
-    /// Extract features and utilities for one frame.
+    /// Extract features and utilities for one frame (allocating wrapper).
     pub fn extract(&self, rgb: &[f32], background: &[f32]) -> Result<(FrameFeatures, UtilityValues)> {
+        let mut feats = FrameFeatures::empty();
+        let mut utils = UtilityValues::empty();
+        self.extract_into(rgb, background, &mut feats, &mut utils)?;
+        Ok((feats, utils))
+    }
+
+    /// Zero-allocation extraction: writes into caller-owned buffers that
+    /// are reused across frames. On the native backend this is the fused
+    /// LUT kernel; on the artifact backend the input tensors are cached
+    /// so the PJRT call no longer copies frame + background into fresh
+    /// allocations.
+    pub fn extract_into(
+        &self,
+        rgb: &[f32],
+        background: &[f32],
+        feats: &mut FrameFeatures,
+        utils: &mut UtilityValues,
+    ) -> Result<()> {
         match &self.backend {
             Backend::Native => {
-                let feats = reference::compute_features(
+                let lut = self.lut.as_ref().expect("native backend always has a LUT");
+                let mut scratch = self.scratch.borrow_mut();
+                compute_features_fast_into(
+                    lut,
                     rgb,
                     background,
-                    &self.model.ranges(),
-                    self.model.fg_threshold,
+                    &mut scratch.quant,
+                    feats,
                 );
-                let utils = self.model.utility(&feats);
-                Ok((feats, utils))
+                self.model.utility_into(feats, utils);
+                Ok(())
             }
             Backend::Artifact { exe, frame_h, frame_w } => {
                 let expected = frame_h * frame_w * 3;
@@ -79,30 +136,42 @@ impl Extractor {
                         frame_w
                     );
                 }
-                let rgb_t = Tensor::new(rgb.to_vec(), vec![*frame_h, *frame_w, 3])?;
-                let bg_t = Tensor::new(background.to_vec(), vec![*frame_h, *frame_w, 3])?;
-                let outs = exe.run(&[&rgb_t, &bg_t, &self.ranges_t, &self.m_t])?;
-                self.parse_outputs(outs)
+                let mut scratch = self.scratch.borrow_mut();
+                let shape = [*frame_h, *frame_w, 3];
+                fill_cached(&mut scratch.rgb_t, rgb, &shape)?;
+                fill_cached(&mut scratch.bg_t, background, &shape)?;
+                let rgb_t = scratch.rgb_t.as_ref().unwrap();
+                let bg_t = scratch.bg_t.as_ref().unwrap();
+                let outs = exe.run(&[rgb_t, bg_t, &self.ranges_t, &self.m_t])?;
+                drop(scratch);
+                self.parse_outputs_into(outs, feats, utils)
             }
         }
     }
 
-    /// Decode artifact outputs into (features, utilities).
-    fn parse_outputs(&self, outs: Vec<Tensor>) -> Result<(FrameFeatures, UtilityValues)> {
+    /// Decode artifact outputs into caller-owned (features, utilities).
+    fn parse_outputs_into(
+        &self,
+        outs: Vec<Tensor>,
+        feats: &mut FrameFeatures,
+        utils: &mut UtilityValues,
+    ) -> Result<()> {
         let k = self.model.colors.len();
+        feats.reset(k);
+        utils.per_color.clear();
         match k {
             1 => {
                 // shedder_k1: utility [1], hf [1], pf [1,8,8], fg_frac [].
                 let [u, hf, pf, fg]: [Tensor; 4] = outs
                     .try_into()
                     .map_err(|_| anyhow::anyhow!("shedder_k1: wrong output arity"))?;
-                let feats = FrameFeatures {
-                    hf: hf.data().to_vec(),
-                    pf: vec![slice_to_hist(pf.data())?],
-                    fg_frac: fg.item()?,
-                };
+                feats.hf.copy_from_slice(hf.data());
+                feats.pf[0] = slice_to_hist(pf.data())?;
+                feats.fg_frac = fg.item()?;
                 let u0 = u.data()[0];
-                Ok((feats, UtilityValues { per_color: vec![u0], combined: u0 }))
+                utils.per_color.push(u0);
+                utils.combined = u0;
+                Ok(())
             }
             2 => {
                 // shedder_k2: u [2], u_or [], u_and [], hf [2], pf [2,8,8], fg_frac [].
@@ -110,18 +179,18 @@ impl Extractor {
                     .try_into()
                     .map_err(|_| anyhow::anyhow!("shedder_k2: wrong output arity"))?;
                 let pfd = pf.data();
-                let feats = FrameFeatures {
-                    hf: hf.data().to_vec(),
-                    pf: vec![slice_to_hist(&pfd[..HIST])?, slice_to_hist(&pfd[HIST..])?],
-                    fg_frac: fg.item()?,
-                };
+                feats.hf.copy_from_slice(hf.data());
+                feats.pf[0] = slice_to_hist(&pfd[..HIST])?;
+                feats.pf[1] = slice_to_hist(&pfd[HIST..])?;
+                feats.fg_frac = fg.item()?;
                 use crate::utility::model::Combine;
-                let combined = match self.model.combine {
+                utils.per_color.extend_from_slice(u.data());
+                utils.combined = match self.model.combine {
                     Combine::Or => u_or.item()?,
                     Combine::And => u_and.item()?,
                     Combine::Single => bail!("single-color model with k2 artifact"),
                 };
-                Ok((feats, UtilityValues { per_color: u.data().to_vec(), combined }))
+                Ok(())
             }
             n => bail!("unsupported color count {n}"),
         }
@@ -187,6 +256,30 @@ mod tests {
         assert!((feats.hf[0] - 1.0).abs() < 1e-6);
         // Vivid red lands in bin 62 (see reference.rs golden) → u = 1.0.
         assert!((utils.combined - 1.0).abs() < 1e-5, "u={}", utils.combined);
+    }
+
+    #[test]
+    fn extract_into_agrees_with_extract() {
+        let ex = Extractor::native(toy_model());
+        let n = 16 * 16 * 3;
+        let bg = vec![96.0; n];
+        let mut rgb = bg.clone();
+        for p in 0..12 {
+            rgb[p * 3..p * 3 + 3].copy_from_slice(&[208.0, 22.0, 28.0]);
+        }
+        // Add a fractional pixel so both code paths (LUT + fallback) are
+        // exercised across the two frames below.
+        let mut rgb_frac = rgb.clone();
+        rgb_frac[100] += 0.5;
+
+        let mut feats = FrameFeatures::empty();
+        let mut utils = UtilityValues::empty();
+        for frame in [&rgb, &rgb_frac] {
+            let (f1, u1) = ex.extract(frame, &bg).unwrap();
+            ex.extract_into(frame, &bg, &mut feats, &mut utils).unwrap();
+            assert_eq!(feats, f1);
+            assert_eq!(utils, u1);
+        }
     }
 
     #[test]

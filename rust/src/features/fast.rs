@@ -1,0 +1,207 @@
+//! Fused zero-allocation feature kernel over [`ColorLut`] tables.
+//!
+//! Strategy: quantize the frame + background to u8 **only if every channel
+//! is already integer-valued** (real camera frames are u8; the synthetic
+//! generator can emit them via `VideoConfig::quantize_u8`). On the integer
+//! path, per-pixel work is an integer background-subtraction gate plus two
+//! table reads and a branchless histogram bump — no floating point until
+//! the final normalization, which reproduces the oracle's f32 divisions
+//! exactly (counts ≤ 2²⁴ are exact in f32).
+//!
+//! If any channel is non-integral (e.g. float sensor noise), the whole
+//! frame falls back to [`reference::compute_features_into`], so the result
+//! is **bit-identical to the oracle on every input** — the fast path is
+//! a pure optimization, never a semantics change. The equivalence is
+//! property-pinned by `rust/tests/fast_path.rs`.
+
+use super::reference::{self, MAX_COLORS};
+use super::{FrameFeatures, HIST};
+use crate::color::ColorLut;
+
+/// Reusable per-extractor buffers for the quantized frame/background.
+#[derive(Debug, Clone, Default)]
+pub struct QuantScratch {
+    rgb_u8: Vec<u8>,
+    bg_u8: Vec<u8>,
+    /// Raw per-bin hit counts, k × HIST.
+    counts: Vec<u32>,
+}
+
+/// Quantize `src` into `dst`; returns false (dst content unspecified) as
+/// soon as a channel is not exactly representable as u8.
+#[inline]
+fn quantize(src: &[f32], dst: &mut Vec<u8>) -> bool {
+    dst.clear();
+    dst.reserve(src.len());
+    for &x in src {
+        let q = x as u8; // saturating cast; NaN → 0
+        if q as f32 != x {
+            return false;
+        }
+        dst.push(q);
+    }
+    true
+}
+
+/// Compute HF + PF through the LUT fast path, falling back to the
+/// reference oracle when exactness cannot be guaranteed. Always
+/// bit-equal to `reference::compute_features(rgb, background,
+/// lut.ranges(), lut.fg_threshold())`.
+pub fn compute_features_fast_into(
+    lut: &ColorLut,
+    rgb: &[f32],
+    background: &[f32],
+    scratch: &mut QuantScratch,
+    out: &mut FrameFeatures,
+) {
+    assert_eq!(rgb.len(), background.len());
+    assert_eq!(rgb.len() % 3, 0);
+    let k = lut.num_colors();
+    debug_assert!(k <= MAX_COLORS);
+
+    let integral = lut.is_exact()
+        && quantize(rgb, &mut scratch.rgb_u8)
+        && quantize(background, &mut scratch.bg_u8);
+    if !integral {
+        reference::compute_features_into(
+            rgb,
+            background,
+            lut.ranges(),
+            lut.fg_threshold(),
+            out,
+        );
+        return;
+    }
+
+    out.reset(k);
+    scratch.counts.clear();
+    scratch.counts.resize(k * HIST, 0);
+    let counts = &mut scratch.counts[..k * HIST];
+    let n_px = rgb.len() / 3;
+    let frame = &scratch.rgb_u8[..];
+    let bg = &scratch.bg_u8[..];
+
+    let mut in_color = [0u64; MAX_COLORS];
+    let mut fg_count = 0u64;
+
+    for p in 0..n_px {
+        let i = 3 * p;
+        let (r, g, b) = (frame[i], frame[i + 1], frame[i + 2]);
+        let diff = r
+            .abs_diff(bg[i])
+            .max(g.abs_diff(bg[i + 1]))
+            .max(b.abs_diff(bg[i + 2]));
+        if !lut.is_foreground(diff) {
+            continue;
+        }
+        fg_count += 1;
+        let (mask, bin) = lut.classify(r, g, b);
+        // Branchless bump: each color adds 0 or 1 from its mask bit.
+        for c in 0..k {
+            let on = (mask >> c) & 1;
+            in_color[c] += on as u64;
+            counts[c * HIST + bin as usize] += on as u32;
+        }
+    }
+
+    // Counts → f32 (exact for < 2²⁴), then the oracle's normalization.
+    for c in 0..k {
+        for (dst, &n) in out.pf[c].iter_mut().zip(&counts[c * HIST..(c + 1) * HIST]) {
+            *dst = n as f32;
+        }
+    }
+    reference::finalize_features(out, &in_color, fg_count, n_px);
+}
+
+/// Convenience allocating wrapper (tests / one-off callers).
+pub fn compute_features_fast(
+    lut: &ColorLut,
+    rgb: &[f32],
+    background: &[f32],
+) -> FrameFeatures {
+    let mut scratch = QuantScratch::default();
+    let mut out = FrameFeatures::empty();
+    compute_features_fast_into(lut, rgb, background, &mut scratch, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+    use crate::features::reference::FG_THRESHOLD;
+    use crate::util::rng::Rng;
+
+    fn random_int_frame(rng: &mut Rng, n_px: usize) -> Vec<f32> {
+        (0..n_px * 3).map(|_| rng.below(256) as f32).collect()
+    }
+
+    #[test]
+    fn integer_frames_match_reference_exactly() {
+        let ranges = [NamedColor::Red.ranges(), NamedColor::Yellow.ranges()];
+        let lut = ColorLut::new(&ranges, FG_THRESHOLD);
+        let mut rng = Rng::new(0xFA57);
+        for _ in 0..50 {
+            let n_px = 16 * 16;
+            let bg = random_int_frame(&mut rng, n_px);
+            // Mostly-background frame with some changed pixels.
+            let mut rgb = bg.clone();
+            for _ in 0..rng.range(0, 200) {
+                let p = rng.range(0, n_px);
+                for c in 0..3 {
+                    rgb[3 * p + c] = rng.below(256) as f32;
+                }
+            }
+            let fast = compute_features_fast(&lut, &rgb, &bg);
+            let oracle =
+                reference::compute_features(&rgb, &bg, &ranges, FG_THRESHOLD);
+            assert_eq!(fast, oracle);
+        }
+    }
+
+    #[test]
+    fn non_integer_frames_fall_back_and_still_match() {
+        let ranges = [NamedColor::Red.ranges()];
+        let lut = ColorLut::new(&ranges, FG_THRESHOLD);
+        let mut rng = Rng::new(0xF10a7);
+        let n_px = 12 * 12;
+        let bg = random_int_frame(&mut rng, n_px);
+        let mut rgb = bg.clone();
+        rgb[17] += 0.25; // one fractional channel poisons the whole frame
+        rgb[40] = 250.0;
+        let fast = compute_features_fast(&lut, &rgb, &bg);
+        let oracle = reference::compute_features(&rgb, &bg, &ranges, FG_THRESHOLD);
+        assert_eq!(fast, oracle);
+    }
+
+    #[test]
+    fn out_of_range_values_fall_back() {
+        let ranges = [NamedColor::Red.ranges()];
+        let lut = ColorLut::new(&ranges, FG_THRESHOLD);
+        let bg = vec![96.0f32; 8 * 8 * 3];
+        let mut rgb = bg.clone();
+        rgb[0] = 300.0; // not representable as u8 → reference path
+        rgb[1] = -4.0;
+        let fast = compute_features_fast(&lut, &rgb, &bg);
+        let oracle = reference::compute_features(&rgb, &bg, &ranges, FG_THRESHOLD);
+        assert_eq!(fast, oracle);
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean_across_frames() {
+        let ranges = [NamedColor::Red.ranges(), NamedColor::Yellow.ranges()];
+        let lut = ColorLut::new(&ranges, FG_THRESHOLD);
+        let mut scratch = QuantScratch::default();
+        let mut out = FrameFeatures::empty();
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let n_px = 10 * 10;
+            let bg = random_int_frame(&mut rng, n_px);
+            let rgb = random_int_frame(&mut rng, n_px);
+            compute_features_fast_into(&lut, &rgb, &bg, &mut scratch, &mut out);
+            let oracle =
+                reference::compute_features(&rgb, &bg, &ranges, FG_THRESHOLD);
+            assert_eq!(out, oracle);
+        }
+    }
+}

@@ -1,16 +1,20 @@
 //! Per-frame color features (paper Eq. 6–11): Hue Fraction and the 8×8
 //! saturation/value Pixel Fraction matrix, per query color.
 //!
-//! Two interchangeable backends compute them:
+//! Three interchangeable compute paths produce identical numbers:
 //!
 //! * [`reference`] — pure Rust, the bit-level oracle;
+//! * [`fast`] — the fused [`crate::color::ColorLut`] kernel: table-driven
+//!   per-pixel work for integer frames, bit-equal to the oracle on every
+//!   input (pinned by `rust/tests/fast_path.rs`); the native extractor's
+//!   default;
 //! * [`extractor`] — the AOT artifact path through PJRT (the production
 //!   configuration: L1 Pallas kernel + L2 JAX graph compiled by
-//!   `make artifacts`).
-//!
-//! `rust/tests/artifact_oracle.rs` pins the two together numerically.
+//!   `make artifacts`); `rust/tests/artifact_oracle.rs` pins it to the
+//!   oracle numerically.
 
 pub mod extractor;
+pub mod fast;
 pub mod reference;
 
 use crate::color::NUM_BINS;
@@ -33,6 +37,23 @@ impl FrameFeatures {
     pub fn num_colors(&self) -> usize {
         self.hf.len()
     }
+
+    /// An empty value for reuse with the `*_into` APIs.
+    pub fn empty() -> FrameFeatures {
+        FrameFeatures { hf: Vec::new(), pf: Vec::new(), fg_frac: 0.0 }
+    }
+
+    /// Resize for `k` colors and zero every field without reallocating
+    /// once capacity is warm.
+    pub fn reset(&mut self, k: usize) {
+        self.hf.clear();
+        self.hf.resize(k, 0.0);
+        self.pf.resize(k, [0.0; HIST]);
+        for m in self.pf.iter_mut() {
+            *m = [0.0; HIST];
+        }
+        self.fg_frac = 0.0;
+    }
 }
 
 /// Utility values computed from features by a trained model (Eq. 14/15).
@@ -45,5 +66,13 @@ pub struct UtilityValues {
     pub combined: f32,
 }
 
+impl UtilityValues {
+    /// An empty value for reuse with the `*_into` APIs.
+    pub fn empty() -> UtilityValues {
+        UtilityValues { per_color: Vec::new(), combined: 0.0 }
+    }
+}
+
 pub use extractor::{Backend, Extractor};
-pub use reference::compute_features;
+pub use fast::{compute_features_fast, compute_features_fast_into, QuantScratch};
+pub use reference::{compute_features, compute_features_into};

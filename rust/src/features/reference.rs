@@ -12,6 +12,10 @@ use crate::color::HueRanges;
 /// Default background-subtraction threshold (matches `ref.FG_THRESHOLD`).
 pub const FG_THRESHOLD: f32 = 25.0;
 
+/// Maximum query colors the stack-allocated accumulators support (the
+/// paper's queries use 1–2; `ColorLut` bitmasks allow up to 8).
+pub const MAX_COLORS: usize = 8;
+
 /// Compute HF + PF for each query color over one RGB frame.
 ///
 /// `rgb` and `background` are row-major H*W*3 in [0, 255]. The pixel
@@ -23,13 +27,29 @@ pub fn compute_features(
     ranges: &[HueRanges],
     fg_threshold: f32,
 ) -> FrameFeatures {
+    let mut out = FrameFeatures::empty();
+    compute_features_into(rgb, background, ranges, fg_threshold, &mut out);
+    out
+}
+
+/// Zero-allocation variant: writes into caller-owned [`FrameFeatures`]
+/// (buffers are reused across calls once warm). Numerically identical to
+/// [`compute_features`].
+pub fn compute_features_into(
+    rgb: &[f32],
+    background: &[f32],
+    ranges: &[HueRanges],
+    fg_threshold: f32,
+    out: &mut FrameFeatures,
+) {
     assert_eq!(rgb.len(), background.len());
     assert_eq!(rgb.len() % 3, 0);
     let n_px = rgb.len() / 3;
     let k = ranges.len();
+    assert!(k <= MAX_COLORS, "at most {MAX_COLORS} colors, got {k}");
+    out.reset(k);
 
-    let mut bins = vec![[0.0f32; HIST]; k];
-    let mut in_color = vec![0u64; k];
+    let mut in_color = [0u64; MAX_COLORS];
     let mut fg_count = 0u64;
 
     for p in 0..n_px {
@@ -48,30 +68,36 @@ pub fn compute_features(
         for (c, range) in ranges.iter().enumerate() {
             if range.contains(h) {
                 in_color[c] += 1;
-                bins[c][flat_bin(s, v)] += 1.0;
+                out.pf[c][flat_bin(s, v)] += 1.0;
             }
         }
     }
 
-    let mut hf = Vec::with_capacity(k);
-    let mut pf = Vec::with_capacity(k);
-    for c in 0..k {
-        hf.push(if fg_count > 0 {
+    finalize_features(out, &in_color, fg_count, n_px);
+}
+
+/// Shared normalization tail (Eq. 6 + 9/10): counts → fractions. `out.pf`
+/// holds raw per-bin counts on entry, normalized PF matrices on exit.
+pub(crate) fn finalize_features(
+    out: &mut FrameFeatures,
+    in_color: &[u64; MAX_COLORS],
+    fg_count: u64,
+    n_px: usize,
+) {
+    for c in 0..out.pf.len() {
+        out.hf[c] = if fg_count > 0 {
             in_color[c] as f32 / fg_count as f32
         } else {
             0.0
-        });
-        let mut m = bins[c];
+        };
         if in_color[c] > 0 {
             let denom = in_color[c] as f32;
-            for x in m.iter_mut() {
+            for x in out.pf[c].iter_mut() {
                 *x /= denom;
             }
         }
-        pf.push(m);
     }
-
-    FrameFeatures { hf, pf, fg_frac: fg_count as f32 / n_px as f32 }
+    out.fg_frac = fg_count as f32 / n_px as f32;
 }
 
 #[cfg(test)]

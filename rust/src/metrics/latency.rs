@@ -91,6 +91,15 @@ impl LatencyTracker {
     pub fn quantile_ms(&mut self, q: f64) -> f64 {
         self.percentiles.quantile(q)
     }
+
+    /// Absorb another tracker (same bound assumed; used by the sharded
+    /// sweep driver's deterministic metric merge).
+    pub fn merge(&mut self, other: &LatencyTracker) {
+        self.summary.merge(&other.summary);
+        self.percentiles.merge(&other.percentiles);
+        self.violations += other.violations;
+        self.count += other.count;
+    }
 }
 
 /// Fixed-width time-window series (the paper plots 5-second windows):
@@ -138,6 +147,23 @@ impl WindowSeries {
 
     pub fn is_empty(&self) -> bool {
         self.windows.is_empty()
+    }
+
+    /// Absorb another series with the same window width.
+    pub fn merge(&mut self, other: &WindowSeries) {
+        assert_eq!(
+            self.window_ms, other.window_ms,
+            "window width mismatch in merge"
+        );
+        if other.windows.len() > self.windows.len() {
+            self.windows
+                .resize(other.windows.len(), (f64::NEG_INFINITY, 0.0, 0));
+        }
+        for (w, &(omax, osum, on)) in self.windows.iter_mut().zip(&other.windows) {
+            w.0 = w.0.max(omax);
+            w.1 += osum;
+            w.2 += on;
+        }
     }
 }
 

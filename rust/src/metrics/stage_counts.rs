@@ -65,6 +65,14 @@ impl StageCounts {
         self.window_ms
     }
 
+    /// Absorb another stage-count set (same window width).
+    pub fn merge(&mut self, other: &StageCounts) {
+        assert_eq!(self.window_ms, other.window_ms);
+        for (mine, theirs) in self.series.iter_mut().zip(&other.series) {
+            mine.merge(theirs);
+        }
+    }
+
     /// Count of frames per window for a stage.
     pub fn counts(&self, stage: Stage) -> Vec<(f64, u64)> {
         self.series[stage as usize]

@@ -2,11 +2,15 @@
 //!
 //! * [`sim`] — deterministic discrete-event simulator with calibrated stage
 //!   costs; regenerates the paper's long-running experiments in seconds.
+//! * [`parallel`] — sharded multi-camera sweep engine: one simulation shard
+//!   per camera across scoped threads, deterministic metric merge.
 //! * [`realtime`] — thread-per-component runtime over std channels with the
 //!   PJRT artifact path on the hot loop; used by the examples and the
 //!   wall-clock benchmarks.
 
+pub mod parallel;
 pub mod realtime;
 pub mod sim;
 
-pub use sim::{run_sim, Policy, SimConfig, SimReport};
+pub use parallel::{default_threads, merge_reports, parallel_map, run_sharded_sim};
+pub use sim::{backgrounds_of, run_sim, BackgroundMap, Policy, SimConfig, SimReport};

@@ -1,0 +1,222 @@
+//! Sharded multi-camera sweep engine: run independent simulations across
+//! `std::thread::scope` workers with a deterministic merge of metrics.
+//!
+//! Two layers:
+//!
+//! * [`parallel_map`] — a minimal deterministic parallel map (rayon is
+//!   unavailable offline): items are claimed from an atomic cursor, each
+//!   result lands in its own slot, and the output order is the input
+//!   order regardless of scheduling. A panic in any worker propagates
+//!   when the scope joins.
+//! * [`run_sharded_sim`] — the multi-camera scaling scenario from the
+//!   ROADMAP north-star: one **shard per camera**, each with its own
+//!   Load Shedder + backend executor (the per-camera edge-box deployment,
+//!   complementing `run_sim`'s shared-shedder deployment), merged into a
+//!   single [`SimReport`]. Per-shard seeds are derived from the base seed
+//!   and camera id, so results are reproducible and independent of the
+//!   worker count.
+//!
+//! The extractor/backend types are deliberately constructed *inside* each
+//! worker (they are `!Send`: the artifact backend holds `Rc` handles), so
+//! shards share only `Sync` inputs: the videos, the model, the config.
+
+use crate::backend::{BackendQuery, CostModel, Detector};
+use crate::features::Extractor;
+use crate::pipeline::sim::{run_sim, SimConfig, SimReport};
+use crate::utility::UtilityModel;
+use crate::video::Video;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count for sweep parallelism (defaults to the machine).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Deterministic parallel map: applies `f` to every item on up to
+/// `threads` scoped workers; `out[i]` is always `f(i, &items[i])`.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled slot"))
+        .collect()
+}
+
+/// Merge shard reports by reference (index order → deterministic
+/// output); only the first report is copied, the rest are absorbed. The
+/// control-loop series is re-sorted by timestamp across shards.
+pub fn merge_reports<'a, I>(reports: I) -> Option<SimReport>
+where
+    I: IntoIterator<Item = &'a SimReport>,
+{
+    let mut it = reports.into_iter();
+    let mut acc = it.next()?.clone();
+    for r in it {
+        acc.qor.merge(&r.qor);
+        acc.latency.merge(&r.latency);
+        acc.latency_windows.merge(&r.latency_windows);
+        acc.stages.merge(&r.stages);
+        acc.control_series.extend_from_slice(&r.control_series);
+        acc.ingress += r.ingress;
+        acc.transmitted += r.transmitted;
+        acc.shed += r.shed;
+        acc.end_ms = acc.end_ms.max(r.end_ms);
+    }
+    acc.control_series
+        .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    Some(acc)
+}
+
+/// Run the N-camera simulation as one shard per camera — each camera gets
+/// its own Load Shedder and (token-paced) backend — across `threads`
+/// workers, then merge metrics deterministically.
+///
+/// `cfg` is the per-shard template: `fps_total` is overridden with each
+/// camera's rate and the seed is decorrelated per camera. Returns the
+/// merged report plus per-camera reports (camera-id order).
+pub fn run_sharded_sim(
+    videos: &[Video],
+    cfg: &SimConfig,
+    model: &UtilityModel,
+    threads: usize,
+) -> Result<(SimReport, Vec<(u32, SimReport)>)> {
+    if videos.is_empty() {
+        return Err(anyhow!("run_sharded_sim needs at least one camera"));
+    }
+    let shard_results = parallel_map(videos, threads, |_, video| -> Result<SimReport> {
+        let mut shard_cfg = cfg.clone();
+        shard_cfg.fps_total = video.config.fps;
+        shard_cfg.seed = cfg
+            .seed
+            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(video.camera_id() as u64 + 1));
+        let extractor = Extractor::native(model.clone());
+        let mut backend = BackendQuery::new(
+            shard_cfg.query.clone(),
+            Detector::native(12, model.fg_threshold),
+            CostModel::new(shard_cfg.costs.clone(), shard_cfg.seed),
+            model.fg_threshold,
+        );
+        let mut bgs: HashMap<u32, &[f32]> = HashMap::new();
+        bgs.insert(video.camera_id(), video.background());
+        run_sim(video.iter(), &bgs, &shard_cfg, &extractor, &mut backend)
+    });
+
+    let mut per_camera = Vec::with_capacity(videos.len());
+    for (video, result) in videos.iter().zip(shard_results) {
+        per_camera.push((video.camera_id(), result?));
+    }
+    let merged =
+        merge_reports(per_camera.iter().map(|(_, r)| r)).expect("non-empty shard set");
+    Ok((merged, per_camera))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+    use crate::config::{CostConfig, QueryConfig, ShedderConfig};
+    use crate::pipeline::Policy;
+    use crate::utility::{train, Combine};
+    use crate::video::VideoConfig;
+
+    fn cameras(n: usize, frames: usize) -> Vec<Video> {
+        (0..n)
+            .map(|i| {
+                let mut vc = VideoConfig::new(11, 0x5AD + i as u64, i as u32, frames);
+                vc.traffic.vehicle_rate = 0.35;
+                Video::new(vc)
+            })
+            .collect()
+    }
+
+    fn cfg() -> SimConfig {
+        SimConfig {
+            costs: CostConfig::default(),
+            shedder: ShedderConfig::default(),
+            query: QueryConfig::single(NamedColor::Red).with_latency_bound(1500.0),
+            backend_tokens: 1,
+            policy: Policy::UtilityControlLoop,
+            seed: 0x5A,
+            fps_total: 10.0,
+        }
+    }
+
+    #[test]
+    fn parallel_map_is_deterministic_and_ordered() {
+        let items: Vec<u64> = (0..64).collect();
+        let serial = parallel_map(&items, 1, |i, &x| x * 3 + i as u64);
+        let parallel = parallel_map(&items, 8, |i, &x| x * 3 + i as u64);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial[5], 20);
+        let empty: Vec<u64> = Vec::new();
+        assert!(parallel_map(&empty, 4, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn sharded_sim_conserves_frames_and_is_thread_count_invariant() {
+        let videos = cameras(4, 120);
+        let model = train(&videos, &[0, 1], &[NamedColor::Red], Combine::Single);
+        let cfg = cfg();
+        let (serial, per_cam_serial) = run_sharded_sim(&videos, &cfg, &model, 1).unwrap();
+        let (parallel, per_cam_par) = run_sharded_sim(&videos, &cfg, &model, 4).unwrap();
+
+        assert_eq!(serial.ingress, 480);
+        assert_eq!(serial.ingress, serial.transmitted + serial.shed);
+        // Bit-for-bit the same decisions regardless of worker count.
+        assert_eq!(serial.ingress, parallel.ingress);
+        assert_eq!(serial.transmitted, parallel.transmitted);
+        assert_eq!(serial.shed, parallel.shed);
+        assert_eq!(serial.qor.overall(), parallel.qor.overall());
+        assert_eq!(serial.latency.count(), parallel.latency.count());
+        assert_eq!(serial.control_series, parallel.control_series);
+        for ((c1, r1), (c2, r2)) in per_cam_serial.iter().zip(&per_cam_par) {
+            assert_eq!(c1, c2);
+            assert_eq!(r1.ingress, r2.ingress);
+            assert_eq!(r1.shed, r2.shed);
+        }
+    }
+
+    #[test]
+    fn merged_metrics_match_shard_sums() {
+        let videos = cameras(3, 100);
+        let model = train(&videos, &[0], &[NamedColor::Red], Combine::Single);
+        let (merged, per_camera) = run_sharded_sim(&videos, &cfg(), &model, 2).unwrap();
+        let sum_ingress: u64 = per_camera.iter().map(|(_, r)| r.ingress).sum();
+        let sum_shed: u64 = per_camera.iter().map(|(_, r)| r.shed).sum();
+        assert_eq!(merged.ingress, sum_ingress);
+        assert_eq!(merged.shed, sum_shed);
+        let sum_latency: u64 = per_camera.iter().map(|(_, r)| r.latency.count()).sum();
+        assert_eq!(merged.latency.count(), sum_latency);
+    }
+}

@@ -16,7 +16,7 @@
 
 use crate::backend::{BackendQuery, CostModel, Detector};
 use crate::config::{CostConfig, QueryConfig, ShedderConfig};
-use crate::features::Extractor;
+use crate::features::{Extractor, FrameFeatures, UtilityValues};
 use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts};
 use crate::runtime::Engine;
 use crate::shedder::{Decision, LoadShedder, TokenBucket};
@@ -158,6 +158,10 @@ pub fn run_realtime(
     let mut stages = StageCounts::new(5_000.0);
     let (mut ingress, mut transmitted, mut shed) = (0u64, 0u64, 0u64);
     let mut extract_ms_sum = 0.0f64;
+    // Reused feature/utility buffers: the camera-side hot loop stays
+    // allocation-free (zero-allocation API sweep).
+    let mut feat_buf = FrameFeatures::empty();
+    let mut util_buf = UtilityValues::empty();
 
     let t0 = Instant::now();
     let handle_done = |d: DoneItem,
@@ -207,7 +211,7 @@ pub fn run_realtime(
             .unwrap()
             .background();
         let te = Instant::now();
-        let (_feats, utils) = extractor.extract(&frame.rgb, bg)?;
+        extractor.extract_into(&frame.rgb, bg, &mut feat_buf, &mut util_buf)?;
         extract_ms_sum += te.elapsed().as_secs_f64() * 1e3;
 
         let target_ids = {
@@ -234,7 +238,7 @@ pub fn run_realtime(
             height: frame.height,
         };
         let (decision, evicted) =
-            shedder.on_ingress(utils.combined, frame.ts_ms, item);
+            shedder.on_ingress(util_buf.combined, frame.ts_ms, item);
         for e in evicted {
             qor.observe(&e.item.target_ids, false);
             stages.observe(Stage::Shed, e.item.capture_stream_ms);

@@ -11,13 +11,25 @@
 
 use crate::backend::BackendQuery;
 use crate::config::{CostConfig, QueryConfig, ShedderConfig};
-use crate::features::Extractor;
+use crate::features::{Extractor, FrameFeatures, UtilityValues};
 use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts, WindowSeries};
 use crate::shedder::{Decision, LoadShedder, TokenBucket};
 use crate::util::rng::Rng;
-use crate::video::Frame;
+use crate::video::{Frame, Video};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+
+/// Camera id → borrowed background model (H*W*3). Sharing borrows avoids
+/// the historical per-call-site `background().to_vec()` duplication.
+pub type BackgroundMap<'a> = HashMap<u32, &'a [f32]>;
+
+/// Build the camera → background map for a video set (no copies).
+pub fn backgrounds_of(videos: &[Video]) -> BackgroundMap<'_> {
+    videos
+        .iter()
+        .map(|v| (v.camera_id(), v.background()))
+        .collect()
+}
 
 /// Shedding policy under simulation.
 #[derive(Debug, Clone)]
@@ -49,6 +61,7 @@ pub struct SimConfig {
 }
 
 /// What the simulator reports (feeds the figure harnesses).
+#[derive(Clone)]
 pub struct SimReport {
     pub qor: QorTracker,
     pub latency: LatencyTracker,
@@ -117,10 +130,11 @@ impl EventQueue {
 
 /// Run the simulation over a timestamp-ordered frame stream.
 ///
-/// `backgrounds` maps camera id → background model (H*W*3).
+/// `backgrounds` maps camera id → borrowed background model (H*W*3);
+/// build it with [`backgrounds_of`].
 pub fn run_sim<I>(
     frames: I,
-    backgrounds: &HashMap<u32, Vec<f32>>,
+    backgrounds: &BackgroundMap<'_>,
     cfg: &SimConfig,
     extractor: &Extractor,
     backend: &mut BackendQuery,
@@ -161,23 +175,30 @@ where
 
     let mut eq = EventQueue::new();
     let mut frame_iter = frames.into_iter();
+    // Reused feature/utility buffers: the camera-side extraction is the
+    // per-frame hot spot and must not allocate (paper Fig. 15 budget).
+    let mut feat_buf = FrameFeatures::empty();
+    let mut util_buf = UtilityValues::empty();
 
     // Feed the next arrival from the (ts-ordered) stream into the heap.
+    #[allow(clippy::too_many_arguments)]
     fn feed_next(
         eq: &mut EventQueue,
         frame_iter: &mut impl Iterator<Item = Frame>,
-        backgrounds: &HashMap<u32, Vec<f32>>,
+        backgrounds: &BackgroundMap<'_>,
         extractor: &Extractor,
         query: &QueryConfig,
         cost: &mut crate::backend::CostModel,
+        feat_buf: &mut FrameFeatures,
+        util_buf: &mut UtilityValues,
     ) -> anyhow::Result<bool> {
         match frame_iter.next() {
             None => Ok(false),
             Some(f) => {
-                let bg = backgrounds
+                let bg = *backgrounds
                     .get(&f.camera)
                     .ok_or_else(|| anyhow::anyhow!("no background for camera {}", f.camera))?;
-                let (_feats, utils) = extractor.extract(&f.rgb, bg)?;
+                extractor.extract_into(&f.rgb, bg, feat_buf, util_buf)?;
                 let t_ls = f.ts_ms + cost.camera_ms() + cost.net_cam_ls_ms();
                 let sf = SimFrame {
                     camera: f.camera,
@@ -187,13 +208,22 @@ where
                     width: f.width,
                     height: f.height,
                 };
-                eq.push(t_ls, EventKind::Ingress(Box::new(sf), utils.combined));
+                eq.push(t_ls, EventKind::Ingress(Box::new(sf), util_buf.combined));
                 Ok(true)
             }
         }
     }
 
-    feed_next(&mut eq, &mut frame_iter, backgrounds, extractor, &cfg.query, &mut cost)?;
+    feed_next(
+        &mut eq,
+        &mut frame_iter,
+        backgrounds,
+        extractor,
+        &cfg.query,
+        &mut cost,
+        &mut feat_buf,
+        &mut util_buf,
+    )?;
     let mut now = 0.0f64;
     let mut last_control_sample = f64::NEG_INFINITY;
 
@@ -204,7 +234,16 @@ where
                 ingress_n += 1;
                 stages.observe(Stage::Ingress, frame.capture_ms);
                 // Refill the arrival pipeline.
-                feed_next(&mut eq, &mut frame_iter, backgrounds, extractor, &cfg.query, &mut cost)?;
+                feed_next(
+                    &mut eq,
+                    &mut frame_iter,
+                    backgrounds,
+                    extractor,
+                    &cfg.query,
+                    &mut cost,
+                    &mut feat_buf,
+                    &mut util_buf,
+                )?;
 
                 let capture = frame.capture_ms;
                 let ids = frame.target_ids.clone();
@@ -270,7 +309,7 @@ where
             let f = entry.item;
             transmitted += 1;
             qor.observe(&f.target_ids, true);
-            let bg = backgrounds.get(&f.camera).unwrap();
+            let bg = *backgrounds.get(&f.camera).unwrap();
             let result = backend.process(&f.rgb, bg, f.width, f.height)?;
             // Stage bookkeeping: every transmitted frame reaches the blob
             // filter; deeper stages per the result.
@@ -368,13 +407,9 @@ mod tests {
             CostModel::new(cfg.costs.clone(), cfg.seed),
             25.0,
         );
-        let mut bgs = HashMap::new();
-        for v in videos {
-            bgs.insert(v.camera_id(), v.background().to_vec());
-        }
         run_sim(
             crate::video::Streamer::new(videos),
-            &bgs,
+            &backgrounds_of(videos),
             cfg,
             &extractor,
             &mut backend,
@@ -506,11 +541,7 @@ mod dbg {
         };
         let mut backend = BackendQuery::new(cfg.query.clone(), Detector::native(12, 25.0),
             CostModel::new(cfg.costs.clone(), cfg.seed), 25.0);
-        let mut bgs = HashMap::new();
-        for vid in &videos {
-            bgs.insert(vid.camera_id(), vid.background().to_vec());
-        }
-        let r = run_sim(crate::video::Streamer::new(&videos), &bgs, &cfg, &extractor, &mut backend).unwrap();
+        let r = run_sim(crate::video::Streamer::new(&videos), &backgrounds_of(&videos), &cfg, &extractor, &mut backend).unwrap();
         eprintln!("ingress {} transmitted {} shed {} qor {:.3} drop {:.3}", r.ingress, r.transmitted, r.shed, r.qor.overall(), r.observed_drop_rate());
         eprintln!("violations {} / {} max {:.0}ms", r.latency.violations(), r.latency.count(), r.latency.max_ms());
         for (t, th, rate) in r.control_series.iter().take(40) {

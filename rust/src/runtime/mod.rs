@@ -11,4 +11,11 @@ pub mod tensor;
 
 pub use engine::{Engine, Executable};
 pub use manifest::{default_artifact_dir, ArtifactSpec, InputSpec, Manifest};
-pub use tensor::Tensor;
+pub use tensor::{fill_cached, Tensor};
+
+/// True when the AOT artifacts are built *and* a working PJRT runtime is
+/// linked (false under the offline `xla` stub). Artifact-dependent tests
+/// and pipelines gate on this instead of erroring.
+pub fn artifacts_available() -> bool {
+    Engine::from_default_artifacts().is_ok()
+}

@@ -82,6 +82,19 @@ impl Tensor {
         Ok(self.data[self.index_of(coords)?])
     }
 
+    /// Refill from a slice of identical length (zero-allocation reuse).
+    pub fn fill_from(&mut self, data: &[f32]) -> Result<()> {
+        if data.len() != self.data.len() {
+            bail!(
+                "fill_from length {} != tensor shape {:?}",
+                data.len(),
+                self.shape
+            );
+        }
+        self.data.copy_from_slice(data);
+        Ok(())
+    }
+
     /// Reinterpret with a new shape of equal element count.
     pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
         let n: usize = shape.iter().product();
@@ -90,6 +103,25 @@ impl Tensor {
         }
         self.shape = shape;
         Ok(self)
+    }
+}
+
+/// Initialize-or-refill a cached input-tensor slot from a slice, with
+/// length validation (no per-call allocations once warm). A warm slot is
+/// reused only when the requested shape matches; otherwise the tensor is
+/// rebuilt, so shape changes can never alias a stale geometry. Shared by
+/// the PJRT extractor and detector paths.
+pub fn fill_cached(slot: &mut Option<Tensor>, data: &[f32], shape: &[usize]) -> Result<()> {
+    let n: usize = shape.iter().product();
+    if data.len() != n {
+        bail!("input length {} != shape {:?}", data.len(), shape);
+    }
+    match slot {
+        Some(t) if t.shape() == shape => t.fill_from(data),
+        s => {
+            *s = Some(Tensor::new(data.to_vec(), shape.to_vec())?);
+            Ok(())
+        }
     }
 }
 
@@ -117,6 +149,25 @@ mod tests {
     fn scalar_and_item() {
         assert_eq!(Tensor::scalar(3.5).item().unwrap(), 3.5);
         assert!(Tensor::zeros(&[2]).item().is_err());
+    }
+
+    #[test]
+    fn fill_cached_validates_and_reuses() {
+        let mut slot: Option<Tensor> = None;
+        fill_cached(&mut slot, &[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(slot.as_ref().unwrap().data(), &[1.0, 2.0, 3.0, 4.0]);
+        // Warm refill: same shape, new data, no panic.
+        fill_cached(&mut slot, &[5.0; 4], &[2, 2]).unwrap();
+        assert_eq!(slot.as_ref().unwrap().data(), &[5.0; 4]);
+        // Mismatched input must be a recoverable error even when warm.
+        assert!(fill_cached(&mut slot, &[1.0; 3], &[2, 2]).is_err());
+        assert!(fill_cached(&mut slot, &[1.0; 4], &[4, 2]).is_err());
+        // Same element count but new shape: rebuilt, not silently stale.
+        fill_cached(&mut slot, &[7.0; 4], &[1, 4]).unwrap();
+        assert_eq!(slot.as_ref().unwrap().shape(), &[1, 4]);
+        let mut cold: Option<Tensor> = None;
+        assert!(fill_cached(&mut cold, &[1.0; 3], &[2, 2]).is_err());
+        assert!(cold.is_none());
     }
 
     #[test]

@@ -47,12 +47,27 @@ impl Bench {
     }
 
     /// Run one benchmark; the closure is a single iteration.
-    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
-        for _ in 0..self.warmup {
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let (warmup, iters) = (self.warmup, self.iters);
+        self.run_n(name, warmup, iters, f)
+    }
+
+    /// Like [`Self::run`] with per-benchmark warmup/iteration counts
+    /// (coarse benches — e.g. whole sweeps — want far fewer iterations
+    /// than nanosecond-scale kernels).
+    pub fn run_n<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        mut f: F,
+    ) -> &BenchResult {
+        let iters = iters.max(1);
+        for _ in 0..warmup {
             f();
         }
-        let mut samples = Vec::with_capacity(self.iters);
-        for _ in 0..self.iters {
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
             let t0 = Instant::now();
             f();
             samples.push(t0.elapsed().as_secs_f64() * 1e3);
@@ -62,7 +77,7 @@ impl Bench {
         let q = |p: f64| samples[((p * (samples.len() - 1) as f64) as usize).min(samples.len() - 1)];
         let r = BenchResult {
             name: name.to_string(),
-            iters: self.iters,
+            iters,
             mean_ms: mean,
             p50_ms: q(0.5),
             p99_ms: q(0.99),
@@ -81,8 +96,40 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Look up a finished result by name.
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// Dump results as machine-readable JSON (`BENCH_micro.json` schema):
+    /// per-bench ns/op so the perf trajectory is trackable across PRs.
+    pub fn write_json(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use crate::util::json::Value;
+        let mut benches = Vec::with_capacity(self.results.len());
+        for r in &self.results {
+            // A sub-clock-resolution bench yields mean 0 → infinite
+            // throughput; JSON has no Infinity, so clamp to 0.
+            let per_sec = r.throughput();
+            let per_sec = if per_sec.is_finite() { per_sec } else { 0.0 };
+            let mut o = Value::object();
+            o.set("name", Value::String(r.name.clone()))
+                .set("iters", Value::Number(r.iters as f64))
+                .set("mean_ns", Value::Number(r.mean_ms * 1e6))
+                .set("p50_ns", Value::Number(r.p50_ms * 1e6))
+                .set("p99_ns", Value::Number(r.p99_ms * 1e6))
+                .set("min_ns", Value::Number(r.min_ms * 1e6))
+                .set("per_sec", Value::Number(per_sec));
+            benches.push(o);
+        }
+        let mut doc = Value::object();
+        doc.set("schema", Value::String("uals-microbench-v1".into()))
+            .set("unit", Value::String("ns_per_op".into()))
+            .set("benches", Value::Array(benches));
+        crate::util::json::write_file(path, &doc)
     }
 
     /// Dump results as CSV next to the experiment outputs.
@@ -122,6 +169,24 @@ mod tests {
         assert!(r.min_ms <= r.p50_ms && r.p50_ms <= r.p99_ms);
         assert!(r.mean_ms >= 0.0);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn json_dump_roundtrips() {
+        let mut b = Bench::new(0, 2);
+        b.run("fast_thing", || {});
+        b.run_n("slow_thing", 0, 1, || {});
+        let dir = std::env::temp_dir().join("uals_bench_json_test");
+        let p = dir.join("BENCH_micro.json");
+        b.write_json(&p).unwrap();
+        let v = crate::util::json::read_file(&p).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str().unwrap(), "uals-microbench-v1");
+        let benches = v.get("benches").unwrap().as_array().unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(benches[0].get("name").unwrap().as_str().unwrap(), "fast_thing");
+        assert!(benches[0].get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(benches[1].get("iters").unwrap().as_usize().unwrap(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

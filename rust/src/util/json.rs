@@ -20,13 +20,24 @@ pub enum Value {
 }
 
 /// Parse or access error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json access error: {0}")]
     Access(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Access(msg) => write!(f, "json access error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Value {
     // ---- constructors -----------------------------------------------------

@@ -12,7 +12,8 @@ pub mod stats;
 
 /// Monotonic wall-clock milliseconds since process start (profiling aid).
 pub fn now_ms() -> f64 {
+    use std::sync::OnceLock;
     use std::time::Instant;
-    static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
-    START.elapsed().as_secs_f64() * 1e3
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e3
 }

@@ -96,6 +96,12 @@ impl Percentiles {
         self.xs.is_empty()
     }
 
+    /// Absorb another sample set (order-insensitive).
+    pub fn merge(&mut self, other: &Percentiles) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
     /// q in [0, 1]; linear interpolation between order statistics.
     pub fn quantile(&mut self, q: f64) -> f64 {
         if self.xs.is_empty() {

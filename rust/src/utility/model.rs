@@ -98,19 +98,23 @@ impl UtilityModel {
     /// Compute utilities from features (native path; the artifact path
     /// computes the same values on-device).
     pub fn utility(&self, f: &FrameFeatures) -> UtilityValues {
+        let mut out = UtilityValues::empty();
+        self.utility_into(f, &mut out);
+        out
+    }
+
+    /// Zero-allocation variant of [`Self::utility`]: reuses the caller's
+    /// [`UtilityValues`] buffers.
+    pub fn utility_into(&self, f: &FrameFeatures, out: &mut UtilityValues) {
         assert_eq!(f.num_colors(), self.colors.len(), "feature/color arity");
-        let per_color: Vec<f32> = self
-            .colors
-            .iter()
-            .zip(&f.pf)
-            .map(|(c, pf)| c.utility(pf))
-            .collect();
-        let combined = match self.combine {
-            Combine::Single => per_color[0],
-            Combine::Or => per_color.iter().cloned().fold(f32::MIN, f32::max),
-            Combine::And => per_color.iter().cloned().fold(f32::MAX, f32::min),
+        out.per_color.clear();
+        out.per_color
+            .extend(self.colors.iter().zip(&f.pf).map(|(c, pf)| c.utility(pf)));
+        out.combined = match self.combine {
+            Combine::Single => out.per_color[0],
+            Combine::Or => out.per_color.iter().cloned().fold(f32::MIN, f32::max),
+            Combine::And => out.per_color.iter().cloned().fold(f32::MAX, f32::min),
         };
-        UtilityValues { per_color, combined }
     }
 
     /// Which AOT artifact serves this model.

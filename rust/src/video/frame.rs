@@ -112,6 +112,20 @@ pub struct Frame {
 }
 
 impl Frame {
+    /// An empty frame for reuse with [`crate::video::Video::render_into`]
+    /// (the rgb/truth buffers act as the caller's frame arena).
+    pub fn empty() -> Frame {
+        Frame {
+            camera: 0,
+            index: 0,
+            ts_ms: 0.0,
+            rgb: Vec::new(),
+            height: 0,
+            width: 0,
+            truth: Vec::new(),
+        }
+    }
+
     /// Does this frame contain a target object of `color`? (label `l`)
     pub fn is_positive(&self, color: NamedColor, min_px: usize) -> bool {
         self.truth.iter().any(|o| o.counts_for(color, min_px))

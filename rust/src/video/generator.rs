@@ -27,6 +27,10 @@ pub struct VideoConfig {
     pub brightness_jitter: f32,
     /// Per-pixel uniform sensor-noise amplitude (±).
     pub pixel_noise: f32,
+    /// Round rendered pixels to integers (what a real u8 camera ships).
+    /// Integer frames take the LUT fast path in `features::fast`; off by
+    /// default to keep the seed experiments' pixel streams unchanged.
+    pub quantize_u8: bool,
 }
 
 impl VideoConfig {
@@ -42,6 +46,7 @@ impl VideoConfig {
             traffic: TrafficConfig::default_mix(),
             brightness_jitter: 2.0,
             pixel_noise: 2.5,
+            quantize_u8: false,
         }
     }
 }
@@ -51,6 +56,9 @@ pub struct Video {
     pub config: VideoConfig,
     pub scene: Scene,
     trajectories: Vec<Trajectory>,
+    /// Quantized background model (only under `quantize_u8`: a u8 camera's
+    /// background-subtraction reference is itself u8).
+    background_q: Option<Vec<f32>>,
 }
 
 impl Video {
@@ -59,7 +67,10 @@ impl Video {
         let mut rng = Rng::new(config.traffic_seed ^ xtraffic_u64());
         let trajectories =
             spawn_traffic(&scene, &config.traffic, config.frames, config.fps, &mut rng);
-        Video { config, scene, trajectories }
+        let background_q = config
+            .quantize_u8
+            .then(|| scene.background().iter().map(|x| x.round()).collect());
+        Video { config, scene, trajectories, background_q }
     }
 
     pub fn len(&self) -> usize {
@@ -74,9 +85,13 @@ impl Video {
         self.config.camera_id
     }
 
-    /// The camera's background model (clean scene, no noise) as H*W*3.
+    /// The camera's background model (clean scene, no noise) as H*W*3 —
+    /// quantized to integers when the camera is a u8 camera.
     pub fn background(&self) -> &[f32] {
-        self.scene.background()
+        match &self.background_q {
+            Some(b) => b,
+            None => self.scene.background(),
+        }
     }
 
     pub fn trajectories(&self) -> &[Trajectory] {
@@ -85,17 +100,28 @@ impl Video {
 
     /// Render frame `t` (with ground truth).
     pub fn render(&self, t: usize) -> Frame {
+        let mut frame = Frame::empty();
+        self.render_into(t, &mut frame);
+        frame
+    }
+
+    /// Zero-allocation render: reuses the caller's [`Frame`] as an arena
+    /// (its rgb/truth buffers keep their capacity across calls). Pixel
+    /// output is identical to [`Self::render`].
+    pub fn render_into(&self, t: usize, frame: &mut Frame) {
         assert!(t < self.config.frames, "frame {t} out of range");
         let (w, h) = (self.config.width, self.config.height);
-        let mut rgb = self.scene.background().to_vec();
         let tf = t as f64;
+        frame.rgb.clear();
+        frame.rgb.extend_from_slice(self.scene.background());
+        let rgb = &mut frame.rgb;
 
         // Draw dynamic objects (pedestrians first: vehicles occlude them).
-        let mut truth = Vec::new();
+        frame.truth.clear();
         for tr in &self.trajectories {
             if let Some(vis) = tr.visible_at(tf, w, h) {
-                tr.draw(&mut rgb, tf, w, h);
-                truth.push(vis);
+                tr.draw(rgb, tf, w, h);
+                frame.truth.push(vis);
             }
         }
 
@@ -110,16 +136,17 @@ impl Video {
                 *v = (*v + bright + noise).clamp(0.0, 255.0);
             }
         }
-
-        Frame {
-            camera: self.config.camera_id,
-            index: t,
-            ts_ms: tf / self.config.fps * 1e3,
-            rgb,
-            height: h,
-            width: w,
-            truth,
+        if self.config.quantize_u8 {
+            for v in rgb.iter_mut() {
+                *v = v.round();
+            }
         }
+
+        frame.camera = self.config.camera_id;
+        frame.index = t;
+        frame.ts_ms = tf / self.config.fps * 1e3;
+        frame.height = h;
+        frame.width = w;
     }
 
     /// Ground truth without rendering (fast path for labeling sweeps).
@@ -230,6 +257,37 @@ mod tests {
             }
         }
         assert!(max_bg_diff <= 2.0 * (2.5 + 2.0) + 0.1, "diff {max_bg_diff}");
+    }
+
+    #[test]
+    fn render_into_matches_render_and_reuses_buffers() {
+        let v = quick_video(21);
+        let mut arena = Frame::empty();
+        v.render_into(0, &mut arena); // warm the arena capacity
+        let cap = arena.rgb.capacity();
+        for t in [0usize, 17, 100, 199] {
+            v.render_into(t, &mut arena);
+            let fresh = v.render(t);
+            assert_eq!(arena.rgb, fresh.rgb);
+            assert_eq!(arena.truth, fresh.truth);
+            assert_eq!((arena.index, arena.ts_ms), (fresh.index, fresh.ts_ms));
+            assert_eq!(arena.rgb.capacity(), cap, "arena must not reallocate");
+        }
+    }
+
+    #[test]
+    fn quantize_u8_yields_integer_pixels() {
+        let mut cfg = VideoConfig::new(2, 9, 0, 200);
+        cfg.quantize_u8 = true;
+        let v = Video::new(cfg);
+        let f = v.render(13);
+        assert!(f.rgb.iter().all(|&x| x == x.round() && (0.0..=255.0).contains(&x)));
+        // Same scene content as the float render, just rounded.
+        let float_v = quick_video(9);
+        let ff = float_v.render(13);
+        for (a, b) in f.rgb.iter().zip(&ff.rgb) {
+            assert!((a - b).abs() <= 0.5 + 1e-6);
+        }
     }
 
     #[test]

@@ -9,9 +9,9 @@ use uals::color::NamedColor;
 use uals::config::{CostConfig, Deployment, QueryConfig, ShedderConfig};
 use uals::features::Extractor;
 use uals::pipeline::realtime::{run_realtime, RealtimeConfig};
-use uals::pipeline::{run_sim, Policy, SimConfig};
-use uals::utility::{train, Combine};
+use uals::pipeline::{backgrounds_of, run_sim, BackgroundMap, Policy, SimConfig};
 use uals::video::{build_dataset, DatasetConfig, Paint, SegmentedVideo, Streamer, Video, VideoConfig};
+use uals::utility::{train, Combine};
 
 fn aux_model(colors: &[NamedColor], combine: Combine) -> uals::utility::UtilityModel {
     let videos = build_dataset(&DatasetConfig {
@@ -48,8 +48,8 @@ fn fig13a_scenario_shape_holds_end_to_end() {
         CostModel::new(cfg.costs.clone(), cfg.seed),
         25.0,
     );
-    let mut bgs = HashMap::new();
-    bgs.insert(0u32, sv.background().to_vec());
+    let mut bgs: BackgroundMap<'_> = HashMap::new();
+    bgs.insert(0u32, sv.background());
     let report = run_sim(sv.iter(), &bgs, &cfg, &extractor, &mut backend).unwrap();
 
     assert_eq!(report.ingress, 600);
@@ -118,10 +118,14 @@ fn composite_or_query_end_to_end() {
         CostModel::new(cfg.costs.clone(), cfg.seed),
         25.0,
     );
-    let mut bgs = HashMap::new();
-    bgs.insert(0u32, videos[0].background().to_vec());
-    let report =
-        run_sim(Streamer::new(&videos), &bgs, &cfg, &extractor, &mut backend).unwrap();
+    let report = run_sim(
+        Streamer::new(&videos),
+        &backgrounds_of(&videos),
+        &cfg,
+        &extractor,
+        &mut backend,
+    )
+    .unwrap();
     assert_eq!(report.ingress, 250);
     assert!(report.qor.overall() > 0.5, "OR-query QoR {}", report.qor.overall());
     assert!(report.latency.violation_rate() < 0.05);
@@ -151,8 +155,13 @@ fn deployment_scenarios_tighten_queue() {
 
 #[test]
 fn realtime_pipeline_with_artifacts() {
-    // Threaded runtime, PJRT artifacts on both the extractor and detector
-    // paths, 10× fast-forward. Conservation + sane QoR.
+    // Threaded runtime at 10× fast-forward; conservation + sane QoR.
+    // Uses the PJRT artifact path when available, otherwise the native
+    // fast path (the extractor contract is identical either way).
+    let use_artifacts = uals::runtime::artifacts_available();
+    if !use_artifacts {
+        eprintln!("realtime_pipeline_with_artifacts: artifacts/PJRT unavailable, using native path");
+    }
     let model = aux_model(&[NamedColor::Red], Combine::Single);
     let mut vc = VideoConfig::new(0xE2E3, 9, 0, 60);
     vc.traffic.vehicle_rate = 0.4;
@@ -161,15 +170,47 @@ fn realtime_pipeline_with_artifacts() {
         query: QueryConfig::single(NamedColor::Red).with_latency_bound(1500.0),
         time_scale: 0.1,
         cost_emulation_scale: 1.0,
+        use_artifacts,
         ..Default::default()
     };
     let report = run_realtime(&videos, &model, &cfg).expect("realtime run");
     assert_eq!(report.ingress, 60);
     assert_eq!(report.ingress, report.transmitted + report.shed);
-    // The artifact extractor must be fast enough for 10 fps real time.
+    // The extractor must be fast enough for 10 fps real time.
     assert!(
         report.extract_ms_mean < 100.0,
         "extractor too slow: {} ms",
         report.extract_ms_mean
     );
+}
+
+#[test]
+fn sharded_multi_camera_sweep_end_to_end() {
+    // The per-camera-shedder deployment: N independent edge boxes swept in
+    // parallel, metrics merged deterministically.
+    let model = aux_model(&[NamedColor::Red], Combine::Single);
+    let videos: Vec<Video> = (0..4)
+        .map(|i| {
+            let mut vc = VideoConfig::new(0xE2E4, 31 + i as u64, i as u32, 150);
+            vc.traffic.vehicle_rate = 0.4;
+            vc.quantize_u8 = true; // u8 camera frames → LUT fast path
+            Video::new(vc)
+        })
+        .collect();
+    let cfg = SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: QueryConfig::single(NamedColor::Red).with_latency_bound(1500.0),
+        backend_tokens: 1,
+        policy: Policy::UtilityControlLoop,
+        seed: 0xE4,
+        fps_total: 10.0,
+    };
+    let (merged, per_camera) =
+        uals::pipeline::run_sharded_sim(&videos, &cfg, &model, uals::pipeline::default_threads())
+            .expect("sharded sim");
+    assert_eq!(per_camera.len(), 4);
+    assert_eq!(merged.ingress, 600);
+    assert_eq!(merged.ingress, merged.transmitted + merged.shed);
+    assert!(merged.qor.overall() > 0.0);
 }

@@ -1,0 +1,159 @@
+//! Property tests pinning the fused LUT fast path to the reference
+//! oracle, and the zero-allocation APIs to their allocating twins.
+//!
+//! These are the equivalence guarantees the perf work rests on: if they
+//! hold, switching sweeps to the fast path cannot change any QoR figure.
+
+use uals::color::{ColorLut, HueRanges, NamedColor};
+use uals::features::{
+    compute_features, compute_features_fast, Extractor, FrameFeatures, UtilityValues,
+};
+use uals::util::prop::{Gen, Prop};
+use uals::util::rng::Rng;
+use uals::utility::{train, Combine};
+use uals::video::{Video, VideoConfig};
+
+/// Random hue-range set (1–2 colors): mix of named palettes and
+/// arbitrary (possibly wrap-around) intervals.
+fn random_ranges(g: &mut Gen) -> Vec<HueRanges> {
+    let named = [
+        NamedColor::Red,
+        NamedColor::Yellow,
+        NamedColor::Green,
+        NamedColor::Blue,
+    ];
+    let k = 1 + g.usize_in(0..2);
+    (0..k)
+        .map(|_| {
+            if g.bool() {
+                named[g.usize_in(0..named.len())].ranges()
+            } else {
+                let rng = g.rng();
+                let lo1 = rng.f32() * 170.0;
+                let hi1 = (lo1 + rng.f32() * (180.0 - lo1)).min(180.0);
+                if rng.chance(0.5) {
+                    let lo2 = rng.f32() * 170.0;
+                    let hi2 = (lo2 + rng.f32() * (180.0 - lo2)).min(180.0);
+                    HueRanges::pair(lo1, hi1, lo2, hi2)
+                } else {
+                    HueRanges::single(lo1, hi1)
+                }
+            }
+        })
+        .collect()
+}
+
+fn random_int_frame(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.below(256) as f32).collect()
+}
+
+#[test]
+fn fast_path_is_bit_equal_to_oracle_on_integer_frames() {
+    Prop::new("lut fast path ≡ oracle (integer frames)")
+        .cases(60)
+        .run(|g| {
+            let ranges = random_ranges(g);
+            // Integer and fractional thresholds, including 0 and 255.
+            let fg_threshold = match g.usize_in(0..4) {
+                0 => 25.0,
+                1 => g.f64_in(0.0, 80.0) as f32,
+                2 => 0.0,
+                _ => 255.0,
+            };
+            let lut = ColorLut::new(&ranges, fg_threshold);
+            let side = 4 + g.usize_in(0..13); // 4..16 px square
+            let n = side * side * 3;
+            let rng = g.rng();
+            let bg = random_int_frame(rng, n);
+            // Frames correlated with the background (realistic fg sparsity)
+            // and fully random ones.
+            let rgb = if rng.chance(0.5) {
+                let mut f = bg.clone();
+                for _ in 0..rng.range(0, n / 2) {
+                    let i = rng.range(0, n);
+                    f[i] = rng.below(256) as f32;
+                }
+                f
+            } else {
+                random_int_frame(rng, n)
+            };
+            let fast = compute_features_fast(&lut, &rgb, &bg);
+            let oracle = compute_features(&rgb, &bg, &ranges, fg_threshold);
+            assert_eq!(fast, oracle, "case seed {}", g.case_seed);
+        });
+}
+
+#[test]
+fn fast_path_is_bit_equal_on_float_frames_via_fallback() {
+    Prop::new("lut fast path ≡ oracle (float frames)")
+        .cases(30)
+        .run(|g| {
+            let ranges = random_ranges(g);
+            let lut = ColorLut::new(&ranges, 25.0);
+            let n = 10 * 10 * 3;
+            let rng = g.rng();
+            let bg: Vec<f32> = (0..n).map(|_| rng.f32() * 255.0).collect();
+            let rgb: Vec<f32> = bg
+                .iter()
+                .map(|x| (x + (rng.f32() - 0.5) * 80.0).clamp(0.0, 255.0))
+                .collect();
+            let fast = compute_features_fast(&lut, &rgb, &bg);
+            let oracle = compute_features(&rgb, &bg, &ranges, 25.0);
+            assert_eq!(fast, oracle, "case seed {}", g.case_seed);
+        });
+}
+
+#[test]
+fn extractor_fast_default_matches_legacy_reference_scoring() {
+    // The native extractor now routes through the LUT kernel; its output
+    // must equal scoring the reference features through the model — on
+    // both float (synthetic-noise) and u8 (quantized camera) frames.
+    for quantize in [false, true] {
+        let mut vc = VideoConfig::new(5, 42, 0, 40);
+        vc.traffic.vehicle_rate = 0.7;
+        vc.quantize_u8 = quantize;
+        let video = Video::new(vc);
+        let videos = vec![video];
+        let model = train(&videos, &[0], &[NamedColor::Red], Combine::Single);
+        let ranges = model.ranges();
+        let ex = Extractor::native(model.clone());
+        let v = &videos[0];
+        for t in (0..v.len()).step_by(5) {
+            let f = v.render(t);
+            let (feats, utils) = ex.extract(&f.rgb, v.background()).unwrap();
+            let oracle =
+                compute_features(&f.rgb, v.background(), &ranges, model.fg_threshold);
+            assert_eq!(feats, oracle, "quantize={quantize} t={t}");
+            let u = model.utility(&oracle);
+            assert_eq!(utils, u, "quantize={quantize} t={t}");
+        }
+    }
+}
+
+#[test]
+fn extract_into_agrees_with_extract_across_frames() {
+    let mut vc = VideoConfig::new(6, 43, 0, 30);
+    vc.traffic.vehicle_rate = 0.6;
+    vc.quantize_u8 = true;
+    let video = Video::new(vc);
+    let videos = vec![video];
+    let model = train(
+        &videos,
+        &[0],
+        &[NamedColor::Red, NamedColor::Yellow],
+        Combine::Or,
+    );
+    let ex = Extractor::native(model);
+    let v = &videos[0];
+    let mut feats = FrameFeatures::empty();
+    let mut utils = UtilityValues::empty();
+    let mut arena = uals::video::Frame::empty();
+    for t in 0..v.len() {
+        v.render_into(t, &mut arena);
+        let (f1, u1) = ex.extract(&arena.rgb, v.background()).unwrap();
+        ex.extract_into(&arena.rgb, v.background(), &mut feats, &mut utils)
+            .unwrap();
+        assert_eq!(feats, f1, "t={t}");
+        assert_eq!(utils, u1, "t={t}");
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the surface the repo uses: [`Error`], [`Result`],
+//! the [`anyhow!`] / [`bail!`] macros, and the [`Context`] extension
+//! trait for `Result` and `Option`. Context is flattened into the
+//! message (`"outer: inner"`), which matches how the binary prints
+//! errors (`{e:#}`); source-chain introspection (`downcast_ref` etc.)
+//! is intentionally not provided — nothing in the repo uses it.
+
+use std::fmt;
+
+/// A flattened, `Send + Sync` error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Construct from a concrete error value (mirrors `anyhow::Error::new`).
+    pub fn new<E: std::error::Error>(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+
+    /// Prepend a context layer: `"ctx: previous"`.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what makes the blanket conversion below coherent (exactly the
+// trick real `anyhow` relies on).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Create an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Attach context to the error arm of a `Result` (or to a `None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        let name = "red";
+        let e = anyhow!("unknown color '{name}'");
+        assert_eq!(e.to_string(), "unknown color 'red'");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "nope 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest: gone");
+        let e2: Error = Error::msg("inner").context("outer");
+        assert_eq!(e2.to_string(), "outer: inner");
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+        let s: Option<u32> = Some(4);
+        assert_eq!(s.with_context(|| "unused").unwrap(), 4);
+    }
+}

@@ -1,0 +1,201 @@
+//! Offline **stub** of the `xla` crate (PJRT binding).
+//!
+//! The build environment does not ship the native `xla_extension`
+//! runtime, so this vendored crate mirrors the API surface that
+//! `uals::runtime::engine` compiles against and fails *at runtime* when
+//! a PJRT client is requested. Every artifact-backed code path in the
+//! repo is gated on `Engine::from_default_artifacts()` succeeding, so
+//! with this stub those paths cleanly report "unavailable" instead of
+//! breaking the build.
+//!
+//! To run the real AOT artifacts, replace this crate with the actual
+//! `xla` binding (same module paths and method names) — no change to
+//! `uals` is required.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real binding's `xla::Error` role.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    fn unavailable() -> Error {
+        Error::msg(
+            "PJRT runtime unavailable: this build links the offline `xla` stub \
+             (rust/vendor/xla); vendor the real xla crate to execute AOT artifacts",
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Stub PJRT client: construction always fails.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module (stub: retains nothing).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+/// XLA computation handle.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Host literal: a flat f32 buffer plus dims (enough for the engine's use).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        let n = data.len() as i64;
+        Literal { data: data.to_vec(), dims: vec![n] }
+    }
+
+    pub fn reshape(mut self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.data.len() as i64 {
+            return Err(Error::msg(format!(
+                "reshape to {dims:?} mismatches {} elements",
+                self.data.len()
+            )));
+        }
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape::Array(ArrayShape { dims: self.dims.clone() }))
+    }
+
+    pub fn to_vec<T: FromF32>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::msg("stub literal is not a tuple"))
+    }
+}
+
+/// Element conversion used by `Literal::to_vec` (the engine only asks f32).
+pub trait FromF32 {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl FromF32 for f32 {
+    fn from_f32(x: f32) -> f32 {
+        x
+    }
+}
+
+/// Shape of a device value.
+#[derive(Debug, Clone)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Array shape with i64 dims, matching the real binding.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"), "{e}");
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        match l.shape().unwrap() {
+            Shape::Array(a) => assert_eq!(a.dims(), &[2, 2]),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(Literal::vec1(&[1.0]).reshape(&[3]).is_err());
+    }
+}
