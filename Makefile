@@ -2,19 +2,27 @@
 #
 #   make build      release build of the Rust stack
 #   make test       tier-1 test suite (green without artifacts)
+#   make check      CI gate: release build + tier-1 tests + fmt check
 #   make bench      hot-path microbenchmarks → BENCH_micro.json (repo root)
+#                   (includes the incremental-vs-fast redundancy sweep;
+#                   run from a toolchain image to populate the file)
 #   make figures    regenerate the paper's figures at the default scale
 #   make artifacts  AOT-lower the JAX/Pallas kernels → rust/artifacts/
 #                   (requires jax; the Rust side runs without it, on the
 #                   native LUT fast path)
 
-.PHONY: build test bench figures artifacts clean
+.PHONY: build test check fmt-check bench figures artifacts clean
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+check: build test fmt-check
+
+fmt-check:
+	cargo fmt --check
 
 bench:
 	cargo bench --bench microbench

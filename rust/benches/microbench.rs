@@ -10,8 +10,11 @@
 use uals::backend::{foreground_mask, largest_blob, BackendQuery, CostModel, Detector};
 use uals::color::{ColorLut, NamedColor};
 use uals::config::{CostConfig, QueryConfig, ShedderConfig};
-use uals::features::{reference, Extractor, FrameFeatures, QuantScratch, UtilityValues};
-use uals::pipeline::{run_sharded_sim, Policy, SimConfig};
+use uals::features::{
+    reference, Extractor, FrameFeatures, IncrementalConfig, IncrementalEngine, QuantScratch,
+    UtilityValues,
+};
+use uals::pipeline::{run_sharded_sim, run_sharded_sim_with, Policy, SimConfig};
 use uals::runtime::Engine;
 use uals::shedder::UtilityQueue;
 use uals::util::bench::Bench;
@@ -84,6 +87,80 @@ fn main() {
             .unwrap();
         std::hint::black_box(utils_buf.combined);
     });
+    // --- temporal-redundancy incremental engine -----------------------------
+    // Four redundancy regimes at 96×96, u8 camera, noise-free (so frames
+    // actually repeat): static scene, sparse traffic, dense traffic, and a
+    // scene-cut storm (every frame completely different — the worst case,
+    // which must degrade to the fused path's cost, not below it).
+    let redundancy_video = |vehicle_rate: f64, ped_rate: f64, seed: u64| -> Video {
+        let mut rvc = VideoConfig::new(7, seed, 0, 48);
+        rvc.traffic.vehicle_rate = vehicle_rate;
+        rvc.traffic.pedestrian_rate = ped_rate;
+        rvc.pixel_noise = 0.0;
+        rvc.brightness_jitter = 0.0;
+        rvc.quantize_u8 = true;
+        Video::new(rvc)
+    };
+    let render_all =
+        |v: &Video| -> Vec<Vec<f32>> { (0..v.len()).map(|t| v.render(t).rgb).collect() };
+    let static_v = redundancy_video(0.0, 0.0, 31);
+    let sparse_v = redundancy_video(0.1, 0.1, 33);
+    let dense_v = redundancy_video(2.0, 0.8, 35);
+    let mut cut_rng = Rng::new(0x5CEE);
+    let scenecut_frames: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..96 * 96 * 3).map(|_| cut_rng.below(256) as f32).collect())
+        .collect();
+    let scenarios: Vec<(&str, Vec<Vec<f32>>, Vec<f32>)> = vec![
+        ("static", render_all(&static_v), static_v.background().to_vec()),
+        ("sparse", render_all(&sparse_v), sparse_v.background().to_vec()),
+        ("dense", render_all(&dense_v), dense_v.background().to_vec()),
+        ("scenecut", scenecut_frames, static_v.background().to_vec()),
+    ];
+    for (name, frames_set, bg_s) in &scenarios {
+        let mut eng = IncrementalEngine::new(IncrementalConfig::default(), 96, 96);
+        let mut ti = 0usize;
+        b.run(&format!("features/incremental_{name}_96x96"), || {
+            eng.extract_into(&lut2, &frames_set[ti], bg_s, None, &mut feats_buf);
+            ti = (ti + 1) % frames_set.len();
+            std::hint::black_box(feats_buf.fg_frac);
+        });
+        let mut quant_s = QuantScratch::default();
+        let mut tj = 0usize;
+        b.run(&format!("features/fastpath_{name}_96x96"), || {
+            uals::features::compute_features_fast_into(
+                &lut2,
+                &frames_set[tj],
+                bg_s,
+                &mut quant_s,
+                &mut feats_buf,
+            );
+            tj = (tj + 1) % frames_set.len();
+            std::hint::black_box(feats_buf.fg_frac);
+        });
+    }
+    // Hinted variant: the generator reports moved-object rects, so the
+    // engine skips even the diff + full-frame quantization.
+    {
+        let frames_set = render_all(&sparse_v);
+        let hints: Vec<(bool, Vec<(usize, usize, usize, usize)>)> = (0..sparse_v.len())
+            .map(|t| {
+                let mut r = Vec::new();
+                let ok = sparse_v.dirty_rects_into(t, &mut r);
+                (ok, r)
+            })
+            .collect();
+        let bg_s = sparse_v.background().to_vec();
+        let mut eng = IncrementalEngine::new(IncrementalConfig::default(), 96, 96);
+        let mut ti = 0usize;
+        b.run("features/incremental_hinted_sparse_96x96", || {
+            let (ok, rects) = &hints[ti];
+            let h = ok.then_some(rects.as_slice());
+            eng.extract_into(&lut2, &frames_set[ti], &bg_s, h, &mut feats_buf);
+            ti = (ti + 1) % frames_set.len();
+            std::hint::black_box(feats_buf.fg_frac);
+        });
+    }
+
     b.run("backend/foreground_mask+largest_blob", || {
         let m = foreground_mask(&frame.rgb, &bg, 96, 96, 25.0);
         std::hint::black_box(largest_blob(&m));
@@ -128,6 +205,34 @@ fn main() {
     let threads = uals::pipeline::default_threads().min(4);
     b.run_n("pipeline/sweep_4cams_parallel", 1, 3, || {
         let r = run_sharded_sim(&sweep_videos, &sweep_cfg, &sweep_model, threads).unwrap();
+        std::hint::black_box(r.0.ingress);
+    });
+    // Same sweep with noise-free u8 cameras so the per-camera incremental
+    // engines actually see temporal redundancy in the event loop.
+    let inc_videos: Vec<Video> = (0..4)
+        .map(|i| {
+            let mut svc = VideoConfig::new(11, 0xBE6 + i as u64, i as u32, 120);
+            svc.traffic.vehicle_rate = 0.35;
+            svc.pixel_noise = 0.0;
+            svc.brightness_jitter = 0.0;
+            svc.quantize_u8 = true;
+            Video::new(svc)
+        })
+        .collect();
+    let inc_model = train(&inc_videos, &[0, 1], &[NamedColor::Red], Combine::Single);
+    b.run_n("pipeline/sweep_4cams_parallel_noisefree", 1, 3, || {
+        let r = run_sharded_sim(&inc_videos, &sweep_cfg, &inc_model, threads).unwrap();
+        std::hint::black_box(r.0.ingress);
+    });
+    b.run_n("pipeline/sweep_4cams_parallel_incremental", 1, 3, || {
+        let r = run_sharded_sim_with(
+            &inc_videos,
+            &sweep_cfg,
+            &inc_model,
+            threads,
+            Some(IncrementalConfig::default()),
+        )
+        .unwrap();
         std::hint::black_box(r.0.ingress);
     });
 
@@ -185,6 +290,17 @@ fn main() {
             "\nLUT fast path speedup (2-color extract): {:.2}x",
             slow.mean_ms / fast.mean_ms.max(1e-12)
         );
+    }
+    for name in ["static", "sparse", "dense", "scenecut"] {
+        if let (Some(inc), Some(fast)) = (
+            b.result(&format!("features/incremental_{name}_96x96")),
+            b.result(&format!("features/fastpath_{name}_96x96")),
+        ) {
+            println!(
+                "incremental vs fused fast path ({name}): {:.2}x",
+                fast.mean_ms / inc.mean_ms.max(1e-12)
+            );
+        }
     }
     if let (Some(par), Some(ser)) = (
         b.result("pipeline/sweep_4cams_parallel"),

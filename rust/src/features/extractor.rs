@@ -17,12 +17,14 @@
 //! allocation-free.
 
 use super::fast::{compute_features_fast_into, QuantScratch};
+use super::incremental::{DirtyRect, IncrementalConfig, IncrementalEngine, IncrementalStats};
 use super::{FrameFeatures, UtilityValues, HIST};
 use crate::color::ColorLut;
 use crate::runtime::{fill_cached, Engine, Executable, Tensor};
 use crate::utility::model::UtilityModel;
 use anyhow::{bail, Result};
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::rc::Rc;
 
 /// Which compute path extracts features.
@@ -38,6 +40,9 @@ struct Scratch {
     /// Cached PJRT input tensors (frame + background), allocated once.
     rgb_t: Option<Tensor>,
     bg_t: Option<Tensor>,
+    /// Per-camera incremental tile engines (only populated when the
+    /// extractor was built with [`Extractor::with_incremental`]).
+    engines: HashMap<u32, IncrementalEngine>,
 }
 
 /// Per-query feature/utility extractor.
@@ -51,6 +56,9 @@ pub struct Extractor {
     /// only (the artifact backend computes features on-device and would
     /// otherwise pay ~458 KiB + the table build for nothing).
     lut: Option<ColorLut>,
+    /// When set, [`Self::extract_camera_into`] maintains one incremental
+    /// tile engine per camera (native backend only).
+    incremental: Option<IncrementalConfig>,
     scratch: RefCell<Scratch>,
 }
 
@@ -65,8 +73,32 @@ impl Extractor {
             ranges_t,
             m_t,
             lut,
+            incremental: None,
             scratch: RefCell::new(Scratch::default()),
         }
+    }
+
+    /// Enable per-camera incremental (tiled dirty-region) extraction for
+    /// the camera-aware entry points. Native backend only — the artifact
+    /// backend computes features on-device, so there is no host-side tile
+    /// state to maintain.
+    pub fn with_incremental(mut self, cfg: IncrementalConfig) -> Self {
+        assert!(
+            matches!(self.backend, Backend::Native),
+            "incremental extraction requires the native backend"
+        );
+        self.incremental = Some(cfg);
+        self
+    }
+
+    pub fn incremental_enabled(&self) -> bool {
+        self.incremental.is_some()
+    }
+
+    /// Stats of a camera's incremental engine (None before its first
+    /// frame or when incremental mode is off).
+    pub fn incremental_stats(&self, camera: u32) -> Option<IncrementalStats> {
+        self.scratch.borrow().engines.get(&camera).map(|e| e.stats())
     }
 
     /// Artifact-backed extractor over a PJRT engine.
@@ -80,6 +112,7 @@ impl Extractor {
             ranges_t,
             m_t,
             lut: None,
+            incremental: None,
             scratch: RefCell::new(Scratch::default()),
         })
     }
@@ -98,6 +131,63 @@ impl Extractor {
         let mut utils = UtilityValues::empty();
         self.extract_into(rgb, background, &mut feats, &mut utils)?;
         Ok((feats, utils))
+    }
+
+    /// Camera-aware zero-allocation extraction. With incremental mode
+    /// enabled (see [`Self::with_incremental`]) this routes through the
+    /// camera's stateful tile engine — steady-state classification cost
+    /// O(changed pixels + tiles), bit-identical to [`Self::extract_into`]
+    /// provided each camera's background stays fixed (the engine's
+    /// precondition; pinned in debug builds, spot-checked in release);
+    /// otherwise it delegates to the stateless path.
+    pub fn extract_camera_into(
+        &self,
+        camera: u32,
+        width: usize,
+        height: usize,
+        rgb: &[f32],
+        background: &[f32],
+        feats: &mut FrameFeatures,
+        utils: &mut UtilityValues,
+    ) -> Result<()> {
+        self.extract_camera_hinted_into(camera, width, height, rgb, background, None, feats, utils)
+    }
+
+    /// Like [`Self::extract_camera_into`] with optional generator-known
+    /// dirty rectangles: when `hints` is `Some`, it MUST cover every pixel
+    /// that changed since this camera's previous frame (the synthetic
+    /// [`crate::video::Video::dirty_rects_into`] provides exactly that for
+    /// noise-free configs), letting the engine skip even the frame diff.
+    #[allow(clippy::too_many_arguments)]
+    pub fn extract_camera_hinted_into(
+        &self,
+        camera: u32,
+        width: usize,
+        height: usize,
+        rgb: &[f32],
+        background: &[f32],
+        hints: Option<&[DirtyRect]>,
+        feats: &mut FrameFeatures,
+        utils: &mut UtilityValues,
+    ) -> Result<()> {
+        let Some(inc_cfg) = self.incremental else {
+            return self.extract_into(rgb, background, feats, utils);
+        };
+        if rgb.len() != width * height * 3 {
+            bail!("frame size {} != {width}x{height}x3", rgb.len());
+        }
+        let lut = self.lut.as_ref().expect("incremental mode implies the native backend");
+        let mut scratch = self.scratch.borrow_mut();
+        let engine = scratch
+            .engines
+            .entry(camera)
+            .or_insert_with(|| IncrementalEngine::new(inc_cfg, width, height));
+        if engine.geometry() != (width, height) {
+            *engine = IncrementalEngine::new(inc_cfg, width, height);
+        }
+        engine.extract_into(lut, rgb, background, hints, feats);
+        self.model.utility_into(feats, utils);
+        Ok(())
     }
 
     /// Zero-allocation extraction: writes into caller-owned buffers that
@@ -280,6 +370,39 @@ mod tests {
             assert_eq!(feats, f1);
             assert_eq!(utils, u1);
         }
+    }
+
+    #[test]
+    fn camera_aware_incremental_matches_stateless() {
+        let inc = Extractor::native(toy_model()).with_incremental(IncrementalConfig::default());
+        let plain = Extractor::native(toy_model());
+        assert!(inc.incremental_enabled());
+        // 32×32 → a 2×2 tile grid, so a one-pixel change stays under the
+        // dirty-fraction threshold and the steady state is incremental.
+        let (w, h) = (32, 32);
+        let bg = vec![96.0; w * h * 3];
+        let mut feats = FrameFeatures::empty();
+        let mut utils = UtilityValues::empty();
+        // Two interleaved cameras with different content; each keeps its
+        // own tile state.
+        for t in 0..6usize {
+            for cam in 0..2u32 {
+                let mut rgb = bg.clone();
+                let off = (t * 2 + cam as usize * 5) * 3;
+                rgb[off..off + 3].copy_from_slice(&[208.0, 22.0, 28.0]);
+                inc.extract_camera_into(cam, w, h, &rgb, &bg, &mut feats, &mut utils)
+                    .unwrap();
+                let (f0, u0) = plain.extract(&rgb, &bg).unwrap();
+                assert_eq!(feats, f0, "cam {cam} t {t}");
+                assert_eq!(utils, u0, "cam {cam} t {t}");
+            }
+        }
+        let s = inc.incremental_stats(0).unwrap();
+        assert_eq!(s.frames, 6);
+        assert!(s.incremental_frames >= 5, "stats {s:?}");
+        assert!(inc.incremental_stats(1).is_some());
+        assert!(inc.incremental_stats(7).is_none());
+        assert!(plain.incremental_stats(0).is_none());
     }
 
     #[test]

@@ -28,9 +28,10 @@ pub struct QuantScratch {
 }
 
 /// Quantize `src` into `dst`; returns false (dst content unspecified) as
-/// soon as a channel is not exactly representable as u8.
+/// soon as a channel is not exactly representable as u8. Shared with the
+/// incremental tile engine.
 #[inline]
-fn quantize(src: &[f32], dst: &mut Vec<u8>) -> bool {
+pub(crate) fn quantize(src: &[f32], dst: &mut Vec<u8>) -> bool {
     dst.clear();
     dst.reserve(src.len());
     for &x in src {
@@ -81,28 +82,20 @@ pub fn compute_features_fast_into(
     let frame = &scratch.rgb_u8[..];
     let bg = &scratch.bg_u8[..];
 
-    let mut in_color = [0u64; MAX_COLORS];
-    let mut fg_count = 0u64;
-
-    for p in 0..n_px {
-        let i = 3 * p;
-        let (r, g, b) = (frame[i], frame[i + 1], frame[i + 2]);
-        let diff = r
-            .abs_diff(bg[i])
-            .max(g.abs_diff(bg[i + 1]))
-            .max(b.abs_diff(bg[i + 2]));
-        if !lut.is_foreground(diff) {
-            continue;
-        }
-        fg_count += 1;
-        let (mask, bin) = lut.classify(r, g, b);
-        // Branchless bump: each color adds 0 or 1 from its mask bit.
-        for c in 0..k {
-            let on = (mask >> c) & 1;
-            in_color[c] += on as u64;
-            counts[c * HIST + bin as usize] += on as u32;
-        }
-    }
+    // One shared counting kernel (also the incremental engine's per-tile
+    // routine, so the two paths cannot drift): the whole frame is a
+    // single n_px × 1 "tile".
+    let mut in_color32 = [0u32; MAX_COLORS];
+    let fg_count = count_rect(
+        lut,
+        frame,
+        bg,
+        n_px,
+        (0, 0, n_px, 1),
+        k,
+        counts,
+        &mut in_color32[..k],
+    );
 
     // Counts → f32 (exact for < 2²⁴), then the oracle's normalization.
     for c in 0..k {
@@ -110,7 +103,56 @@ pub fn compute_features_fast_into(
             *dst = n as f32;
         }
     }
-    reference::finalize_features(out, &in_color, fg_count, n_px);
+    let mut in_color = [0u64; MAX_COLORS];
+    for c in 0..k {
+        in_color[c] = in_color32[c] as u64;
+    }
+    reference::finalize_features(out, &in_color, fg_count as u64, n_px);
+}
+
+/// The per-pixel counting kernel shared by the fused full-frame path and
+/// the incremental engine's tile recompute: background gate + table
+/// classify + branchless histogram bump over `rect` (half-open, in a
+/// row-major frame of `width` px per row). `pf` (`k*HIST`) and `in_color`
+/// (`k`) must be zeroed on entry; returns the foreground-pixel count.
+/// u32 counts are exact for any frame below 2³² px (and the final f32
+/// conversion is only exact below 2²⁴ anyway).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn count_rect(
+    lut: &ColorLut,
+    frame: &[u8],
+    bg: &[u8],
+    width: usize,
+    rect: (usize, usize, usize, usize),
+    k: usize,
+    pf: &mut [u32],
+    in_color: &mut [u32],
+) -> u32 {
+    let (x0, y0, x1, y1) = rect;
+    let mut fg = 0u32;
+    for y in y0..y1 {
+        let row = y * width;
+        for x in x0..x1 {
+            let i = 3 * (row + x);
+            let (r, g, b) = (frame[i], frame[i + 1], frame[i + 2]);
+            let diff = r
+                .abs_diff(bg[i])
+                .max(g.abs_diff(bg[i + 1]))
+                .max(b.abs_diff(bg[i + 2]));
+            if !lut.is_foreground(diff) {
+                continue;
+            }
+            fg += 1;
+            let (mask, bin) = lut.classify(r, g, b);
+            // Branchless bump: each color adds 0 or 1 from its mask bit.
+            for c in 0..k {
+                let on = ((mask >> c) & 1) as u32;
+                in_color[c] += on;
+                pf[c * HIST + bin as usize] += on;
+            }
+        }
+    }
+    fg
 }
 
 /// Convenience allocating wrapper (tests / one-off callers).

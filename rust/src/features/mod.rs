@@ -12,9 +12,15 @@
 //!   configuration: L1 Pallas kernel + L2 JAX graph compiled by
 //!   `make artifacts`); `rust/tests/artifact_oracle.rs` pins it to the
 //!   oracle numerically.
+//!
+//! On top of these, [`incremental`] exploits *temporal* redundancy: a
+//! stateful per-camera tile engine that recomputes only dirty regions of
+//! the frame, bit-identical to the paths above on every input (pinned by
+//! `rust/tests/incremental.rs`).
 
 pub mod extractor;
 pub mod fast;
+pub mod incremental;
 pub mod reference;
 
 use crate::color::NUM_BINS;
@@ -75,4 +81,5 @@ impl UtilityValues {
 
 pub use extractor::{Backend, Extractor};
 pub use fast::{compute_features_fast, compute_features_fast_into, QuantScratch};
+pub use incremental::{DirtyRect, IncrementalConfig, IncrementalEngine, IncrementalStats};
 pub use reference::{compute_features, compute_features_into};

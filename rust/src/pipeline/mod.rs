@@ -12,5 +12,7 @@ pub mod parallel;
 pub mod realtime;
 pub mod sim;
 
-pub use parallel::{default_threads, merge_reports, parallel_map, run_sharded_sim};
+pub use parallel::{
+    default_threads, merge_reports, parallel_map, run_sharded_sim, run_sharded_sim_with,
+};
 pub use sim::{backgrounds_of, run_sim, BackgroundMap, Policy, SimConfig, SimReport};

@@ -21,7 +21,7 @@
 //! shards share only `Sync` inputs: the videos, the model, the config.
 
 use crate::backend::{BackendQuery, CostModel, Detector};
-use crate::features::Extractor;
+use crate::features::{Extractor, IncrementalConfig};
 use crate::pipeline::sim::{run_sim, SimConfig, SimReport};
 use crate::utility::UtilityModel;
 use crate::video::Video;
@@ -111,6 +111,21 @@ pub fn run_sharded_sim(
     model: &UtilityModel,
     threads: usize,
 ) -> Result<(SimReport, Vec<(u32, SimReport)>)> {
+    run_sharded_sim_with(videos, cfg, model, threads, None)
+}
+
+/// [`run_sharded_sim`] with optional per-camera **incremental feature
+/// extraction**: each shard's extractor owns one tile engine for its
+/// camera, so per-frame classification work shrinks to the dirty tiles.
+/// Extraction stays bit-identical, so every metric matches the
+/// non-incremental run exactly (pinned by `rust/tests/incremental.rs`).
+pub fn run_sharded_sim_with(
+    videos: &[Video],
+    cfg: &SimConfig,
+    model: &UtilityModel,
+    threads: usize,
+    incremental: Option<IncrementalConfig>,
+) -> Result<(SimReport, Vec<(u32, SimReport)>)> {
     if videos.is_empty() {
         return Err(anyhow!("run_sharded_sim needs at least one camera"));
     }
@@ -120,7 +135,10 @@ pub fn run_sharded_sim(
         shard_cfg.seed = cfg
             .seed
             .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(video.camera_id() as u64 + 1));
-        let extractor = Extractor::native(model.clone());
+        let mut extractor = Extractor::native(model.clone());
+        if let Some(inc) = incremental {
+            extractor = extractor.with_incremental(inc);
+        }
         let mut backend = BackendQuery::new(
             shard_cfg.query.clone(),
             Detector::native(12, model.fg_threshold),

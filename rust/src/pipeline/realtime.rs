@@ -147,7 +147,7 @@ pub fn run_realtime(
     };
 
     let mut shedder: LoadShedder<WorkItem> = LoadShedder::new(
-        cfg.shedder.clone(),
+        &cfg.shedder,
         &cfg.costs,
         cfg.query.latency_bound_ms,
         fps_total,
@@ -211,20 +211,19 @@ pub fn run_realtime(
             .unwrap()
             .background();
         let te = Instant::now();
-        extractor.extract_into(&frame.rgb, bg, &mut feat_buf, &mut util_buf)?;
+        extractor.extract_camera_into(
+            frame.camera,
+            frame.width,
+            frame.height,
+            &frame.rgb,
+            bg,
+            &mut feat_buf,
+            &mut util_buf,
+        )?;
         extract_ms_sum += te.elapsed().as_secs_f64() * 1e3;
 
-        let target_ids = {
-            let mut ids = Vec::new();
-            for &color in &cfg.query.colors {
-                for id in frame.target_ids(color, cfg.query.min_blob_px) {
-                    if !ids.contains(&id) {
-                        ids.push(id);
-                    }
-                }
-            }
-            ids
-        };
+        let mut target_ids = Vec::new();
+        frame.target_ids_into(&cfg.query.colors, cfg.query.min_blob_px, &mut target_ids);
         // Pack background + rgb together so the worker needs no shared map.
         let mut packed = Vec::with_capacity(frame.rgb.len() * 2);
         packed.extend_from_slice(bg);

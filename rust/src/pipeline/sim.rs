@@ -13,7 +13,7 @@ use crate::backend::BackendQuery;
 use crate::config::{CostConfig, QueryConfig, ShedderConfig};
 use crate::features::{Extractor, FrameFeatures, UtilityValues};
 use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts, WindowSeries};
-use crate::shedder::{Decision, LoadShedder, TokenBucket};
+use crate::shedder::{Entry, LoadShedder, TokenBucket};
 use crate::util::rng::Rng;
 use crate::video::{Frame, Video};
 use std::cmp::Reverse;
@@ -145,7 +145,7 @@ where
     let mut rng = Rng::new(cfg.seed ^ 0x51B);
     let mut cost = crate::backend::CostModel::new(cfg.costs.clone(), cfg.seed ^ 0xCA11);
     let mut shedder: LoadShedder<SimFrame> = LoadShedder::new(
-        cfg.shedder.clone(),
+        &cfg.shedder,
         &cfg.costs,
         cfg.query.latency_bound_ms,
         cfg.fps_total,
@@ -179,6 +179,21 @@ where
     // per-frame hot spot and must not allocate (paper Fig. 15 budget).
     let mut feat_buf = FrameFeatures::empty();
     let mut util_buf = UtilityValues::empty();
+    // Reused drop buffer + recycled target-id vectors: after warmup the
+    // event loop itself performs no per-event heap allocation beyond the
+    // frames the upstream iterator materializes (and one Box per frame to
+    // keep the event enum small).
+    let mut dropped: Vec<Entry<SimFrame>> = Vec::new();
+    let mut id_pool: Vec<Vec<u64>> = Vec::new();
+
+    // Retire a frame's recyclable buffers into the pool.
+    fn recycle(pool: &mut Vec<Vec<u64>>, f: SimFrame) {
+        let mut ids = f.target_ids;
+        ids.clear();
+        if pool.len() < 64 {
+            pool.push(ids);
+        }
+    }
 
     // Feed the next arrival from the (ts-ordered) stream into the heap.
     #[allow(clippy::too_many_arguments)]
@@ -191,6 +206,7 @@ where
         cost: &mut crate::backend::CostModel,
         feat_buf: &mut FrameFeatures,
         util_buf: &mut UtilityValues,
+        id_pool: &mut Vec<Vec<u64>>,
     ) -> anyhow::Result<bool> {
         match frame_iter.next() {
             None => Ok(false),
@@ -198,12 +214,19 @@ where
                 let bg = *backgrounds
                     .get(&f.camera)
                     .ok_or_else(|| anyhow::anyhow!("no background for camera {}", f.camera))?;
-                extractor.extract_into(&f.rgb, bg, feat_buf, util_buf)?;
+                // Camera-aware: engages the per-camera incremental tile
+                // engine when the extractor has one (bit-identical either
+                // way), else the stateless fused path.
+                extractor.extract_camera_into(
+                    f.camera, f.width, f.height, &f.rgb, bg, feat_buf, util_buf,
+                )?;
                 let t_ls = f.ts_ms + cost.camera_ms() + cost.net_cam_ls_ms();
+                let mut ids = id_pool.pop().unwrap_or_default();
+                f.target_ids_into(&query.colors, query.min_blob_px, &mut ids);
                 let sf = SimFrame {
                     camera: f.camera,
                     capture_ms: f.ts_ms,
-                    target_ids: targets_of(&f, query),
+                    target_ids: ids,
                     rgb: f.rgb,
                     width: f.width,
                     height: f.height,
@@ -223,6 +246,7 @@ where
         &mut cost,
         &mut feat_buf,
         &mut util_buf,
+        &mut id_pool,
     )?;
     let mut now = 0.0f64;
     let mut last_control_sample = f64::NEG_INFINITY;
@@ -243,16 +267,18 @@ where
                     &mut cost,
                     &mut feat_buf,
                     &mut util_buf,
+                    &mut id_pool,
                 )?;
 
-                let capture = frame.capture_ms;
-                let ids = frame.target_ids.clone();
                 // Content-agnostic baseline: coin flip ahead of the queue;
                 // surviving frames get a constant utility (FIFO service).
                 let coin_dropped = matches!(cfg.policy, Policy::RandomRate { .. })
                     && rng.chance(random_rate);
-                let decision = if coin_dropped {
-                    Decision::ShedAdmission
+                if coin_dropped {
+                    qor.observe(&frame.target_ids, false);
+                    stages.observe(Stage::Shed, frame.capture_ms);
+                    shed += 1;
+                    recycle(&mut id_pool, *frame);
                 } else {
                     // (admission utility, queue-ordering key) per policy.
                     let (u, key) = match cfg.policy {
@@ -260,22 +286,18 @@ where
                         Policy::FifoControlLoop => (utility, 0.5),
                         _ => (0.5, 0.5),
                     };
-                    let (d, evicted) = shedder.on_ingress_keyed(u, key, now, *frame);
-                    for e in evicted {
-                        // A queued frame lost its slot: that frame drops.
+                    // Every dropped frame — retune evictions, displaced
+                    // queue victims, and an admission/queue rejection of
+                    // the offered frame itself — lands in the reused
+                    // `dropped` buffer: no per-frame target-id clone.
+                    dropped.clear();
+                    let _ = shedder.on_ingress_keyed_into(u, key, now, *frame, &mut dropped);
+                    for e in dropped.drain(..) {
                         qor.observe(&e.item.target_ids, false);
                         stages.observe(Stage::Shed, e.item.capture_ms);
                         shed += 1;
+                        recycle(&mut id_pool, e.item);
                     }
-                    d
-                };
-                match decision {
-                    Decision::ShedAdmission | Decision::ShedQueueReject => {
-                        qor.observe(&ids, false);
-                        stages.observe(Stage::Shed, capture);
-                        shed += 1;
-                    }
-                    Decision::Enqueued => {}
                 }
 
                 // Control-series sampling (1 s cadence).
@@ -303,6 +325,7 @@ where
                 qor.observe(&entry.item.target_ids, false);
                 stages.observe(Stage::Shed, entry.item.capture_ms);
                 shed += 1;
+                recycle(&mut id_pool, entry.item);
                 continue;
             }
             assert!(tokens.try_acquire());
@@ -328,6 +351,7 @@ where
             latency.observe(e2e);
             latency_windows.observe(f.capture_ms, e2e);
             eq.push(done_at, EventKind::Completion { exec_ms: result.exec_ms });
+            recycle(&mut id_pool, f);
         }
     }
 
@@ -342,19 +366,6 @@ where
         shed,
         end_ms: now,
     })
-}
-
-/// Target object ids of a frame under the query's colors (union).
-fn targets_of(frame: &Frame, query: &QueryConfig) -> Vec<u64> {
-    let mut ids = Vec::new();
-    for &color in &query.colors {
-        for id in frame.target_ids(color, query.min_blob_px) {
-            if !ids.contains(&id) {
-                ids.push(id);
-            }
-        }
-    }
-    ids
 }
 
 #[cfg(test)]

@@ -38,7 +38,9 @@ pub struct LoadShedder<T> {
     pub admission: AdmissionControl,
     pub queue: UtilityQueue<T>,
     pub control: ControlLoop,
-    cfg: ShedderConfig,
+    /// Retune cadence in ingress frames (from [`ShedderConfig`]; the
+    /// shedder borrows its config at construction instead of cloning it).
+    update_every: usize,
     drops: DropCounter,
     /// Frames evicted after admission (for stats: they count as drops).
     evictions: u64,
@@ -52,19 +54,19 @@ pub struct LoadShedder<T> {
 
 impl<T> LoadShedder<T> {
     pub fn new(
-        cfg: ShedderConfig,
+        cfg: &ShedderConfig,
         costs: &CostConfig,
         latency_bound_ms: f64,
         default_fps: f64,
     ) -> Self {
         let admission = AdmissionControl::new(cfg.history);
-        let control = ControlLoop::new(&cfg, costs, latency_bound_ms);
+        let control = ControlLoop::new(cfg, costs, latency_bound_ms);
         let queue = UtilityQueue::new(cfg.queue_cap_max);
         LoadShedder {
             admission,
             queue,
             control,
-            cfg,
+            update_every: cfg.update_every,
             drops: DropCounter::default(),
             evictions: 0,
             ingress_since_update: 0,
@@ -97,17 +99,41 @@ impl<T> LoadShedder<T> {
         now_ms: f64,
         item: T,
     ) -> (Decision, Vec<Entry<T>>) {
+        let mut dropped = Vec::new();
+        let d = self.on_ingress_keyed_into(utility, queue_key, now_ms, item, &mut dropped);
+        if d != Decision::Enqueued {
+            // `_into` appends the offered frame last when it is shed;
+            // this legacy API reports its fate via the decision only.
+            dropped.pop();
+        }
+        (d, dropped)
+    }
+
+    /// Zero-allocation ingress: the caller's `dropped` buffer (cleared and
+    /// reused across frames) receives **every** frame shed by this call —
+    /// retune evictions, a displaced queue victim, and, unlike
+    /// [`Self::on_ingress_keyed`], the offered frame itself (appended
+    /// last) when the decision is a shed. Hot loops can thus account for
+    /// all drops uniformly without cloning per-frame payloads.
+    pub fn on_ingress_keyed_into(
+        &mut self,
+        utility: f32,
+        queue_key: f32,
+        now_ms: f64,
+        item: T,
+        dropped: &mut Vec<Entry<T>>,
+    ) -> Decision {
         self.control.observe_ingress(now_ms);
         self.admission.observe(utility);
         self.ingress_since_update += 1;
-        let mut dropped = Vec::new();
-        if self.auto_retune && self.ingress_since_update >= self.cfg.update_every {
-            dropped = self.retune();
+        if self.auto_retune && self.ingress_since_update >= self.update_every {
+            self.retune_into(dropped);
         }
 
         if !self.admission.admit(utility) {
             self.drops.observe(true);
-            return (Decision::ShedAdmission, dropped);
+            dropped.push(Entry { utility, arrival_ms: now_ms, item });
+            return Decision::ShedAdmission;
         }
         match self.queue.offer(queue_key, now_ms, item) {
             Offer::Accepted { evicted } => {
@@ -116,11 +142,12 @@ impl<T> LoadShedder<T> {
                     self.evictions += 1;
                     dropped.push(e);
                 }
-                (Decision::Enqueued, dropped)
+                Decision::Enqueued
             }
-            Offer::Rejected(_entry) => {
+            Offer::Rejected(entry) => {
                 self.drops.observe(true);
-                (Decision::ShedQueueReject, dropped)
+                dropped.push(entry);
+                Decision::ShedQueueReject
             }
         }
     }
@@ -139,13 +166,20 @@ impl<T> LoadShedder<T> {
     /// Re-derive threshold and queue capacity from current load. Evicted
     /// frames (from a shrink) are counted as drops and returned.
     pub fn retune(&mut self) -> Vec<Entry<T>> {
+        let mut dropped = Vec::new();
+        self.retune_into(&mut dropped);
+        dropped
+    }
+
+    /// [`Self::retune`] appending evictions to a caller-owned buffer.
+    pub fn retune_into(&mut self, dropped: &mut Vec<Entry<T>>) {
         self.ingress_since_update = 0;
         let rate = self.control.target_drop_rate(self.default_fps);
         self.admission.set_target_rate(rate);
         let size = self.control.queue_size();
         let evicted = self.queue.resize(size);
         self.evictions += evicted.len() as u64;
-        evicted
+        dropped.extend(evicted);
     }
 
     /// Observed drop rate so far (admission + queue rejections; queue
@@ -178,11 +212,47 @@ mod tests {
 
     fn mk() -> LoadShedder<u64> {
         LoadShedder::new(
-            ShedderConfig { update_every: 5, ..Default::default() },
+            &ShedderConfig { update_every: 5, ..Default::default() },
             &CostConfig::default(),
             1000.0,
             10.0,
         )
+    }
+
+    #[test]
+    fn ingress_into_reports_offered_frame_and_matches_legacy() {
+        let mut a = mk();
+        let mut b = mk();
+        let mut rng = Rng::new(17);
+        for _ in 0..100 {
+            a.on_backend_complete(400.0);
+            b.on_backend_complete(400.0);
+        }
+        let mut dropped = Vec::new();
+        for i in 0..400u64 {
+            let u = rng.f32();
+            let t = i as f64 * 100.0;
+            let (d_legacy, ev_legacy) = a.on_ingress(u, t, i);
+            dropped.clear();
+            let d_into = b.on_ingress_keyed_into(u, u, t, i, &mut dropped);
+            assert_eq!(d_legacy, d_into, "i={i}");
+            if d_into == Decision::Enqueued {
+                assert_eq!(dropped.len(), ev_legacy.len());
+            } else {
+                // `_into` additionally carries the offered frame, last.
+                assert_eq!(dropped.len(), ev_legacy.len() + 1);
+                assert_eq!(dropped.last().unwrap().item, i);
+            }
+            for (x, y) in dropped.iter().zip(&ev_legacy) {
+                assert_eq!(x.item, y.item);
+            }
+            if i % 7 == 0 {
+                a.next_to_send();
+                b.next_to_send();
+            }
+        }
+        assert_eq!(a.observed_drop_rate(), b.observed_drop_rate());
+        assert_eq!(a.evictions(), b.evictions());
     }
 
     #[test]

@@ -3,8 +3,15 @@
 //!
 //! The history H is a sliding window of recent frame utilities (seeded from
 //! the training set at startup). `threshold_for(r)` returns the minimum
-//! utility u_th with CDF(u_th) ≥ r, evaluated exactly over the window via
-//! a sorted snapshot that is rebuilt lazily.
+//! utility u_th with CDF(u_th) ≥ r, evaluated exactly over the window.
+//!
+//! The sorted view is maintained **incrementally**: each `add` does one
+//! binary-search insert plus (once the window is full) one binary-search
+//! remove of the evicted element — two O(|H|) memmoves on a flat `Vec`
+//! instead of the historical O(|H|·log|H|) full re-sort per refresh. The
+//! queries themselves are read-only binary searches, so per-frame cost is
+//! flat and jitter-free (no periodic sort spikes on the hot path). The
+//! equivalence with the old rebuild is pinned by a randomized test below.
 
 use std::collections::VecDeque;
 
@@ -13,15 +20,19 @@ use std::collections::VecDeque;
 pub struct UtilityCdf {
     window: VecDeque<f32>,
     cap: usize,
+    /// Ascending multiset of `window`'s values, kept in sync by `add`.
     sorted: Vec<f32>,
-    dirty: bool,
 }
 
 impl UtilityCdf {
     /// `cap`: history size |H| (frames).
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0);
-        UtilityCdf { window: VecDeque::with_capacity(cap), cap, sorted: Vec::new(), dirty: false }
+        UtilityCdf {
+            window: VecDeque::with_capacity(cap),
+            cap,
+            sorted: Vec::with_capacity(cap),
+        }
     }
 
     /// Seed the history from the training set's utilities (paper:
@@ -34,11 +45,20 @@ impl UtilityCdf {
 
     /// Observe a new frame utility.
     pub fn add(&mut self, u: f32) {
+        // NaN would poison the ordered view (the old rebuild panicked on
+        // it at sort time; fail at the source instead).
+        assert!(!u.is_nan(), "utility must not be NaN");
         if self.window.len() == self.cap {
-            self.window.pop_front();
+            let old = self.window.pop_front().unwrap();
+            // First index holding a value == old (value equality is all
+            // the multiset needs; ties are interchangeable).
+            let i = self.sorted.partition_point(|&x| x < old);
+            debug_assert!(i < self.sorted.len() && self.sorted[i] == old);
+            self.sorted.remove(i);
         }
         self.window.push_back(u);
-        self.dirty = true;
+        let j = self.sorted.partition_point(|&x| x <= u);
+        self.sorted.insert(j, u);
     }
 
     pub fn len(&self) -> usize {
@@ -49,18 +69,8 @@ impl UtilityCdf {
         self.window.is_empty()
     }
 
-    fn refresh(&mut self) {
-        if self.dirty {
-            self.sorted.clear();
-            self.sorted.extend(self.window.iter().copied());
-            self.sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            self.dirty = false;
-        }
-    }
-
     /// Empirical CDF(u) = |{x ∈ H : x ≤ u}| / |H| (Eq. 16).
-    pub fn cdf(&mut self, u: f32) -> f64 {
-        self.refresh();
+    pub fn cdf(&self, u: f32) -> f64 {
         if self.sorted.is_empty() {
             return 0.0;
         }
@@ -74,12 +84,11 @@ impl UtilityCdf {
     /// r = 0 maps to threshold 0 (shed nothing: utilities are ≥ 0 and the
     /// shedder drops only frames with u < threshold). r = 1 maps to just
     /// above the window maximum (shed everything seen so far).
-    pub fn threshold_for(&mut self, r: f64) -> f32 {
+    pub fn threshold_for(&self, r: f64) -> f32 {
         let r = r.clamp(0.0, 1.0);
         if r == 0.0 {
             return 0.0;
         }
-        self.refresh();
         if self.sorted.is_empty() {
             return 0.0;
         }
@@ -98,8 +107,7 @@ impl UtilityCdf {
 
     /// The fraction of the history that would drop at threshold `th`
     /// (frames with u < th).
-    pub fn drop_fraction_at(&mut self, th: f32) -> f64 {
-        self.refresh();
+    pub fn drop_fraction_at(&self, th: f32) -> f64 {
         if self.sorted.is_empty() {
             return 0.0;
         }
@@ -123,7 +131,7 @@ mod tests {
 
     #[test]
     fn cdf_basics() {
-        let mut c = uniform_cdf();
+        let c = uniform_cdf();
         assert!((c.cdf(0.5) - 0.501).abs() < 2e-3);
         assert_eq!(c.cdf(-1.0), 0.0);
         assert_eq!(c.cdf(2.0), 1.0);
@@ -131,7 +139,7 @@ mod tests {
 
     #[test]
     fn threshold_satisfies_eq17() {
-        let mut c = uniform_cdf();
+        let c = uniform_cdf();
         for r in [0.1, 0.25, 0.5, 0.77, 0.9, 0.99] {
             let th = c.threshold_for(r);
             assert!(c.cdf(th) >= r, "r={r} th={th} cdf={}", c.cdf(th));
@@ -143,7 +151,7 @@ mod tests {
 
     #[test]
     fn boundary_rates() {
-        let mut c = uniform_cdf();
+        let c = uniform_cdf();
         assert_eq!(c.threshold_for(0.0), 0.0);
         let th1 = c.threshold_for(1.0);
         assert_eq!(c.drop_fraction_at(th1), 1.0, "r=1 must shed all history");
@@ -191,6 +199,48 @@ mod tests {
             let (a, b) = (g.unit_f64(), g.unit_f64());
             let (lo, hi) = if a < b { (a, b) } else { (b, a) };
             assert!(c.threshold_for(lo) <= c.threshold_for(hi));
+        });
+    }
+
+    #[test]
+    fn incremental_sort_matches_full_rebuild() {
+        // The incremental insert/remove maintenance must be observationally
+        // identical to the historical "rebuild + sort on refresh" at every
+        // step of arbitrary add sequences (including window evictions).
+        Prop::new("incremental cdf ≡ full rebuild").cases(40).run(|g| {
+            let cap = 1 + g.usize_in(0..64);
+            let mut c = UtilityCdf::new(cap);
+            let mut shadow: Vec<f32> = Vec::new(); // the old window model
+            let n_ops = g.usize_in(1..200);
+            for _ in 0..n_ops {
+                // Duplicates are likely (coarse grid) to stress tie paths.
+                let u = (g.usize_in(0..16) as f32) / 16.0;
+                c.add(u);
+                shadow.push(u);
+                if shadow.len() > cap {
+                    shadow.remove(0);
+                }
+                // Old behavior: sort the window snapshot, then query it.
+                let mut rebuilt = shadow.clone();
+                rebuilt.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let n = rebuilt.len();
+                let probe = (g.usize_in(0..18) as f32) / 16.0 - 0.0625;
+                let count = rebuilt.partition_point(|&x| x <= probe);
+                assert_eq!(c.cdf(probe), count as f64 / n as f64);
+                let below = rebuilt.partition_point(|&x| x < probe);
+                assert_eq!(c.drop_fraction_at(probe), below as f64 / n as f64);
+                let r = g.unit_f64();
+                let k = ((r * n as f64).ceil() as usize).max(1).min(n) - 1;
+                let expect = if r >= 1.0 {
+                    f32::from_bits(rebuilt[k].to_bits() + 1)
+                } else if r == 0.0 {
+                    0.0
+                } else {
+                    rebuilt[k]
+                };
+                assert_eq!(c.threshold_for(r), expect, "r={r} window={rebuilt:?}");
+                assert_eq!(c.len(), n);
+            }
         });
     }
 

@@ -139,6 +139,20 @@ impl Frame {
             .map(|o| o.object_id)
             .collect()
     }
+
+    /// Deduplicated union of target ids across `colors`, written into a
+    /// caller-owned buffer — the non-allocating twin of
+    /// [`Self::target_ids`], shared by the pipeline hot loops.
+    pub fn target_ids_into(&self, colors: &[NamedColor], min_px: usize, ids: &mut Vec<u64>) {
+        ids.clear();
+        for &color in colors {
+            for o in &self.truth {
+                if o.counts_for(color, min_px) && !ids.contains(&o.object_id) {
+                    ids.push(o.object_id);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -202,5 +216,11 @@ mod tests {
         assert!(f.is_positive(NamedColor::Red, 50));
         assert_eq!(f.target_ids(NamedColor::Red, 50), vec![7]);
         assert!(!f.is_positive(NamedColor::Blue, 50));
+        // The non-allocating union twin clears its buffer and dedups.
+        let mut ids = vec![99];
+        f.target_ids_into(&[NamedColor::Red, NamedColor::Blue], 50, &mut ids);
+        assert_eq!(ids, vec![7]);
+        f.target_ids_into(&[NamedColor::Blue], 50, &mut ids);
+        assert!(ids.is_empty());
     }
 }

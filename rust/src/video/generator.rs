@@ -4,7 +4,7 @@
 //! multi-hour experiment sweeps never materialize full videos in memory.
 
 use super::frame::Frame;
-use super::objects::{spawn_traffic, TrafficConfig, Trajectory};
+use super::objects::{spawn_traffic, Kind, TrafficConfig, Trajectory};
 use super::scene::Scene;
 use crate::util::rng::{splitmix64, Rng};
 
@@ -149,6 +149,64 @@ impl Video {
         frame.width = w;
     }
 
+    /// Generator-known dirty rectangles between frames `t-1` and `t`:
+    /// the (clipped) bounding boxes of every object whose rasterization
+    /// moved, at both its old and new position. Returns `true` when the
+    /// rects are **exhaustive** — every pixel outside them is guaranteed
+    /// identical across the two frames — which lets an incremental
+    /// extractor skip even the frame diff. Returns `false` (rects
+    /// cleared) when the whole frame must be considered dirty: the first
+    /// frame, or any config with per-pixel noise / brightness jitter
+    /// (those touch every pixel every frame).
+    pub fn dirty_rects_into(
+        &self,
+        t: usize,
+        rects: &mut Vec<(usize, usize, usize, usize)>,
+    ) -> bool {
+        rects.clear();
+        if t == 0
+            || t >= self.config.frames
+            || self.config.brightness_jitter != 0.0
+            || self.config.pixel_noise != 0.0
+        {
+            return false;
+        }
+        let (w, h) = (self.config.width, self.config.height);
+        let (t0, t1) = ((t - 1) as f64, t as f64);
+        for tr in &self.trajectories {
+            let a = tr.bbox_at(t0, w, h);
+            let b = tr.bbox_at(t1, w, h);
+            if a.is_none() && b.is_none() {
+                continue;
+            }
+            // Pixel-identical rasterization: same clipped bbox and same
+            // rounded left edge ⇒ the object draws the exact same pixels
+            // (any overdraw by *other* moved objects is covered by their
+            // own rects).
+            if a == b && tr.x_at(t0).round() == tr.x_at(t1).round() {
+                continue;
+            }
+            for (x0, y0, x1, y1) in [a, b].into_iter().flatten() {
+                // Pedestrians draw a head row one above their bbox.
+                let y0 = if tr.kind == Kind::Pedestrian { y0.saturating_sub(1) } else { y0 };
+                rects.push((x0, y0, x1, y1));
+            }
+        }
+        true
+    }
+
+    /// [`Self::render_into`] plus the dirty-rect report for the `t-1 → t`
+    /// transition; the returned bool is [`Self::dirty_rects_into`]'s.
+    pub fn render_into_with_dirty(
+        &self,
+        t: usize,
+        frame: &mut Frame,
+        rects: &mut Vec<(usize, usize, usize, usize)>,
+    ) -> bool {
+        self.render_into(t, frame);
+        self.dirty_rects_into(t, rects)
+    }
+
     /// Ground truth without rendering (fast path for labeling sweeps).
     pub fn truth(&self, t: usize) -> Vec<super::frame::VisibleObject> {
         let tf = t as f64;
@@ -288,6 +346,50 @@ mod tests {
         for (a, b) in f.rgb.iter().zip(&ff.rgb) {
             assert!((a - b).abs() <= 0.5 + 1e-6);
         }
+    }
+
+    #[test]
+    fn dirty_rects_cover_every_changed_pixel() {
+        let mut cfg = VideoConfig::new(3, 17, 0, 120);
+        cfg.pixel_noise = 0.0;
+        cfg.brightness_jitter = 0.0;
+        cfg.quantize_u8 = true;
+        cfg.traffic.vehicle_rate = 0.5;
+        let v = Video::new(cfg);
+        let mut rects = Vec::new();
+        let mut prev = v.render(0);
+        let mut any_rects = 0usize;
+        for t in 1..v.len() {
+            let f = v.render(t);
+            assert!(v.dirty_rects_into(t, &mut rects), "noise-free must be exhaustive");
+            any_rects += rects.len();
+            for y in 0..96 {
+                for x in 0..96 {
+                    let i = (y * 96 + x) * 3;
+                    if f.rgb[i..i + 3] != prev.rgb[i..i + 3] {
+                        let covered = rects
+                            .iter()
+                            .any(|&(x0, y0, x1, y1)| x >= x0 && x < x1 && y >= y0 && y < y1);
+                        assert!(covered, "changed pixel ({x},{y}) at t={t} outside all rects");
+                    }
+                }
+            }
+            prev = f;
+        }
+        assert!(any_rects > 0, "moving traffic must report rects");
+    }
+
+    #[test]
+    fn dirty_rects_refuse_noisy_configs() {
+        let v = quick_video(9); // default config has noise + jitter
+        let mut rects = vec![(1, 2, 3, 4)];
+        assert!(!v.dirty_rects_into(5, &mut rects));
+        assert!(rects.is_empty(), "refusal must clear stale rects");
+        // First frame is never hintable even without noise.
+        let mut cfg = VideoConfig::new(3, 17, 0, 10);
+        cfg.pixel_noise = 0.0;
+        cfg.brightness_jitter = 0.0;
+        assert!(!Video::new(cfg).dirty_rects_into(0, &mut rects));
     }
 
     #[test]

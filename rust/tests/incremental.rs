@@ -1,0 +1,282 @@
+//! Pins the temporal-redundancy incremental engine to the fused fast
+//! path and the reference oracle — **bit-equality on every input**,
+//! including the fallback paths (first frame, non-integer frames, scene
+//! cuts) — and the sharded simulator's determinism under incremental
+//! extraction.
+
+use uals::color::{ColorLut, HueRanges, NamedColor};
+use uals::config::{CostConfig, QueryConfig, ShedderConfig};
+use uals::features::{
+    compute_features, compute_features_fast, Extractor, FrameFeatures, IncrementalConfig,
+    IncrementalEngine, UtilityValues,
+};
+use uals::pipeline::{run_sharded_sim, run_sharded_sim_with, Policy, SimConfig};
+use uals::util::prop::{Gen, Prop};
+use uals::util::rng::Rng;
+use uals::utility::{train, Combine};
+use uals::video::{Video, VideoConfig};
+
+/// Random hue-range set (1–2 colors), as in `fast_path.rs`.
+fn random_ranges(g: &mut Gen) -> Vec<HueRanges> {
+    let named = [
+        NamedColor::Red,
+        NamedColor::Yellow,
+        NamedColor::Green,
+        NamedColor::Blue,
+    ];
+    let k = 1 + g.usize_in(0..2);
+    (0..k)
+        .map(|_| {
+            if g.bool() {
+                named[g.usize_in(0..named.len())].ranges()
+            } else {
+                let rng = g.rng();
+                let lo = rng.f32() * 170.0;
+                let hi = (lo + rng.f32() * (180.0 - lo)).min(180.0);
+                HueRanges::single(lo, hi)
+            }
+        })
+        .collect()
+}
+
+fn random_int_frame(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.below(256) as f32).collect()
+}
+
+/// Mutate a random rect of `frame` with random integer pixels (object
+/// motion / appearance).
+fn mutate_rect(rng: &mut Rng, frame: &mut [f32], w: usize, h: usize) {
+    let rw = 1 + rng.range(0, (w / 2).max(1));
+    let rh = 1 + rng.range(0, (h / 2).max(1));
+    let x0 = rng.range(0, w - rw + 1);
+    let y0 = rng.range(0, h - rh + 1);
+    for y in y0..y0 + rh {
+        for x in x0..x0 + rw {
+            let i = 3 * (y * w + x);
+            for c in 0..3 {
+                frame[i + c] = rng.below(256) as f32;
+            }
+        }
+    }
+}
+
+#[test]
+fn incremental_is_bit_equal_to_fast_and_reference_over_streams() {
+    Prop::new("incremental ≡ fast ≡ reference (streams)")
+        .cases(25)
+        .run(|g| {
+            let ranges = random_ranges(g);
+            let fg_threshold = match g.usize_in(0..3) {
+                0 => 25.0,
+                1 => g.f64_in(0.0, 80.0) as f32,
+                _ => 0.0,
+            };
+            let lut = ColorLut::new(&ranges, fg_threshold);
+            let w = 8 + g.usize_in(0..33);
+            let h = 8 + g.usize_in(0..25);
+            let tile = [4usize, 8, 16][g.usize_in(0..3)];
+            let cfg = IncrementalConfig { tile, max_dirty_frac: g.f64_in(0.1, 0.9) };
+            let mut engine = IncrementalEngine::new(cfg, w, h);
+            let mut out = FrameFeatures::empty();
+            let case_seed = g.case_seed;
+            let rng = g.rng();
+            let n = w * h * 3;
+            let bg = random_int_frame(rng, n);
+            let mut frame = bg.clone();
+            for step in 0..14 {
+                match rng.below(8) {
+                    0 | 1 => {} // static frame (zero dirty tiles)
+                    2 | 3 => mutate_rect(rng, &mut frame, w, h), // sparse motion
+                    4 => {
+                        // heavy motion: several rects at once
+                        for _ in 0..4 {
+                            mutate_rect(rng, &mut frame, w, h);
+                        }
+                    }
+                    5 => frame = random_int_frame(rng, n), // forced scene cut
+                    6 => {
+                        // non-integer sensor noise → whole-frame fallback
+                        for _ in 0..1 + rng.range(0, 5) {
+                            let i = rng.range(0, n);
+                            frame[i] = (frame[i] + 0.25).min(255.25);
+                        }
+                    }
+                    _ => {
+                        // re-quantize: recovery back onto the tile path
+                        for v in frame.iter_mut() {
+                            *v = v.round().clamp(0.0, 255.0);
+                        }
+                    }
+                }
+                engine.extract_into(&lut, &frame, &bg, None, &mut out);
+                let oracle = compute_features(&frame, &bg, &ranges, fg_threshold);
+                assert_eq!(out, oracle, "vs reference, step {step} seed {case_seed}");
+                let fast = compute_features_fast(&lut, &frame, &bg);
+                assert_eq!(out, fast, "vs fast, step {step} seed {case_seed}");
+            }
+        });
+}
+
+fn noise_free_video_rate(
+    traffic_seed: u64,
+    camera: u32,
+    frames: usize,
+    vehicle_rate: f64,
+) -> Video {
+    let mut vc = VideoConfig::new(7, traffic_seed, camera, frames);
+    vc.pixel_noise = 0.0;
+    vc.brightness_jitter = 0.0;
+    vc.quantize_u8 = true;
+    vc.traffic.vehicle_rate = vehicle_rate;
+    vc.traffic.pedestrian_rate = vehicle_rate;
+    Video::new(vc)
+}
+
+fn noise_free_video(traffic_seed: u64, camera: u32, frames: usize) -> Video {
+    noise_free_video_rate(traffic_seed, camera, frames, 0.35)
+}
+
+#[test]
+fn hinted_extraction_matches_oracle_and_engages_tile_path() {
+    // Sparse traffic: the high-redundancy regime the engine targets.
+    let videos = vec![noise_free_video_rate(77, 0, 150, 0.1)];
+    let v = &videos[0];
+    let model = train(&videos, &[0], &[NamedColor::Red], Combine::Single);
+    let ranges = model.ranges();
+    let ex = Extractor::native(model.clone()).with_incremental(IncrementalConfig::default());
+    let mut rects = Vec::new();
+    let mut feats = FrameFeatures::empty();
+    let mut utils = UtilityValues::empty();
+    for t in 0..v.len() {
+        let f = v.render(t);
+        let exhaustive = v.dirty_rects_into(t, &mut rects);
+        assert_eq!(exhaustive, t > 0, "noise-free video is hintable after t=0");
+        let hints = exhaustive.then_some(rects.as_slice());
+        ex.extract_camera_hinted_into(
+            0,
+            f.width,
+            f.height,
+            &f.rgb,
+            v.background(),
+            hints,
+            &mut feats,
+            &mut utils,
+        )
+        .unwrap();
+        let oracle = compute_features(&f.rgb, v.background(), &ranges, model.fg_threshold);
+        assert_eq!(feats, oracle, "t={t}");
+        assert_eq!(utils, model.utility(&oracle), "t={t}");
+    }
+    let s = ex.incremental_stats(0).unwrap();
+    assert_eq!(s.frames, 150);
+    assert_eq!(s.fallbacks, 0, "u8 camera must never fall back: {s:?}");
+    assert!(s.incremental_frames >= 120, "tile path must dominate: {s:?}");
+    // The whole point: steady-state dirty fraction is small.
+    assert!(
+        s.dirty_tiles * 2 < s.total_tiles,
+        "sparse traffic must keep most tiles clean: {s:?}"
+    );
+}
+
+#[test]
+fn diffed_extraction_matches_oracle_on_noise_free_video() {
+    let videos = vec![noise_free_video(91, 0, 80)];
+    let v = &videos[0];
+    let model = train(&videos, &[0], &[NamedColor::Red], Combine::Single);
+    let ranges = model.ranges();
+    let ex = Extractor::native(model.clone()).with_incremental(IncrementalConfig::default());
+    let mut feats = FrameFeatures::empty();
+    let mut utils = UtilityValues::empty();
+    for t in 0..v.len() {
+        let f = v.render(t);
+        ex.extract_camera_into(0, f.width, f.height, &f.rgb, v.background(), &mut feats, &mut utils)
+            .unwrap();
+        let oracle = compute_features(&f.rgb, v.background(), &ranges, model.fg_threshold);
+        assert_eq!(feats, oracle, "t={t}");
+    }
+    let s = ex.incremental_stats(0).unwrap();
+    assert!(s.incremental_frames >= 40, "diff path must engage: {s:?}");
+}
+
+fn sweep_cameras(n: usize, frames: usize) -> Vec<Video> {
+    (0..n).map(|i| noise_free_video(0xA11 + i as u64, i as u32, frames)).collect()
+}
+
+fn sweep_cfg() -> SimConfig {
+    SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: QueryConfig::single(NamedColor::Red).with_latency_bound(1500.0),
+        backend_tokens: 1,
+        policy: Policy::UtilityControlLoop,
+        seed: 0x1AC,
+        fps_total: 10.0,
+    }
+}
+
+#[test]
+fn sharded_sim_with_incremental_matches_plain_exactly() {
+    let videos = sweep_cameras(3, 120);
+    let model = train(&videos, &[0, 1], &[NamedColor::Red], Combine::Single);
+    let cfg = sweep_cfg();
+    let (plain, per_plain) = run_sharded_sim(&videos, &cfg, &model, 1).unwrap();
+    let (inc, per_inc) =
+        run_sharded_sim_with(&videos, &cfg, &model, 3, Some(IncrementalConfig::default()))
+            .unwrap();
+    // Bit-identical extraction ⇒ identical decisions ⇒ identical metrics,
+    // independent of worker count.
+    assert_eq!(plain.ingress, inc.ingress);
+    assert_eq!(plain.transmitted, inc.transmitted);
+    assert_eq!(plain.shed, inc.shed);
+    assert_eq!(plain.qor.overall(), inc.qor.overall());
+    assert_eq!(plain.latency.count(), inc.latency.count());
+    assert_eq!(plain.latency.max_ms(), inc.latency.max_ms());
+    assert_eq!(plain.control_series, inc.control_series);
+    for ((c1, r1), (c2, r2)) in per_plain.iter().zip(&per_inc) {
+        assert_eq!(c1, c2);
+        assert_eq!(r1.ingress, r2.ingress);
+        assert_eq!(r1.shed, r2.shed);
+        assert_eq!(r1.qor.overall(), r2.qor.overall());
+    }
+}
+
+#[test]
+fn serial_sim_with_incremental_extractor_matches_plain() {
+    use uals::backend::{BackendQuery, CostModel, Detector};
+    use uals::pipeline::{backgrounds_of, run_sim};
+    use uals::video::Streamer;
+
+    let videos = sweep_cameras(2, 100);
+    let model = train(&videos, &[0], &[NamedColor::Red], Combine::Single);
+    let cfg = sweep_cfg();
+    let mk_backend = || {
+        BackendQuery::new(
+            cfg.query.clone(),
+            Detector::native(12, model.fg_threshold),
+            CostModel::new(cfg.costs.clone(), cfg.seed),
+            model.fg_threshold,
+        )
+    };
+    let bgs = backgrounds_of(&videos);
+
+    let plain_ex = Extractor::native(model.clone());
+    let mut backend = mk_backend();
+    let plain = run_sim(Streamer::new(&videos), &bgs, &cfg, &plain_ex, &mut backend).unwrap();
+
+    // The incremental extractor maintains one engine per camera even when
+    // the two streams interleave through a single shared shedder.
+    let inc_ex = Extractor::native(model.clone()).with_incremental(IncrementalConfig::default());
+    let mut backend = mk_backend();
+    let inc = run_sim(Streamer::new(&videos), &bgs, &cfg, &inc_ex, &mut backend).unwrap();
+
+    assert_eq!(plain.ingress, inc.ingress);
+    assert_eq!(plain.transmitted, inc.transmitted);
+    assert_eq!(plain.shed, inc.shed);
+    assert_eq!(plain.qor.overall(), inc.qor.overall());
+    assert_eq!(plain.latency.max_ms(), inc.latency.max_ms());
+    assert_eq!(plain.control_series, inc.control_series);
+    for cam in [0u32, 1] {
+        let s = inc_ex.incremental_stats(cam).unwrap();
+        assert!(s.incremental_frames > 0, "camera {cam} never went incremental: {s:?}");
+    }
+}
