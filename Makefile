@@ -2,7 +2,7 @@
 #
 #   make build      release build of the Rust stack
 #   make test       tier-1 test suite (green without artifacts)
-#   make check      CI gate: release build + tier-1 tests + fmt check
+#   make check      CI gate: release build + tier-1 tests + fmt + clippy
 #   make bench      hot-path microbenchmarks → BENCH_micro.json (repo root)
 #                   (includes the incremental-vs-fast redundancy sweep;
 #                   run from a toolchain image to populate the file)
@@ -11,7 +11,7 @@
 #                   (requires jax; the Rust side runs without it, on the
 #                   native LUT fast path)
 
-.PHONY: build test check fmt-check bench figures artifacts clean
+.PHONY: build test check fmt-check clippy bench figures artifacts clean
 
 build:
 	cargo build --release
@@ -19,10 +19,13 @@ build:
 test:
 	cargo test -q
 
-check: build test fmt-check
+check: build test fmt-check clippy
 
 fmt-check:
 	cargo fmt --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
 
 bench:
 	cargo bench --bench microbench

@@ -80,7 +80,8 @@ fn main() -> Result<()> {
     }
 
     println!(
-        "\nsummary: ingress {}, shed {} ({:.1}%), QoR {:.3}, violations {} ({:.2}%), max E2E {:.0} ms",
+        "\nsummary: ingress {}, shed {} ({:.1}%), QoR {:.3}, violations {} ({:.2}%), \
+         max E2E {:.0} ms",
         report.ingress,
         report.shed,
         100.0 * report.observed_drop_rate(),

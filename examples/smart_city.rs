@@ -13,12 +13,15 @@ use uals::config::{CostConfig, QueryConfig, ShedderConfig};
 use uals::features::Extractor;
 use uals::pipeline::{backgrounds_of, run_sim, Policy, SimConfig};
 use uals::utility::{train, Combine};
-use uals::video::{build_dataset, streamer::aggregate_fps, DatasetConfig, Streamer, Video, VideoConfig};
+use uals::video::{
+    build_dataset, streamer::aggregate_fps, DatasetConfig, Streamer, Video, VideoConfig,
+};
 
 fn city_cameras(k: usize, frames: usize) -> Vec<Video> {
     (0..k)
         .map(|i| {
-            let mut vc = VideoConfig::new(0xC17 + (i as u64 % 3), 0xCAFE + i as u64, i as u32, frames);
+            let mut vc =
+                VideoConfig::new(0xC17 + (i as u64 % 3), 0xCAFE + i as u64, i as u32, frames);
             vc.traffic.vehicle_rate = 0.3;
             Video::new(vc)
         })
@@ -46,7 +49,7 @@ fn main() -> Result<()> {
         let videos = city_cameras(k, frames);
         let fps = aggregate_fps(&videos);
         let bgs = backgrounds_of(&videos);
-        let mut run = |policy: Policy| -> Result<_> {
+        let run = |policy: Policy| -> Result<_> {
             let cfg = SimConfig {
                 costs: CostConfig::default(),
                 shedder: ShedderConfig::default(),

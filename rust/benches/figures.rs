@@ -6,7 +6,7 @@
 //! Scale via env: UALS_BENCH_SCALE=tiny|small|paper (default tiny so
 //! `cargo bench` completes quickly; use small/paper for the real runs).
 
-use uals::experiments::{run_and_save, Scale, ALL_FIGURES, OVERHEAD_FIGURE};
+use uals::experiments::{run_and_save, Scale, ALL_FIGURES, OVERHEAD_FIGURE, SCENARIOS};
 use uals::util::bench::Bench;
 
 fn main() {
@@ -18,7 +18,7 @@ fn main() {
 
     let out = std::path::PathBuf::from("results");
     let mut b = Bench::new(0, 1);
-    for id in ALL_FIGURES.iter().chain([&OVERHEAD_FIGURE]) {
+    for id in ALL_FIGURES.iter().chain([&OVERHEAD_FIGURE]).chain(SCENARIOS.iter()) {
         b.run(&format!("figure_{id}"), || {
             run_and_save(&[id], scale, &out, true).expect("figure run");
         });

@@ -236,6 +236,32 @@ fn main() {
         std::hint::black_box(r.0.ingress);
     });
 
+    // --- end-to-end core pipeline (SimClock driver) -------------------------
+    // The shared-shedder deployment through `pipeline::core`: 4 cameras
+    // interleaved into one Load Shedder + backend, full lifecycle per
+    // frame. The headline below converts the row to frames/sec.
+    let core_frames: usize = sweep_videos.iter().map(|v| v.len()).sum();
+    let mut core_cfg = sweep_cfg.clone();
+    core_cfg.fps_total = uals::video::streamer::aggregate_fps(&sweep_videos);
+    b.run_n("pipeline/core_sim_e2e_4cams_480frames", 1, 3, || {
+        let extractor = Extractor::native(sweep_model.clone());
+        let mut backend = BackendQuery::new(
+            core_cfg.query.clone(),
+            Detector::native(12, 25.0),
+            CostModel::new(core_cfg.costs.clone(), core_cfg.seed),
+            25.0,
+        );
+        let r = uals::pipeline::run_sim(
+            uals::video::Streamer::new(&sweep_videos),
+            &uals::pipeline::backgrounds_of(&sweep_videos),
+            &core_cfg,
+            &extractor,
+            &mut backend,
+        )
+        .unwrap();
+        std::hint::black_box(r.ingress);
+    });
+
     // --- AOT artifact path (PJRT) -------------------------------------------
     if let Ok(engine) = Engine::from_default_artifacts() {
         let art1 = Extractor::artifact(&engine, model1.clone()).unwrap();
@@ -309,6 +335,12 @@ fn main() {
         println!(
             "parallel 4-camera sweep speedup ({threads} threads): {:.2}x",
             ser.mean_ms / par.mean_ms.max(1e-12)
+        );
+    }
+    if let Some(core) = b.result("pipeline/core_sim_e2e_4cams_480frames") {
+        println!(
+            "core pipeline e2e throughput (SimClock driver): {:.0} frames/sec",
+            core_frames as f64 / (core.mean_ms.max(1e-12) / 1e3)
         );
     }
 

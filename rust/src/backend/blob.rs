@@ -20,7 +20,13 @@ impl Mask {
 }
 
 /// Foreground mask via max-channel background difference.
-pub fn foreground_mask(rgb: &[f32], background: &[f32], width: usize, height: usize, threshold: f32) -> Mask {
+pub fn foreground_mask(
+    rgb: &[f32],
+    background: &[f32],
+    width: usize,
+    height: usize,
+    threshold: f32,
+) -> Mask {
     let mut bits = vec![false; width * height];
     for p in 0..width * height {
         let d = (rgb[3 * p] - background[3 * p])

@@ -52,6 +52,34 @@ impl BackendQuery {
         width: usize,
         height: usize,
     ) -> Result<QueryResult> {
+        self.run(rgb, background, width, height, true)
+    }
+
+    /// Like [`Self::process`] but *skips executing the DNN* while still
+    /// traversing the same stages and sampling the same cost sequence:
+    /// the returned `last_stage` / `exec_ms` are identical to `process`,
+    /// with `detections = None` and `matched = false` on DNN-bound frames.
+    /// Used by drivers that run the detector elsewhere (e.g. the
+    /// real-time pipeline's worker thread) but must keep the cost-model
+    /// RNG in lockstep with the simulator.
+    pub fn plan(
+        &mut self,
+        rgb: &[f32],
+        background: &[f32],
+        width: usize,
+        height: usize,
+    ) -> Result<QueryResult> {
+        self.run(rgb, background, width, height, false)
+    }
+
+    fn run(
+        &mut self,
+        rgb: &[f32],
+        background: &[f32],
+        width: usize,
+        height: usize,
+        run_dnn: bool,
+    ) -> Result<QueryResult> {
         let mut exec_ms = 0.0;
 
         // Stage 1: blob-size filter — contiguous foreground groups.
@@ -85,8 +113,19 @@ impl BackendQuery {
             });
         }
 
-        // Stage 3: DNN object detection (the heavyweight stage).
+        // Stage 3: DNN object detection (the heavyweight stage). Cost is
+        // always charged; the detector itself only runs when requested
+        // (it never touches the cost RNG, so plan/process stay in step).
         exec_ms += self.cost.dnn_ms();
+        if !run_dnn {
+            exec_ms += self.cost.sink_ms();
+            return Ok(QueryResult {
+                last_stage: Stage::Sink,
+                exec_ms,
+                detections: None,
+                matched: false,
+            });
+        }
         let detections = self
             .detector
             .detect(rgb, background, width, height, &self.ranges)?;
@@ -196,6 +235,31 @@ mod tests {
         let (rgb, bg) = frame(&[(10, 30, RED), (50, 60, YELLOW)]);
         let r = q.process(&rgb, &bg, 96, 96).unwrap();
         assert!(r.matched);
+    }
+
+    #[test]
+    fn plan_matches_process_stage_and_cost_sequence() {
+        // Two executors with the same cost seed (and jitter ON): planning
+        // must traverse the same stages and sample the identical cost
+        // sequence as full processing, frame after frame.
+        let mk = || {
+            BackendQuery::new(
+                QueryConfig::single(NamedColor::Red),
+                Detector::native(12, 25.0),
+                CostModel::new(CostConfig { jitter: 0.1, ..Default::default() }, 99),
+                25.0,
+            )
+        };
+        let (mut full, mut planner) = (mk(), mk());
+        let cases = [vec![], vec![(10, 30, GRAY)], vec![(10, 30, RED)], vec![(50, 60, RED)]];
+        for blocks in &cases {
+            let (rgb, bg) = frame(blocks);
+            let p = full.process(&rgb, &bg, 96, 96).unwrap();
+            let q = planner.plan(&rgb, &bg, 96, 96).unwrap();
+            assert_eq!(p.last_stage, q.last_stage);
+            assert_eq!(p.exec_ms, q.exec_ms);
+            assert!(q.detections.is_none(), "plan must not run the DNN");
+        }
     }
 
     #[test]

@@ -180,12 +180,12 @@ pub fn ablation_history(scale: Scale) -> Vec<(String, Table)> {
 }
 
 /// Queue-policy ablation: utility-ordered queue vs FIFO (constant key)
-/// under identical overload — QoR and violation rate.
+/// under identical overload — QoR and violation rate. Runs through the
+/// shared streaming core (SimClock driver).
 pub fn ablation_queue(scale: Scale) -> Vec<(String, Table)> {
-    use crate::backend::{BackendQuery, CostModel, Detector};
+    use super::figs_sim::run_scenario;
     use crate::config::{CostConfig, QueryConfig, ShedderConfig};
-    use crate::features::Extractor;
-    use crate::pipeline::{backgrounds_of, run_sim, Policy, SimConfig};
+    use crate::pipeline::{backgrounds_of, IterArrivals, Policy, SimConfig};
 
     let frames = match scale {
         Scale::Tiny => 200,
@@ -220,21 +220,12 @@ pub fn ablation_queue(scale: Scale) -> Vec<(String, Table)> {
             seed: 0xAB,
             fps_total: fps,
         };
-        let extractor = Extractor::native(model.clone());
-        let mut backend = BackendQuery::new(
-            query.clone(),
-            Detector::native(12, 25.0),
-            CostModel::new(cfg.costs.clone(), cfg.seed),
-            25.0,
-        );
-        let r = run_sim(
-            crate::video::Streamer::new(&videos),
+        let r = run_scenario(
+            IterArrivals::new(crate::video::Streamer::new(&videos), fps),
             &bgs,
             &cfg,
-            &extractor,
-            &mut backend,
-        )
-        .expect("sim");
+            &model,
+        );
         t.push_raw(vec![
             name.to_string(),
             format!("{:.4}", r.qor.overall()),

@@ -7,14 +7,12 @@ use crate::color::NamedColor;
 use crate::config::{CostConfig, QueryConfig, ShedderConfig};
 use crate::features::Extractor;
 use crate::pipeline::{
-    backgrounds_of, default_threads, parallel_map, run_sim, BackgroundMap, Policy, SimConfig,
-    SimReport,
+    backgrounds_of, default_threads, parallel_map, run_pipeline, ArrivalModel, BackgroundMap,
+    IterArrivals, Policy, SimClock, SimConfig, SimReport, SyncBackend,
 };
 use crate::util::csv::Table;
 use crate::utility::{train, Combine, UtilityModel};
-use crate::video::{
-    build_dataset, DatasetConfig, Frame, Paint, SegmentedVideo, Streamer, Video,
-};
+use crate::video::{build_dataset, DatasetConfig, Paint, SegmentedVideo, Streamer, Video};
 use std::collections::HashMap;
 
 fn frames_per_segment(scale: Scale) -> usize {
@@ -52,15 +50,14 @@ fn sim_config(query: QueryConfig, fps_total: f64, policy: Policy) -> SimConfig {
     }
 }
 
-fn run_scenario<I>(
-    frames: I,
+/// Run one scenario through the streaming core: SimClock + in-process
+/// backend over any [`ArrivalModel`] workload.
+pub(crate) fn run_scenario<A: ArrivalModel>(
+    arrivals: A,
     backgrounds: &BackgroundMap<'_>,
     cfg: &SimConfig,
     model: &UtilityModel,
-) -> SimReport
-where
-    I: IntoIterator<Item = Frame>,
-{
+) -> SimReport {
     let extractor = Extractor::native(model.clone());
     let mut backend = BackendQuery::new(
         cfg.query.clone(),
@@ -68,7 +65,9 @@ where
         CostModel::new(cfg.costs.clone(), cfg.seed),
         25.0,
     );
-    run_sim(frames, backgrounds, cfg, &extractor, &mut backend).expect("sim")
+    let mut executor = SyncBackend::new(&mut backend);
+    run_pipeline(arrivals, backgrounds, cfg, &extractor, &mut executor, &mut SimClock)
+        .expect("sim")
 }
 
 /// Render a SimReport into the two Fig. 13 panels: the 5-second-window
@@ -130,7 +129,7 @@ pub fn fig13a(scale: Scale) -> Vec<(String, Table)> {
     let cfg = sim_config(query, sv.fps(), Policy::UtilityControlLoop);
     let mut bgs: BackgroundMap<'_> = HashMap::new();
     bgs.insert(0u32, sv.background());
-    let report = run_scenario(sv.iter(), &bgs, &cfg, &model);
+    let report = run_scenario(IterArrivals::new(sv.iter(), sv.fps()), &bgs, &cfg, &model);
     report_tables("fig13a", &report, cfg.query.latency_bound_ms)
 }
 
@@ -141,7 +140,12 @@ pub fn fig13b(scale: Scale) -> Vec<(String, Table)> {
     let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0);
     let fps = crate::video::streamer::aggregate_fps(&videos);
     let cfg = sim_config(query, fps, Policy::UtilityControlLoop);
-    let report = run_scenario(Streamer::new(&videos), &backgrounds_of(&videos), &cfg, &model);
+    let report = run_scenario(
+        IterArrivals::new(Streamer::new(&videos), fps),
+        &backgrounds_of(&videos),
+        &cfg,
+        &model,
+    );
     report_tables("fig13b", &report, cfg.query.latency_bound_ms)
 }
 
@@ -170,14 +174,14 @@ pub fn fig14(scale: Scale) -> Vec<(String, Table)> {
         let fps = crate::video::streamer::aggregate_fps(&videos);
         let bgs = backgrounds_of(&videos);
         let cfg_u = sim_config(query.clone(), fps, Policy::UtilityControlLoop);
-        let ru = run_scenario(Streamer::new(&videos), &bgs, &cfg_u, &model);
+        let ru = run_scenario(IterArrivals::new(Streamer::new(&videos), fps), &bgs, &cfg_u, &model);
         // Paper: baseline target rate from Eq. 18/19 assuming 500 ms.
         let cfg_r = sim_config(
             query.clone(),
             fps,
             Policy::RandomRate { assumed_proc_q_ms: 500.0 },
         );
-        let rr = run_scenario(Streamer::new(&videos), &bgs, &cfg_r, &model);
+        let rr = run_scenario(IterArrivals::new(Streamer::new(&videos), fps), &bgs, &cfg_r, &model);
         [
             k as f64,
             ru.qor.overall(),

@@ -11,6 +11,7 @@ pub mod common;
 pub mod fig_overhead;
 pub mod figs_offline;
 pub mod figs_sim;
+pub mod scenarios;
 
 pub use common::{build_corpus, Corpus, Scale, ScoredFrame};
 
@@ -31,6 +32,9 @@ pub const ABLATIONS: [&str; 4] = [
     "ablation-history",
     "ablation-queue",
 ];
+/// Workload scenarios unlocked by the clock-abstracted core's
+/// `ArrivalModel` plugins (beyond the paper's fixed-fps streams).
+pub const SCENARIOS: [&str; 2] = ["scenario-bursty", "scenario-churn"];
 
 /// Run one figure harness; returns named tables.
 pub fn run_figure(id: &str, scale: Scale) -> Result<Vec<(String, Table)>> {
@@ -54,8 +58,11 @@ pub fn run_figure(id: &str, scale: Scale) -> Result<Vec<(String, Table)>> {
         "ablation-features" => ablation::ablation_features(scale),
         "ablation-history" => ablation::ablation_history(scale),
         "ablation-queue" => ablation::ablation_queue(scale),
+        "scenario-bursty" => scenarios::scenario_bursty(scale),
+        "scenario-churn" => scenarios::scenario_churn(scale),
         other => bail!(
-            "unknown figure '{other}' (try one of {ALL_FIGURES:?}, 15, or {ABLATIONS:?})"
+            "unknown figure '{other}' (try one of {ALL_FIGURES:?}, 15, \
+             {ABLATIONS:?}, or {SCENARIOS:?})"
         ),
     })
 }
@@ -69,7 +76,11 @@ pub fn run_and_save(ids: &[&str], scale: Scale, out_dir: &Path, quiet: bool) -> 
             let path = out_dir.join(format!("{name}.csv"));
             table.write(&path)?;
             if !quiet {
-                println!("\n=== Figure {id}: {name} ({} rows) -> {} ===", table.len(), path.display());
+                println!(
+                    "\n=== Figure {id}: {name} ({} rows) -> {} ===",
+                    table.len(),
+                    path.display()
+                );
                 // Print at most 24 rows to keep terminals readable.
                 let pretty = table.to_pretty();
                 for line in pretty.lines().take(26) {

@@ -1,0 +1,170 @@
+//! Workload-scenario harnesses unlocked by the clock-abstracted core:
+//! experiments that exist only as [`ArrivalModel`] plugins, beyond the
+//! paper's fixed-fps streams.
+//!
+//! * **bursty** — the same camera set under fixed-fps vs Poisson ingress
+//!   at the identical long-run rate: how much QoR/latency headroom the
+//!   control loop loses to burstiness (cf. timely edge-analytics
+//!   scheduling, arXiv 2406.14820).
+//! * **churn** — cameras joining and leaving mid-run: the aggregate rate
+//!   steps while the run is in flight, and the shedder must re-derive its
+//!   threshold across each step.
+//!
+//! Run via `uals figures --fig scenario-bursty` / `--fig scenario-churn`.
+
+use super::common::Scale;
+use super::figs_sim::run_scenario;
+use crate::color::NamedColor;
+use crate::config::{CostConfig, QueryConfig, ShedderConfig};
+use crate::pipeline::{
+    backgrounds_of, CameraChurn, IterArrivals, PoissonArrivals, Policy, SimConfig,
+};
+use crate::util::csv::Table;
+use crate::utility::{train, Combine, UtilityModel};
+use crate::video::{build_dataset, DatasetConfig, Streamer, Video, VideoConfig};
+
+fn scenario_frames(scale: Scale) -> usize {
+    match scale {
+        Scale::Tiny => 200,
+        Scale::Small => 600,
+        Scale::Paper => 2400,
+    }
+}
+
+fn scenario_videos(k: usize, frames: usize) -> Vec<Video> {
+    (0..k)
+        .map(|i| {
+            let mut vc =
+                VideoConfig::new(0x5CE + (i as u64 % 3), 0xFEED + i as u64, i as u32, frames);
+            vc.traffic.vehicle_rate = 0.3;
+            Video::new(vc)
+        })
+        .collect()
+}
+
+fn scenario_model() -> UtilityModel {
+    let videos = build_dataset(&DatasetConfig {
+        num_seeds: 2,
+        videos_per_seed: 2,
+        frames_per_video: 300,
+        base_seed: 0x5CE0,
+        target_boost: 2.0,
+    });
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    train(&videos, &idx, &[NamedColor::Red], Combine::Single)
+}
+
+fn scenario_config(fps_total: f64) -> SimConfig {
+    SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0),
+        backend_tokens: 1,
+        policy: Policy::UtilityControlLoop,
+        seed: 0x5CE,
+        fps_total,
+    }
+}
+
+/// Bursty-ingress scenario: fixed-fps vs Poisson arrivals at the same
+/// long-run rate, per stream count.
+pub fn scenario_bursty(scale: Scale) -> Vec<(String, Table)> {
+    let frames = scenario_frames(scale);
+    let model = scenario_model();
+    let mut t = Table::new(vec![
+        "streams",
+        "qor_uniform",
+        "viol_uniform",
+        "drop_uniform",
+        "qor_poisson",
+        "viol_poisson",
+        "drop_poisson",
+    ]);
+    for k in [2usize, 4] {
+        let videos = scenario_videos(k, frames);
+        let fps = crate::video::streamer::aggregate_fps(&videos);
+        let bgs = backgrounds_of(&videos);
+        let cfg = scenario_config(fps);
+        let uniform =
+            run_scenario(IterArrivals::new(Streamer::new(&videos), fps), &bgs, &cfg, &model);
+        let poisson =
+            run_scenario(PoissonArrivals::new(&videos, cfg.seed, 1.0), &bgs, &cfg, &model);
+        t.push(&[
+            k as f64,
+            uniform.qor.overall(),
+            uniform.latency.violation_rate(),
+            uniform.observed_drop_rate(),
+            poisson.qor.overall(),
+            poisson.latency.violation_rate(),
+            poisson.observed_drop_rate(),
+        ]);
+    }
+    vec![("scenario_bursty".into(), t)]
+}
+
+/// Camera-churn scenario: staggered joins/leaves; per-5s-window ingress,
+/// shed and threshold trace, plus a summary row.
+pub fn scenario_churn(scale: Scale) -> Vec<(String, Table)> {
+    let frames = scenario_frames(scale);
+    let model = scenario_model();
+    let videos = scenario_videos(4, frames);
+    let fps = crate::video::streamer::aggregate_fps(&videos);
+    let bgs = backgrounds_of(&videos);
+    let cfg = scenario_config(fps);
+    // Each camera is up for half the content length, joining in a rolling
+    // stagger — aggregate ingress ramps 1→2 cameras and back down.
+    let up_ms = frames as f64 / 10.0 * 1e3 / 2.0;
+    let report = run_scenario(
+        CameraChurn::staggered(&videos, up_ms / 2.0, up_ms),
+        &bgs,
+        &cfg,
+        &model,
+    );
+
+    let mut series = Table::new(vec!["window_start_ms", "ingress", "shed"]);
+    let ingress = report.stages.counts(crate::metrics::Stage::Ingress);
+    let shed = report.stages.counts(crate::metrics::Stage::Shed);
+    for (i, (ts, n)) in ingress.iter().enumerate() {
+        let s = shed.get(i).map(|x| x.1).unwrap_or(0);
+        series.push(&[*ts, *n as f64, s as f64]);
+    }
+    let mut summary = Table::new(vec!["ingress", "transmitted", "shed", "qor", "viol_rate"]);
+    summary.push(&[
+        report.ingress as f64,
+        report.transmitted as f64,
+        report.shed as f64,
+        report.qor.overall(),
+        report.latency.violation_rate(),
+    ]);
+    vec![
+        ("scenario_churn_series".into(), series),
+        ("scenario_churn_summary".into(), summary),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bursty_scenario_rows_and_conservation_shape() {
+        let out = scenario_bursty(Scale::Tiny);
+        let t = &out[0].1;
+        assert_eq!(t.len(), 2);
+        // Drop rates are valid fractions in every row.
+        for line in t.to_csv().lines().skip(1) {
+            let cols: Vec<f64> = line.split(',').map(|c| c.parse().unwrap()).collect();
+            assert!(cols[3] >= 0.0 && cols[3] <= 1.0, "uniform drop {}", cols[3]);
+            assert!(cols[6] >= 0.0 && cols[6] <= 1.0, "poisson drop {}", cols[6]);
+        }
+    }
+
+    #[test]
+    fn churn_scenario_rate_steps_show_in_series() {
+        let out = scenario_churn(Scale::Tiny);
+        let series = &out[0].1;
+        assert!(series.len() >= 3, "need several 5s windows");
+        let summary = &out[1].1;
+        assert_eq!(summary.len(), 1);
+    }
+}

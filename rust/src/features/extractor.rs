@@ -126,7 +126,11 @@ impl Extractor {
     }
 
     /// Extract features and utilities for one frame (allocating wrapper).
-    pub fn extract(&self, rgb: &[f32], background: &[f32]) -> Result<(FrameFeatures, UtilityValues)> {
+    pub fn extract(
+        &self,
+        rgb: &[f32],
+        background: &[f32],
+    ) -> Result<(FrameFeatures, UtilityValues)> {
         let mut feats = FrameFeatures::empty();
         let mut utils = UtilityValues::empty();
         self.extract_into(rgb, background, &mut feats, &mut utils)?;

@@ -17,7 +17,7 @@ use anyhow::{bail, Result};
 use std::path::PathBuf;
 use uals::cli::Args;
 use uals::color::NamedColor;
-use uals::experiments::{self, Scale, ALL_FIGURES, OVERHEAD_FIGURE};
+use uals::experiments::{self, Scale, ALL_FIGURES, OVERHEAD_FIGURE, SCENARIOS};
 use uals::utility::Combine;
 
 fn main() {
@@ -55,7 +55,7 @@ fn print_usage() {
          figures  --all | --fig <id>…   [--scale tiny|small|paper] [--out DIR] [--quiet]\n\
          train    --color red[,yellow] [--combine single|or|and] [--out FILE] [--scale S]\n\
          dataset  [--scale S] [--color red]\n\
-         run      --scenario fig13a|smart-city [--scale S]\n\
+         run      --scenario fig13a|smart-city|bursty|churn [--scale S]\n\
          overhead [--scale S]\n"
     );
 }
@@ -82,7 +82,12 @@ fn parse_colors(args: &Args) -> Result<Vec<NamedColor>> {
 fn cmd_figures(args: &Args) -> Result<()> {
     let scale = parse_scale(args)?;
     let ids: Vec<&str> = if args.has("all") {
-        ALL_FIGURES.iter().copied().chain([OVERHEAD_FIGURE]).collect()
+        ALL_FIGURES
+            .iter()
+            .copied()
+            .chain([OVERHEAD_FIGURE])
+            .chain(SCENARIOS.iter().copied())
+            .collect()
     } else {
         let picked = args.get_all("fig");
         if picked.is_empty() {
@@ -153,6 +158,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     match args.get_or("scenario", "fig13a").as_str() {
         "fig13a" => experiments::run_and_save(&["13a"], scale, &out_dir(args), false),
         "smart-city" => experiments::run_and_save(&["13b"], scale, &out_dir(args), false),
-        other => bail!("unknown --scenario '{other}' (fig13a|smart-city)"),
+        "bursty" => experiments::run_and_save(&["scenario-bursty"], scale, &out_dir(args), false),
+        "churn" => experiments::run_and_save(&["scenario-churn"], scale, &out_dir(args), false),
+        other => bail!("unknown --scenario '{other}' (fig13a|smart-city|bursty|churn)"),
     }
 }

@@ -1,0 +1,706 @@
+//! The clock-abstracted streaming core: **one** frame lifecycle
+//! (capture → extract → utility → admission → queue → dispatch → backend
+//! → completion) shared by every pipeline driver.
+//!
+//! The paper's deployment (Fig. 3) is a single dataflow; historically this
+//! repo implemented it three times (`sim`, `realtime`, `parallel`), each
+//! with its own admission logic, payload struct and metrics accumulation.
+//! This module hosts the single implementation, parameterized by:
+//!
+//! * [`Clock`] — how virtual (stream-time) events map onto execution:
+//!   [`SimClock`] applies them instantly (discrete-event simulation),
+//!   [`WallClock`] paces them against real time (the threaded runtime).
+//!   Decisions depend only on the virtual-time event order, which is
+//!   identical under both clocks — pinned by `rust/tests/core_equivalence.rs`.
+//! * [`ArrivalModel`] — the workload: a timestamp-ordered frame source
+//!   plus its nominal aggregate rate. `pipeline::workloads` ships the
+//!   plain interleaved stream, bursty Poisson ingress, and mid-run camera
+//!   churn; new scenarios are new impls of this trait.
+//! * [`BackendExecutor`] — how the backend query runs: synchronously
+//!   in-process ([`SyncBackend`]) or on a worker thread with the real
+//!   detector on the hot path (`realtime::ThreadedBackend`).
+//!
+//! Every driver feeds the same metrics sink: [`QorTracker`],
+//! [`LatencyTracker`], [`StageCounts`], [`WindowSeries`] and the per-frame
+//! decision log, aggregated into one [`PipelineReport`].
+
+use crate::backend::BackendQuery;
+use crate::config::{CostConfig, QueryConfig, ShedderConfig};
+use crate::features::{Extractor, FrameFeatures, UtilityValues};
+use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts, WindowSeries};
+use crate::shedder::{Entry, LoadShedder, TokenBucket};
+use crate::util::rng::Rng;
+use crate::video::{Frame, Video};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::time::{Duration, Instant};
+
+/// Camera id → borrowed background model (H*W*3). Sharing borrows avoids
+/// the historical per-call-site `background().to_vec()` duplication.
+pub type BackgroundMap<'a> = HashMap<u32, &'a [f32]>;
+
+/// Build the camera → background map for a video set (no copies).
+pub fn backgrounds_of(videos: &[Video]) -> BackgroundMap<'_> {
+    videos
+        .iter()
+        .map(|v| (v.camera_id(), v.background()))
+        .collect()
+}
+
+/// Shedding policy of the core lifecycle.
+#[derive(Debug, Clone)]
+pub enum Policy {
+    /// The paper's utility-based shedder with the full control loop.
+    UtilityControlLoop,
+    /// Content-agnostic baseline: uniform random drop at the rate Eq. 19
+    /// prescribes for an *assumed* proc_Q (paper §V-E.2 uses 500 ms).
+    RandomRate { assumed_proc_q_ms: f64 },
+    /// Ablation: same admission control, but FIFO queue service (constant
+    /// queue key) instead of utility-ordered eviction.
+    FifoControlLoop,
+    /// No shedding at all (for overload illustration).
+    NoShedding,
+}
+
+/// Core lifecycle parameters (identical under every clock/driver).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub costs: CostConfig,
+    pub shedder: ShedderConfig,
+    pub query: QueryConfig,
+    /// Backend concurrency (token capacity); the paper's NC6 runs one DNN.
+    pub backend_tokens: u32,
+    pub policy: Policy,
+    pub seed: u64,
+    /// Nominal aggregate ingress fps (estimator fallback).
+    pub fps_total: f64,
+}
+
+/// The one frame payload carried through admission, queue and dispatch —
+/// replaces the historical `SimFrame` / `WorkItem` / shard-local structs.
+pub struct FramePayload {
+    pub camera: u32,
+    /// Capture timestamp (ms, stream clock).
+    pub capture_ms: f64,
+    /// Ground-truth target ids (QoR accounting only, never the shedder).
+    pub target_ids: Vec<u64>,
+    pub rgb: Vec<f32>,
+    pub width: usize,
+    pub height: usize,
+}
+
+/// Terminal outcome of one ingress frame (shed anywhere vs transmitted).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameDecision {
+    pub camera: u32,
+    pub capture_ms: f64,
+    pub kept: bool,
+}
+
+/// What every driver reports: the shared metrics sink, aggregated.
+#[derive(Clone)]
+pub struct PipelineReport {
+    pub qor: QorTracker,
+    pub latency: LatencyTracker,
+    /// Max-latency time series for the Fig. 13 upper panel (5 s windows).
+    pub latency_windows: WindowSeries,
+    /// Per-stage frame counts (Fig. 13 lower panel).
+    pub stages: StageCounts,
+    /// Threshold + target rate over time: (ts, threshold, target_rate).
+    pub control_series: Vec<(f64, f32, f64)>,
+    /// Terminal shed/transmit decision per ingress frame, in event order
+    /// for a single run. Merged sharded reports concatenate the per-shard
+    /// logs in camera order (see `pipeline::parallel::merge_reports`),
+    /// so ordering there is per-camera, not globally chronological.
+    pub decisions: Vec<FrameDecision>,
+    pub ingress: u64,
+    pub transmitted: u64,
+    pub shed: u64,
+    /// Final virtual clock (ms).
+    pub end_ms: f64,
+    /// Total camera-side extraction wall time (ms) across all frames.
+    pub extract_ms_total: f64,
+}
+
+impl PipelineReport {
+    pub fn observed_drop_rate(&self) -> f64 {
+        if self.ingress == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.ingress as f64
+        }
+    }
+
+    /// Mean camera-side extraction latency per frame (ms).
+    pub fn extract_ms_mean(&self) -> f64 {
+        if self.ingress == 0 {
+            0.0
+        } else {
+            self.extract_ms_total / self.ingress as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Clock abstraction
+// ---------------------------------------------------------------------------
+
+/// The class of lifecycle event a clock is asked to pace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventClass {
+    /// A frame arriving at the Load Shedder.
+    Ingress,
+    /// The backend finishing a frame.
+    Completion,
+}
+
+/// Maps the core's virtual (stream-time) schedule onto execution.
+///
+/// The core processes events strictly in virtual-time order under every
+/// clock; a clock only decides *when in the real world* each event is
+/// applied and how end-to-end latency is measured. Per-frame shed and
+/// transmit decisions are therefore clock-invariant.
+pub trait Clock {
+    /// Block (wall clocks) until the event at virtual `t_ms` is due.
+    fn advance_to(&mut self, t_ms: f64, class: EventClass);
+
+    /// End-to-end latency (stream-time ms) for a frame captured at
+    /// `capture_ms` whose completion event fires at virtual `done_ms`.
+    fn measure_e2e(&mut self, capture_ms: f64, done_ms: f64) -> f64;
+}
+
+/// Discrete-event clock: virtual time advances instantly.
+pub struct SimClock;
+
+impl Clock for SimClock {
+    fn advance_to(&mut self, _t_ms: f64, _class: EventClass) {}
+
+    fn measure_e2e(&mut self, capture_ms: f64, done_ms: f64) -> f64 {
+        done_ms - capture_ms
+    }
+}
+
+/// Wall clock: virtual time t maps to wall time `t0 + t × time_scale`
+/// (1.0 = real time, 0.1 = 10× fast-forward). Latency is *measured* from
+/// the wall clock and descaled back to stream time.
+pub struct WallClock {
+    t0: Instant,
+    time_scale: f64,
+    /// When false, completion events are applied as soon as the event
+    /// order allows (pure compute speed — cost emulation off); ingress
+    /// pacing still follows the stream timestamps.
+    pace_completions: bool,
+}
+
+impl WallClock {
+    pub fn new(time_scale: f64) -> Self {
+        WallClock { t0: Instant::now(), time_scale, pace_completions: true }
+    }
+
+    /// Enable/disable wall pacing of backend completions (cost emulation).
+    pub fn with_completion_pacing(mut self, on: bool) -> Self {
+        self.pace_completions = on;
+        self
+    }
+}
+
+impl Clock for WallClock {
+    fn advance_to(&mut self, t_ms: f64, class: EventClass) {
+        if self.time_scale <= 0.0 {
+            return;
+        }
+        if class == EventClass::Completion && !self.pace_completions {
+            return;
+        }
+        let due = Duration::from_secs_f64(t_ms / 1000.0 * self.time_scale);
+        let elapsed = self.t0.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+    }
+
+    fn measure_e2e(&mut self, capture_ms: f64, done_ms: f64) -> f64 {
+        if self.time_scale <= 0.0 {
+            return done_ms - capture_ms;
+        }
+        // Wall elapsed since the frame's capture instant, descaled.
+        let capture_wall_s = capture_ms / 1000.0 * self.time_scale;
+        let now_s = self.t0.elapsed().as_secs_f64();
+        (now_s - capture_wall_s).max(0.0) * 1000.0 / self.time_scale
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arrival model (workload) abstraction
+// ---------------------------------------------------------------------------
+
+/// A workload: a stream of frames in nondecreasing `ts_ms` order plus its
+/// nominal aggregate rate. Implementations live in
+/// [`crate::pipeline::workloads`]; a new scenario is a new impl.
+pub trait ArrivalModel {
+    /// Next frame, or `None` when the stream ends. Frames MUST be emitted
+    /// in nondecreasing `ts_ms` order.
+    fn next_frame(&mut self) -> Option<Frame>;
+
+    /// Nominal aggregate ingress rate (frames/sec) — seeds the Eq. 19
+    /// rate-estimator fallback before measurements warm up.
+    fn fps_total(&self) -> f64;
+}
+
+// ---------------------------------------------------------------------------
+// Backend executor abstraction
+// ---------------------------------------------------------------------------
+
+/// How dispatched frames run through the backend query.
+pub trait BackendExecutor {
+    /// Run (or plan) the query for a dispatched frame. Returns the deepest
+    /// stage reached and the execution time (ms) charged to the backend.
+    /// Called in dispatch order; cost-model sampling order is part of the
+    /// contract (drivers with split planners must preserve it).
+    fn submit(&mut self, payload: FramePayload, background: &[f32]) -> anyhow::Result<(Stage, f64)>;
+
+    /// The completion event for a submitted frame fired. `seq` is the
+    /// frame's 0-based dispatch ordinal (the n-th `submit` call), so
+    /// executors can pair each completion with the right outstanding
+    /// submission even when `backend_tokens > 1` reorders completions;
+    /// `dnn` is true when that frame reached the DNN stage. Wall
+    /// executors rendezvous with their worker thread here.
+    fn on_complete(&mut self, seq: u64, dnn: bool) -> anyhow::Result<()>;
+
+    /// Stream ended and every completion has been applied.
+    fn finish(&mut self) -> anyhow::Result<()>;
+}
+
+/// Synchronous in-process executor over a [`BackendQuery`] — the
+/// discrete-event drivers' backend.
+pub struct SyncBackend<'a> {
+    backend: &'a mut BackendQuery,
+}
+
+impl<'a> SyncBackend<'a> {
+    pub fn new(backend: &'a mut BackendQuery) -> Self {
+        SyncBackend { backend }
+    }
+}
+
+impl BackendExecutor for SyncBackend<'_> {
+    fn submit(
+        &mut self,
+        payload: FramePayload,
+        background: &[f32],
+    ) -> anyhow::Result<(Stage, f64)> {
+        let r = self
+            .backend
+            .process(&payload.rgb, background, payload.width, payload.height)?;
+        Ok((r.last_stage, r.exec_ms))
+    }
+
+    fn on_complete(&mut self, _seq: u64, _dnn: bool) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event queue
+// ---------------------------------------------------------------------------
+
+enum EventKind {
+    Ingress(Box<FramePayload>, f32 /* utility */),
+    Completion { seq: u64, capture_ms: f64, exec_ms: f64, dnn: bool },
+}
+
+/// Event heap keyed by (µs time, seq); payloads in a side map.
+pub(crate) struct EventQueue {
+    heap: BinaryHeap<Reverse<(u64, u64)>>,
+    events: HashMap<u64, (f64, EventKind)>,
+    seq: u64,
+}
+
+impl EventQueue {
+    fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), events: HashMap::new(), seq: 0 }
+    }
+
+    fn push(&mut self, t: f64, kind: EventKind) {
+        // µs-resolution ordering key. Rounding (not truncation) keeps
+        // near-tie events deterministic across platforms; negative or
+        // non-finite timestamps are a scheduling bug upstream.
+        debug_assert!(
+            t.is_finite() && t >= 0.0,
+            "event time must be finite and non-negative, got {t}"
+        );
+        let key = (t.max(0.0) * 1e3).round() as u64;
+        self.seq += 1;
+        self.heap.push(Reverse((key, self.seq)));
+        self.events.insert(self.seq, (t, kind));
+    }
+
+    fn pop(&mut self) -> Option<(f64, EventKind)> {
+        let Reverse((_, id)) = self.heap.pop()?;
+        Some(self.events.remove(&id).expect("event payload"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The lifecycle engine
+// ---------------------------------------------------------------------------
+
+/// Arrival-side state: reused extraction buffers + target-id recycling.
+/// After warmup the feed path performs no per-frame heap allocation beyond
+/// the frames the arrival model materializes (and one Box per frame to
+/// keep the event enum small).
+struct ArrivalFeeder {
+    feat_buf: FrameFeatures,
+    util_buf: UtilityValues,
+    id_pool: Vec<Vec<u64>>,
+    extract_ms_total: f64,
+}
+
+impl ArrivalFeeder {
+    fn new() -> Self {
+        ArrivalFeeder {
+            feat_buf: FrameFeatures::empty(),
+            util_buf: UtilityValues::empty(),
+            id_pool: Vec::new(),
+            extract_ms_total: 0.0,
+        }
+    }
+
+    /// Retire a frame's recyclable target-id buffer into the pool.
+    fn recycle(&mut self, mut ids: Vec<u64>) {
+        ids.clear();
+        if self.id_pool.len() < 64 {
+            self.id_pool.push(ids);
+        }
+    }
+
+    /// Feed the next arrival from the (ts-ordered) workload into the heap:
+    /// capture → camera-side extract → network → LS-ingress event.
+    fn feed_next(
+        &mut self,
+        eq: &mut EventQueue,
+        arrivals: &mut impl ArrivalModel,
+        backgrounds: &BackgroundMap<'_>,
+        extractor: &Extractor,
+        query: &QueryConfig,
+        cost: &mut crate::backend::CostModel,
+    ) -> anyhow::Result<bool> {
+        let Some(f) = arrivals.next_frame() else {
+            return Ok(false);
+        };
+        let bg = *backgrounds
+            .get(&f.camera)
+            .ok_or_else(|| anyhow::anyhow!("no background for camera {}", f.camera))?;
+        // Camera-aware: engages the per-camera incremental tile engine
+        // when the extractor has one (bit-identical either way), else the
+        // stateless fused path.
+        let te = Instant::now();
+        extractor.extract_camera_into(
+            f.camera,
+            f.width,
+            f.height,
+            &f.rgb,
+            bg,
+            &mut self.feat_buf,
+            &mut self.util_buf,
+        )?;
+        self.extract_ms_total += te.elapsed().as_secs_f64() * 1e3;
+        let t_ls = f.ts_ms + cost.camera_ms() + cost.net_cam_ls_ms();
+        let mut ids = self.id_pool.pop().unwrap_or_default();
+        f.target_ids_into(&query.colors, query.min_blob_px, &mut ids);
+        let payload = FramePayload {
+            camera: f.camera,
+            capture_ms: f.ts_ms,
+            target_ids: ids,
+            rgb: f.rgb,
+            width: f.width,
+            height: f.height,
+        };
+        eq.push(t_ls, EventKind::Ingress(Box::new(payload), self.util_buf.combined));
+        Ok(true)
+    }
+}
+
+/// Run the shared frame lifecycle over a workload, under a clock, against
+/// a backend executor. Every driver (`run_sim`, `run_realtime`,
+/// `run_sharded_sim`) is a thin wrapper around this function.
+pub fn run_pipeline<A, E, C>(
+    mut arrivals: A,
+    backgrounds: &BackgroundMap<'_>,
+    cfg: &SimConfig,
+    extractor: &Extractor,
+    executor: &mut E,
+    clock: &mut C,
+) -> anyhow::Result<PipelineReport>
+where
+    A: ArrivalModel,
+    E: BackendExecutor,
+    C: Clock,
+{
+    let mut rng = Rng::new(cfg.seed ^ 0x51B);
+    let mut cost = crate::backend::CostModel::new(cfg.costs.clone(), cfg.seed ^ 0xCA11);
+    let mut shedder: LoadShedder<FramePayload> = LoadShedder::new(
+        &cfg.shedder,
+        &cfg.costs,
+        cfg.query.latency_bound_ms,
+        cfg.fps_total,
+    );
+    let mut tokens = TokenBucket::new(cfg.backend_tokens.max(1));
+
+    let mut qor = QorTracker::new();
+    let mut latency = LatencyTracker::new(cfg.query.latency_bound_ms);
+    let mut latency_windows = WindowSeries::new(5_000.0);
+    let mut stages = StageCounts::new(5_000.0);
+    let mut control_series = Vec::new();
+    let mut decisions: Vec<FrameDecision> = Vec::new();
+    let (mut ingress_n, mut transmitted, mut shed) = (0u64, 0u64, 0u64);
+
+    // Baseline policies pin the threshold themselves (the FIFO ablation
+    // keeps the full control loop — only queue ordering changes).
+    if matches!(cfg.policy, Policy::RandomRate { .. } | Policy::NoShedding) {
+        shedder.auto_retune = false;
+        shedder.admission.set_target_rate(0.0);
+    }
+    // Random-policy fixed rate (Eq. 19 with assumed proc_Q).
+    let random_rate = match cfg.policy {
+        Policy::RandomRate { assumed_proc_q_ms } => {
+            crate::shedder::target_drop_rate(assumed_proc_q_ms, cfg.fps_total)
+        }
+        _ => 0.0,
+    };
+
+    let mut eq = EventQueue::new();
+    let mut feeder = ArrivalFeeder::new();
+    // Reused drop buffer: every frame shed by an ingress call — retune
+    // evictions, displaced queue victims, and the offered frame itself —
+    // lands here without per-frame cloning.
+    let mut dropped: Vec<Entry<FramePayload>> = Vec::new();
+
+    feeder.feed_next(&mut eq, &mut arrivals, backgrounds, extractor, &cfg.query, &mut cost)?;
+    let mut now = 0.0f64;
+    let mut last_control_sample = f64::NEG_INFINITY;
+    // 0-based dispatch ordinal, incremented once per `submit` — executors
+    // pair completions with submissions through it (see `on_complete`).
+    let mut dispatch_seq = 0u64;
+
+    while let Some((t, kind)) = eq.pop() {
+        let class = match kind {
+            EventKind::Ingress(..) => EventClass::Ingress,
+            EventKind::Completion { .. } => EventClass::Completion,
+        };
+        clock.advance_to(t, class);
+        now = now.max(t);
+        match kind {
+            EventKind::Ingress(frame, utility) => {
+                ingress_n += 1;
+                stages.observe(Stage::Ingress, frame.capture_ms);
+                // Refill the arrival pipeline.
+                feeder.feed_next(
+                    &mut eq,
+                    &mut arrivals,
+                    backgrounds,
+                    extractor,
+                    &cfg.query,
+                    &mut cost,
+                )?;
+
+                // Content-agnostic baseline: coin flip ahead of the queue;
+                // surviving frames get a constant utility (FIFO service).
+                let coin_dropped = matches!(cfg.policy, Policy::RandomRate { .. })
+                    && rng.chance(random_rate);
+                if coin_dropped {
+                    let f = *frame;
+                    qor.observe(&f.target_ids, false);
+                    stages.observe(Stage::Shed, f.capture_ms);
+                    decisions.push(FrameDecision {
+                        camera: f.camera,
+                        capture_ms: f.capture_ms,
+                        kept: false,
+                    });
+                    shed += 1;
+                    feeder.recycle(f.target_ids);
+                } else {
+                    // (admission utility, queue-ordering key) per policy.
+                    let (u, key) = match cfg.policy {
+                        Policy::UtilityControlLoop => (utility, utility),
+                        Policy::FifoControlLoop => (utility, 0.5),
+                        _ => (0.5, 0.5),
+                    };
+                    dropped.clear();
+                    let _ = shedder.on_ingress_keyed_into(u, key, now, *frame, &mut dropped);
+                    for e in dropped.drain(..) {
+                        qor.observe(&e.item.target_ids, false);
+                        stages.observe(Stage::Shed, e.item.capture_ms);
+                        decisions.push(FrameDecision {
+                            camera: e.item.camera,
+                            capture_ms: e.item.capture_ms,
+                            kept: false,
+                        });
+                        shed += 1;
+                        feeder.recycle(e.item.target_ids);
+                    }
+                }
+
+                // Control-series sampling (1 s cadence).
+                if now - last_control_sample >= 1_000.0 {
+                    control_series.push((now, shedder.threshold(), shedder.target_rate()));
+                    last_control_sample = now;
+                }
+            }
+            EventKind::Completion { seq, capture_ms, exec_ms, dnn } => {
+                tokens.release();
+                shedder.on_backend_complete(exec_ms);
+                executor.on_complete(seq, dnn)?;
+                let e2e = clock.measure_e2e(capture_ms, t);
+                latency.observe(e2e);
+                latency_windows.observe(capture_ms, e2e);
+            }
+        }
+
+        // Start services while tokens and frames are available.
+        while tokens.available() > 0 {
+            let Some(entry) = shedder.next_to_send() else { break };
+            // Transmission-time deadline check: a frame whose expected
+            // completion (Eq. 20 terms) already exceeds LB is doomed —
+            // shed it instead of burning backend time (utility ordering
+            // can starve low-utility frames through a burst).
+            let expected_done = now + cfg.costs.net_ls_q_ms + shedder.control.proc_q_ms();
+            if expected_done - entry.item.capture_ms > cfg.query.latency_bound_ms {
+                qor.observe(&entry.item.target_ids, false);
+                stages.observe(Stage::Shed, entry.item.capture_ms);
+                decisions.push(FrameDecision {
+                    camera: entry.item.camera,
+                    capture_ms: entry.item.capture_ms,
+                    kept: false,
+                });
+                shed += 1;
+                feeder.recycle(entry.item.target_ids);
+                continue;
+            }
+            assert!(tokens.try_acquire());
+            let mut f = entry.item;
+            transmitted += 1;
+            qor.observe(&f.target_ids, true);
+            decisions.push(FrameDecision {
+                camera: f.camera,
+                capture_ms: f.capture_ms,
+                kept: true,
+            });
+            let capture_ms = f.capture_ms;
+            feeder.recycle(std::mem::take(&mut f.target_ids));
+            let bg = *backgrounds.get(&f.camera).expect("background seen at ingress");
+            let (last_stage, exec_ms) = executor.submit(f, bg)?;
+            // Stage bookkeeping: every transmitted frame reaches the blob
+            // filter; deeper stages per the result.
+            stages.observe(Stage::BlobFilter, capture_ms);
+            if last_stage >= Stage::ColorFilter {
+                stages.observe(Stage::ColorFilter, capture_ms);
+            }
+            let dnn = last_stage == Stage::Sink;
+            if dnn {
+                // Color-filter pass implies the DNN ran, then the sink.
+                stages.observe(Stage::Dnn, capture_ms);
+                stages.observe(Stage::Sink, capture_ms);
+            }
+            let seq = dispatch_seq;
+            dispatch_seq += 1;
+            let net = cost.net_ls_q_ms();
+            let done_at = now + net + exec_ms;
+            eq.push(done_at, EventKind::Completion { seq, capture_ms, exec_ms, dnn });
+        }
+    }
+    executor.finish()?;
+
+    Ok(PipelineReport {
+        qor,
+        latency,
+        latency_windows,
+        stages,
+        control_series,
+        decisions,
+        ingress: ingress_n,
+        transmitted,
+        shed,
+        end_ms: now,
+        extract_ms_total: feeder.extract_ms_total,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_queue_orders_by_time_then_sequence() {
+        let mk = || EventKind::Completion { seq: 0, capture_ms: 0.0, exec_ms: 1.0, dnn: false };
+        let mut eq = EventQueue::new();
+        eq.push(5.0, mk());
+        eq.push(1.0, mk());
+        eq.push(5.0, mk());
+        eq.push(3.0, mk());
+        let times: Vec<f64> = std::iter::from_fn(|| eq.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn event_queue_rounds_keys_for_near_ties() {
+        // Two timestamps separated only by sub-µs float noise must order
+        // by insertion sequence, not by that noise: 2.0010000001 ms and
+        // 2.0009999999 ms both round to the 2001 µs key (truncation would
+        // split them into 2001 vs 2000 and pop the *later-inserted* event
+        // first, purely because of the noise).
+        let mut eq = EventQueue::new();
+        eq.push(
+            2.001_000_000_1,
+            EventKind::Completion { seq: 0, capture_ms: 1.0, exec_ms: 1.0, dnn: false },
+        );
+        eq.push(
+            2.000_999_999_9,
+            EventKind::Completion { seq: 1, capture_ms: 2.0, exec_ms: 1.0, dnn: true },
+        );
+        let (_, first) = eq.pop().unwrap();
+        match first {
+            EventKind::Completion { capture_ms, .. } => assert_eq!(capture_ms, 1.0),
+            _ => panic!("wrong event"),
+        }
+        let (_, second) = eq.pop().unwrap();
+        match second {
+            EventKind::Completion { dnn, .. } => assert!(dnn),
+            _ => panic!("wrong event"),
+        }
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "finite and non-negative"))]
+    fn event_queue_rejects_bad_times_in_debug() {
+        let mut eq = EventQueue::new();
+        eq.push(
+            -1.0,
+            EventKind::Completion { seq: 0, capture_ms: 0.0, exec_ms: 0.0, dnn: false },
+        );
+        // Release builds saturate to key 0 instead of wrapping: the event
+        // still pops (first), deterministically.
+        assert!(eq.pop().is_some());
+    }
+
+    #[test]
+    fn sim_clock_measures_virtual_e2e() {
+        let mut c = SimClock;
+        assert_eq!(c.measure_e2e(100.0, 350.0), 250.0);
+    }
+
+    #[test]
+    fn wall_clock_fast_forward_paces_and_measures() {
+        let mut c = WallClock::new(1e-6); // effectively no sleeping
+        c.advance_to(50.0, EventClass::Ingress);
+        let e2e = c.measure_e2e(0.0, 10.0);
+        assert!(e2e >= 0.0);
+        // Degenerate scale falls back to virtual measurement.
+        let mut z = WallClock::new(0.0);
+        assert_eq!(z.measure_e2e(5.0, 30.0), 25.0);
+    }
+}

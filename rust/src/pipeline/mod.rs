@@ -1,18 +1,33 @@
 //! Pipeline runtimes connecting cameras → Load Shedder → backend query.
 //!
-//! * [`sim`] — deterministic discrete-event simulator with calibrated stage
-//!   costs; regenerates the paper's long-running experiments in seconds.
-//! * [`parallel`] — sharded multi-camera sweep engine: one simulation shard
-//!   per camera across scoped threads, deterministic metric merge.
-//! * [`realtime`] — thread-per-component runtime over std channels with the
-//!   PJRT artifact path on the hot loop; used by the examples and the
-//!   wall-clock benchmarks.
+//! One frame lifecycle, three drivers:
+//!
+//! * [`core`] — the clock-abstracted streaming core: the single
+//!   implementation of capture → extract → utility → admission → queue →
+//!   dispatch → backend → completion, parameterized by [`Clock`],
+//!   [`ArrivalModel`] and [`BackendExecutor`], feeding one metrics sink.
+//! * [`workloads`] — arrival-model plugins: plain interleaved streams,
+//!   bursty Poisson ingress, mid-run camera churn.
+//! * [`sim`] — discrete-event driver ([`SimClock`] + in-process backend);
+//!   regenerates the paper's long-running experiments in seconds.
+//! * [`realtime`] — wall-clock driver ([`WallClock`] + worker-thread
+//!   backend with the PJRT artifact path on the hot loop).
+//! * [`parallel`] — sharded multi-camera sweep engine: one sim-driver
+//!   shard per camera across scoped threads, deterministic metric merge.
 
+pub mod core;
 pub mod parallel;
 pub mod realtime;
 pub mod sim;
+pub mod workloads;
 
+pub use self::core::{
+    backgrounds_of, run_pipeline, ArrivalModel, BackendExecutor, BackgroundMap, Clock,
+    EventClass, FrameDecision, FramePayload, PipelineReport, Policy, SimClock, SimConfig,
+    SyncBackend, WallClock,
+};
 pub use parallel::{
     default_threads, merge_reports, parallel_map, run_sharded_sim, run_sharded_sim_with,
 };
-pub use sim::{backgrounds_of, run_sim, BackgroundMap, Policy, SimConfig, SimReport};
+pub use sim::{run_sim, run_sim_with, SimReport};
+pub use workloads::{CameraChurn, ChurnWindow, IterArrivals, PoissonArrivals};

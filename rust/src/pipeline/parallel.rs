@@ -9,12 +9,12 @@
 //!   order regardless of scheduling. A panic in any worker propagates
 //!   when the scope joins.
 //! * [`run_sharded_sim`] — the multi-camera scaling scenario from the
-//!   ROADMAP north-star: one **shard per camera**, each with its own
-//!   Load Shedder + backend executor (the per-camera edge-box deployment,
-//!   complementing `run_sim`'s shared-shedder deployment), merged into a
-//!   single [`SimReport`]. Per-shard seeds are derived from the base seed
-//!   and camera id, so results are reproducible and independent of the
-//!   worker count.
+//!   ROADMAP north-star: one **shard per camera**, each a thin
+//!   `pipeline::core` driver with its own Load Shedder + backend executor
+//!   (the per-camera edge-box deployment, complementing `run_sim`'s
+//!   shared-shedder deployment), merged into a single [`SimReport`].
+//!   Per-shard seeds are derived from the base seed and camera id, so
+//!   results are reproducible and independent of the worker count.
 //!
 //! The extractor/backend types are deliberately constructed *inside* each
 //! worker (they are `!Send`: the artifact backend holds `Rc` handles), so
@@ -75,7 +75,9 @@ where
 
 /// Merge shard reports by reference (index order → deterministic
 /// output); only the first report is copied, the rest are absorbed. The
-/// control-loop series is re-sorted by timestamp across shards.
+/// control-loop series is re-sorted by timestamp across shards; the
+/// decision logs are concatenated in shard order (each shard's log stays
+/// event-ordered internally, the merged log is grouped per camera).
 pub fn merge_reports<'a, I>(reports: I) -> Option<SimReport>
 where
     I: IntoIterator<Item = &'a SimReport>,
@@ -88,10 +90,12 @@ where
         acc.latency_windows.merge(&r.latency_windows);
         acc.stages.merge(&r.stages);
         acc.control_series.extend_from_slice(&r.control_series);
+        acc.decisions.extend_from_slice(&r.decisions);
         acc.ingress += r.ingress;
         acc.transmitted += r.transmitted;
         acc.shed += r.shed;
         acc.end_ms = acc.end_ms.max(r.end_ms);
+        acc.extract_ms_total += r.extract_ms_total;
     }
     acc.control_series
         .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());

@@ -1,28 +1,47 @@
-//! Real-time pipeline runtime: actual threads, channels and wall-clock
-//! pacing, with the PJRT artifact path on the hot loop (the production
-//! configuration). Used by the examples and wall-clock benchmarks.
+//! Real-time driver over the shared streaming core
+//! ([`crate::pipeline::core`]): actual threads and wall-clock pacing, with
+//! the PJRT artifact path on the hot loop (the production configuration).
+//! Used by the examples and the wall-clock benchmarks.
+//!
+//! The frame lifecycle, admission / control-loop wiring and metrics sink
+//! are the *same code* the discrete-event simulator runs —
+//! `pipeline::core::run_pipeline` — under a [`WallClock`] instead of a
+//! [`SimClock`](crate::pipeline::SimClock). Decisions depend only on the
+//! virtual-time event order, so the two drivers shed and transmit exactly
+//! the same frames for the same seed and stream (pinned by
+//! `rust/tests/core_equivalence.rs`); the wall clock adds pacing and
+//! *measured* end-to-end latency on top.
 //!
 //! Thread topology (tokio is unavailable offline — std threads + mpsc):
 //!
 //! ```text
-//!   [main: streamer + extractor + Load Shedder]
-//!        │ work channel (token-paced)            ▲ completion channel
-//!        ▼                                        │
-//!   [backend worker: filters + DNN surrogate (+ emulated DNN cost)]
+//!   [main: arrivals + extractor + Load Shedder + filter planner]
+//!        │ DNN jobs (frames passing the filters)  ▲ completions
+//!        ▼                                         │
+//!   [backend worker: DNN surrogate (PJRT artifact or native oracle)]
 //! ```
 //!
-//! The PJRT client is not `Send`, so each thread builds its own `Engine`
-//! (cheap CPU client + one-time artifact compile).
+//! The driver side runs the cheap filter stages (and samples the stage
+//! cost model in dispatch order — the same sequence the simulator sees);
+//! only DNN-bound frames ship to the worker, which executes the real
+//! detector. The PJRT client is not `Send`, so the worker builds its own
+//! `Engine` (cheap CPU client + one-time artifact compile).
 
 use crate::backend::{BackendQuery, CostModel, Detector};
+use crate::color::HueRanges;
 use crate::config::{CostConfig, QueryConfig, ShedderConfig};
-use crate::features::{Extractor, FrameFeatures, UtilityValues};
+use crate::features::Extractor;
 use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts};
+use crate::pipeline::core::{
+    backgrounds_of, run_pipeline, ArrivalModel, BackendExecutor, FrameDecision, FramePayload,
+    Policy, SimConfig, WallClock,
+};
+use crate::pipeline::workloads::IterArrivals;
 use crate::runtime::Engine;
-use crate::shedder::{Decision, LoadShedder, TokenBucket};
 use crate::utility::UtilityModel;
 use crate::video::Video;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -31,8 +50,9 @@ pub struct RealtimeConfig {
     pub query: QueryConfig,
     pub shedder: ShedderConfig,
     pub costs: CostConfig,
-    /// Emulate the heavy-DNN latency by sleeping `exec_ms × scale` in the
-    /// backend worker. 0.0 disables cost emulation (pure compute speed).
+    /// Emulate the heavy-DNN latency by pacing backend completions to
+    /// their virtual due time. 0.0 disables cost emulation (pure compute
+    /// speed); any positive value enables it.
     pub cost_emulation_scale: f64,
     /// Wall-clock pacing: stream time × scale (1.0 = real time, 0.1 = 10×
     /// fast-forward). Cost emulation scales identically so the control
@@ -41,6 +61,11 @@ pub struct RealtimeConfig {
     pub backend_tokens: u32,
     /// Use the AOT artifact path (false = native oracle; for A/B benches).
     pub use_artifacts: bool,
+    /// Shedding policy (defaults to the paper's full control loop).
+    pub policy: Policy,
+    /// Seed for the stage cost model and policy coin — match the sim
+    /// driver's seed to reproduce its exact decision sequence.
+    pub seed: u64,
 }
 
 impl Default for RealtimeConfig {
@@ -53,6 +78,8 @@ impl Default for RealtimeConfig {
             time_scale: 1.0,
             backend_tokens: 1,
             use_artifacts: true,
+            policy: Policy::UtilityControlLoop,
+            seed: 0xB_E,
         }
     }
 }
@@ -62,6 +89,8 @@ pub struct RealtimeReport {
     pub qor: QorTracker,
     pub latency: LatencyTracker,
     pub stages: StageCounts,
+    /// Terminal shed/transmit decision per ingress frame (event order).
+    pub decisions: Vec<FrameDecision>,
     pub ingress: u64,
     pub transmitted: u64,
     pub shed: u64,
@@ -71,21 +100,151 @@ pub struct RealtimeReport {
     pub extract_ms_mean: f64,
 }
 
-struct WorkItem {
-    capture_stream_ms: f64,
-    capture_wall: Instant,
-    target_ids: Vec<u64>,
+/// A DNN-bound frame shipped to the backend worker.
+struct DnnJob {
+    camera: u32,
     rgb: Vec<f32>,
     width: usize,
     height: usize,
 }
 
-struct DoneItem {
-    capture_stream_ms: f64,
-    capture_wall: Instant,
-    target_ids: Vec<u64>,
-    last_stage: Stage,
-    exec_ms: f64,
+/// Threaded [`BackendExecutor`]: filter stages + cost sampling on the
+/// driver thread (keeping the cost-model sequence identical to the sim
+/// driver), real DNN execution on a worker thread.
+pub struct ThreadedBackend {
+    planner: BackendQuery,
+    work_tx: Option<mpsc::Sender<DnnJob>>,
+    done_rx: mpsc::Receiver<()>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+    /// Dispatch ordinal of the next `submit` call (mirrors the core's
+    /// `seq` numbering — both count submits in the same order).
+    submit_seq: u64,
+    /// Dispatch seq → 0-based DNN job index, for submissions that shipped
+    /// a worker job. The worker runs jobs FIFO, so job `k` is finished
+    /// once `k + 1` done signals have been received.
+    dnn_job_of: HashMap<u64, u64>,
+    jobs_submitted: u64,
+    jobs_done: u64,
+}
+
+impl ThreadedBackend {
+    /// Spawn the backend worker. The worker owns cloned per-camera
+    /// backgrounds (one copy per camera, not per frame) and builds its own
+    /// detector — the PJRT handle is not `Send`.
+    pub fn spawn(videos: &[Video], cfg: &RealtimeConfig) -> Result<Self> {
+        let (work_tx, work_rx) = mpsc::channel::<DnnJob>();
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let bgs: HashMap<u32, Vec<f32>> = videos
+            .iter()
+            .map(|v| (v.camera_id(), v.background().to_vec()))
+            .collect();
+        let ranges: Vec<HueRanges> = cfg.query.colors.iter().map(|c| c.ranges()).collect();
+        let use_artifacts = cfg.use_artifacts;
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let detector = if use_artifacts {
+                let engine = Engine::from_default_artifacts()?;
+                Detector::artifact(&engine)?
+            } else {
+                Detector::native(12, 25.0)
+            };
+            while let Ok(job) = work_rx.recv() {
+                let bg = bgs
+                    .get(&job.camera)
+                    .ok_or_else(|| anyhow!("no background for camera {}", job.camera))?;
+                let _ = detector.detect(&job.rgb, bg, job.width, job.height, &ranges)?;
+                let _ = done_tx.send(());
+            }
+            Ok(())
+        });
+        let planner = BackendQuery::new(
+            cfg.query.clone(),
+            Detector::native(12, 25.0),
+            CostModel::new(cfg.costs.clone(), cfg.seed),
+            25.0,
+        );
+        Ok(ThreadedBackend {
+            planner,
+            work_tx: Some(work_tx),
+            done_rx,
+            handle: Some(handle),
+            submit_seq: 0,
+            dnn_job_of: HashMap::new(),
+            jobs_submitted: 0,
+            jobs_done: 0,
+        })
+    }
+
+    /// A channel to the worker broke: join it and surface its *actual*
+    /// error (artifact load failure, missing background, …) instead of a
+    /// generic disconnect.
+    fn worker_failure(&mut self, context: &str) -> anyhow::Error {
+        drop(self.work_tx.take());
+        match self.handle.take().map(|h| h.join()) {
+            Some(Ok(Err(e))) => e.context(context.to_string()),
+            Some(Ok(Ok(()))) => anyhow!("{context}: backend worker exited cleanly"),
+            Some(Err(_)) => anyhow!("{context}: backend worker panicked"),
+            None => anyhow!("{context}: backend worker already gone"),
+        }
+    }
+}
+
+impl BackendExecutor for ThreadedBackend {
+    fn submit(&mut self, payload: FramePayload, background: &[f32]) -> Result<(Stage, f64)> {
+        let seq = self.submit_seq;
+        self.submit_seq += 1;
+        // Filter stages + cost sampling in dispatch order (the DNN itself
+        // is skipped here and executed for real on the worker).
+        let r = self
+            .planner
+            .plan(&payload.rgb, background, payload.width, payload.height)?;
+        if r.last_stage == Stage::Sink {
+            let job = DnnJob {
+                camera: payload.camera,
+                rgb: payload.rgb,
+                width: payload.width,
+                height: payload.height,
+            };
+            let sent = self.work_tx.as_ref().expect("worker alive").send(job);
+            if sent.is_err() {
+                return Err(self.worker_failure("backend worker hung up"));
+            }
+            self.dnn_job_of.insert(seq, self.jobs_submitted);
+            self.jobs_submitted += 1;
+        }
+        Ok((r.last_stage, r.exec_ms))
+    }
+
+    fn on_complete(&mut self, seq: u64, dnn: bool) -> Result<()> {
+        if !dnn {
+            return Ok(());
+        }
+        // Rendezvous: this completion is only real once the worker's
+        // detector finished *this submission's* job. The worker is FIFO,
+        // so job k is done once k + 1 done signals have arrived — correct
+        // even when `backend_tokens > 1` pops completions out of dispatch
+        // order (a later-dispatched job may already have been drained by
+        // an earlier-popping completion, in which case this returns
+        // without waiting).
+        let job = self
+            .dnn_job_of
+            .remove(&seq)
+            .ok_or_else(|| anyhow!("completion for unknown dispatch seq {seq}"))?;
+        while self.jobs_done <= job {
+            if self.done_rx.recv().is_err() {
+                return Err(self.worker_failure("backend worker died"));
+            }
+            self.jobs_done += 1;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        drop(self.work_tx.take());
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow!("backend worker panicked"))??;
+        }
+        Ok(())
+    }
 }
 
 /// Run the multi-camera stream through the real-time pipeline.
@@ -94,51 +253,34 @@ pub fn run_realtime(
     model: &UtilityModel,
     cfg: &RealtimeConfig,
 ) -> Result<RealtimeReport> {
-    let start = Instant::now();
     let fps_total = crate::video::streamer::aggregate_fps(videos);
+    run_realtime_with(
+        videos,
+        model,
+        cfg,
+        IterArrivals::new(crate::video::Streamer::new(videos), fps_total),
+    )
+}
 
-    // --- backend worker -----------------------------------------------------
-    let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
-    let (done_tx, done_rx) = mpsc::channel::<DoneItem>();
-    let bq_query = cfg.query.clone();
-    let bq_costs = cfg.costs.clone();
-    let emulation = cfg.cost_emulation_scale * cfg.time_scale;
-    let use_artifacts = cfg.use_artifacts;
-    let worker = std::thread::spawn(move || -> Result<()> {
-        let detector = if use_artifacts {
-            let engine = Engine::from_default_artifacts()?;
-            Detector::artifact(&engine)?
-        } else {
-            Detector::native(12, 25.0)
-        };
-        let mut backend = BackendQuery::new(
-            bq_query,
-            detector,
-            CostModel::new(bq_costs, 0xB__E),
-            25.0,
-        );
-        // The worker needs per-camera backgrounds; they ride in on the
-        // first frame of each camera via rgb-background pairing below.
-        while let Ok(item) = work_rx.recv() {
-            let (bg, rgb) = item.rgb.split_at(item.rgb.len() / 2);
-            let result = backend.process(rgb, bg, item.width, item.height)?;
-            if emulation > 0.0 {
-                std::thread::sleep(Duration::from_secs_f64(
-                    result.exec_ms * emulation / 1000.0,
-                ));
-            }
-            let _ = done_tx.send(DoneItem {
-                capture_stream_ms: item.capture_stream_ms,
-                capture_wall: item.capture_wall,
-                target_ids: item.target_ids,
-                last_stage: result.last_stage,
-                exec_ms: result.exec_ms,
-            });
-        }
-        Ok(())
-    });
+/// [`run_realtime`] over any [`ArrivalModel`] — the wall-clock driver
+/// against a pluggable workload (bursty Poisson ingress, camera churn, …).
+pub fn run_realtime_with<A: ArrivalModel>(
+    videos: &[Video],
+    model: &UtilityModel,
+    cfg: &RealtimeConfig,
+    arrivals: A,
+) -> Result<RealtimeReport> {
+    let start = Instant::now();
+    let core_cfg = SimConfig {
+        costs: cfg.costs.clone(),
+        shedder: cfg.shedder.clone(),
+        query: cfg.query.clone(),
+        backend_tokens: cfg.backend_tokens,
+        policy: cfg.policy.clone(),
+        seed: cfg.seed,
+        fps_total: arrivals.fps_total(),
+    };
 
-    // --- edge side: streamer + extractor + shedder ---------------------------
     let extractor = if cfg.use_artifacts {
         let engine = Engine::from_default_artifacts()?;
         Extractor::artifact(&engine, model.clone())?
@@ -146,151 +288,29 @@ pub fn run_realtime(
         Extractor::native(model.clone())
     };
 
-    let mut shedder: LoadShedder<WorkItem> = LoadShedder::new(
-        &cfg.shedder,
-        &cfg.costs,
-        cfg.query.latency_bound_ms,
-        fps_total,
-    );
-    let mut tokens = TokenBucket::new(cfg.backend_tokens.max(1));
-    let mut qor = QorTracker::new();
-    let mut latency = LatencyTracker::new(cfg.query.latency_bound_ms);
-    let mut stages = StageCounts::new(5_000.0);
-    let (mut ingress, mut transmitted, mut shed) = (0u64, 0u64, 0u64);
-    let mut extract_ms_sum = 0.0f64;
-    // Reused feature/utility buffers: the camera-side hot loop stays
-    // allocation-free (zero-allocation API sweep).
-    let mut feat_buf = FrameFeatures::empty();
-    let mut util_buf = UtilityValues::empty();
+    let backgrounds = backgrounds_of(videos);
+    let mut executor = ThreadedBackend::spawn(videos, cfg)?;
+    let mut clock =
+        WallClock::new(cfg.time_scale).with_completion_pacing(cfg.cost_emulation_scale > 0.0);
+    let report = run_pipeline(
+        arrivals,
+        &backgrounds,
+        &core_cfg,
+        &extractor,
+        &mut executor,
+        &mut clock,
+    )?;
 
-    let t0 = Instant::now();
-    let handle_done = |d: DoneItem,
-                           tokens: &mut TokenBucket,
-                           shedder: &mut LoadShedder<WorkItem>,
-                           latency: &mut LatencyTracker,
-                           stages: &mut StageCounts|
-     {
-        tokens.release();
-        shedder.on_backend_complete(d.exec_ms);
-        // E2E in *stream* time: wall elapsed since capture, descaled.
-        let e2e_wall_ms = d.capture_wall.elapsed().as_secs_f64() * 1e3;
-        let e2e_stream_ms = if cfg.time_scale > 0.0 {
-            e2e_wall_ms / cfg.time_scale
-        } else {
-            e2e_wall_ms
-        };
-        latency.observe(e2e_stream_ms);
-        stages.observe(Stage::BlobFilter, d.capture_stream_ms);
-        if d.last_stage >= Stage::ColorFilter {
-            stages.observe(Stage::ColorFilter, d.capture_stream_ms);
-        }
-        if d.last_stage == Stage::Sink {
-            stages.observe(Stage::Dnn, d.capture_stream_ms);
-            stages.observe(Stage::Sink, d.capture_stream_ms);
-        }
-        let _ = &d.target_ids;
-    };
-
-    for frame in crate::video::Streamer::new(videos) {
-        // Pace to stream time.
-        let due = Duration::from_secs_f64(frame.ts_ms / 1000.0 * cfg.time_scale);
-        let elapsed = t0.elapsed();
-        if due > elapsed {
-            std::thread::sleep(due - elapsed);
-        }
-        // Drain completions.
-        while let Ok(d) = done_rx.try_recv() {
-            handle_done(d, &mut tokens, &mut shedder, &mut latency, &mut stages);
-        }
-
-        ingress += 1;
-        stages.observe(Stage::Ingress, frame.ts_ms);
-        let bg = videos
-            .iter()
-            .find(|v| v.camera_id() == frame.camera)
-            .unwrap()
-            .background();
-        let te = Instant::now();
-        extractor.extract_camera_into(
-            frame.camera,
-            frame.width,
-            frame.height,
-            &frame.rgb,
-            bg,
-            &mut feat_buf,
-            &mut util_buf,
-        )?;
-        extract_ms_sum += te.elapsed().as_secs_f64() * 1e3;
-
-        let mut target_ids = Vec::new();
-        frame.target_ids_into(&cfg.query.colors, cfg.query.min_blob_px, &mut target_ids);
-        // Pack background + rgb together so the worker needs no shared map.
-        let mut packed = Vec::with_capacity(frame.rgb.len() * 2);
-        packed.extend_from_slice(bg);
-        packed.extend_from_slice(&frame.rgb);
-        let item = WorkItem {
-            capture_stream_ms: frame.ts_ms,
-            capture_wall: t0 + Duration::from_secs_f64(frame.ts_ms / 1000.0 * cfg.time_scale),
-            target_ids: target_ids.clone(),
-            rgb: packed,
-            width: frame.width,
-            height: frame.height,
-        };
-        let (decision, evicted) =
-            shedder.on_ingress(util_buf.combined, frame.ts_ms, item);
-        for e in evicted {
-            qor.observe(&e.item.target_ids, false);
-            stages.observe(Stage::Shed, e.item.capture_stream_ms);
-            shed += 1;
-        }
-        match decision {
-            Decision::ShedAdmission | Decision::ShedQueueReject => {
-                qor.observe(&target_ids, false);
-                stages.observe(Stage::Shed, frame.ts_ms);
-                shed += 1;
-            }
-            Decision::Enqueued => {}
-        }
-
-        // Transmit while tokens allow.
-        while tokens.available() > 0 {
-            let Some(entry) = shedder.next_to_send() else { break };
-            assert!(tokens.try_acquire());
-            qor.observe(&entry.item.target_ids, true);
-            transmitted += 1;
-            work_tx.send(entry.item).expect("backend alive");
-        }
-    }
-
-    // Drain: close the work channel after flushing the queue.
-    loop {
-        while tokens.available() > 0 {
-            let Some(entry) = shedder.next_to_send() else { break };
-            assert!(tokens.try_acquire());
-            qor.observe(&entry.item.target_ids, true);
-            transmitted += 1;
-            work_tx.send(entry.item).expect("backend alive");
-        }
-        if tokens.in_flight() == 0 && shedder.queue.is_empty() {
-            break;
-        }
-        let d = done_rx.recv().expect("completion");
-        handle_done(d, &mut tokens, &mut shedder, &mut latency, &mut stages);
-    }
-    drop(work_tx);
-    worker.join().expect("worker panicked")?;
-    while let Ok(d) = done_rx.try_recv() {
-        handle_done(d, &mut tokens, &mut shedder, &mut latency, &mut stages);
-    }
-
+    let extract_ms_mean = report.extract_ms_mean();
     Ok(RealtimeReport {
-        qor,
-        latency,
-        stages,
-        ingress,
-        transmitted,
-        shed,
+        qor: report.qor,
+        latency: report.latency,
+        stages: report.stages,
+        decisions: report.decisions,
+        ingress: report.ingress,
+        transmitted: report.transmitted,
+        shed: report.shed,
         wall: start.elapsed(),
-        extract_ms_mean: if ingress > 0 { extract_ms_sum / ingress as f64 } else { 0.0 },
+        extract_ms_mean,
     })
 }

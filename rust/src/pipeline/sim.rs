@@ -1,7 +1,13 @@
-//! Discrete-event simulation of the full deployment (paper Fig. 3/8):
-//! cameras → Load Shedder → (token-paced) Backend Query Executor, with
-//! calibrated stage costs. This regenerates the paper's long-running
+//! Discrete-event driver over the shared streaming core
+//! ([`crate::pipeline::core`]): the full deployment (paper Fig. 3/8) —
+//! cameras → Load Shedder → (token-paced) Backend Query Executor — with
+//! calibrated stage costs, regenerating the paper's long-running
 //! experiments (Fig. 13/14) in seconds, deterministically.
+//!
+//! This module is now a thin wrapper: the frame lifecycle, admission /
+//! control-loop wiring and metrics sink live in `pipeline::core`; the sim
+//! driver supplies [`SimClock`] (virtual time, no pacing) and
+//! [`SyncBackend`] (in-process query execution).
 //!
 //! Time model per frame:
 //!   capture ts → [camera proc] → [net cam→LS] → LS ingress (admission /
@@ -10,123 +16,16 @@
 //! and exec segment on the path.
 
 use crate::backend::BackendQuery;
-use crate::config::{CostConfig, QueryConfig, ShedderConfig};
-use crate::features::{Extractor, FrameFeatures, UtilityValues};
-use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts, WindowSeries};
-use crate::shedder::{Entry, LoadShedder, TokenBucket};
-use crate::util::rng::Rng;
-use crate::video::{Frame, Video};
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use crate::features::Extractor;
+use crate::pipeline::core::{run_pipeline, ArrivalModel, SimClock, SyncBackend};
+use crate::pipeline::workloads::IterArrivals;
+use crate::video::Frame;
 
-/// Camera id → borrowed background model (H*W*3). Sharing borrows avoids
-/// the historical per-call-site `background().to_vec()` duplication.
-pub type BackgroundMap<'a> = HashMap<u32, &'a [f32]>;
+pub use crate::pipeline::core::{backgrounds_of, BackgroundMap, Policy, SimConfig};
 
-/// Build the camera → background map for a video set (no copies).
-pub fn backgrounds_of(videos: &[Video]) -> BackgroundMap<'_> {
-    videos
-        .iter()
-        .map(|v| (v.camera_id(), v.background()))
-        .collect()
-}
-
-/// Shedding policy under simulation.
-#[derive(Debug, Clone)]
-pub enum Policy {
-    /// The paper's utility-based shedder with the full control loop.
-    UtilityControlLoop,
-    /// Content-agnostic baseline: uniform random drop at the rate Eq. 19
-    /// prescribes for an *assumed* proc_Q (paper §V-E.2 uses 500 ms).
-    RandomRate { assumed_proc_q_ms: f64 },
-    /// Ablation: same admission control, but FIFO queue service (constant
-    /// queue key) instead of utility-ordered eviction.
-    FifoControlLoop,
-    /// No shedding at all (for overload illustration).
-    NoShedding,
-}
-
-/// Simulation parameters.
-#[derive(Debug, Clone)]
-pub struct SimConfig {
-    pub costs: CostConfig,
-    pub shedder: ShedderConfig,
-    pub query: QueryConfig,
-    /// Backend concurrency (token capacity); the paper's NC6 runs one DNN.
-    pub backend_tokens: u32,
-    pub policy: Policy,
-    pub seed: u64,
-    /// Nominal aggregate ingress fps (estimator fallback).
-    pub fps_total: f64,
-}
-
-/// What the simulator reports (feeds the figure harnesses).
-#[derive(Clone)]
-pub struct SimReport {
-    pub qor: QorTracker,
-    pub latency: LatencyTracker,
-    /// Max-latency time series for the Fig. 13 upper panel (5 s windows).
-    pub latency_windows: WindowSeries,
-    /// Per-stage frame counts (Fig. 13 lower panel).
-    pub stages: StageCounts,
-    /// Threshold + target rate over time: (ts, threshold, target_rate).
-    pub control_series: Vec<(f64, f32, f64)>,
-    pub ingress: u64,
-    pub transmitted: u64,
-    pub shed: u64,
-    /// Final simulated clock (ms).
-    pub end_ms: f64,
-}
-
-impl SimReport {
-    pub fn observed_drop_rate(&self) -> f64 {
-        if self.ingress == 0 {
-            0.0
-        } else {
-            self.shed as f64 / self.ingress as f64
-        }
-    }
-}
-
-/// Frame payload carried through the shedder queue.
-struct SimFrame {
-    camera: u32,
-    capture_ms: f64,
-    target_ids: Vec<u64>,
-    rgb: Vec<f32>,
-    width: usize,
-    height: usize,
-}
-
-enum EventKind {
-    Ingress(Box<SimFrame>, f32 /* utility */),
-    Completion { exec_ms: f64 },
-}
-
-/// Event heap keyed by (µs time, seq); payloads in a side map.
-struct EventQueue {
-    heap: BinaryHeap<Reverse<(u64, u64)>>,
-    events: HashMap<u64, (f64, EventKind)>,
-    seq: u64,
-}
-
-impl EventQueue {
-    fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), events: HashMap::new(), seq: 0 }
-    }
-
-    fn push(&mut self, t: f64, kind: EventKind) {
-        let key = (t * 1e3) as u64; // µs-resolution ordering
-        self.seq += 1;
-        self.heap.push(Reverse((key, self.seq)));
-        self.events.insert(self.seq, (t, kind));
-    }
-
-    fn pop(&mut self) -> Option<(f64, EventKind)> {
-        let Reverse((_, id)) = self.heap.pop()?;
-        Some(self.events.remove(&id).expect("event payload"))
-    }
-}
+/// What the simulator reports (feeds the figure harnesses) — the shared
+/// core report under its historical name.
+pub type SimReport = crate::pipeline::core::PipelineReport;
 
 /// Run the simulation over a timestamp-ordered frame stream.
 ///
@@ -142,230 +41,26 @@ pub fn run_sim<I>(
 where
     I: IntoIterator<Item = Frame>,
 {
-    let mut rng = Rng::new(cfg.seed ^ 0x51B);
-    let mut cost = crate::backend::CostModel::new(cfg.costs.clone(), cfg.seed ^ 0xCA11);
-    let mut shedder: LoadShedder<SimFrame> = LoadShedder::new(
-        &cfg.shedder,
-        &cfg.costs,
-        cfg.query.latency_bound_ms,
-        cfg.fps_total,
-    );
-    let mut tokens = TokenBucket::new(cfg.backend_tokens.max(1));
-
-    let mut qor = QorTracker::new();
-    let mut latency = LatencyTracker::new(cfg.query.latency_bound_ms);
-    let mut latency_windows = WindowSeries::new(5_000.0);
-    let mut stages = StageCounts::new(5_000.0);
-    let mut control_series = Vec::new();
-    let (mut ingress_n, mut transmitted, mut shed) = (0u64, 0u64, 0u64);
-
-    // Baseline policies pin the threshold themselves (the FIFO ablation
-    // keeps the full control loop — only queue ordering changes).
-    if matches!(cfg.policy, Policy::RandomRate { .. } | Policy::NoShedding) {
-        shedder.auto_retune = false;
-        shedder.admission.set_target_rate(0.0);
-    }
-    // Random-policy fixed rate (Eq. 19 with assumed proc_Q).
-    let random_rate = match cfg.policy {
-        Policy::RandomRate { assumed_proc_q_ms } => {
-            crate::shedder::target_drop_rate(assumed_proc_q_ms, cfg.fps_total)
-        }
-        _ => 0.0,
-    };
-
-    let mut eq = EventQueue::new();
-    let mut frame_iter = frames.into_iter();
-    // Reused feature/utility buffers: the camera-side extraction is the
-    // per-frame hot spot and must not allocate (paper Fig. 15 budget).
-    let mut feat_buf = FrameFeatures::empty();
-    let mut util_buf = UtilityValues::empty();
-    // Reused drop buffer + recycled target-id vectors: after warmup the
-    // event loop itself performs no per-event heap allocation beyond the
-    // frames the upstream iterator materializes (and one Box per frame to
-    // keep the event enum small).
-    let mut dropped: Vec<Entry<SimFrame>> = Vec::new();
-    let mut id_pool: Vec<Vec<u64>> = Vec::new();
-
-    // Retire a frame's recyclable buffers into the pool.
-    fn recycle(pool: &mut Vec<Vec<u64>>, f: SimFrame) {
-        let mut ids = f.target_ids;
-        ids.clear();
-        if pool.len() < 64 {
-            pool.push(ids);
-        }
-    }
-
-    // Feed the next arrival from the (ts-ordered) stream into the heap.
-    #[allow(clippy::too_many_arguments)]
-    fn feed_next(
-        eq: &mut EventQueue,
-        frame_iter: &mut impl Iterator<Item = Frame>,
-        backgrounds: &BackgroundMap<'_>,
-        extractor: &Extractor,
-        query: &QueryConfig,
-        cost: &mut crate::backend::CostModel,
-        feat_buf: &mut FrameFeatures,
-        util_buf: &mut UtilityValues,
-        id_pool: &mut Vec<Vec<u64>>,
-    ) -> anyhow::Result<bool> {
-        match frame_iter.next() {
-            None => Ok(false),
-            Some(f) => {
-                let bg = *backgrounds
-                    .get(&f.camera)
-                    .ok_or_else(|| anyhow::anyhow!("no background for camera {}", f.camera))?;
-                // Camera-aware: engages the per-camera incremental tile
-                // engine when the extractor has one (bit-identical either
-                // way), else the stateless fused path.
-                extractor.extract_camera_into(
-                    f.camera, f.width, f.height, &f.rgb, bg, feat_buf, util_buf,
-                )?;
-                let t_ls = f.ts_ms + cost.camera_ms() + cost.net_cam_ls_ms();
-                let mut ids = id_pool.pop().unwrap_or_default();
-                f.target_ids_into(&query.colors, query.min_blob_px, &mut ids);
-                let sf = SimFrame {
-                    camera: f.camera,
-                    capture_ms: f.ts_ms,
-                    target_ids: ids,
-                    rgb: f.rgb,
-                    width: f.width,
-                    height: f.height,
-                };
-                eq.push(t_ls, EventKind::Ingress(Box::new(sf), util_buf.combined));
-                Ok(true)
-            }
-        }
-    }
-
-    feed_next(
-        &mut eq,
-        &mut frame_iter,
+    run_sim_with(
+        IterArrivals::new(frames.into_iter(), cfg.fps_total),
         backgrounds,
+        cfg,
         extractor,
-        &cfg.query,
-        &mut cost,
-        &mut feat_buf,
-        &mut util_buf,
-        &mut id_pool,
-    )?;
-    let mut now = 0.0f64;
-    let mut last_control_sample = f64::NEG_INFINITY;
+        backend,
+    )
+}
 
-    while let Some((t, kind)) = eq.pop() {
-        now = now.max(t);
-        match kind {
-            EventKind::Ingress(frame, utility) => {
-                ingress_n += 1;
-                stages.observe(Stage::Ingress, frame.capture_ms);
-                // Refill the arrival pipeline.
-                feed_next(
-                    &mut eq,
-                    &mut frame_iter,
-                    backgrounds,
-                    extractor,
-                    &cfg.query,
-                    &mut cost,
-                    &mut feat_buf,
-                    &mut util_buf,
-                    &mut id_pool,
-                )?;
-
-                // Content-agnostic baseline: coin flip ahead of the queue;
-                // surviving frames get a constant utility (FIFO service).
-                let coin_dropped = matches!(cfg.policy, Policy::RandomRate { .. })
-                    && rng.chance(random_rate);
-                if coin_dropped {
-                    qor.observe(&frame.target_ids, false);
-                    stages.observe(Stage::Shed, frame.capture_ms);
-                    shed += 1;
-                    recycle(&mut id_pool, *frame);
-                } else {
-                    // (admission utility, queue-ordering key) per policy.
-                    let (u, key) = match cfg.policy {
-                        Policy::UtilityControlLoop => (utility, utility),
-                        Policy::FifoControlLoop => (utility, 0.5),
-                        _ => (0.5, 0.5),
-                    };
-                    // Every dropped frame — retune evictions, displaced
-                    // queue victims, and an admission/queue rejection of
-                    // the offered frame itself — lands in the reused
-                    // `dropped` buffer: no per-frame target-id clone.
-                    dropped.clear();
-                    let _ = shedder.on_ingress_keyed_into(u, key, now, *frame, &mut dropped);
-                    for e in dropped.drain(..) {
-                        qor.observe(&e.item.target_ids, false);
-                        stages.observe(Stage::Shed, e.item.capture_ms);
-                        shed += 1;
-                        recycle(&mut id_pool, e.item);
-                    }
-                }
-
-                // Control-series sampling (1 s cadence).
-                if now - last_control_sample >= 1_000.0 {
-                    control_series.push((now, shedder.threshold(), shedder.target_rate()));
-                    last_control_sample = now;
-                }
-            }
-            EventKind::Completion { exec_ms } => {
-                tokens.release();
-                shedder.on_backend_complete(exec_ms);
-            }
-        }
-
-        // Start services while tokens and frames are available.
-        while tokens.available() > 0 {
-            let Some(entry) = shedder.next_to_send() else { break };
-            // Transmission-time deadline check: a frame whose expected
-            // completion (Eq. 20 terms) already exceeds LB is doomed —
-            // shed it instead of burning backend time (utility ordering
-            // can starve low-utility frames through a burst).
-            let expected_done =
-                now + cfg.costs.net_ls_q_ms + shedder.control.proc_q_ms();
-            if expected_done - entry.item.capture_ms > cfg.query.latency_bound_ms {
-                qor.observe(&entry.item.target_ids, false);
-                stages.observe(Stage::Shed, entry.item.capture_ms);
-                shed += 1;
-                recycle(&mut id_pool, entry.item);
-                continue;
-            }
-            assert!(tokens.try_acquire());
-            let f = entry.item;
-            transmitted += 1;
-            qor.observe(&f.target_ids, true);
-            let bg = *backgrounds.get(&f.camera).unwrap();
-            let result = backend.process(&f.rgb, bg, f.width, f.height)?;
-            // Stage bookkeeping: every transmitted frame reaches the blob
-            // filter; deeper stages per the result.
-            stages.observe(Stage::BlobFilter, f.capture_ms);
-            if result.last_stage >= Stage::ColorFilter {
-                stages.observe(Stage::ColorFilter, f.capture_ms);
-            }
-            if result.last_stage == Stage::Sink {
-                // Color-filter pass implies the DNN ran, then the sink.
-                stages.observe(Stage::Dnn, f.capture_ms);
-                stages.observe(Stage::Sink, f.capture_ms);
-            }
-            let net = cost.net_ls_q_ms();
-            let done_at = now + net + result.exec_ms;
-            let e2e = done_at - f.capture_ms;
-            latency.observe(e2e);
-            latency_windows.observe(f.capture_ms, e2e);
-            eq.push(done_at, EventKind::Completion { exec_ms: result.exec_ms });
-            recycle(&mut id_pool, f);
-        }
-    }
-
-    Ok(SimReport {
-        qor,
-        latency,
-        latency_windows,
-        stages,
-        control_series,
-        ingress: ingress_n,
-        transmitted,
-        shed,
-        end_ms: now,
-    })
+/// [`run_sim`] over any [`ArrivalModel`] (bursty Poisson ingress, camera
+/// churn, …): the discrete-event clock against a pluggable workload.
+pub fn run_sim_with<A: ArrivalModel>(
+    arrivals: A,
+    backgrounds: &BackgroundMap<'_>,
+    cfg: &SimConfig,
+    extractor: &Extractor,
+    backend: &mut BackendQuery,
+) -> anyhow::Result<SimReport> {
+    let mut executor = SyncBackend::new(backend);
+    run_pipeline(arrivals, backgrounds, cfg, extractor, &mut executor, &mut SimClock)
 }
 
 #[cfg(test)]
@@ -373,7 +68,8 @@ mod tests {
     use super::*;
     use crate::backend::{CostModel, Detector};
     use crate::color::NamedColor;
-    use crate::utility::{train, Combine};
+    use crate::config::{CostConfig, QueryConfig, ShedderConfig};
+    use crate::utility::train;
     use crate::video::{Video, VideoConfig};
 
     fn sim_setup(vehicle_rate: f64) -> (Vec<Video>, SimConfig) {
@@ -434,6 +130,10 @@ mod tests {
         let r = run(&videos, &cfg);
         assert_eq!(r.ingress, 1500);
         assert_eq!(r.ingress, r.transmitted + r.shed);
+        // The decision log is the per-frame view of the same conservation.
+        assert_eq!(r.decisions.len() as u64, r.ingress);
+        let kept = r.decisions.iter().filter(|d| d.kept).count() as u64;
+        assert_eq!(kept, r.transmitted);
     }
 
     #[test]
@@ -496,69 +196,50 @@ mod tests {
         );
         assert!(r.qor.overall() > 0.95, "qor {}", r.qor.overall());
     }
-}
-
-#[cfg(test)]
-mod dbg {
-    use super::*;
-    use crate::backend::{CostModel, Detector};
-    use crate::color::NamedColor;
-    use crate::utility::{train, Combine};
-    use crate::video::{Video, VideoConfig};
 
     #[test]
-    #[ignore]
-    fn dbg_sim() {
-        let videos: Vec<Video> = (0..5)
-            .map(|i| {
-                let mut vc = VideoConfig::new(11, 77 + i as u64, i, 300);
-                vc.traffic.vehicle_rate = 0.25;
-                vc.traffic.paint_weights = vec![
-                    (crate::video::Paint::VividRed, 0.06),
-                    (crate::video::Paint::DullRed, 0.12),
-                    (crate::video::Paint::Gray, 0.37),
-                    (crate::video::Paint::Silver, 0.25),
-                    (crate::video::Paint::Black, 0.20),
-                ];
-                Video::new(vc)
-            })
-            .collect();
-        let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1500.0);
-        let model = train(&videos, &[0, 1, 2, 3, 4], &query.colors, Combine::Single);
+    fn bursty_and_churn_workloads_run_under_the_sim_clock() {
+        use crate::pipeline::workloads::{CameraChurn, PoissonArrivals};
+        let (videos, cfg) = sim_setup(0.3);
+        let train_idx: Vec<usize> = (0..videos.len()).collect();
+        let model = train(&videos, &train_idx, &cfg.query.colors, cfg.query.combine);
         let extractor = Extractor::native(model);
-        // print utility distribution pos vs neg
-        let v = &videos[0];
-        let mut pos = vec![]; let mut neg = vec![];
-        let mut pos_frames = 0;
-        for t in 0..v.len() {
-            let f = v.render(t);
-            let (_, u) = extractor.extract(&f.rgb, v.background()).unwrap();
-            if f.is_positive(NamedColor::Red, 40) { pos.push(u.combined); pos_frames += 1; } else { neg.push(u.combined); }
-        }
-        pos.sort_by(|a,b| a.partial_cmp(b).unwrap());
-        neg.sort_by(|a,b| a.partial_cmp(b).unwrap());
-        let q = |v: &Vec<f32>, p: f64| if v.is_empty() {0.0} else {v[(p*(v.len()-1) as f64) as usize]};
-        eprintln!("pos frames {} / 300; pos u: p10 {:.3} p50 {:.3} p90 {:.3}", pos_frames, q(&pos,0.1), q(&pos,0.5), q(&pos,0.9));
-        eprintln!("neg u: p10 {:.3} p50 {:.3} p90 {:.3} max {:.3}", q(&neg,0.1), q(&neg,0.5), q(&neg,0.9), q(&neg,1.0));
-
-        let cfg = SimConfig {
-            costs: CostConfig::default(),
-            shedder: ShedderConfig::default(),
-            query,
-            backend_tokens: 1,
-            policy: Policy::UtilityControlLoop,
-            seed: 5,
-            fps_total: 50.0,
+        let bgs = backgrounds_of(&videos);
+        let mk_backend = || {
+            BackendQuery::new(
+                cfg.query.clone(),
+                Detector::native(12, 25.0),
+                CostModel::new(cfg.costs.clone(), cfg.seed),
+                25.0,
+            )
         };
-        let mut backend = BackendQuery::new(cfg.query.clone(), Detector::native(12, 25.0),
-            CostModel::new(cfg.costs.clone(), cfg.seed), 25.0);
-        let r = run_sim(crate::video::Streamer::new(&videos), &backgrounds_of(&videos), &cfg, &extractor, &mut backend).unwrap();
-        eprintln!("ingress {} transmitted {} shed {} qor {:.3} drop {:.3}", r.ingress, r.transmitted, r.shed, r.qor.overall(), r.observed_drop_rate());
-        eprintln!("violations {} / {} max {:.0}ms", r.latency.violations(), r.latency.count(), r.latency.max_ms());
-        for (t, th, rate) in r.control_series.iter().take(40) {
-            eprintln!("t={:6.0} th={:.3} rate={:.3}", t, th, rate);
-        }
-        let objs = r.qor.per_object_all();
-        eprintln!("objects: {:?}", objs.iter().map(|(_,q)| (q*100.0) as i32).collect::<Vec<_>>());
+
+        let mut backend = mk_backend();
+        let bursty = run_sim_with(
+            PoissonArrivals::new(&videos, 0xB0B, 1.0),
+            &bgs,
+            &cfg,
+            &extractor,
+            &mut backend,
+        )
+        .unwrap();
+        assert_eq!(bursty.ingress, 1500);
+        assert_eq!(bursty.ingress, bursty.transmitted + bursty.shed);
+        assert!(bursty.shed > 0, "bursty overload must shed");
+
+        let mut backend = mk_backend();
+        let churn = run_sim_with(
+            CameraChurn::staggered(&videos, 5_000.0, 15_000.0),
+            &bgs,
+            &cfg,
+            &extractor,
+            &mut backend,
+        )
+        .unwrap();
+        assert!(churn.ingress > 0);
+        assert_eq!(churn.ingress, churn.transmitted + churn.shed);
+        // Staggered joins: ingress ramps, so the stage series must span
+        // more windows than one camera's lifetime alone.
+        assert!(churn.end_ms > 20_000.0, "end {}", churn.end_ms);
     }
 }

@@ -1,0 +1,289 @@
+//! Workload plugins for the streaming core: implementations of
+//! [`ArrivalModel`] that describe *what* arrives and *when*, independent of
+//! the clock that executes it. Every model here runs unchanged under both
+//! [`crate::pipeline::SimClock`] and [`crate::pipeline::WallClock`].
+//!
+//! * [`IterArrivals`] — any timestamp-ordered frame iterator (the plain
+//!   interleaved multi-camera stream via [`crate::video::Streamer`], a
+//!   single [`crate::video::Video`], a [`crate::video::SegmentedVideo`]).
+//! * [`PoissonArrivals`] — bursty ingress: each camera's frames arrive on
+//!   a Poisson process (exponential inter-arrival times) at its nominal
+//!   rate, so the instantaneous load swings far above and below the mean
+//!   while the long-run rate matches the fixed-fps stream.
+//! * [`CameraChurn`] — mid-run camera join/leave: each camera streams
+//!   only inside its `[join_ms, leave_ms)` window, so aggregate ingress
+//!   steps up and down while the run is in flight.
+
+use super::core::ArrivalModel;
+use crate::util::rng::Rng;
+use crate::video::{Frame, Video};
+
+/// Adapter: any ts-ordered frame iterator + its nominal aggregate fps.
+pub struct IterArrivals<I> {
+    iter: I,
+    fps_total: f64,
+}
+
+impl<I: Iterator<Item = Frame>> IterArrivals<I> {
+    pub fn new(iter: I, fps_total: f64) -> Self {
+        IterArrivals { iter, fps_total }
+    }
+}
+
+impl<I: Iterator<Item = Frame>> ArrivalModel for IterArrivals<I> {
+    fn next_frame(&mut self) -> Option<Frame> {
+        self.iter.next()
+    }
+
+    fn fps_total(&self) -> f64 {
+        self.fps_total
+    }
+}
+
+/// Bursty Poisson ingress over a camera set: camera `i`'s k-th frame is
+/// its video's frame `k`, re-stamped onto a Poisson arrival process with
+/// mean rate `fps × rate_scale`. Deterministic for a given seed; cameras
+/// are merged by arrival time.
+pub struct PoissonArrivals<'a> {
+    videos: &'a [Video],
+    /// Next frame index per camera.
+    next_idx: Vec<usize>,
+    /// Arrival time (ms) of each camera's next frame.
+    next_ts: Vec<f64>,
+    rngs: Vec<Rng>,
+    mean_gap_ms: Vec<f64>,
+    fps_total: f64,
+}
+
+impl<'a> PoissonArrivals<'a> {
+    /// `rate_scale` multiplies each camera's nominal rate (1.0 = the same
+    /// long-run rate as the fixed-fps stream; >1 = overload on average).
+    pub fn new(videos: &'a [Video], seed: u64, rate_scale: f64) -> Self {
+        assert!(rate_scale > 0.0, "rate_scale must be positive");
+        let mut rngs = Vec::with_capacity(videos.len());
+        let mut next_ts = Vec::with_capacity(videos.len());
+        let mut mean_gap_ms = Vec::with_capacity(videos.len());
+        let mut fps_total = 0.0;
+        for v in videos {
+            let tag = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(v.camera_id() as u64 + 1);
+            let mut rng = Rng::new(seed ^ tag);
+            let gap = 1000.0 / (v.config.fps * rate_scale);
+            // First arrival is itself exponentially distributed.
+            next_ts.push(rng.exponential(gap));
+            mean_gap_ms.push(gap);
+            rngs.push(rng);
+            fps_total += v.config.fps * rate_scale;
+        }
+        PoissonArrivals {
+            videos,
+            next_idx: vec![0; videos.len()],
+            next_ts,
+            rngs,
+            mean_gap_ms,
+            fps_total,
+        }
+    }
+}
+
+impl ArrivalModel for PoissonArrivals<'_> {
+    fn next_frame(&mut self) -> Option<Frame> {
+        // Pick the camera with the earliest pending arrival.
+        let mut best: Option<(usize, f64)> = None;
+        for (i, v) in self.videos.iter().enumerate() {
+            if self.next_idx[i] >= v.len() {
+                continue;
+            }
+            let ts = self.next_ts[i];
+            if best.is_none_or(|(_, bts)| ts < bts) {
+                best = Some((i, ts));
+            }
+        }
+        let (i, ts) = best?;
+        let mut frame = self.videos[i].render(self.next_idx[i]);
+        frame.ts_ms = ts; // re-stamp capture onto the Poisson process
+        self.next_idx[i] += 1;
+        self.next_ts[i] = ts + self.rngs[i].exponential(self.mean_gap_ms[i]);
+        Some(frame)
+    }
+
+    fn fps_total(&self) -> f64 {
+        self.fps_total
+    }
+}
+
+/// One camera's lifetime in a churn scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnWindow {
+    /// Stream time (ms) the camera joins the deployment.
+    pub join_ms: f64,
+    /// Stream time (ms) the camera leaves (exclusive); `f64::INFINITY`
+    /// for cameras that stay until their video ends.
+    pub leave_ms: f64,
+}
+
+impl ChurnWindow {
+    pub fn always() -> Self {
+        ChurnWindow { join_ms: 0.0, leave_ms: f64::INFINITY }
+    }
+}
+
+/// Mid-run camera churn: camera `i` emits frame `k` at
+/// `join_ms + k / fps`, while that instant is before `leave_ms`. The
+/// aggregate ingress rate therefore steps as cameras come and go — the
+/// scenario the per-window control loop has to ride out.
+pub struct CameraChurn<'a> {
+    videos: &'a [Video],
+    windows: Vec<ChurnWindow>,
+    next_idx: Vec<usize>,
+}
+
+impl<'a> CameraChurn<'a> {
+    /// `windows[i]` is camera `i`'s lifetime; must match `videos.len()`.
+    pub fn new(videos: &'a [Video], windows: Vec<ChurnWindow>) -> Self {
+        assert_eq!(videos.len(), windows.len(), "one churn window per camera");
+        CameraChurn { videos, windows, next_idx: vec![0; videos.len()] }
+    }
+
+    /// Staggered deployment: camera `i` joins at `i × stagger_ms` and
+    /// stays `up_ms` (the classic rolling join/leave pattern).
+    pub fn staggered(videos: &'a [Video], stagger_ms: f64, up_ms: f64) -> Self {
+        let windows = (0..videos.len())
+            .map(|i| {
+                let join = i as f64 * stagger_ms;
+                ChurnWindow { join_ms: join, leave_ms: join + up_ms }
+            })
+            .collect();
+        Self::new(videos, windows)
+    }
+
+    fn pending_ts(&self, i: usize) -> Option<f64> {
+        let v = &self.videos[i];
+        let k = self.next_idx[i];
+        if k >= v.len() {
+            return None;
+        }
+        let w = &self.windows[i];
+        let ts = w.join_ms + k as f64 / v.config.fps * 1e3;
+        (ts < w.leave_ms).then_some(ts)
+    }
+}
+
+impl ArrivalModel for CameraChurn<'_> {
+    fn next_frame(&mut self) -> Option<Frame> {
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..self.videos.len() {
+            let Some(ts) = self.pending_ts(i) else { continue };
+            if best.is_none_or(|(_, bts)| ts < bts) {
+                best = Some((i, ts));
+            }
+        }
+        let (i, ts) = best?;
+        let mut frame = self.videos[i].render(self.next_idx[i]);
+        frame.ts_ms = ts; // shift onto the camera's join offset
+        self.next_idx[i] += 1;
+        Some(frame)
+    }
+
+    fn fps_total(&self) -> f64 {
+        // Nominal: the full camera set's aggregate (the estimator measures
+        // the actual stepped rate once arrivals flow).
+        crate::video::streamer::aggregate_fps(self.videos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::video::VideoConfig;
+
+    fn cams(n: usize, frames: usize) -> Vec<Video> {
+        (0..n)
+            .map(|i| Video::new(VideoConfig::new(3, 40 + i as u64, i as u32, frames)))
+            .collect()
+    }
+
+    fn drain(mut a: impl ArrivalModel) -> Vec<Frame> {
+        let mut out = Vec::new();
+        while let Some(f) = a.next_frame() {
+            out.push(f);
+        }
+        out
+    }
+
+    #[test]
+    fn poisson_is_ordered_deterministic_and_rate_matched() {
+        let videos = cams(3, 60);
+        let frames = drain(PoissonArrivals::new(&videos, 7, 1.0));
+        assert_eq!(frames.len(), 180, "every frame is emitted exactly once");
+        for w in frames.windows(2) {
+            assert!(w[0].ts_ms <= w[1].ts_ms, "ts order violated");
+        }
+        // Deterministic for a fixed seed…
+        let again = drain(PoissonArrivals::new(&videos, 7, 1.0));
+        let ts: Vec<f64> = frames.iter().map(|f| f.ts_ms).collect();
+        let ts2: Vec<f64> = again.iter().map(|f| f.ts_ms).collect();
+        assert_eq!(ts, ts2);
+        // …different for another seed.
+        let other = drain(PoissonArrivals::new(&videos, 8, 1.0));
+        assert_ne!(ts, other.iter().map(|f| f.ts_ms).collect::<Vec<f64>>());
+        // Long-run rate ≈ nominal 30 fps: 180 frames should span ~6 s.
+        let span_s = ts.last().unwrap() / 1000.0;
+        assert!(span_s > 3.0 && span_s < 12.0, "span {span_s}s");
+        // Burstiness: inter-arrival CV of an exponential process is ~1,
+        // far above the near-zero CV of the fixed-fps stream.
+        let gaps: Vec<f64> = ts.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        assert!(var.sqrt() / mean > 0.5, "not bursty: cv {}", var.sqrt() / mean);
+    }
+
+    #[test]
+    fn poisson_rate_scale_compresses_time() {
+        let videos = cams(1, 100);
+        let slow = drain(PoissonArrivals::new(&videos, 5, 1.0));
+        let fast = drain(PoissonArrivals::new(&videos, 5, 2.0));
+        assert_eq!(slow.len(), fast.len());
+        assert!(fast.last().unwrap().ts_ms < slow.last().unwrap().ts_ms);
+    }
+
+    #[test]
+    fn churn_windows_gate_emission() {
+        let videos = cams(2, 50); // 10 fps each → 5 s of content
+        // Camera 0 always on; camera 1 joins at 1 s and leaves at 3 s.
+        let churn = CameraChurn::new(
+            &videos,
+            vec![
+                ChurnWindow::always(),
+                ChurnWindow { join_ms: 1_000.0, leave_ms: 3_000.0 },
+            ],
+        );
+        let frames = drain(churn);
+        for w in frames.windows(2) {
+            assert!(w[0].ts_ms <= w[1].ts_ms);
+        }
+        let cam0 = frames.iter().filter(|f| f.camera == 0).count();
+        let cam1: Vec<&Frame> = frames.iter().filter(|f| f.camera == 1).collect();
+        assert_eq!(cam0, 50);
+        // 2 s window at 10 fps → 20 frames, all inside [1 s, 3 s).
+        assert_eq!(cam1.len(), 20);
+        for f in &cam1 {
+            assert!(f.ts_ms >= 1_000.0 && f.ts_ms < 3_000.0, "ts {}", f.ts_ms);
+        }
+    }
+
+    #[test]
+    fn staggered_churn_steps_the_aggregate_rate() {
+        let videos = cams(3, 40);
+        let frames = drain(CameraChurn::staggered(&videos, 1_000.0, 2_000.0));
+        // Each camera contributes 2 s × 10 fps = 20 frames.
+        for cam in 0..3u32 {
+            assert_eq!(frames.iter().filter(|f| f.camera == cam).count(), 20);
+        }
+        // During [1 s, 2 s) two cameras overlap → higher arrival density
+        // than [0 s, 1 s).
+        let in_window = |lo: f64, hi: f64| {
+            frames.iter().filter(|f| f.ts_ms >= lo && f.ts_ms < hi).count()
+        };
+        assert!(in_window(1_000.0, 2_000.0) > in_window(0.0, 1_000.0));
+    }
+}

@@ -12,11 +12,27 @@ use std::collections::VecDeque;
 pub struct RateEstimator {
     window_ms: f64,
     arrivals: VecDeque<f64>,
+    /// Configured nominal rate returned before the estimator warms up
+    /// (fewer than two arrivals in the window): returning 0.0 there would
+    /// poison the Eq. 19 target-rate derivation at segment start.
+    nominal_fps: f64,
 }
 
 impl RateEstimator {
     pub fn new(window_ms: f64) -> Self {
-        RateEstimator { window_ms, arrivals: VecDeque::new() }
+        RateEstimator { window_ms, arrivals: VecDeque::new(), nominal_fps: 0.0 }
+    }
+
+    /// Builder: set the cold-start nominal rate.
+    pub fn with_nominal(mut self, fps: f64) -> Self {
+        self.set_nominal(fps);
+        self
+    }
+
+    /// Set the cold-start nominal rate (the deployment's configured
+    /// aggregate fps).
+    pub fn set_nominal(&mut self, fps: f64) {
+        self.nominal_fps = fps.max(0.0);
     }
 
     pub fn observe(&mut self, ts_ms: f64) {
@@ -30,14 +46,16 @@ impl RateEstimator {
         }
     }
 
-    /// Current rate (frames/sec) over the window.
+    /// Current rate (frames/sec) over the window; before two arrivals have
+    /// landed (or when they share a timestamp) this falls back to the
+    /// configured nominal rate instead of reporting 0.
     pub fn fps(&self) -> f64 {
         if self.arrivals.len() < 2 {
-            return 0.0;
+            return self.nominal_fps;
         }
         let span_ms = self.arrivals.back().unwrap() - self.arrivals.front().unwrap();
         if span_ms <= 0.0 {
-            return 0.0;
+            return self.nominal_fps;
         }
         (self.arrivals.len() - 1) as f64 / (span_ms / 1000.0)
     }
@@ -106,12 +124,22 @@ impl ControlLoop {
         self.rate.observe(ts_ms);
     }
 
+    /// Configure the rate estimator's cold-start nominal fps (see
+    /// [`RateEstimator::set_nominal`]).
+    pub fn set_nominal_fps(&mut self, fps: f64) {
+        self.rate.set_nominal(fps);
+    }
+
     /// Smoothed proc_Q (ms).
     pub fn proc_q_ms(&self) -> f64 {
         self.proc_q.get_or(1.0).max(0.1)
     }
 
-    /// Measured ingress rate (fps); falls back to `default_fps` early on.
+    /// Measured ingress rate (fps). The estimator's own configured
+    /// nominal (see [`Self::set_nominal_fps`]) is the authoritative
+    /// cold-start fallback; `default_fps` is a last resort for callers
+    /// that never configured one (it is the same value in the shedder
+    /// path, which sets both).
     pub fn ingress_fps(&self, default_fps: f64) -> f64 {
         let fps = self.rate.fps();
         if fps > 0.0 {
@@ -163,6 +191,39 @@ mod tests {
 
     fn mk() -> ControlLoop {
         ControlLoop::new(&ShedderConfig::default(), &CostConfig::default(), 1000.0)
+    }
+
+    #[test]
+    fn rate_estimator_cold_start_falls_back_to_nominal() {
+        // Fewer than two arrivals: the configured nominal rate, never 0
+        // (0 would zero the Eq. 19 target rate at segment start).
+        let mut r = RateEstimator::new(2000.0).with_nominal(30.0);
+        assert_eq!(r.fps(), 30.0);
+        r.observe(100.0);
+        assert_eq!(r.fps(), 30.0);
+        // Two arrivals at the same instant: still the nominal.
+        r.observe(100.0);
+        assert_eq!(r.fps(), 30.0);
+        // Real measurements take over once a span exists…
+        r.observe(200.0);
+        assert!(r.fps() > 10.0, "fps={}", r.fps());
+        // …and with no nominal configured the cold start stays 0.
+        let bare = RateEstimator::new(2000.0);
+        assert_eq!(bare.fps(), 0.0);
+    }
+
+    #[test]
+    fn control_loop_cold_start_uses_nominal_rate() {
+        let mut cl = mk();
+        cl.set_nominal_fps(20.0);
+        // No arrivals yet, slow backend: the target rate must already
+        // reflect the nominal ingress (Eq. 19 with 20 fps, ST 2 fps → 0.9
+        // once the backend EWMA saturates).
+        for _ in 0..300 {
+            cl.observe_backend(500.0);
+        }
+        let r = cl.target_drop_rate(0.0);
+        assert!(r > 0.8, "cold-start rate {r}");
     }
 
     #[test]

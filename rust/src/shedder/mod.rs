@@ -60,7 +60,10 @@ impl<T> LoadShedder<T> {
         default_fps: f64,
     ) -> Self {
         let admission = AdmissionControl::new(cfg.history);
-        let control = ControlLoop::new(cfg, costs, latency_bound_ms);
+        let mut control = ControlLoop::new(cfg, costs, latency_bound_ms);
+        // Cold-start fallback (Eq. 19): before the estimator has two
+        // arrivals in its window, report the deployment's nominal rate.
+        control.set_nominal_fps(default_fps);
         let queue = UtilityQueue::new(cfg.queue_cap_max);
         LoadShedder {
             admission,

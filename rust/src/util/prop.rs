@@ -122,7 +122,8 @@ impl Prop {
                     .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
                     .unwrap_or_else(|| "<non-string panic>".to_string());
                 panic!(
-                    "property '{}' failed at case {}/{} (replay with Prop::new(..).seed({}).cases(1)): {}",
+                    "property '{}' failed at case {}/{} (replay with \
+                     Prop::new(..).seed({}).cases(1)): {}",
                     self.name, i, self.cases, case_seed, msg
                 );
             }

@@ -41,7 +41,12 @@ impl Trajectory {
     }
 
     /// Visible bounding box at frame `t`, clipped to the image, if any.
-    pub fn bbox_at(&self, t: f64, width: usize, height: usize) -> Option<(usize, usize, usize, usize)> {
+    pub fn bbox_at(
+        &self,
+        t: f64,
+        width: usize,
+        height: usize,
+    ) -> Option<(usize, usize, usize, usize)> {
         let x = self.x_at(t);
         let x0 = x.round() as i64;
         let x1 = x0 + self.w as i64;
@@ -266,7 +271,8 @@ pub fn spawn_traffic(
             let dir: i8 = if ped_rng.chance(0.5) { 1 } else { -1 };
             let speed = ped_rng.range_f64(3.0, 8.0) / fps;
             let paint = TrafficConfig::sample_paint(&mut ped_rng, &cfg.pedestrian_weights);
-            let y = ped_rng.range(scene.walk_y0 + 1, scene.walk_y1.saturating_sub(4).max(scene.walk_y0 + 2));
+            let y = ped_rng
+                .range(scene.walk_y0 + 1, scene.walk_y1.saturating_sub(4).max(scene.walk_y0 + 2));
             out.push(Trajectory {
                 object_id: next_id,
                 kind: Kind::Pedestrian,

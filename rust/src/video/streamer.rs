@@ -33,7 +33,7 @@ impl<'a> Streamer<'a> {
     }
 }
 
-impl<'a> Iterator for Streamer<'a> {
+impl Iterator for Streamer<'_> {
     type Item = Frame;
 
     fn next(&mut self) -> Option<Frame> {
@@ -46,7 +46,7 @@ impl<'a> Iterator for Streamer<'a> {
                 continue;
             }
             let ts = n as f64 / v.config.fps * 1e3;
-            if best.map_or(true, |(_, bts)| ts < bts) {
+            if best.is_none_or(|(_, bts)| ts < bts) {
                 best = Some((i, ts));
             }
         }

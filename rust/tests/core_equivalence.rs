@@ -1,0 +1,185 @@
+//! Clock-equivalence property of the streaming core: the discrete-event
+//! driver (`SimClock`) and the threaded wall-clock driver (`WallClock`,
+//! fast-forwarded, cost emulation off, native oracle) must produce
+//! **identical per-frame shed/transmit decisions** on the same seed and
+//! stream — decisions depend only on the virtual-time event order, which
+//! the clock abstraction keeps invariant across drivers.
+
+use uals::backend::{BackendQuery, CostModel, Detector};
+use uals::color::NamedColor;
+use uals::config::{CostConfig, QueryConfig, ShedderConfig};
+use uals::features::Extractor;
+use uals::pipeline::realtime::{run_realtime, run_realtime_with, RealtimeConfig};
+use uals::pipeline::{
+    backgrounds_of, run_sim, run_sim_with, FrameDecision, PoissonArrivals, Policy, SimConfig,
+    SimReport,
+};
+use uals::utility::{train, Combine, UtilityModel};
+use uals::video::{streamer::aggregate_fps, Streamer, Video, VideoConfig};
+
+fn cameras(n: usize, frames: usize, vehicle_rate: f64, seed: u64) -> Vec<Video> {
+    (0..n)
+        .map(|i| {
+            let mut vc = VideoConfig::new(0xE01 ^ seed, seed * 31 + i as u64, i as u32, frames);
+            vc.traffic.vehicle_rate = vehicle_rate;
+            Video::new(vc)
+        })
+        .collect()
+}
+
+fn model_for(videos: &[Video]) -> UtilityModel {
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    train(videos, &idx, &[NamedColor::Red], Combine::Single)
+}
+
+fn sim_cfg(fps: f64, seed: u64) -> SimConfig {
+    SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: QueryConfig::single(NamedColor::Red).with_latency_bound(1200.0),
+        backend_tokens: 1,
+        policy: Policy::UtilityControlLoop,
+        seed,
+        fps_total: fps,
+    }
+}
+
+fn rt_cfg(cfg: &SimConfig) -> RealtimeConfig {
+    RealtimeConfig {
+        query: cfg.query.clone(),
+        shedder: cfg.shedder.clone(),
+        costs: cfg.costs.clone(),
+        cost_emulation_scale: 0.0, // pure compute speed
+        time_scale: 1e-3,          // 1000× fast-forward
+        backend_tokens: cfg.backend_tokens,
+        use_artifacts: false, // native oracle
+        policy: cfg.policy.clone(),
+        seed: cfg.seed,
+    }
+}
+
+fn run_sim_driver(videos: &[Video], cfg: &SimConfig, model: &UtilityModel) -> SimReport {
+    let extractor = Extractor::native(model.clone());
+    let mut backend = BackendQuery::new(
+        cfg.query.clone(),
+        Detector::native(12, 25.0),
+        CostModel::new(cfg.costs.clone(), cfg.seed),
+        25.0,
+    );
+    run_sim(
+        Streamer::new(videos),
+        &backgrounds_of(videos),
+        cfg,
+        &extractor,
+        &mut backend,
+    )
+    .expect("sim driver")
+}
+
+fn assert_decisions_equal(sim: &[FrameDecision], wall: &[FrameDecision], label: &str) {
+    assert_eq!(sim.len(), wall.len(), "{label}: decision counts differ");
+    for (i, (a, b)) in sim.iter().zip(wall).enumerate() {
+        assert_eq!(a, b, "{label}: decision {i} diverges");
+    }
+}
+
+#[test]
+fn sim_and_wallclock_drivers_make_identical_decisions() {
+    // Property over several (seed, load) points: light, moderate and
+    // overloaded traffic must all agree frame-for-frame.
+    for (seed, rate) in [(0x51u64, 0.1), (0x52, 0.35), (0x53, 0.6)] {
+        let videos = cameras(2, 100, rate, seed);
+        let model = model_for(&videos);
+        let cfg = sim_cfg(aggregate_fps(&videos), seed);
+
+        let sim = run_sim_driver(&videos, &cfg, &model);
+        let wall = run_realtime(&videos, &model, &rt_cfg(&cfg)).expect("wall driver");
+
+        assert_eq!(sim.ingress, 200, "seed {seed:x}");
+        assert_eq!(sim.ingress, wall.ingress, "seed {seed:x}");
+        assert_eq!(sim.transmitted, wall.transmitted, "seed {seed:x}");
+        assert_eq!(sim.shed, wall.shed, "seed {seed:x}");
+        assert_decisions_equal(&sim.decisions, &wall.decisions, "uniform stream");
+        // Same decision sequence ⇒ bit-identical QoR.
+        assert_eq!(sim.qor.overall(), wall.qor.overall(), "seed {seed:x}");
+    }
+}
+
+#[test]
+fn churn_workload_is_clock_invariant_too() {
+    use uals::pipeline::CameraChurn;
+    let videos = cameras(3, 60, 0.4, 0x88);
+    let model = model_for(&videos);
+    let cfg = sim_cfg(aggregate_fps(&videos), 0x88);
+
+    let extractor = Extractor::native(model.clone());
+    let mut backend = BackendQuery::new(
+        cfg.query.clone(),
+        Detector::native(12, 25.0),
+        CostModel::new(cfg.costs.clone(), cfg.seed),
+        25.0,
+    );
+    let sim = run_sim_with(
+        CameraChurn::staggered(&videos, 2_000.0, 4_000.0),
+        &backgrounds_of(&videos),
+        &cfg,
+        &extractor,
+        &mut backend,
+    )
+    .expect("sim driver");
+    let wall = run_realtime_with(
+        &videos,
+        &model,
+        &rt_cfg(&cfg),
+        CameraChurn::staggered(&videos, 2_000.0, 4_000.0),
+    )
+    .expect("wall driver");
+
+    // 4 s up at 10 fps → 40 frames per camera.
+    assert_eq!(sim.ingress, 120);
+    assert_eq!(sim.ingress, sim.transmitted + sim.shed);
+    assert_eq!(sim.transmitted, wall.transmitted);
+    assert_eq!(sim.shed, wall.shed);
+    assert_decisions_equal(&sim.decisions, &wall.decisions, "churn stream");
+    assert_eq!(sim.qor.overall(), wall.qor.overall());
+}
+
+#[test]
+fn bursty_workload_is_clock_invariant_too() {
+    // The ArrivalModel plugins must behave identically under both clocks:
+    // two independently-constructed Poisson processes with the same seed
+    // drive the two drivers.
+    let videos = cameras(2, 80, 0.4, 0x77);
+    let model = model_for(&videos);
+    let cfg = sim_cfg(aggregate_fps(&videos), 0x77);
+
+    let extractor = Extractor::native(model.clone());
+    let mut backend = BackendQuery::new(
+        cfg.query.clone(),
+        Detector::native(12, 25.0),
+        CostModel::new(cfg.costs.clone(), cfg.seed),
+        25.0,
+    );
+    let sim = run_sim_with(
+        PoissonArrivals::new(&videos, cfg.seed, 1.0),
+        &backgrounds_of(&videos),
+        &cfg,
+        &extractor,
+        &mut backend,
+    )
+    .expect("sim driver");
+    let wall = run_realtime_with(
+        &videos,
+        &model,
+        &rt_cfg(&cfg),
+        PoissonArrivals::new(&videos, cfg.seed, 1.0),
+    )
+    .expect("wall driver");
+
+    assert_eq!(sim.ingress, 160);
+    assert_eq!(sim.ingress, sim.transmitted + sim.shed);
+    assert_eq!(sim.transmitted, wall.transmitted);
+    assert_eq!(sim.shed, wall.shed);
+    assert_decisions_equal(&sim.decisions, &wall.decisions, "poisson stream");
+    assert_eq!(sim.qor.overall(), wall.qor.overall());
+}

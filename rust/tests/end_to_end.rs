@@ -10,7 +10,9 @@ use uals::config::{CostConfig, Deployment, QueryConfig, ShedderConfig};
 use uals::features::Extractor;
 use uals::pipeline::realtime::{run_realtime, RealtimeConfig};
 use uals::pipeline::{backgrounds_of, run_sim, BackgroundMap, Policy, SimConfig};
-use uals::video::{build_dataset, DatasetConfig, Paint, SegmentedVideo, Streamer, Video, VideoConfig};
+use uals::video::{
+    build_dataset, DatasetConfig, Paint, SegmentedVideo, Streamer, Video, VideoConfig,
+};
 use uals::utility::{train, Combine};
 
 fn aux_model(colors: &[NamedColor], combine: Combine) -> uals::utility::UtilityModel {
@@ -160,7 +162,9 @@ fn realtime_pipeline_with_artifacts() {
     // fast path (the extractor contract is identical either way).
     let use_artifacts = uals::runtime::artifacts_available();
     if !use_artifacts {
-        eprintln!("realtime_pipeline_with_artifacts: artifacts/PJRT unavailable, using native path");
+        eprintln!(
+            "realtime_pipeline_with_artifacts: artifacts/PJRT unavailable, using native path"
+        );
     }
     let model = aux_model(&[NamedColor::Red], Combine::Single);
     let mut vc = VideoConfig::new(0xE2E3, 9, 0, 60);
