@@ -1,23 +1,27 @@
 # Build/test/bench entry points for the uals reproduction.
 #
 #   make build      release build of the Rust stack
-#   make test       tier-1 test suite (green without artifacts)
+#   make test       tier-1 test suite, release profile (green without
+#                   artifacts; --release so CI's build+test share ONE
+#                   compile pass instead of building debug a second time)
 #   make check      CI gate: release build + tier-1 tests + fmt + clippy
+#   make docs       rustdoc with warnings denied (the CI docs job)
 #   make bench      hot-path microbenchmarks → BENCH_micro.json (repo root)
-#                   (includes the incremental-vs-fast redundancy sweep;
-#                   run from a toolchain image to populate the file)
+#                   (incl. the multi-query shared-vs-independent rows; run
+#                   from a toolchain image to populate the file; CI prints
+#                   an advisory delta vs BENCH_baseline.json)
 #   make figures    regenerate the paper's figures at the default scale
 #   make artifacts  AOT-lower the JAX/Pallas kernels → rust/artifacts/
 #                   (requires jax; the Rust side runs without it, on the
 #                   native LUT fast path)
 
-.PHONY: build test check fmt-check clippy bench figures artifacts clean
+.PHONY: build test check fmt-check clippy docs bench figures artifacts clean
 
 build:
 	cargo build --release
 
 test:
-	cargo test -q
+	cargo test -q --release
 
 check: build test fmt-check clippy
 
@@ -26,6 +30,9 @@ fmt-check:
 
 clippy:
 	cargo clippy --all-targets -- -D warnings
+
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 bench:
 	cargo bench --bench microbench

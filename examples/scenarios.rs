@@ -9,16 +9,23 @@
 //! The core guarantees that per-frame shed/transmit decisions depend only
 //! on the virtual-time event order, so both clocks agree exactly (also
 //! pinned by rust/tests/core_equivalence.rs); this demo prints both sides.
+//!
+//! The final section runs the multi-query shared-stream path: three
+//! queries over the same cameras with one feature extraction per frame
+//! and a work-conserving fair-share capacity split, again under both
+//! clocks (pinned by rust/tests/multiquery.rs).
 
 use anyhow::Result;
 use uals::backend::{BackendQuery, CostModel, Detector};
 use uals::color::NamedColor;
 use uals::config::{CostConfig, QueryConfig, ShedderConfig};
 use uals::features::Extractor;
-use uals::pipeline::realtime::{run_realtime_with, RealtimeConfig};
+use uals::pipeline::realtime::{run_multi_realtime, run_realtime_with, RealtimeConfig};
 use uals::pipeline::{
-    backgrounds_of, run_sim_with, CameraChurn, PoissonArrivals, Policy, SimConfig,
+    backgrounds_of, multi_backends, run_multi_sim, run_sim_with, CameraChurn, MultiSimConfig,
+    PoissonArrivals, Policy, SimConfig,
 };
+use uals::shedder::{ArbiterPolicy, QuerySet, QuerySpec};
 use uals::utility::{train, Combine};
 use uals::video::{build_dataset, streamer::aggregate_fps, DatasetConfig, Video, VideoConfig};
 
@@ -76,6 +83,7 @@ fn main() -> Result<()> {
         use_artifacts: false,
         policy: Policy::UtilityControlLoop,
         seed: cfg.seed,
+        arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
     };
 
     println!("scenario        clock     ingress  transmitted  shed   qor    viol%");
@@ -163,6 +171,65 @@ fn main() -> Result<()> {
         (rt.ingress, rt.transmitted, rt.shed),
         "clock-invariant decisions"
     );
+
+    // Multi-query shared stream: three queries over the same cameras,
+    // one extraction per frame, fair-share capacity split — under both
+    // clocks, which must agree per query.
+    let specs = vec![
+        QuerySpec::new("red", QueryConfig::single(NamedColor::Red)),
+        QuerySpec::new("yellow", QueryConfig::single(NamedColor::Yellow)).with_weight(2.0),
+        QuerySpec::new(
+            "either",
+            QueryConfig::composite(NamedColor::Red, NamedColor::Yellow, Combine::Or),
+        ),
+    ];
+    let set = QuerySet::train(&specs, &train_videos, &idx)?;
+    let mcfg = MultiSimConfig {
+        costs: cfg.costs.clone(),
+        shedder: cfg.shedder.clone(),
+        backend_tokens: 1,
+        arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
+        seed: cfg.seed,
+        fps_total: fps,
+    };
+    let mq_extractor = Extractor::native(set.union_model().clone());
+    let mut backends = multi_backends(&set, &mcfg.costs, mcfg.seed);
+    let sim = run_multi_sim(
+        uals::video::Streamer::new(&videos),
+        &bgs,
+        &set,
+        &mcfg,
+        &mq_extractor,
+        &mut backends,
+    )?;
+    assert_eq!(sim.extractions, sim.frames, "one extraction per frame");
+    let rt = run_multi_realtime(&videos, &set, &rt_cfg)?;
+    for (qs, qr) in sim.queries.iter().zip(&rt.queries) {
+        row(
+            &format!("mq:{}", qs.name),
+            "sim",
+            qs.report.ingress,
+            qs.report.transmitted,
+            qs.report.shed,
+            qs.report.qor.overall(),
+            qs.report.latency.violation_rate(),
+        );
+        row(
+            &format!("mq:{}", qr.name),
+            "wall",
+            qr.report.ingress,
+            qr.report.transmitted,
+            qr.report.shed,
+            qr.report.qor.overall(),
+            qr.report.latency.violation_rate(),
+        );
+        assert_eq!(
+            (qs.report.ingress, qs.report.transmitted, qs.report.shed),
+            (qr.report.ingress, qr.report.transmitted, qr.report.shed),
+            "clock-invariant multi-query decisions ({})",
+            qs.name
+        );
+    }
 
     println!("scenarios OK");
     Ok(())

@@ -14,9 +14,12 @@ use uals::features::{
     reference, Extractor, FrameFeatures, IncrementalConfig, IncrementalEngine, QuantScratch,
     UtilityValues,
 };
-use uals::pipeline::{run_sharded_sim, run_sharded_sim_with, Policy, SimConfig};
+use uals::pipeline::{
+    multi_backend_seed, multi_backends, run_multi_sim, run_sharded_sim, run_sharded_sim_with,
+    MultiSimConfig, Policy, SimConfig,
+};
 use uals::runtime::Engine;
-use uals::shedder::UtilityQueue;
+use uals::shedder::{ArbiterPolicy, QuerySet, UtilityQueue};
 use uals::util::bench::Bench;
 use uals::util::rng::Rng;
 use uals::utility::{train, Combine, UtilityCdf};
@@ -262,6 +265,71 @@ fn main() {
         std::hint::black_box(r.ingress);
     });
 
+    // --- multi-query shared-stream pipeline ---------------------------------
+    // 8 concurrent queries over the same 4-camera stream: ONE extraction
+    // per frame + per-query shedding behind the fair-share arbiter,
+    // versus 8 fully independent single-query pipelines (8 extractions
+    // per frame). Same frames, same backend cost seeds per query.
+    let mq_specs = uals::experiments::scenarios::multiquery_pool();
+    let mq_set = QuerySet::train(&mq_specs, &sweep_videos, &[0, 1]).unwrap();
+    let mq_fps = uals::video::streamer::aggregate_fps(&sweep_videos);
+    let mq_bgs = uals::pipeline::backgrounds_of(&sweep_videos);
+    let mq_cfg = MultiSimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        backend_tokens: 1,
+        arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
+        seed: 0xBE,
+        fps_total: mq_fps,
+    };
+    let mq_extractor = Extractor::native(mq_set.union_model().clone());
+    b.run_n("multi/shared_extract_8q", 1, 3, || {
+        let mut backends = multi_backends(&mq_set, &mq_cfg.costs, mq_cfg.seed);
+        let r = run_multi_sim(
+            uals::video::Streamer::new(&sweep_videos),
+            &mq_bgs,
+            &mq_set,
+            &mq_cfg,
+            &mq_extractor,
+            &mut backends,
+        )
+        .unwrap();
+        std::hint::black_box(r.frames);
+    });
+    let single_extractors: Vec<Extractor> = (0..mq_set.len())
+        .map(|q| Extractor::native(mq_set.query_model(q)))
+        .collect();
+    b.run_n("multi/independent_8q", 1, 3, || {
+        let mut total = 0u64;
+        for q in 0..mq_set.len() {
+            let cfg_q = SimConfig {
+                costs: CostConfig::default(),
+                shedder: ShedderConfig::default(),
+                query: mq_set.queries()[q].config.clone(),
+                backend_tokens: 1,
+                policy: Policy::UtilityControlLoop,
+                seed: mq_cfg.seed,
+                fps_total: mq_fps,
+            };
+            let mut backend = BackendQuery::new(
+                cfg_q.query.clone(),
+                Detector::native(12, 25.0),
+                CostModel::new(cfg_q.costs.clone(), multi_backend_seed(mq_cfg.seed, q)),
+                25.0,
+            );
+            let r = uals::pipeline::run_sim(
+                uals::video::Streamer::new(&sweep_videos),
+                &mq_bgs,
+                &cfg_q,
+                &single_extractors[q],
+                &mut backend,
+            )
+            .unwrap();
+            total += r.ingress;
+        }
+        std::hint::black_box(total);
+    });
+
     // --- AOT artifact path (PJRT) -------------------------------------------
     if let Ok(engine) = Engine::from_default_artifacts() {
         let art1 = Extractor::artifact(&engine, model1.clone()).unwrap();
@@ -341,6 +409,15 @@ fn main() {
         println!(
             "core pipeline e2e throughput (SimClock driver): {:.0} frames/sec",
             core_frames as f64 / (core.mean_ms.max(1e-12) / 1e3)
+        );
+    }
+    if let (Some(shared), Some(indep)) = (
+        b.result("multi/shared_extract_8q"),
+        b.result("multi/independent_8q"),
+    ) {
+        println!(
+            "8-query shared pipeline vs 8 independent pipelines: {:.2}x",
+            indep.mean_ms / shared.mean_ms.max(1e-12)
         );
     }
 

@@ -1,7 +1,7 @@
 //! Experiment harness: regenerates **every** table/figure of the paper's
 //! evaluation (DESIGN.md §6 maps each to its module).
 //!
-//! Entry point: [`run_figure`] / [`run_all`], exposed via
+//! Entry point: [`run_figure`] / [`run_and_save`], exposed via
 //! `uals figures --fig <id> [--scale tiny|small|paper]` and by the
 //! `figures` bench target. Results land in `results/<id>.csv` and are
 //! printed as paper-style series.
@@ -33,8 +33,10 @@ pub const ABLATIONS: [&str; 4] = [
     "ablation-queue",
 ];
 /// Workload scenarios unlocked by the clock-abstracted core's
-/// `ArrivalModel` plugins (beyond the paper's fixed-fps streams).
-pub const SCENARIOS: [&str; 2] = ["scenario-bursty", "scenario-churn"];
+/// `ArrivalModel` plugins and the multi-query shared-stream path (beyond
+/// the paper's fixed-fps single-query streams).
+pub const SCENARIOS: [&str; 3] =
+    ["scenario-bursty", "scenario-churn", "scenario-multiquery"];
 
 /// Run one figure harness; returns named tables.
 pub fn run_figure(id: &str, scale: Scale) -> Result<Vec<(String, Table)>> {
@@ -60,6 +62,7 @@ pub fn run_figure(id: &str, scale: Scale) -> Result<Vec<(String, Table)>> {
         "ablation-queue" => ablation::ablation_queue(scale),
         "scenario-bursty" => scenarios::scenario_bursty(scale),
         "scenario-churn" => scenarios::scenario_churn(scale),
+        "scenario-multiquery" => scenarios::scenario_multiquery(scale),
         other => bail!(
             "unknown figure '{other}' (try one of {ALL_FIGURES:?}, 15, \
              {ABLATIONS:?}, or {SCENARIOS:?})"

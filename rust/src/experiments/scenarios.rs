@@ -10,15 +10,23 @@
 //!   steps while the run is in flight, and the shedder must re-derive its
 //!   threshold across each step.
 //!
-//! Run via `uals figures --fig scenario-bursty` / `--fig scenario-churn`.
+//! * **multiquery** — N concurrent queries sharing one extraction pass
+//!   and one backend budget (weighted fair share, work-conserving): how
+//!   per-query QoR degrades as tenants are added at fixed capacity.
+//!
+//! Run via `uals figures --fig scenario-bursty` / `--fig scenario-churn`
+//! / `--fig scenario-multiquery`.
 
 use super::common::Scale;
 use super::figs_sim::run_scenario;
 use crate::color::NamedColor;
 use crate::config::{CostConfig, QueryConfig, ShedderConfig};
+use crate::features::Extractor;
 use crate::pipeline::{
-    backgrounds_of, CameraChurn, IterArrivals, PoissonArrivals, Policy, SimConfig,
+    backgrounds_of, multi_backends, run_multi_sim, CameraChurn, IterArrivals, MultiSimConfig,
+    PoissonArrivals, Policy, SimConfig,
 };
+use crate::shedder::{ArbiterPolicy, QuerySet, QuerySpec};
 use crate::util::csv::Table;
 use crate::utility::{train, Combine, UtilityModel};
 use crate::video::{build_dataset, DatasetConfig, Streamer, Video, VideoConfig};
@@ -142,6 +150,113 @@ pub fn scenario_churn(scale: Scale) -> Vec<(String, Table)> {
     ]
 }
 
+/// The multi-tenant query pool: chromatic singles plus composites, in a
+/// fixed order so `k` queries are always the first `k` of the pool.
+pub fn multiquery_pool() -> Vec<QuerySpec> {
+    use NamedColor::{Blue, Green, Red, Yellow};
+    vec![
+        QuerySpec::new("red", QueryConfig::single(Red)),
+        QuerySpec::new("yellow", QueryConfig::single(Yellow)),
+        QuerySpec::new("blue", QueryConfig::single(Blue)),
+        QuerySpec::new("green", QueryConfig::single(Green)),
+        QuerySpec::new("red-or-yellow", QueryConfig::composite(Red, Yellow, Combine::Or)),
+        QuerySpec::new("blue-or-green", QueryConfig::composite(Blue, Green, Combine::Or)),
+        QuerySpec::new("red-or-blue", QueryConfig::composite(Red, Blue, Combine::Or)),
+        QuerySpec::new("red-and-yellow", QueryConfig::composite(Red, Yellow, Combine::And)),
+    ]
+}
+
+/// Multi-query scenario: per-query QoR vs concurrent query count at
+/// fixed backend capacity. One row per query of each run, plus a summary
+/// row per query count — the scale axis (tenants per node) the
+/// single-query figures cannot show.
+pub fn scenario_multiquery(scale: Scale) -> Vec<(String, Table)> {
+    let frames = scenario_frames(scale);
+    let videos = scenario_videos(4, frames);
+    let fps = crate::video::streamer::aggregate_fps(&videos);
+    let bgs = backgrounds_of(&videos);
+    let train_videos = build_dataset(&DatasetConfig {
+        num_seeds: 2,
+        videos_per_seed: 2,
+        frames_per_video: 300,
+        base_seed: 0x5CE0,
+        target_boost: 2.0,
+    });
+    let train_idx: Vec<usize> = (0..train_videos.len()).collect();
+    let pool = multiquery_pool();
+
+    let mut per_query = Table::new(vec![
+        "query_count",
+        "query_index",
+        "qor",
+        "drop_rate",
+        "viol_rate",
+        "threshold_final",
+    ]);
+    let mut summary = Table::new(vec![
+        "query_count",
+        "qor_mean",
+        "qor_min",
+        "drop_mean",
+        "extractions_per_frame",
+    ]);
+    for k in [1usize, 2, 4, 8] {
+        let specs: Vec<QuerySpec> = pool[..k].to_vec();
+        let set = QuerySet::train(&specs, &train_videos, &train_idx).expect("query set");
+        let cfg = MultiSimConfig {
+            costs: CostConfig::default(),
+            shedder: ShedderConfig::default(),
+            backend_tokens: 1,
+            arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
+            seed: 0x5CE,
+            fps_total: fps,
+        };
+        let extractor = Extractor::native(set.union_model().clone());
+        let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
+        let report = run_multi_sim(
+            Streamer::new(&videos),
+            &bgs,
+            &set,
+            &cfg,
+            &extractor,
+            &mut backends,
+        )
+        .expect("multi sim");
+        let mut qor_min = 1.0f64;
+        let mut drop_sum = 0.0f64;
+        for (qi, q) in report.queries.iter().enumerate() {
+            let qor = q.report.qor.overall();
+            qor_min = qor_min.min(qor);
+            drop_sum += q.report.observed_drop_rate();
+            let th = q
+                .report
+                .control_series
+                .last()
+                .map(|&(_, t, _)| t as f64)
+                .unwrap_or(0.0);
+            per_query.push(&[
+                k as f64,
+                qi as f64,
+                qor,
+                q.report.observed_drop_rate(),
+                q.report.latency.violation_rate(),
+                th,
+            ]);
+        }
+        summary.push(&[
+            k as f64,
+            report.qor_mean(),
+            qor_min,
+            drop_sum / k as f64,
+            report.extractions as f64 / report.frames.max(1) as f64,
+        ]);
+    }
+    vec![
+        ("scenario_multiquery_per_query".into(), per_query),
+        ("scenario_multiquery_summary".into(), summary),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +281,21 @@ mod tests {
         assert!(series.len() >= 3, "need several 5s windows");
         let summary = &out[1].1;
         assert_eq!(summary.len(), 1);
+    }
+
+    #[test]
+    fn multiquery_scenario_shape_and_shared_extraction() {
+        let out = scenario_multiquery(Scale::Tiny);
+        let per_query = &out[0].1;
+        // 1 + 2 + 4 + 8 per-query rows.
+        assert_eq!(per_query.len(), 15);
+        let summary = &out[1].1;
+        assert_eq!(summary.len(), 4);
+        // Every run extracted exactly once per frame (last column == 1).
+        for line in summary.to_csv().lines().skip(1) {
+            let cols: Vec<f64> = line.split(',').map(|c| c.parse().unwrap()).collect();
+            assert_eq!(cols[4], 1.0, "extractions per frame: {}", cols[4]);
+            assert!(cols[1] >= 0.0 && cols[1] <= 1.0, "qor_mean {}", cols[1]);
+        }
     }
 }

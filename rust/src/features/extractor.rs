@@ -23,7 +23,7 @@ use crate::color::ColorLut;
 use crate::runtime::{fill_cached, Engine, Executable, Tensor};
 use crate::utility::model::UtilityModel;
 use anyhow::{bail, Result};
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 
@@ -59,6 +59,10 @@ pub struct Extractor {
     /// When set, [`Self::extract_camera_into`] maintains one incremental
     /// tile engine per camera (native backend only).
     incremental: Option<IncrementalConfig>,
+    /// Full feature extractions performed (one per `extract*` call on any
+    /// path). The multi-query tests pin "exactly one extraction per frame
+    /// regardless of the query count" against this.
+    extract_count: Cell<u64>,
     scratch: RefCell<Scratch>,
 }
 
@@ -74,6 +78,7 @@ impl Extractor {
             m_t,
             lut,
             incremental: None,
+            extract_count: Cell::new(0),
             scratch: RefCell::new(Scratch::default()),
         }
     }
@@ -113,8 +118,16 @@ impl Extractor {
             m_t,
             lut: None,
             incremental: None,
+            extract_count: Cell::new(0),
             scratch: RefCell::new(Scratch::default()),
         })
+    }
+
+    /// Total feature extractions this extractor has performed, across all
+    /// entry points and compute paths. A shared multi-query pipeline must
+    /// advance this exactly once per ingress frame.
+    pub fn extractions(&self) -> u64 {
+        self.extract_count.get()
     }
 
     pub fn model(&self) -> &UtilityModel {
@@ -190,6 +203,7 @@ impl Extractor {
             *engine = IncrementalEngine::new(inc_cfg, width, height);
         }
         engine.extract_into(lut, rgb, background, hints, feats);
+        self.extract_count.set(self.extract_count.get() + 1);
         self.model.utility_into(feats, utils);
         Ok(())
     }
@@ -206,6 +220,7 @@ impl Extractor {
         feats: &mut FrameFeatures,
         utils: &mut UtilityValues,
     ) -> Result<()> {
+        self.extract_count.set(self.extract_count.get() + 1);
         match &self.backend {
             Backend::Native => {
                 let lut = self.lut.as_ref().expect("native backend always has a LUT");
@@ -407,6 +422,29 @@ mod tests {
         assert!(inc.incremental_stats(1).is_some());
         assert!(inc.incremental_stats(7).is_none());
         assert!(plain.incremental_stats(0).is_none());
+    }
+
+    #[test]
+    fn extraction_counter_counts_every_path_once() {
+        let ex = Extractor::native(toy_model());
+        assert_eq!(ex.extractions(), 0);
+        let n = 16 * 16 * 3;
+        let bg = vec![96.0; n];
+        let rgb = bg.clone();
+        let mut feats = FrameFeatures::empty();
+        let mut utils = UtilityValues::empty();
+        ex.extract(&rgb, &bg).unwrap();
+        ex.extract_into(&rgb, &bg, &mut feats, &mut utils).unwrap();
+        ex.extract_camera_into(0, 16, 16, &rgb, &bg, &mut feats, &mut utils)
+            .unwrap();
+        assert_eq!(ex.extractions(), 3);
+        // The incremental path counts identically.
+        let inc = Extractor::native(toy_model()).with_incremental(IncrementalConfig::default());
+        for _ in 0..4 {
+            inc.extract_camera_into(0, 16, 16, &rgb, &bg, &mut feats, &mut utils)
+                .unwrap();
+        }
+        assert_eq!(inc.extractions(), 4);
     }
 
     #[test]

@@ -26,7 +26,7 @@
 //! uses ([`ColorLut::is_foreground`] + [`ColorLut::classify`]), and every
 //! accumulator is an integer count, so add/subtract is exact and the
 //! grouping of pixels into tiles cannot change any total. The final
-//! normalization is the shared [`reference::finalize_features`] tail on
+//! normalization is the shared `reference::finalize_features` tail on
 //! counts ≤ 2²⁴ (exact in f32). The result is therefore **bit-identical**
 //! to [`super::fast::compute_features_fast_into`] and to the reference
 //! oracle on every input — property-pinned by `rust/tests/incremental.rs`.

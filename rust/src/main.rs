@@ -55,7 +55,7 @@ fn print_usage() {
          figures  --all | --fig <id>…   [--scale tiny|small|paper] [--out DIR] [--quiet]\n\
          train    --color red[,yellow] [--combine single|or|and] [--out FILE] [--scale S]\n\
          dataset  [--scale S] [--color red]\n\
-         run      --scenario fig13a|smart-city|bursty|churn [--scale S]\n\
+         run      --scenario fig13a|smart-city|bursty|churn|multiquery [--scale S]\n\
          overhead [--scale S]\n"
     );
 }
@@ -160,6 +160,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         "smart-city" => experiments::run_and_save(&["13b"], scale, &out_dir(args), false),
         "bursty" => experiments::run_and_save(&["scenario-bursty"], scale, &out_dir(args), false),
         "churn" => experiments::run_and_save(&["scenario-churn"], scale, &out_dir(args), false),
-        other => bail!("unknown --scenario '{other}' (fig13a|smart-city|bursty|churn)"),
+        "multiquery" => {
+            experiments::run_and_save(&["scenario-multiquery"], scale, &out_dir(args), false)
+        }
+        other => {
+            bail!("unknown --scenario '{other}' (fig13a|smart-city|bursty|churn|multiquery)")
+        }
     }
 }

@@ -28,7 +28,7 @@ use crate::backend::BackendQuery;
 use crate::config::{CostConfig, QueryConfig, ShedderConfig};
 use crate::features::{Extractor, FrameFeatures, UtilityValues};
 use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts, WindowSeries};
-use crate::shedder::{Entry, LoadShedder, TokenBucket};
+use crate::shedder::{Entry, LoadShedder, QueryMask, TokenBucket};
 use crate::util::rng::Rng;
 use crate::video::{Frame, Video};
 use std::cmp::Reverse;
@@ -83,7 +83,14 @@ pub struct FramePayload {
     /// Capture timestamp (ms, stream clock).
     pub capture_ms: f64,
     /// Ground-truth target ids (QoR accounting only, never the shedder).
+    /// The multi-query path keeps per-query id sets beside its queue
+    /// entries instead and leaves this empty.
     pub target_ids: Vec<u64>,
+    /// Query-admission bitset: the queries this frame is admitted toward.
+    /// The multi-query engine fills it from each query's admission gate
+    /// and backend executors run only admitted queries on the frame;
+    /// single-query drivers pin bit 0 at capture.
+    pub admitted: QueryMask,
     pub rgb: Vec<f32>,
     pub width: usize,
     pub height: usize,
@@ -313,19 +320,21 @@ enum EventKind {
     Completion { seq: u64, capture_ms: f64, exec_ms: f64, dnn: bool },
 }
 
-/// Event heap keyed by (µs time, seq); payloads in a side map.
-pub(crate) struct EventQueue {
+/// Event heap keyed by (µs time, seq); payloads in a side map. Generic
+/// over the event kind so the single- and multi-query engines share the
+/// deterministic near-tie ordering rules.
+pub(crate) struct EventQueue<K> {
     heap: BinaryHeap<Reverse<(u64, u64)>>,
-    events: HashMap<u64, (f64, EventKind)>,
+    events: HashMap<u64, (f64, K)>,
     seq: u64,
 }
 
-impl EventQueue {
-    fn new() -> Self {
+impl<K> EventQueue<K> {
+    pub(crate) fn new() -> Self {
         EventQueue { heap: BinaryHeap::new(), events: HashMap::new(), seq: 0 }
     }
 
-    fn push(&mut self, t: f64, kind: EventKind) {
+    pub(crate) fn push(&mut self, t: f64, kind: K) {
         // µs-resolution ordering key. Rounding (not truncation) keeps
         // near-tie events deterministic across platforms; negative or
         // non-finite timestamps are a scheduling bug upstream.
@@ -339,7 +348,7 @@ impl EventQueue {
         self.events.insert(self.seq, (t, kind));
     }
 
-    fn pop(&mut self) -> Option<(f64, EventKind)> {
+    pub(crate) fn pop(&mut self) -> Option<(f64, K)> {
         let Reverse((_, id)) = self.heap.pop()?;
         Some(self.events.remove(&id).expect("event payload"))
     }
@@ -382,7 +391,7 @@ impl ArrivalFeeder {
     /// capture → camera-side extract → network → LS-ingress event.
     fn feed_next(
         &mut self,
-        eq: &mut EventQueue,
+        eq: &mut EventQueue<EventKind>,
         arrivals: &mut impl ArrivalModel,
         backgrounds: &BackgroundMap<'_>,
         extractor: &Extractor,
@@ -416,6 +425,7 @@ impl ArrivalFeeder {
             camera: f.camera,
             capture_ms: f.ts_ms,
             target_ids: ids,
+            admitted: QueryMask::single(0),
             rgb: f.rgb,
             width: f.width,
             height: f.height,

@@ -6,6 +6,9 @@
 //!   implementation of capture → extract → utility → admission → queue →
 //!   dispatch → backend → completion, parameterized by [`Clock`],
 //!   [`ArrivalModel`] and [`BackendExecutor`], feeding one metrics sink.
+//! * [`multi`] — the multi-query path: N queries over one shared stream,
+//!   one extraction per frame, per-query shedding behind a capacity
+//!   arbiter (see [`crate::shedder::multi`]).
 //! * [`workloads`] — arrival-model plugins: plain interleaved streams,
 //!   bursty Poisson ingress, mid-run camera churn.
 //! * [`sim`] — discrete-event driver ([`SimClock`] + in-process backend);
@@ -16,6 +19,7 @@
 //!   shard per camera across scoped threads, deterministic metric merge.
 
 pub mod core;
+pub mod multi;
 pub mod parallel;
 pub mod realtime;
 pub mod sim;
@@ -26,8 +30,12 @@ pub use self::core::{
     EventClass, FrameDecision, FramePayload, PipelineReport, Policy, SimClock, SimConfig,
     SyncBackend, WallClock,
 };
+pub use multi::{
+    multi_backend_seed, multi_backends, run_multi_pipeline, MultiBackendExecutor,
+    MultiPipelineReport, MultiSimConfig, MultiSyncBackend, QueryReport,
+};
 pub use parallel::{
     default_threads, merge_reports, parallel_map, run_sharded_sim, run_sharded_sim_with,
 };
-pub use sim::{run_sim, run_sim_with, SimReport};
+pub use sim::{run_multi_sim, run_multi_sim_with, run_sim, run_sim_with, SimReport};
 pub use workloads::{CameraChurn, ChurnWindow, IterArrivals, PoissonArrivals};

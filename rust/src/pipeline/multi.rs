@@ -1,0 +1,698 @@
+//! Multi-query path through the streaming core: N concurrent queries over
+//! one shared camera stream, with **one** feature extraction per frame
+//! and per-query shedding behind a
+//! [`CapacityArbiter`](crate::shedder::CapacityArbiter).
+//!
+//! Event loop shape (mirrors [`super::core::run_pipeline`]):
+//!
+//! ```text
+//!   arrival ──► ONE extract (union colors) ──► per-query utility
+//!               (cheap reductions)            reductions
+//!       │
+//!       ▼  shared LS-ingress event
+//!   per-query admission (own threshold/CDF) ──► admission bitset on the
+//!   per-query utility queue + token bucket      shared FramePayload
+//!       │
+//!       ▼  per-query dispatch
+//!   MultiBackendExecutor::submit(query, frame) — only admitted queries
+//!   run; completions feed that query's control loop.
+//! ```
+//!
+//! Every per-query decision rule is copied operation-for-operation from
+//! the single-query engine, so under [`ArbiterPolicy::Standalone`] (every
+//! query sees the full backend budget) and deterministic stage costs the
+//! per-query decision logs **bit-match** N independent single-query runs
+//! — pinned by `rust/tests/multiquery.rs`. Under the weighted fair-share
+//! arbiter the queries instead split the measured backend budget, with
+//! idle share re-offered work-conservingly.
+//!
+//! The physical sharing is the point: frames are rendered once, extracted
+//! once (`Extractor::extractions` counts exactly one per frame regardless
+//! of N), and the payload is reference-counted into each admitting
+//! query's queue instead of cloned.
+
+use crate::backend::{BackendQuery, CostModel, Detector};
+use crate::config::{CostConfig, ShedderConfig};
+use crate::features::{Extractor, FrameFeatures, UtilityValues};
+use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts, WindowSeries};
+use crate::pipeline::core::{
+    ArrivalModel, BackgroundMap, Clock, EventClass, EventQueue, FrameDecision, FramePayload,
+    PipelineReport,
+};
+use crate::shedder::{ArbiterPolicy, Entry, MultiShedder, QueryMask, QuerySet};
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Multi-query lifecycle parameters (the shared-stream analogue of
+/// [`super::SimConfig`]; the per-query `QueryConfig`s live in the
+/// [`QuerySet`]).
+#[derive(Debug, Clone)]
+pub struct MultiSimConfig {
+    pub costs: CostConfig,
+    pub shedder: ShedderConfig,
+    /// Transmission-window tokens **per query** (each query owns its
+    /// bucket; aggregate backend capacity is governed by the arbiter's
+    /// budget split, not by a shared bucket).
+    pub backend_tokens: u32,
+    /// How the measured backend budget splits across queries.
+    pub arbiter: ArbiterPolicy,
+    pub seed: u64,
+    /// Nominal aggregate ingress fps (shared rate-estimator fallback).
+    pub fps_total: f64,
+}
+
+/// One query's slice of a multi-query run: the full single-query metrics
+/// sink under the query's name.
+#[derive(Clone)]
+pub struct QueryReport {
+    pub name: String,
+    pub report: PipelineReport,
+}
+
+/// What a multi-query run reports: per-query [`PipelineReport`]s plus the
+/// shared-side aggregates.
+pub struct MultiPipelineReport {
+    pub queries: Vec<QueryReport>,
+    /// Physical frames ingested (each appears once here, N times across
+    /// the per-query reports).
+    pub frames: u64,
+    /// Feature extractions performed — equals `frames` for the shared
+    /// pipeline (pinned by test), `frames × N` for N independent runs.
+    pub extractions: u64,
+    pub end_ms: f64,
+    /// Camera-side extraction wall time (ms), shared across queries.
+    pub extract_ms_total: f64,
+}
+
+impl MultiPipelineReport {
+    /// Merge the per-query reports into one aggregate view (per-query
+    /// ingress/decision counts sum, so `aggregate().ingress` is
+    /// `frames × N`). QoR merges per target object across queries.
+    pub fn aggregate(&self) -> PipelineReport {
+        let mut agg = crate::pipeline::parallel::merge_reports(
+            self.queries.iter().map(|q| &q.report),
+        )
+        .expect("query set is non-empty");
+        agg.extract_ms_total = self.extract_ms_total;
+        agg
+    }
+
+    /// Mean per-query QoR (the headline of the multi-tenant scenario).
+    pub fn qor_mean(&self) -> f64 {
+        if self.queries.is_empty() {
+            return 1.0;
+        }
+        let sum: f64 = self.queries.iter().map(|q| q.report.qor.overall()).sum();
+        sum / self.queries.len() as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend executor abstraction (multi-query)
+// ---------------------------------------------------------------------------
+
+/// How dispatched (frame, query) pairs run through the backend: the
+/// multi-query analogue of [`super::core::BackendExecutor`]. `submit` is
+/// called only for queries that admitted the frame.
+pub trait MultiBackendExecutor {
+    /// Run query `query` on a dispatched frame; returns the deepest stage
+    /// reached and the execution time (ms) charged to that query's
+    /// backend share. Per-query call order is the cost-sampling contract.
+    fn submit(
+        &mut self,
+        query: usize,
+        payload: &FramePayload,
+        background: &[f32],
+    ) -> anyhow::Result<(Stage, f64)>;
+
+    /// The completion event for query `query`'s `seq`-th dispatch fired.
+    fn on_complete(&mut self, query: usize, seq: u64, dnn: bool) -> anyhow::Result<()>;
+
+    /// Stream ended and every completion has been applied.
+    fn finish(&mut self) -> anyhow::Result<()>;
+}
+
+/// Synchronous in-process executor: one [`BackendQuery`] per query, run
+/// on the driver thread — the discrete-event drivers' backend.
+pub struct MultiSyncBackend<'a> {
+    backends: &'a mut [BackendQuery],
+}
+
+impl<'a> MultiSyncBackend<'a> {
+    pub fn new(backends: &'a mut [BackendQuery]) -> Self {
+        MultiSyncBackend { backends }
+    }
+}
+
+impl MultiBackendExecutor for MultiSyncBackend<'_> {
+    fn submit(
+        &mut self,
+        query: usize,
+        payload: &FramePayload,
+        background: &[f32],
+    ) -> anyhow::Result<(Stage, f64)> {
+        let r = self.backends[query].process(
+            &payload.rgb,
+            background,
+            payload.width,
+            payload.height,
+        )?;
+        Ok((r.last_stage, r.exec_ms))
+    }
+
+    fn on_complete(&mut self, _query: usize, _seq: u64, _dnn: bool) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// Per-query backend cost seed: query 0 keeps the base seed (so a 1-query
+/// multi run matches a single-query run built with `seed` directly);
+/// later queries decorrelate golden-ratio style. Single-query reference
+/// runs must seed their backend with the same derivation to bit-match.
+pub fn multi_backend_seed(base: u64, query: usize) -> u64 {
+    base.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(query as u64))
+}
+
+/// Build the default native backend set for a query set: one
+/// [`BackendQuery`] per query, cost models seeded via
+/// [`multi_backend_seed`].
+pub fn multi_backends(set: &QuerySet, costs: &CostConfig, seed: u64) -> Vec<BackendQuery> {
+    set.queries()
+        .iter()
+        .enumerate()
+        .map(|(qi, q)| {
+            BackendQuery::new(
+                q.config.clone(),
+                Detector::native(12, 25.0),
+                CostModel::new(costs.clone(), multi_backend_seed(seed, qi)),
+                25.0,
+            )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// The multi-query lifecycle engine
+// ---------------------------------------------------------------------------
+
+/// A query's queue entry: the shared frame plus that query's ground-truth
+/// target ids (colors differ per query, so the id sets do too).
+struct MultiItem {
+    frame: Rc<FramePayload>,
+    ids: Vec<u64>,
+}
+
+/// One ingress event: the shared payload, per-query utilities (reduced
+/// from the one extraction) and per-query ground-truth ids.
+struct IngressEvent {
+    frame: FramePayload,
+    utilities: Vec<f32>,
+    ids: Vec<Vec<u64>>,
+}
+
+enum MEvent {
+    Ingress(Box<IngressEvent>),
+    Completion { query: usize, seq: u64, capture_ms: f64, exec_ms: f64, dnn: bool },
+}
+
+/// Per-query metrics sink + per-query virtual clock.
+struct QueryState {
+    qor: QorTracker,
+    latency: LatencyTracker,
+    latency_windows: WindowSeries,
+    stages: StageCounts,
+    control_series: Vec<(f64, f32, f64)>,
+    decisions: Vec<FrameDecision>,
+    ingress: u64,
+    transmitted: u64,
+    shed: u64,
+    /// Max event time this query has seen — identical to the global
+    /// clock of an independent single-query run of this query (its event
+    /// set is the shared ingresses plus its own completions).
+    now: f64,
+    last_control_sample: f64,
+    dispatch_seq: u64,
+}
+
+impl QueryState {
+    fn new(latency_bound_ms: f64) -> Self {
+        QueryState {
+            qor: QorTracker::new(),
+            latency: LatencyTracker::new(latency_bound_ms),
+            latency_windows: WindowSeries::new(5_000.0),
+            stages: StageCounts::new(5_000.0),
+            control_series: Vec::new(),
+            decisions: Vec::new(),
+            ingress: 0,
+            transmitted: 0,
+            shed: 0,
+            now: 0.0,
+            last_control_sample: f64::NEG_INFINITY,
+            dispatch_seq: 0,
+        }
+    }
+
+    /// Account one shed frame (any shed point: admission, queue
+    /// rejection/eviction, retune shrink, transmission-deadline check).
+    fn account_shed(&mut self, e: Entry<MultiItem>, id_pool: &mut Vec<Vec<u64>>) {
+        self.qor.observe(&e.item.ids, false);
+        self.stages.observe(Stage::Shed, e.item.frame.capture_ms);
+        self.decisions.push(FrameDecision {
+            camera: e.item.frame.camera,
+            capture_ms: e.item.frame.capture_ms,
+            kept: false,
+        });
+        self.shed += 1;
+        recycle(id_pool, e.item.ids);
+    }
+}
+
+fn recycle(pool: &mut Vec<Vec<u64>>, mut ids: Vec<u64>) {
+    ids.clear();
+    if pool.len() < 256 {
+        pool.push(ids);
+    }
+}
+
+/// Arrival side: one extraction per frame into reused buffers, then the
+/// per-query utility reductions and ground-truth id sets.
+struct MultiFeeder {
+    feat_buf: FrameFeatures,
+    util_buf: UtilityValues,
+    id_pool: Vec<Vec<u64>>,
+    /// Recycled per-event buffers (per-query utilities / id-set holders),
+    /// so the feed path stays allocation-free after warmup like the
+    /// single-query engine's.
+    util_pool: Vec<Vec<f32>>,
+    ids_pool: Vec<Vec<Vec<u64>>>,
+    extract_ms_total: f64,
+    frames: u64,
+}
+
+impl MultiFeeder {
+    fn new() -> Self {
+        MultiFeeder {
+            feat_buf: FrameFeatures::empty(),
+            util_buf: UtilityValues::empty(),
+            id_pool: Vec::new(),
+            util_pool: Vec::new(),
+            ids_pool: Vec::new(),
+            extract_ms_total: 0.0,
+            frames: 0,
+        }
+    }
+
+    /// Retire a consumed ingress event's per-query buffers. The inner id
+    /// vectors were moved into queue items (and recycle through
+    /// `id_pool`); only the cleared holders return here.
+    fn recycle_event(&mut self, mut utilities: Vec<f32>, mut ids: Vec<Vec<u64>>) {
+        utilities.clear();
+        ids.clear();
+        if self.util_pool.len() < 64 {
+            self.util_pool.push(utilities);
+        }
+        if self.ids_pool.len() < 64 {
+            self.ids_pool.push(ids);
+        }
+    }
+
+    fn feed_next(
+        &mut self,
+        eq: &mut EventQueue<MEvent>,
+        arrivals: &mut impl ArrivalModel,
+        backgrounds: &BackgroundMap<'_>,
+        set: &QuerySet,
+        extractor: &Extractor,
+        cost: &mut CostModel,
+    ) -> anyhow::Result<bool> {
+        let Some(f) = arrivals.next_frame() else {
+            return Ok(false);
+        };
+        let bg = *backgrounds
+            .get(&f.camera)
+            .ok_or_else(|| anyhow::anyhow!("no background for camera {}", f.camera))?;
+        let te = Instant::now();
+        extractor.extract_camera_into(
+            f.camera,
+            f.width,
+            f.height,
+            &f.rgb,
+            bg,
+            &mut self.feat_buf,
+            &mut self.util_buf,
+        )?;
+        self.extract_ms_total += te.elapsed().as_secs_f64() * 1e3;
+        let mut utilities = self.util_pool.pop().unwrap_or_default();
+        set.utilities_into(&self.util_buf, &mut utilities);
+        let mut ids = self.ids_pool.pop().unwrap_or_default();
+        for q in set.queries() {
+            let mut v = self.id_pool.pop().unwrap_or_default();
+            f.target_ids_into(&q.config.colors, q.config.min_blob_px, &mut v);
+            ids.push(v);
+        }
+        let t_ls = f.ts_ms + cost.camera_ms() + cost.net_cam_ls_ms();
+        let frame = FramePayload {
+            camera: f.camera,
+            capture_ms: f.ts_ms,
+            target_ids: Vec::new(),
+            admitted: QueryMask::empty(),
+            rgb: f.rgb,
+            width: f.width,
+            height: f.height,
+        };
+        eq.push(t_ls, MEvent::Ingress(Box::new(IngressEvent { frame, utilities, ids })));
+        self.frames += 1;
+        Ok(true)
+    }
+}
+
+/// Run N queries over one shared stream, under a clock, against a
+/// multi-query backend executor. `extractor` must be built from the
+/// set's union model ([`QuerySet::union_model`]).
+pub fn run_multi_pipeline<A, E, C>(
+    mut arrivals: A,
+    backgrounds: &BackgroundMap<'_>,
+    set: &QuerySet,
+    cfg: &MultiSimConfig,
+    extractor: &Extractor,
+    executor: &mut E,
+    clock: &mut C,
+) -> anyhow::Result<MultiPipelineReport>
+where
+    A: ArrivalModel,
+    E: MultiBackendExecutor,
+    C: Clock,
+{
+    let k = set.len();
+    if k == 0 {
+        anyhow::bail!("query set is empty");
+    }
+    {
+        let union = set.union_model();
+        let model = extractor.model();
+        let matches = model.colors.len() == union.colors.len()
+            && model
+                .colors
+                .iter()
+                .zip(&union.colors)
+                .all(|(a, b)| a.color == b.color);
+        if !matches {
+            anyhow::bail!("extractor model does not match the query set's union colors");
+        }
+    }
+    let extractions_before = extractor.extractions();
+    let mut cost = CostModel::new(cfg.costs.clone(), cfg.seed ^ 0xCA11);
+    let mut shedder: MultiShedder<MultiItem> = MultiShedder::new(
+        &set.latency_bounds(),
+        &set.weights(),
+        &cfg.shedder,
+        &cfg.costs,
+        cfg.backend_tokens,
+        cfg.arbiter,
+        cfg.fps_total,
+    );
+    let mut states: Vec<QueryState> = set
+        .queries()
+        .iter()
+        .map(|q| QueryState::new(q.config.latency_bound_ms))
+        .collect();
+
+    let mut eq: EventQueue<MEvent> = EventQueue::new();
+    let mut feeder = MultiFeeder::new();
+    // Reused drop buffers: retune evictions land per query; the offer
+    // buffer collects each offer's sheds (incl. the offered frame).
+    let mut retune_dropped: Vec<Vec<Entry<MultiItem>>> = (0..k).map(|_| Vec::new()).collect();
+    let mut offer_dropped: Vec<Entry<MultiItem>> = Vec::new();
+
+    feeder.feed_next(&mut eq, &mut arrivals, backgrounds, set, extractor, &mut cost)?;
+
+    while let Some((t, ev)) = eq.pop() {
+        let class = match ev {
+            MEvent::Ingress(..) => EventClass::Ingress,
+            MEvent::Completion { .. } => EventClass::Completion,
+        };
+        clock.advance_to(t, class);
+        match ev {
+            MEvent::Ingress(ie) => {
+                let IngressEvent { mut frame, utilities, mut ids } = *ie;
+                let capture = frame.capture_ms;
+                for st in states.iter_mut() {
+                    st.now = st.now.max(t);
+                    st.ingress += 1;
+                    st.stages.observe(Stage::Ingress, capture);
+                }
+                // Refill the arrival pipeline (before dispatch, like the
+                // single engine, so event-sequence ties order the same).
+                feeder.feed_next(
+                    &mut eq,
+                    &mut arrivals,
+                    backgrounds,
+                    set,
+                    extractor,
+                    &mut cost,
+                )?;
+
+                // Shared pre-step: one rate observation, per-query CDF
+                // updates, periodic retune (evictions per query).
+                for d in retune_dropped.iter_mut() {
+                    d.clear();
+                }
+                shedder.observe_arrival(t, &utilities, &mut retune_dropped);
+                for (q, dr) in retune_dropped.iter_mut().enumerate() {
+                    for e in dr.drain(..) {
+                        states[q].account_shed(e, &mut feeder.id_pool);
+                    }
+                }
+
+                // Admission bitset on the shared payload, then one Rc
+                // clone per admitting query instead of a frame copy.
+                let mut mask = QueryMask::empty();
+                for (q, &u) in utilities.iter().enumerate() {
+                    if shedder.admits(q, u) {
+                        mask.set(q);
+                    }
+                }
+                frame.admitted = mask;
+                let rc = Rc::new(frame);
+                for (q, &u) in utilities.iter().enumerate() {
+                    let item = MultiItem {
+                        frame: rc.clone(),
+                        ids: std::mem::take(&mut ids[q]),
+                    };
+                    offer_dropped.clear();
+                    let _ = shedder.offer(q, u, t, item, &mut offer_dropped);
+                    for e in offer_dropped.drain(..) {
+                        states[q].account_shed(e, &mut feeder.id_pool);
+                    }
+                    if t - states[q].last_control_sample >= 1_000.0 {
+                        states[q].control_series.push((
+                            t,
+                            shedder.threshold(q),
+                            shedder.target_rate(q),
+                        ));
+                        states[q].last_control_sample = t;
+                    }
+                }
+                feeder.recycle_event(utilities, ids);
+            }
+            MEvent::Completion { query: q, seq, capture_ms, exec_ms, dnn } => {
+                states[q].now = states[q].now.max(t);
+                shedder.tokens(q).release();
+                shedder.on_backend_complete(q, exec_ms);
+                executor.on_complete(q, seq, dnn)?;
+                let e2e = clock.measure_e2e(capture_ms, t);
+                states[q].latency.observe(e2e);
+                states[q].latency_windows.observe(capture_ms, e2e);
+            }
+        }
+
+        // Per-query dispatch: start services while that query has tokens
+        // and frames (other queries' events never change this query's
+        // state, so attempts after foreign events are no-ops).
+        for q in 0..k {
+            while shedder.tokens(q).available() > 0 {
+                let Some(entry) = shedder.next_to_send(q) else { break };
+                let now_q = states[q].now;
+                let bound = set.queries()[q].config.latency_bound_ms;
+                let expected_done = now_q + cfg.costs.net_ls_q_ms + shedder.proc_q_ms(q);
+                if expected_done - entry.item.frame.capture_ms > bound {
+                    states[q].account_shed(entry, &mut feeder.id_pool);
+                    continue;
+                }
+                assert!(shedder.tokens(q).try_acquire());
+                let MultiItem { frame: rc, ids } = entry.item;
+                let st = &mut states[q];
+                st.transmitted += 1;
+                st.qor.observe(&ids, true);
+                st.decisions.push(FrameDecision {
+                    camera: rc.camera,
+                    capture_ms: rc.capture_ms,
+                    kept: true,
+                });
+                recycle(&mut feeder.id_pool, ids);
+                let capture_ms = rc.capture_ms;
+                let bg = *backgrounds
+                    .get(&rc.camera)
+                    .expect("background seen at ingress");
+                let (last_stage, exec_ms) = executor.submit(q, &rc, bg)?;
+                drop(rc);
+                let st = &mut states[q];
+                st.stages.observe(Stage::BlobFilter, capture_ms);
+                if last_stage >= Stage::ColorFilter {
+                    st.stages.observe(Stage::ColorFilter, capture_ms);
+                }
+                let dnn = last_stage == Stage::Sink;
+                if dnn {
+                    st.stages.observe(Stage::Dnn, capture_ms);
+                    st.stages.observe(Stage::Sink, capture_ms);
+                }
+                let seq = st.dispatch_seq;
+                st.dispatch_seq += 1;
+                let net = cost.net_ls_q_ms();
+                eq.push(
+                    st.now + net + exec_ms,
+                    MEvent::Completion { query: q, seq, capture_ms, exec_ms, dnn },
+                );
+            }
+        }
+    }
+    executor.finish()?;
+
+    let end_ms = states.iter().fold(0.0f64, |m, s| m.max(s.now));
+    let queries = set
+        .queries()
+        .iter()
+        .zip(states)
+        .map(|(cq, st)| QueryReport {
+            name: cq.name.clone(),
+            report: PipelineReport {
+                qor: st.qor,
+                latency: st.latency,
+                latency_windows: st.latency_windows,
+                stages: st.stages,
+                control_series: st.control_series,
+                decisions: st.decisions,
+                ingress: st.ingress,
+                transmitted: st.transmitted,
+                shed: st.shed,
+                end_ms: st.now,
+                extract_ms_total: 0.0,
+            },
+        })
+        .collect();
+
+    Ok(MultiPipelineReport {
+        queries,
+        frames: feeder.frames,
+        extractions: extractor.extractions() - extractions_before,
+        end_ms,
+        extract_ms_total: feeder.extract_ms_total,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+    use crate::config::QueryConfig;
+    use crate::pipeline::core::SimClock;
+    use crate::pipeline::workloads::IterArrivals;
+    use crate::shedder::QuerySpec;
+    use crate::utility::Combine;
+    use crate::video::{Video, VideoConfig};
+
+    fn cameras(n: usize, frames: usize) -> Vec<Video> {
+        (0..n)
+            .map(|i| {
+                let mut vc = VideoConfig::new(11, 0xA10 + i as u64, i as u32, frames);
+                vc.traffic.vehicle_rate = 0.35;
+                Video::new(vc)
+            })
+            .collect()
+    }
+
+    fn specs() -> Vec<QuerySpec> {
+        vec![
+            QuerySpec::new("red", QueryConfig::single(NamedColor::Red)),
+            QuerySpec::new("yellow", QueryConfig::single(NamedColor::Yellow)),
+            QuerySpec::new(
+                "either",
+                QueryConfig::composite(NamedColor::Red, NamedColor::Yellow, Combine::Or),
+            ),
+        ]
+    }
+
+    #[test]
+    fn multi_run_conserves_frames_per_query_and_extracts_once() {
+        let videos = cameras(2, 120);
+        let idx: Vec<usize> = (0..videos.len()).collect();
+        let set = QuerySet::train(&specs(), &videos, &idx).unwrap();
+        let fps = crate::video::streamer::aggregate_fps(&videos);
+        let cfg = MultiSimConfig {
+            costs: CostConfig::default(),
+            shedder: ShedderConfig::default(),
+            backend_tokens: 1,
+            arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
+            seed: 0xA1,
+            fps_total: fps,
+        };
+        let extractor = Extractor::native(set.union_model().clone());
+        let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
+        let mut executor = MultiSyncBackend::new(&mut backends);
+        let bgs = crate::pipeline::backgrounds_of(&videos);
+        let r = run_multi_pipeline(
+            IterArrivals::new(crate::video::Streamer::new(&videos), fps),
+            &bgs,
+            &set,
+            &cfg,
+            &extractor,
+            &mut executor,
+            &mut SimClock,
+        )
+        .unwrap();
+        assert_eq!(r.frames, 240);
+        assert_eq!(r.extractions, r.frames, "one extraction per frame");
+        assert_eq!(r.queries.len(), 3);
+        for q in &r.queries {
+            assert_eq!(q.report.ingress, r.frames);
+            assert_eq!(q.report.ingress, q.report.transmitted + q.report.shed);
+            assert_eq!(q.report.decisions.len() as u64, q.report.ingress);
+        }
+        let agg = r.aggregate();
+        assert_eq!(agg.ingress, r.frames * 3);
+        let qm = r.qor_mean();
+        assert!((0.0..=1.0).contains(&qm));
+    }
+
+    #[test]
+    fn extractor_union_mismatch_is_rejected() {
+        let videos = cameras(1, 30);
+        let set = QuerySet::train(&specs(), &videos, &[0]).unwrap();
+        let wrong = Extractor::native(set.query_model(0)); // red-only model
+        let cfg = MultiSimConfig {
+            costs: CostConfig::default(),
+            shedder: ShedderConfig::default(),
+            backend_tokens: 1,
+            arbiter: ArbiterPolicy::Standalone,
+            seed: 1,
+            fps_total: 10.0,
+        };
+        let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
+        let mut executor = MultiSyncBackend::new(&mut backends);
+        let bgs = crate::pipeline::backgrounds_of(&videos);
+        let err = run_multi_pipeline(
+            IterArrivals::new(crate::video::Streamer::new(&videos), 10.0),
+            &bgs,
+            &set,
+            &cfg,
+            &wrong,
+            &mut executor,
+            &mut SimClock,
+        );
+        assert!(err.is_err());
+    }
+}

@@ -36,11 +36,16 @@ use crate::pipeline::core::{
     backgrounds_of, run_pipeline, ArrivalModel, BackendExecutor, FrameDecision, FramePayload,
     Policy, SimConfig, WallClock,
 };
+use crate::pipeline::multi::{
+    multi_backend_seed, run_multi_pipeline, MultiBackendExecutor, MultiPipelineReport,
+    MultiSimConfig,
+};
 use crate::pipeline::workloads::IterArrivals;
 use crate::runtime::Engine;
+use crate::shedder::{ArbiterPolicy, QuerySet};
 use crate::utility::UtilityModel;
 use crate::video::Video;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -66,6 +71,9 @@ pub struct RealtimeConfig {
     /// Seed for the stage cost model and policy coin — match the sim
     /// driver's seed to reproduce its exact decision sequence.
     pub seed: u64,
+    /// Backend-budget split across queries for the multi-query entry
+    /// points ([`run_multi_realtime`]); ignored by the single-query runs.
+    pub arbiter: ArbiterPolicy,
 }
 
 impl Default for RealtimeConfig {
@@ -80,6 +88,7 @@ impl Default for RealtimeConfig {
             use_artifacts: true,
             policy: Policy::UtilityControlLoop,
             seed: 0xB_E,
+            arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
         }
     }
 }
@@ -313,4 +322,236 @@ pub fn run_realtime_with<A: ArrivalModel>(
         wall: start.elapsed(),
         extract_ms_mean,
     })
+}
+
+// ---------------------------------------------------------------------------
+// Multi-query wall-clock driver
+// ---------------------------------------------------------------------------
+
+/// A DNN-bound (frame, query) shipped to the shared backend worker.
+struct MultiDnnJob {
+    query: usize,
+    camera: u32,
+    rgb: Vec<f32>,
+    width: usize,
+    height: usize,
+}
+
+/// Threaded [`MultiBackendExecutor`]: per-query filter planners (each
+/// with its own cost model, seeded as [`multi_backend_seed`] prescribes,
+/// so decisions match the discrete-event multi driver) on the driver
+/// thread; one shared worker thread runs the real detector for every
+/// query's DNN-bound frames — only the admitted queries ever reach it.
+pub struct MultiThreadedBackend {
+    planners: Vec<BackendQuery>,
+    work_tx: Option<mpsc::Sender<MultiDnnJob>>,
+    done_rx: mpsc::Receiver<()>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+    /// Next dispatch ordinal per query (mirrors the engine's per-query
+    /// `seq` numbering — both count that query's submits in order).
+    submit_seq: Vec<u64>,
+    /// (query, per-query dispatch seq) → global FIFO job index.
+    dnn_job_of: HashMap<(usize, u64), u64>,
+    jobs_submitted: u64,
+    jobs_done: u64,
+}
+
+impl MultiThreadedBackend {
+    /// Spawn the shared worker. It owns one background clone per camera
+    /// and per-query hue ranges; the detector is built on the worker (the
+    /// PJRT handle is not `Send`).
+    pub fn spawn(videos: &[Video], set: &QuerySet, cfg: &RealtimeConfig) -> Result<Self> {
+        let (work_tx, work_rx) = mpsc::channel::<MultiDnnJob>();
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let bgs: HashMap<u32, Vec<f32>> = videos
+            .iter()
+            .map(|v| (v.camera_id(), v.background().to_vec()))
+            .collect();
+        let ranges_by_query: Vec<Vec<HueRanges>> = set
+            .queries()
+            .iter()
+            .map(|q| q.config.colors.iter().map(|c| c.ranges()).collect())
+            .collect();
+        let use_artifacts = cfg.use_artifacts;
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let detector = if use_artifacts {
+                let engine = Engine::from_default_artifacts()?;
+                Detector::artifact(&engine)?
+            } else {
+                Detector::native(12, 25.0)
+            };
+            while let Ok(job) = work_rx.recv() {
+                let bg = bgs
+                    .get(&job.camera)
+                    .ok_or_else(|| anyhow!("no background for camera {}", job.camera))?;
+                let _ = detector.detect(
+                    &job.rgb,
+                    bg,
+                    job.width,
+                    job.height,
+                    &ranges_by_query[job.query],
+                )?;
+                let _ = done_tx.send(());
+            }
+            Ok(())
+        });
+        let planners = set
+            .queries()
+            .iter()
+            .enumerate()
+            .map(|(qi, q)| {
+                BackendQuery::new(
+                    q.config.clone(),
+                    Detector::native(12, 25.0),
+                    CostModel::new(cfg.costs.clone(), multi_backend_seed(cfg.seed, qi)),
+                    25.0,
+                )
+            })
+            .collect();
+        Ok(MultiThreadedBackend {
+            planners,
+            work_tx: Some(work_tx),
+            done_rx,
+            handle: Some(handle),
+            submit_seq: vec![0; set.len()],
+            dnn_job_of: HashMap::new(),
+            jobs_submitted: 0,
+            jobs_done: 0,
+        })
+    }
+
+    fn worker_failure(&mut self, context: &str) -> anyhow::Error {
+        drop(self.work_tx.take());
+        match self.handle.take().map(|h| h.join()) {
+            Some(Ok(Err(e))) => e.context(context.to_string()),
+            Some(Ok(Ok(()))) => anyhow!("{context}: backend worker exited cleanly"),
+            Some(Err(_)) => anyhow!("{context}: backend worker panicked"),
+            None => anyhow!("{context}: backend worker already gone"),
+        }
+    }
+}
+
+impl MultiBackendExecutor for MultiThreadedBackend {
+    fn submit(
+        &mut self,
+        query: usize,
+        payload: &FramePayload,
+        background: &[f32],
+    ) -> Result<(Stage, f64)> {
+        // Filter stages + cost sampling on the driver thread, in this
+        // query's dispatch order (the multi cost contract); the DNN runs
+        // for real on the worker.
+        let seq = self.submit_seq[query];
+        self.submit_seq[query] += 1;
+        let r = self.planners[query].plan(
+            &payload.rgb,
+            background,
+            payload.width,
+            payload.height,
+        )?;
+        if r.last_stage == Stage::Sink {
+            let job = MultiDnnJob {
+                query,
+                camera: payload.camera,
+                rgb: payload.rgb.clone(),
+                width: payload.width,
+                height: payload.height,
+            };
+            let sent = self.work_tx.as_ref().expect("worker alive").send(job);
+            if sent.is_err() {
+                return Err(self.worker_failure("backend worker hung up"));
+            }
+            self.dnn_job_of.insert((query, seq), self.jobs_submitted);
+            self.jobs_submitted += 1;
+        }
+        Ok((r.last_stage, r.exec_ms))
+    }
+
+    fn on_complete(&mut self, query: usize, seq: u64, dnn: bool) -> Result<()> {
+        if !dnn {
+            return Ok(());
+        }
+        let job = self
+            .dnn_job_of
+            .remove(&(query, seq))
+            .ok_or_else(|| anyhow!("completion for unknown dispatch ({query}, {seq})"))?;
+        while self.jobs_done <= job {
+            if self.done_rx.recv().is_err() {
+                return Err(self.worker_failure("backend worker died"));
+            }
+            self.jobs_done += 1;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        drop(self.work_tx.take());
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow!("backend worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+/// Run N concurrent queries over the shared multi-camera stream through
+/// the wall-clock pipeline (the multi-query analogue of
+/// [`run_realtime`]). Decisions are clock-invariant with
+/// [`crate::pipeline::run_multi_sim`] for the same seed and stream.
+pub fn run_multi_realtime(
+    videos: &[Video],
+    set: &QuerySet,
+    cfg: &RealtimeConfig,
+) -> Result<MultiPipelineReport> {
+    let fps_total = crate::video::streamer::aggregate_fps(videos);
+    run_multi_realtime_with(
+        videos,
+        set,
+        cfg,
+        IterArrivals::new(crate::video::Streamer::new(videos), fps_total),
+    )
+}
+
+/// [`run_multi_realtime`] over any [`ArrivalModel`] workload.
+pub fn run_multi_realtime_with<A: ArrivalModel>(
+    videos: &[Video],
+    set: &QuerySet,
+    cfg: &RealtimeConfig,
+    arrivals: A,
+) -> Result<MultiPipelineReport> {
+    let core_cfg = MultiSimConfig {
+        costs: cfg.costs.clone(),
+        shedder: cfg.shedder.clone(),
+        backend_tokens: cfg.backend_tokens,
+        arbiter: cfg.arbiter,
+        seed: cfg.seed,
+        fps_total: arrivals.fps_total(),
+    };
+    let union = set.union_model();
+    let extractor = if cfg.use_artifacts {
+        if union.colors.len() > 2 {
+            bail!(
+                "artifact extraction supports at most 2 union colors, got {} — \
+                 run with use_artifacts = false",
+                union.colors.len()
+            );
+        }
+        let engine = Engine::from_default_artifacts()?;
+        Extractor::artifact(&engine, union.clone())?
+    } else {
+        Extractor::native(union.clone())
+    };
+
+    let backgrounds = backgrounds_of(videos);
+    let mut executor = MultiThreadedBackend::spawn(videos, set, cfg)?;
+    let mut clock =
+        WallClock::new(cfg.time_scale).with_completion_pacing(cfg.cost_emulation_scale > 0.0);
+    run_multi_pipeline(
+        arrivals,
+        &backgrounds,
+        set,
+        &core_cfg,
+        &extractor,
+        &mut executor,
+        &mut clock,
+    )
 }

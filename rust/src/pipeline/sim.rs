@@ -18,7 +18,11 @@
 use crate::backend::BackendQuery;
 use crate::features::Extractor;
 use crate::pipeline::core::{run_pipeline, ArrivalModel, SimClock, SyncBackend};
+use crate::pipeline::multi::{
+    run_multi_pipeline, MultiPipelineReport, MultiSimConfig, MultiSyncBackend,
+};
 use crate::pipeline::workloads::IterArrivals;
+use crate::shedder::QuerySet;
 use crate::video::Frame;
 
 pub use crate::pipeline::core::{backgrounds_of, BackgroundMap, Policy, SimConfig};
@@ -61,6 +65,53 @@ pub fn run_sim_with<A: ArrivalModel>(
 ) -> anyhow::Result<SimReport> {
     let mut executor = SyncBackend::new(backend);
     run_pipeline(arrivals, backgrounds, cfg, extractor, &mut executor, &mut SimClock)
+}
+
+/// Run N concurrent queries over one shared timestamp-ordered stream
+/// under the discrete-event clock: one feature extraction per frame, one
+/// in-process [`BackendQuery`] per query (see
+/// [`crate::pipeline::multi_backends`] for the default construction).
+/// `extractor` must be built from `set`'s union model.
+pub fn run_multi_sim<I>(
+    frames: I,
+    backgrounds: &BackgroundMap<'_>,
+    set: &QuerySet,
+    cfg: &MultiSimConfig,
+    extractor: &Extractor,
+    backends: &mut [BackendQuery],
+) -> anyhow::Result<MultiPipelineReport>
+where
+    I: IntoIterator<Item = Frame>,
+{
+    run_multi_sim_with(
+        IterArrivals::new(frames.into_iter(), cfg.fps_total),
+        backgrounds,
+        set,
+        cfg,
+        extractor,
+        backends,
+    )
+}
+
+/// [`run_multi_sim`] over any [`ArrivalModel`] workload.
+pub fn run_multi_sim_with<A: ArrivalModel>(
+    arrivals: A,
+    backgrounds: &BackgroundMap<'_>,
+    set: &QuerySet,
+    cfg: &MultiSimConfig,
+    extractor: &Extractor,
+    backends: &mut [BackendQuery],
+) -> anyhow::Result<MultiPipelineReport> {
+    let mut executor = MultiSyncBackend::new(backends);
+    run_multi_pipeline(
+        arrivals,
+        backgrounds,
+        set,
+        cfg,
+        extractor,
+        &mut executor,
+        &mut SimClock,
+    )
 }
 
 #[cfg(test)]

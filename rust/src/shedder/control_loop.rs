@@ -161,6 +161,16 @@ impl ControlLoop {
     /// latency (pessimistic) so load spikes shrink the queue within one
     /// completion rather than an EWMA time-constant.
     pub fn queue_size(&self) -> usize {
+        self.queue_size_with_slowdown(1.0)
+    }
+
+    /// [`Self::queue_size`] under a fractional backend share: a query the
+    /// capacity arbiter grants a φ < 1 slice of the backend drains
+    /// `1/φ`× slower, so Eq. 20 must budget with the *effective* service
+    /// latency `proc × slowdown` (`slowdown = 1` reproduces the
+    /// single-query sizing exactly; non-finite or huge slowdowns clamp to
+    /// the floor of 1 so downstream never starves).
+    pub fn queue_size_with_slowdown(&self, slowdown: f64) -> usize {
         let overhead =
             self.net_cam_ls.get_or(0.0) + self.net_ls_q.get_or(0.0) + self.proc_cam;
         let budget = self.latency_bound_ms - overhead;
@@ -176,6 +186,7 @@ impl ControlLoop {
         } else {
             self.proc_q_ms()
         };
+        let proc = proc * slowdown.max(1.0);
         let n_plus_1 = (budget / proc).floor() as i64;
         (n_plus_1 - 1).clamp(1, self.queue_cap_max as i64) as usize
     }
@@ -256,6 +267,22 @@ mod tests {
         }
         // overhead = 5 + 5 + 30 = 40 → budget 960 → N+1 = 9 → N = 8.
         assert_eq!(cl.queue_size(), 8);
+    }
+
+    #[test]
+    fn queue_size_slowdown_shrinks_the_queue() {
+        let mut cl = mk();
+        for _ in 0..200 {
+            cl.observe_backend(100.0);
+        }
+        // Slowdown 1 is exactly the plain sizing; a half-share backend
+        // (slowdown 2) halves the effective budget: 960/200 → N+1=4 → 3.
+        assert_eq!(cl.queue_size_with_slowdown(1.0), cl.queue_size());
+        assert_eq!(cl.queue_size_with_slowdown(2.0), 3);
+        // Sub-1 slowdowns clamp to 1 (a share can't speed the backend up).
+        assert_eq!(cl.queue_size_with_slowdown(0.5), cl.queue_size());
+        // Degenerate share → floor of 1, never starving downstream.
+        assert_eq!(cl.queue_size_with_slowdown(f64::INFINITY), 1);
     }
 
     #[test]

@@ -5,14 +5,23 @@
 //! (Eq. 16–19); survivors enter the bounded [`UtilityQueue`] whose size the
 //! [`ControlLoop`] tunes per Eq. 20; frames leave highest-utility-first,
 //! paced by the backend's [`TokenBucket`].
+//!
+//! [`multi`] scales this to N concurrent queries over the same streams:
+//! per-query shedder state behind a shared [`CapacityArbiter`], with one
+//! feature extraction and one [`RateEstimator`] serving every query.
 
 pub mod admission;
 pub mod control_loop;
+pub mod multi;
 pub mod queue;
 pub mod tokens;
 
 pub use admission::{supported_throughput, target_drop_rate, AdmissionControl};
 pub use control_loop::{ControlLoop, RateEstimator};
+pub use multi::{
+    ArbiterPolicy, CapacityArbiter, CompiledQuery, MultiShedder, QueryMask, QuerySet, QueryShedder,
+    QuerySpec,
+};
 pub use queue::{Entry, Offer, UtilityQueue};
 pub use tokens::TokenBucket;
 

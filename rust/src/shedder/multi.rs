@@ -1,0 +1,869 @@
+//! Multi-query shared-stream shedding: N concurrent queries over the same
+//! camera streams, sharing **one** feature-extraction pass per frame and
+//! **one** backend capacity budget.
+//!
+//! The paper scores each frame "toward the query at hand"; a production
+//! edge node serves many applications at once (cf. FilterForward's shared
+//! per-frame base computation and the timely-edge-analytics capacity
+//! arbitration line of work). This module supplies the shedder-layer
+//! pieces:
+//!
+//! * [`QuerySet`] — N queries compiled against one *union* utility model:
+//!   hue-mask / bin histograms are extracted once per frame for the union
+//!   of all query colors, and each query's utility is a cheap reduction
+//!   ([`Combine`]) over its colors' shared per-color utilities.
+//! * [`CapacityArbiter`] — splits the measured backend budget (one unit of
+//!   backend time per wall second) across queries: weighted fair share
+//!   with work-conserving reallocation of idle share (water-filling), or
+//!   the standalone configuration where every query sees the full budget
+//!   (the verification mode: each query then behaves exactly like an
+//!   independent single-query pipeline).
+//! * [`MultiShedder`] — per-query Load-Shedder state (own utility
+//!   threshold + CDF window, own [`UtilityQueue`], own [`TokenBucket`],
+//!   own backend-latency EWMA) behind the shared arbiter, with **one**
+//!   shared [`RateEstimator`] driving every query's control loop.
+//!
+//! The pipeline layer (`pipeline::multi`) runs the event loop; the
+//! per-query decision semantics here mirror [`super::LoadShedder`]
+//! operation-for-operation so that, under [`ArbiterPolicy::Standalone`]
+//! and deterministic costs, every query's decision log bit-matches an
+//! independent single-query run (pinned by `rust/tests/multiquery.rs`).
+
+use super::admission::{target_drop_rate, AdmissionControl};
+use super::control_loop::{ControlLoop, RateEstimator};
+use super::queue::{Entry, Offer, UtilityQueue};
+use super::tokens::TokenBucket;
+use super::Decision;
+use crate::color::NamedColor;
+use crate::config::{CostConfig, QueryConfig, ShedderConfig};
+use crate::features::UtilityValues;
+use crate::metrics::DropCounter;
+use crate::utility::{train, Combine, ColorModel, UtilityModel};
+use crate::video::Video;
+use anyhow::{bail, Result};
+
+/// Bitset of query indices (admission bitset on
+/// [`crate::pipeline::FramePayload`]): bit `q` set = query `q`'s admission
+/// control admitted the frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QueryMask(pub u64);
+
+impl QueryMask {
+    /// Hard cap on concurrent queries per node (one bit each).
+    pub const MAX_QUERIES: usize = 64;
+
+    pub fn empty() -> Self {
+        QueryMask(0)
+    }
+
+    /// A mask with only query `q` set.
+    pub fn single(q: usize) -> Self {
+        let mut m = QueryMask(0);
+        m.set(q);
+        m
+    }
+
+    pub fn set(&mut self, q: usize) {
+        assert!(q < Self::MAX_QUERIES, "query index {q} out of mask range");
+        self.0 |= 1 << q;
+    }
+
+    pub fn contains(&self, q: usize) -> bool {
+        q < Self::MAX_QUERIES && self.0 & (1 << q) != 0
+    }
+
+    pub fn count(&self) -> u32 {
+        self.0.count_ones()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0 == 0
+    }
+}
+
+/// One application query as the developer states it: target colors +
+/// latency bound ([`QueryConfig`]) plus its arbiter weight.
+#[derive(Debug, Clone)]
+pub struct QuerySpec {
+    pub name: String,
+    pub query: QueryConfig,
+    /// Relative capacity weight under the fair-share arbiter (> 0).
+    pub weight: f64,
+}
+
+impl QuerySpec {
+    pub fn new(name: impl Into<String>, query: QueryConfig) -> Self {
+        QuerySpec { name: name.into(), query, weight: 1.0 }
+    }
+
+    pub fn with_weight(mut self, weight: f64) -> Self {
+        assert!(weight > 0.0, "arbiter weight must be positive");
+        self.weight = weight;
+        self
+    }
+}
+
+/// A query compiled against the union model: its colors resolved to
+/// indices into the union's per-color utilities.
+#[derive(Debug, Clone)]
+pub struct CompiledQuery {
+    pub name: String,
+    pub config: QueryConfig,
+    pub weight: f64,
+    /// Indices into the union model's color list, in the query's own
+    /// color order (preserves the [`Combine`] fold order of an
+    /// independent single-query model).
+    pub color_idx: Vec<usize>,
+}
+
+/// N queries sharing one feature extraction: the union utility model plus
+/// the per-query reductions over it.
+#[derive(Debug, Clone)]
+pub struct QuerySet {
+    union: UtilityModel,
+    queries: Vec<CompiledQuery>,
+}
+
+impl QuerySet {
+    /// Distinct colors across the specs, first-seen order.
+    pub fn union_colors(specs: &[QuerySpec]) -> Vec<NamedColor> {
+        let mut out: Vec<NamedColor> = Vec::new();
+        for s in specs {
+            for &c in &s.query.colors {
+                if !out.contains(&c) {
+                    out.push(c);
+                }
+            }
+        }
+        out
+    }
+
+    /// Compile the specs against a trained union model. The model must
+    /// carry every color any spec references.
+    pub fn from_model(union: UtilityModel, specs: &[QuerySpec]) -> Result<QuerySet> {
+        if specs.is_empty() {
+            bail!("query set needs at least one query");
+        }
+        if specs.len() > QueryMask::MAX_QUERIES {
+            bail!(
+                "at most {} concurrent queries, got {}",
+                QueryMask::MAX_QUERIES,
+                specs.len()
+            );
+        }
+        let mut queries = Vec::with_capacity(specs.len());
+        for s in specs {
+            let mut color_idx = Vec::with_capacity(s.query.colors.len());
+            for &c in &s.query.colors {
+                let idx = union
+                    .colors
+                    .iter()
+                    .position(|m| m.color == c)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("union model lacks color '{}' (query '{}')", c.name(), s.name)
+                    })?;
+                color_idx.push(idx);
+            }
+            queries.push(CompiledQuery {
+                name: s.name.clone(),
+                config: s.query.clone(),
+                weight: s.weight,
+                color_idx,
+            });
+        }
+        Ok(QuerySet { union, queries })
+    }
+
+    /// Train the union model for the specs on a training set and compile.
+    /// Per-color training (Eq. 12–14) is independent per color, so the
+    /// union's [`ColorModel`]s are identical to what each query would get
+    /// from its own training run on the same videos.
+    pub fn train(specs: &[QuerySpec], videos: &[Video], train_idx: &[usize]) -> Result<QuerySet> {
+        let colors = Self::union_colors(specs);
+        if colors.is_empty() {
+            bail!("query set references no colors");
+        }
+        let combine = if colors.len() == 1 { Combine::Single } else { Combine::Or };
+        let union = train(videos, train_idx, &colors, combine);
+        Self::from_model(union, specs)
+    }
+
+    /// The shared extraction model (build the one [`crate::features::Extractor`]
+    /// from this).
+    pub fn union_model(&self) -> &UtilityModel {
+        &self.union
+    }
+
+    pub fn queries(&self) -> &[CompiledQuery] {
+        &self.queries
+    }
+
+    pub fn len(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+
+    pub fn weights(&self) -> Vec<f64> {
+        self.queries.iter().map(|q| q.weight).collect()
+    }
+
+    pub fn latency_bounds(&self) -> Vec<f64> {
+        self.queries.iter().map(|q| q.config.latency_bound_ms).collect()
+    }
+
+    /// The standalone single-query model of query `q` (its colors cloned
+    /// out of the union): what an independent pipeline for this query
+    /// would run — used by the bit-match tests and the independent-vs-
+    /// shared benchmark.
+    pub fn query_model(&self, q: usize) -> UtilityModel {
+        let cq = &self.queries[q];
+        let colors: Vec<ColorModel> = cq
+            .color_idx
+            .iter()
+            .map(|&i| self.union.colors[i].clone())
+            .collect();
+        UtilityModel {
+            colors,
+            combine: cq.config.combine,
+            fg_threshold: self.union.fg_threshold,
+        }
+    }
+
+    /// Per-query combined utilities from the union model's per-color
+    /// utilities — the cheap reduction that replaces N full extractions.
+    /// Folds exactly as [`UtilityModel::utility_into`] would for the
+    /// query's own model, so the values are bit-identical to independent
+    /// extraction.
+    pub fn utilities_into(&self, union_utils: &UtilityValues, out: &mut Vec<f32>) {
+        debug_assert_eq!(union_utils.per_color.len(), self.union.colors.len());
+        out.clear();
+        for q in &self.queries {
+            let pick = |i: &usize| union_utils.per_color[*i];
+            let u = match q.config.combine {
+                Combine::Single => union_utils.per_color[q.color_idx[0]],
+                Combine::Or => q.color_idx.iter().map(pick).fold(f32::MIN, f32::max),
+                Combine::And => q.color_idx.iter().map(pick).fold(f32::MAX, f32::min),
+            };
+            out.push(u);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Capacity arbitration
+// ---------------------------------------------------------------------------
+
+/// How the shared backend budget is split across queries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArbiterPolicy {
+    /// Every query sees the full backend budget, exactly as if it ran its
+    /// own single-query pipeline (Eq. 19 per query). The verification
+    /// configuration: per-query decisions bit-match independent runs.
+    Standalone,
+    /// Weighted fair share of backend time. With `work_conserving`, share
+    /// a query does not demand is re-offered to backlogged queries in
+    /// weight proportion (water-filling); without it, idle share is
+    /// wasted (strict reservation).
+    WeightedFair { work_conserving: bool },
+}
+
+/// Splits one unit of backend time per second across queries.
+///
+/// Demands and allocations are *time fractions*: query `q` demanding
+/// `need_q = ingress_fps × proc_q / 1000` wants `need_q` seconds of
+/// backend time per second. The allocation `φ_q` caps the fraction of its
+/// demand the query may transmit; its Eq. 19 target drop rate becomes
+/// `1 − φ_q / need_q`.
+#[derive(Debug, Clone)]
+pub struct CapacityArbiter {
+    policy: ArbiterPolicy,
+    weights: Vec<f64>,
+}
+
+impl CapacityArbiter {
+    pub fn new(policy: ArbiterPolicy, weights: Vec<f64>) -> Self {
+        assert!(!weights.is_empty(), "arbiter needs at least one query");
+        assert!(
+            weights.iter().all(|&w| w > 0.0),
+            "arbiter weights must be positive"
+        );
+        CapacityArbiter { policy, weights }
+    }
+
+    pub fn policy(&self) -> ArbiterPolicy {
+        self.policy
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Allocate time fractions for the given demands; `phi` is cleared
+    /// and filled with one allocation per query (`Σ φ ≤ 1`).
+    pub fn allocate_into(&self, needs: &[f64], phi: &mut Vec<f64>) {
+        assert_eq!(needs.len(), self.weights.len(), "one demand per query");
+        phi.clear();
+        match self.policy {
+            ArbiterPolicy::Standalone => {
+                // Full budget per query (over-commitment is the point:
+                // this mode reproduces N independent pipelines).
+                phi.extend(needs.iter().map(|n| n.clamp(0.0, 1.0)));
+            }
+            ArbiterPolicy::WeightedFair { work_conserving } => {
+                let wsum: f64 = self.weights.iter().sum();
+                if !work_conserving {
+                    phi.extend(
+                        needs
+                            .iter()
+                            .zip(&self.weights)
+                            .map(|(&n, &w)| n.clamp(0.0, w / wsum)),
+                    );
+                    return;
+                }
+                // Work-conserving water-fill: repeatedly offer the
+                // remaining capacity to unsatisfied queries in weight
+                // proportion; queries whose residual demand fits inside
+                // their share are satisfied exactly and removed. Each
+                // round satisfies at least one query or exhausts the
+                // budget, so this terminates in ≤ N rounds.
+                phi.resize(needs.len(), 0.0);
+                let mut remaining = 1.0f64;
+                let mut unsat: Vec<usize> =
+                    (0..needs.len()).filter(|&i| needs[i] > 0.0).collect();
+                while remaining > 1e-12 && !unsat.is_empty() {
+                    let ws: f64 = unsat.iter().map(|&i| self.weights[i]).sum();
+                    let per_w = remaining / ws;
+                    let mut satisfied = Vec::new();
+                    for &i in &unsat {
+                        let gap = needs[i] - phi[i];
+                        if gap <= per_w * self.weights[i] + 1e-12 {
+                            satisfied.push(i);
+                        }
+                    }
+                    if satisfied.is_empty() {
+                        // Nobody saturates: split everything by weight.
+                        for &i in &unsat {
+                            phi[i] += per_w * self.weights[i];
+                        }
+                        break;
+                    }
+                    for &i in &satisfied {
+                        remaining -= needs[i] - phi[i];
+                        phi[i] = needs[i];
+                    }
+                    unsat.retain(|i| !satisfied.contains(i));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The multi-query shedder
+// ---------------------------------------------------------------------------
+
+/// One query's Load-Shedder state: own threshold + CDF window, own
+/// bounded utility queue, own token bucket, own backend-latency EWMA.
+pub struct QueryShedder<T> {
+    pub admission: AdmissionControl,
+    pub queue: UtilityQueue<T>,
+    pub control: ControlLoop,
+    pub tokens: TokenBucket,
+    drops: DropCounter,
+    evictions: u64,
+}
+
+impl<T> QueryShedder<T> {
+    pub fn observed_drop_rate(&self) -> f64 {
+        self.drops.drop_rate()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+/// N per-query shedders behind one [`CapacityArbiter`], driven by one
+/// shared [`RateEstimator`]. Generic over the queued item `T` like
+/// [`super::LoadShedder`].
+pub struct MultiShedder<T> {
+    queries: Vec<QueryShedder<T>>,
+    arbiter: CapacityArbiter,
+    /// The one shared ingress-rate estimator: every query sees the same
+    /// arrival stream, so one measurement drives all N control loops.
+    rate: RateEstimator,
+    update_every: usize,
+    ingress_since_update: usize,
+    default_fps: f64,
+    /// Reused retune scratch (per-query time demands / allocations).
+    needs_buf: Vec<f64>,
+    phi_buf: Vec<f64>,
+}
+
+impl<T> MultiShedder<T> {
+    /// `latency_bounds[q]` is query q's LB (ms); `weights[q]` its arbiter
+    /// weight; `tokens_per_query` the per-query transmission window (the
+    /// single-pipeline `backend_tokens`).
+    pub fn new(
+        latency_bounds: &[f64],
+        weights: &[f64],
+        cfg: &ShedderConfig,
+        costs: &CostConfig,
+        tokens_per_query: u32,
+        policy: ArbiterPolicy,
+        default_fps: f64,
+    ) -> Self {
+        assert_eq!(latency_bounds.len(), weights.len());
+        assert!(!latency_bounds.is_empty(), "need at least one query");
+        let queries = latency_bounds
+            .iter()
+            .map(|&lb| QueryShedder {
+                admission: AdmissionControl::new(cfg.history),
+                queue: UtilityQueue::new(cfg.queue_cap_max),
+                control: ControlLoop::new(cfg, costs, lb),
+                tokens: TokenBucket::new(tokens_per_query.max(1)),
+                drops: DropCounter::default(),
+                evictions: 0,
+            })
+            .collect();
+        MultiShedder {
+            queries,
+            arbiter: CapacityArbiter::new(policy, weights.to_vec()),
+            rate: RateEstimator::new(3_000.0).with_nominal(default_fps),
+            update_every: cfg.update_every,
+            ingress_since_update: 0,
+            default_fps,
+            needs_buf: Vec::new(),
+            phi_buf: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+
+    pub fn arbiter(&self) -> &CapacityArbiter {
+        &self.arbiter
+    }
+
+    /// Measured shared ingress rate (nominal fallback before warmup).
+    pub fn fps(&self) -> f64 {
+        let f = self.rate.fps();
+        if f > 0.0 {
+            f
+        } else {
+            self.default_fps
+        }
+    }
+
+    /// Shared per-arrival pre-step: one rate observation, every query's
+    /// CDF updated with its own utility, and the periodic retune
+    /// (threshold + queue size per query from the arbitrated budget).
+    /// Queue-shrink evictions land in `dropped[q]`. Mirrors the first
+    /// half of [`super::LoadShedder::on_ingress_keyed_into`] per query.
+    pub fn observe_arrival(
+        &mut self,
+        now_ms: f64,
+        utilities: &[f32],
+        dropped: &mut [Vec<Entry<T>>],
+    ) -> bool {
+        assert_eq!(utilities.len(), self.queries.len());
+        assert_eq!(dropped.len(), self.queries.len());
+        self.rate.observe(now_ms);
+        for (q, &u) in self.queries.iter_mut().zip(utilities) {
+            q.admission.observe(u);
+        }
+        self.ingress_since_update += 1;
+        if self.ingress_since_update >= self.update_every {
+            self.retune_into(dropped);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Re-derive every query's threshold and queue capacity from the
+    /// shared rate measurement and the arbitrated capacity split.
+    pub fn retune_into(&mut self, dropped: &mut [Vec<Entry<T>>]) {
+        self.ingress_since_update = 0;
+        let fps = self.fps();
+        match self.arbiter.policy() {
+            ArbiterPolicy::Standalone => {
+                // Exactly the single-pipeline Eq. 19 derivation per query
+                // (same expression, same rounding — the bit-match mode).
+                for (q, dr) in self.queries.iter_mut().zip(dropped.iter_mut()) {
+                    let rate = target_drop_rate(q.control.proc_q_ms(), fps);
+                    q.admission.set_target_rate(rate);
+                    let evicted = q.queue.resize(q.control.queue_size());
+                    q.evictions += evicted.len() as u64;
+                    dr.extend(evicted);
+                }
+            }
+            ArbiterPolicy::WeightedFair { .. } => {
+                // Time demands: need_q = fps × proc_q (fraction of one
+                // backend-second the query wants per second).
+                self.needs_buf.clear();
+                self.needs_buf.extend(
+                    self.queries
+                        .iter()
+                        .map(|q| fps * q.control.proc_q_ms() / 1000.0),
+                );
+                self.arbiter.allocate_into(&self.needs_buf, &mut self.phi_buf);
+                for (i, (q, dr)) in
+                    self.queries.iter_mut().zip(dropped.iter_mut()).enumerate()
+                {
+                    let need = self.needs_buf[i];
+                    let phi = self.phi_buf[i];
+                    let rate = if need <= 0.0 || phi + 1e-12 >= need {
+                        0.0
+                    } else {
+                        (1.0 - phi / need).clamp(0.0, 1.0)
+                    };
+                    q.admission.set_target_rate(rate);
+                    // Eq. 20 with the *effective* service latency: a query
+                    // holding a φ share of the backend sees its frames
+                    // drain 1/φ× slower, so its queue must shrink
+                    // accordingly (satisfied demand ⇒ slowdown 1).
+                    let slowdown = if phi > 0.0 { (need / phi).max(1.0) } else { f64::INFINITY };
+                    let evicted = q.queue.resize(q.control.queue_size_with_slowdown(slowdown));
+                    q.evictions += evicted.len() as u64;
+                    dr.extend(evicted);
+                }
+            }
+        }
+    }
+
+    /// Read-only admission predicate (the payload bitset): would query
+    /// `q` admit a frame of this utility right now? Identical to the
+    /// check [`Self::offer`] applies.
+    pub fn admits(&self, q: usize, utility: f32) -> bool {
+        self.queries[q].admission.admit(utility)
+    }
+
+    /// Offer the frame to query `q` (after [`Self::observe_arrival`]).
+    /// Every frame this call sheds — a displaced queue victim or the
+    /// offered frame itself (appended last) — lands in `dropped`, like
+    /// [`super::LoadShedder::on_ingress_keyed_into`].
+    pub fn offer(
+        &mut self,
+        q: usize,
+        utility: f32,
+        now_ms: f64,
+        item: T,
+        dropped: &mut Vec<Entry<T>>,
+    ) -> Decision {
+        let qs = &mut self.queries[q];
+        if !qs.admission.admit(utility) {
+            qs.drops.observe(true);
+            dropped.push(Entry { utility, arrival_ms: now_ms, item });
+            return Decision::ShedAdmission;
+        }
+        match qs.queue.offer(utility, now_ms, item) {
+            Offer::Accepted { evicted } => {
+                qs.drops.observe(false);
+                if let Some(e) = evicted {
+                    qs.evictions += 1;
+                    dropped.push(e);
+                }
+                Decision::Enqueued
+            }
+            Offer::Rejected(entry) => {
+                qs.drops.observe(true);
+                dropped.push(entry);
+                Decision::ShedQueueReject
+            }
+        }
+    }
+
+    /// Query `q`'s backend finished a frame after `proc_ms`.
+    pub fn on_backend_complete(&mut self, q: usize, proc_ms: f64) {
+        self.queries[q].control.observe_backend(proc_ms);
+    }
+
+    /// Next frame query `q` should transmit (highest utility), if any.
+    pub fn next_to_send(&mut self, q: usize) -> Option<Entry<T>> {
+        self.queries[q].queue.pop_best()
+    }
+
+    pub fn tokens(&mut self, q: usize) -> &mut TokenBucket {
+        &mut self.queries[q].tokens
+    }
+
+    pub fn query(&self, q: usize) -> &QueryShedder<T> {
+        &self.queries[q]
+    }
+
+    pub fn threshold(&self, q: usize) -> f32 {
+        self.queries[q].admission.threshold()
+    }
+
+    pub fn target_rate(&self, q: usize) -> f64 {
+        self.queries[q].admission.target_rate()
+    }
+
+    pub fn proc_q_ms(&self, q: usize) -> f64 {
+        self.queries[q].control.proc_q_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::UtilityValues;
+
+    #[test]
+    fn query_mask_ops() {
+        let mut m = QueryMask::empty();
+        assert!(m.is_empty());
+        m.set(0);
+        m.set(7);
+        assert!(m.contains(0) && m.contains(7) && !m.contains(3));
+        assert_eq!(m.count(), 2);
+        assert_eq!(QueryMask::single(3).0, 0b1000);
+        assert!(!QueryMask::single(5).contains(64));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of mask range")]
+    fn query_mask_rejects_out_of_range() {
+        let mut m = QueryMask::empty();
+        m.set(64);
+    }
+
+    fn specs_red_yellow() -> Vec<QuerySpec> {
+        use crate::color::NamedColor::{Red, Yellow};
+        vec![
+            QuerySpec::new("amber", QueryConfig::single(Red)),
+            QuerySpec::new("taxi", QueryConfig::single(Yellow)).with_weight(2.0),
+            QuerySpec::new(
+                "either",
+                QueryConfig::composite(Red, Yellow, Combine::Or),
+            ),
+        ]
+    }
+
+    #[test]
+    fn union_colors_dedup_preserves_order() {
+        let u = QuerySet::union_colors(&specs_red_yellow());
+        use crate::color::NamedColor::{Red, Yellow};
+        assert_eq!(u, vec![Red, Yellow]);
+    }
+
+    fn toy_union() -> UtilityModel {
+        use crate::color::NamedColor::{Red, Yellow};
+        use crate::features::HIST;
+        let mk = |c: NamedColor, hot: usize| {
+            let mut m_pos = [0.0; HIST];
+            m_pos[hot] = 0.5;
+            ColorModel { color: c, ranges: c.ranges(), m_pos, m_neg: [0.0; HIST], norm: 0.5 }
+        };
+        UtilityModel {
+            colors: vec![mk(Red, 62), mk(Yellow, 61)],
+            combine: Combine::Or,
+            fg_threshold: 25.0,
+        }
+    }
+
+    #[test]
+    fn compile_maps_colors_and_reductions_match_per_query_models() {
+        let set = QuerySet::from_model(toy_union(), &specs_red_yellow()).unwrap();
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.queries()[0].color_idx, vec![0]);
+        assert_eq!(set.queries()[1].color_idx, vec![1]);
+        assert_eq!(set.queries()[2].color_idx, vec![0, 1]);
+        assert_eq!(set.queries()[1].weight, 2.0);
+
+        // Reductions equal the standalone models' own composition.
+        let utils = UtilityValues { per_color: vec![0.8, 0.3], combined: 0.8 };
+        let mut per_query = Vec::new();
+        set.utilities_into(&utils, &mut per_query);
+        assert_eq!(per_query, vec![0.8, 0.3, 0.8]);
+        for q in 0..set.len() {
+            let model = set.query_model(q);
+            assert_eq!(model.colors.len(), set.queries()[q].color_idx.len());
+            assert_eq!(model.combine, set.queries()[q].config.combine);
+        }
+    }
+
+    #[test]
+    fn compile_rejects_missing_color() {
+        use crate::color::NamedColor::Blue;
+        let specs = vec![QuerySpec::new("blue", QueryConfig::single(Blue))];
+        assert!(QuerySet::from_model(toy_union(), &specs).is_err());
+        assert!(QuerySet::from_model(toy_union(), &[]).is_err());
+    }
+
+    fn fair(weights: &[f64], work_conserving: bool) -> CapacityArbiter {
+        CapacityArbiter::new(
+            ArbiterPolicy::WeightedFair { work_conserving },
+            weights.to_vec(),
+        )
+    }
+
+    fn alloc(a: &CapacityArbiter, needs: &[f64]) -> Vec<f64> {
+        let mut phi = Vec::new();
+        a.allocate_into(needs, &mut phi);
+        phi
+    }
+
+    #[test]
+    fn standalone_gives_every_query_the_full_budget() {
+        let a = CapacityArbiter::new(ArbiterPolicy::Standalone, vec![1.0, 1.0]);
+        assert_eq!(alloc(&a, &[0.4, 2.5]), vec![0.4, 1.0]);
+    }
+
+    #[test]
+    fn fair_share_underload_satisfies_everyone() {
+        let phi = alloc(&fair(&[1.0, 1.0, 1.0], true), &[0.2, 0.3, 0.1]);
+        assert_eq!(phi, vec![0.2, 0.3, 0.1]);
+    }
+
+    #[test]
+    fn fair_share_overload_splits_by_weight() {
+        let phi = alloc(&fair(&[3.0, 1.0], true), &[9.0, 9.0]);
+        assert!((phi[0] - 0.75).abs() < 1e-9 && (phi[1] - 0.25).abs() < 1e-9);
+        let total: f64 = phi.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn work_conserving_reallocates_idle_share() {
+        // Query 0 demands little; its slack must flow to query 1.
+        let wc = alloc(&fair(&[1.0, 1.0], true), &[0.2, 5.0]);
+        assert!((wc[0] - 0.2).abs() < 1e-9);
+        assert!((wc[1] - 0.8).abs() < 1e-9, "slack not reallocated: {wc:?}");
+        // Strict reservation wastes it.
+        let strict = alloc(&fair(&[1.0, 1.0], false), &[0.2, 5.0]);
+        assert!((strict[1] - 0.5).abs() < 1e-9, "reservation leaked: {strict:?}");
+    }
+
+    #[test]
+    fn water_fill_cascades_through_multiple_levels() {
+        // Weights equal; demands 0.1, 0.25, 10 → first two satisfied, the
+        // third takes the rest.
+        let phi = alloc(&fair(&[1.0, 1.0, 1.0], true), &[0.1, 0.25, 10.0]);
+        assert!((phi[0] - 0.1).abs() < 1e-9);
+        assert!((phi[1] - 0.25).abs() < 1e-9);
+        assert!((phi[2] - 0.65).abs() < 1e-9, "{phi:?}");
+        // Zero-demand queries receive nothing.
+        let z = alloc(&fair(&[1.0, 1.0], true), &[0.0, 3.0]);
+        assert_eq!(z[0], 0.0);
+        assert!((z[1] - 1.0).abs() < 1e-9);
+    }
+
+    fn mk_multi(policy: ArbiterPolicy) -> MultiShedder<u64> {
+        MultiShedder::new(
+            &[1000.0, 1000.0],
+            &[1.0, 1.0],
+            &ShedderConfig { update_every: 5, ..Default::default() },
+            &CostConfig::default(),
+            1,
+            policy,
+            10.0,
+        )
+    }
+
+    #[test]
+    fn standalone_queries_match_a_single_load_shedder() {
+        // Query 0 of a standalone MultiShedder must make exactly the same
+        // decisions as a plain LoadShedder fed the same stream.
+        use crate::util::rng::Rng;
+        let mut multi = mk_multi(ArbiterPolicy::Standalone);
+        let mut single: super::super::LoadShedder<u64> = super::super::LoadShedder::new(
+            &ShedderConfig { update_every: 5, ..Default::default() },
+            &CostConfig::default(),
+            1000.0,
+            10.0,
+        );
+        let mut rng = Rng::new(0xA11);
+        let mut m_dropped = [Vec::new(), Vec::new()];
+        let mut s_dropped = Vec::new();
+        let mut o_dropped = Vec::new();
+        for i in 0..400u64 {
+            let t = i as f64 * 100.0;
+            if i % 3 == 0 {
+                multi.on_backend_complete(0, 450.0);
+                multi.on_backend_complete(1, 450.0);
+                single.on_backend_complete(450.0);
+            }
+            let u = rng.f32();
+            for d in m_dropped.iter_mut() {
+                d.clear();
+            }
+            s_dropped.clear();
+            o_dropped.clear();
+            // Both queries see the same utility: their decisions agree too.
+            multi.observe_arrival(t, &[u, u], &mut m_dropped);
+            let dm = multi.offer(0, u, t, i, &mut o_dropped);
+            let _ = multi.offer(1, u, t, i, &mut m_dropped[1]);
+            let ds = single.on_ingress_keyed_into(u, u, t, i, &mut s_dropped);
+            assert_eq!(dm, ds, "frame {i}");
+            let multi_all: Vec<u64> = m_dropped[0]
+                .iter()
+                .chain(o_dropped.iter())
+                .map(|e| e.item)
+                .collect();
+            let single_all: Vec<u64> = s_dropped.iter().map(|e| e.item).collect();
+            assert_eq!(multi_all, single_all, "frame {i}");
+            assert_eq!(multi.threshold(0), single.threshold(), "frame {i}");
+            assert_eq!(multi.target_rate(0), single.target_rate(), "frame {i}");
+            if i % 4 == 0 {
+                let a = multi.next_to_send(0).map(|e| e.item);
+                multi.next_to_send(1);
+                let b = single.next_to_send().map(|e| e.item);
+                assert_eq!(a, b, "frame {i}");
+            }
+        }
+        assert_eq!(
+            multi.query(0).observed_drop_rate(),
+            single.observed_drop_rate()
+        );
+        assert_eq!(multi.query(0).evictions(), single.evictions());
+    }
+
+    #[test]
+    fn fair_share_throttles_low_weight_query_harder() {
+        use crate::util::rng::Rng;
+        let mut m = MultiShedder::<u64>::new(
+            &[1000.0, 1000.0],
+            &[4.0, 1.0],
+            &ShedderConfig { update_every: 5, ..Default::default() },
+            &CostConfig::default(),
+            1,
+            ArbiterPolicy::WeightedFair { work_conserving: true },
+            10.0,
+        );
+        // Both queries saturated: 500 ms backends at 10 fps ingress.
+        let mut rng = Rng::new(7);
+        let mut dropped = [Vec::new(), Vec::new()];
+        for i in 0..400u64 {
+            let t = i as f64 * 100.0;
+            m.on_backend_complete(0, 500.0);
+            m.on_backend_complete(1, 500.0);
+            let u = rng.f32();
+            for d in dropped.iter_mut() {
+                d.clear();
+            }
+            m.observe_arrival(t, &[u, u], &mut dropped);
+            m.offer(0, u, t, i, &mut dropped[0]);
+            m.offer(1, u, t, i, &mut dropped[1]);
+            while m.next_to_send(0).is_some() {}
+            while m.next_to_send(1).is_some() {}
+        }
+        assert!(
+            m.target_rate(1) > m.target_rate(0) + 0.1,
+            "weights not honored: q0 {} q1 {}",
+            m.target_rate(0),
+            m.target_rate(1)
+        );
+        // Both overloaded → the arbiter still sheds on the heavy query.
+        assert!(m.target_rate(0) > 0.5, "q0 rate {}", m.target_rate(0));
+    }
+}

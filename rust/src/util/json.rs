@@ -114,12 +114,12 @@ impl Value {
         }
     }
 
-    /// Array of numbers → Vec<f64>.
+    /// Array of numbers → `Vec<f64>`.
     pub fn to_f64_vec(&self) -> Result<Vec<f64>, JsonError> {
         self.as_array()?.iter().map(|v| v.as_f64()).collect()
     }
 
-    /// Array of numbers → Vec<f32>.
+    /// Array of numbers → `Vec<f32>`.
     pub fn to_f32_vec(&self) -> Result<Vec<f32>, JsonError> {
         Ok(self.to_f64_vec()?.into_iter().map(|x| x as f32).collect())
     }

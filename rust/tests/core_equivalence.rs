@@ -55,6 +55,7 @@ fn rt_cfg(cfg: &SimConfig) -> RealtimeConfig {
         use_artifacts: false, // native oracle
         policy: cfg.policy.clone(),
         seed: cfg.seed,
+        arbiter: uals::shedder::ArbiterPolicy::Standalone,
     }
 }
 

@@ -1,0 +1,319 @@
+//! Multi-query correctness properties:
+//!
+//! 1. **Standalone bit-match** — with K queries behind the
+//!    standalone-budget arbiter (every query sees the full backend
+//!    budget) and deterministic stage costs, each query's per-frame
+//!    decision log, QoR, and control series bit-match an independent
+//!    single-query pipeline run of that query (same seed, same stream,
+//!    backend cost model seeded per `multi_backend_seed`). Checked over
+//!    multiple content seeds and K = 8.
+//! 2. **One extraction per frame** — the shared pipeline advances the
+//!    extractor's extraction counter exactly once per ingress frame
+//!    regardless of K, while K independent runs pay K× that.
+//! 3. **Fair-share sanity** — per-query frame conservation, identical
+//!    twins behave identically, and heavier weights shed less.
+//! 4. **Clock invariance** — the multi-query wall-clock driver
+//!    (`MultiThreadedBackend`) reproduces the discrete-event decisions.
+
+use uals::backend::{BackendQuery, CostModel, Detector};
+use uals::color::NamedColor;
+use uals::config::{CostConfig, QueryConfig, ShedderConfig};
+use uals::features::Extractor;
+use uals::pipeline::realtime::{run_multi_realtime, RealtimeConfig};
+use uals::pipeline::{
+    backgrounds_of, multi_backend_seed, multi_backends, run_multi_sim, run_sim,
+    MultiPipelineReport, MultiSimConfig, Policy, SimConfig,
+};
+use uals::experiments::scenarios::multiquery_pool;
+use uals::shedder::{ArbiterPolicy, QuerySet, QuerySpec};
+use uals::utility::Combine;
+use uals::video::{streamer::aggregate_fps, Streamer, Video, VideoConfig};
+
+fn cameras(n: usize, frames: usize, seed: u64) -> Vec<Video> {
+    (0..n)
+        .map(|i| {
+            let content = seed.wrapping_mul(131) + i as u64;
+            let mut vc = VideoConfig::new(0x30 ^ seed, content, i as u32, frames);
+            vc.traffic.vehicle_rate = 0.4;
+            Video::new(vc)
+        })
+        .collect()
+}
+
+/// Deterministic stage costs: the single-pipeline cost RNG interleaves
+/// camera/net/stage draws per run, so the bit-match property is stated
+/// (and pinned) at jitter = 0, where every cost is its configured
+/// constant in both deployments.
+fn deterministic_costs() -> CostConfig {
+    CostConfig { jitter: 0.0, ..Default::default() }
+}
+
+fn run_multi(
+    videos: &[Video],
+    set: &QuerySet,
+    seed: u64,
+    arbiter: ArbiterPolicy,
+    costs: CostConfig,
+) -> (MultiPipelineReport, u64) {
+    let fps = aggregate_fps(videos);
+    let cfg = MultiSimConfig {
+        costs,
+        shedder: ShedderConfig::default(),
+        backend_tokens: 1,
+        arbiter,
+        seed,
+        fps_total: fps,
+    };
+    let extractor = Extractor::native(set.union_model().clone());
+    let mut backends = multi_backends(set, &cfg.costs, cfg.seed);
+    let r = run_multi_sim(
+        Streamer::new(videos),
+        &backgrounds_of(videos),
+        set,
+        &cfg,
+        &extractor,
+        &mut backends,
+    )
+    .expect("multi sim");
+    let extractions = extractor.extractions();
+    (r, extractions)
+}
+
+/// An independent single-query pipeline for query `q` of the set, seeded
+/// exactly as the multi run seeds that query's backend.
+fn run_single(
+    videos: &[Video],
+    set: &QuerySet,
+    q: usize,
+    seed: u64,
+    costs: CostConfig,
+) -> uals::pipeline::SimReport {
+    let fps = aggregate_fps(videos);
+    let cfg = SimConfig {
+        costs: costs.clone(),
+        shedder: ShedderConfig::default(),
+        query: set.queries()[q].config.clone(),
+        backend_tokens: 1,
+        policy: Policy::UtilityControlLoop,
+        seed,
+        fps_total: fps,
+    };
+    let extractor = Extractor::native(set.query_model(q));
+    let mut backend = BackendQuery::new(
+        cfg.query.clone(),
+        Detector::native(12, 25.0),
+        CostModel::new(costs, multi_backend_seed(seed, q)),
+        25.0,
+    );
+    run_sim(
+        Streamer::new(videos),
+        &backgrounds_of(videos),
+        &cfg,
+        &extractor,
+        &mut backend,
+    )
+    .expect("single sim")
+}
+
+#[test]
+fn standalone_budget_bitmatches_independent_single_runs() {
+    // The full 8-query pool (the scenario/bench pool, shared so the three
+    // call sites cannot drift): each query's log must bit-match its own
+    // independent single-query pipeline.
+    for content_seed in [0x51u64, 0x77] {
+        let videos = cameras(3, 100, content_seed);
+        let idx: Vec<usize> = (0..videos.len()).collect();
+        let specs = multiquery_pool();
+        let set = QuerySet::train(&specs, &videos, &idx).unwrap();
+        assert_eq!(set.len(), 8);
+        let seed = 0xD1CE;
+        let (multi, _) =
+            run_multi(&videos, &set, seed, ArbiterPolicy::Standalone, deterministic_costs());
+
+        assert_eq!(multi.frames, 300, "content seed {content_seed:x}");
+        for q in 0..set.len() {
+            let single = run_single(&videos, &set, q, seed, deterministic_costs());
+            let mq = &multi.queries[q].report;
+            let label = format!("seed {content_seed:x} query {q} ({})", multi.queries[q].name);
+            assert_eq!(mq.ingress, single.ingress, "{label}: ingress");
+            assert_eq!(mq.transmitted, single.transmitted, "{label}: transmitted");
+            assert_eq!(mq.shed, single.shed, "{label}: shed");
+            assert_eq!(
+                mq.decisions.len(),
+                single.decisions.len(),
+                "{label}: decision counts"
+            );
+            for (i, (a, b)) in mq.decisions.iter().zip(&single.decisions).enumerate() {
+                assert_eq!(a, b, "{label}: decision {i} diverges");
+            }
+            // Same decisions on the same ground truth ⇒ bit-identical QoR
+            // and per-object recall.
+            assert_eq!(mq.qor.overall(), single.qor.overall(), "{label}: QoR");
+            assert_eq!(
+                mq.qor.per_object_all(),
+                single.qor.per_object_all(),
+                "{label}: per-object QoR"
+            );
+            // The control loop walked the same trajectory.
+            assert_eq!(mq.control_series, single.control_series, "{label}: control series");
+            assert_eq!(mq.latency.count(), single.latency.count(), "{label}: completions");
+            assert_eq!(mq.latency.max_ms(), single.latency.max_ms(), "{label}: max e2e");
+        }
+    }
+}
+
+#[test]
+fn shared_pipeline_extracts_exactly_once_per_frame_for_8_queries() {
+    let videos = cameras(2, 80, 0x8E);
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    let set = QuerySet::train(&multiquery_pool(), &videos, &idx).unwrap();
+    assert_eq!(set.len(), 8);
+    let (multi, extractions) = run_multi(
+        &videos,
+        &set,
+        0xBEEF,
+        ArbiterPolicy::WeightedFair { work_conserving: true },
+        CostConfig::default(),
+    );
+    assert_eq!(multi.frames, 160);
+    assert_eq!(multi.extractions, multi.frames, "one extraction per frame, K = 8");
+    assert_eq!(extractions, multi.frames, "extractor counter agrees");
+    // Every query saw every frame and conserved it.
+    for q in &multi.queries {
+        assert_eq!(q.report.ingress, multi.frames);
+        assert_eq!(q.report.ingress, q.report.transmitted + q.report.shed);
+        assert_eq!(q.report.decisions.len() as u64, q.report.ingress);
+    }
+    // The independent deployment pays K× the extractions for the same
+    // frames: here that's simply K single runs of the same stream.
+    let mut independent_extractions = 0;
+    for q in 0..2 {
+        let extractor = Extractor::native(set.query_model(q));
+        let cfg = SimConfig {
+            costs: CostConfig::default(),
+            shedder: ShedderConfig::default(),
+            query: set.queries()[q].config.clone(),
+            backend_tokens: 1,
+            policy: Policy::UtilityControlLoop,
+            seed: 0xBEEF,
+            fps_total: aggregate_fps(&videos),
+        };
+        let mut backend = BackendQuery::new(
+            cfg.query.clone(),
+            Detector::native(12, 25.0),
+            CostModel::new(cfg.costs.clone(), multi_backend_seed(0xBEEF, q)),
+            25.0,
+        );
+        run_sim(
+            Streamer::new(&videos),
+            &backgrounds_of(&videos),
+            &cfg,
+            &extractor,
+            &mut backend,
+        )
+        .unwrap();
+        independent_extractions += extractor.extractions();
+    }
+    assert_eq!(independent_extractions, 2 * multi.frames);
+}
+
+#[test]
+fn fair_share_conserves_and_identical_twins_agree() {
+    // Two identical red queries with equal weights: the arbiter must
+    // treat them identically — bit-equal decisions — and a third heavy
+    // query must come out no worse than its light twins. Five cameras
+    // against single-DNN backends: genuine overload, so the budget split
+    // actually binds (pinned by the shed > 0 assert).
+    use NamedColor::Red;
+    let videos = cameras(5, 120, 0x44);
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    let specs = vec![
+        QuerySpec::new("red-a", QueryConfig::single(Red)),
+        QuerySpec::new("red-b", QueryConfig::single(Red)),
+        QuerySpec::new("red-heavy", QueryConfig::single(Red)).with_weight(8.0),
+    ];
+    let set = QuerySet::train(&specs, &videos, &idx).unwrap();
+    let (multi, _) = run_multi(
+        &videos,
+        &set,
+        0xFA1,
+        ArbiterPolicy::WeightedFair { work_conserving: true },
+        deterministic_costs(),
+    );
+    let (a, b, heavy) = (
+        &multi.queries[0].report,
+        &multi.queries[1].report,
+        &multi.queries[2].report,
+    );
+    assert_eq!(a.ingress, a.transmitted + a.shed);
+    assert!(a.shed > 0, "overloaded fair-share run must shed");
+    assert_eq!(a.decisions, b.decisions, "identical twins diverged");
+    assert_eq!(a.qor.overall(), b.qor.overall());
+    // The heavy query holds a larger capacity slice: it must transmit at
+    // least as much and drop no more than the equal-weight twins.
+    assert!(
+        heavy.transmitted >= a.transmitted,
+        "weight 8 query transmitted less ({} vs {})",
+        heavy.transmitted,
+        a.transmitted
+    );
+    assert!(
+        heavy.observed_drop_rate() <= a.observed_drop_rate() + 1e-12,
+        "weight 8 query dropped more ({} vs {})",
+        heavy.observed_drop_rate(),
+        a.observed_drop_rate()
+    );
+    // Aggregate view merges per-query accounting.
+    let agg = multi.aggregate();
+    assert_eq!(agg.ingress, 3 * multi.frames);
+    assert_eq!(
+        agg.shed,
+        a.shed + b.shed + heavy.shed,
+        "aggregate shed must sum per-query sheds"
+    );
+}
+
+#[test]
+fn multi_sim_and_wallclock_driver_make_identical_decisions() {
+    use NamedColor::{Red, Yellow};
+    let videos = cameras(2, 80, 0x99);
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    let specs = vec![
+        QuerySpec::new("red", QueryConfig::single(Red)),
+        QuerySpec::new(
+            "either",
+            QueryConfig::composite(Red, Yellow, Combine::Or),
+        ),
+    ];
+    let set = QuerySet::train(&specs, &videos, &idx).unwrap();
+    let seed = 0xC10C;
+    let arbiter = ArbiterPolicy::WeightedFair { work_conserving: true };
+    // Default (jittered) costs: clock invariance must not depend on
+    // deterministic costs — both drivers share the same cost streams.
+    let (sim, _) = run_multi(&videos, &set, seed, arbiter, CostConfig::default());
+
+    let rt_cfg = RealtimeConfig {
+        shedder: ShedderConfig::default(),
+        costs: CostConfig::default(),
+        cost_emulation_scale: 0.0, // pure compute speed
+        time_scale: 1e-3,          // 1000× fast-forward
+        backend_tokens: 1,
+        use_artifacts: false,
+        seed,
+        arbiter,
+        ..Default::default()
+    };
+    let wall = run_multi_realtime(&videos, &set, &rt_cfg).expect("wall driver");
+
+    assert_eq!(sim.frames, wall.frames);
+    for (qs, qw) in sim.queries.iter().zip(&wall.queries) {
+        assert_eq!(qs.report.ingress, qw.report.ingress, "{}", qs.name);
+        assert_eq!(qs.report.transmitted, qw.report.transmitted, "{}", qs.name);
+        assert_eq!(qs.report.shed, qw.report.shed, "{}", qs.name);
+        assert_eq!(qs.report.decisions.len(), qw.report.decisions.len(), "{}", qs.name);
+        for (i, (a, b)) in qs.report.decisions.iter().zip(&qw.report.decisions).enumerate() {
+            assert_eq!(a, b, "{}: decision {i}", qs.name);
+        }
+        assert_eq!(qs.report.qor.overall(), qw.report.qor.overall(), "{}", qs.name);
+    }
+}

@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Advisory per-row bench comparison for the CI job summary.
+
+Usage: bench_delta.py BASELINE.json CURRENT.json
+
+Reads two `uals-microbench-v1` files (see rust/src/util/bench.rs) and
+prints a GitHub-flavoured markdown table of per-row deltas. Always exits
+0 — the comparison is informational, never a gate. Rows present only in
+the current run are marked "new"; rows that vanished are listed at the
+end. An empty or missing baseline degrades to "no baseline" gracefully
+(the committed BENCH_baseline.json starts empty until a toolchain run
+refreshes it).
+"""
+
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+        rows = {}
+        for b in doc.get("benches", []):
+            name = b.get("name")
+            mean = b.get("mean_ns")
+            if name is not None and isinstance(mean, (int, float)):
+                rows[name] = float(mean)
+        return rows
+    except (OSError, ValueError) as e:
+        print(f"_bench_delta: could not read {path}: {e}_")
+        return {}
+
+
+def fmt_ns(ns):
+    if ns >= 1e9:
+        return f"{ns / 1e9:.2f} s"
+    if ns >= 1e6:
+        return f"{ns / 1e6:.2f} ms"
+    if ns >= 1e3:
+        return f"{ns / 1e3:.2f} µs"
+    return f"{ns:.0f} ns"
+
+
+def main():
+    if len(sys.argv) != 3:
+        print("usage: bench_delta.py BASELINE.json CURRENT.json")
+        return
+    baseline = load(sys.argv[1])
+    current = load(sys.argv[2])
+    if not current:
+        print("_bench_delta: no current bench rows — did `make bench` run?_")
+        return
+
+    print("### Microbench vs committed baseline (advisory)")
+    print()
+    if not baseline:
+        print("_No baseline rows (BENCH_baseline.json is empty) — all rows are new._")
+        print()
+    print("| bench | baseline | current | delta |")
+    print("|---|---:|---:|---:|")
+    for name in sorted(current):
+        cur = current[name]
+        base = baseline.get(name)
+        if base is None:
+            delta = "new"
+            base_s = "—"
+        else:
+            base_s = fmt_ns(base)
+            pct = (cur - base) / base * 100.0 if base > 0 else 0.0
+            arrow = "🔺" if pct > 5.0 else ("🟢" if pct < -5.0 else "·")
+            delta = f"{pct:+.1f}% {arrow}"
+        print(f"| `{name}` | {base_s} | {fmt_ns(cur)} | {delta} |")
+    gone = sorted(set(baseline) - set(current))
+    if gone:
+        print()
+        print("Rows in baseline but missing from this run: " + ", ".join(f"`{g}`" for g in gone))
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except Exception as e:  # advisory only — never fail the job
+        print(f"_bench_delta error: {e}_")
+    sys.exit(0)
