@@ -50,6 +50,7 @@ fn main() -> Result<()> {
         policy: Policy::UtilityControlLoop,
         seed: 0xA3,
         fps_total: sv.fps(),
+        transport: uals::pipeline::TransportConfig::default(),
     };
     let extractor = Extractor::native(model);
     let mut backend = BackendQuery::new(

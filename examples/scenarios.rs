@@ -23,7 +23,7 @@ use uals::features::Extractor;
 use uals::pipeline::realtime::{run_multi_realtime, run_realtime_with, RealtimeConfig};
 use uals::pipeline::{
     backgrounds_of, multi_backends, run_multi_sim, run_sim_with, CameraChurn, MultiSimConfig,
-    PoissonArrivals, Policy, SimConfig,
+    PoissonArrivals, Policy, SimConfig, TransportConfig,
 };
 use uals::shedder::{ArbiterPolicy, QuerySet, QuerySpec};
 use uals::utility::{train, Combine};
@@ -62,6 +62,7 @@ fn main() -> Result<()> {
         policy: Policy::UtilityControlLoop,
         seed: 0xD0,
         fps_total: fps,
+        transport: TransportConfig::default(),
     };
     let bgs = backgrounds_of(&videos);
     let extractor = Extractor::native(model.clone());
@@ -84,6 +85,7 @@ fn main() -> Result<()> {
         policy: Policy::UtilityControlLoop,
         seed: cfg.seed,
         arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
+        transport: TransportConfig::default(),
     };
 
     println!("scenario        clock     ingress  transmitted  shed   qor    viol%");
@@ -191,6 +193,7 @@ fn main() -> Result<()> {
         arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
         seed: cfg.seed,
         fps_total: fps,
+        transport: TransportConfig::default(),
     };
     let mq_extractor = Extractor::native(set.union_model().clone());
     let mut backends = multi_backends(&set, &mcfg.costs, mcfg.seed);

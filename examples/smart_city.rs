@@ -58,6 +58,7 @@ fn main() -> Result<()> {
                 policy,
                 seed: 0x5C,
                 fps_total: fps,
+                transport: uals::pipeline::TransportConfig::default(),
             };
             let extractor = Extractor::native(model.clone());
             let mut backend = BackendQuery::new(

@@ -16,7 +16,7 @@ use uals::features::{
 };
 use uals::pipeline::{
     multi_backend_seed, multi_backends, run_multi_sim, run_sharded_sim, run_sharded_sim_with,
-    MultiSimConfig, Policy, SimConfig,
+    MultiSimConfig, Policy, SimConfig, TransportConfig,
 };
 use uals::runtime::Engine;
 use uals::shedder::{ArbiterPolicy, QuerySet, UtilityQueue};
@@ -164,6 +164,39 @@ fn main() {
         });
     }
 
+    // --- wire encoding (edge→backend transport) -----------------------------
+    // Encode throughput + measured compression ratio per redundancy
+    // regime: the delta encoder ships only dirty tiles, so the ratio on a
+    // fixed camera is the transport headline (scenecut must degrade to
+    // ~keyframe size, never worse than raw + header).
+    {
+        use uals::video::{raw_wire_size, WireEncoder, WireEncoding};
+        let mut wire_buf: Vec<u8> = Vec::new();
+        let mut enc_raw = WireEncoder::new(WireEncoding::Raw);
+        let mut ri = 0usize;
+        let raw_frames = &scenarios[1].1; // sparse traffic
+        b.run("transport/encode_raw_96x96", || {
+            enc_raw.encode_into(0, 96, 96, &raw_frames[ri], &mut wire_buf);
+            ri = (ri + 1) % raw_frames.len();
+            std::hint::black_box(wire_buf.len());
+        });
+        for (name, frames_set, _) in &scenarios {
+            let mut enc = WireEncoder::new(WireEncoding::delta_default());
+            let mut ti = 0usize;
+            let mut bytes_total = 0u64;
+            let mut msgs = 0u64;
+            b.run(&format!("transport/encode_delta_{name}_96x96"), || {
+                enc.encode_into(0, 96, 96, &frames_set[ti], &mut wire_buf);
+                bytes_total += wire_buf.len() as u64;
+                msgs += 1;
+                ti = (ti + 1) % frames_set.len();
+                std::hint::black_box(wire_buf.len());
+            });
+            let ratio = bytes_total as f64 / (msgs as f64 * raw_wire_size(96, 96) as f64);
+            println!("  delta wire ratio vs raw ({name}): {ratio:.4}x");
+        }
+    }
+
     b.run("backend/foreground_mask+largest_blob", || {
         let m = foreground_mask(&frame.rgb, &bg, 96, 96, 25.0);
         std::hint::black_box(largest_blob(&m));
@@ -200,6 +233,7 @@ fn main() {
         policy: Policy::UtilityControlLoop,
         seed: 0xBE,
         fps_total: 10.0,
+        transport: TransportConfig::default(),
     };
     b.run_n("pipeline/sweep_4cams_serial", 1, 3, || {
         let r = run_sharded_sim(&sweep_videos, &sweep_cfg, &sweep_model, 1).unwrap();
@@ -281,6 +315,7 @@ fn main() {
         arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
         seed: 0xBE,
         fps_total: mq_fps,
+        transport: TransportConfig::default(),
     };
     let mq_extractor = Extractor::native(mq_set.union_model().clone());
     b.run_n("multi/shared_extract_8q", 1, 3, || {
@@ -310,6 +345,7 @@ fn main() {
                 policy: Policy::UtilityControlLoop,
                 seed: mq_cfg.seed,
                 fps_total: mq_fps,
+                transport: TransportConfig::default(),
             };
             let mut backend = BackendQuery::new(
                 cfg_q.query.clone(),

@@ -219,6 +219,7 @@ pub fn ablation_queue(scale: Scale) -> Vec<(String, Table)> {
             policy,
             seed: 0xAB,
             fps_total: fps,
+            transport: crate::pipeline::TransportConfig::default(),
         };
         let r = run_scenario(
             IterArrivals::new(crate::video::Streamer::new(&videos), fps),

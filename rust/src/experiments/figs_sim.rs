@@ -47,6 +47,7 @@ fn sim_config(query: QueryConfig, fps_total: f64, policy: Policy) -> SimConfig {
         policy,
         seed: 0x13,
         fps_total,
+        transport: crate::pipeline::TransportConfig::default(),
     }
 }
 
@@ -89,6 +90,7 @@ fn report_tables(prefix: &str, report: &SimReport, bound_ms: f64) -> Vec<(String
         "color_filter",
         "dnn",
         "sink",
+        "transmit",
     ]);
     for row in report.stages.table() {
         stages.push(&row);

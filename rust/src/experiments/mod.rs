@@ -33,10 +33,11 @@ pub const ABLATIONS: [&str; 4] = [
     "ablation-queue",
 ];
 /// Workload scenarios unlocked by the clock-abstracted core's
-/// `ArrivalModel` plugins and the multi-query shared-stream path (beyond
-/// the paper's fixed-fps single-query streams).
-pub const SCENARIOS: [&str; 3] =
-    ["scenario-bursty", "scenario-churn", "scenario-multiquery"];
+/// `ArrivalModel` plugins, the multi-query shared-stream path, and the
+/// bandwidth-constrained transport link (beyond the paper's fixed-fps
+/// single-query free-network streams).
+pub const SCENARIOS: [&str; 4] =
+    ["scenario-bursty", "scenario-churn", "scenario-multiquery", "scenario-bandwidth"];
 
 /// Run one figure harness; returns named tables.
 pub fn run_figure(id: &str, scale: Scale) -> Result<Vec<(String, Table)>> {
@@ -63,6 +64,7 @@ pub fn run_figure(id: &str, scale: Scale) -> Result<Vec<(String, Table)>> {
         "scenario-bursty" => scenarios::scenario_bursty(scale),
         "scenario-churn" => scenarios::scenario_churn(scale),
         "scenario-multiquery" => scenarios::scenario_multiquery(scale),
+        "scenario-bandwidth" => scenarios::scenario_bandwidth(scale),
         other => bail!(
             "unknown figure '{other}' (try one of {ALL_FIGURES:?}, 15, \
              {ABLATIONS:?}, or {SCENARIOS:?})"

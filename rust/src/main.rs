@@ -55,7 +55,7 @@ fn print_usage() {
          figures  --all | --fig <id>…   [--scale tiny|small|paper] [--out DIR] [--quiet]\n\
          train    --color red[,yellow] [--combine single|or|and] [--out FILE] [--scale S]\n\
          dataset  [--scale S] [--color red]\n\
-         run      --scenario fig13a|smart-city|bursty|churn|multiquery [--scale S]\n\
+         run      --scenario fig13a|smart-city|bursty|churn|multiquery|bandwidth [--scale S]\n\
          overhead [--scale S]\n"
     );
 }
@@ -163,8 +163,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         "multiquery" => {
             experiments::run_and_save(&["scenario-multiquery"], scale, &out_dir(args), false)
         }
+        "bandwidth" => {
+            experiments::run_and_save(&["scenario-bandwidth"], scale, &out_dir(args), false)
+        }
         other => {
-            bail!("unknown --scenario '{other}' (fig13a|smart-city|bursty|churn|multiquery)")
+            bail!(
+                "unknown --scenario '{other}' \
+                 (fig13a|smart-city|bursty|churn|multiquery|bandwidth)"
+            )
         }
     }
 }

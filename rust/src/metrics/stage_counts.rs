@@ -8,7 +8,10 @@ use crate::metrics::WindowSeries;
 pub enum Stage {
     /// Arrived at the Load Shedder.
     Ingress = 0,
-    /// Dropped by the shedder (admission or queue eviction).
+    /// Dropped before reaching the backend: by the shedder (admission or
+    /// queue eviction) **or lost on the transmit link**. The stage
+    /// funnel's shed series is this union; `PipelineReport` keeps the
+    /// `shed` vs `link_dropped` split.
     Shed = 1,
     /// Reached the blob-size filter.
     BlobFilter = 2,
@@ -18,16 +21,21 @@ pub enum Stage {
     Dnn = 4,
     /// Reached the sink (passed all stages).
     Sink = 5,
+    /// Entered the shedder→backend transmit link (appended after the
+    /// query stages so `last_stage` ordering comparisons are untouched;
+    /// in funnel order it sits between Shed and BlobFilter).
+    Transmit = 6,
 }
 
 impl Stage {
-    pub const ALL: [Stage; 6] = [
+    pub const ALL: [Stage; 7] = [
         Stage::Ingress,
         Stage::Shed,
         Stage::BlobFilter,
         Stage::ColorFilter,
         Stage::Dnn,
         Stage::Sink,
+        Stage::Transmit,
     ];
 
     pub fn name(self) -> &'static str {
@@ -38,6 +46,7 @@ impl Stage {
             Stage::ColorFilter => "color_filter",
             Stage::Dnn => "dnn",
             Stage::Sink => "sink",
+            Stage::Transmit => "transmit",
         }
     }
 }

@@ -28,6 +28,7 @@ use crate::backend::BackendQuery;
 use crate::config::{CostConfig, QueryConfig, ShedderConfig};
 use crate::features::{Extractor, FrameFeatures, UtilityValues};
 use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts, WindowSeries};
+use crate::pipeline::transport::{TransportConfig, TransportState};
 use crate::shedder::{Entry, LoadShedder, QueryMask, TokenBucket};
 use crate::util::rng::Rng;
 use crate::video::{Frame, Video};
@@ -74,6 +75,10 @@ pub struct SimConfig {
     pub seed: u64,
     /// Nominal aggregate ingress fps (estimator fallback).
     pub fps_total: f64,
+    /// Modeled shedder→backend link + wire encoding. The default (ideal
+    /// link, raw encoding) reproduces the pre-transport pipeline
+    /// bit-for-bit; see [`crate::pipeline::transport`].
+    pub transport: TransportConfig,
 }
 
 /// The one frame payload carried through admission, queue and dispatch —
@@ -91,6 +96,10 @@ pub struct FramePayload {
     /// and backend executors run only admitted queries on the frame;
     /// single-query drivers pin bit 0 at capture.
     pub admitted: QueryMask,
+    /// Measured camera→shedder transfer (ms) sampled for this frame —
+    /// paired with the link's measured shedder→backend transfer when the
+    /// transport stage feeds `ControlLoop::observe_network`.
+    pub net_cam_ls_ms: f64,
     pub rgb: Vec<f32>,
     pub width: usize,
     pub height: usize,
@@ -123,6 +132,15 @@ pub struct PipelineReport {
     pub ingress: u64,
     pub transmitted: u64,
     pub shed: u64,
+    /// Frames dropped *on the link* (lossy transport exhausting its
+    /// retransmit budget). `ingress = transmitted + shed + link_dropped`.
+    pub link_dropped: u64,
+    /// Bytes serialized onto the shedder→backend link (actual wire
+    /// sizes; raw-u8 equivalent under an ideal link).
+    pub bytes_on_wire: u64,
+    /// Total measured shedder→backend transfer (ms) across delivered
+    /// frames: link queue wait + serialization + propagation.
+    pub transmit_ms_total: f64,
     /// Final virtual clock (ms).
     pub end_ms: f64,
     /// Total camera-side extraction wall time (ms) across all frames.
@@ -144,6 +162,25 @@ impl PipelineReport {
             0.0
         } else {
             self.extract_ms_total / self.ingress as f64
+        }
+    }
+
+    /// Mean measured shedder→backend transfer per delivered frame (ms).
+    pub fn transmit_ms_mean(&self) -> f64 {
+        if self.transmitted == 0 {
+            0.0
+        } else {
+            self.transmit_ms_total / self.transmitted as f64
+        }
+    }
+
+    /// Mean wire bytes per frame that entered the link.
+    pub fn bytes_per_wire_frame(&self) -> f64 {
+        let n = self.transmitted + self.link_dropped;
+        if n == 0 {
+            0.0
+        } else {
+            self.bytes_on_wire as f64 / n as f64
         }
     }
 }
@@ -418,7 +455,12 @@ impl ArrivalFeeder {
             &mut self.util_buf,
         )?;
         self.extract_ms_total += te.elapsed().as_secs_f64() * 1e3;
-        let t_ls = f.ts_ms + cost.camera_ms() + cost.net_cam_ls_ms();
+        // Sampled in the historical order (camera, then cam→LS) so the
+        // cost-RNG sequence is unchanged; the cam→LS sample rides on the
+        // payload as this frame's measured camera→shedder transfer.
+        let cam_ms = cost.camera_ms();
+        let net_cam_ls_ms = cost.net_cam_ls_ms();
+        let t_ls = f.ts_ms + cam_ms + net_cam_ls_ms;
         let mut ids = self.id_pool.pop().unwrap_or_default();
         f.target_ids_into(&query.colors, query.min_blob_px, &mut ids);
         let payload = FramePayload {
@@ -426,6 +468,7 @@ impl ArrivalFeeder {
             capture_ms: f.ts_ms,
             target_ids: ids,
             admitted: QueryMask::single(0),
+            net_cam_ls_ms,
             rgb: f.rgb,
             width: f.width,
             height: f.height,
@@ -468,6 +511,8 @@ where
     let mut control_series = Vec::new();
     let mut decisions: Vec<FrameDecision> = Vec::new();
     let (mut ingress_n, mut transmitted, mut shed) = (0u64, 0u64, 0u64);
+    let mut link_dropped = 0u64;
+    let mut transport = TransportState::new(&cfg.transport, cfg.seed);
 
     // Baseline policies pin the threshold themselves (the FIFO ablation
     // keeps the full control loop — only queue ordering changes).
@@ -577,8 +622,12 @@ where
             // Transmission-time deadline check: a frame whose expected
             // completion (Eq. 20 terms) already exceeds LB is doomed —
             // shed it instead of burning backend time (utility ordering
-            // can starve low-utility frames through a burst).
-            let expected_done = now + cfg.costs.net_ls_q_ms + shedder.control.proc_q_ms();
+            // can starve low-utility frames through a burst). The network
+            // term is the control loop's EWMA: exactly the configured
+            // constant under an ideal link, the measured link latency
+            // (congestion included) under a constrained one.
+            let expected_done =
+                now + shedder.control.net_ls_q_ms() + shedder.control.proc_q_ms();
             if expected_done - entry.item.capture_ms > cfg.query.latency_bound_ms {
                 qor.observe(&entry.item.target_ids, false);
                 stages.observe(Stage::Shed, entry.item.capture_ms);
@@ -593,6 +642,37 @@ where
             }
             assert!(tokens.try_acquire());
             let mut f = entry.item;
+            let capture_ms = f.capture_ms;
+            // Transmit stage: the frame leaves the shedder for the link.
+            stages.observe(Stage::Transmit, capture_ms);
+            let arrival_ms = if transport.is_ideal() {
+                // Byte accounting only — the legacy cost-model draw below
+                // keeps the pre-transport RNG sequence bit-identical.
+                transport.account_ideal(&f);
+                None
+            } else {
+                let tx = transport.ship(now, &f);
+                if !tx.delivered {
+                    // Lost on the wire after bounded retransmits: the
+                    // backend never sees it; the token frees immediately.
+                    tokens.release();
+                    link_dropped += 1;
+                    qor.observe(&f.target_ids, false);
+                    stages.observe(Stage::Shed, capture_ms);
+                    decisions.push(FrameDecision {
+                        camera: f.camera,
+                        capture_ms,
+                        kept: false,
+                    });
+                    feeder.recycle(std::mem::take(&mut f.target_ids));
+                    continue;
+                }
+                // Feed the measured pair into the control loop: Eq. 20's
+                // queue sizing and Eq. 19's effective service time now
+                // see real link congestion.
+                shedder.control.observe_network(f.net_cam_ls_ms, tx.transfer_ms);
+                Some(tx.arrival_ms)
+            };
             transmitted += 1;
             qor.observe(&f.target_ids, true);
             decisions.push(FrameDecision {
@@ -600,7 +680,6 @@ where
                 capture_ms: f.capture_ms,
                 kept: true,
             });
-            let capture_ms = f.capture_ms;
             feeder.recycle(std::mem::take(&mut f.target_ids));
             let bg = *backgrounds.get(&f.camera).expect("background seen at ingress");
             let (last_stage, exec_ms) = executor.submit(f, bg)?;
@@ -618,8 +697,12 @@ where
             }
             let seq = dispatch_seq;
             dispatch_seq += 1;
-            let net = cost.net_ls_q_ms();
-            let done_at = now + net + exec_ms;
+            let done_at = match arrival_ms {
+                // Ideal link: the historical constant-latency hop.
+                None => now + cost.net_ls_q_ms() + exec_ms,
+                // Modeled link: backend work starts when the frame lands.
+                Some(a) => a + exec_ms,
+            };
             eq.push(done_at, EventKind::Completion { seq, capture_ms, exec_ms, dnn });
         }
     }
@@ -635,6 +718,9 @@ where
         ingress: ingress_n,
         transmitted,
         shed,
+        link_dropped,
+        bytes_on_wire: transport.bytes_on_wire,
+        transmit_ms_total: transport.transmit_ms_total,
         end_ms: now,
         extract_ms_total: feeder.extract_ms_total,
     })

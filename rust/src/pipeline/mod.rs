@@ -17,12 +17,16 @@
 //!   backend with the PJRT artifact path on the hot loop).
 //! * [`parallel`] — sharded multi-camera sweep engine: one sim-driver
 //!   shard per camera across scoped threads, deterministic metric merge.
+//! * [`transport`] — the modeled shedder→backend network link: FIFO
+//!   serialization at a configured bandwidth over each frame's actual
+//!   wire size ([`crate::video::wire`]), propagation, jitter, loss.
 
 pub mod core;
 pub mod multi;
 pub mod parallel;
 pub mod realtime;
 pub mod sim;
+pub mod transport;
 pub mod workloads;
 
 pub use self::core::{
@@ -38,4 +42,5 @@ pub use parallel::{
     default_threads, merge_reports, parallel_map, run_sharded_sim, run_sharded_sim_with,
 };
 pub use sim::{run_multi_sim, run_multi_sim_with, run_sim, run_sim_with, SimReport};
+pub use transport::{Link, LinkModel, Transmission, TransportConfig};
 pub use workloads::{CameraChurn, ChurnWindow, IterArrivals, PoissonArrivals};

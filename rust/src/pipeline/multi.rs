@@ -39,6 +39,7 @@ use crate::pipeline::core::{
     ArrivalModel, BackgroundMap, Clock, EventClass, EventQueue, FrameDecision, FramePayload,
     PipelineReport,
 };
+use crate::pipeline::transport::{Transmission, TransportConfig, TransportState};
 use crate::shedder::{ArbiterPolicy, Entry, MultiShedder, QueryMask, QuerySet};
 use std::rc::Rc;
 use std::time::Instant;
@@ -59,6 +60,10 @@ pub struct MultiSimConfig {
     pub seed: u64,
     /// Nominal aggregate ingress fps (shared rate-estimator fallback).
     pub fps_total: f64,
+    /// The ONE shared shedder→backend link: each frame admitted by ≥ 1
+    /// query crosses it **once** (the transmission analogue of the
+    /// shared-extraction invariant). Defaults to the ideal link.
+    pub transport: TransportConfig,
 }
 
 /// One query's slice of a multi-query run: the full single-query metrics
@@ -79,6 +84,15 @@ pub struct MultiPipelineReport {
     /// Feature extractions performed — equals `frames` for the shared
     /// pipeline (pinned by test), `frames × N` for N independent runs.
     pub extractions: u64,
+    /// Physical frames that crossed the shared link — at most one per
+    /// ingress frame regardless of how many queries admitted it (the
+    /// shared-transmission invariant; N independent deployments pay N×).
+    pub wire_frames: u64,
+    /// Bytes serialized onto the shared link (actual wire sizes).
+    pub bytes_on_wire: u64,
+    /// Physical frames lost on the shared link (every admitting query
+    /// loses its copy; per-query reports count those per query).
+    pub link_lost_frames: u64,
     pub end_ms: f64,
     /// Camera-side extraction wall time (ms), shared across queries.
     pub extract_ms_total: f64,
@@ -200,10 +214,13 @@ pub fn multi_backends(set: &QuerySet, costs: &CostConfig, seed: u64) -> Vec<Back
 // ---------------------------------------------------------------------------
 
 /// A query's queue entry: the shared frame plus that query's ground-truth
-/// target ids (colors differ per query, so the id sets do too).
+/// target ids (colors differ per query, so the id sets do too), and the
+/// outcome of the frame's one crossing of the shared link (`None` under
+/// an ideal link).
 struct MultiItem {
     frame: Rc<FramePayload>,
     ids: Vec<u64>,
+    transit: Option<Transmission>,
 }
 
 /// One ingress event: the shared payload, per-query utilities (reduced
@@ -230,6 +247,8 @@ struct QueryState {
     ingress: u64,
     transmitted: u64,
     shed: u64,
+    link_dropped: u64,
+    transmit_ms_total: f64,
     /// Max event time this query has seen — identical to the global
     /// clock of an independent single-query run of this query (its event
     /// set is the shared ingresses plus its own completions).
@@ -250,6 +269,8 @@ impl QueryState {
             ingress: 0,
             transmitted: 0,
             shed: 0,
+            link_dropped: 0,
+            transmit_ms_total: 0.0,
             now: 0.0,
             last_control_sample: f64::NEG_INFINITY,
             dispatch_seq: 0,
@@ -267,6 +288,19 @@ impl QueryState {
             kept: false,
         });
         self.shed += 1;
+        recycle(id_pool, e.item.ids);
+    }
+
+    /// Account one frame this query queued but the shared link lost.
+    fn account_link_drop(&mut self, e: Entry<MultiItem>, id_pool: &mut Vec<Vec<u64>>) {
+        self.qor.observe(&e.item.ids, false);
+        self.stages.observe(Stage::Shed, e.item.frame.capture_ms);
+        self.decisions.push(FrameDecision {
+            camera: e.item.frame.camera,
+            capture_ms: e.item.frame.capture_ms,
+            kept: false,
+        });
+        self.link_dropped += 1;
         recycle(id_pool, e.item.ids);
     }
 }
@@ -354,12 +388,17 @@ impl MultiFeeder {
             f.target_ids_into(&q.config.colors, q.config.min_blob_px, &mut v);
             ids.push(v);
         }
-        let t_ls = f.ts_ms + cost.camera_ms() + cost.net_cam_ls_ms();
+        // Historical draw order (camera, then cam→LS); the cam→LS sample
+        // is this frame's measured camera→shedder transfer.
+        let cam_ms = cost.camera_ms();
+        let net_cam_ls_ms = cost.net_cam_ls_ms();
+        let t_ls = f.ts_ms + cam_ms + net_cam_ls_ms;
         let frame = FramePayload {
             camera: f.camera,
             capture_ms: f.ts_ms,
             target_ids: Vec::new(),
             admitted: QueryMask::empty(),
+            net_cam_ls_ms,
             rgb: f.rgb,
             width: f.width,
             height: f.height,
@@ -423,6 +462,7 @@ where
 
     let mut eq: EventQueue<MEvent> = EventQueue::new();
     let mut feeder = MultiFeeder::new();
+    let mut transport = TransportState::new(&cfg.transport, cfg.seed);
     // Reused drop buffers: retune evictions land per query; the offer
     // buffer collects each offer's sheds (incl. the offered frame).
     let mut retune_dropped: Vec<Vec<Entry<MultiItem>>> = (0..k).map(|_| Vec::new()).collect();
@@ -477,11 +517,24 @@ where
                     }
                 }
                 frame.admitted = mask;
+                // Shared transmission: a frame admitted by ≥ 1 query
+                // crosses the link exactly ONCE; every admitting query's
+                // queue entry carries the same transmission outcome. The
+                // ideal link stays byte-accounted but delay-free.
+                let transit = if mask.is_empty() {
+                    None
+                } else if transport.is_ideal() {
+                    transport.account_ideal(&frame);
+                    None
+                } else {
+                    Some(transport.ship(t, &frame))
+                };
                 let rc = Rc::new(frame);
                 for (q, &u) in utilities.iter().enumerate() {
                     let item = MultiItem {
                         frame: rc.clone(),
                         ids: std::mem::take(&mut ids[q]),
+                        transit,
                     };
                     offer_dropped.clear();
                     let _ = shedder.offer(q, u, t, item, &mut offer_dropped);
@@ -518,13 +571,25 @@ where
                 let Some(entry) = shedder.next_to_send(q) else { break };
                 let now_q = states[q].now;
                 let bound = set.queries()[q].config.latency_bound_ms;
-                let expected_done = now_q + cfg.costs.net_ls_q_ms + shedder.proc_q_ms(q);
+                // Eq. 20 network term from the query's EWMA: exactly the
+                // configured constant under an ideal link, the measured
+                // shared-link latency under a constrained one.
+                let expected_done = now_q + shedder.net_ls_q_ms(q) + shedder.proc_q_ms(q);
                 if expected_done - entry.item.frame.capture_ms > bound {
                     states[q].account_shed(entry, &mut feeder.id_pool);
                     continue;
                 }
+                states[q]
+                    .stages
+                    .observe(Stage::Transmit, entry.item.frame.capture_ms);
+                // The frame crossed the shared link once, at admission;
+                // a lost crossing costs every admitting query its copy.
+                if entry.item.transit.is_some_and(|tx| !tx.delivered) {
+                    states[q].account_link_drop(entry, &mut feeder.id_pool);
+                    continue;
+                }
                 assert!(shedder.tokens(q).try_acquire());
-                let MultiItem { frame: rc, ids } = entry.item;
+                let MultiItem { frame: rc, ids, transit } = entry.item;
                 let st = &mut states[q];
                 st.transmitted += 1;
                 st.qor.observe(&ids, true);
@@ -535,6 +600,10 @@ where
                 });
                 recycle(&mut feeder.id_pool, ids);
                 let capture_ms = rc.capture_ms;
+                if let Some(tx) = transit {
+                    st.transmit_ms_total += tx.transfer_ms;
+                    shedder.observe_network(q, rc.net_cam_ls_ms, tx.transfer_ms);
+                }
                 let bg = *backgrounds
                     .get(&rc.camera)
                     .expect("background seen at ingress");
@@ -552,9 +621,16 @@ where
                 }
                 let seq = st.dispatch_seq;
                 st.dispatch_seq += 1;
-                let net = cost.net_ls_q_ms();
+                let done_at = match transit {
+                    // Ideal link: the historical constant-latency hop
+                    // (same cost-RNG draw, same position).
+                    None => st.now + cost.net_ls_q_ms() + exec_ms,
+                    // Shared link: the backend can start no earlier than
+                    // the frame's one delivery.
+                    Some(tx) => st.now.max(tx.arrival_ms) + exec_ms,
+                };
                 eq.push(
-                    st.now + net + exec_ms,
+                    done_at,
                     MEvent::Completion { query: q, seq, capture_ms, exec_ms, dnn },
                 );
             }
@@ -579,6 +655,11 @@ where
                 ingress: st.ingress,
                 transmitted: st.transmitted,
                 shed: st.shed,
+                link_dropped: st.link_dropped,
+                // Physical bytes live on the shared report: the frame
+                // crossed the link once, not once per query.
+                bytes_on_wire: 0,
+                transmit_ms_total: st.transmit_ms_total,
                 end_ms: st.now,
                 extract_ms_total: 0.0,
             },
@@ -589,6 +670,9 @@ where
         queries,
         frames: feeder.frames,
         extractions: extractor.extractions() - extractions_before,
+        wire_frames: transport.frames_on_wire,
+        bytes_on_wire: transport.bytes_on_wire,
+        link_lost_frames: transport.frames_lost,
         end_ms,
         extract_ms_total: feeder.extract_ms_total,
     })
@@ -639,6 +723,7 @@ mod tests {
             arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
             seed: 0xA1,
             fps_total: fps,
+            transport: TransportConfig::default(),
         };
         let extractor = Extractor::native(set.union_model().clone());
         let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
@@ -680,6 +765,7 @@ mod tests {
             arbiter: ArbiterPolicy::Standalone,
             seed: 1,
             fps_total: 10.0,
+            transport: TransportConfig::default(),
         };
         let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
         let mut executor = MultiSyncBackend::new(&mut backends);

@@ -94,6 +94,9 @@ where
         acc.ingress += r.ingress;
         acc.transmitted += r.transmitted;
         acc.shed += r.shed;
+        acc.link_dropped += r.link_dropped;
+        acc.bytes_on_wire += r.bytes_on_wire;
+        acc.transmit_ms_total += r.transmit_ms_total;
         acc.end_ms = acc.end_ms.max(r.end_ms);
         acc.extract_ms_total += r.extract_ms_total;
     }
@@ -191,6 +194,7 @@ mod tests {
             policy: Policy::UtilityControlLoop,
             seed: 0x5A,
             fps_total: 10.0,
+            transport: crate::pipeline::TransportConfig::default(),
         }
     }
 

@@ -40,6 +40,7 @@ use crate::pipeline::multi::{
     multi_backend_seed, run_multi_pipeline, MultiBackendExecutor, MultiPipelineReport,
     MultiSimConfig,
 };
+use crate::pipeline::transport::TransportConfig;
 use crate::pipeline::workloads::IterArrivals;
 use crate::runtime::Engine;
 use crate::shedder::{ArbiterPolicy, QuerySet};
@@ -74,6 +75,9 @@ pub struct RealtimeConfig {
     /// Backend-budget split across queries for the multi-query entry
     /// points ([`run_multi_realtime`]); ignored by the single-query runs.
     pub arbiter: ArbiterPolicy,
+    /// Modeled shedder→backend link + wire encoding (ideal by default;
+    /// decisions stay clock-invariant with the sim driver either way).
+    pub transport: TransportConfig,
 }
 
 impl Default for RealtimeConfig {
@@ -89,6 +93,7 @@ impl Default for RealtimeConfig {
             policy: Policy::UtilityControlLoop,
             seed: 0xB_E,
             arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -103,6 +108,10 @@ pub struct RealtimeReport {
     pub ingress: u64,
     pub transmitted: u64,
     pub shed: u64,
+    /// Frames lost on the modeled link (0 under the ideal default).
+    pub link_dropped: u64,
+    /// Bytes serialized onto the shedder→backend link.
+    pub bytes_on_wire: u64,
     /// Wall-clock duration of the run.
     pub wall: Duration,
     /// Mean extractor latency per frame (ms) — the camera-side overhead.
@@ -288,6 +297,7 @@ pub fn run_realtime_with<A: ArrivalModel>(
         policy: cfg.policy.clone(),
         seed: cfg.seed,
         fps_total: arrivals.fps_total(),
+        transport: cfg.transport,
     };
 
     let extractor = if cfg.use_artifacts {
@@ -319,6 +329,8 @@ pub fn run_realtime_with<A: ArrivalModel>(
         ingress: report.ingress,
         transmitted: report.transmitted,
         shed: report.shed,
+        link_dropped: report.link_dropped,
+        bytes_on_wire: report.bytes_on_wire,
         wall: start.elapsed(),
         extract_ms_mean,
     })
@@ -525,6 +537,7 @@ pub fn run_multi_realtime_with<A: ArrivalModel>(
         arbiter: cfg.arbiter,
         seed: cfg.seed,
         fps_total: arrivals.fps_total(),
+        transport: cfg.transport,
     };
     let union = set.union_model();
     let extractor = if cfg.use_artifacts {

@@ -151,6 +151,7 @@ mod tests {
             policy: Policy::UtilityControlLoop,
             seed: 5,
             fps_total: 50.0,
+            transport: crate::pipeline::TransportConfig::default(),
         };
         (videos, cfg)
     }

@@ -1,0 +1,339 @@
+//! The modeled edge→backend network link: a deterministic,
+//! clock-abstracted transmission stage between admission and the backend
+//! queue.
+//!
+//! The paper folds camera→shedder and shedder→backend transfer times into
+//! the latency budget (Eq. 20) and motivates shedding with "fewer compute
+//! **and network** resources" — yet historically this pipeline modeled
+//! transmission as a free constant. [`LinkModel`] makes the link a real
+//! resource: finite bandwidth (serialization time derived from each
+//! frame's **actual wire size**, see [`crate::video::wire`]), propagation
+//! latency, seeded jitter, and optional loss with bounded retransmit.
+//! [`Link`] is the FIFO transmit queue over that model.
+//!
+//! The default [`TransportConfig`] is [`LinkModel::ideal`] + raw
+//! encoding: **zero behavioral overhead**. Under an ideal link every
+//! driver's decision log is bit-identical to the pre-transport pipeline
+//! (no extra RNG draws, no network-EWMA updates) — pinned by
+//! `rust/tests/transport.rs`. Under a constrained link, measured
+//! per-frame transfer times feed
+//! [`ControlLoop::observe_network`](crate::shedder::ControlLoop::observe_network),
+//! so the control loop's queue sizing (Eq. 20) and threshold derivation
+//! (Eq. 19, via the effective service time) react to link congestion,
+//! not just backend load.
+
+use crate::pipeline::core::FramePayload;
+use crate::util::rng::Rng;
+use crate::video::wire::{raw_wire_size, WireEncoder, WireEncoding};
+use std::collections::HashMap;
+
+/// Parameters of the shedder→backend link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Link capacity in Mbit/s. Non-finite or non-positive values mean
+    /// "no serialization delay" (infinitely fast).
+    pub bandwidth_mbps: f64,
+    /// One-way propagation latency added after serialization (ms).
+    pub propagation_ms: f64,
+    /// Multiplicative jitter amplitude on each attempt's serialization
+    /// time (0.1 = ±10%), drawn from the link's seeded RNG.
+    pub jitter: f64,
+    /// Per-attempt loss probability in [0, 1).
+    pub loss: f64,
+    /// Retransmissions after a lost attempt; a frame that loses
+    /// `1 + max_retransmits` attempts is dropped at the link.
+    pub max_retransmits: u32,
+}
+
+impl LinkModel {
+    /// The verification-mode link: infinitely fast, lossless, latency
+    /// free. Pipelines treat it as "no transport stage at all".
+    pub fn ideal() -> LinkModel {
+        LinkModel {
+            bandwidth_mbps: f64::INFINITY,
+            propagation_ms: 0.0,
+            jitter: 0.0,
+            loss: 0.0,
+            max_retransmits: 0,
+        }
+    }
+
+    /// A clean constrained link: finite bandwidth, no propagation
+    /// latency, jitter or loss.
+    pub fn mbps(bandwidth_mbps: f64) -> LinkModel {
+        LinkModel { bandwidth_mbps, ..LinkModel::ideal() }
+    }
+
+    /// True when the link adds no delay and loses nothing — the mode the
+    /// pipelines bypass entirely (bit-identity with the pre-transport
+    /// engine).
+    pub fn is_ideal(&self) -> bool {
+        !(self.bandwidth_mbps.is_finite() && self.bandwidth_mbps > 0.0)
+            && self.propagation_ms <= 0.0
+            && self.loss <= 0.0
+    }
+}
+
+/// Outcome of offering one frame to the link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transmission {
+    /// When the frame entered service (≥ offer time; the FIFO wait is
+    /// `depart_ms - offer`).
+    pub depart_ms: f64,
+    /// Delivery time at the backend (end of the last serialization
+    /// attempt, plus propagation) — or, for a lost frame, when the link
+    /// gave up.
+    pub arrival_ms: f64,
+    /// Measured shedder→backend transfer (ms): queue wait +
+    /// serialization (all attempts) + propagation. This is the sample fed
+    /// to `ControlLoop::observe_network`.
+    pub transfer_ms: f64,
+    /// Bytes actually serialized per attempt (the wire size).
+    pub bytes: u64,
+    /// Serialization attempts made (1 = no retransmit).
+    pub attempts: u32,
+    /// False when the frame exhausted its retransmit budget.
+    pub delivered: bool,
+}
+
+/// The FIFO transmit queue over a [`LinkModel`]: frames serialize one at
+/// a time in offer order; a frame offered while the link is busy waits
+/// for `busy_until`. Deterministic for a given seed and offer sequence.
+#[derive(Debug, Clone)]
+pub struct Link {
+    model: LinkModel,
+    rng: Rng,
+    busy_until_ms: f64,
+}
+
+impl Link {
+    pub fn new(model: LinkModel, seed: u64) -> Link {
+        Link { model, rng: Rng::new(seed ^ 0x71A5), busy_until_ms: 0.0 }
+    }
+
+    pub fn model(&self) -> &LinkModel {
+        &self.model
+    }
+
+    /// Serialization time of one attempt (ms), jittered.
+    fn ser_ms(&mut self, bytes: u64) -> f64 {
+        let m = self.model.bandwidth_mbps;
+        if !(m.is_finite() && m > 0.0) {
+            return 0.0;
+        }
+        // bytes·8 bit / (mbps·10⁶ bit/s) seconds → ms.
+        let base = bytes as f64 * 8.0 / (m * 1_000.0);
+        if self.model.jitter <= 0.0 {
+            return base;
+        }
+        let f = 1.0 + (self.rng.f64() * 2.0 - 1.0) * self.model.jitter;
+        (base * f).max(0.0)
+    }
+
+    /// Offer `bytes` to the link at `now_ms`. Attempts serialize
+    /// back-to-back (each re-jittered, each a fresh loss coin) until one
+    /// is delivered or the retransmit budget runs out.
+    pub fn transmit(&mut self, now_ms: f64, bytes: u64) -> Transmission {
+        let depart_ms = now_ms.max(self.busy_until_ms);
+        let mut end = depart_ms;
+        let max_attempts = 1 + self.model.max_retransmits;
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            end += self.ser_ms(bytes);
+            let lost = self.model.loss > 0.0 && self.rng.chance(self.model.loss);
+            if !lost {
+                self.busy_until_ms = end;
+                let arrival_ms = end + self.model.propagation_ms.max(0.0);
+                return Transmission {
+                    depart_ms,
+                    arrival_ms,
+                    transfer_ms: arrival_ms - now_ms,
+                    bytes,
+                    attempts,
+                    delivered: true,
+                };
+            }
+            if attempts >= max_attempts {
+                self.busy_until_ms = end;
+                return Transmission {
+                    depart_ms,
+                    arrival_ms: end,
+                    transfer_ms: end - now_ms,
+                    bytes,
+                    attempts,
+                    delivered: false,
+                };
+            }
+        }
+    }
+}
+
+/// Transport configuration of a pipeline: the link plus the wire
+/// encoding that determines each frame's serialized size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransportConfig {
+    pub link: LinkModel,
+    pub encoding: WireEncoding,
+}
+
+impl Default for TransportConfig {
+    /// Ideal link + raw encoding: the historical "transmission is free"
+    /// pipeline, byte-accounted but behaviorally untouched.
+    fn default() -> TransportConfig {
+        TransportConfig { link: LinkModel::ideal(), encoding: WireEncoding::Raw }
+    }
+}
+
+impl TransportConfig {
+    /// A bandwidth-constrained link with the given encoding.
+    pub fn constrained(bandwidth_mbps: f64, encoding: WireEncoding) -> TransportConfig {
+        TransportConfig { link: LinkModel::mbps(bandwidth_mbps), encoding }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.link.is_ideal()
+    }
+}
+
+/// Per-run transport state: the link, one wire encoder per camera, and
+/// the bytes/frames accounting that lands in the pipeline report.
+pub(crate) struct TransportState {
+    encoding: WireEncoding,
+    link: Link,
+    encoders: HashMap<u32, WireEncoder>,
+    buf: Vec<u8>,
+    ideal: bool,
+    pub bytes_on_wire: u64,
+    pub frames_on_wire: u64,
+    pub frames_lost: u64,
+    pub transmit_ms_total: f64,
+}
+
+impl TransportState {
+    pub fn new(cfg: &TransportConfig, seed: u64) -> TransportState {
+        TransportState {
+            encoding: cfg.encoding,
+            link: Link::new(cfg.link, seed),
+            encoders: HashMap::new(),
+            buf: Vec::new(),
+            ideal: cfg.link.is_ideal(),
+            bytes_on_wire: 0,
+            frames_on_wire: 0,
+            frames_lost: 0,
+            transmit_ms_total: 0.0,
+        }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.ideal
+    }
+
+    /// Ideal-link byte accounting: no encoding, no RNG, no delay — the
+    /// frame is counted at its raw-u8 wire size and delivered instantly.
+    pub fn account_ideal(&mut self, payload: &FramePayload) {
+        self.frames_on_wire += 1;
+        self.bytes_on_wire += raw_wire_size(payload.width, payload.height) as u64;
+    }
+
+    /// Encode the frame (per-camera delta state) and push it through the
+    /// link at `now_ms`.
+    pub fn ship(&mut self, now_ms: f64, payload: &FramePayload) -> Transmission {
+        let enc = self
+            .encoders
+            .entry(payload.camera)
+            .or_insert_with(|| WireEncoder::new(self.encoding));
+        enc.encode_into(
+            payload.camera,
+            payload.width,
+            payload.height,
+            &payload.rgb,
+            &mut self.buf,
+        );
+        let bytes = self.buf.len() as u64;
+        let tx = self.link.transmit(now_ms, bytes);
+        self.frames_on_wire += 1;
+        self.bytes_on_wire += bytes;
+        if tx.delivered {
+            self.transmit_ms_total += tx.transfer_ms;
+        } else {
+            self.frames_lost += 1;
+            // The decoder never saw this message: drop the camera's delta
+            // reference so the next frame ships as a keyframe and the two
+            // ends stay bit-coherent.
+            if let Some(enc) = self.encoders.get_mut(&payload.camera) {
+                enc.invalidate();
+            }
+        }
+        tx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_link_detection() {
+        assert!(LinkModel::ideal().is_ideal());
+        assert!(TransportConfig::default().is_ideal());
+        assert!(!LinkModel::mbps(10.0).is_ideal());
+        assert!(!LinkModel { propagation_ms: 5.0, ..LinkModel::ideal() }.is_ideal());
+        assert!(!LinkModel { loss: 0.1, ..LinkModel::ideal() }.is_ideal());
+        // Non-positive bandwidth means "infinitely fast", not "stalled".
+        assert!(LinkModel { bandwidth_mbps: 0.0, ..LinkModel::ideal() }.is_ideal());
+    }
+
+    #[test]
+    fn serialization_and_fifo_math() {
+        // 1 Mbit/s, no jitter: 125 000 bytes = 1 Mbit = 1000 ms.
+        let mut link = Link::new(
+            LinkModel { propagation_ms: 2.0, ..LinkModel::mbps(1.0) },
+            7,
+        );
+        let a = link.transmit(0.0, 125_000);
+        assert!(a.delivered);
+        assert_eq!(a.depart_ms, 0.0);
+        assert!((a.arrival_ms - 1002.0).abs() < 1e-9, "arrival {}", a.arrival_ms);
+        assert!((a.transfer_ms - 1002.0).abs() < 1e-9);
+        // Offered while busy: waits for the link, FIFO.
+        let b = link.transmit(10.0, 12_500);
+        assert!((b.depart_ms - 1000.0).abs() < 1e-9);
+        assert!((b.arrival_ms - 1102.0).abs() < 1e-9);
+        assert!((b.transfer_ms - 1092.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loss_exhausts_bounded_retransmits() {
+        let mut link = Link::new(
+            LinkModel { loss: 1.0, max_retransmits: 2, ..LinkModel::mbps(1.0) },
+            1,
+        );
+        let t = link.transmit(0.0, 125_000);
+        assert!(!t.delivered);
+        assert_eq!(t.attempts, 3);
+        // All three attempts occupied the link back-to-back.
+        assert!((t.arrival_ms - 3000.0).abs() < 1e-9, "gave up at {}", t.arrival_ms);
+    }
+
+    #[test]
+    fn jitter_is_seeded_and_bounded() {
+        let mk = |seed| {
+            Link::new(LinkModel { jitter: 0.1, ..LinkModel::mbps(1.0) }, seed)
+                .transmit(0.0, 125_000)
+        };
+        let a = mk(5);
+        let b = mk(5);
+        assert_eq!(a, b, "same seed, same transmission");
+        assert!(a.transfer_ms >= 900.0 - 1e-9 && a.transfer_ms <= 1100.0 + 1e-9);
+    }
+
+    #[test]
+    fn ideal_link_transmits_for_free() {
+        let mut link = Link::new(LinkModel::ideal(), 9);
+        let t = link.transmit(42.0, 1 << 30);
+        assert!(t.delivered);
+        assert_eq!(t.transfer_ms, 0.0);
+        assert_eq!(t.arrival_ms, 42.0);
+    }
+}

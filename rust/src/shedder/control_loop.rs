@@ -8,6 +8,12 @@ use crate::util::stats::{Ewma, SlidingWindow};
 use std::collections::VecDeque;
 
 /// Rolling estimate of ingress frames/sec from arrival timestamps.
+///
+/// Timebase contract: every timestamp this estimator (and the network
+/// EWMAs below) sees is **milliseconds** on the stream clock — the same
+/// unit the event queue keys round to µs internally. Mixing µs into this
+/// path would inflate the measured span 1000× and zero the rate;
+/// `observe` debug-asserts the invariants instead of guessing.
 #[derive(Debug, Clone)]
 pub struct RateEstimator {
     window_ms: f64,
@@ -36,6 +42,14 @@ impl RateEstimator {
     }
 
     pub fn observe(&mut self, ts_ms: f64) {
+        debug_assert!(
+            ts_ms.is_finite() && ts_ms >= 0.0,
+            "arrival timestamp must be finite non-negative ms, got {ts_ms}"
+        );
+        debug_assert!(
+            self.arrivals.back().is_none_or(|&b| ts_ms >= b - self.window_ms),
+            "arrival timestamps regressed by more than the window — µs/ms mixup?"
+        );
         self.arrivals.push_back(ts_ms);
         while let Some(&front) = self.arrivals.front() {
             if ts_ms - front > self.window_ms {
@@ -73,6 +87,11 @@ pub struct ControlLoop {
     /// Smoothed measured network latencies (ms), seeded from config.
     net_cam_ls: Ewma,
     net_ls_q: Ewma,
+    /// Configured shedder→backend latency (the seed of `net_ls_q`): the
+    /// constant the latency budget already accounts for. Measured excess
+    /// over it means the *link* is throttling throughput — see
+    /// [`Self::effective_service_ms`].
+    net_ls_q_baseline: f64,
     /// Camera-side processing latency (ms), seeded from config.
     proc_cam: f64,
     rate: RateEstimator,
@@ -96,6 +115,7 @@ impl ControlLoop {
             proc_recent: SlidingWindow::new(5),
             net_cam_ls,
             net_ls_q,
+            net_ls_q_baseline: costs.net_ls_q_ms,
             proc_cam: costs.cam_ms,
             rate: RateEstimator::new(3_000.0),
             latency_bound_ms,
@@ -109,14 +129,38 @@ impl ControlLoop {
         self.proc_recent.push(ms);
     }
 
-    /// Observe a measured network latency sample.
-    pub fn observe_network(&mut self, cam_ls_ms: Option<f64>, ls_q_ms: Option<f64>) {
-        if let Some(x) = cam_ls_ms {
-            self.net_cam_ls.add(x);
-        }
-        if let Some(x) = ls_q_ms {
-            self.net_ls_q.add(x);
-        }
+    /// Metrics Collector input: the transport layer measured one frame's
+    /// camera→shedder and shedder→backend transfers (ms). Both samples
+    /// are required — the transport stage always has the pair (the cam→LS
+    /// sample rides on the frame payload; the LS→Q sample is the link's
+    /// measured queue wait + serialization + propagation). The historical
+    /// `Option<f64>` pairs existed for callers that never materialized;
+    /// nothing ever passed `Some` until the transport layer landed.
+    pub fn observe_network(&mut self, cam_to_shedder_ms: f64, shedder_to_backend_ms: f64) {
+        debug_assert!(
+            cam_to_shedder_ms.is_finite() && cam_to_shedder_ms >= 0.0,
+            "cam→shedder sample must be finite non-negative ms, got {cam_to_shedder_ms}"
+        );
+        debug_assert!(
+            shedder_to_backend_ms.is_finite() && shedder_to_backend_ms >= 0.0,
+            "shedder→backend sample must be finite non-negative ms, got {shedder_to_backend_ms}"
+        );
+        self.net_cam_ls.add(cam_to_shedder_ms);
+        self.net_ls_q.add(shedder_to_backend_ms);
+    }
+
+    /// Smoothed camera→shedder transfer (ms); the config constant until
+    /// measurements arrive.
+    pub fn net_cam_ls_ms(&self) -> f64 {
+        self.net_cam_ls.get_or(0.0)
+    }
+
+    /// Smoothed shedder→backend transfer (ms); the config constant until
+    /// measurements arrive. Exactly the configured seed when no
+    /// [`Self::observe_network`] sample has landed — the ideal-link
+    /// bit-identity hinges on this.
+    pub fn net_ls_q_ms(&self) -> f64 {
+        self.net_ls_q.get_or(0.0)
     }
 
     /// Observe an ingress frame arrival.
@@ -135,6 +179,20 @@ impl ControlLoop {
         self.proc_q.get_or(1.0).max(0.1)
     }
 
+    /// Per-frame service time the throughput derivation (Eq. 19) budgets
+    /// with: smoothed proc_Q **plus the measured excess** shedder→backend
+    /// transfer over the configured baseline. With the backend token held
+    /// across the network hop, the true service cycle is transfer + exec;
+    /// the configured constant is already in every frame's budget, so
+    /// only sustained *excess* (a congested link serializing slower than
+    /// the backend computes) shrinks the supported throughput. Without
+    /// transport measurements the excess is zero and this is exactly
+    /// `proc_q_ms()` — the pre-transport pipeline.
+    pub fn effective_service_ms(&self) -> f64 {
+        let excess = (self.net_ls_q.get_or(0.0) - self.net_ls_q_baseline).max(0.0);
+        self.proc_q_ms() + excess
+    }
+
     /// Measured ingress rate (fps). The estimator's own configured
     /// nominal (see [`Self::set_nominal_fps`]) is the authoritative
     /// cold-start fallback; `default_fps` is a last resort for callers
@@ -149,9 +207,14 @@ impl ControlLoop {
         }
     }
 
-    /// Target drop rate from current load (Eq. 18/19).
+    /// Target drop rate from current load (Eq. 18/19), on the effective
+    /// service time so a congested link raises the threshold like a slow
+    /// backend does.
     pub fn target_drop_rate(&self, default_fps: f64) -> f64 {
-        super::admission::target_drop_rate(self.proc_q_ms(), self.ingress_fps(default_fps))
+        super::admission::target_drop_rate(
+            self.effective_service_ms(),
+            self.ingress_fps(default_fps),
+        )
     }
 
     /// Dynamic queue size (Eq. 20): the largest N such that the Nth queued
@@ -334,8 +397,45 @@ mod tests {
         }
         let before = cl.queue_size();
         for _ in 0..200 {
-            cl.observe_network(Some(100.0), Some(200.0));
+            cl.observe_network(100.0, 200.0);
         }
         assert!(cl.queue_size() < before);
+    }
+
+    #[test]
+    fn network_ewmas_seed_from_config_exactly() {
+        // The ideal-link bit-identity contract: before any measurement
+        // the EWMAs ARE the config constants, to the bit.
+        let costs = CostConfig::default();
+        let cl = mk();
+        assert_eq!(cl.net_ls_q_ms(), costs.net_ls_q_ms);
+        assert_eq!(cl.net_cam_ls_ms(), costs.net_cam_ls_ms);
+        assert_eq!(cl.effective_service_ms(), cl.proc_q_ms());
+    }
+
+    #[test]
+    fn link_congestion_raises_target_rate() {
+        let mut cl = mk();
+        cl.set_nominal_fps(10.0);
+        // Fast backend (50 ms → 20 fps supported): no compute shedding.
+        for _ in 0..200 {
+            cl.observe_backend(50.0);
+        }
+        assert_eq!(cl.target_drop_rate(10.0), 0.0);
+        // Congested link: measured LS→Q transfers far above the 5 ms
+        // baseline stretch the effective service time → Eq. 19 sheds.
+        for _ in 0..200 {
+            cl.observe_network(5.0, 250.0);
+        }
+        let r = cl.target_drop_rate(10.0);
+        assert!(r > 0.5, "congested-link rate {r}");
+        // And the excess never goes negative: a faster-than-configured
+        // link cannot raise supported throughput above the backend's.
+        let mut fast = mk();
+        for _ in 0..200 {
+            fast.observe_backend(50.0);
+            fast.observe_network(1.0, 1.0);
+        }
+        assert_eq!(fast.effective_service_ms(), fast.proc_q_ms());
     }
 }

@@ -499,7 +499,7 @@ impl<T> MultiShedder<T> {
                 // Exactly the single-pipeline Eq. 19 derivation per query
                 // (same expression, same rounding — the bit-match mode).
                 for (q, dr) in self.queries.iter_mut().zip(dropped.iter_mut()) {
-                    let rate = target_drop_rate(q.control.proc_q_ms(), fps);
+                    let rate = target_drop_rate(q.control.effective_service_ms(), fps);
                     q.admission.set_target_rate(rate);
                     let evicted = q.queue.resize(q.control.queue_size());
                     q.evictions += evicted.len() as u64;
@@ -513,7 +513,7 @@ impl<T> MultiShedder<T> {
                 self.needs_buf.extend(
                     self.queries
                         .iter()
-                        .map(|q| fps * q.control.proc_q_ms() / 1000.0),
+                        .map(|q| fps * q.control.effective_service_ms() / 1000.0),
                 );
                 self.arbiter.allocate_into(&self.needs_buf, &mut self.phi_buf);
                 for (i, (q, dr)) in
@@ -585,6 +585,18 @@ impl<T> MultiShedder<T> {
     /// Query `q`'s backend finished a frame after `proc_ms`.
     pub fn on_backend_complete(&mut self, q: usize, proc_ms: f64) {
         self.queries[q].control.observe_backend(proc_ms);
+    }
+
+    /// The transport layer measured one delivered frame's
+    /// (camera→shedder, shedder→backend) transfer pair for query `q`.
+    pub fn observe_network(&mut self, q: usize, cam_ms: f64, ls_q_ms: f64) {
+        self.queries[q].control.observe_network(cam_ms, ls_q_ms);
+    }
+
+    /// Query `q`'s smoothed shedder→backend transfer (ms) — the Eq. 20
+    /// network term its dispatch deadline check budgets with.
+    pub fn net_ls_q_ms(&self, q: usize) -> f64 {
+        self.queries[q].control.net_ls_q_ms()
     }
 
     /// Next frame query `q` should transmit (highest utility), if any.

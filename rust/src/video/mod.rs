@@ -11,6 +11,7 @@ pub mod objects;
 pub mod scene;
 pub mod segments;
 pub mod streamer;
+pub mod wire;
 
 pub use dataset::{build_dataset, DatasetConfig, MIN_TARGET_PX};
 pub use frame::{Frame, Paint, VisibleObject};
@@ -19,3 +20,4 @@ pub use objects::{Kind, TrafficConfig, Trajectory};
 pub use scene::Scene;
 pub use segments::{SegmentKind, SegmentedVideo};
 pub use streamer::Streamer;
+pub use wire::{raw_wire_size, WireDecoder, WireEncoder, WireEncoding, WireHeader, WireMode};

@@ -1,0 +1,554 @@
+//! Wire encoding for edge→backend frame transmission: the byte format
+//! whose **actual size** drives the transport link's serialization time
+//! (see [`crate::pipeline::transport`]).
+//!
+//! The paper's premise — shedding lets a query meet its latency bound
+//! "with fewer compute and network resources" — only bites if bytes on
+//! the wire are modeled. Two encodings:
+//!
+//! * **Raw** — u8 planes when every channel is integer-valued (what real
+//!   cameras ship), a lossless f32 little-endian fallback otherwise. The
+//!   size is the frame geometry; no temporal state.
+//! * **Delta** — the transport analogue of the incremental feature
+//!   engine's dirty-tile diffing ([`crate::features::incremental`]): the
+//!   encoder keeps the previously shipped quantized frame per camera,
+//!   diffs the new frame tile by tile, and ships only the dirty tiles
+//!   (tile index + pixels). A **keyframe** (full u8 frame that resets
+//!   decoder state) is emitted on the first frame, after any fallback,
+//!   and when the dirty fraction exceeds the [`WireEncoding::Delta`]
+//!   threshold `max_dirty_frac` — a scene cut would cost more as a diff
+//!   than as a keyframe.
+//!
+//! Decoding is exact: [`WireDecoder`] reproduces the encoder's input
+//! bit-for-bit on every mode (u8 modes because the input was
+//! integer-valued, f32 mode by byte identity) — property-pinned by
+//! `rust/tests/transport.rs`.
+//!
+//! ## Format
+//!
+//! Little-endian throughout. Every message starts with a 10-byte header:
+//!
+//! ```text
+//! [0]     magic 0x57 ('W')
+//! [1]     mode: 0 raw-u8, 1 raw-f32, 2 keyframe-u8, 3 delta-u8
+//! [2..6]  camera id (u32)
+//! [6..8]  width  (u16)
+//! [8..10] height (u16)
+//! ```
+//!
+//! Payloads: raw-u8 / keyframe-u8 carry `w*h*3` bytes; raw-f32 carries
+//! `w*h*3` f32s (4 bytes each); delta-u8 carries a u32 dirty-tile count
+//! followed by, per tile in ascending index order, the u32 tile index and
+//! the tile's pixels (row-major within the clipped tile rect).
+
+use anyhow::{bail, Result};
+
+/// Header length in bytes (see the module docs for the layout).
+pub const WIRE_HEADER_LEN: usize = 10;
+
+const WIRE_MAGIC: u8 = 0x57;
+
+/// How frames are serialized for the link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WireEncoding {
+    /// Stateless full-frame encoding (u8 planes, f32 fallback).
+    Raw,
+    /// Dirty-tile diff against the previously shipped frame, with
+    /// keyframe fallback (first frame, fallback recovery, scene cuts).
+    Delta {
+        /// Tile side length in pixels (16 matches the incremental
+        /// feature engine's granularity).
+        tile: usize,
+        /// Above this fraction of dirty tiles a keyframe is cheaper than
+        /// a diff (headers per tile plus full-tile payloads).
+        max_dirty_frac: f64,
+    },
+}
+
+impl WireEncoding {
+    /// The delta encoding at its default operating point. The keyframe
+    /// threshold is high: a delta message only overtakes a keyframe in
+    /// size near 100% dirty (8 bytes of header per ~770-byte tile), so
+    /// the fallback exists for scene cuts and decoder hygiene, not as a
+    /// byte optimum — and shipped frames can be temporally far apart
+    /// under heavy shedding, which inflates dirty fractions.
+    pub fn delta_default() -> WireEncoding {
+        WireEncoding::Delta { tile: 16, max_dirty_frac: 0.85 }
+    }
+}
+
+/// What one encoded message actually was (stats / tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireMode {
+    RawU8 = 0,
+    RawF32 = 1,
+    Key = 2,
+    Delta = 3,
+}
+
+impl WireMode {
+    fn from_byte(b: u8) -> Option<WireMode> {
+        match b {
+            0 => Some(WireMode::RawU8),
+            1 => Some(WireMode::RawF32),
+            2 => Some(WireMode::Key),
+            3 => Some(WireMode::Delta),
+            _ => None,
+        }
+    }
+}
+
+/// Decoded message header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireHeader {
+    pub mode: WireMode,
+    pub camera: u32,
+    pub width: usize,
+    pub height: usize,
+}
+
+/// Raw-u8 wire size for a frame geometry — the "no compression" yardstick
+/// (and the byte accounting of the ideal link, which never encodes).
+pub fn raw_wire_size(width: usize, height: usize) -> usize {
+    WIRE_HEADER_LEN + width * height * 3
+}
+
+// The feature layer's exact-representability quantizer: one definition
+// of "integer frame" shared by the wire encoder and the LUT/incremental
+// fast paths, so the two notions can never diverge.
+use crate::features::fast::quantize as quantize_u8;
+
+fn push_header(out: &mut Vec<u8>, mode: WireMode, camera: u32, width: usize, height: usize) {
+    out.push(WIRE_MAGIC);
+    out.push(mode as u8);
+    out.extend_from_slice(&camera.to_le_bytes());
+    out.extend_from_slice(&(width as u16).to_le_bytes());
+    out.extend_from_slice(&(height as u16).to_le_bytes());
+}
+
+/// Stateful per-camera encoder. One encoder per camera: the delta state
+/// is the last frame *shipped for that camera*, which is exactly what the
+/// matching [`WireDecoder`] has reconstructed on the other end.
+#[derive(Debug, Clone)]
+pub struct WireEncoder {
+    encoding: WireEncoding,
+    width: usize,
+    height: usize,
+    /// Last shipped quantized frame (delta reference); valid only when
+    /// `valid` is set.
+    prev: Vec<u8>,
+    /// Current-frame quantization scratch (swapped with `prev`).
+    cur: Vec<u8>,
+    /// Dirty-tile scratch, cleared per frame (keeps the encode path
+    /// allocation-free after warmup, like the rest of the hot path).
+    dirty: Vec<u32>,
+    valid: bool,
+    /// Messages emitted per mode: [raw_u8, raw_f32, key, delta].
+    mode_counts: [u64; 4],
+}
+
+impl WireEncoder {
+    pub fn new(encoding: WireEncoding) -> WireEncoder {
+        if let WireEncoding::Delta { tile, .. } = encoding {
+            assert!(tile > 0, "tile size must be positive");
+        }
+        WireEncoder {
+            encoding,
+            width: 0,
+            height: 0,
+            prev: Vec::new(),
+            cur: Vec::new(),
+            dirty: Vec::new(),
+            valid: false,
+            mode_counts: [0; 4],
+        }
+    }
+
+    /// Messages emitted so far per mode: `[raw_u8, raw_f32, key, delta]`.
+    pub fn mode_counts(&self) -> [u64; 4] {
+        self.mode_counts
+    }
+
+    /// Drop the delta reference. The transport layer calls this when the
+    /// link *loses* a message: the decoder never saw the frame this
+    /// encoder diffed against, so the next message must be a keyframe to
+    /// keep the two ends bit-coherent.
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+
+    /// Encode one frame into `out` (cleared first); returns the mode
+    /// actually used. The wire size is `out.len()`.
+    pub fn encode_into(
+        &mut self,
+        camera: u32,
+        width: usize,
+        height: usize,
+        rgb: &[f32],
+        out: &mut Vec<u8>,
+    ) -> WireMode {
+        assert_eq!(rgb.len(), width * height * 3, "frame geometry mismatch");
+        assert!(width <= u16::MAX as usize && height <= u16::MAX as usize);
+        out.clear();
+        if width != self.width || height != self.height {
+            // Geometry change: the delta reference is meaningless.
+            self.width = width;
+            self.height = height;
+            self.valid = false;
+        }
+        let mode = match self.encoding {
+            WireEncoding::Raw => self.encode_raw(camera, rgb, out),
+            WireEncoding::Delta { tile, max_dirty_frac } => {
+                self.encode_delta(camera, rgb, tile, max_dirty_frac, out)
+            }
+        };
+        self.mode_counts[mode as usize] += 1;
+        mode
+    }
+
+    fn encode_raw(&mut self, camera: u32, rgb: &[f32], out: &mut Vec<u8>) -> WireMode {
+        if quantize_u8(rgb, &mut self.cur) {
+            push_header(out, WireMode::RawU8, camera, self.width, self.height);
+            out.extend_from_slice(&self.cur);
+            WireMode::RawU8
+        } else {
+            self.push_f32(camera, rgb, out);
+            WireMode::RawF32
+        }
+    }
+
+    fn push_f32(&mut self, camera: u32, rgb: &[f32], out: &mut Vec<u8>) {
+        push_header(out, WireMode::RawF32, camera, self.width, self.height);
+        out.reserve(rgb.len() * 4);
+        for &x in rgb {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn encode_delta(
+        &mut self,
+        camera: u32,
+        rgb: &[f32],
+        tile: usize,
+        max_dirty_frac: f64,
+        out: &mut Vec<u8>,
+    ) -> WireMode {
+        if !quantize_u8(rgb, &mut self.cur) {
+            // Non-integer frame: lossless f32 escape; the decoder drops
+            // its delta state just like we do.
+            self.valid = false;
+            self.push_f32(camera, rgb, out);
+            return WireMode::RawF32;
+        }
+        if !self.valid {
+            return self.emit_key(camera, out);
+        }
+
+        let tiles_x = self.width.div_ceil(tile);
+        let tiles_y = self.height.div_ceil(tile);
+        let n_tiles = tiles_x * tiles_y;
+        // Tile diff: row-slice compares so the inner loop is memcmp-grade
+        // (the same strategy as the incremental feature engine's).
+        self.dirty.clear();
+        for ti in 0..n_tiles {
+            let (x0, y0, x1, y1) = self.tile_rect(ti, tile, tiles_x);
+            for y in y0..y1 {
+                let a = 3 * (y * self.width + x0);
+                let b = 3 * (y * self.width + x1);
+                if self.cur[a..b] != self.prev[a..b] {
+                    self.dirty.push(ti as u32);
+                    break;
+                }
+            }
+        }
+        if (self.dirty.len() as f64) > max_dirty_frac * n_tiles as f64 {
+            // Scene cut: a keyframe is smaller and resets cleanly.
+            return self.emit_key(camera, out);
+        }
+
+        push_header(out, WireMode::Delta, camera, self.width, self.height);
+        out.extend_from_slice(&(self.dirty.len() as u32).to_le_bytes());
+        for &ti in &self.dirty {
+            out.extend_from_slice(&ti.to_le_bytes());
+            let tx = ti as usize % tiles_x;
+            let ty = ti as usize / tiles_x;
+            let x0 = tx * tile;
+            let y0 = ty * tile;
+            let (x1, y1) = ((x0 + tile).min(self.width), (y0 + tile).min(self.height));
+            for y in y0..y1 {
+                let a = 3 * (y * self.width + x0);
+                let b = 3 * (y * self.width + x1);
+                out.extend_from_slice(&self.cur[a..b]);
+            }
+        }
+        std::mem::swap(&mut self.prev, &mut self.cur);
+        WireMode::Delta
+    }
+
+    fn emit_key(&mut self, camera: u32, out: &mut Vec<u8>) -> WireMode {
+        push_header(out, WireMode::Key, camera, self.width, self.height);
+        out.extend_from_slice(&self.cur);
+        std::mem::swap(&mut self.prev, &mut self.cur);
+        self.valid = true;
+        WireMode::Key
+    }
+
+    #[inline]
+    fn tile_rect(&self, ti: usize, tile: usize, tiles_x: usize) -> (usize, usize, usize, usize) {
+        let tx = ti % tiles_x;
+        let ty = ti / tiles_x;
+        let x0 = tx * tile;
+        let y0 = ty * tile;
+        (x0, y0, (x0 + tile).min(self.width), (y0 + tile).min(self.height))
+    }
+}
+
+/// Stateful per-camera decoder: mirrors the encoder's delta reference so
+/// `decode(encode(frame))` reproduces `frame` exactly along any shipped
+/// sequence.
+#[derive(Debug, Clone, Default)]
+pub struct WireDecoder {
+    prev: Vec<u8>,
+    width: usize,
+    height: usize,
+    valid: bool,
+    /// The delta tile side — part of the stream's encoder config, not
+    /// the message header, so it must be supplied via [`Self::with_tile`]
+    /// before the first delta message (raw/f32/keyframe messages decode
+    /// without it; a delta message without it is an error).
+    tile: usize,
+}
+
+impl WireDecoder {
+    pub fn new() -> WireDecoder {
+        WireDecoder::default()
+    }
+
+    /// Set the delta tile size (must match the encoder's). Raw/key/f32
+    /// messages decode without it.
+    pub fn with_tile(mut self, tile: usize) -> WireDecoder {
+        self.tile = tile;
+        self
+    }
+
+    /// Decode one message into `out` (H*W*3 f32, cleared first).
+    pub fn decode_into(&mut self, bytes: &[u8], out: &mut Vec<f32>) -> Result<WireHeader> {
+        if bytes.len() < WIRE_HEADER_LEN {
+            bail!("wire message shorter than header ({} bytes)", bytes.len());
+        }
+        if bytes[0] != WIRE_MAGIC {
+            bail!("bad wire magic {:#x}", bytes[0]);
+        }
+        let mode = WireMode::from_byte(bytes[1])
+            .ok_or_else(|| anyhow::anyhow!("unknown wire mode {}", bytes[1]))?;
+        let camera = u32::from_le_bytes(bytes[2..6].try_into().unwrap());
+        let width = u16::from_le_bytes(bytes[6..8].try_into().unwrap()) as usize;
+        let height = u16::from_le_bytes(bytes[8..10].try_into().unwrap()) as usize;
+        let n = width * height * 3;
+        let payload = &bytes[WIRE_HEADER_LEN..];
+        let header = WireHeader { mode, camera, width, height };
+
+        match mode {
+            WireMode::RawU8 => {
+                if payload.len() != n {
+                    bail!("raw-u8 payload {} bytes, want {n}", payload.len());
+                }
+                out.clear();
+                out.extend(payload.iter().map(|&b| b as f32));
+            }
+            WireMode::RawF32 => {
+                if payload.len() != n * 4 {
+                    bail!("raw-f32 payload {} bytes, want {}", payload.len(), n * 4);
+                }
+                out.clear();
+                out.extend(
+                    payload
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+                );
+                // The encoder dropped its delta state on this escape.
+                self.valid = false;
+            }
+            WireMode::Key => {
+                if payload.len() != n {
+                    bail!("keyframe payload {} bytes, want {n}", payload.len());
+                }
+                self.prev.clear();
+                self.prev.extend_from_slice(payload);
+                self.width = width;
+                self.height = height;
+                self.valid = true;
+                out.clear();
+                out.extend(payload.iter().map(|&b| b as f32));
+            }
+            WireMode::Delta => {
+                if !self.valid || self.width != width || self.height != height {
+                    bail!("delta message without a matching keyframe reference");
+                }
+                if self.tile == 0 {
+                    bail!("delta decoding needs the encoder's tile size (with_tile)");
+                }
+                if payload.len() < 4 {
+                    bail!("delta payload truncated");
+                }
+                let n_dirty = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+                let tiles_x = width.div_ceil(self.tile);
+                let tiles_y = height.div_ceil(self.tile);
+                let mut off = 4;
+                for _ in 0..n_dirty {
+                    if payload.len() < off + 4 {
+                        bail!("delta payload truncated at tile index");
+                    }
+                    let ti =
+                        u32::from_le_bytes(payload[off..off + 4].try_into().unwrap()) as usize;
+                    off += 4;
+                    if ti >= tiles_x * tiles_y {
+                        bail!("delta tile index {ti} out of range");
+                    }
+                    let tx = ti % tiles_x;
+                    let ty = ti / tiles_x;
+                    let x0 = tx * self.tile;
+                    let y0 = ty * self.tile;
+                    let x1 = (x0 + self.tile).min(width);
+                    let y1 = (y0 + self.tile).min(height);
+                    for y in y0..y1 {
+                        let a = 3 * (y * width + x0);
+                        let b = 3 * (y * width + x1);
+                        if payload.len() < off + (b - a) {
+                            bail!("delta payload truncated inside tile {ti}");
+                        }
+                        self.prev[a..b].copy_from_slice(&payload[off..off + (b - a)]);
+                        off += b - a;
+                    }
+                }
+                if off != payload.len() {
+                    bail!("delta payload has {} trailing bytes", payload.len() - off);
+                }
+                out.clear();
+                out.extend(self.prev.iter().map(|&b| b as f32));
+            }
+        }
+        Ok(header)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn int_frame(rng: &mut Rng, n_px: usize) -> Vec<f32> {
+        (0..n_px * 3).map(|_| rng.below(256) as f32).collect()
+    }
+
+    #[test]
+    fn raw_u8_roundtrip_and_size() {
+        let mut rng = Rng::new(0x31);
+        let (w, h) = (24, 16);
+        let rgb = int_frame(&mut rng, w * h);
+        let mut enc = WireEncoder::new(WireEncoding::Raw);
+        let mut buf = Vec::new();
+        let mode = enc.encode_into(3, w, h, &rgb, &mut buf);
+        assert_eq!(mode, WireMode::RawU8);
+        assert_eq!(buf.len(), raw_wire_size(w, h));
+        let mut dec = WireDecoder::new();
+        let mut out = Vec::new();
+        let hdr = dec.decode_into(&buf, &mut out).unwrap();
+        assert_eq!(hdr, WireHeader { mode, camera: 3, width: w, height: h });
+        assert_eq!(out, rgb);
+    }
+
+    #[test]
+    fn float_frames_escape_to_f32_losslessly() {
+        let (w, h) = (8, 8);
+        let mut rng = Rng::new(0x32);
+        let mut rgb = int_frame(&mut rng, w * h);
+        rgb[5] += 0.25;
+        rgb[100] = 1e-3;
+        let mut enc = WireEncoder::new(WireEncoding::delta_default());
+        let mut buf = Vec::new();
+        assert_eq!(enc.encode_into(0, w, h, &rgb, &mut buf), WireMode::RawF32);
+        let mut dec = WireDecoder::new().with_tile(16);
+        let mut out = Vec::new();
+        dec.decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out, rgb); // bit-exact f32 round trip
+    }
+
+    #[test]
+    fn delta_stream_key_then_diffs_then_key_on_cut() {
+        let mut rng = Rng::new(0x33);
+        let (w, h) = (48, 32);
+        let base = int_frame(&mut rng, w * h);
+        let mut enc = WireEncoder::new(WireEncoding::Delta { tile: 16, max_dirty_frac: 0.4 });
+        let mut dec = WireDecoder::new().with_tile(16);
+        let (mut buf, mut out) = (Vec::new(), Vec::new());
+
+        // First frame: keyframe, full size.
+        assert_eq!(enc.encode_into(1, w, h, &base, &mut buf), WireMode::Key);
+        dec.decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out, base);
+
+        // Small change: delta, much smaller than raw.
+        let mut moved = base.clone();
+        for p in 0..10 {
+            moved[3 * p] = (moved[3 * p] + 7.0) % 256.0;
+        }
+        assert_eq!(enc.encode_into(1, w, h, &moved, &mut buf), WireMode::Delta);
+        assert!(buf.len() < raw_wire_size(w, h) / 4, "delta {} bytes", buf.len());
+        dec.decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out, moved);
+
+        // Unchanged frame: header + count only.
+        assert_eq!(enc.encode_into(1, w, h, &moved, &mut buf), WireMode::Delta);
+        assert_eq!(buf.len(), WIRE_HEADER_LEN + 4);
+        dec.decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out, moved);
+
+        // Scene cut: everything dirty → keyframe fallback.
+        let cut = int_frame(&mut rng, w * h);
+        assert_eq!(enc.encode_into(1, w, h, &cut, &mut buf), WireMode::Key);
+        dec.decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out, cut);
+        assert_eq!(enc.mode_counts(), [0, 0, 2, 2]);
+    }
+
+    #[test]
+    fn delta_recovers_after_float_escape() {
+        let mut rng = Rng::new(0x34);
+        let (w, h) = (16, 16);
+        let a = int_frame(&mut rng, w * h);
+        let mut b = a.clone();
+        b[0] = 0.5; // forces the f32 escape
+        let c = a.clone();
+        let mut enc = WireEncoder::new(WireEncoding::delta_default());
+        let mut dec = WireDecoder::new().with_tile(16);
+        let (mut buf, mut out) = (Vec::new(), Vec::new());
+        assert_eq!(enc.encode_into(0, w, h, &a, &mut buf), WireMode::Key);
+        dec.decode_into(&buf, &mut out).unwrap();
+        assert_eq!(enc.encode_into(0, w, h, &b, &mut buf), WireMode::RawF32);
+        dec.decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out, b);
+        // State was invalidated on both ends → keyframe, not delta.
+        assert_eq!(enc.encode_into(0, w, h, &c, &mut buf), WireMode::Key);
+        dec.decode_into(&buf, &mut out).unwrap();
+        assert_eq!(out, c);
+    }
+
+    #[test]
+    fn delta_without_keyframe_is_rejected() {
+        let mut rng = Rng::new(0x35);
+        let (w, h) = (16, 16);
+        let a = int_frame(&mut rng, w * h);
+        let mut enc = WireEncoder::new(WireEncoding::delta_default());
+        let (mut buf, mut out) = (Vec::new(), Vec::new());
+        enc.encode_into(0, w, h, &a, &mut buf);
+        let mut delta_msg = Vec::new();
+        // Force a real delta message…
+        let mut tiny = a.clone();
+        tiny[0] = (tiny[0] + 1.0) % 256.0;
+        assert_eq!(enc.encode_into(0, w, h, &tiny, &mut delta_msg), WireMode::Delta);
+        // …and decode it on a decoder that never saw the keyframe.
+        let mut fresh = WireDecoder::new().with_tile(16);
+        assert!(fresh.decode_into(&delta_msg, &mut out).is_err());
+    }
+}

@@ -41,6 +41,7 @@ fn sim_cfg(fps: f64, seed: u64) -> SimConfig {
         policy: Policy::UtilityControlLoop,
         seed,
         fps_total: fps,
+        transport: uals::pipeline::TransportConfig::default(),
     }
 }
 
@@ -56,6 +57,7 @@ fn rt_cfg(cfg: &SimConfig) -> RealtimeConfig {
         policy: cfg.policy.clone(),
         seed: cfg.seed,
         arbiter: uals::shedder::ArbiterPolicy::Standalone,
+        transport: cfg.transport,
     }
 }
 

@@ -42,6 +42,7 @@ fn fig13a_scenario_shape_holds_end_to_end() {
         policy: Policy::UtilityControlLoop,
         seed: 0xE,
         fps_total: sv.fps(),
+        transport: uals::pipeline::TransportConfig::default(),
     };
     let extractor = Extractor::native(model);
     let mut backend = BackendQuery::new(
@@ -112,6 +113,7 @@ fn composite_or_query_end_to_end() {
         policy: Policy::UtilityControlLoop,
         seed: 2,
         fps_total: 10.0,
+        transport: uals::pipeline::TransportConfig::default(),
     };
     let extractor = Extractor::native(model);
     let mut backend = BackendQuery::new(
@@ -209,6 +211,7 @@ fn sharded_multi_camera_sweep_end_to_end() {
         policy: Policy::UtilityControlLoop,
         seed: 0xE4,
         fps_total: 10.0,
+        transport: uals::pipeline::TransportConfig::default(),
     };
     let (merged, per_camera) =
         uals::pipeline::run_sharded_sim(&videos, &cfg, &model, uals::pipeline::default_threads())

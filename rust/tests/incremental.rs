@@ -211,6 +211,7 @@ fn sweep_cfg() -> SimConfig {
         policy: Policy::UtilityControlLoop,
         seed: 0x1AC,
         fps_total: 10.0,
+        transport: uals::pipeline::TransportConfig::default(),
     }
 }
 

@@ -63,6 +63,7 @@ fn run_multi(
         arbiter,
         seed,
         fps_total: fps,
+        transport: uals::pipeline::TransportConfig::default(),
     };
     let extractor = Extractor::native(set.union_model().clone());
     let mut backends = multi_backends(set, &cfg.costs, cfg.seed);
@@ -97,6 +98,7 @@ fn run_single(
         policy: Policy::UtilityControlLoop,
         seed,
         fps_total: fps,
+        transport: uals::pipeline::TransportConfig::default(),
     };
     let extractor = Extractor::native(set.query_model(q));
     let mut backend = BackendQuery::new(
@@ -197,6 +199,7 @@ fn shared_pipeline_extracts_exactly_once_per_frame_for_8_queries() {
             policy: Policy::UtilityControlLoop,
             seed: 0xBEEF,
             fps_total: aggregate_fps(&videos),
+            transport: uals::pipeline::TransportConfig::default(),
         };
         let mut backend = BackendQuery::new(
             cfg.query.clone(),

@@ -1,0 +1,419 @@
+//! Transport-layer properties:
+//!
+//! 1. **Ideal-link bit-identity** — with [`LinkModel::ideal`] (the
+//!    default), every driver (sim, realtime, sharded, multi) produces
+//!    decision logs bit-identical to the pre-transport pipeline, across
+//!    seeds and policies, regardless of the configured wire encoding.
+//! 2. **Wire round trip** — decode(encode(frame)) reproduces the input
+//!    exactly along randomized streams (raw and delta modes, keyframe
+//!    fallback and float escapes included).
+//! 3. **Accounting invariant** — `ingress = transmitted + shed +
+//!    link_dropped` under constrained and lossy links, and the decision
+//!    log stays one entry per ingress frame.
+//! 4. **Congestion response** — as bandwidth drops the control loop
+//!    sheds more while the measured E2E latency (transmit time included)
+//!    stays essentially within the bound; sim and realtime agree
+//!    frame-for-frame even on a constrained, jittered, lossy link.
+//! 5. **Shared transmission** — the multi-query engine ships each
+//!    admitted frame once over the one shared link.
+
+use uals::backend::{BackendQuery, CostModel, Detector};
+use uals::color::NamedColor;
+use uals::config::{CostConfig, QueryConfig, ShedderConfig};
+use uals::features::Extractor;
+use uals::pipeline::realtime::{run_realtime, RealtimeConfig};
+use uals::pipeline::{
+    backgrounds_of, multi_backends, run_multi_sim, run_sharded_sim, run_sim, FrameDecision,
+    LinkModel, MultiSimConfig, Policy, SimConfig, SimReport, TransportConfig,
+};
+use uals::shedder::{ArbiterPolicy, QuerySet, QuerySpec};
+use uals::utility::{train, Combine, UtilityModel};
+use uals::video::{
+    raw_wire_size, streamer::aggregate_fps, Streamer, Video, VideoConfig, WireDecoder,
+    WireEncoder, WireEncoding, WireMode,
+};
+
+fn cameras(n: usize, frames: usize, vehicle_rate: f64, seed: u64) -> Vec<Video> {
+    (0..n)
+        .map(|i| {
+            let mut vc = VideoConfig::new(0x7A0 ^ seed, seed * 37 + i as u64, i as u32, frames);
+            vc.traffic.vehicle_rate = vehicle_rate;
+            Video::new(vc)
+        })
+        .collect()
+}
+
+/// Noise-free u8 cameras: integer frames (raw-u8 wire path) with real
+/// temporal redundancy (delta wire path).
+fn u8_cameras(n: usize, frames: usize, seed: u64) -> Vec<Video> {
+    (0..n)
+        .map(|i| {
+            let mut vc = VideoConfig::new(0x7A1, seed * 53 + i as u64, i as u32, frames);
+            vc.traffic.vehicle_rate = 0.35;
+            vc.pixel_noise = 0.0;
+            vc.brightness_jitter = 0.0;
+            vc.quantize_u8 = true;
+            Video::new(vc)
+        })
+        .collect()
+}
+
+fn model_for(videos: &[Video]) -> UtilityModel {
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    train(videos, &idx, &[NamedColor::Red], Combine::Single)
+}
+
+fn sim_cfg(fps: f64, seed: u64, policy: Policy) -> SimConfig {
+    SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: QueryConfig::single(NamedColor::Red).with_latency_bound(1200.0),
+        backend_tokens: 1,
+        policy,
+        seed,
+        fps_total: fps,
+        transport: TransportConfig::default(),
+    }
+}
+
+fn run_sim_driver(videos: &[Video], cfg: &SimConfig, model: &UtilityModel) -> SimReport {
+    let extractor = Extractor::native(model.clone());
+    let mut backend = BackendQuery::new(
+        cfg.query.clone(),
+        Detector::native(12, 25.0),
+        CostModel::new(cfg.costs.clone(), cfg.seed),
+        25.0,
+    );
+    run_sim(
+        Streamer::new(videos),
+        &backgrounds_of(videos),
+        cfg,
+        &extractor,
+        &mut backend,
+    )
+    .expect("sim driver")
+}
+
+fn assert_decisions_equal(a: &[FrameDecision], b: &[FrameDecision], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: decision counts differ");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x, y, "{label}: decision {i} diverges");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Ideal-link bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ideal_link_is_bit_identical_across_seeds_policies_and_encodings() {
+    for (seed, policy) in [
+        (0x91u64, Policy::UtilityControlLoop),
+        (0x92, Policy::UtilityControlLoop),
+        (0x91, Policy::FifoControlLoop),
+        (0x92, Policy::RandomRate { assumed_proc_q_ms: 120.0 }),
+    ] {
+        let videos = cameras(2, 90, 0.4, seed);
+        let model = model_for(&videos);
+        let base = sim_cfg(aggregate_fps(&videos), seed, policy.clone());
+        let baseline = run_sim_driver(&videos, &base, &model);
+
+        // Explicitly-constructed ideal link: identical to the default.
+        let mut explicit = base.clone();
+        explicit.transport =
+            TransportConfig { link: LinkModel::ideal(), encoding: WireEncoding::Raw };
+        let r1 = run_sim_driver(&videos, &explicit, &model);
+        assert_decisions_equal(&baseline.decisions, &r1.decisions, "explicit ideal");
+        assert_eq!(baseline.control_series, r1.control_series, "seed {seed:x}");
+        assert_eq!(baseline.qor.overall(), r1.qor.overall());
+
+        // The wire encoding must not influence decisions under any link.
+        let mut delta = base.clone();
+        delta.transport = TransportConfig {
+            link: LinkModel::ideal(),
+            encoding: WireEncoding::delta_default(),
+        };
+        let r2 = run_sim_driver(&videos, &delta, &model);
+        assert_decisions_equal(&baseline.decisions, &r2.decisions, "ideal+delta");
+        assert_eq!(baseline.link_dropped, 0);
+        assert_eq!(r2.link_dropped, 0);
+        // Ideal links are byte-accounted at the raw-u8 yardstick.
+        let w = videos[0].config.width;
+        let h = videos[0].config.height;
+        assert_eq!(
+            baseline.bytes_on_wire,
+            baseline.transmitted * raw_wire_size(w, h) as u64
+        );
+    }
+}
+
+#[test]
+fn ideal_link_is_clock_and_shard_invariant() {
+    let videos = cameras(2, 80, 0.4, 0x95);
+    let model = model_for(&videos);
+    let mut cfg = sim_cfg(aggregate_fps(&videos), 0x95, Policy::UtilityControlLoop);
+    cfg.transport =
+        TransportConfig { link: LinkModel::ideal(), encoding: WireEncoding::delta_default() };
+
+    let sim = run_sim_driver(&videos, &cfg, &model);
+    let rt = RealtimeConfig {
+        query: cfg.query.clone(),
+        shedder: cfg.shedder.clone(),
+        costs: cfg.costs.clone(),
+        cost_emulation_scale: 0.0,
+        time_scale: 1e-3,
+        backend_tokens: cfg.backend_tokens,
+        use_artifacts: false,
+        policy: cfg.policy.clone(),
+        seed: cfg.seed,
+        arbiter: ArbiterPolicy::Standalone,
+        transport: cfg.transport,
+    };
+    let wall = run_realtime(&videos, &model, &rt).expect("wall driver");
+    assert_decisions_equal(&sim.decisions, &wall.decisions, "ideal sim vs wall");
+    assert_eq!(sim.bytes_on_wire, wall.bytes_on_wire);
+
+    // Sharded: per-camera shards with the transport config stay
+    // deterministic and conserve frames.
+    let (merged_1, _) = run_sharded_sim(&videos, &cfg, &model, 1).expect("sharded x1");
+    let (merged_n, _) = run_sharded_sim(&videos, &cfg, &model, 4).expect("sharded x4");
+    assert_decisions_equal(&merged_1.decisions, &merged_n.decisions, "shard threads");
+    assert_eq!(merged_1.ingress, merged_1.transmitted + merged_1.shed);
+    assert_eq!(merged_1.link_dropped, 0);
+}
+
+// ---------------------------------------------------------------------------
+// 2. Wire round trip over randomized streams
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wire_roundtrip_is_exact_over_rendered_streams() {
+    // A real rendered stream (u8, redundant) through the delta encoder,
+    // with a float frame and a scene cut spliced in: every decode must
+    // equal the encoder input exactly.
+    let videos = u8_cameras(1, 40, 0x61);
+    let v = &videos[0];
+    let (w, h) = (v.config.width, v.config.height);
+    let mut frames: Vec<Vec<f32>> = (0..v.len()).map(|t| v.render(t).rgb).collect();
+    frames[13][7] += 0.5; // float escape mid-stream
+    for x in frames[29].iter_mut() {
+        *x = (*x + 91.0) % 256.0; // synthetic scene cut
+    }
+
+    for encoding in [WireEncoding::Raw, WireEncoding::delta_default()] {
+        let mut enc = WireEncoder::new(encoding);
+        let mut dec = WireDecoder::new().with_tile(16);
+        let (mut buf, mut out) = (Vec::new(), Vec::new());
+        let mut delta_msgs = 0u64;
+        let mut delta_bytes = 0u64;
+        for f in &frames {
+            let mode = enc.encode_into(0, w, h, f, &mut buf);
+            let hdr = dec.decode_into(&buf, &mut out).expect("decode");
+            assert_eq!(hdr.mode, mode);
+            assert_eq!(&out, f, "round trip must be exact");
+            if mode == WireMode::Delta {
+                delta_msgs += 1;
+                delta_bytes += buf.len() as u64;
+            }
+        }
+        if encoding != WireEncoding::Raw {
+            assert!(delta_msgs > 30, "delta path must dominate ({delta_msgs})");
+            // Measured compression: dirty-tile diffs on a fixed camera
+            // are far below the raw frame size.
+            let mean = delta_bytes as f64 / delta_msgs as f64;
+            assert!(
+                mean < raw_wire_size(w, h) as f64 / 2.0,
+                "mean delta message {mean} bytes"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3 + 4. Constrained and lossy links
+// ---------------------------------------------------------------------------
+
+fn constrained_cfg(fps: f64, mbps: f64, link: LinkModel) -> SimConfig {
+    let mut cfg = sim_cfg(fps, 0xC0, Policy::UtilityControlLoop);
+    cfg.transport = TransportConfig {
+        link: LinkModel { bandwidth_mbps: mbps, ..link },
+        encoding: WireEncoding::Raw,
+    };
+    cfg
+}
+
+#[test]
+fn narrowing_the_link_makes_the_control_loop_shed_more() {
+    let videos = u8_cameras(3, 120, 0x77);
+    let model = model_for(&videos);
+    let fps = aggregate_fps(&videos);
+
+    let mut drops = Vec::new();
+    for mbps in [1000.0, 1.5, 0.5] {
+        let cfg = constrained_cfg(fps, mbps, LinkModel::ideal());
+        let r = run_sim_driver(&videos, &cfg, &model);
+        assert_eq!(r.ingress, r.transmitted + r.shed + r.link_dropped);
+        assert_eq!(r.decisions.len() as u64, r.ingress);
+        // No loss configured: nothing may vanish on the link.
+        assert_eq!(r.link_dropped, 0);
+        // The measured E2E latency includes transmit time, and the
+        // deadline check + Eq. 20 sizing keep it essentially bounded
+        // (the EWMA transient before the link latency is learned allows
+        // a few early violations on the severely constrained points).
+        let viol_cap = if mbps >= 100.0 { 0.05 } else { 0.35 };
+        assert!(
+            r.latency.violation_rate() < viol_cap,
+            "{mbps} Mbps: violation rate {}",
+            r.latency.violation_rate()
+        );
+        assert!(r.transmit_ms_mean() >= 0.0);
+        drops.push((r.shed + r.link_dropped) as f64 / r.ingress as f64);
+    }
+    assert!(
+        drops[2] > drops[0] + 0.05,
+        "0.5 Mbps drop {} must exceed 1000 Mbps drop {}",
+        drops[2],
+        drops[0]
+    );
+    assert!(drops[1] >= drops[0] - 1e-9, "monotone-ish: {drops:?}");
+}
+
+#[test]
+fn lossy_link_accounting_invariant_holds() {
+    let videos = u8_cameras(2, 100, 0x78);
+    let model = model_for(&videos);
+    let fps = aggregate_fps(&videos);
+    let link = LinkModel {
+        bandwidth_mbps: 4.0,
+        propagation_ms: 3.0,
+        jitter: 0.2,
+        loss: 0.35,
+        max_retransmits: 1,
+    };
+    let mut cfg = sim_cfg(fps, 0xD1, Policy::UtilityControlLoop);
+    cfg.transport = TransportConfig { link, encoding: WireEncoding::Raw };
+    let r = run_sim_driver(&videos, &cfg, &model);
+
+    assert!(r.link_dropped > 0, "p(loss twice) = 12% must bite");
+    assert_eq!(r.ingress, r.transmitted + r.shed + r.link_dropped);
+    assert_eq!(r.decisions.len() as u64, r.ingress);
+    let kept = r.decisions.iter().filter(|d| d.kept).count() as u64;
+    assert_eq!(kept, r.transmitted);
+    // Every frame that entered the link is byte-accounted, lost or not.
+    let (w, h) = (videos[0].config.width, videos[0].config.height);
+    assert_eq!(
+        r.bytes_on_wire,
+        (r.transmitted + r.link_dropped) * raw_wire_size(w, h) as u64
+    );
+}
+
+#[test]
+fn sim_and_realtime_agree_on_a_constrained_lossy_link() {
+    let videos = u8_cameras(2, 80, 0x79);
+    let model = model_for(&videos);
+    let fps = aggregate_fps(&videos);
+    let link = LinkModel {
+        bandwidth_mbps: 2.0,
+        propagation_ms: 4.0,
+        jitter: 0.1,
+        loss: 0.2,
+        max_retransmits: 2,
+    };
+    let mut cfg = sim_cfg(fps, 0xE7, Policy::UtilityControlLoop);
+    cfg.transport = TransportConfig { link, encoding: WireEncoding::delta_default() };
+
+    let sim = run_sim_driver(&videos, &cfg, &model);
+    let rt = RealtimeConfig {
+        query: cfg.query.clone(),
+        shedder: cfg.shedder.clone(),
+        costs: cfg.costs.clone(),
+        cost_emulation_scale: 0.0,
+        time_scale: 1e-3,
+        backend_tokens: cfg.backend_tokens,
+        use_artifacts: false,
+        policy: cfg.policy.clone(),
+        seed: cfg.seed,
+        arbiter: ArbiterPolicy::Standalone,
+        transport: cfg.transport,
+    };
+    let wall = run_realtime(&videos, &model, &rt).expect("wall driver");
+    assert_decisions_equal(&sim.decisions, &wall.decisions, "constrained link");
+    assert_eq!(sim.transmitted, wall.transmitted);
+    assert_eq!(sim.link_dropped, wall.link_dropped);
+    assert_eq!(sim.bytes_on_wire, wall.bytes_on_wire);
+}
+
+// ---------------------------------------------------------------------------
+// 5. Shared transmission in the multi-query engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn multi_query_ships_each_admitted_frame_once() {
+    let videos = u8_cameras(2, 100, 0x80);
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    let specs = vec![
+        QuerySpec::new("red", QueryConfig::single(NamedColor::Red)),
+        QuerySpec::new("yellow", QueryConfig::single(NamedColor::Yellow)),
+        QuerySpec::new(
+            "either",
+            QueryConfig::composite(NamedColor::Red, NamedColor::Yellow, Combine::Or),
+        ),
+    ];
+    let set = QuerySet::train(&specs, &videos, &idx).expect("query set");
+    let fps = aggregate_fps(&videos);
+    let cfg = MultiSimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        backend_tokens: 1,
+        arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
+        seed: 0xF0,
+        fps_total: fps,
+        // Fast but *modeled* link: the wire path engages (per-frame
+        // encode + byte accounting) without starving any query's
+        // dispatch, so the sharing arithmetic below is load-independent.
+        transport: TransportConfig::constrained(50.0, WireEncoding::Raw),
+    };
+    let extractor = Extractor::native(set.union_model().clone());
+    let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
+    let bgs = backgrounds_of(&videos);
+    let r = run_multi_sim(
+        Streamer::new(&videos),
+        &bgs,
+        &set,
+        &cfg,
+        &extractor,
+        &mut backends,
+    )
+    .expect("multi sim");
+
+    // The shared-transmission invariant: at most one crossing per
+    // physical frame, regardless of how many of the 3 queries admit it.
+    assert!(r.wire_frames <= r.frames, "{} crossings > {} frames", r.wire_frames, r.frames);
+    assert!(r.wire_frames > 0);
+    let (w, h) = (videos[0].config.width, videos[0].config.height);
+    assert_eq!(r.bytes_on_wire, r.wire_frames * raw_wire_size(w, h) as u64);
+    assert_eq!(r.link_lost_frames, 0);
+    for q in &r.queries {
+        // Every frame a query sent (or lost) crossed the shared link —
+        // never more crossings than physically happened.
+        assert!(q.report.transmitted + q.report.link_dropped <= r.wire_frames);
+        assert_eq!(
+            q.report.ingress,
+            q.report.transmitted + q.report.shed + q.report.link_dropped
+        );
+        // Physical bytes live on the shared report only.
+        assert_eq!(q.report.bytes_on_wire, 0);
+    }
+    // An independent deployment would pay one crossing per (query,
+    // frame): strictly more than the shared link carried.
+    let per_query_sum: u64 = r
+        .queries
+        .iter()
+        .map(|q| q.report.transmitted + q.report.link_dropped)
+        .sum();
+    assert!(
+        per_query_sum > r.wire_frames,
+        "sharing must be visible: {per_query_sum} query-sends vs {} crossings",
+        r.wire_frames
+    );
+}

@@ -1,35 +1,50 @@
 #!/usr/bin/env python3
-"""Advisory per-row bench comparison for the CI job summary.
+"""Per-row bench comparison for CI — gating by default.
 
-Usage: bench_delta.py BASELINE.json CURRENT.json
+Usage: bench_delta.py [--max-regress PCT] [--advisory] BASELINE.json CURRENT.json
 
-Reads two `uals-microbench-v1` files (see rust/src/util/bench.rs) and
-prints a GitHub-flavoured markdown table of per-row deltas. Always exits
-0 — the comparison is informational, never a gate. Rows present only in
-the current run are marked "new"; rows that vanished are listed at the
-end. An empty or missing baseline degrades to "no baseline" gracefully
-(the committed BENCH_baseline.json starts empty until a toolchain run
-refreshes it).
+Reads two `uals-microbench-v1` files (see rust/src/util/bench.rs), prints
+a GitHub-flavoured markdown table of per-row deltas, and exits non-zero
+when any row regressed by MORE than --max-regress percent (default 10).
+
+Grace rules (unit-tested in scripts/test_bench_delta.py):
+  * empty/missing baseline        -> every row is "new", pass (the
+                                     committed baseline starts empty until
+                                     `make bench-baseline` refreshes it);
+  * row only in current ("new")   -> pass;
+  * row only in baseline ("gone") -> warned, pass (renames should not
+                                     brick CI; the next baseline refresh
+                                     absorbs them);
+  * regression == threshold       -> pass (strictly-greater fails);
+  * no current rows at all        -> FAIL when gating (the bench run
+                                     produced nothing to verify).
+
+--advisory restores the old always-exit-0 behaviour; CI passes it when
+the PR carries the `allow-bench-regress` label.
 """
 
+import argparse
 import json
 import sys
 
 
 def load(path):
+    """Read {bench name -> mean ns} from a microbench JSON file.
+
+    Returns ({}, note) on unreadable/empty input instead of raising.
+    """
     try:
         with open(path, "r", encoding="utf-8") as f:
             doc = json.load(f)
-        rows = {}
-        for b in doc.get("benches", []):
-            name = b.get("name")
-            mean = b.get("mean_ns")
-            if name is not None and isinstance(mean, (int, float)):
-                rows[name] = float(mean)
-        return rows
     except (OSError, ValueError) as e:
-        print(f"_bench_delta: could not read {path}: {e}_")
-        return {}
+        return {}, f"could not read {path}: {e}"
+    rows = {}
+    for b in doc.get("benches", []):
+        name = b.get("name")
+        mean = b.get("mean_ns")
+        if name is not None and isinstance(mean, (int, float)):
+            rows[name] = float(mean)
+    return rows, None
 
 
 def fmt_ns(ns):
@@ -42,44 +57,97 @@ def fmt_ns(ns):
     return f"{ns:.0f} ns"
 
 
-def main():
-    if len(sys.argv) != 3:
-        print("usage: bench_delta.py BASELINE.json CURRENT.json")
-        return
-    baseline = load(sys.argv[1])
-    current = load(sys.argv[2])
-    if not current:
-        print("_bench_delta: no current bench rows — did `make bench` run?_")
-        return
+def compare(baseline, current, max_regress_pct):
+    """Compare row dicts; returns (markdown lines, failed row names).
 
-    print("### Microbench vs committed baseline (advisory)")
-    print()
+    A row fails when current > baseline by strictly more than
+    max_regress_pct percent. Rows missing on either side never fail.
+    """
+    lines = []
+    failures = []
     if not baseline:
-        print("_No baseline rows (BENCH_baseline.json is empty) — all rows are new._")
-        print()
-    print("| bench | baseline | current | delta |")
-    print("|---|---:|---:|---:|")
+        lines.append("_No baseline rows (BENCH_baseline.json is empty) — all rows are new._")
+        lines.append("")
+    lines.append("| bench | baseline | current | delta |")
+    lines.append("|---|---:|---:|---:|")
     for name in sorted(current):
         cur = current[name]
         base = baseline.get(name)
-        if base is None:
+        if base is None or base <= 0:
             delta = "new"
             base_s = "—"
         else:
             base_s = fmt_ns(base)
-            pct = (cur - base) / base * 100.0 if base > 0 else 0.0
-            arrow = "🔺" if pct > 5.0 else ("🟢" if pct < -5.0 else "·")
+            pct = (cur - base) / base * 100.0
+            if pct > max_regress_pct:
+                failures.append(name)
+                arrow = "❌"
+            elif pct > 5.0:
+                arrow = "🔺"
+            elif pct < -5.0:
+                arrow = "🟢"
+            else:
+                arrow = "·"
             delta = f"{pct:+.1f}% {arrow}"
-        print(f"| `{name}` | {base_s} | {fmt_ns(cur)} | {delta} |")
+        lines.append(f"| `{name}` | {base_s} | {fmt_ns(cur)} | {delta} |")
     gone = sorted(set(baseline) - set(current))
     if gone:
-        print()
-        print("Rows in baseline but missing from this run: " + ", ".join(f"`{g}`" for g in gone))
+        lines.append("")
+        lines.append(
+            "Rows in baseline but missing from this run (not gated): "
+            + ", ".join(f"`{g}`" for g in gone)
+        )
+    if failures:
+        lines.append("")
+        lines.append(
+            f"**FAIL: {len(failures)} row(s) regressed > {max_regress_pct:g}%:** "
+            + ", ".join(f"`{f}`" for f in failures)
+        )
+        lines.append(
+            "_Refresh BENCH_baseline.json (`make bench-baseline`) if intentional, or "
+            "apply the `allow-bench-regress` PR label to waive once._"
+        )
+    return lines, failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--max-regress",
+        type=float,
+        default=10.0,
+        metavar="PCT",
+        help="per-row regression threshold in percent (default 10)",
+    )
+    ap.add_argument(
+        "--advisory",
+        action="store_true",
+        help="never fail — print the table and exit 0 (allow-bench-regress)",
+    )
+    args = ap.parse_args(argv)
+
+    baseline, base_note = load(args.baseline)
+    current, cur_note = load(args.current)
+    mode = "advisory" if args.advisory else f"gating at {args.max_regress:g}%"
+    print(f"### Microbench vs committed baseline ({mode})")
+    print()
+    if base_note:
+        print(f"_bench_delta: {base_note}_")
+    if cur_note:
+        print(f"_bench_delta: {cur_note}_")
+    if not current:
+        print("_bench_delta: no current bench rows — did `make bench` run?_")
+        return 0 if args.advisory else 1
+
+    lines, failures = compare(baseline, current, args.max_regress)
+    for line in lines:
+        print(line)
+    if failures and not args.advisory:
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    try:
-        main()
-    except Exception as e:  # advisory only — never fail the job
-        print(f"_bench_delta error: {e}_")
-    sys.exit(0)
+    sys.exit(main())

@@ -1,0 +1,124 @@
+"""Unit tests for the bench-delta gate (scripts/bench_delta.py).
+
+Run from the repo root with either runner:
+
+    python3 -m unittest discover -s scripts -p 'test_*.py'
+    python3 -m pytest scripts/ -q
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import bench_delta  # noqa: E402
+
+
+def doc(rows):
+    return {
+        "schema": "uals-microbench-v1",
+        "unit": "ns_per_op",
+        "benches": [{"name": n, "mean_ns": v} for n, v in rows.items()],
+    }
+
+
+def write_doc(path, rows):
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc(rows), f)
+
+
+class CompareTests(unittest.TestCase):
+    def test_clean_pass_within_threshold(self):
+        lines, failures = bench_delta.compare({"a": 100.0}, {"a": 105.0}, 10.0)
+        self.assertEqual(failures, [])
+        self.assertTrue(any("`a`" in l for l in lines))
+
+    def test_regression_over_threshold_fails(self):
+        _, failures = bench_delta.compare({"a": 100.0, "b": 50.0}, {"a": 111.0, "b": 50.0}, 10.0)
+        self.assertEqual(failures, ["a"])
+
+    def test_threshold_edge_is_inclusive_pass(self):
+        # Exactly +10.0% is NOT a failure — strictly greater gates.
+        _, failures = bench_delta.compare({"a": 100.0}, {"a": 110.0}, 10.0)
+        self.assertEqual(failures, [])
+        _, failures = bench_delta.compare({"a": 100.0}, {"a": 110.0001}, 10.0)
+        self.assertEqual(failures, ["a"])
+
+    def test_improvement_never_fails(self):
+        _, failures = bench_delta.compare({"a": 100.0}, {"a": 10.0}, 10.0)
+        self.assertEqual(failures, [])
+
+    def test_new_rows_pass(self):
+        lines, failures = bench_delta.compare({"a": 100.0}, {"a": 100.0, "fresh": 1e9}, 10.0)
+        self.assertEqual(failures, [])
+        self.assertTrue(any("new" in l for l in lines if "`fresh`" in l))
+
+    def test_missing_rows_warn_but_pass(self):
+        lines, failures = bench_delta.compare({"a": 100.0, "gone": 5.0}, {"a": 100.0}, 10.0)
+        self.assertEqual(failures, [])
+        self.assertTrue(any("`gone`" in l for l in lines))
+
+    def test_empty_baseline_all_new_pass(self):
+        lines, failures = bench_delta.compare({}, {"a": 100.0, "b": 1.0}, 10.0)
+        self.assertEqual(failures, [])
+        self.assertTrue(any("No baseline rows" in l for l in lines))
+
+    def test_zero_baseline_row_is_treated_as_new(self):
+        _, failures = bench_delta.compare({"a": 0.0}, {"a": 100.0}, 10.0)
+        self.assertEqual(failures, [])
+
+    def test_custom_threshold(self):
+        _, failures = bench_delta.compare({"a": 100.0}, {"a": 104.0}, 3.0)
+        self.assertEqual(failures, ["a"])
+        _, failures = bench_delta.compare({"a": 100.0}, {"a": 104.0}, 50.0)
+        self.assertEqual(failures, [])
+
+
+class MainExitCodeTests(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.base = os.path.join(self.dir.name, "base.json")
+        self.cur = os.path.join(self.dir.name, "cur.json")
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def test_gating_fails_on_regression(self):
+        write_doc(self.base, {"a": 100.0})
+        write_doc(self.cur, {"a": 200.0})
+        self.assertEqual(bench_delta.main([self.base, self.cur]), 1)
+
+    def test_gating_passes_within_threshold(self):
+        write_doc(self.base, {"a": 100.0})
+        write_doc(self.cur, {"a": 109.0})
+        self.assertEqual(bench_delta.main([self.base, self.cur]), 0)
+
+    def test_advisory_never_fails(self):
+        write_doc(self.base, {"a": 100.0})
+        write_doc(self.cur, {"a": 500.0})
+        self.assertEqual(bench_delta.main(["--advisory", self.base, self.cur]), 0)
+
+    def test_missing_current_fails_gating_passes_advisory(self):
+        write_doc(self.base, {"a": 100.0})
+        missing = os.path.join(self.dir.name, "nope.json")
+        self.assertEqual(bench_delta.main([self.base, missing]), 1)
+        self.assertEqual(bench_delta.main(["--advisory", self.base, missing]), 0)
+
+    def test_empty_committed_baseline_passes(self):
+        # The repo's BENCH_baseline.json starts as an empty doc.
+        write_doc(self.base, {})
+        write_doc(self.cur, {"a": 100.0})
+        self.assertEqual(bench_delta.main([self.base, self.cur]), 0)
+
+    def test_max_regress_flag(self):
+        write_doc(self.base, {"a": 100.0})
+        write_doc(self.cur, {"a": 104.0})
+        self.assertEqual(bench_delta.main(["--max-regress", "3", self.base, self.cur]), 1)
+        self.assertEqual(bench_delta.main(["--max-regress", "5", self.base, self.cur]), 0)
+
+
+if __name__ == "__main__":
+    unittest.main()
