@@ -234,6 +234,7 @@ fn main() {
         seed: 0xBE,
         fps_total: 10.0,
         transport: TransportConfig::default(),
+        faults: uals::pipeline::FaultPlan::default(),
     };
     b.run_n("pipeline/sweep_4cams_serial", 1, 3, || {
         let r = run_sharded_sim(&sweep_videos, &sweep_cfg, &sweep_model, 1).unwrap();
@@ -316,6 +317,7 @@ fn main() {
         seed: 0xBE,
         fps_total: mq_fps,
         transport: TransportConfig::default(),
+        faults: uals::pipeline::FaultPlan::default(),
     };
     let mq_extractor = Extractor::native(mq_set.union_model().clone());
     b.run_n("multi/shared_extract_8q", 1, 3, || {
@@ -346,6 +348,7 @@ fn main() {
                 seed: mq_cfg.seed,
                 fps_total: mq_fps,
                 transport: TransportConfig::default(),
+                faults: uals::pipeline::FaultPlan::default(),
             };
             let mut backend = BackendQuery::new(
                 cfg_q.query.clone(),

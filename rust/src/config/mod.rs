@@ -59,6 +59,16 @@ pub struct ShedderConfig {
     pub queue_cap_max: usize,
     /// EWMA weight for the smoothed backend processing latency proc_Q.
     pub proc_ewma_alpha: f64,
+    /// Completion-stall watchdog (ms): if every backend token is busy and
+    /// no completion lands for this long, the pipeline declares degraded
+    /// mode (threshold frozen, everything shed) until progress resumes.
+    /// `INFINITY` (the default) disables the watchdog — required for the
+    /// bit-identical faultless verification mode.
+    pub watchdog_ms: f64,
+    /// Per-camera liveness horizon (ms): a camera silent for longer is
+    /// counted dead and the nominal fps fallback re-normalizes to the
+    /// live share. `INFINITY` (the default) disables liveness tracking.
+    pub camera_liveness_ms: f64,
 }
 
 impl Default for ShedderConfig {
@@ -68,6 +78,8 @@ impl Default for ShedderConfig {
             update_every: 5,
             queue_cap_max: 16,
             proc_ewma_alpha: 0.3,
+            watchdog_ms: f64::INFINITY,
+            camera_liveness_ms: f64::INFINITY,
         }
     }
 }

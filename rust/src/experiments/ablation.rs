@@ -220,6 +220,7 @@ pub fn ablation_queue(scale: Scale) -> Vec<(String, Table)> {
             seed: 0xAB,
             fps_total: fps,
             transport: crate::pipeline::TransportConfig::default(),
+            faults: crate::pipeline::FaultPlan::default(),
         };
         let r = run_scenario(
             IterArrivals::new(crate::video::Streamer::new(&videos), fps),

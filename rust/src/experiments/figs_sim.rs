@@ -48,6 +48,7 @@ fn sim_config(query: QueryConfig, fps_total: f64, policy: Policy) -> SimConfig {
         seed: 0x13,
         fps_total,
         transport: crate::pipeline::TransportConfig::default(),
+        faults: crate::pipeline::FaultPlan::default(),
     }
 }
 

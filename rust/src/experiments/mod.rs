@@ -33,11 +33,16 @@ pub const ABLATIONS: [&str; 4] = [
     "ablation-queue",
 ];
 /// Workload scenarios unlocked by the clock-abstracted core's
-/// `ArrivalModel` plugins, the multi-query shared-stream path, and the
-/// bandwidth-constrained transport link (beyond the paper's fixed-fps
-/// single-query free-network streams).
-pub const SCENARIOS: [&str; 4] =
-    ["scenario-bursty", "scenario-churn", "scenario-multiquery", "scenario-bandwidth"];
+/// `ArrivalModel` plugins, the multi-query shared-stream path, the
+/// bandwidth-constrained transport link, and the fault-injection plan
+/// (beyond the paper's fixed-fps single-query free-network streams).
+pub const SCENARIOS: [&str; 5] = [
+    "scenario-bursty",
+    "scenario-churn",
+    "scenario-multiquery",
+    "scenario-bandwidth",
+    "scenario-faults",
+];
 
 /// Run one figure harness; returns named tables.
 pub fn run_figure(id: &str, scale: Scale) -> Result<Vec<(String, Table)>> {
@@ -65,6 +70,7 @@ pub fn run_figure(id: &str, scale: Scale) -> Result<Vec<(String, Table)>> {
         "scenario-churn" => scenarios::scenario_churn(scale),
         "scenario-multiquery" => scenarios::scenario_multiquery(scale),
         "scenario-bandwidth" => scenarios::scenario_bandwidth(scale),
+        "scenario-faults" => scenarios::scenario_faults(scale),
         other => bail!(
             "unknown figure '{other}' (try one of {ALL_FIGURES:?}, 15, \
              {ABLATIONS:?}, or {SCENARIOS:?})"

@@ -20,8 +20,17 @@
 //!   the bottleneck, and how much link the dirty-tile delta encoder buys
 //!   back (cf. FrameHopper's budgeted edge link, DCOSS 2022).
 //!
+//! * **faults** — the same camera set with and without a deterministic
+//!   fault storm (camera dropout, poisoned control observations, worker
+//!   crash, link blackout, bandwidth collapse, straggler slowdown): how
+//!   much QoR/latency the graceful-degradation machinery preserves, how
+//!   much traffic each fault destroys, and how quickly the pipeline
+//!   recovers once the last fault clears (see
+//!   [`crate::pipeline::faults`]).
+//!
 //! Run via `uals figures --fig scenario-bursty` / `--fig scenario-churn`
-//! / `--fig scenario-multiquery` / `--fig scenario-bandwidth`.
+//! / `--fig scenario-multiquery` / `--fig scenario-bandwidth` /
+//! `--fig scenario-faults`.
 
 use super::common::Scale;
 use super::figs_sim::run_scenario;
@@ -29,8 +38,9 @@ use crate::color::NamedColor;
 use crate::config::{CostConfig, QueryConfig, ShedderConfig};
 use crate::features::Extractor;
 use crate::pipeline::{
-    backgrounds_of, multi_backends, run_multi_sim, CameraChurn, IterArrivals, LinkModel,
-    MultiSimConfig, PoissonArrivals, Policy, SimConfig, TransportConfig,
+    backgrounds_of, multi_backends, run_multi_sim, CameraChurn, FaultKind, FaultPlan,
+    IterArrivals, LinkModel, MultiSimConfig, PoissonArrivals, Policy, PoisonKind, SimConfig,
+    TransportConfig,
 };
 use crate::shedder::{ArbiterPolicy, QuerySet, QuerySpec};
 use crate::util::csv::Table;
@@ -78,6 +88,7 @@ fn scenario_config(fps_total: f64) -> SimConfig {
         seed: 0x5CE,
         fps_total,
         transport: TransportConfig::default(),
+        faults: crate::pipeline::FaultPlan::default(),
     }
 }
 
@@ -297,6 +308,7 @@ pub fn scenario_multiquery(scale: Scale) -> Vec<(String, Table)> {
             seed: 0x5CE,
             fps_total: fps,
             transport: TransportConfig::default(),
+            faults: crate::pipeline::FaultPlan::default(),
         };
         let extractor = Extractor::native(set.union_model().clone());
         let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
@@ -342,6 +354,97 @@ pub fn scenario_multiquery(scale: Scale) -> Vec<(String, Table)> {
         ("scenario_multiquery_per_query".into(), per_query),
         ("scenario_multiquery_summary".into(), summary),
     ]
+}
+
+/// The curated fault storm used by [`scenario_faults`]: every fault
+/// kind once, staggered across the middle of a run of `horizon_ms`
+/// virtual milliseconds so the pipeline sees clean air before the first
+/// fault and after the last.
+pub fn scenario_fault_storm(horizon_ms: f64) -> FaultPlan {
+    let h = horizon_ms;
+    FaultPlan::new()
+        .with(0.15 * h, 0.25 * h, FaultKind::BackendSlowdown { factor: 4.0 })
+        .with(0.20 * h, 0.40 * h, FaultKind::CameraDrop { camera: 0 })
+        .with(0.25 * h, 0.45 * h, FaultKind::CameraFreeze { camera: 1 })
+        .with(0.30 * h, 0.50 * h, FaultKind::PoisonControl { kind: PoisonKind::Nan })
+        .with(0.45 * h, 0.55 * h, FaultKind::WorkerCrash)
+        .with(0.60 * h, 0.65 * h, FaultKind::LinkBlackout)
+        .with(0.70 * h, 0.80 * h, FaultKind::BandwidthCollapse { mbps: 1.0 })
+}
+
+/// Fault-storm scenario: the same camera set faultless vs under the
+/// curated storm of [`scenario_fault_storm`], with the degradation
+/// machinery (watchdog + per-camera liveness) armed on the storm run.
+///
+/// Columns: variant (0 = faultless baseline, 1 = storm), QoR, p99 and
+/// max E2E latency, violation rate, total observed drop fraction and
+/// the fault-destroyed share of it, declared degraded time, degraded
+/// sheds, liveness re-normalizations, rejected poisoned observations,
+/// and recovery time — capture-to-first-kept-frame after the last fault
+/// window closes (−1 if the run never recovers).
+pub fn scenario_faults(scale: Scale) -> Vec<(String, Table)> {
+    let frames = scenario_frames(scale);
+    let model = scenario_model();
+    let videos = scenario_videos(4, frames);
+    let fps = crate::video::streamer::aggregate_fps(&videos);
+    let bgs = backgrounds_of(&videos);
+    // Per-camera content length: every camera streams `frames` frames
+    // at its native 10 fps.
+    let horizon = frames as f64 / 10.0 * 1e3;
+    let storm = scenario_fault_storm(horizon);
+
+    let mut t = Table::new(vec![
+        "variant",
+        "qor",
+        "p99_ms",
+        "max_ms",
+        "viol_rate",
+        "drop_frac",
+        "fault_drop_frac",
+        "degraded_ms",
+        "degraded_shed",
+        "liveness_renorms",
+        "poisoned_rejected",
+        "recovery_ms",
+    ]);
+    for (variant, plan) in [(0.0, FaultPlan::default()), (1.0, storm)] {
+        let mut cfg = scenario_config(fps);
+        cfg.faults = plan.clone();
+        if !plan.is_empty() {
+            // Arm graceful degradation only alongside faults, so the
+            // baseline stays the bit-identical faultless reference.
+            cfg.shedder.watchdog_ms = 1_500.0;
+            cfg.shedder.camera_liveness_ms = 2_000.0;
+        }
+        let mut r =
+            run_scenario(IterArrivals::new(Streamer::new(&videos), fps), &bgs, &cfg, &model);
+        let last_fault_end = plan.windows().iter().map(|w| w.end_ms).fold(0.0f64, f64::max);
+        let recovery_ms = if plan.is_empty() {
+            0.0
+        } else {
+            r.decisions
+                .iter()
+                .filter(|d| d.kept && d.capture_ms >= last_fault_end)
+                .map(|d| d.capture_ms - last_fault_end)
+                .fold(f64::INFINITY, f64::min)
+        };
+        let ingress = r.ingress.max(1) as f64;
+        t.push(&[
+            variant,
+            r.qor.overall(),
+            r.latency.quantile_ms(0.99),
+            r.latency.max_ms(),
+            r.latency.violation_rate(),
+            (r.shed + r.link_dropped + r.faults.fault_dropped) as f64 / ingress,
+            r.faults.fault_dropped as f64 / ingress,
+            r.faults.degraded_ms(),
+            r.faults.degraded_shed as f64,
+            r.faults.liveness_renorms as f64,
+            r.faults.poisoned_rejected as f64,
+            if recovery_ms.is_finite() { recovery_ms } else { -1.0 },
+        ]);
+    }
+    vec![("scenario_faults".into(), t)]
 }
 
 #[cfg(test)]
@@ -424,6 +527,40 @@ mod tests {
             wide_delta[7],
             wide_raw[7]
         );
+    }
+
+    #[test]
+    fn faults_scenario_baseline_is_clean_and_storm_books_fault_losses() {
+        let out = scenario_faults(Scale::Tiny);
+        let t = &out[0].1;
+        assert_eq!(t.len(), 2, "baseline + storm");
+        let rows: Vec<Vec<f64>> = t
+            .to_csv()
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(|c| c.parse().unwrap()).collect())
+            .collect();
+        let (base, storm) = (&rows[0], &rows[1]);
+        // Baseline: no fault accounting, no degradation machinery.
+        assert_eq!(base[0], 0.0);
+        assert_eq!(base[6], 0.0, "baseline fault_drop_frac");
+        assert_eq!(base[7], 0.0, "baseline degraded_ms");
+        assert_eq!(base[10], 0.0, "baseline poisoned_rejected");
+        // Storm: faults destroy traffic, degradation machinery engages.
+        assert_eq!(storm[0], 1.0);
+        assert!(storm[6] > 0.0, "storm fault_drop_frac {}", storm[6]);
+        assert!(storm[7] > 0.0, "worker crash must declare degraded mode");
+        assert!(storm[9] >= 1.0, "camera dropout must renormalize liveness");
+        assert!(storm[10] > 0.0, "poisoned observations must be rejected");
+        assert!(
+            storm[11] >= 0.0,
+            "pipeline must recover after the storm (recovery {})",
+            storm[11]
+        );
+        for r in &rows {
+            assert!(r[1] >= 0.0 && r[1] <= 1.0, "qor {}", r[1]);
+            assert!(r[5] >= 0.0 && r[5] <= 1.0, "drop_frac {}", r[5]);
+        }
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::backend::BackendQuery;
 use crate::config::{CostConfig, QueryConfig, ShedderConfig};
 use crate::features::{Extractor, FrameFeatures, UtilityValues};
 use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts, WindowSeries};
+use crate::pipeline::faults::{FaultPlan, FaultStats, PoisonKind};
 use crate::pipeline::transport::{TransportConfig, TransportState};
 use crate::shedder::{Entry, LoadShedder, QueryMask, TokenBucket};
 use crate::util::rng::Rng;
@@ -79,6 +80,10 @@ pub struct SimConfig {
     /// link, raw encoding) reproduces the pre-transport pipeline
     /// bit-for-bit; see [`crate::pipeline::transport`].
     pub transport: TransportConfig,
+    /// Scheduled fault windows. The default empty plan is the
+    /// verification mode: bit-identical to a faultless pipeline (no
+    /// extra RNG draws or EWMA updates); see [`crate::pipeline::faults`].
+    pub faults: FaultPlan,
 }
 
 /// The one frame payload carried through admission, queue and dispatch —
@@ -145,6 +150,10 @@ pub struct PipelineReport {
     pub end_ms: f64,
     /// Total camera-side extraction wall time (ms) across all frames.
     pub extract_ms_total: f64,
+    /// Fault / graceful-degradation counters (all zero on a faultless
+    /// run). Conservation extends to `ingress == transmitted + shed +
+    /// link_dropped + faults.fault_dropped`.
+    pub faults: FaultStats,
 }
 
 impl PipelineReport {
@@ -355,6 +364,13 @@ impl BackendExecutor for SyncBackend<'_> {
 enum EventKind {
     Ingress(Box<FramePayload>, f32 /* utility */),
     Completion { seq: u64, capture_ms: f64, exec_ms: f64, dnn: bool },
+    /// A frame destroyed by an injected fault. `release_token = false`
+    /// for frames that never reached the shedder (camera dropout, at
+    /// capture time); `true` for in-flight frames lost to a crashed
+    /// worker — the event fires at the recovery time, returns the
+    /// backend token the doomed dispatch held, and marks progress (the
+    /// supervised restart discovering its lost work).
+    FaultDrop { camera: u32, capture_ms: f64, ids: Vec<u64>, release_token: bool },
 }
 
 /// Event heap keyed by (µs time, seq); payloads in a side map. Generic
@@ -387,6 +403,10 @@ impl<K> EventQueue<K> {
 
     pub(crate) fn pop(&mut self) -> Option<(f64, K)> {
         let Reverse((_, id)) = self.heap.pop()?;
+        // Invariant: `push` inserts the payload under the same seq it
+        // pushes onto the heap, and ids are never reused — a miss here is
+        // queue corruption, not a recoverable condition.
+        #[allow(clippy::expect_used)]
         Some(self.events.remove(&id).expect("event payload"))
     }
 }
@@ -404,6 +424,10 @@ struct ArrivalFeeder {
     util_buf: UtilityValues,
     id_pool: Vec<Vec<u64>>,
     extract_ms_total: f64,
+    /// Last delivered pixels per camera — only populated when the fault
+    /// plan contains a camera-freeze window (a frozen camera keeps
+    /// streaming these stale pixels while the scene moves on).
+    last_rgb: HashMap<u32, Vec<f32>>,
 }
 
 impl ArrivalFeeder {
@@ -413,6 +437,7 @@ impl ArrivalFeeder {
             util_buf: UtilityValues::empty(),
             id_pool: Vec::new(),
             extract_ms_total: 0.0,
+            last_rgb: HashMap::new(),
         }
     }
 
@@ -434,10 +459,44 @@ impl ArrivalFeeder {
         extractor: &Extractor,
         query: &QueryConfig,
         cost: &mut crate::backend::CostModel,
+        faults: &FaultPlan,
     ) -> anyhow::Result<bool> {
-        let Some(f) = arrivals.next_frame() else {
+        let Some(mut f) = arrivals.next_frame() else {
             return Ok(false);
         };
+        // Fault: camera dropout — the frame never leaves the device. No
+        // extraction, no cost-model draws (the RNG sequences stay aligned
+        // with the healthy stream); the frame is accounted at its capture
+        // time as `fault_dropped`.
+        if faults.camera_dropped(f.camera, f.ts_ms) {
+            let mut ids = self.id_pool.pop().unwrap_or_default();
+            f.target_ids_into(&query.colors, query.min_blob_px, &mut ids);
+            eq.push(
+                f.ts_ms,
+                EventKind::FaultDrop {
+                    camera: f.camera,
+                    capture_ms: f.ts_ms,
+                    ids,
+                    release_token: false,
+                },
+            );
+            return Ok(true);
+        }
+        // Fault: camera freeze — stale pixels, live ground truth. The
+        // retention buffer only exists when the plan has freeze windows,
+        // so the empty plan clones nothing.
+        if faults.has_camera_freeze() {
+            if faults.camera_frozen(f.camera, f.ts_ms) {
+                if let Some(prev) = self.last_rgb.get(&f.camera) {
+                    f.rgb.clear();
+                    f.rgb.extend_from_slice(prev);
+                }
+            } else {
+                let slot = self.last_rgb.entry(f.camera).or_default();
+                slot.clear();
+                slot.extend_from_slice(&f.rgb);
+            }
+        }
         let bg = *backgrounds
             .get(&f.camera)
             .ok_or_else(|| anyhow::anyhow!("no background for camera {}", f.camera))?;
@@ -514,6 +573,27 @@ where
     let mut link_dropped = 0u64;
     let mut transport = TransportState::new(&cfg.transport, cfg.seed);
 
+    // Fault-injection + graceful-degradation state. With the default
+    // empty plan and the default INFINITY watchdog/liveness thresholds
+    // none of this is ever consulted beyond a cheap short-circuit, so
+    // the faultless pipeline stays bit-identical.
+    let faults = &cfg.faults;
+    let mut fstats = FaultStats::default();
+    // Watchdog: last virtual time the backend demonstrably made progress
+    // (a completion applied or a crashed worker's token recovered).
+    let mut last_progress = 0.0f64;
+    // Declared degraded mode: entered when completions stall past the
+    // watchdog with every token busy; threshold frozen, everything shed.
+    let mut degraded_since: Option<f64> = None;
+    let watchdog_on = cfg.shedder.watchdog_ms.is_finite();
+    // Per-camera liveness: re-normalize the nominal fps when cameras
+    // silently vanish (unplanned dropout) so Eq. 19's rate fallback
+    // tracks the cameras actually alive.
+    let liveness_on = cfg.shedder.camera_liveness_ms.is_finite();
+    let mut last_seen: HashMap<u32, f64> = HashMap::new();
+    let camera_total = backgrounds.len().max(1);
+    let mut last_alive = camera_total;
+
     // Baseline policies pin the threshold themselves (the FIFO ablation
     // keeps the full control loop — only queue ordering changes).
     if matches!(cfg.policy, Policy::RandomRate { .. } | Policy::NoShedding) {
@@ -535,7 +615,15 @@ where
     // lands here without per-frame cloning.
     let mut dropped: Vec<Entry<FramePayload>> = Vec::new();
 
-    feeder.feed_next(&mut eq, &mut arrivals, backgrounds, extractor, &cfg.query, &mut cost)?;
+    feeder.feed_next(
+        &mut eq,
+        &mut arrivals,
+        backgrounds,
+        extractor,
+        &cfg.query,
+        &mut cost,
+        faults,
+    )?;
     let mut now = 0.0f64;
     let mut last_control_sample = f64::NEG_INFINITY;
     // 0-based dispatch ordinal, incremented once per `submit` — executors
@@ -546,6 +634,13 @@ where
         let class = match kind {
             EventKind::Ingress(..) => EventClass::Ingress,
             EventKind::Completion { .. } => EventClass::Completion,
+            EventKind::FaultDrop { release_token, .. } => {
+                if release_token {
+                    EventClass::Completion
+                } else {
+                    EventClass::Ingress
+                }
+            }
         };
         clock.advance_to(t, class);
         now = now.max(t);
@@ -553,6 +648,9 @@ where
             EventKind::Ingress(frame, utility) => {
                 ingress_n += 1;
                 stages.observe(Stage::Ingress, frame.capture_ms);
+                if liveness_on {
+                    last_seen.insert(frame.camera, now);
+                }
                 // Refill the arrival pipeline.
                 feeder.feed_next(
                     &mut eq,
@@ -561,13 +659,22 @@ where
                     extractor,
                     &cfg.query,
                     &mut cost,
+                    faults,
                 )?;
 
-                // Content-agnostic baseline: coin flip ahead of the queue;
-                // surviving frames get a constant utility (FIFO service).
-                let coin_dropped = matches!(cfg.policy, Policy::RandomRate { .. })
-                    && rng.chance(random_rate);
-                if coin_dropped {
+                // Watchdog: completions have stalled past the threshold
+                // with every backend token busy — declare degraded mode.
+                if watchdog_on
+                    && degraded_since.is_none()
+                    && tokens.available() == 0
+                    && now - last_progress > cfg.shedder.watchdog_ms
+                {
+                    degraded_since = Some(now);
+                }
+                if degraded_since.is_some() {
+                    // Degraded mode: freeze the threshold (the shedder is
+                    // bypassed entirely, so no retune and no EWMA drift)
+                    // and shed everything until progress resumes.
                     let f = *frame;
                     qor.observe(&f.target_ids, false);
                     stages.observe(Stage::Shed, f.capture_ms);
@@ -577,26 +684,46 @@ where
                         kept: false,
                     });
                     shed += 1;
+                    fstats.degraded_shed += 1;
                     feeder.recycle(f.target_ids);
                 } else {
-                    // (admission utility, queue-ordering key) per policy.
-                    let (u, key) = match cfg.policy {
-                        Policy::UtilityControlLoop => (utility, utility),
-                        Policy::FifoControlLoop => (utility, 0.5),
-                        _ => (0.5, 0.5),
-                    };
-                    dropped.clear();
-                    let _ = shedder.on_ingress_keyed_into(u, key, now, *frame, &mut dropped);
-                    for e in dropped.drain(..) {
-                        qor.observe(&e.item.target_ids, false);
-                        stages.observe(Stage::Shed, e.item.capture_ms);
+                    // Content-agnostic baseline: coin flip ahead of the
+                    // queue; surviving frames get a constant utility
+                    // (FIFO service).
+                    let coin_dropped = matches!(cfg.policy, Policy::RandomRate { .. })
+                        && rng.chance(random_rate);
+                    if coin_dropped {
+                        let f = *frame;
+                        qor.observe(&f.target_ids, false);
+                        stages.observe(Stage::Shed, f.capture_ms);
                         decisions.push(FrameDecision {
-                            camera: e.item.camera,
-                            capture_ms: e.item.capture_ms,
+                            camera: f.camera,
+                            capture_ms: f.capture_ms,
                             kept: false,
                         });
                         shed += 1;
-                        feeder.recycle(e.item.target_ids);
+                        feeder.recycle(f.target_ids);
+                    } else {
+                        // (admission utility, queue-ordering key) per policy.
+                        let (u, key) = match cfg.policy {
+                            Policy::UtilityControlLoop => (utility, utility),
+                            Policy::FifoControlLoop => (utility, 0.5),
+                            _ => (0.5, 0.5),
+                        };
+                        dropped.clear();
+                        let _ =
+                            shedder.on_ingress_keyed_into(u, key, now, *frame, &mut dropped);
+                        for e in dropped.drain(..) {
+                            qor.observe(&e.item.target_ids, false);
+                            stages.observe(Stage::Shed, e.item.capture_ms);
+                            decisions.push(FrameDecision {
+                                camera: e.item.camera,
+                                capture_ms: e.item.capture_ms,
+                                kept: false,
+                            });
+                            shed += 1;
+                            feeder.recycle(e.item.target_ids);
+                        }
                     }
                 }
 
@@ -604,15 +731,78 @@ where
                 if now - last_control_sample >= 1_000.0 {
                     control_series.push((now, shedder.threshold(), shedder.target_rate()));
                     last_control_sample = now;
+                    // Per-camera liveness: when the set of live cameras
+                    // changes, re-normalize the nominal fps fallback to
+                    // the share of cameras actually heard from.
+                    if liveness_on {
+                        let alive = backgrounds
+                            .keys()
+                            .filter(|c| {
+                                now - last_seen.get(c).copied().unwrap_or(0.0)
+                                    <= cfg.shedder.camera_liveness_ms
+                            })
+                            .count();
+                        if alive != last_alive && alive > 0 {
+                            shedder.set_nominal_fps(
+                                cfg.fps_total * alive as f64 / camera_total as f64,
+                            );
+                            fstats.liveness_renorms += 1;
+                            last_alive = alive;
+                        }
+                    }
                 }
             }
             EventKind::Completion { seq, capture_ms, exec_ms, dnn } => {
                 tokens.release();
-                shedder.on_backend_complete(exec_ms);
+                last_progress = now;
+                if let Some(since) = degraded_since.take() {
+                    // Progress resumed: close the declared degraded span.
+                    fstats.degraded_windows.push((since, now));
+                }
+                // Fault: poisoned control observation — the backend-time
+                // sample the control loop sees is corrupted (NaN) or
+                // stale (a negative clock-skewed duration). The loop's
+                // input validation must reject it; the *metrics* latency
+                // below stays honest.
+                let observed_ms = match faults.poison(now) {
+                    Some(PoisonKind::Nan) => f64::NAN,
+                    Some(PoisonKind::Stale) => -exec_ms.max(1.0),
+                    None => exec_ms,
+                };
+                shedder.on_backend_complete(observed_ms);
                 executor.on_complete(seq, dnn)?;
                 let e2e = clock.measure_e2e(capture_ms, t);
                 latency.observe(e2e);
                 latency_windows.observe(capture_ms, e2e);
+            }
+            EventKind::FaultDrop { camera, capture_ms, ids, release_token } => {
+                if release_token {
+                    // A crashed worker's in-flight frame: the restart
+                    // recovered the backend slot and discovered the loss.
+                    tokens.release();
+                    last_progress = now;
+                    if let Some(since) = degraded_since.take() {
+                        fstats.degraded_windows.push((since, now));
+                    }
+                } else {
+                    // Camera dropout: the frame is accounted at capture.
+                    ingress_n += 1;
+                    stages.observe(Stage::Ingress, capture_ms);
+                    feeder.feed_next(
+                        &mut eq,
+                        &mut arrivals,
+                        backgrounds,
+                        extractor,
+                        &cfg.query,
+                        &mut cost,
+                        faults,
+                    )?;
+                }
+                fstats.fault_dropped += 1;
+                qor.observe(&ids, false);
+                stages.observe(Stage::Shed, capture_ms);
+                decisions.push(FrameDecision { camera, capture_ms, kept: false });
+                feeder.recycle(ids);
             }
         }
 
@@ -640,18 +830,54 @@ where
                 feeder.recycle(entry.item.target_ids);
                 continue;
             }
+            // Fault: link blackout — the wire is down, the frame is lost
+            // before the backend ever sees it. No token is consumed.
+            if faults.link_blackout(now) {
+                let mut f = entry.item;
+                fstats.fault_dropped += 1;
+                qor.observe(&f.target_ids, false);
+                stages.observe(Stage::Shed, f.capture_ms);
+                decisions.push(FrameDecision {
+                    camera: f.camera,
+                    capture_ms: f.capture_ms,
+                    kept: false,
+                });
+                feeder.recycle(std::mem::take(&mut f.target_ids));
+                continue;
+            }
+            // Fault: backend worker crash — the dispatched frame dies with
+            // the worker and the backend slot stays occupied until the
+            // restart completes at the window's end; a `FaultDrop` event
+            // scheduled there releases the token and books the loss.
+            if let Some(recover_at) = faults.worker_down_until(now) {
+                assert!(tokens.try_acquire());
+                let mut f = entry.item;
+                eq.push(
+                    recover_at.max(now),
+                    EventKind::FaultDrop {
+                        camera: f.camera,
+                        capture_ms: f.capture_ms,
+                        ids: std::mem::take(&mut f.target_ids),
+                        release_token: true,
+                    },
+                );
+                continue;
+            }
             assert!(tokens.try_acquire());
             let mut f = entry.item;
             let capture_ms = f.capture_ms;
             // Transmit stage: the frame leaves the shedder for the link.
             stages.observe(Stage::Transmit, capture_ms);
-            let arrival_ms = if transport.is_ideal() {
+            // Fault: bandwidth collapse forces the modeled-link path even
+            // on an ideal link (the collapse *is* a modeled link).
+            let bw_override = faults.bandwidth_override(now);
+            let arrival_ms = if transport.is_ideal() && bw_override.is_none() {
                 // Byte accounting only — the legacy cost-model draw below
                 // keeps the pre-transport RNG sequence bit-identical.
                 transport.account_ideal(&f);
                 None
             } else {
-                let tx = transport.ship(now, &f);
+                let tx = transport.ship(now, &f, bw_override);
                 if !tx.delivered {
                     // Lost on the wire after bounded retransmits: the
                     // backend never sees it; the token frees immediately.
@@ -681,8 +907,15 @@ where
                 kept: true,
             });
             feeder.recycle(std::mem::take(&mut f.target_ids));
-            let bg = *backgrounds.get(&f.camera).expect("background seen at ingress");
+            let bg = *backgrounds
+                .get(&f.camera)
+                .ok_or_else(|| anyhow::anyhow!("no background for camera {}", f.camera))?;
             let (last_stage, exec_ms) = executor.submit(f, bg)?;
+            // Fault: straggler slowdown — the backend's service time is
+            // inflated while the window covers the dispatch instant. The
+            // `!= 1.0` guard keeps the faultless arithmetic untouched.
+            let slow = faults.slowdown(now);
+            let exec_ms = if slow != 1.0 { exec_ms * slow } else { exec_ms };
             // Stage bookkeeping: every transmitted frame reaches the blob
             // filter; deeper stages per the result.
             stages.observe(Stage::BlobFilter, capture_ms);
@@ -708,6 +941,13 @@ where
     }
     executor.finish()?;
 
+    // A degraded span still open at stream end is closed at `now` so the
+    // report always declares every degraded interval.
+    if let Some(since) = degraded_since.take() {
+        fstats.degraded_windows.push((since, now));
+    }
+    fstats.poisoned_rejected = shedder.control.rejected_samples();
+
     Ok(PipelineReport {
         qor,
         latency,
@@ -719,6 +959,7 @@ where
         transmitted,
         shed,
         link_dropped,
+        faults: fstats,
         bytes_on_wire: transport.bytes_on_wire,
         transmit_ms_total: transport.transmit_ms_total,
         end_ms: now,
@@ -727,6 +968,7 @@ where
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // test assertions
 mod tests {
     use super::*;
 

@@ -1,0 +1,376 @@
+//! Deterministic fault injection for the streaming core.
+//!
+//! A [`FaultPlan`] schedules **virtual-time fault windows** — camera
+//! dropout/freeze, link blackout and bandwidth collapse (layered on
+//! [`crate::pipeline::transport`]), backend-worker crash and straggler
+//! slowdown, and poisoned control observations — that the lifecycle
+//! engines ([`crate::pipeline::core`], [`crate::pipeline::multi`])
+//! consult at event times. Because every query is keyed on virtual time
+//! and the engines process events strictly in virtual-time order under
+//! every [`crate::pipeline::Clock`], an injected fault fires identically
+//! under `SimClock` and `WallClock`.
+//!
+//! The **empty plan is the verification mode**: every query
+//! short-circuits on `windows.is_empty()`, so a pipeline run with
+//! `FaultPlan::default()` performs zero extra RNG draws, zero extra EWMA
+//! updates and no code-path changes — bit-identical to a faultless
+//! build, pinned by `rust/tests/faults.rs` (the same standard
+//! `LinkModel::ideal()` sets for the transport layer).
+//!
+//! Frame accounting: frames destroyed *by a fault* (camera dropout,
+//! link blackout, in-flight loss to a crashed worker) count as
+//! `fault_dropped`, extending the conservation invariant to
+//! `ingress == transmitted + shed + link_dropped + fault_dropped`.
+
+use crate::util::rng::Rng;
+
+/// What a poisoned control observation looks like on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoisonKind {
+    /// The observation arrives as NaN (a corrupted measurement).
+    Nan,
+    /// The observation arrives as a negative duration (a stale /
+    /// clock-skewed timestamp pair).
+    Stale,
+}
+
+/// One fault mode, active over a window's `[start_ms, end_ms)` span.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Camera `camera` emits nothing: captured frames never leave the
+    /// device (counted as `fault_dropped` at their capture time).
+    CameraDrop { camera: u32 },
+    /// Camera `camera` keeps streaming its last pre-window frame: stale
+    /// pixels, live ground truth (the scene moves on).
+    CameraFreeze { camera: u32 },
+    /// The shedder→backend link delivers nothing: frames dispatched
+    /// during the window are lost (counted as `fault_dropped`).
+    LinkBlackout,
+    /// The shedder→backend link's bandwidth collapses to `mbps` —
+    /// frames still flow, slowly, through the modeled link.
+    BandwidthCollapse { mbps: f64 },
+    /// The backend worker is down: frames dispatched during the window
+    /// occupy a backend token until the window ends (the supervised
+    /// restart discovering the lost in-flight work), then count as
+    /// `fault_dropped`.
+    WorkerCrash,
+    /// Backend execution takes `factor`× as long (a straggler).
+    BackendSlowdown { factor: f64 },
+    /// Backend-time observations fed to the control loop are poisoned;
+    /// the loop's input validation must reject them.
+    PoisonControl { kind: PoisonKind },
+}
+
+/// A half-open virtual-time window `[start_ms, end_ms)` of one fault.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultWindow {
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub kind: FaultKind,
+}
+
+impl FaultWindow {
+    /// Is virtual time `t` inside this window?
+    pub fn covers(&self, t: f64) -> bool {
+        t >= self.start_ms && t < self.end_ms
+    }
+}
+
+/// A schedule of fault windows. `FaultPlan::default()` is the empty
+/// plan — the verification mode, bit-identical to a faultless pipeline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    windows: Vec<FaultWindow>,
+    has_freeze: bool,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Builder: add a fault window. Windows may overlap freely.
+    pub fn with(mut self, start_ms: f64, end_ms: f64, kind: FaultKind) -> Self {
+        self.push(start_ms, end_ms, kind);
+        self
+    }
+
+    /// Add a fault window in place.
+    pub fn push(&mut self, start_ms: f64, end_ms: f64, kind: FaultKind) {
+        debug_assert!(
+            start_ms.is_finite() && end_ms.is_finite() && start_ms <= end_ms,
+            "fault window must be finite and ordered: [{start_ms}, {end_ms})"
+        );
+        if matches!(kind, FaultKind::CameraFreeze { .. }) {
+            self.has_freeze = true;
+        }
+        self.windows.push(FaultWindow { start_ms, end_ms, kind });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn windows(&self) -> &[FaultWindow] {
+        &self.windows
+    }
+
+    /// Is camera `camera` in a dropout window at `t`?
+    pub fn camera_dropped(&self, camera: u32, t: f64) -> bool {
+        if self.windows.is_empty() {
+            return false;
+        }
+        self.windows.iter().any(|w| {
+            matches!(w.kind, FaultKind::CameraDrop { camera: c } if c == camera) && w.covers(t)
+        })
+    }
+
+    /// Is camera `camera` in a freeze window at `t`?
+    pub fn camera_frozen(&self, camera: u32, t: f64) -> bool {
+        if !self.has_freeze {
+            return false;
+        }
+        self.windows.iter().any(|w| {
+            matches!(w.kind, FaultKind::CameraFreeze { camera: c } if c == camera) && w.covers(t)
+        })
+    }
+
+    /// Does the plan contain any freeze window at all? Gates the
+    /// last-frame retention buffer so the empty plan clones nothing.
+    pub fn has_camera_freeze(&self) -> bool {
+        self.has_freeze
+    }
+
+    /// Is the link blacked out at `t`?
+    pub fn link_blackout(&self, t: f64) -> bool {
+        if self.windows.is_empty() {
+            return false;
+        }
+        self.windows
+            .iter()
+            .any(|w| matches!(w.kind, FaultKind::LinkBlackout) && w.covers(t))
+    }
+
+    /// Collapsed link bandwidth at `t` (the tightest covering window),
+    /// or `None` outside every collapse window.
+    pub fn bandwidth_override(&self, t: f64) -> Option<f64> {
+        if self.windows.is_empty() {
+            return None;
+        }
+        self.windows
+            .iter()
+            .filter_map(|w| match w.kind {
+                FaultKind::BandwidthCollapse { mbps } if w.covers(t) => Some(mbps),
+                _ => None,
+            })
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// If the backend worker is crashed at `t`, when does it recover
+    /// (the latest covering crash window's end)?
+    pub fn worker_down_until(&self, t: f64) -> Option<f64> {
+        if self.windows.is_empty() {
+            return None;
+        }
+        self.windows
+            .iter()
+            .filter_map(|w| match w.kind {
+                FaultKind::WorkerCrash if w.covers(t) => Some(w.end_ms),
+                _ => None,
+            })
+            .max_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Backend-execution slowdown factor at `t` (1.0 outside every
+    /// slowdown window; the worst covering window wins).
+    pub fn slowdown(&self, t: f64) -> f64 {
+        if self.windows.is_empty() {
+            return 1.0;
+        }
+        self.windows
+            .iter()
+            .filter_map(|w| match w.kind {
+                FaultKind::BackendSlowdown { factor } if w.covers(t) => Some(factor),
+                _ => None,
+            })
+            .max_by(|a, b| a.total_cmp(b))
+            .unwrap_or(1.0)
+    }
+
+    /// Poison mode for control observations recorded at `t`, if any.
+    pub fn poison(&self, t: f64) -> Option<PoisonKind> {
+        if self.windows.is_empty() {
+            return None;
+        }
+        self.windows.iter().find_map(|w| match w.kind {
+            FaultKind::PoisonControl { kind } if w.covers(t) => Some(kind),
+            _ => None,
+        })
+    }
+
+    /// A seeded random fault storm over `[0, horizon_ms)` across
+    /// `cameras` cameras: 3–6 windows of uniformly-drawn kinds, each
+    /// starting in `[0.1, 0.7]·horizon` and lasting
+    /// `[0.05, 0.2]·horizon`. The chaos property test runs many of
+    /// these; same seed → same plan.
+    pub fn randomized(seed: u64, horizon_ms: f64, cameras: u32) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17);
+        let mut plan = FaultPlan::new();
+        let n = 3 + rng.below(4);
+        for _ in 0..n {
+            let start = rng.range_f64(0.1, 0.7) * horizon_ms;
+            let dur = rng.range_f64(0.05, 0.2) * horizon_ms;
+            let cam = rng.below(cameras.max(1) as u64) as u32;
+            let kind = match rng.below(7) {
+                0 => FaultKind::CameraDrop { camera: cam },
+                1 => FaultKind::CameraFreeze { camera: cam },
+                2 => FaultKind::LinkBlackout,
+                3 => FaultKind::BandwidthCollapse { mbps: rng.range_f64(0.3, 3.0) },
+                4 => FaultKind::WorkerCrash,
+                5 => FaultKind::BackendSlowdown { factor: rng.range_f64(2.0, 6.0) },
+                _ => FaultKind::PoisonControl {
+                    kind: if rng.chance(0.5) { PoisonKind::Nan } else { PoisonKind::Stale },
+                },
+            };
+            plan.push(start, start + dur, kind);
+        }
+        plan
+    }
+}
+
+/// Fault / graceful-degradation counters carried on every pipeline
+/// report. All zeros (and no windows) on a faultless run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultStats {
+    /// Frames destroyed by an injected fault: camera dropout, link
+    /// blackout, or in-flight loss to a crashed worker. Extends frame
+    /// conservation: `ingress == transmitted + shed + link_dropped +
+    /// fault_dropped`.
+    pub fault_dropped: u64,
+    /// Control observations rejected by input validation (NaN /
+    /// negative — see [`crate::shedder::ControlLoop`]).
+    pub poisoned_rejected: u64,
+    /// Declared degraded-mode spans `(enter_ms, exit_ms)`: the watchdog
+    /// froze the threshold and shed everything until progress resumed.
+    pub degraded_windows: Vec<(f64, f64)>,
+    /// Frames shed *because* the pipeline was in degraded mode (a
+    /// subset of the report's `shed` count).
+    pub degraded_shed: u64,
+    /// Times the per-camera liveness watchdog re-normalized the nominal
+    /// fps after an unplanned camera dropout (or recovery).
+    pub liveness_renorms: u64,
+}
+
+impl FaultStats {
+    /// Merge another shard's counters into this one (sharded sweeps).
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.fault_dropped += other.fault_dropped;
+        self.poisoned_rejected += other.poisoned_rejected;
+        self.degraded_shed += other.degraded_shed;
+        self.liveness_renorms += other.liveness_renorms;
+        self.degraded_windows.extend_from_slice(&other.degraded_windows);
+        self.degraded_windows.sort_by(|a, b| a.0.total_cmp(&b.0));
+    }
+
+    /// Total declared degraded time (ms).
+    pub fn degraded_ms(&self) -> f64 {
+        self.degraded_windows.iter().map(|(s, e)| e - s).sum()
+    }
+
+    /// Was time `t` inside a declared degraded window?
+    pub fn degraded_at(&self, t: f64) -> bool {
+        self.degraded_windows.iter().any(|&(s, e)| t >= s && t < e)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_answers_no_everywhere() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        assert!(!p.camera_dropped(0, 1e5));
+        assert!(!p.camera_frozen(3, 0.0));
+        assert!(!p.link_blackout(500.0));
+        assert_eq!(p.bandwidth_override(500.0), None);
+        assert_eq!(p.worker_down_until(500.0), None);
+        assert_eq!(p.slowdown(500.0), 1.0);
+        assert_eq!(p.poison(500.0), None);
+    }
+
+    #[test]
+    fn window_queries_are_half_open_and_kind_scoped() {
+        let p = FaultPlan::new()
+            .with(100.0, 200.0, FaultKind::CameraDrop { camera: 1 })
+            .with(150.0, 300.0, FaultKind::LinkBlackout)
+            .with(150.0, 300.0, FaultKind::BandwidthCollapse { mbps: 1.5 })
+            .with(150.0, 300.0, FaultKind::BandwidthCollapse { mbps: 0.5 })
+            .with(400.0, 500.0, FaultKind::WorkerCrash)
+            .with(400.0, 500.0, FaultKind::BackendSlowdown { factor: 4.0 })
+            .with(600.0, 700.0, FaultKind::PoisonControl { kind: PoisonKind::Nan });
+        assert!(p.camera_dropped(1, 100.0));
+        assert!(p.camera_dropped(1, 199.9));
+        assert!(!p.camera_dropped(1, 200.0), "end is exclusive");
+        assert!(!p.camera_dropped(2, 150.0), "per-camera scope");
+        assert!(p.link_blackout(150.0));
+        assert!(!p.link_blackout(149.9));
+        // The tightest covering collapse wins.
+        assert_eq!(p.bandwidth_override(200.0), Some(0.5));
+        assert_eq!(p.worker_down_until(450.0), Some(500.0));
+        assert_eq!(p.worker_down_until(399.0), None);
+        assert_eq!(p.slowdown(450.0), 4.0);
+        assert_eq!(p.slowdown(399.0), 1.0);
+        assert_eq!(p.poison(650.0), Some(PoisonKind::Nan));
+        assert!(!p.has_camera_freeze());
+        let p = p.with(0.0, 10.0, FaultKind::CameraFreeze { camera: 0 });
+        assert!(p.has_camera_freeze());
+        assert!(p.camera_frozen(0, 5.0));
+        assert!(!p.camera_frozen(1, 5.0));
+    }
+
+    #[test]
+    fn randomized_plans_are_seeded_and_bounded() {
+        let a = FaultPlan::randomized(7, 10_000.0, 4);
+        let b = FaultPlan::randomized(7, 10_000.0, 4);
+        assert_eq!(a, b, "same seed, same plan");
+        let c = FaultPlan::randomized(8, 10_000.0, 4);
+        assert_ne!(a, c, "different seeds diverge");
+        assert!((3..=6).contains(&a.windows().len()));
+        for w in a.windows() {
+            assert!(w.start_ms >= 0.0 && w.end_ms <= 0.9 * 10_000.0 + 1e-9);
+            assert!(w.end_ms > w.start_ms);
+            if let FaultKind::CameraDrop { camera } | FaultKind::CameraFreeze { camera } = w.kind
+            {
+                assert!(camera < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn fault_stats_merge_sums_and_sorts_windows() {
+        let mut a = FaultStats {
+            fault_dropped: 3,
+            poisoned_rejected: 1,
+            degraded_windows: vec![(500.0, 700.0)],
+            degraded_shed: 2,
+            liveness_renorms: 1,
+        };
+        let b = FaultStats {
+            fault_dropped: 4,
+            poisoned_rejected: 0,
+            degraded_windows: vec![(100.0, 200.0)],
+            degraded_shed: 5,
+            liveness_renorms: 0,
+        };
+        a.merge(&b);
+        assert_eq!(a.fault_dropped, 7);
+        assert_eq!(a.degraded_shed, 7);
+        assert_eq!(a.degraded_windows, vec![(100.0, 200.0), (500.0, 700.0)]);
+        assert_eq!(a.degraded_ms(), 300.0);
+        assert!(a.degraded_at(150.0));
+        assert!(!a.degraded_at(300.0));
+    }
+}

@@ -20,12 +20,28 @@
 //! * [`transport`] — the modeled shedder→backend network link: FIFO
 //!   serialization at a configured bandwidth over each frame's actual
 //!   wire size ([`crate::video::wire`]), propagation, jitter, loss.
+//! * [`faults`] — seeded, clock-abstracted fault injection: scheduled
+//!   virtual-time windows of camera dropout/freeze, link blackout /
+//!   bandwidth collapse, worker crash / straggler slowdown, poisoned
+//!   control observations. The empty plan is bit-identical to a
+//!   faultless run.
+//! * [`supervise`] — the supervised worker-thread harness behind the
+//!   realtime backends: restart-on-crash with bounded retries and
+//!   exponential backoff, timeout-bounded rendezvous.
+
+// The pipeline is the long-running production surface: a stray panic in
+// it takes the whole edge deployment down, so unwrap/expect must either
+// be converted to Result paths or carry an explicit invariant
+// justification under `#[allow]` (tests are blanket-allowed).
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod core;
+pub mod faults;
 pub mod multi;
 pub mod parallel;
 pub mod realtime;
 pub mod sim;
+pub mod supervise;
 pub mod transport;
 pub mod workloads;
 
@@ -34,6 +50,7 @@ pub use self::core::{
     EventClass, FrameDecision, FramePayload, PipelineReport, Policy, SimClock, SimConfig,
     SyncBackend, WallClock,
 };
+pub use faults::{FaultKind, FaultPlan, FaultStats, FaultWindow, PoisonKind};
 pub use multi::{
     multi_backend_seed, multi_backends, run_multi_pipeline, MultiBackendExecutor,
     MultiPipelineReport, MultiSimConfig, MultiSyncBackend, QueryReport,
@@ -42,5 +59,6 @@ pub use parallel::{
     default_threads, merge_reports, parallel_map, run_sharded_sim, run_sharded_sim_with,
 };
 pub use sim::{run_multi_sim, run_multi_sim_with, run_sim, run_sim_with, SimReport};
+pub use supervise::{Runner, RunnerFactory, SupervisedWorker, SupervisorConfig};
 pub use transport::{Link, LinkModel, Transmission, TransportConfig};
 pub use workloads::{CameraChurn, ChurnWindow, IterArrivals, PoissonArrivals};

@@ -39,8 +39,10 @@ use crate::pipeline::core::{
     ArrivalModel, BackgroundMap, Clock, EventClass, EventQueue, FrameDecision, FramePayload,
     PipelineReport,
 };
+use crate::pipeline::faults::{FaultPlan, FaultStats, PoisonKind};
 use crate::pipeline::transport::{Transmission, TransportConfig, TransportState};
 use crate::shedder::{ArbiterPolicy, Entry, MultiShedder, QueryMask, QuerySet};
+use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -64,6 +66,14 @@ pub struct MultiSimConfig {
     /// query crosses it **once** (the transmission analogue of the
     /// shared-extraction invariant). Defaults to the ideal link.
     pub transport: TransportConfig,
+    /// Scheduled fault windows (see [`crate::pipeline::faults`]). Camera
+    /// dropout/freeze hits the shared arrival side once; link faults hit
+    /// the one shared crossing; backend faults apply per query. The
+    /// default empty plan is bit-identical to a faultless run. Unlike the
+    /// single-query engine, a worker-crash window books its losses
+    /// immediately (per-query token buckets make the token-recovery dance
+    /// redundant) and there is no watchdog/liveness degraded mode here.
+    pub faults: FaultPlan,
 }
 
 /// One query's slice of a multi-query run: the full single-query metrics
@@ -103,6 +113,9 @@ impl MultiPipelineReport {
     /// ingress/decision counts sum, so `aggregate().ingress` is
     /// `frames × N`). QoR merges per target object across queries.
     pub fn aggregate(&self) -> PipelineReport {
+        // Invariant: `run_multi_pipeline` bails on an empty query set, so
+        // every constructed report has ≥ 1 query.
+        #[allow(clippy::expect_used)]
         let mut agg = crate::pipeline::parallel::merge_reports(
             self.queries.iter().map(|q| &q.report),
         )
@@ -234,6 +247,10 @@ struct IngressEvent {
 enum MEvent {
     Ingress(Box<IngressEvent>),
     Completion { query: usize, seq: u64, capture_ms: f64, exec_ms: f64, dnn: bool },
+    /// A shared frame destroyed by a camera-dropout fault at capture
+    /// time: every query loses its copy (per-query ground-truth id sets
+    /// ride along for QoR accounting).
+    FaultDrop { camera: u32, capture_ms: f64, ids: Vec<Vec<u64>> },
 }
 
 /// Per-query metrics sink + per-query virtual clock.
@@ -255,6 +272,9 @@ struct QueryState {
     now: f64,
     last_control_sample: f64,
     dispatch_seq: u64,
+    /// Fault counters for this query's report (only `fault_dropped` and
+    /// `poisoned_rejected` are populated by the multi engine).
+    fstats: FaultStats,
 }
 
 impl QueryState {
@@ -274,6 +294,7 @@ impl QueryState {
             now: 0.0,
             last_control_sample: f64::NEG_INFINITY,
             dispatch_seq: 0,
+            fstats: FaultStats::default(),
         }
     }
 
@@ -289,6 +310,22 @@ impl QueryState {
         });
         self.shed += 1;
         recycle(id_pool, e.item.ids);
+    }
+
+    /// Account one frame an injected fault destroyed for this query
+    /// (camera dropout, link blackout, crashed worker).
+    fn account_fault_drop(
+        &mut self,
+        camera: u32,
+        capture_ms: f64,
+        ids: Vec<u64>,
+        id_pool: &mut Vec<Vec<u64>>,
+    ) {
+        self.qor.observe(&ids, false);
+        self.stages.observe(Stage::Shed, capture_ms);
+        self.decisions.push(FrameDecision { camera, capture_ms, kept: false });
+        self.fstats.fault_dropped += 1;
+        recycle(id_pool, ids);
     }
 
     /// Account one frame this query queued but the shared link lost.
@@ -325,6 +362,10 @@ struct MultiFeeder {
     ids_pool: Vec<Vec<Vec<u64>>>,
     extract_ms_total: f64,
     frames: u64,
+    /// Last delivered pixels per camera — only populated when the fault
+    /// plan contains a camera-freeze window (see the single-query
+    /// `ArrivalFeeder`).
+    last_rgb: HashMap<u32, Vec<f32>>,
 }
 
 impl MultiFeeder {
@@ -337,6 +378,7 @@ impl MultiFeeder {
             ids_pool: Vec::new(),
             extract_ms_total: 0.0,
             frames: 0,
+            last_rgb: HashMap::new(),
         }
     }
 
@@ -362,10 +404,42 @@ impl MultiFeeder {
         set: &QuerySet,
         extractor: &Extractor,
         cost: &mut CostModel,
+        faults: &FaultPlan,
     ) -> anyhow::Result<bool> {
-        let Some(f) = arrivals.next_frame() else {
+        let Some(mut f) = arrivals.next_frame() else {
             return Ok(false);
         };
+        // Fault: camera dropout — the shared frame never leaves the
+        // device; every query loses its copy, accounted at capture time.
+        // No extraction and no cost-model draws, so the RNG sequences
+        // stay aligned with the healthy stream.
+        if faults.camera_dropped(f.camera, f.ts_ms) {
+            let mut ids = self.ids_pool.pop().unwrap_or_default();
+            for q in set.queries() {
+                let mut v = self.id_pool.pop().unwrap_or_default();
+                f.target_ids_into(&q.config.colors, q.config.min_blob_px, &mut v);
+                ids.push(v);
+            }
+            self.frames += 1;
+            eq.push(
+                f.ts_ms,
+                MEvent::FaultDrop { camera: f.camera, capture_ms: f.ts_ms, ids },
+            );
+            return Ok(true);
+        }
+        // Fault: camera freeze — stale pixels, live ground truth.
+        if faults.has_camera_freeze() {
+            if faults.camera_frozen(f.camera, f.ts_ms) {
+                if let Some(prev) = self.last_rgb.get(&f.camera) {
+                    f.rgb.clear();
+                    f.rgb.extend_from_slice(prev);
+                }
+            } else {
+                let slot = self.last_rgb.entry(f.camera).or_default();
+                slot.clear();
+                slot.extend_from_slice(&f.rgb);
+            }
+        }
         let bg = *backgrounds
             .get(&f.camera)
             .ok_or_else(|| anyhow::anyhow!("no background for camera {}", f.camera))?;
@@ -468,11 +542,12 @@ where
     let mut retune_dropped: Vec<Vec<Entry<MultiItem>>> = (0..k).map(|_| Vec::new()).collect();
     let mut offer_dropped: Vec<Entry<MultiItem>> = Vec::new();
 
-    feeder.feed_next(&mut eq, &mut arrivals, backgrounds, set, extractor, &mut cost)?;
+    let faults = &cfg.faults;
+    feeder.feed_next(&mut eq, &mut arrivals, backgrounds, set, extractor, &mut cost, faults)?;
 
     while let Some((t, ev)) = eq.pop() {
         let class = match ev {
-            MEvent::Ingress(..) => EventClass::Ingress,
+            MEvent::Ingress(..) | MEvent::FaultDrop { .. } => EventClass::Ingress,
             MEvent::Completion { .. } => EventClass::Completion,
         };
         clock.advance_to(t, class);
@@ -494,6 +569,7 @@ where
                     set,
                     extractor,
                     &mut cost,
+                    faults,
                 )?;
 
                 // Shared pre-step: one rate observation, per-query CDF
@@ -517,17 +593,47 @@ where
                     }
                 }
                 frame.admitted = mask;
+                // Fault: shared-link blackout — the one crossing every
+                // query's copy depends on is down, so the whole event is
+                // fault-dropped for every query (the non-admitting
+                // queries would have shed theirs anyway; skipping the
+                // offer path on a dead link keeps per-query conservation
+                // exact without queueing undeliverable frames).
+                if faults.link_blackout(t) {
+                    for (q, st) in states.iter_mut().enumerate() {
+                        st.account_fault_drop(
+                            frame.camera,
+                            capture,
+                            std::mem::take(&mut ids[q]),
+                            &mut feeder.id_pool,
+                        );
+                    }
+                    for (q, st) in states.iter_mut().enumerate() {
+                        if t - st.last_control_sample >= 1_000.0 {
+                            st.control_series.push((
+                                t,
+                                shedder.threshold(q),
+                                shedder.target_rate(q),
+                            ));
+                            st.last_control_sample = t;
+                        }
+                    }
+                    feeder.recycle_event(utilities, ids);
+                    continue;
+                }
                 // Shared transmission: a frame admitted by ≥ 1 query
                 // crosses the link exactly ONCE; every admitting query's
                 // queue entry carries the same transmission outcome. The
-                // ideal link stays byte-accounted but delay-free.
+                // ideal link stays byte-accounted but delay-free (a
+                // bandwidth-collapse fault forces the modeled-link path).
+                let bw_override = faults.bandwidth_override(t);
                 let transit = if mask.is_empty() {
                     None
-                } else if transport.is_ideal() {
+                } else if transport.is_ideal() && bw_override.is_none() {
                     transport.account_ideal(&frame);
                     None
                 } else {
-                    Some(transport.ship(t, &frame))
+                    Some(transport.ship(t, &frame, bw_override))
                 };
                 let rc = Rc::new(frame);
                 for (q, &u) in utilities.iter().enumerate() {
@@ -555,11 +661,36 @@ where
             MEvent::Completion { query: q, seq, capture_ms, exec_ms, dnn } => {
                 states[q].now = states[q].now.max(t);
                 shedder.tokens(q).release();
-                shedder.on_backend_complete(q, exec_ms);
+                // Fault: poisoned control observation — validation in the
+                // query's control loop must reject it (see the
+                // single-query engine for the semantics).
+                let observed_ms = match faults.poison(t) {
+                    Some(PoisonKind::Nan) => f64::NAN,
+                    Some(PoisonKind::Stale) => -exec_ms.max(1.0),
+                    None => exec_ms,
+                };
+                shedder.on_backend_complete(q, observed_ms);
                 executor.on_complete(q, seq, dnn)?;
                 let e2e = clock.measure_e2e(capture_ms, t);
                 states[q].latency.observe(e2e);
                 states[q].latency_windows.observe(capture_ms, e2e);
+            }
+            MEvent::FaultDrop { camera, capture_ms, ids } => {
+                for (st, ids_q) in states.iter_mut().zip(ids) {
+                    st.now = st.now.max(t);
+                    st.ingress += 1;
+                    st.stages.observe(Stage::Ingress, capture_ms);
+                    st.account_fault_drop(camera, capture_ms, ids_q, &mut feeder.id_pool);
+                }
+                feeder.feed_next(
+                    &mut eq,
+                    &mut arrivals,
+                    backgrounds,
+                    set,
+                    extractor,
+                    &mut cost,
+                    faults,
+                )?;
             }
         }
 
@@ -588,6 +719,19 @@ where
                     states[q].account_link_drop(entry, &mut feeder.id_pool);
                     continue;
                 }
+                // Fault: backend worker down — the multi engine books the
+                // loss immediately (per-query token buckets make the
+                // single-engine token-recovery dance redundant here).
+                if faults.worker_down_until(now_q).is_some() {
+                    let MultiItem { frame: rc, ids, .. } = entry.item;
+                    states[q].account_fault_drop(
+                        rc.camera,
+                        rc.capture_ms,
+                        ids,
+                        &mut feeder.id_pool,
+                    );
+                    continue;
+                }
                 assert!(shedder.tokens(q).try_acquire());
                 let MultiItem { frame: rc, ids, transit } = entry.item;
                 let st = &mut states[q];
@@ -606,8 +750,11 @@ where
                 }
                 let bg = *backgrounds
                     .get(&rc.camera)
-                    .expect("background seen at ingress");
+                    .ok_or_else(|| anyhow::anyhow!("no background for camera {}", rc.camera))?;
                 let (last_stage, exec_ms) = executor.submit(q, &rc, bg)?;
+                // Fault: straggler slowdown (see the single-query engine).
+                let slow = faults.slowdown(now_q);
+                let exec_ms = if slow != 1.0 { exec_ms * slow } else { exec_ms };
                 drop(rc);
                 let st = &mut states[q];
                 st.stages.observe(Stage::BlobFilter, capture_ms);
@@ -638,6 +785,9 @@ where
     }
     executor.finish()?;
 
+    for (q, st) in states.iter_mut().enumerate() {
+        st.fstats.poisoned_rejected = shedder.rejected_samples(q);
+    }
     let end_ms = states.iter().fold(0.0f64, |m, s| m.max(s.now));
     let queries = set
         .queries()
@@ -662,6 +812,7 @@ where
                 transmit_ms_total: st.transmit_ms_total,
                 end_ms: st.now,
                 extract_ms_total: 0.0,
+                faults: st.fstats,
             },
         })
         .collect();
@@ -679,6 +830,7 @@ where
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // test assertions
 mod tests {
     use super::*;
     use crate::color::NamedColor;
@@ -724,6 +876,7 @@ mod tests {
             seed: 0xA1,
             fps_total: fps,
             transport: TransportConfig::default(),
+            faults: FaultPlan::default(),
         };
         let extractor = Extractor::native(set.union_model().clone());
         let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
@@ -766,6 +919,7 @@ mod tests {
             seed: 1,
             fps_total: 10.0,
             transport: TransportConfig::default(),
+            faults: FaultPlan::default(),
         };
         let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
         let mut executor = MultiSyncBackend::new(&mut backends);

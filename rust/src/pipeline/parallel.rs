@@ -63,10 +63,18 @@ where
                     break;
                 }
                 let r = f(i, &items[i]);
-                *slots[i].lock().unwrap() = Some(r);
+                // Invariant: slot mutexes are never poisoned — a worker
+                // panic propagates at scope join before the unwrap runs.
+                #[allow(clippy::unwrap_used)]
+                {
+                    *slots[i].lock().unwrap() = Some(r);
+                }
             });
         }
     });
+    // Invariant: the cursor hands every index to exactly one worker, and
+    // the scope joins only after all workers finish — every slot is full.
+    #[allow(clippy::unwrap_used, clippy::expect_used)]
     slots
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("worker filled slot"))
@@ -99,9 +107,9 @@ where
         acc.transmit_ms_total += r.transmit_ms_total;
         acc.end_ms = acc.end_ms.max(r.end_ms);
         acc.extract_ms_total += r.extract_ms_total;
+        acc.faults.merge(&r.faults);
     }
-    acc.control_series
-        .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    acc.control_series.sort_by(|a, b| a.0.total_cmp(&b.0));
     Some(acc)
 }
 
@@ -161,12 +169,13 @@ pub fn run_sharded_sim_with(
     for (video, result) in videos.iter().zip(shard_results) {
         per_camera.push((video.camera_id(), result?));
     }
-    let merged =
-        merge_reports(per_camera.iter().map(|(_, r)| r)).expect("non-empty shard set");
+    let merged = merge_reports(per_camera.iter().map(|(_, r)| r))
+        .ok_or_else(|| anyhow!("non-empty shard set"))?;
     Ok((merged, per_camera))
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // test assertions
 mod tests {
     use super::*;
     use crate::color::NamedColor;
@@ -195,6 +204,7 @@ mod tests {
             seed: 0x5A,
             fps_total: 10.0,
             transport: crate::pipeline::TransportConfig::default(),
+            faults: crate::pipeline::FaultPlan::default(),
         }
     }
 

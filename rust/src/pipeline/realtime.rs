@@ -36,10 +36,12 @@ use crate::pipeline::core::{
     backgrounds_of, run_pipeline, ArrivalModel, BackendExecutor, FrameDecision, FramePayload,
     Policy, SimConfig, WallClock,
 };
+use crate::pipeline::faults::{FaultPlan, FaultStats};
 use crate::pipeline::multi::{
     multi_backend_seed, run_multi_pipeline, MultiBackendExecutor, MultiPipelineReport,
     MultiSimConfig,
 };
+use crate::pipeline::supervise::{RunnerFactory, SupervisedWorker, SupervisorConfig};
 use crate::pipeline::transport::TransportConfig;
 use crate::pipeline::workloads::IterArrivals;
 use crate::runtime::Engine;
@@ -48,7 +50,7 @@ use crate::utility::UtilityModel;
 use crate::video::Video;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Real-time run parameters.
@@ -78,6 +80,17 @@ pub struct RealtimeConfig {
     /// Modeled shedder→backend link + wire encoding (ideal by default;
     /// decisions stay clock-invariant with the sim driver either way).
     pub transport: TransportConfig,
+    /// Rendezvous timeout (ms) for the backend worker: a hung detector
+    /// produces a diagnosable error instead of blocking forever.
+    pub backend_recv_timeout_ms: f64,
+    /// Restart budget for a crashed backend worker (supervised respawn
+    /// with exponential backoff); 0 disables restarts.
+    pub worker_restart_max: u32,
+    /// Base backoff (ms) before a worker respawn; doubles per restart.
+    pub worker_restart_backoff_ms: f64,
+    /// Scheduled fault windows (empty = the faultless verification mode;
+    /// see [`crate::pipeline::faults`]).
+    pub faults: FaultPlan,
 }
 
 impl Default for RealtimeConfig {
@@ -94,7 +107,22 @@ impl Default for RealtimeConfig {
             seed: 0xB_E,
             arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
             transport: TransportConfig::default(),
+            backend_recv_timeout_ms: 30_000.0,
+            worker_restart_max: 2,
+            worker_restart_backoff_ms: 50.0,
+            faults: FaultPlan::default(),
         }
+    }
+}
+
+/// Supervisor policy derived from the run parameters.
+fn supervisor_cfg(cfg: &RealtimeConfig) -> SupervisorConfig {
+    SupervisorConfig {
+        recv_timeout: Duration::from_secs_f64(
+            (cfg.backend_recv_timeout_ms / 1e3).max(1e-3),
+        ),
+        max_restarts: cfg.worker_restart_max,
+        backoff: Duration::from_secs_f64((cfg.worker_restart_backoff_ms / 1e3).max(0.0)),
     }
 }
 
@@ -116,9 +144,16 @@ pub struct RealtimeReport {
     pub wall: Duration,
     /// Mean extractor latency per frame (ms) — the camera-side overhead.
     pub extract_ms_mean: f64,
+    /// Fault / degradation counters (all zero on a faultless run).
+    /// `ingress == transmitted + shed + link_dropped + faults.fault_dropped`.
+    pub faults: FaultStats,
+    /// Times the supervised backend worker was respawned after a crash.
+    pub worker_restarts: u32,
 }
 
-/// A DNN-bound frame shipped to the backend worker.
+/// A DNN-bound frame shipped to the backend worker. `Clone` so the
+/// supervisor can keep a replay copy until the job is acked.
+#[derive(Clone)]
 struct DnnJob {
     camera: u32,
     rgb: Vec<f32>,
@@ -128,12 +163,12 @@ struct DnnJob {
 
 /// Threaded [`BackendExecutor`]: filter stages + cost sampling on the
 /// driver thread (keeping the cost-model sequence identical to the sim
-/// driver), real DNN execution on a worker thread.
+/// driver), real DNN execution on a supervised worker thread —
+/// restart-on-crash within a bounded budget, `recv_timeout` rendezvous
+/// (see [`crate::pipeline::supervise`]).
 pub struct ThreadedBackend {
     planner: BackendQuery,
-    work_tx: Option<mpsc::Sender<DnnJob>>,
-    done_rx: mpsc::Receiver<()>,
-    handle: Option<std::thread::JoinHandle<Result<()>>>,
+    worker: SupervisedWorker<DnnJob>,
     /// Dispatch ordinal of the next `submit` call (mirrors the core's
     /// `seq` numbering — both count submits in the same order).
     submit_seq: u64,
@@ -142,38 +177,41 @@ pub struct ThreadedBackend {
     /// once `k + 1` done signals have been received.
     dnn_job_of: HashMap<u64, u64>,
     jobs_submitted: u64,
-    jobs_done: u64,
 }
 
 impl ThreadedBackend {
-    /// Spawn the backend worker. The worker owns cloned per-camera
-    /// backgrounds (one copy per camera, not per frame) and builds its own
-    /// detector — the PJRT handle is not `Send`.
+    /// Spawn the supervised backend worker. The runner factory owns
+    /// shared per-camera backgrounds (one copy per camera, not per
+    /// frame) and builds the detector *inside* each worker incarnation —
+    /// the PJRT handle is not `Send`.
     pub fn spawn(videos: &[Video], cfg: &RealtimeConfig) -> Result<Self> {
-        let (work_tx, work_rx) = mpsc::channel::<DnnJob>();
-        let (done_tx, done_rx) = mpsc::channel::<()>();
-        let bgs: HashMap<u32, Vec<f32>> = videos
-            .iter()
-            .map(|v| (v.camera_id(), v.background().to_vec()))
-            .collect();
-        let ranges: Vec<HueRanges> = cfg.query.colors.iter().map(|c| c.ranges()).collect();
+        let bgs: Arc<HashMap<u32, Vec<f32>>> = Arc::new(
+            videos
+                .iter()
+                .map(|v| (v.camera_id(), v.background().to_vec()))
+                .collect(),
+        );
+        let ranges: Arc<Vec<HueRanges>> =
+            Arc::new(cfg.query.colors.iter().map(|c| c.ranges()).collect());
         let use_artifacts = cfg.use_artifacts;
-        let handle = std::thread::spawn(move || -> Result<()> {
+        let factory: RunnerFactory<DnnJob> = Arc::new(move || {
             let detector = if use_artifacts {
                 let engine = Engine::from_default_artifacts()?;
                 Detector::artifact(&engine)?
             } else {
                 Detector::native(12, 25.0)
             };
-            while let Ok(job) = work_rx.recv() {
+            let bgs = Arc::clone(&bgs);
+            let ranges = Arc::clone(&ranges);
+            Ok(Box::new(move |job: &DnnJob| {
                 let bg = bgs
                     .get(&job.camera)
                     .ok_or_else(|| anyhow!("no background for camera {}", job.camera))?;
                 let _ = detector.detect(&job.rgb, bg, job.width, job.height, &ranges)?;
-                let _ = done_tx.send(());
-            }
-            Ok(())
+                Ok(())
+            }))
         });
+        let worker = SupervisedWorker::spawn(factory, supervisor_cfg(cfg))?;
         let planner = BackendQuery::new(
             cfg.query.clone(),
             Detector::native(12, 25.0),
@@ -182,27 +220,16 @@ impl ThreadedBackend {
         );
         Ok(ThreadedBackend {
             planner,
-            work_tx: Some(work_tx),
-            done_rx,
-            handle: Some(handle),
+            worker,
             submit_seq: 0,
             dnn_job_of: HashMap::new(),
             jobs_submitted: 0,
-            jobs_done: 0,
         })
     }
 
-    /// A channel to the worker broke: join it and surface its *actual*
-    /// error (artifact load failure, missing background, …) instead of a
-    /// generic disconnect.
-    fn worker_failure(&mut self, context: &str) -> anyhow::Error {
-        drop(self.work_tx.take());
-        match self.handle.take().map(|h| h.join()) {
-            Some(Ok(Err(e))) => e.context(context.to_string()),
-            Some(Ok(Ok(()))) => anyhow!("{context}: backend worker exited cleanly"),
-            Some(Err(_)) => anyhow!("{context}: backend worker panicked"),
-            None => anyhow!("{context}: backend worker already gone"),
-        }
+    /// Times the supervised worker was respawned after a crash.
+    pub fn worker_restarts(&self) -> u32 {
+        self.worker.restarts()
     }
 }
 
@@ -222,10 +249,10 @@ impl BackendExecutor for ThreadedBackend {
                 width: payload.width,
                 height: payload.height,
             };
-            let sent = self.work_tx.as_ref().expect("worker alive").send(job);
-            if sent.is_err() {
-                return Err(self.worker_failure("backend worker hung up"));
-            }
+            // A dead channel triggers a supervised restart (with replay);
+            // only an exhausted restart budget surfaces as an error — the
+            // worker's *actual* failure cause, not a generic disconnect.
+            self.worker.submit(job)?;
             self.dnn_job_of.insert(seq, self.jobs_submitted);
             self.jobs_submitted += 1;
         }
@@ -242,26 +269,17 @@ impl BackendExecutor for ThreadedBackend {
         // even when `backend_tokens > 1` pops completions out of dispatch
         // order (a later-dispatched job may already have been drained by
         // an earlier-popping completion, in which case this returns
-        // without waiting).
+        // without waiting). The supervisor bounds the wait with
+        // `recv_timeout` and restarts through crashes.
         let job = self
             .dnn_job_of
             .remove(&seq)
             .ok_or_else(|| anyhow!("completion for unknown dispatch seq {seq}"))?;
-        while self.jobs_done <= job {
-            if self.done_rx.recv().is_err() {
-                return Err(self.worker_failure("backend worker died"));
-            }
-            self.jobs_done += 1;
-        }
-        Ok(())
+        self.worker.wait_for(job)
     }
 
     fn finish(&mut self) -> Result<()> {
-        drop(self.work_tx.take());
-        if let Some(h) = self.handle.take() {
-            h.join().map_err(|_| anyhow!("backend worker panicked"))??;
-        }
-        Ok(())
+        self.worker.finish()
     }
 }
 
@@ -298,6 +316,7 @@ pub fn run_realtime_with<A: ArrivalModel>(
         seed: cfg.seed,
         fps_total: arrivals.fps_total(),
         transport: cfg.transport,
+        faults: cfg.faults.clone(),
     };
 
     let extractor = if cfg.use_artifacts {
@@ -333,6 +352,8 @@ pub fn run_realtime_with<A: ArrivalModel>(
         bytes_on_wire: report.bytes_on_wire,
         wall: start.elapsed(),
         extract_ms_mean,
+        faults: report.faults,
+        worker_restarts: executor.worker_restarts(),
     })
 }
 
@@ -341,6 +362,8 @@ pub fn run_realtime_with<A: ArrivalModel>(
 // ---------------------------------------------------------------------------
 
 /// A DNN-bound (frame, query) shipped to the shared backend worker.
+/// `Clone` so the supervisor can replay unacked jobs after a restart.
+#[derive(Clone)]
 struct MultiDnnJob {
     query: usize,
     camera: u32,
@@ -352,47 +375,49 @@ struct MultiDnnJob {
 /// Threaded [`MultiBackendExecutor`]: per-query filter planners (each
 /// with its own cost model, seeded as [`multi_backend_seed`] prescribes,
 /// so decisions match the discrete-event multi driver) on the driver
-/// thread; one shared worker thread runs the real detector for every
-/// query's DNN-bound frames — only the admitted queries ever reach it.
+/// thread; one shared supervised worker thread runs the real detector
+/// for every query's DNN-bound frames — only the admitted queries ever
+/// reach it.
 pub struct MultiThreadedBackend {
     planners: Vec<BackendQuery>,
-    work_tx: Option<mpsc::Sender<MultiDnnJob>>,
-    done_rx: mpsc::Receiver<()>,
-    handle: Option<std::thread::JoinHandle<Result<()>>>,
+    worker: SupervisedWorker<MultiDnnJob>,
     /// Next dispatch ordinal per query (mirrors the engine's per-query
     /// `seq` numbering — both count that query's submits in order).
     submit_seq: Vec<u64>,
     /// (query, per-query dispatch seq) → global FIFO job index.
     dnn_job_of: HashMap<(usize, u64), u64>,
     jobs_submitted: u64,
-    jobs_done: u64,
 }
 
 impl MultiThreadedBackend {
-    /// Spawn the shared worker. It owns one background clone per camera
-    /// and per-query hue ranges; the detector is built on the worker (the
-    /// PJRT handle is not `Send`).
+    /// Spawn the shared supervised worker. The runner factory owns one
+    /// background clone per camera and per-query hue ranges; the
+    /// detector is built inside each worker incarnation (the PJRT handle
+    /// is not `Send`).
     pub fn spawn(videos: &[Video], set: &QuerySet, cfg: &RealtimeConfig) -> Result<Self> {
-        let (work_tx, work_rx) = mpsc::channel::<MultiDnnJob>();
-        let (done_tx, done_rx) = mpsc::channel::<()>();
-        let bgs: HashMap<u32, Vec<f32>> = videos
-            .iter()
-            .map(|v| (v.camera_id(), v.background().to_vec()))
-            .collect();
-        let ranges_by_query: Vec<Vec<HueRanges>> = set
-            .queries()
-            .iter()
-            .map(|q| q.config.colors.iter().map(|c| c.ranges()).collect())
-            .collect();
+        let bgs: Arc<HashMap<u32, Vec<f32>>> = Arc::new(
+            videos
+                .iter()
+                .map(|v| (v.camera_id(), v.background().to_vec()))
+                .collect(),
+        );
+        let ranges_by_query: Arc<Vec<Vec<HueRanges>>> = Arc::new(
+            set.queries()
+                .iter()
+                .map(|q| q.config.colors.iter().map(|c| c.ranges()).collect())
+                .collect(),
+        );
         let use_artifacts = cfg.use_artifacts;
-        let handle = std::thread::spawn(move || -> Result<()> {
+        let factory: RunnerFactory<MultiDnnJob> = Arc::new(move || {
             let detector = if use_artifacts {
                 let engine = Engine::from_default_artifacts()?;
                 Detector::artifact(&engine)?
             } else {
                 Detector::native(12, 25.0)
             };
-            while let Ok(job) = work_rx.recv() {
+            let bgs = Arc::clone(&bgs);
+            let ranges_by_query = Arc::clone(&ranges_by_query);
+            Ok(Box::new(move |job: &MultiDnnJob| {
                 let bg = bgs
                     .get(&job.camera)
                     .ok_or_else(|| anyhow!("no background for camera {}", job.camera))?;
@@ -403,10 +428,10 @@ impl MultiThreadedBackend {
                     job.height,
                     &ranges_by_query[job.query],
                 )?;
-                let _ = done_tx.send(());
-            }
-            Ok(())
+                Ok(())
+            }))
         });
+        let worker = SupervisedWorker::spawn(factory, supervisor_cfg(cfg))?;
         let planners = set
             .queries()
             .iter()
@@ -422,24 +447,16 @@ impl MultiThreadedBackend {
             .collect();
         Ok(MultiThreadedBackend {
             planners,
-            work_tx: Some(work_tx),
-            done_rx,
-            handle: Some(handle),
+            worker,
             submit_seq: vec![0; set.len()],
             dnn_job_of: HashMap::new(),
             jobs_submitted: 0,
-            jobs_done: 0,
         })
     }
 
-    fn worker_failure(&mut self, context: &str) -> anyhow::Error {
-        drop(self.work_tx.take());
-        match self.handle.take().map(|h| h.join()) {
-            Some(Ok(Err(e))) => e.context(context.to_string()),
-            Some(Ok(Ok(()))) => anyhow!("{context}: backend worker exited cleanly"),
-            Some(Err(_)) => anyhow!("{context}: backend worker panicked"),
-            None => anyhow!("{context}: backend worker already gone"),
-        }
+    /// Times the supervised worker was respawned after a crash.
+    pub fn worker_restarts(&self) -> u32 {
+        self.worker.restarts()
     }
 }
 
@@ -469,10 +486,9 @@ impl MultiBackendExecutor for MultiThreadedBackend {
                 width: payload.width,
                 height: payload.height,
             };
-            let sent = self.work_tx.as_ref().expect("worker alive").send(job);
-            if sent.is_err() {
-                return Err(self.worker_failure("backend worker hung up"));
-            }
+            // Supervised send: a dead channel restarts (with replay), an
+            // exhausted budget surfaces the worker's actual failure.
+            self.worker.submit(job)?;
             self.dnn_job_of.insert((query, seq), self.jobs_submitted);
             self.jobs_submitted += 1;
         }
@@ -487,21 +503,11 @@ impl MultiBackendExecutor for MultiThreadedBackend {
             .dnn_job_of
             .remove(&(query, seq))
             .ok_or_else(|| anyhow!("completion for unknown dispatch ({query}, {seq})"))?;
-        while self.jobs_done <= job {
-            if self.done_rx.recv().is_err() {
-                return Err(self.worker_failure("backend worker died"));
-            }
-            self.jobs_done += 1;
-        }
-        Ok(())
+        self.worker.wait_for(job)
     }
 
     fn finish(&mut self) -> Result<()> {
-        drop(self.work_tx.take());
-        if let Some(h) = self.handle.take() {
-            h.join().map_err(|_| anyhow!("backend worker panicked"))??;
-        }
-        Ok(())
+        self.worker.finish()
     }
 }
 
@@ -538,6 +544,7 @@ pub fn run_multi_realtime_with<A: ArrivalModel>(
         seed: cfg.seed,
         fps_total: arrivals.fps_total(),
         transport: cfg.transport,
+        faults: cfg.faults.clone(),
     };
     let union = set.union_model();
     let extractor = if cfg.use_artifacts {

@@ -115,6 +115,7 @@ pub fn run_multi_sim_with<A: ArrivalModel>(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // test assertions
 mod tests {
     use super::*;
     use crate::backend::{CostModel, Detector};
@@ -152,6 +153,7 @@ mod tests {
             seed: 5,
             fps_total: 50.0,
             transport: crate::pipeline::TransportConfig::default(),
+            faults: crate::pipeline::FaultPlan::default(),
         };
         (videos, cfg)
     }

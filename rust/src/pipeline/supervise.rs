@@ -1,0 +1,389 @@
+//! Supervised worker threads for the realtime backends: restart-on-crash
+//! with a bounded retry budget and exponential backoff, plus a
+//! `recv_timeout` rendezvous so a hung worker yields a diagnosable error
+//! instead of a frozen run.
+//!
+//! [`SupervisedWorker`] owns one worker thread built from a
+//! [`RunnerFactory`]: the factory crosses into the thread and builds the
+//! actual job runner *there* (the PJRT client is not `Send`, so detector
+//! construction must happen on the worker). Jobs are `Clone` and queued
+//! in a replay buffer until their completion is acked, so a restart can
+//! resend everything the dead worker never finished — completions that
+//! were already buffered in the channel when the worker died are drained
+//! first and never re-run.
+//!
+//! Failure taxonomy surfaced to callers (the realtime satellite of the
+//! fault-injection work):
+//! * factory/runner `Err` → the worker's *actual* error, with context;
+//! * panic → the panic payload's message;
+//! * hang → "unresponsive" timeout error naming the configured window
+//!   and the jobs outstanding.
+
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A job runner living on the worker thread (built there by the factory;
+/// it never crosses threads, so it may hold `!Send` handles).
+pub type Runner<J> = Box<dyn FnMut(&J) -> Result<()>>;
+
+/// Builds a fresh runner inside each (re)spawned worker thread.
+pub type RunnerFactory<J> = Arc<dyn Fn() -> Result<Runner<J>> + Send + Sync>;
+
+/// Restart / rendezvous policy for a [`SupervisedWorker`].
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Rendezvous timeout: how long a completion wait may block before
+    /// the worker is declared hung.
+    pub recv_timeout: Duration,
+    /// Restart budget: how many times a crashed worker is respawned
+    /// before the supervisor gives up and surfaces the cause.
+    pub max_restarts: u32,
+    /// Base backoff before the first respawn; doubles per restart.
+    pub backoff: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            recv_timeout: Duration::from_secs(30),
+            max_restarts: 2,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+/// A worker thread under supervision: FIFO job channel in, unit acks
+/// out, crash → bounded restart with outstanding-job replay, hang →
+/// timeout error.
+pub struct SupervisedWorker<J: Send + Clone + 'static> {
+    factory: RunnerFactory<J>,
+    cfg: SupervisorConfig,
+    work_tx: Option<mpsc::Sender<J>>,
+    done_rx: mpsc::Receiver<()>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+    /// Jobs sent but not yet acked, FIFO — the restart replay buffer.
+    outstanding: VecDeque<J>,
+    jobs_done: u64,
+    jobs_submitted: u64,
+    restarts: u32,
+    dead: Option<String>,
+}
+
+impl<J: Send + Clone + 'static> SupervisedWorker<J> {
+    /// Spawn the first worker. A factory that fails immediately (e.g. an
+    /// artifact load error) is only discovered at the first rendezvous —
+    /// the error it returned is what surfaces there.
+    pub fn spawn(factory: RunnerFactory<J>, cfg: SupervisorConfig) -> Result<Self> {
+        let (work_tx, done_rx, handle) = Self::spawn_thread(&factory)?;
+        Ok(SupervisedWorker {
+            factory,
+            cfg,
+            work_tx: Some(work_tx),
+            done_rx,
+            handle: Some(handle),
+            outstanding: VecDeque::new(),
+            jobs_done: 0,
+            jobs_submitted: 0,
+            restarts: 0,
+            dead: None,
+        })
+    }
+
+    fn spawn_thread(
+        factory: &RunnerFactory<J>,
+    ) -> Result<(mpsc::Sender<J>, mpsc::Receiver<()>, std::thread::JoinHandle<Result<()>>)> {
+        let (work_tx, work_rx) = mpsc::channel::<J>();
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let factory = Arc::clone(factory);
+        let handle = std::thread::Builder::new()
+            .name("backend-worker".into())
+            .spawn(move || -> Result<()> {
+                let mut runner = factory()?;
+                while let Ok(job) = work_rx.recv() {
+                    runner(&job)?;
+                    if done_tx.send(()).is_err() {
+                        break; // supervisor gone: orderly exit
+                    }
+                }
+                Ok(())
+            })
+            .map_err(|e| anyhow!("failed to spawn backend worker: {e}"))?;
+        Ok((work_tx, done_rx, handle))
+    }
+
+    /// Times the worker has been respawned after a crash.
+    pub fn restarts(&self) -> u32 {
+        self.restarts
+    }
+
+    /// Jobs acked so far.
+    pub fn jobs_done(&self) -> u64 {
+        self.jobs_done
+    }
+
+    /// Send one job. On a dead channel the supervisor restarts (the job
+    /// is already in the replay buffer, so it is resent); once the
+    /// restart budget is exhausted every further submit fails fast with
+    /// the recorded cause.
+    pub fn submit(&mut self, job: J) -> Result<()> {
+        if let Some(cause) = &self.dead {
+            return Err(anyhow!("backend worker is dead: {cause}"));
+        }
+        self.outstanding.push_back(job.clone());
+        self.jobs_submitted += 1;
+        let tx = self
+            .work_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("backend worker already shut down"))?;
+        if tx.send(job).is_err() {
+            self.restart("worker channel closed on submit")?;
+        }
+        Ok(())
+    }
+
+    /// Block until the 0-based job `job` has been acked. A crash mid-wait
+    /// triggers a restart (with replay); a silent worker past
+    /// `recv_timeout` yields an "unresponsive" error naming the window
+    /// and the outstanding count.
+    pub fn wait_for(&mut self, job: u64) -> Result<()> {
+        while self.jobs_done <= job {
+            if let Some(cause) = &self.dead {
+                return Err(anyhow!("backend worker is dead: {cause}"));
+            }
+            match self.done_rx.recv_timeout(self.cfg.recv_timeout) {
+                Ok(()) => {
+                    self.jobs_done += 1;
+                    self.outstanding.pop_front();
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    self.restart("worker disconnected mid-run")?;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    let finished =
+                        self.handle.as_ref().map(|h| h.is_finished()).unwrap_or(true);
+                    if finished {
+                        // Exited without dropping its channel yet — treat
+                        // as a crash, not a hang.
+                        self.restart("worker exited mid-run")?;
+                    } else {
+                        return Err(anyhow!(
+                            "backend worker unresponsive: no completion within {:?} \
+                             ({} of {} jobs done)",
+                            self.cfg.recv_timeout,
+                            self.jobs_done,
+                            self.jobs_submitted
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Join the dead worker for its real cause, respawn within budget,
+    /// and replay every unacked job on the fresh worker.
+    fn restart(&mut self, context: &str) -> Result<()> {
+        // Acks buffered in the channel before the crash survive the
+        // sender's death: harvest them first so finished jobs are never
+        // re-run on the replacement worker.
+        while self.done_rx.try_recv().is_ok() {
+            self.jobs_done += 1;
+            self.outstanding.pop_front();
+        }
+        let cause = match self.handle.take() {
+            Some(h) => match h.join() {
+                Ok(Ok(())) => format!("{context}: worker exited cleanly"),
+                Ok(Err(e)) => format!("{context}: {e:#}"),
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "opaque panic payload".to_string());
+                    format!("{context}: worker panicked: {msg}")
+                }
+            },
+            None => context.to_string(),
+        };
+        if self.restarts >= self.cfg.max_restarts {
+            self.dead = Some(cause.clone());
+            self.work_tx = None;
+            return Err(anyhow!(
+                "backend worker failed permanently after {} restart(s): {cause}",
+                self.restarts
+            ));
+        }
+        let wait = self.cfg.backoff.saturating_mul(1u32 << self.restarts.min(16));
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        self.restarts += 1;
+        let (work_tx, done_rx, handle) = Self::spawn_thread(&self.factory)?;
+        self.work_tx = Some(work_tx);
+        self.done_rx = done_rx;
+        self.handle = Some(handle);
+        // Replay in-flight work the dead worker never acked.
+        let replay: Vec<J> = self.outstanding.iter().cloned().collect();
+        for job in replay {
+            let Some(tx) = self.work_tx.as_ref() else { break };
+            if tx.send(job).is_err() {
+                // The fresh worker died during replay (e.g. the factory
+                // succeeds but the runner fails instantly): burn another
+                // slot of the restart budget.
+                return self.restart("worker died replaying outstanding jobs");
+            }
+        }
+        Ok(())
+    }
+
+    /// Orderly shutdown: close the channel, join, surface the worker's
+    /// terminal result.
+    pub fn finish(&mut self) -> Result<()> {
+        drop(self.work_tx.take());
+        if let Some(h) = self.handle.take() {
+            match h.join() {
+                Ok(r) => r?,
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "opaque panic payload".to_string());
+                    return Err(anyhow!("backend worker panicked: {msg}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn cfg(timeout_ms: u64, max_restarts: u32) -> SupervisorConfig {
+        SupervisorConfig {
+            recv_timeout: Duration::from_millis(timeout_ms),
+            max_restarts,
+            backoff: Duration::from_millis(1),
+        }
+    }
+
+    #[test]
+    fn healthy_worker_runs_jobs_in_order() {
+        let factory: RunnerFactory<u32> = Arc::new(|| Ok(Box::new(|_: &u32| Ok(()))));
+        let mut w = SupervisedWorker::spawn(factory, cfg(5_000, 2)).unwrap();
+        for i in 0..10u32 {
+            w.submit(i).unwrap();
+        }
+        w.wait_for(9).unwrap();
+        assert_eq!(w.jobs_done(), 10);
+        assert_eq!(w.restarts(), 0);
+        w.finish().unwrap();
+    }
+
+    #[test]
+    fn panicking_worker_exhausts_budget_and_surfaces_the_message() {
+        let factory: RunnerFactory<u32> = Arc::new(|| {
+            Ok(Box::new(|_: &u32| -> Result<()> {
+                panic!("detector exploded on frame");
+            }))
+        });
+        let mut w = SupervisedWorker::spawn(factory, cfg(5_000, 1)).unwrap();
+        w.submit(1).unwrap();
+        let err = w.wait_for(0).unwrap_err().to_string();
+        assert!(err.contains("detector exploded on frame"), "got: {err}");
+        assert!(err.contains("failed permanently"), "got: {err}");
+        // Every further submit fails fast with the recorded cause.
+        let err2 = w.submit(2).unwrap_err().to_string();
+        assert!(err2.contains("dead"), "got: {err2}");
+    }
+
+    #[test]
+    fn factory_error_surfaces_as_the_real_cause() {
+        let factory: RunnerFactory<u32> =
+            Arc::new(|| Err(anyhow!("artifact load failed: missing kernel.bin")));
+        let mut w = SupervisedWorker::spawn(factory, cfg(5_000, 0)).unwrap();
+        // The worker exits before touching any job; depending on timing
+        // the dead channel is noticed at submit or at the rendezvous.
+        let err = match w.submit(7) {
+            Err(e) => e.to_string(),
+            Ok(()) => w.wait_for(0).unwrap_err().to_string(),
+        };
+        assert!(err.contains("artifact load failed"), "got: {err}");
+    }
+
+    #[test]
+    fn erroring_worker_surfaces_its_error() {
+        let factory: RunnerFactory<u32> = Arc::new(|| {
+            Ok(Box::new(|j: &u32| -> Result<()> {
+                if *j >= 2 {
+                    Err(anyhow!("background missing for camera {j}"))
+                } else {
+                    Ok(())
+                }
+            }))
+        });
+        let mut w = SupervisedWorker::spawn(factory, cfg(5_000, 0)).unwrap();
+        for j in 0..3u32 {
+            w.submit(j).unwrap();
+        }
+        w.wait_for(1).unwrap();
+        let err = w.wait_for(2).unwrap_err().to_string();
+        assert!(err.contains("background missing for camera 2"), "got: {err}");
+    }
+
+    #[test]
+    fn hung_worker_times_out_with_a_diagnosable_error() {
+        let factory: RunnerFactory<u32> = Arc::new(|| {
+            Ok(Box::new(|_: &u32| -> Result<()> {
+                std::thread::sleep(Duration::from_secs(30));
+                Ok(())
+            }))
+        });
+        let mut w = SupervisedWorker::spawn(factory, cfg(100, 2)).unwrap();
+        w.submit(1).unwrap();
+        let err = w.wait_for(0).unwrap_err().to_string();
+        assert!(err.contains("unresponsive"), "got: {err}");
+        assert!(err.contains("0 of 1 jobs done"), "got: {err}");
+    }
+
+    #[test]
+    fn transient_crash_restarts_and_replays_outstanding_jobs() {
+        // The worker panics on job 3, first incarnation only. The restart
+        // must replay jobs 2..5 (job 0 and 1 were acked) and finish.
+        let generation = Arc::new(AtomicU32::new(0));
+        let seen = Arc::new(AtomicU32::new(0));
+        let factory: RunnerFactory<u32> = {
+            let generation = Arc::clone(&generation);
+            let seen = Arc::clone(&seen);
+            Arc::new(move || {
+                let gen = generation.fetch_add(1, Ordering::SeqCst);
+                let seen = Arc::clone(&seen);
+                Ok(Box::new(move |j: &u32| -> Result<()> {
+                    seen.fetch_add(1, Ordering::SeqCst);
+                    if gen == 0 && *j == 3 {
+                        panic!("transient fault on job 3");
+                    }
+                    Ok(())
+                }))
+            })
+        };
+        let mut w = SupervisedWorker::spawn(factory, cfg(5_000, 2)).unwrap();
+        for j in 0..6u32 {
+            w.submit(j).unwrap();
+        }
+        w.wait_for(5).unwrap();
+        assert_eq!(w.jobs_done(), 6);
+        assert_eq!(w.restarts(), 1, "exactly one respawn");
+        // Acked jobs are never re-run: the first incarnation ran jobs
+        // 0..=3 (4 calls), the replacement replays only the unacked tail.
+        assert!(seen.load(Ordering::SeqCst) <= 10);
+        w.finish().unwrap();
+    }
+}

@@ -115,14 +115,13 @@ impl Link {
         &self.model
     }
 
-    /// Serialization time of one attempt (ms), jittered.
-    fn ser_ms(&mut self, bytes: u64) -> f64 {
-        let m = self.model.bandwidth_mbps;
-        if !(m.is_finite() && m > 0.0) {
+    /// Serialization time of one attempt at `mbps` (ms), jittered.
+    fn ser_ms(&mut self, bytes: u64, mbps: f64) -> f64 {
+        if !(mbps.is_finite() && mbps > 0.0) {
             return 0.0;
         }
         // bytes·8 bit / (mbps·10⁶ bit/s) seconds → ms.
-        let base = bytes as f64 * 8.0 / (m * 1_000.0);
+        let base = bytes as f64 * 8.0 / (mbps * 1_000.0);
         if self.model.jitter <= 0.0 {
             return base;
         }
@@ -130,17 +129,45 @@ impl Link {
         (base * f).max(0.0)
     }
 
+    /// Capacity in effect for one transmission: the model's bandwidth,
+    /// further clamped down by an injected bandwidth-collapse fault.
+    fn effective_mbps(&self, bw_override: Option<f64>) -> f64 {
+        let m = self.model.bandwidth_mbps;
+        match bw_override {
+            Some(bw) if bw.is_finite() && bw > 0.0 => {
+                if m.is_finite() && m > 0.0 {
+                    m.min(bw)
+                } else {
+                    bw
+                }
+            }
+            _ => m,
+        }
+    }
+
     /// Offer `bytes` to the link at `now_ms`. Attempts serialize
     /// back-to-back (each re-jittered, each a fresh loss coin) until one
     /// is delivered or the retransmit budget runs out.
     pub fn transmit(&mut self, now_ms: f64, bytes: u64) -> Transmission {
+        self.transmit_at(now_ms, bytes, None)
+    }
+
+    /// [`Self::transmit`] under an optional bandwidth-collapse override
+    /// (Mbit/s) that caps this transmission's capacity.
+    pub fn transmit_at(
+        &mut self,
+        now_ms: f64,
+        bytes: u64,
+        bw_override: Option<f64>,
+    ) -> Transmission {
+        let mbps = self.effective_mbps(bw_override);
         let depart_ms = now_ms.max(self.busy_until_ms);
         let mut end = depart_ms;
         let max_attempts = 1 + self.model.max_retransmits;
         let mut attempts = 0u32;
         loop {
             attempts += 1;
-            end += self.ser_ms(bytes);
+            end += self.ser_ms(bytes, mbps);
             let lost = self.model.loss > 0.0 && self.rng.chance(self.model.loss);
             if !lost {
                 self.busy_until_ms = end;
@@ -237,8 +264,14 @@ impl TransportState {
     }
 
     /// Encode the frame (per-camera delta state) and push it through the
-    /// link at `now_ms`.
-    pub fn ship(&mut self, now_ms: f64, payload: &FramePayload) -> Transmission {
+    /// link at `now_ms`. `bw_override` is an injected bandwidth-collapse
+    /// fault capping this transmission's capacity (None = the model's).
+    pub fn ship(
+        &mut self,
+        now_ms: f64,
+        payload: &FramePayload,
+        bw_override: Option<f64>,
+    ) -> Transmission {
         let enc = self
             .encoders
             .entry(payload.camera)
@@ -251,7 +284,7 @@ impl TransportState {
             &mut self.buf,
         );
         let bytes = self.buf.len() as u64;
-        let tx = self.link.transmit(now_ms, bytes);
+        let tx = self.link.transmit_at(now_ms, bytes, bw_override);
         self.frames_on_wire += 1;
         self.bytes_on_wire += bytes;
         if tx.delivered {
@@ -270,6 +303,7 @@ impl TransportState {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // test assertions
 mod tests {
     use super::*;
 
@@ -335,5 +369,21 @@ mod tests {
         assert!(t.delivered);
         assert_eq!(t.transfer_ms, 0.0);
         assert_eq!(t.arrival_ms, 42.0);
+    }
+
+    #[test]
+    fn bandwidth_override_caps_capacity() {
+        // Override on an ideal link: 1 Mbit/s effective → 1000 ms.
+        let mut ideal = Link::new(LinkModel::ideal(), 3);
+        let t = ideal.transmit_at(0.0, 125_000, Some(1.0));
+        assert!((t.transfer_ms - 1000.0).abs() < 1e-9, "ser {}", t.transfer_ms);
+        // Override only ever *lowers* a finite link's capacity.
+        let mut slow = Link::new(LinkModel::mbps(1.0), 3);
+        let u = slow.transmit_at(0.0, 125_000, Some(10.0));
+        assert!((u.transfer_ms - 1000.0).abs() < 1e-9, "ser {}", u.transfer_ms);
+        // Degenerate overrides are ignored.
+        let mut l = Link::new(LinkModel::mbps(1.0), 3);
+        let v = l.transmit_at(0.0, 125_000, Some(f64::NAN));
+        assert!((v.transfer_ms - 1000.0).abs() < 1e-9);
     }
 }

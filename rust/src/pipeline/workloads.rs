@@ -192,6 +192,7 @@ impl ArrivalModel for CameraChurn<'_> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // test assertions
 mod tests {
     use super::*;
     use crate::video::VideoConfig;

@@ -97,6 +97,11 @@ pub struct ControlLoop {
     rate: RateEstimator,
     latency_bound_ms: f64,
     queue_cap_max: usize,
+    /// Poisoned observations rejected by input validation (NaN, ±∞ or
+    /// negative durations — clock skew / corrupted telemetry). A faulty
+    /// metrics source must degrade the loop to its last good estimates,
+    /// never drive the threshold with garbage.
+    rejected: u64,
 }
 
 impl ControlLoop {
@@ -120,11 +125,18 @@ impl ControlLoop {
             rate: RateEstimator::new(3_000.0),
             latency_bound_ms,
             queue_cap_max: cfg.queue_cap_max,
+            rejected: 0,
         }
     }
 
     /// Metrics Collector input: backend finished a frame in `ms`.
+    /// Non-finite or negative samples (a poisoned/stale telemetry source)
+    /// are rejected — the EWMAs keep their last good state.
     pub fn observe_backend(&mut self, ms: f64) {
+        if !(ms.is_finite() && ms >= 0.0) {
+            self.rejected += 1;
+            return;
+        }
         self.proc_q.add(ms);
         self.proc_recent.push(ms);
     }
@@ -136,17 +148,21 @@ impl ControlLoop {
     /// measured queue wait + serialization + propagation). The historical
     /// `Option<f64>` pairs existed for callers that never materialized;
     /// nothing ever passed `Some` until the transport layer landed.
+    /// A poisoned half rejects the whole pair (partial application would
+    /// skew the two EWMAs relative to each other).
     pub fn observe_network(&mut self, cam_to_shedder_ms: f64, shedder_to_backend_ms: f64) {
-        debug_assert!(
-            cam_to_shedder_ms.is_finite() && cam_to_shedder_ms >= 0.0,
-            "cam→shedder sample must be finite non-negative ms, got {cam_to_shedder_ms}"
-        );
-        debug_assert!(
-            shedder_to_backend_ms.is_finite() && shedder_to_backend_ms >= 0.0,
-            "shedder→backend sample must be finite non-negative ms, got {shedder_to_backend_ms}"
-        );
+        let valid = |ms: f64| ms.is_finite() && ms >= 0.0;
+        if !(valid(cam_to_shedder_ms) && valid(shedder_to_backend_ms)) {
+            self.rejected += 1;
+            return;
+        }
         self.net_cam_ls.add(cam_to_shedder_ms);
         self.net_ls_q.add(shedder_to_backend_ms);
+    }
+
+    /// Poisoned observations rejected by input validation so far.
+    pub fn rejected_samples(&self) -> u64 {
+        self.rejected
     }
 
     /// Smoothed camera→shedder transfer (ms); the config constant until
@@ -411,6 +427,30 @@ mod tests {
         assert_eq!(cl.net_ls_q_ms(), costs.net_ls_q_ms);
         assert_eq!(cl.net_cam_ls_ms(), costs.net_cam_ls_ms);
         assert_eq!(cl.effective_service_ms(), cl.proc_q_ms());
+    }
+
+    #[test]
+    fn poisoned_observations_are_rejected_not_applied() {
+        let mut cl = mk();
+        for _ in 0..200 {
+            cl.observe_backend(100.0);
+        }
+        let proc_before = cl.proc_q_ms();
+        let (net_before, q_before) = (cl.net_ls_q_ms(), cl.queue_size());
+        // NaN, infinite, and negative (stale/clock-skewed) samples must
+        // all bounce off input validation without moving any estimate.
+        cl.observe_backend(f64::NAN);
+        cl.observe_backend(f64::INFINITY);
+        cl.observe_backend(-250.0);
+        cl.observe_network(f64::NAN, 10.0);
+        cl.observe_network(5.0, -10.0);
+        assert_eq!(cl.rejected_samples(), 5);
+        assert_eq!(cl.proc_q_ms(), proc_before);
+        assert_eq!(cl.net_ls_q_ms(), net_before);
+        assert_eq!(cl.queue_size(), q_before);
+        // Healthy samples still land afterwards.
+        cl.observe_backend(500.0);
+        assert!(cl.proc_q_ms() > proc_before);
     }
 
     #[test]

@@ -170,6 +170,15 @@ impl<T> LoadShedder<T> {
         self.control.observe_backend(proc_ms);
     }
 
+    /// Re-normalize the nominal fps fallback (Eq. 19 cold-start / outage
+    /// value) — per-camera liveness calls this when cameras drop out so
+    /// the rate fallback tracks the cameras actually alive.
+    pub fn set_nominal_fps(&mut self, fps: f64) {
+        let fps = fps.max(0.0);
+        self.default_fps = fps;
+        self.control.set_nominal_fps(fps);
+    }
+
     /// Next frame to transmit (highest utility), if any.
     pub fn next_to_send(&mut self) -> Option<Entry<T>> {
         self.queue.pop_best()

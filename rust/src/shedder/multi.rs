@@ -623,6 +623,12 @@ impl<T> MultiShedder<T> {
     pub fn proc_q_ms(&self, q: usize) -> f64 {
         self.queries[q].control.proc_q_ms()
     }
+
+    /// Poisoned control observations query `q`'s input validation
+    /// rejected (see [`ControlLoop::rejected_samples`]).
+    pub fn rejected_samples(&self, q: usize) -> u64 {
+        self.queries[q].control.rejected_samples()
+    }
 }
 
 #[cfg(test)]

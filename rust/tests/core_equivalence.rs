@@ -42,6 +42,7 @@ fn sim_cfg(fps: f64, seed: u64) -> SimConfig {
         seed,
         fps_total: fps,
         transport: uals::pipeline::TransportConfig::default(),
+        faults: uals::pipeline::FaultPlan::default(),
     }
 }
 
@@ -58,6 +59,7 @@ fn rt_cfg(cfg: &SimConfig) -> RealtimeConfig {
         seed: cfg.seed,
         arbiter: uals::shedder::ArbiterPolicy::Standalone,
         transport: cfg.transport,
+        ..Default::default()
     }
 }
 

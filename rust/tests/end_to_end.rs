@@ -43,6 +43,7 @@ fn fig13a_scenario_shape_holds_end_to_end() {
         seed: 0xE,
         fps_total: sv.fps(),
         transport: uals::pipeline::TransportConfig::default(),
+        faults: uals::pipeline::FaultPlan::default(),
     };
     let extractor = Extractor::native(model);
     let mut backend = BackendQuery::new(
@@ -114,6 +115,7 @@ fn composite_or_query_end_to_end() {
         seed: 2,
         fps_total: 10.0,
         transport: uals::pipeline::TransportConfig::default(),
+        faults: uals::pipeline::FaultPlan::default(),
     };
     let extractor = Extractor::native(model);
     let mut backend = BackendQuery::new(
@@ -212,6 +214,7 @@ fn sharded_multi_camera_sweep_end_to_end() {
         seed: 0xE4,
         fps_total: 10.0,
         transport: uals::pipeline::TransportConfig::default(),
+        faults: uals::pipeline::FaultPlan::default(),
     };
     let (merged, per_camera) =
         uals::pipeline::run_sharded_sim(&videos, &cfg, &model, uals::pipeline::default_threads())

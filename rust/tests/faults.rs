@@ -1,0 +1,545 @@
+//! Fault-injection + graceful-degradation properties:
+//!
+//! 1. **Off-state bit-identity** — a plan whose windows never cover the
+//!    run (and the empty plan it equals) changes nothing: decision logs,
+//!    control series, QoR and byte counts are bit-identical across seeds
+//!    and policies, and a real fault storm is *clock-invariant* (sim vs
+//!    wall drivers shed/transmit exactly the same frames).
+//! 2. **Extended conservation** — every fault mode keeps
+//!    `ingress == transmitted + shed + link_dropped + fault_dropped`
+//!    exact, with one terminal decision per ingress frame, in both the
+//!    single- and multi-query engines.
+//! 3. **Graceful degradation** — a crashed backend worker trips the
+//!    completion watchdog into a *declared* degraded window and the
+//!    pipeline recovers after the fault clears; camera dropout
+//!    re-normalizes the nominal fps via the liveness check; poisoned
+//!    control observations are rejected, never applied.
+//! 4. **Chaos property** — ≥20 seeded random fault storms: no deadlock,
+//!    exact conservation, and every latency-bound violation is
+//!    attributable to the declared fault/degraded windows (or already
+//!    present in the no-fault baseline).
+//! 5. **Supervision** — a panicking backend worker surfaces its real
+//!    cause as an `Err` out of `run_pipeline`, not a hang or an opaque
+//!    unwrap panic.
+
+use anyhow::Result;
+use uals::backend::{BackendQuery, CostModel, Detector};
+use uals::color::NamedColor;
+use uals::config::{CostConfig, QueryConfig, ShedderConfig};
+use uals::features::Extractor;
+use uals::metrics::Stage;
+use uals::pipeline::realtime::{run_realtime, RealtimeConfig};
+use uals::pipeline::{
+    backgrounds_of, multi_backends, run_multi_sim, run_pipeline, run_sim, BackendExecutor,
+    FaultKind, FaultPlan, FaultStats, FramePayload, IterArrivals, MultiSimConfig, Policy,
+    PoisonKind, RunnerFactory, SimClock, SimConfig, SimReport, SupervisedWorker,
+    SupervisorConfig, TransportConfig,
+};
+use uals::shedder::{ArbiterPolicy, QuerySet, QuerySpec};
+use uals::utility::{train, Combine, UtilityModel};
+use uals::video::{streamer::aggregate_fps, Streamer, Video, VideoConfig};
+
+fn cameras(n: usize, frames: usize, vehicle_rate: f64, seed: u64) -> Vec<Video> {
+    (0..n)
+        .map(|i| {
+            let mut vc = VideoConfig::new(0xFA0 ^ seed, seed * 41 + i as u64, i as u32, frames);
+            vc.traffic.vehicle_rate = vehicle_rate;
+            Video::new(vc)
+        })
+        .collect()
+}
+
+fn model_for(videos: &[Video]) -> UtilityModel {
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    train(videos, &idx, &[NamedColor::Red], Combine::Single)
+}
+
+fn sim_cfg(fps: f64, seed: u64, policy: Policy) -> SimConfig {
+    SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: QueryConfig::single(NamedColor::Red).with_latency_bound(1200.0),
+        backend_tokens: 1,
+        policy,
+        seed,
+        fps_total: fps,
+        transport: TransportConfig::default(),
+        faults: FaultPlan::default(),
+    }
+}
+
+fn run_driver(videos: &[Video], cfg: &SimConfig, model: &UtilityModel) -> SimReport {
+    let extractor = Extractor::native(model.clone());
+    let mut backend = BackendQuery::new(
+        cfg.query.clone(),
+        Detector::native(12, 25.0),
+        CostModel::new(cfg.costs.clone(), cfg.seed),
+        25.0,
+    );
+    run_sim(
+        Streamer::new(videos),
+        &backgrounds_of(videos),
+        cfg,
+        &extractor,
+        &mut backend,
+    )
+    .expect("sim driver")
+}
+
+/// The extended conservation invariant: every ingress frame terminates in
+/// exactly one of {transmitted, shed, link_dropped, fault_dropped}, and
+/// the decision log records it.
+fn assert_conserved(r: &SimReport) {
+    assert_eq!(
+        r.ingress,
+        r.transmitted + r.shed + r.link_dropped + r.faults.fault_dropped,
+        "conservation: {} != {} + {} + {} + {}",
+        r.ingress,
+        r.transmitted,
+        r.shed,
+        r.link_dropped,
+        r.faults.fault_dropped
+    );
+    assert_eq!(r.decisions.len() as u64, r.ingress, "one decision per ingress frame");
+    let kept = r.decisions.iter().filter(|d| d.kept).count() as u64;
+    assert_eq!(kept, r.transmitted, "kept decisions == transmitted");
+}
+
+/// Starts (ms) of the 5 s windows whose max E2E latency violates `bound`.
+fn violating_windows(r: &SimReport, bound: f64) -> Vec<f64> {
+    r.latency_windows
+        .rows()
+        .iter()
+        .filter(|&&(_, max, _, n)| n > 0 && max > bound)
+        .map(|&(w, ..)| w)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1. Off-state bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn far_future_fault_windows_are_bit_identical_to_the_empty_plan() {
+    for (seed, policy) in [
+        (0xA1u64, Policy::UtilityControlLoop),
+        (0xA2, Policy::FifoControlLoop),
+        (0xA3, Policy::RandomRate { assumed_proc_q_ms: 120.0 }),
+    ] {
+        let videos = cameras(2, 90, 0.4, seed);
+        let model = model_for(&videos);
+        let base = sim_cfg(aggregate_fps(&videos), seed, policy);
+        let baseline = run_driver(&videos, &base, &model);
+        assert!(base.faults.is_empty());
+        assert_eq!(baseline.faults, FaultStats::default());
+
+        // Every fault kind armed — but a billion virtual seconds away.
+        // None of the windows cover the run, so the armed plan must be
+        // bit-identical to the empty one (the freeze retention buffer and
+        // every per-event fault query engage without perturbing anything).
+        let far = 1.0e9;
+        let mut armed = base.clone();
+        armed.faults = FaultPlan::new()
+            .with(far, far + 1e6, FaultKind::CameraDrop { camera: 0 })
+            .with(far, far + 1e6, FaultKind::CameraFreeze { camera: 1 })
+            .with(far, far + 1e6, FaultKind::LinkBlackout)
+            .with(far, far + 1e6, FaultKind::BandwidthCollapse { mbps: 0.5 })
+            .with(far, far + 1e6, FaultKind::WorkerCrash)
+            .with(far, far + 1e6, FaultKind::BackendSlowdown { factor: 8.0 })
+            .with(far, far + 1e6, FaultKind::PoisonControl { kind: PoisonKind::Nan });
+        let r = run_driver(&videos, &armed, &model);
+        assert_eq!(baseline.decisions, r.decisions, "seed {seed:x}: decisions diverge");
+        assert_eq!(baseline.control_series, r.control_series, "seed {seed:x}");
+        assert_eq!(baseline.qor.overall(), r.qor.overall());
+        assert_eq!(baseline.bytes_on_wire, r.bytes_on_wire);
+        assert_eq!(baseline.transmitted, r.transmitted);
+        assert_eq!(r.faults, FaultStats::default());
+        assert_conserved(&r);
+    }
+}
+
+#[test]
+fn fault_storms_are_clock_invariant() {
+    // The whole point of time-keyed fault windows: the storm fires
+    // identically under the discrete-event and the wall-clock drivers.
+    let videos = cameras(2, 100, 0.4, 0xB3);
+    let model = model_for(&videos);
+    let mut cfg = sim_cfg(aggregate_fps(&videos), 0xB3, Policy::UtilityControlLoop);
+    cfg.shedder.watchdog_ms = 1_500.0;
+    cfg.shedder.camera_liveness_ms = 2_000.0;
+    cfg.faults = FaultPlan::new()
+        .with(2_000.0, 4_000.0, FaultKind::CameraDrop { camera: 0 })
+        .with(3_000.0, 5_000.0, FaultKind::PoisonControl { kind: PoisonKind::Stale })
+        .with(6_000.0, 8_000.0, FaultKind::WorkerCrash)
+        .with(8_500.0, 9_500.0, FaultKind::LinkBlackout);
+
+    let sim = run_driver(&videos, &cfg, &model);
+    assert!(sim.faults.fault_dropped > 0, "the storm must bite");
+
+    let rt = RealtimeConfig {
+        query: cfg.query.clone(),
+        shedder: cfg.shedder.clone(),
+        costs: cfg.costs.clone(),
+        cost_emulation_scale: 0.0,
+        time_scale: 1e-3,
+        backend_tokens: cfg.backend_tokens,
+        use_artifacts: false,
+        policy: cfg.policy.clone(),
+        seed: cfg.seed,
+        arbiter: ArbiterPolicy::Standalone,
+        transport: cfg.transport,
+        faults: cfg.faults.clone(),
+        ..Default::default()
+    };
+    let wall = run_realtime(&videos, &model, &rt).expect("wall driver");
+    assert_eq!(sim.decisions, wall.decisions, "storm must be clock-invariant");
+    assert_eq!(sim.faults, wall.faults, "fault accounting must be clock-invariant");
+    assert_eq!(sim.transmitted, wall.transmitted);
+    assert_eq!(sim.bytes_on_wire, wall.bytes_on_wire);
+    assert_eq!(wall.worker_restarts, 0, "modeled crash, real worker untouched");
+}
+
+// ---------------------------------------------------------------------------
+// 2 + 3. Per-fault accounting and degradation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn camera_dropout_is_fault_accounted_and_renormalizes_liveness() {
+    let videos = cameras(2, 150, 0.4, 0xC4);
+    let model = model_for(&videos);
+    let mut cfg = sim_cfg(aggregate_fps(&videos), 0xC4, Policy::UtilityControlLoop);
+    cfg.shedder.camera_liveness_ms = 2_000.0;
+    cfg.faults = FaultPlan::new().with(3_000.0, 9_000.0, FaultKind::CameraDrop { camera: 0 });
+    let r = run_driver(&videos, &cfg, &model);
+    assert_conserved(&r);
+    assert_eq!(r.ingress, 300, "dropped frames still count as ingress");
+    // ~60 camera-0 frames (10 fps × 6 s) fall inside the dropout window.
+    assert!(
+        (55..=65u64).contains(&r.faults.fault_dropped),
+        "fault_dropped {}",
+        r.faults.fault_dropped
+    );
+    // The liveness check re-normalized the nominal fps down when the
+    // camera vanished and back up when it returned.
+    assert!(r.faults.liveness_renorms >= 2, "renorms {}", r.faults.liveness_renorms);
+    assert!(r.faults.degraded_windows.is_empty(), "no completion stall here");
+}
+
+#[test]
+fn camera_freeze_keeps_the_stream_alive_with_stale_pixels() {
+    let videos = cameras(2, 150, 0.4, 0xC5);
+    let model = model_for(&videos);
+    let mut cfg = sim_cfg(aggregate_fps(&videos), 0xC5, Policy::UtilityControlLoop);
+    cfg.faults = FaultPlan::new().with(3_000.0, 8_000.0, FaultKind::CameraFreeze { camera: 0 });
+    let r = run_driver(&videos, &cfg, &model);
+    // A frozen camera destroys nothing — stale pixels, live ground truth.
+    assert_conserved(&r);
+    assert_eq!(r.faults.fault_dropped, 0);
+    assert_eq!(r.ingress, 300);
+}
+
+#[test]
+fn link_blackout_destroys_dispatched_frames_without_burning_tokens() {
+    let videos = cameras(2, 150, 0.4, 0xC6);
+    let model = model_for(&videos);
+    let mut cfg = sim_cfg(aggregate_fps(&videos), 0xC6, Policy::UtilityControlLoop);
+    cfg.faults = FaultPlan::new().with(4_000.0, 7_000.0, FaultKind::LinkBlackout);
+    let r = run_driver(&videos, &cfg, &model);
+    assert_conserved(&r);
+    assert!(r.faults.fault_dropped > 10, "fault_dropped {}", r.faults.fault_dropped);
+    assert_eq!(r.link_dropped, 0, "blackout losses are fault drops, not link loss");
+    // No token is burned on a dead wire, so the stream keeps flowing
+    // right through the window and recovers instantly after it.
+    assert!(r.decisions.iter().any(|d| d.kept && d.capture_ms > 7_500.0));
+}
+
+#[test]
+fn bandwidth_collapse_engages_the_modeled_link_and_backpressures() {
+    let videos = cameras(2, 150, 0.4, 0xC7);
+    let model = model_for(&videos);
+    let cfg = sim_cfg(aggregate_fps(&videos), 0xC7, Policy::UtilityControlLoop);
+    let base = run_driver(&videos, &cfg, &model);
+
+    let mut collapsed = cfg.clone();
+    collapsed.faults =
+        FaultPlan::new().with(3_000.0, 10_000.0, FaultKind::BandwidthCollapse { mbps: 0.8 });
+    let r = run_driver(&videos, &collapsed, &model);
+    assert_conserved(&r);
+    // Nothing is destroyed — frames flow, slowly, through the collapsed
+    // link, and the measured transfer time shows up in the report.
+    assert_eq!(r.faults.fault_dropped, 0);
+    assert!(r.transmit_ms_total > 0.0, "collapse must engage the modeled link");
+    // The control loop sees the congestion (via the measured network
+    // pair) and sheds more than the unconstrained baseline.
+    assert!(
+        r.shed > base.shed,
+        "collapse must backpressure: shed {} vs baseline {}",
+        r.shed,
+        base.shed
+    );
+    assert_ne!(r.decisions, base.decisions);
+}
+
+#[test]
+fn worker_crash_declares_degraded_mode_and_recovers() {
+    let videos = cameras(2, 150, 0.4, 0xD5);
+    let model = model_for(&videos);
+    let mut cfg = sim_cfg(aggregate_fps(&videos), 0xD5, Policy::UtilityControlLoop);
+    cfg.shedder.watchdog_ms = 1_500.0;
+    cfg.faults = FaultPlan::new().with(5_000.0, 11_000.0, FaultKind::WorkerCrash);
+    let r = run_driver(&videos, &cfg, &model);
+    assert_conserved(&r);
+    // Exactly one in-flight frame dies with the worker (one token).
+    assert_eq!(r.faults.fault_dropped, 1);
+    // The completion watchdog declared degraded mode inside the crash
+    // window and closed it when the restart recovered the token.
+    assert!(
+        !r.faults.degraded_windows.is_empty(),
+        "watchdog must declare degraded mode"
+    );
+    for &(s, e) in &r.faults.degraded_windows {
+        assert!(s >= 5_000.0, "degraded start {s} before the crash");
+        assert!(e > s && e <= r.end_ms, "degraded window ({s}, {e})");
+        assert!(e >= 10_999.0, "recovery happens at the crash window's end, got {e}");
+    }
+    assert!(r.faults.degraded_ms() > 1_000.0, "degraded {} ms", r.faults.degraded_ms());
+    assert!(r.faults.degraded_shed > 10, "degraded_shed {}", r.faults.degraded_shed);
+    // Graceful recovery: the pipeline transmits again after the window.
+    assert!(
+        r.decisions.iter().any(|d| d.kept && d.capture_ms > 11_500.0),
+        "pipeline must recover after the crash window"
+    );
+}
+
+#[test]
+fn straggler_slowdown_backpressures_the_control_loop() {
+    let videos = cameras(2, 150, 0.4, 0xD6);
+    let model = model_for(&videos);
+    let cfg = sim_cfg(aggregate_fps(&videos), 0xD6, Policy::UtilityControlLoop);
+    let base = run_driver(&videos, &cfg, &model);
+
+    let mut slow = cfg.clone();
+    slow.faults =
+        FaultPlan::new().with(4_000.0, 10_000.0, FaultKind::BackendSlowdown { factor: 8.0 });
+    let r = run_driver(&videos, &slow, &model);
+    assert_conserved(&r);
+    // A straggler destroys nothing, but the inflated service time drives
+    // the control loop to shed harder than the healthy baseline.
+    assert_eq!(r.faults.fault_dropped, 0);
+    assert!(
+        r.shed > base.shed,
+        "slowdown must backpressure: shed {} vs baseline {}",
+        r.shed,
+        base.shed
+    );
+    assert_ne!(r.decisions, base.decisions);
+}
+
+#[test]
+fn poisoned_control_observations_are_rejected_and_the_loop_survives() {
+    for kind in [PoisonKind::Nan, PoisonKind::Stale] {
+        let videos = cameras(2, 150, 0.4, 0xD7);
+        let model = model_for(&videos);
+        let mut cfg = sim_cfg(aggregate_fps(&videos), 0xD7, Policy::UtilityControlLoop);
+        cfg.faults = FaultPlan::new().with(2_000.0, 12_000.0, FaultKind::PoisonControl { kind });
+        let r = run_driver(&videos, &cfg, &model);
+        assert_conserved(&r);
+        assert!(
+            r.faults.poisoned_rejected > 10,
+            "{kind:?}: rejected {}",
+            r.faults.poisoned_rejected
+        );
+        // Validation keeps the loop's state finite: threshold and target
+        // rate never go NaN, and the metrics latency stays honest.
+        assert!(
+            r.control_series.iter().all(|&(_, th, rate)| th.is_finite() && rate.is_finite()),
+            "{kind:?}: control series must stay finite"
+        );
+        assert!(r.latency.max_ms().is_finite());
+    }
+}
+
+#[test]
+fn multi_query_engine_books_fault_losses_per_query() {
+    let videos = cameras(2, 120, 0.35, 0xE6);
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    let specs = vec![
+        QuerySpec::new("red", QueryConfig::single(NamedColor::Red)),
+        QuerySpec::new("yellow", QueryConfig::single(NamedColor::Yellow)),
+    ];
+    let set = QuerySet::train(&specs, &videos, &idx).expect("query set");
+    let cfg = MultiSimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        backend_tokens: 1,
+        arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
+        seed: 0xE6,
+        fps_total: aggregate_fps(&videos),
+        transport: TransportConfig::default(),
+        faults: FaultPlan::new()
+            .with(2_000.0, 5_000.0, FaultKind::CameraDrop { camera: 1 })
+            .with(6_000.0, 8_000.0, FaultKind::LinkBlackout)
+            .with(8_500.0, 10_000.0, FaultKind::WorkerCrash),
+    };
+    let extractor = Extractor::native(set.union_model().clone());
+    let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
+    let bgs = backgrounds_of(&videos);
+    let r = run_multi_sim(
+        Streamer::new(&videos),
+        &bgs,
+        &set,
+        &cfg,
+        &extractor,
+        &mut backends,
+    )
+    .expect("multi sim");
+
+    for q in &r.queries {
+        let rep = &q.report;
+        assert_eq!(
+            rep.ingress,
+            rep.transmitted + rep.shed + rep.link_dropped + rep.faults.fault_dropped,
+            "{}: per-query conservation",
+            q.name
+        );
+        assert_eq!(rep.decisions.len() as u64, rep.ingress, "{}: decision log", q.name);
+        // Every query lost its copy of the dropped camera's frames.
+        assert!(rep.faults.fault_dropped > 0, "{}: faults must bite", q.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Chaos property test: randomized fault storms
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chaos_randomized_fault_plans_preserve_core_invariants() {
+    let videos = cameras(2, 150, 0.35, 0xF7);
+    let model = model_for(&videos);
+    let horizon = 15_000.0;
+    let mut base_cfg = sim_cfg(aggregate_fps(&videos), 0xF7, Policy::UtilityControlLoop);
+    base_cfg.shedder.watchdog_ms = 1_000.0;
+    base_cfg.shedder.camera_liveness_ms = 2_000.0;
+    let bound = base_cfg.query.latency_bound_ms;
+    let baseline = run_driver(&videos, &base_cfg, &model);
+    assert_conserved(&baseline);
+    let base_bad = violating_windows(&baseline, bound);
+
+    let mut storms_with_losses = 0u32;
+    for seed in 0..24u64 {
+        let plan = FaultPlan::randomized(seed, horizon, 2);
+        assert!(!plan.is_empty(), "randomized plans are never empty");
+        let mut cfg = base_cfg.clone();
+        cfg.faults = plan.clone();
+        // Completing at all is the no-deadlock property: a stuck token or
+        // an unclosed fault window would hang the event loop instead.
+        let r = run_driver(&videos, &cfg, &model);
+        assert_conserved(&r);
+        assert!(r.end_ms.is_finite() && r.end_ms > 0.0);
+        let q = r.qor.overall();
+        assert!((0.0..=1.0).contains(&q), "seed {seed}: QoR {q}");
+
+        // Bounded latency, or an explanation: every violating 5 s window
+        // must already violate in the no-fault baseline, or lie within
+        // the declared fault span / degraded windows (+ grace for the
+        // post-fault queue flush).
+        let span_start = plan
+            .windows()
+            .iter()
+            .map(|w| w.start_ms)
+            .fold(f64::INFINITY, f64::min);
+        let span_end = plan.windows().iter().map(|w| w.end_ms).fold(0.0, f64::max);
+        let grace = bound + 5_000.0;
+        for w in violating_windows(&r, bound) {
+            let explained_by_baseline = base_bad.iter().any(|&b| (b - w).abs() < 1.0);
+            let explained_by_faults = w < span_end + grace && w + 5_000.0 > span_start - grace;
+            let explained_by_degraded = r
+                .faults
+                .degraded_windows
+                .iter()
+                .any(|&(s, e)| w < e + grace && w + 5_000.0 > s);
+            assert!(
+                explained_by_baseline || explained_by_faults || explained_by_degraded,
+                "seed {seed}: unexplained latency violation in window starting at {w} ms \
+                 (fault span [{span_start}, {span_end}), degraded {:?})",
+                r.faults.degraded_windows
+            );
+        }
+        if r.faults.fault_dropped > 0 {
+            storms_with_losses += 1;
+        }
+    }
+    assert!(storms_with_losses >= 8, "storms must bite: {storms_with_losses}/24");
+}
+
+// ---------------------------------------------------------------------------
+// 5. Supervision surfaces the real cause through run_pipeline
+// ---------------------------------------------------------------------------
+
+/// A backend executor whose worker thread panics on one job — the
+/// integration analogue of the `pipeline::supervise` unit tests: the
+/// panic's message must come out of `run_pipeline` as an `Err`.
+struct CrashyExecutor {
+    worker: SupervisedWorker<u64>,
+    jobs: u64,
+}
+
+impl BackendExecutor for CrashyExecutor {
+    fn submit(&mut self, _payload: FramePayload, _background: &[f32]) -> Result<(Stage, f64)> {
+        let job = self.jobs;
+        self.jobs += 1;
+        self.worker.submit(job)?;
+        Ok((Stage::Sink, 40.0))
+    }
+
+    fn on_complete(&mut self, seq: u64, _dnn: bool) -> Result<()> {
+        // Single-token runs complete in dispatch order, so the dispatch
+        // ordinal is the FIFO job index.
+        self.worker.wait_for(seq)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.worker.finish()
+    }
+}
+
+#[test]
+fn worker_panic_surfaces_its_cause_through_run_pipeline() {
+    let videos = cameras(1, 40, 0.3, 0x9A);
+    let model = model_for(&videos);
+    let mut cfg = sim_cfg(10.0, 0x9A, Policy::NoShedding);
+    cfg.shedder.queue_cap_max = 10_000;
+
+    let factory: RunnerFactory<u64> = std::sync::Arc::new(|| {
+        Ok(Box::new(|job: &u64| -> Result<()> {
+            if *job == 5 {
+                panic!("injected detector crash on job 5");
+            }
+            Ok(())
+        }))
+    });
+    let worker = SupervisedWorker::spawn(
+        factory,
+        SupervisorConfig {
+            recv_timeout: std::time::Duration::from_secs(5),
+            max_restarts: 0,
+            backoff: std::time::Duration::from_millis(1),
+        },
+    )
+    .expect("spawn worker");
+    let mut executor = CrashyExecutor { worker, jobs: 0 };
+    let extractor = Extractor::native(model);
+
+    let err = run_pipeline(
+        IterArrivals::new(Streamer::new(&videos), 10.0),
+        &backgrounds_of(&videos),
+        &cfg,
+        &extractor,
+        &mut executor,
+        &mut SimClock,
+    )
+    .expect_err("the worker's panic must fail the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected detector crash on job 5"), "got: {msg}");
+    assert!(msg.contains("panicked"), "got: {msg}");
+}

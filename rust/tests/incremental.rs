@@ -212,6 +212,7 @@ fn sweep_cfg() -> SimConfig {
         seed: 0x1AC,
         fps_total: 10.0,
         transport: uals::pipeline::TransportConfig::default(),
+        faults: uals::pipeline::FaultPlan::default(),
     }
 }
 

@@ -64,6 +64,7 @@ fn run_multi(
         seed,
         fps_total: fps,
         transport: uals::pipeline::TransportConfig::default(),
+        faults: uals::pipeline::FaultPlan::default(),
     };
     let extractor = Extractor::native(set.union_model().clone());
     let mut backends = multi_backends(set, &cfg.costs, cfg.seed);
@@ -99,6 +100,7 @@ fn run_single(
         seed,
         fps_total: fps,
         transport: uals::pipeline::TransportConfig::default(),
+        faults: uals::pipeline::FaultPlan::default(),
     };
     let extractor = Extractor::native(set.query_model(q));
     let mut backend = BackendQuery::new(
@@ -200,6 +202,8 @@ fn shared_pipeline_extracts_exactly_once_per_frame_for_8_queries() {
             seed: 0xBEEF,
             fps_total: aggregate_fps(&videos),
             transport: uals::pipeline::TransportConfig::default(),
+            faults: uals::pipeline::FaultPlan::default(),
+        faults: uals::pipeline::FaultPlan::default(),
         };
         let mut backend = BackendQuery::new(
             cfg.query.clone(),

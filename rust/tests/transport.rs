@@ -73,6 +73,7 @@ fn sim_cfg(fps: f64, seed: u64, policy: Policy) -> SimConfig {
         seed,
         fps_total: fps,
         transport: TransportConfig::default(),
+        faults: uals::pipeline::FaultPlan::default(),
     }
 }
 
@@ -168,6 +169,7 @@ fn ideal_link_is_clock_and_shard_invariant() {
         seed: cfg.seed,
         arbiter: ArbiterPolicy::Standalone,
         transport: cfg.transport,
+        ..Default::default()
     };
     let wall = run_realtime(&videos, &model, &rt).expect("wall driver");
     assert_decisions_equal(&sim.decisions, &wall.decisions, "ideal sim vs wall");
@@ -335,6 +337,7 @@ fn sim_and_realtime_agree_on_a_constrained_lossy_link() {
         seed: cfg.seed,
         arbiter: ArbiterPolicy::Standalone,
         transport: cfg.transport,
+        ..Default::default()
     };
     let wall = run_realtime(&videos, &model, &rt).expect("wall driver");
     assert_decisions_equal(&sim.decisions, &wall.decisions, "constrained link");
@@ -372,6 +375,7 @@ fn multi_query_ships_each_admitted_frame_once() {
         // encode + byte accounting) without starving any query's
         // dispatch, so the sharing arithmetic below is load-independent.
         transport: TransportConfig::constrained(50.0, WireEncoding::Raw),
+        faults: uals::pipeline::FaultPlan::default(),
     };
     let extractor = Extractor::native(set.union_model().clone());
     let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
