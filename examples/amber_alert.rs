@@ -51,6 +51,8 @@ fn main() -> Result<()> {
         seed: 0xA3,
         fps_total: sv.fps(),
         transport: uals::pipeline::TransportConfig::default(),
+        faults: uals::pipeline::FaultPlan::default(),
+        adaptation: uals::utility::AdaptationConfig::default(),
     };
     let extractor = Extractor::native(model);
     let mut backend = BackendQuery::new(

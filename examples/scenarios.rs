@@ -22,8 +22,8 @@ use uals::config::{CostConfig, QueryConfig, ShedderConfig};
 use uals::features::Extractor;
 use uals::pipeline::realtime::{run_multi_realtime, run_realtime_with, RealtimeConfig};
 use uals::pipeline::{
-    backgrounds_of, multi_backends, run_multi_sim, run_sim_with, CameraChurn, MultiSimConfig,
-    PoissonArrivals, Policy, SimConfig, TransportConfig,
+    backgrounds_of, multi_backends, run_multi_sim, run_sim_with, AdaptationConfig, CameraChurn,
+    FaultPlan, MultiSimConfig, PoissonArrivals, Policy, SimConfig, TransportConfig,
 };
 use uals::shedder::{ArbiterPolicy, QuerySet, QuerySpec};
 use uals::utility::{train, Combine};
@@ -63,6 +63,8 @@ fn main() -> Result<()> {
         seed: 0xD0,
         fps_total: fps,
         transport: TransportConfig::default(),
+        faults: FaultPlan::default(),
+        adaptation: AdaptationConfig::default(),
     };
     let bgs = backgrounds_of(&videos);
     let extractor = Extractor::native(model.clone());
@@ -86,6 +88,7 @@ fn main() -> Result<()> {
         seed: cfg.seed,
         arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
         transport: TransportConfig::default(),
+        ..Default::default()
     };
 
     println!("scenario        clock     ingress  transmitted  shed   qor    viol%");
@@ -194,6 +197,7 @@ fn main() -> Result<()> {
         seed: cfg.seed,
         fps_total: fps,
         transport: TransportConfig::default(),
+        faults: FaultPlan::default(),
     };
     let mq_extractor = Extractor::native(set.union_model().clone());
     let mut backends = multi_backends(&set, &mcfg.costs, mcfg.seed);

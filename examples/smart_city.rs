@@ -59,6 +59,8 @@ fn main() -> Result<()> {
                 seed: 0x5C,
                 fps_total: fps,
                 transport: uals::pipeline::TransportConfig::default(),
+                faults: uals::pipeline::FaultPlan::default(),
+                adaptation: uals::utility::AdaptationConfig::default(),
             };
             let extractor = Extractor::native(model.clone());
             let mut backend = BackendQuery::new(

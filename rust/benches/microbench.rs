@@ -192,8 +192,9 @@ fn main() {
                 ti = (ti + 1) % frames_set.len();
                 std::hint::black_box(wire_buf.len());
             });
-            let ratio = bytes_total as f64 / (msgs as f64 * raw_wire_size(96, 96) as f64);
-            println!("  delta wire ratio vs raw ({name}): {ratio:.4}x");
+            let bpf = bytes_total as f64 / msgs.max(1) as f64;
+            let ratio = bpf / raw_wire_size(96, 96) as f64;
+            println!("  delta wire ratio vs raw ({name}): {ratio:.4}x ({bpf:.0} bytes/frame)");
         }
     }
 
@@ -235,6 +236,7 @@ fn main() {
         fps_total: 10.0,
         transport: TransportConfig::default(),
         faults: uals::pipeline::FaultPlan::default(),
+        adaptation: uals::utility::AdaptationConfig::default(),
     };
     b.run_n("pipeline/sweep_4cams_serial", 1, 3, || {
         let r = run_sharded_sim(&sweep_videos, &sweep_cfg, &sweep_model, 1).unwrap();
@@ -300,6 +302,36 @@ fn main() {
         std::hint::black_box(r.ingress);
     });
 
+    // --- macro fleet scale (e2e headline rows) ------------------------------
+    // 64- and 512-camera fleets through the sharded sweep engine (one
+    // shedder + token-paced backend per camera, parallel shards). Short
+    // per-camera clips keep the bench CI-sized; the headline rows below
+    // convert each to aggregate frames/sec.
+    let fleet = |n: usize, frames: usize| -> Vec<Video> {
+        (0..n)
+            .map(|i| {
+                let mut svc =
+                    VideoConfig::new(11 + (i as u64 % 3), 0xFEE7 + i as u64, i as u32, frames);
+                svc.traffic.vehicle_rate = 0.35;
+                svc.quantize_u8 = true;
+                Video::new(svc)
+            })
+            .collect()
+    };
+    let fleet_threads = uals::pipeline::default_threads();
+    let fleet64 = fleet(64, 40);
+    let fleet64_frames: usize = fleet64.iter().map(|v| v.len()).sum();
+    b.run_n("pipeline/macro_e2e_64cams", 1, 2, || {
+        let r = run_sharded_sim(&fleet64, &sweep_cfg, &sweep_model, fleet_threads).unwrap();
+        std::hint::black_box(r.0.ingress);
+    });
+    let fleet512 = fleet(512, 10);
+    let fleet512_frames: usize = fleet512.iter().map(|v| v.len()).sum();
+    b.run_n("pipeline/macro_e2e_512cams", 1, 2, || {
+        let r = run_sharded_sim(&fleet512, &sweep_cfg, &sweep_model, fleet_threads).unwrap();
+        std::hint::black_box(r.0.ingress);
+    });
+
     // --- multi-query shared-stream pipeline ---------------------------------
     // 8 concurrent queries over the same 4-camera stream: ONE extraction
     // per frame + per-query shedding behind the fair-share arbiter,
@@ -333,6 +365,32 @@ fn main() {
         .unwrap();
         std::hint::black_box(r.frames);
     });
+    // K=32 tenants (the 8-query pool cycled with distinct names) over the
+    // same stream: the macro multi-tenant headline.
+    let mq32_specs: Vec<uals::shedder::QuerySpec> = (0..32)
+        .map(|i| {
+            let s = &mq_specs[i % mq_specs.len()];
+            uals::shedder::QuerySpec::new(
+                format!("{}-{}", s.name, i / mq_specs.len()),
+                s.query.clone(),
+            )
+        })
+        .collect();
+    let mq32_set = QuerySet::train(&mq32_specs, &sweep_videos, &[0, 1]).unwrap();
+    let mq32_extractor = Extractor::native(mq32_set.union_model().clone());
+    b.run_n("multi/shared_extract_32q", 1, 2, || {
+        let mut backends = multi_backends(&mq32_set, &mq_cfg.costs, mq_cfg.seed);
+        let r = run_multi_sim(
+            uals::video::Streamer::new(&sweep_videos),
+            &mq_bgs,
+            &mq32_set,
+            &mq_cfg,
+            &mq32_extractor,
+            &mut backends,
+        )
+        .unwrap();
+        std::hint::black_box(r.frames);
+    });
     let single_extractors: Vec<Extractor> = (0..mq_set.len())
         .map(|q| Extractor::native(mq_set.query_model(q)))
         .collect();
@@ -349,6 +407,7 @@ fn main() {
                 fps_total: mq_fps,
                 transport: TransportConfig::default(),
                 faults: uals::pipeline::FaultPlan::default(),
+                adaptation: uals::utility::AdaptationConfig::default(),
             };
             let mut backend = BackendQuery::new(
                 cfg_q.query.clone(),
@@ -457,6 +516,25 @@ fn main() {
         println!(
             "8-query shared pipeline vs 8 independent pipelines: {:.2}x",
             indep.mean_ms / shared.mean_ms.max(1e-12)
+        );
+    }
+    // Macro headline rows: fleet-scale e2e throughput + the K=32 tenant run.
+    if let Some(m) = b.result("pipeline/macro_e2e_64cams") {
+        println!(
+            "macro e2e throughput, 64-camera fleet ({fleet_threads} threads): {:.0} frames/sec",
+            fleet64_frames as f64 / (m.mean_ms.max(1e-12) / 1e3)
+        );
+    }
+    if let Some(m) = b.result("pipeline/macro_e2e_512cams") {
+        println!(
+            "macro e2e throughput, 512-camera fleet ({fleet_threads} threads): {:.0} frames/sec",
+            fleet512_frames as f64 / (m.mean_ms.max(1e-12) / 1e3)
+        );
+    }
+    if let Some(m) = b.result("multi/shared_extract_32q") {
+        println!(
+            "32-query shared-stream pipeline: {:.0} frames/sec (one extraction per frame)",
+            core_frames as f64 / (m.mean_ms.max(1e-12) / 1e3)
         );
     }
 

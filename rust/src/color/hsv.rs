@@ -33,6 +33,34 @@ pub fn rgb_to_hsv(r: f32, g: f32, b: f32) -> (f32, f32, f32) {
     (h, s, v)
 }
 
+/// Convert OpenCV-style (h, s, v) back to RGB (f32, [0,255]).
+///
+/// h ∈ [0, 180) (half-degrees), s, v ∈ [0, 255]. The inverse of
+/// [`rgb_to_hsv`] up to the usual float rounding; used by the drift
+/// transforms to rotate hue while preserving saturation and value.
+#[inline]
+pub fn hsv_to_rgb(h: f32, s: f32, v: f32) -> (f32, f32, f32) {
+    let s = (s / 255.0).clamp(0.0, 1.0);
+    if s <= 0.0 {
+        return (v, v, v);
+    }
+    // Half-degrees → sextant index in [0, 6).
+    let h6 = (h * 2.0 / 60.0).rem_euclid(6.0);
+    let i = h6.floor();
+    let f = h6 - i;
+    let p = v * (1.0 - s);
+    let q = v * (1.0 - s * f);
+    let t = v * (1.0 - s * (1.0 - f));
+    match i as i32 {
+        0 => (v, t, p),
+        1 => (q, v, p),
+        2 => (p, v, t),
+        3 => (p, q, v),
+        4 => (t, p, v),
+        _ => (v, p, q),
+    }
+}
+
 /// Saturation/value bin index pair (paper Eq. 7/8), clamped to [0, 8).
 #[inline]
 pub fn sat_val_bin(s: f32, v: f32) -> (usize, usize) {
@@ -99,6 +127,26 @@ mod tests {
         assert_eq!(sat_val_bin(31.99, 32.0), (0, 1));
         assert_eq!(sat_val_bin(255.0, 255.0), (7, 7));
         assert_eq!(flat_bin(255.0, 0.0), 56);
+    }
+
+    #[test]
+    fn hsv_round_trips_rgb() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..10_000 {
+            let (r, g, b) = (
+                rng.f32() * 255.0,
+                rng.f32() * 255.0,
+                rng.f32() * 255.0,
+            );
+            let (h, s, v) = rgb_to_hsv(r, g, b);
+            let (r2, g2, b2) = hsv_to_rgb(h, s, v);
+            assert!(
+                (r - r2).abs() < 0.01 && (g - g2).abs() < 0.01 && (b - b2).abs() < 0.01,
+                "({r},{g},{b}) -> ({h},{s},{v}) -> ({r2},{g2},{b2})"
+            );
+        }
+        // Achromatic pixels collapse to (v, v, v).
+        assert_eq!(hsv_to_rgb(0.0, 0.0, 128.0), (128.0, 128.0, 128.0));
     }
 
     #[test]

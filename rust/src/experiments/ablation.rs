@@ -221,6 +221,7 @@ pub fn ablation_queue(scale: Scale) -> Vec<(String, Table)> {
             fps_total: fps,
             transport: crate::pipeline::TransportConfig::default(),
             faults: crate::pipeline::FaultPlan::default(),
+            adaptation: crate::utility::AdaptationConfig::default(),
         };
         let r = run_scenario(
             IterArrivals::new(crate::video::Streamer::new(&videos), fps),

@@ -49,6 +49,7 @@ fn sim_config(query: QueryConfig, fps_total: f64, policy: Policy) -> SimConfig {
         fps_total,
         transport: crate::pipeline::TransportConfig::default(),
         faults: crate::pipeline::FaultPlan::default(),
+        adaptation: crate::utility::AdaptationConfig::default(),
     }
 }
 

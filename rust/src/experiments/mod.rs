@@ -36,12 +36,13 @@ pub const ABLATIONS: [&str; 4] = [
 /// `ArrivalModel` plugins, the multi-query shared-stream path, the
 /// bandwidth-constrained transport link, and the fault-injection plan
 /// (beyond the paper's fixed-fps single-query free-network streams).
-pub const SCENARIOS: [&str; 5] = [
+pub const SCENARIOS: [&str; 6] = [
     "scenario-bursty",
     "scenario-churn",
     "scenario-multiquery",
     "scenario-bandwidth",
     "scenario-faults",
+    "scenario-drift",
 ];
 
 /// Run one figure harness; returns named tables.
@@ -71,6 +72,7 @@ pub fn run_figure(id: &str, scale: Scale) -> Result<Vec<(String, Table)>> {
         "scenario-multiquery" => scenarios::scenario_multiquery(scale),
         "scenario-bandwidth" => scenarios::scenario_bandwidth(scale),
         "scenario-faults" => scenarios::scenario_faults(scale),
+        "scenario-drift" => scenarios::scenario_drift(scale),
         other => bail!(
             "unknown figure '{other}' (try one of {ALL_FIGURES:?}, 15, \
              {ABLATIONS:?}, or {SCENARIOS:?})"

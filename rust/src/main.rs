@@ -55,7 +55,7 @@ fn print_usage() {
          figures  --all | --fig <id>…   [--scale tiny|small|paper] [--out DIR] [--quiet]\n\
          train    --color red[,yellow] [--combine single|or|and] [--out FILE] [--scale S]\n\
          dataset  [--scale S] [--color red]\n\
-         run      --scenario fig13a|smart-city|bursty|churn|multiquery|bandwidth|faults [--scale S]\n\
+         run      --scenario fig13a|smart-city|bursty|churn|multiquery|bandwidth|faults|drift [--scale S]\n\
          overhead [--scale S]\n"
     );
 }
@@ -167,10 +167,11 @@ fn cmd_run(args: &Args) -> Result<()> {
             experiments::run_and_save(&["scenario-bandwidth"], scale, &out_dir(args), false)
         }
         "faults" => experiments::run_and_save(&["scenario-faults"], scale, &out_dir(args), false),
+        "drift" => experiments::run_and_save(&["scenario-drift"], scale, &out_dir(args), false),
         other => {
             bail!(
                 "unknown --scenario '{other}' \
-                 (fig13a|smart-city|bursty|churn|multiquery|bandwidth|faults)"
+                 (fig13a|smart-city|bursty|churn|multiquery|bandwidth|faults|drift)"
             )
         }
     }

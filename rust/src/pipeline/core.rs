@@ -32,6 +32,7 @@ use crate::pipeline::faults::{FaultPlan, FaultStats, PoisonKind};
 use crate::pipeline::transport::{TransportConfig, TransportState};
 use crate::shedder::{Entry, LoadShedder, QueryMask, TokenBucket};
 use crate::util::rng::Rng;
+use crate::utility::{AdaptationConfig, AdaptationStats, OnlineAdapter};
 use crate::video::{Frame, Video};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
@@ -84,6 +85,11 @@ pub struct SimConfig {
     /// verification mode: bit-identical to a faultless pipeline (no
     /// extra RNG draws or EWMA updates); see [`crate::pipeline::faults`].
     pub faults: FaultPlan,
+    /// Online utility-model adaptation (shadow evaluation + guarded
+    /// rollback). Disabled by default: the engine then constructs no
+    /// adapter, attaches no features to payloads, and is bit-identical
+    /// to the frozen-model pipeline; see [`crate::utility::adapt`].
+    pub adaptation: AdaptationConfig,
 }
 
 /// The one frame payload carried through admission, queue and dispatch —
@@ -108,6 +114,11 @@ pub struct FramePayload {
     pub rgb: Vec<f32>,
     pub width: usize,
     pub height: usize,
+    /// The frame's extracted features, carried only when online
+    /// adaptation is enabled: the dispatch path turns them into a
+    /// delayed ground-truth label at backend completion. `None` (and
+    /// zero-cost) otherwise.
+    pub features: Option<Box<FrameFeatures>>,
 }
 
 /// Terminal outcome of one ingress frame (shed anywhere vs transmitted).
@@ -154,6 +165,9 @@ pub struct PipelineReport {
     /// run). Conservation extends to `ingress == transmitted + shed +
     /// link_dropped + faults.fault_dropped`.
     pub faults: FaultStats,
+    /// Online-adaptation counters + event log (all zero/empty when
+    /// adaptation is disabled or never fired).
+    pub adaptation: AdaptationStats,
 }
 
 impl PipelineReport {
@@ -361,9 +375,21 @@ impl BackendExecutor for SyncBackend<'_> {
 // Event queue
 // ---------------------------------------------------------------------------
 
+/// Deferred ground-truth label riding on a completion event: the
+/// detector's verdict for the frame becomes visible to the online
+/// adapter `label_delay_ms` after the completion fires.
+type CompletionLabel = (u32 /* camera */, Box<FrameFeatures>, bool /* positive */);
+
 enum EventKind {
     Ingress(Box<FramePayload>, f32 /* utility */),
-    Completion { seq: u64, capture_ms: f64, exec_ms: f64, dnn: bool },
+    Completion {
+        seq: u64,
+        capture_ms: f64,
+        exec_ms: f64,
+        dnn: bool,
+        /// `Some` only when online adaptation is enabled.
+        label: Option<CompletionLabel>,
+    },
     /// A frame destroyed by an injected fault. `release_token = false`
     /// for frames that never reached the shedder (camera dropout, at
     /// capture time); `true` for in-flight frames lost to a crashed
@@ -460,6 +486,7 @@ impl ArrivalFeeder {
         query: &QueryConfig,
         cost: &mut crate::backend::CostModel,
         faults: &FaultPlan,
+        want_features: bool,
     ) -> anyhow::Result<bool> {
         let Some(mut f) = arrivals.next_frame() else {
             return Ok(false);
@@ -531,6 +558,7 @@ impl ArrivalFeeder {
             rgb: f.rgb,
             width: f.width,
             height: f.height,
+            features: want_features.then(|| Box::new(self.feat_buf.clone())),
         };
         eq.push(t_ls, EventKind::Ingress(Box::new(payload), self.util_buf.combined));
         Ok(true)
@@ -572,6 +600,16 @@ where
     let (mut ingress_n, mut transmitted, mut shed) = (0u64, 0u64, 0u64);
     let mut link_dropped = 0u64;
     let mut transport = TransportState::new(&cfg.transport, cfg.seed);
+
+    // Online adaptation: constructed only when enabled, so the default
+    // config adds no state, no feature clones and no per-frame work —
+    // the frozen-model pipeline stays bit-identical.
+    let mut adapter = cfg
+        .adaptation
+        .enabled
+        .then(|| OnlineAdapter::new(cfg.adaptation.clone(), extractor.model().clone()));
+    let want_features = adapter.is_some();
+    let mut rescored: Vec<f32> = Vec::new();
 
     // Fault-injection + graceful-degradation state. With the default
     // empty plan and the default INFINITY watchdog/liveness thresholds
@@ -623,6 +661,7 @@ where
         &cfg.query,
         &mut cost,
         faults,
+        want_features,
     )?;
     let mut now = 0.0f64;
     let mut last_control_sample = f64::NEG_INFINITY;
@@ -660,7 +699,32 @@ where
                     &cfg.query,
                     &mut cost,
                     faults,
+                    want_features,
                 )?;
+
+                // Online adaptation: apply labels whose delay elapsed; a
+                // swap or rollback re-anchors the admission CDF on the
+                // new model's scores. Then score this frame with the
+                // camera's live model — version 0 abstains, so until the
+                // first swap the precomputed utility (and every frozen-
+                // pipeline decision) stands untouched.
+                let utility = match adapter.as_mut() {
+                    Some(ad) => {
+                        if ad.drain_due(now) {
+                            ad.rescore_recent(&mut rescored);
+                            shedder.reseed_history(&rescored);
+                            ad.record_reseed();
+                        }
+                        match frame.features.as_deref() {
+                            Some(feats) => {
+                                ad.observe_ingress(frame.camera, feats);
+                                ad.utility_for(frame.camera, feats).unwrap_or(utility)
+                            }
+                            None => utility,
+                        }
+                    }
+                    None => utility,
+                };
 
                 // Watchdog: completions have stalled past the threshold
                 // with every backend token busy — declare degraded mode.
@@ -752,7 +816,7 @@ where
                     }
                 }
             }
-            EventKind::Completion { seq, capture_ms, exec_ms, dnn } => {
+            EventKind::Completion { seq, capture_ms, exec_ms, dnn, label } => {
                 tokens.release();
                 last_progress = now;
                 if let Some(since) = degraded_since.take() {
@@ -771,6 +835,11 @@ where
                 };
                 shedder.on_backend_complete(observed_ms);
                 executor.on_complete(seq, dnn)?;
+                // The detector's verdict becomes ground truth for the
+                // online adapter after the annotation delay.
+                if let (Some(ad), Some((camera, feats, positive))) = (adapter.as_mut(), label) {
+                    ad.enqueue_label(t + ad.config().label_delay_ms, camera, *feats, positive);
+                }
                 let e2e = clock.measure_e2e(capture_ms, t);
                 latency.observe(e2e);
                 latency_windows.observe(capture_ms, e2e);
@@ -796,6 +865,7 @@ where
                         &cfg.query,
                         &mut cost,
                         faults,
+                        want_features,
                     )?;
                 }
                 fstats.fault_dropped += 1;
@@ -906,6 +976,15 @@ where
                 capture_ms: f.capture_ms,
                 kept: true,
             });
+            // Delayed ground truth for the online adapter: the backend's
+            // verdict ("a target was present") is captured here and
+            // delivered `label_delay_ms` after the completion fires.
+            // Only transmitted frames ever produce a label — exactly the
+            // feedback a real deployment has.
+            let label = f
+                .features
+                .take()
+                .map(|feats| (f.camera, feats, !f.target_ids.is_empty()));
             feeder.recycle(std::mem::take(&mut f.target_ids));
             let bg = *backgrounds
                 .get(&f.camera)
@@ -936,7 +1015,7 @@ where
                 // Modeled link: backend work starts when the frame lands.
                 Some(a) => a + exec_ms,
             };
-            eq.push(done_at, EventKind::Completion { seq, capture_ms, exec_ms, dnn });
+            eq.push(done_at, EventKind::Completion { seq, capture_ms, exec_ms, dnn, label });
         }
     }
     executor.finish()?;
@@ -960,6 +1039,7 @@ where
         shed,
         link_dropped,
         faults: fstats,
+        adaptation: adapter.map(OnlineAdapter::into_stats).unwrap_or_default(),
         bytes_on_wire: transport.bytes_on_wire,
         transmit_ms_total: transport.transmit_ms_total,
         end_ms: now,
@@ -974,7 +1054,13 @@ mod tests {
 
     #[test]
     fn event_queue_orders_by_time_then_sequence() {
-        let mk = || EventKind::Completion { seq: 0, capture_ms: 0.0, exec_ms: 1.0, dnn: false };
+        let mk = || EventKind::Completion {
+            seq: 0,
+            capture_ms: 0.0,
+            exec_ms: 1.0,
+            dnn: false,
+            label: None,
+        };
         let mut eq = EventQueue::new();
         eq.push(5.0, mk());
         eq.push(1.0, mk());
@@ -994,11 +1080,11 @@ mod tests {
         let mut eq = EventQueue::new();
         eq.push(
             2.001_000_000_1,
-            EventKind::Completion { seq: 0, capture_ms: 1.0, exec_ms: 1.0, dnn: false },
+            EventKind::Completion { seq: 0, capture_ms: 1.0, exec_ms: 1.0, dnn: false, label: None },
         );
         eq.push(
             2.000_999_999_9,
-            EventKind::Completion { seq: 1, capture_ms: 2.0, exec_ms: 1.0, dnn: true },
+            EventKind::Completion { seq: 1, capture_ms: 2.0, exec_ms: 1.0, dnn: true, label: None },
         );
         let (_, first) = eq.pop().unwrap();
         match first {
@@ -1018,7 +1104,7 @@ mod tests {
         let mut eq = EventQueue::new();
         eq.push(
             -1.0,
-            EventKind::Completion { seq: 0, capture_ms: 0.0, exec_ms: 0.0, dnn: false },
+            EventKind::Completion { seq: 0, capture_ms: 0.0, exec_ms: 0.0, dnn: false, label: None },
         );
         // Release builds saturate to key 0 instead of wrapping: the event
         // still pops (first), deterministically.

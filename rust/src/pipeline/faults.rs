@@ -236,6 +236,23 @@ impl FaultPlan {
         }
         plan
     }
+
+    /// A seeded chaos storm **composed with** a seeded content-drift
+    /// schedule over the same horizon: infrastructure faults (this plan)
+    /// and data drift ([`crate::video::DriftPlan`]) overlapping freely.
+    /// Same seed → same pair; the chaos composition test in
+    /// `rust/tests/drift.rs` drives both through the pipeline and
+    /// asserts frame conservation plus termination.
+    pub fn randomized_with_drift(
+        seed: u64,
+        horizon_ms: f64,
+        cameras: u32,
+    ) -> (FaultPlan, crate::video::DriftPlan) {
+        (
+            FaultPlan::randomized(seed, horizon_ms, cameras),
+            crate::video::DriftPlan::randomized(seed, horizon_ms, cameras),
+        )
+    }
 }
 
 /// Fault / graceful-degradation counters carried on every pipeline
@@ -329,6 +346,23 @@ mod tests {
         assert!(p.has_camera_freeze());
         assert!(p.camera_frozen(0, 5.0));
         assert!(!p.camera_frozen(1, 5.0));
+    }
+
+    #[test]
+    fn randomized_with_drift_pairs_are_seeded_and_composable() {
+        let (fa, da) = FaultPlan::randomized_with_drift(7, 10_000.0, 4);
+        let (fb, db) = FaultPlan::randomized_with_drift(7, 10_000.0, 4);
+        assert_eq!(fa, fb, "same seed, same fault storm");
+        assert_eq!(da, db, "same seed, same drift schedule");
+        assert!(!fa.is_empty() && !da.is_empty());
+        let (fc, dc) = FaultPlan::randomized_with_drift(8, 10_000.0, 4);
+        assert!(fa != fc || da != dc, "different seeds diverge");
+        // The pair shares a horizon, so overlap between a fault window
+        // and a drift window is possible (and with these seeds, actual);
+        // the pipeline-level composition is exercised in tests/drift.rs.
+        for w in da.windows() {
+            assert!(w.start_ms >= 0.0 && w.end_ms <= 0.9 * 10_000.0 + 1e-9);
+        }
     }
 
     #[test]

@@ -50,6 +50,7 @@ pub use self::core::{
     EventClass, FrameDecision, FramePayload, PipelineReport, Policy, SimClock, SimConfig,
     SyncBackend, WallClock,
 };
+pub use crate::utility::{AdaptEvent, AdaptEventKind, AdaptationConfig, AdaptationStats};
 pub use faults::{FaultKind, FaultPlan, FaultStats, FaultWindow, PoisonKind};
 pub use multi::{
     multi_backend_seed, multi_backends, run_multi_pipeline, MultiBackendExecutor,

@@ -476,6 +476,7 @@ impl MultiFeeder {
             rgb: f.rgb,
             width: f.width,
             height: f.height,
+            features: None,
         };
         eq.push(t_ls, MEvent::Ingress(Box::new(IngressEvent { frame, utilities, ids })));
         self.frames += 1;
@@ -813,6 +814,7 @@ where
                 end_ms: st.now,
                 extract_ms_total: 0.0,
                 faults: st.fstats,
+                adaptation: crate::utility::AdaptationStats::default(),
             },
         })
         .collect();

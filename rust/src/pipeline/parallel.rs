@@ -108,6 +108,7 @@ where
         acc.end_ms = acc.end_ms.max(r.end_ms);
         acc.extract_ms_total += r.extract_ms_total;
         acc.faults.merge(&r.faults);
+        acc.adaptation.merge(&r.adaptation);
     }
     acc.control_series.sort_by(|a, b| a.0.total_cmp(&b.0));
     Some(acc)
@@ -205,6 +206,7 @@ mod tests {
             fps_total: 10.0,
             transport: crate::pipeline::TransportConfig::default(),
             faults: crate::pipeline::FaultPlan::default(),
+            adaptation: crate::utility::AdaptationConfig::default(),
         }
     }
 

@@ -91,6 +91,10 @@ pub struct RealtimeConfig {
     /// Scheduled fault windows (empty = the faultless verification mode;
     /// see [`crate::pipeline::faults`]).
     pub faults: FaultPlan,
+    /// Online utility-model adaptation (off by default; see
+    /// [`crate::utility::adapt`]). Decisions stay clock-invariant with the
+    /// sim driver because adaptation is keyed to virtual label due times.
+    pub adaptation: crate::utility::AdaptationConfig,
 }
 
 impl Default for RealtimeConfig {
@@ -111,6 +115,7 @@ impl Default for RealtimeConfig {
             worker_restart_max: 2,
             worker_restart_backoff_ms: 50.0,
             faults: FaultPlan::default(),
+            adaptation: crate::utility::AdaptationConfig::default(),
         }
     }
 }
@@ -147,6 +152,8 @@ pub struct RealtimeReport {
     /// Fault / degradation counters (all zero on a faultless run).
     /// `ingress == transmitted + shed + link_dropped + faults.fault_dropped`.
     pub faults: FaultStats,
+    /// Online-adaptation counters (all zero with adaptation disabled).
+    pub adaptation: crate::utility::AdaptationStats,
     /// Times the supervised backend worker was respawned after a crash.
     pub worker_restarts: u32,
 }
@@ -317,6 +324,7 @@ pub fn run_realtime_with<A: ArrivalModel>(
         fps_total: arrivals.fps_total(),
         transport: cfg.transport,
         faults: cfg.faults.clone(),
+        adaptation: cfg.adaptation.clone(),
     };
 
     let extractor = if cfg.use_artifacts {
@@ -353,6 +361,7 @@ pub fn run_realtime_with<A: ArrivalModel>(
         wall: start.elapsed(),
         extract_ms_mean,
         faults: report.faults,
+        adaptation: report.adaptation,
         worker_restarts: executor.worker_restarts(),
     })
 }

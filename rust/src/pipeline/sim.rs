@@ -154,6 +154,7 @@ mod tests {
             fps_total: 50.0,
             transport: crate::pipeline::TransportConfig::default(),
             faults: crate::pipeline::FaultPlan::default(),
+            adaptation: crate::utility::AdaptationConfig::default(),
         };
         (videos, cfg)
     }

@@ -47,6 +47,17 @@ impl AdmissionControl {
         self.cdf.add(utility);
     }
 
+    /// Replace the utility history wholesale and re-derive the threshold
+    /// at the current target rate. Used when a utility-model swap (online
+    /// adaptation) invalidates the distribution the threshold was cut
+    /// from: the old history was scored by the old model, so the gate
+    /// must re-anchor on utilities the *new* model assigns.
+    pub fn reseed(&mut self, utilities: &[f32]) {
+        self.cdf.clear();
+        self.cdf.seed(utilities);
+        self.threshold = self.cdf.threshold_for(self.target_rate);
+    }
+
     /// Re-derive the threshold for a target drop rate (Eq. 17).
     pub fn set_target_rate(&mut self, rate: f64) {
         self.target_rate = rate.clamp(0.0, 1.0);
@@ -132,6 +143,26 @@ mod tests {
         let r = ac.retune(200.0, 10.0);
         assert!((r - 0.5).abs() < 1e-12);
         assert!(ac.threshold() > 0.4 && ac.threshold() < 0.6);
+    }
+
+    #[test]
+    fn reseed_replaces_history_and_recuts_threshold() {
+        let mut ac = AdmissionControl::new(100);
+        for i in 0..100 {
+            ac.observe(i as f32 / 100.0);
+        }
+        ac.set_target_rate(0.5);
+        let th_old = ac.threshold();
+        assert!(th_old > 0.4 && th_old < 0.6, "th_old={th_old}");
+        // New model scores everything near 0.9: the old ~0.5 threshold
+        // would admit 100%; reseed re-anchors at the same target rate.
+        let rescored: Vec<f32> = (0..100).map(|i| 0.85 + i as f32 * 0.001).collect();
+        ac.reseed(&rescored);
+        assert_eq!(ac.history_len(), 100);
+        assert!((ac.target_rate() - 0.5).abs() < 1e-12);
+        assert!(ac.threshold() > 0.85, "th={}", ac.threshold());
+        let admitted = rescored.iter().filter(|&&u| ac.admit(u)).count();
+        assert!((admitted as f64 / 100.0 - 0.5).abs() < 0.05);
     }
 
     #[test]

@@ -92,6 +92,14 @@ impl<T> LoadShedder<T> {
         self.admission.seed(utilities);
     }
 
+    /// Replace the utility history after an online model swap: clear the
+    /// stale (old-model-scored) window, seed it with `utilities` scored by
+    /// the new model, and re-derive the threshold at the current target
+    /// rate so admission stays coherent with the scores it now sees.
+    pub fn reseed_history(&mut self, utilities: &[f32]) {
+        self.admission.reseed(utilities);
+    }
+
     /// Ingress: offer a frame with its utility. Returns the decision for
     /// *this* frame plus all **other** queued frames dropped as a side
     /// effect (displacement eviction, or a retune shrinking the queue).

@@ -547,6 +547,13 @@ impl<T> MultiShedder<T> {
         self.queries[q].admission.admit(utility)
     }
 
+    /// Replace query `q`'s utility history after an online model swap and
+    /// re-cut its threshold at the current target rate (the multi-query
+    /// counterpart of [`super::LoadShedder::reseed_history`]).
+    pub fn reseed_query_history(&mut self, q: usize, utilities: &[f32]) {
+        self.queries[q].admission.reseed(utilities);
+    }
+
     /// Offer the frame to query `q` (after [`Self::observe_arrival`]).
     /// Every frame this call sheds — a displaced queue victim or the
     /// offered frame itself (appended last) — lands in `dropped`, like
@@ -844,6 +851,31 @@ mod tests {
             single.observed_drop_rate()
         );
         assert_eq!(multi.query(0).evictions(), single.evictions());
+    }
+
+    #[test]
+    fn reseed_query_history_is_per_query() {
+        let mut m = mk_multi(ArbiterPolicy::Standalone);
+        let mut dropped = [Vec::new(), Vec::new()];
+        for i in 0..50u64 {
+            let u = i as f32 / 50.0;
+            m.observe_arrival(i as f64 * 100.0, &[u, u], &mut dropped);
+        }
+        // Pin a 50% target on both, then reseed only query 1 with a
+        // high-scoring distribution: query 0's threshold must not move.
+        for q in 0..2 {
+            let rate = {
+                let qs = &mut m.queries[q];
+                qs.admission.set_target_rate(0.5);
+                qs.admission.threshold()
+            };
+            assert!(rate > 0.3 && rate < 0.7, "q{q} th={rate}");
+        }
+        let th0_before = m.threshold(0);
+        m.reseed_query_history(1, &[0.9; 64]);
+        assert_eq!(m.threshold(0), th0_before);
+        assert_eq!(m.threshold(1), 0.9);
+        assert!((m.target_rate(1) - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,662 @@
+//! Online utility-model adaptation with shadow evaluation and guarded
+//! rollback — the drift-resilience layer.
+//!
+//! The paper trains the utility model offline and freezes it; under
+//! content drift (illumination change, camera fouling, hue-shifted
+//! stock, traffic surges — see [`crate::video::DriftPlan`]) the frozen
+//! model's utility ranking decays and the shedder starts dropping the
+//! wrong frames. This module closes the loop from *delayed* backend
+//! ground truth back into the model, without ever letting a bad retrain
+//! take the live pipeline down:
+//!
+//! 1. **Labels** arrive `label_delay_ms` after a transmitted frame
+//!    completes at the backend (the detector's verdict is the ground
+//!    truth; shed frames yield no label — exactly the feedback a real
+//!    deployment has).
+//! 2. **Retraining** folds labels into a per-camera
+//!    [`TrainerAccumulator`] that is exponentially [`decay`]ed after
+//!    every retrain, turning it into a sliding window where recent
+//!    labels dominate.
+//! 3. **Shadow evaluation**: a freshly finalized candidate never goes
+//!    live directly. It scores the next `shadow_min_labels` labeled
+//!    frames *in parallel* with the incumbent; only if its ROC-AUC
+//!    beats the incumbent's by `swap_margin` does it swap in.
+//! 4. **Guarded rollback**: after a swap the new model is on probation
+//!    for `probation_labels` labels. If its observed AUC falls more
+//!    than `rollback_margin` below what the shadow window promised, the
+//!    exact previous model version is restored from the history stack.
+//!
+//! Determinism: every state transition is driven solely by the ordered
+//! label stream (virtual completion time + constant delay), never by
+//! wall-clock reads, so sim and realtime runs adapt identically.
+//! With `enabled: false` (the default) the engine never constructs an
+//! adapter and the pipeline is bit-identical to the frozen-model system.
+//!
+//! [`decay`]: TrainerAccumulator::decay
+
+use super::auc::roc_auc;
+use super::model::UtilityModel;
+use super::trainer::{LabeledFeatures, TrainerAccumulator};
+use crate::color::NamedColor;
+use crate::features::FrameFeatures;
+use std::collections::{HashMap, VecDeque};
+
+/// Tuning for the online-adaptation loop. `enabled: false` (default)
+/// keeps the pipeline bit-identical to the frozen-model system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptationConfig {
+    /// Master switch. Off ⇒ the engine never constructs an adapter.
+    pub enabled: bool,
+    /// Ground-truth latency: a label becomes visible this long after its
+    /// frame's backend completion (annotation / verification lag).
+    pub label_delay_ms: f64,
+    /// Labels between retrain attempts (per camera).
+    pub retrain_every: usize,
+    /// Minimum (decayed) examples of *each* class a color needs before a
+    /// candidate is finalized — guards against one-class retrains.
+    pub min_labels: u64,
+    /// Accumulator decay applied after every retrain (0 = forget all,
+    /// 1 = never forget).
+    pub decay: f64,
+    /// Labels the shadow window scores before the swap verdict.
+    pub shadow_min_labels: usize,
+    /// Candidate must beat the incumbent's shadow-window AUC by this
+    /// much to swap in.
+    pub swap_margin: f64,
+    /// Labels the post-swap probation window observes before the
+    /// keep/rollback verdict.
+    pub probation_labels: usize,
+    /// Rollback fires when probation AUC < promised AUC − this margin.
+    pub rollback_margin: f64,
+    /// Ingress-feature ring the engine re-scores to reseed the
+    /// admission CDF after a swap or rollback.
+    pub reseed_window: usize,
+}
+
+impl Default for AdaptationConfig {
+    fn default() -> Self {
+        AdaptationConfig {
+            enabled: false,
+            label_delay_ms: 400.0,
+            retrain_every: 48,
+            min_labels: 4,
+            decay: 0.85,
+            shadow_min_labels: 32,
+            swap_margin: 0.02,
+            probation_labels: 32,
+            rollback_margin: 0.05,
+            reseed_window: 256,
+        }
+    }
+}
+
+/// What happened in the adaptation state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdaptEventKind {
+    /// A candidate was finalized and entered shadow evaluation.
+    Retrain,
+    /// The shadow window's verdict promoted the candidate to live.
+    Swap,
+    /// Probation caught a post-swap regression; the previous version
+    /// was restored exactly.
+    Rollback,
+    /// The shadow window's verdict discarded the candidate.
+    ShadowReject,
+}
+
+/// One adaptation decision, stamped with the label time that drove it
+/// (virtual time ⇒ identical under sim and wall clocks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptEvent {
+    pub t_ms: f64,
+    pub camera: u32,
+    pub kind: AdaptEventKind,
+    /// The model version the event concerns: the candidate for
+    /// `Retrain`/`ShadowReject`, the new live version for `Swap`, the
+    /// restored version for `Rollback`.
+    pub version: u64,
+}
+
+/// Adaptation counters + event log for [`crate::pipeline::PipelineReport`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdaptationStats {
+    /// Delayed ground-truth labels the adapter consumed.
+    pub labels_observed: u64,
+    pub retrains: u64,
+    pub swaps: u64,
+    pub rollbacks: u64,
+    pub shadow_rejected: u64,
+    /// Admission-CDF reseeds the engine performed (one per swap or
+    /// rollback it acted on).
+    pub reseeds: u64,
+    pub events: Vec<AdaptEvent>,
+}
+
+impl AdaptationStats {
+    /// Fold another shard's stats in (parallel sweep merge): counters
+    /// sum, event logs interleave by time.
+    pub fn merge(&mut self, other: &AdaptationStats) {
+        self.labels_observed += other.labels_observed;
+        self.retrains += other.retrains;
+        self.swaps += other.swaps;
+        self.rollbacks += other.rollbacks;
+        self.shadow_rejected += other.shadow_rejected;
+        self.reseeds += other.reseeds;
+        self.events.extend(other.events.iter().cloned());
+        self.events
+            .sort_by(|a, b| a.t_ms.total_cmp(&b.t_ms).then(a.camera.cmp(&b.camera)));
+    }
+}
+
+/// A delayed ground-truth label in flight.
+struct PendingLabel {
+    due_ms: f64,
+    camera: u32,
+    features: FrameFeatures,
+    positive: bool,
+}
+
+/// Candidate model scoring the label stream next to the incumbent.
+struct Shadow {
+    candidate: UtilityModel,
+    version: u64,
+    live_pos: Vec<f32>,
+    live_neg: Vec<f32>,
+    cand_pos: Vec<f32>,
+    cand_neg: Vec<f32>,
+}
+
+impl Shadow {
+    fn len(&self) -> usize {
+        self.live_pos.len() + self.live_neg.len()
+    }
+}
+
+/// Post-swap watch window for the freshly promoted model.
+struct Probation {
+    promised_auc: f64,
+    pos: Vec<f32>,
+    neg: Vec<f32>,
+}
+
+impl Probation {
+    fn len(&self) -> usize {
+        self.pos.len() + self.neg.len()
+    }
+}
+
+/// Per-camera adaptation state. Version 0 is the offline base model;
+/// while a camera sits at version 0 the adapter abstains from scoring
+/// ([`OnlineAdapter::utility_for`] returns `None`) so the engine's
+/// precomputed utilities — and therefore every decision — are untouched.
+struct CameraAdapter {
+    version: u64,
+    live: UtilityModel,
+    /// Stack of superseded `(version, model)` pairs; rollback pops the
+    /// top and restores it bit-for-bit.
+    history: Vec<(u64, UtilityModel)>,
+    acc: TrainerAccumulator,
+    examples: Vec<LabeledFeatures>,
+    labels_since_retrain: usize,
+    version_counter: u64,
+    shadow: Option<Shadow>,
+    probation: Option<Probation>,
+}
+
+impl CameraAdapter {
+    fn new(base: &UtilityModel, colors: &[NamedColor]) -> Self {
+        CameraAdapter {
+            version: 0,
+            live: base.clone(),
+            history: Vec::new(),
+            acc: TrainerAccumulator::new(colors),
+            examples: Vec::new(),
+            labels_since_retrain: 0,
+            version_counter: 0,
+            shadow: None,
+            probation: None,
+        }
+    }
+}
+
+/// The online adaptation loop: owns per-camera model versions, the
+/// delayed-label queue, and the recent-ingress feature ring used to
+/// reseed the admission CDF after a swap.
+pub struct OnlineAdapter {
+    cfg: AdaptationConfig,
+    base: UtilityModel,
+    colors: Vec<NamedColor>,
+    cameras: HashMap<u32, CameraAdapter>,
+    pending: VecDeque<PendingLabel>,
+    /// Recent ingress features (camera, features), capped at
+    /// `reseed_window` — re-scored wholesale on swap/rollback.
+    recent: VecDeque<(u32, FrameFeatures)>,
+    stats: AdaptationStats,
+}
+
+impl OnlineAdapter {
+    pub fn new(cfg: AdaptationConfig, base: UtilityModel) -> Self {
+        let colors: Vec<NamedColor> = base.colors.iter().map(|c| c.color).collect();
+        OnlineAdapter {
+            cfg,
+            base,
+            colors,
+            cameras: HashMap::new(),
+            pending: VecDeque::new(),
+            recent: VecDeque::new(),
+            stats: AdaptationStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &AdaptationConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &AdaptationStats {
+        &self.stats
+    }
+
+    /// Consume the adapter, yielding its counters + event log for the
+    /// pipeline report.
+    pub fn into_stats(self) -> AdaptationStats {
+        self.stats
+    }
+
+    /// The camera's current model version (0 = offline base).
+    pub fn camera_version(&self, camera: u32) -> u64 {
+        self.cameras.get(&camera).map_or(0, |c| c.version)
+    }
+
+    /// The camera's live model (the base until its first swap).
+    pub fn live_model(&self, camera: u32) -> &UtilityModel {
+        self.cameras.get(&camera).map_or(&self.base, |c| &c.live)
+    }
+
+    /// Score `features` with the camera's live model — `None` while the
+    /// camera still runs the base model (version 0), which lets the
+    /// engine keep its precomputed utility and stay bit-identical to
+    /// the frozen pipeline until the first swap actually happens.
+    pub fn utility_for(&self, camera: u32, features: &FrameFeatures) -> Option<f32> {
+        let cam = self.cameras.get(&camera)?;
+        if cam.version == 0 {
+            return None;
+        }
+        Some(cam.live.utility(features).combined)
+    }
+
+    /// Remember an ingress frame's features for post-swap CDF reseeding.
+    pub fn observe_ingress(&mut self, camera: u32, features: &FrameFeatures) {
+        if self.cfg.reseed_window == 0 {
+            return;
+        }
+        if self.recent.len() == self.cfg.reseed_window {
+            self.recent.pop_front();
+        }
+        self.recent.push_back((camera, features.clone()));
+    }
+
+    /// Queue a delayed ground-truth label (called at backend completion
+    /// with `due_ms = completion + label_delay_ms`). Completions are
+    /// processed in virtual-time order, so due times arrive nondecreasing.
+    pub fn enqueue_label(&mut self, due_ms: f64, camera: u32, features: FrameFeatures, positive: bool) {
+        debug_assert!(
+            self.pending.back().is_none_or(|p| p.due_ms <= due_ms),
+            "label due times must be nondecreasing"
+        );
+        self.pending.push_back(PendingLabel { due_ms, camera, features, positive });
+    }
+
+    /// Process every label whose delay has elapsed. Returns `true` when
+    /// a swap or rollback changed some camera's live model — the engine
+    /// must then re-score its admission history ([`Self::rescore_recent`]).
+    pub fn drain_due(&mut self, now_ms: f64) -> bool {
+        let mut model_changed = false;
+        while self.pending.front().is_some_and(|p| p.due_ms <= now_ms) {
+            let label = self.pending.pop_front().unwrap();
+            model_changed |= self.consume(label);
+        }
+        model_changed
+    }
+
+    /// Score the recent-ingress ring with each frame's *current* live
+    /// model — the utilities the admission CDF reseeds from.
+    pub fn rescore_recent(&self, out: &mut Vec<f32>) {
+        out.clear();
+        for (camera, features) in &self.recent {
+            let u = self
+                .utility_for(*camera, features)
+                .unwrap_or_else(|| self.base.utility(features).combined);
+            out.push(u);
+        }
+    }
+
+    /// Count one admission-CDF reseed the engine performed.
+    pub fn record_reseed(&mut self) {
+        self.stats.reseeds += 1;
+    }
+
+    /// One delayed label through the per-camera state machine. Returns
+    /// `true` if the camera's live model changed (swap or rollback).
+    fn consume(&mut self, label: PendingLabel) -> bool {
+        let cfg = self.cfg.clone();
+        let cam = self
+            .cameras
+            .entry(label.camera)
+            .or_insert_with(|| CameraAdapter::new(&self.base, &self.colors));
+        self.stats.labels_observed += 1;
+        let u_live = cam.live.utility(&label.features).combined;
+        let mut changed = false;
+
+        // Shadow evaluation: candidate and incumbent score the same
+        // labeled frame; verdict at the window boundary.
+        if let Some(shadow) = cam.shadow.as_mut() {
+            let u_cand = shadow.candidate.utility(&label.features).combined;
+            if label.positive {
+                shadow.live_pos.push(u_live);
+                shadow.cand_pos.push(u_cand);
+            } else {
+                shadow.live_neg.push(u_live);
+                shadow.cand_neg.push(u_cand);
+            }
+            if shadow.len() >= cfg.shadow_min_labels {
+                let shadow = cam.shadow.take().unwrap();
+                let auc_live = roc_auc(&shadow.live_pos, &shadow.live_neg);
+                let auc_cand = roc_auc(&shadow.cand_pos, &shadow.cand_neg);
+                if auc_cand > auc_live + cfg.swap_margin {
+                    cam.history.push((cam.version, cam.live.clone()));
+                    cam.version = shadow.version;
+                    cam.live = shadow.candidate;
+                    cam.probation =
+                        Some(Probation { promised_auc: auc_cand, pos: Vec::new(), neg: Vec::new() });
+                    cam.labels_since_retrain = 0;
+                    self.stats.swaps += 1;
+                    self.stats.events.push(AdaptEvent {
+                        t_ms: label.due_ms,
+                        camera: label.camera,
+                        kind: AdaptEventKind::Swap,
+                        version: cam.version,
+                    });
+                    changed = true;
+                } else {
+                    self.stats.shadow_rejected += 1;
+                    self.stats.events.push(AdaptEvent {
+                        t_ms: label.due_ms,
+                        camera: label.camera,
+                        kind: AdaptEventKind::ShadowReject,
+                        version: shadow.version,
+                    });
+                }
+            }
+        } else if let Some(probation) = cam.probation.as_mut() {
+            // Probation: watch the promoted model's realized separation.
+            if label.positive {
+                probation.pos.push(u_live);
+            } else {
+                probation.neg.push(u_live);
+            }
+            if probation.len() >= cfg.probation_labels {
+                let probation = cam.probation.take().unwrap();
+                let post_auc = roc_auc(&probation.pos, &probation.neg);
+                if post_auc < probation.promised_auc - cfg.rollback_margin {
+                    if let Some((version, model)) = cam.history.pop() {
+                        cam.version = version;
+                        cam.live = model;
+                        cam.labels_since_retrain = 0;
+                        self.stats.rollbacks += 1;
+                        self.stats.events.push(AdaptEvent {
+                            t_ms: label.due_ms,
+                            camera: label.camera,
+                            kind: AdaptEventKind::Rollback,
+                            version,
+                        });
+                        changed = true;
+                    }
+                }
+            }
+        }
+
+        // Every label feeds the decayed accumulator regardless of the
+        // state machine's phase.
+        let example = LabeledFeatures {
+            features: label.features,
+            labels: vec![label.positive; self.colors.len()],
+        };
+        cam.acc.add(&example);
+        if cfg.reseed_window > 0 {
+            if cam.examples.len() == cfg.reseed_window {
+                cam.examples.remove(0);
+            }
+            cam.examples.push(example);
+        }
+        cam.labels_since_retrain += 1;
+
+        // Retrain trigger: only between shadow/probation windows, and
+        // only once both classes carry enough (decayed) mass.
+        if cam.shadow.is_none()
+            && cam.probation.is_none()
+            && cam.labels_since_retrain >= cfg.retrain_every
+        {
+            let enough = (0..self.colors.len()).all(|c| {
+                cam.acc.positives(c) >= cfg.min_labels && cam.acc.negatives(c) >= cfg.min_labels
+            });
+            if enough {
+                let candidate =
+                    cam.acc
+                        .finalize(self.base.combine, self.base.fg_threshold, &cam.examples);
+                cam.acc.decay(cfg.decay);
+                cam.version_counter += 1;
+                cam.shadow = Some(Shadow {
+                    candidate,
+                    version: cam.version_counter,
+                    live_pos: Vec::new(),
+                    live_neg: Vec::new(),
+                    cand_pos: Vec::new(),
+                    cand_neg: Vec::new(),
+                });
+                cam.labels_since_retrain = 0;
+                self.stats.retrains += 1;
+                self.stats.events.push(AdaptEvent {
+                    t_ms: label.due_ms,
+                    camera: label.camera,
+                    kind: AdaptEventKind::Retrain,
+                    version: cam.version_counter,
+                });
+            }
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::HIST;
+    use crate::utility::model::{ColorModel, Combine};
+
+    fn base_model(hot: usize) -> UtilityModel {
+        let mut m_pos = [0.0; HIST];
+        m_pos[hot] = 1.0;
+        UtilityModel {
+            colors: vec![ColorModel {
+                color: NamedColor::Red,
+                ranges: NamedColor::Red.ranges(),
+                m_pos,
+                m_neg: [0.0; HIST],
+                norm: 1.0,
+            }],
+            combine: Combine::Single,
+            fg_threshold: 25.0,
+        }
+    }
+
+    fn feat(hot: usize) -> FrameFeatures {
+        let mut pf = [0.0f32; HIST];
+        pf[hot] = 1.0;
+        FrameFeatures { hf: vec![0.5], pf: vec![pf], fg_frac: 0.2 }
+    }
+
+    fn fast_cfg() -> AdaptationConfig {
+        AdaptationConfig {
+            enabled: true,
+            label_delay_ms: 10.0,
+            retrain_every: 8,
+            min_labels: 2,
+            decay: 0.9,
+            shadow_min_labels: 8,
+            swap_margin: 0.1,
+            probation_labels: 8,
+            rollback_margin: 0.05,
+            reseed_window: 64,
+        }
+    }
+
+    /// Feed `n` alternating labels where positives sit at pf bin
+    /// `pos_bin` and negatives at `neg_bin`, advancing time.
+    fn feed(ad: &mut OnlineAdapter, t0: &mut f64, n: usize, pos_bin: usize, neg_bin: usize) {
+        for i in 0..n {
+            let positive = i % 2 == 0;
+            let bin = if positive { pos_bin } else { neg_bin };
+            *t0 += 10.0;
+            ad.enqueue_label(*t0, 0, feat(bin), positive);
+            ad.drain_due(*t0);
+        }
+    }
+
+    #[test]
+    fn version_zero_abstains_from_scoring() {
+        let ad = OnlineAdapter::new(fast_cfg(), base_model(10));
+        assert_eq!(ad.camera_version(0), 0);
+        assert!(ad.utility_for(0, &feat(10)).is_none());
+    }
+
+    #[test]
+    fn labels_respect_their_delay() {
+        let mut ad = OnlineAdapter::new(fast_cfg(), base_model(10));
+        ad.enqueue_label(100.0, 0, feat(10), true);
+        assert!(!ad.drain_due(99.0));
+        assert_eq!(ad.stats().labels_observed, 0);
+        ad.drain_due(100.0);
+        assert_eq!(ad.stats().labels_observed, 1);
+    }
+
+    #[test]
+    fn drifted_labels_retrain_shadow_then_swap() {
+        // Base model keys on bin 10; drifted content puts positives at
+        // bin 30 and negatives at bin 10 → base AUC 0, candidate AUC 1.
+        let mut ad = OnlineAdapter::new(fast_cfg(), base_model(10));
+        let mut t = 0.0;
+        // 8 labels → retrain (shadow opens), 8 more → swap verdict.
+        feed(&mut ad, &mut t, 16, 30, 10);
+        let s = ad.stats();
+        assert_eq!(s.retrains, 1, "events: {:?}", s.events);
+        assert_eq!(s.swaps, 1, "events: {:?}", s.events);
+        assert_eq!(s.rollbacks, 0);
+        assert_eq!(ad.camera_version(0), 1);
+        // The promoted model now ranks the drifted positives on top.
+        let u_pos = ad.utility_for(0, &feat(30)).unwrap();
+        let u_neg = ad.utility_for(0, &feat(10)).unwrap();
+        assert!(u_pos > u_neg, "u_pos {u_pos} u_neg {u_neg}");
+        // Another camera is untouched.
+        assert_eq!(ad.camera_version(3), 0);
+        assert!(ad.utility_for(3, &feat(30)).is_none());
+    }
+
+    #[test]
+    fn regressing_swap_rolls_back_to_the_exact_prior_version() {
+        let mut ad = OnlineAdapter::new(fast_cfg(), base_model(10));
+        let base = base_model(10);
+        let mut t = 0.0;
+        feed(&mut ad, &mut t, 16, 30, 10); // retrain + swap
+        assert_eq!(ad.camera_version(0), 1);
+        // Probation sees inverted reality: the promoted model's hot bin
+        // is now the *negative* signature → post AUC ≈ 0 → rollback.
+        feed(&mut ad, &mut t, 8, 10, 30);
+        let s = ad.stats();
+        assert_eq!(s.rollbacks, 1, "events: {:?}", s.events);
+        assert_eq!(ad.camera_version(0), 0);
+        // Restored bit-for-bit: the live model is the base again.
+        let live = ad.live_model(0);
+        assert_eq!(live.colors[0].m_pos, base.colors[0].m_pos);
+        assert_eq!(live.colors[0].m_neg, base.colors[0].m_neg);
+        assert_eq!(live.colors[0].norm, base.colors[0].norm);
+        // And version 0 abstains again.
+        assert!(ad.utility_for(0, &feat(30)).is_none());
+        let kinds: Vec<AdaptEventKind> = s.events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![AdaptEventKind::Retrain, AdaptEventKind::Swap, AdaptEventKind::Rollback]
+        );
+    }
+
+    #[test]
+    fn non_improving_candidate_is_shadow_rejected() {
+        // Base model already separates perfectly: candidate cannot beat
+        // it by the margin, so the shadow window rejects it and the
+        // live model never changes.
+        let mut ad = OnlineAdapter::new(fast_cfg(), base_model(10));
+        let mut t = 0.0;
+        feed(&mut ad, &mut t, 16, 10, 30);
+        let s = ad.stats();
+        assert_eq!(s.retrains, 1);
+        assert_eq!(s.swaps, 0);
+        assert_eq!(s.shadow_rejected, 1);
+        assert_eq!(ad.camera_version(0), 0);
+        assert!(ad.utility_for(0, &feat(10)).is_none());
+    }
+
+    #[test]
+    fn rescore_recent_uses_the_live_model() {
+        let mut ad = OnlineAdapter::new(fast_cfg(), base_model(10));
+        ad.observe_ingress(0, &feat(30));
+        ad.observe_ingress(0, &feat(10));
+        let mut out = Vec::new();
+        ad.rescore_recent(&mut out);
+        // Before any swap, the base model scores the ring.
+        assert_eq!(out, vec![0.0, 1.0]);
+        let mut t = 0.0;
+        feed(&mut ad, &mut t, 16, 30, 10);
+        assert_eq!(ad.camera_version(0), 1);
+        ad.rescore_recent(&mut out);
+        assert_eq!(out.len(), 2);
+        assert!(out[0] > out[1], "swapped model must invert the ranking: {out:?}");
+    }
+
+    #[test]
+    fn reseed_ring_is_bounded() {
+        let mut ad = OnlineAdapter::new(
+            AdaptationConfig { reseed_window: 4, ..fast_cfg() },
+            base_model(10),
+        );
+        for _ in 0..10 {
+            ad.observe_ingress(0, &feat(10));
+        }
+        let mut out = Vec::new();
+        ad.rescore_recent(&mut out);
+        assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn stats_merge_sums_counters_and_orders_events() {
+        let ev = |t_ms: f64, kind| AdaptEvent { t_ms, camera: 0, kind, version: 1 };
+        let mut a = AdaptationStats {
+            labels_observed: 3,
+            retrains: 1,
+            events: vec![ev(50.0, AdaptEventKind::Retrain)],
+            ..Default::default()
+        };
+        let b = AdaptationStats {
+            labels_observed: 2,
+            swaps: 1,
+            reseeds: 1,
+            events: vec![ev(10.0, AdaptEventKind::Swap)],
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.labels_observed, 5);
+        assert_eq!(a.retrains, 1);
+        assert_eq!(a.swaps, 1);
+        assert_eq!(a.reseeds, 1);
+        assert_eq!(a.events[0].t_ms, 10.0);
+        assert_eq!(a.events[1].t_ms, 50.0);
+    }
+}

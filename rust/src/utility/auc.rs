@@ -3,10 +3,13 @@
 //! (bin-count sweep, feature comparisons) as a threshold-free measure.
 
 /// Area under the ROC curve via the rank-sum (Mann–Whitney) estimator.
-/// Ties contribute 0.5. Returns NaN if either class is empty.
+/// Ties contribute 0.5. A degenerate input (either class empty) returns
+/// 0.5 — "no evidence of separation" — instead of NaN, so online
+/// retraining over sparse label windows never propagates NaN into swap
+/// margins or thresholds.
 pub fn roc_auc(positives: &[f32], negatives: &[f32]) -> f64 {
     if positives.is_empty() || negatives.is_empty() {
-        return f64::NAN;
+        return 0.5;
     }
     // Sort all scores; walk in ascending order accumulating how many
     // negatives precede each positive.
@@ -71,9 +74,12 @@ mod tests {
     }
 
     #[test]
-    fn empty_is_nan() {
-        assert!(roc_auc(&[], &[1.0]).is_nan());
-        assert!(roc_auc(&[1.0], &[]).is_nan());
+    fn degenerate_classes_are_half_not_nan() {
+        // Sparse online label windows hit these constantly; NaN here
+        // would poison swap margins downstream.
+        assert_eq!(roc_auc(&[], &[1.0]), 0.5);
+        assert_eq!(roc_auc(&[1.0], &[]), 0.5);
+        assert_eq!(roc_auc(&[], &[]), 0.5);
     }
 
     #[test]

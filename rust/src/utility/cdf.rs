@@ -43,6 +43,14 @@ impl UtilityCdf {
         }
     }
 
+    /// Drop the entire history (capacity retained). Used when a model
+    /// swap invalidates the utility distribution: [`Self::seed`] appends,
+    /// so re-seeding from shadow-scored utilities must clear first.
+    pub fn clear(&mut self) {
+        self.window.clear();
+        self.sorted.clear();
+    }
+
     /// Observe a new frame utility.
     pub fn add(&mut self, u: f32) {
         // NaN would poison the ordered view (the old rebuild panicked on
@@ -242,6 +250,17 @@ mod tests {
                 assert_eq!(c.len(), n);
             }
         });
+    }
+
+    #[test]
+    fn clear_then_reseed_replaces_history() {
+        let mut c = uniform_cdf();
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.threshold_for(0.5), 0.0);
+        c.seed(&[0.9; 10]);
+        assert_eq!(c.len(), 10);
+        assert_eq!(c.threshold_for(0.5), 0.9);
     }
 
     #[test]

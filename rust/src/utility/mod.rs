@@ -1,12 +1,14 @@
 //! Utility model: training (Eq. 12/13), scoring (Eq. 14), composition
 //! (Eq. 15) and the drop-rate → threshold CDF mapping (Eq. 16/17).
 
+pub mod adapt;
 pub mod auc;
 pub mod cdf;
 pub mod hue_select;
 pub mod model;
 pub mod trainer;
 
+pub use adapt::{AdaptEvent, AdaptEventKind, AdaptationConfig, AdaptationStats, OnlineAdapter};
 pub use auc::roc_auc;
 pub use cdf::UtilityCdf;
 pub use hue_select::HueSelector;

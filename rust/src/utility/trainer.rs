@@ -23,13 +23,18 @@ pub struct LabeledFeatures {
 }
 
 /// Accumulates Eq. 12/13 averages incrementally (streaming-friendly).
+///
+/// Counts are `f64` rather than integers so [`Self::decay`] can
+/// exponentially down-weight history — the online-adaptation loop calls
+/// it after every retrain, turning the accumulator into a decayed
+/// sliding window over delayed backend ground truth.
 #[derive(Debug, Clone)]
 pub struct TrainerAccumulator {
     colors: Vec<NamedColor>,
     sum_pos: Vec<[f64; HIST]>,
     sum_neg: Vec<[f64; HIST]>,
-    n_pos: Vec<u64>,
-    n_neg: Vec<u64>,
+    n_pos: Vec<f64>,
+    n_neg: Vec<f64>,
 }
 
 impl TrainerAccumulator {
@@ -39,8 +44,8 @@ impl TrainerAccumulator {
             colors: colors.to_vec(),
             sum_pos: vec![[0.0; HIST]; k],
             sum_neg: vec![[0.0; HIST]; k],
-            n_pos: vec![0; k],
-            n_neg: vec![0; k],
+            n_pos: vec![0.0; k],
+            n_neg: vec![0.0; k],
         }
     }
 
@@ -55,20 +60,41 @@ impl TrainerAccumulator {
             for (s, p) in sum.iter_mut().zip(&ex.features.pf[c]) {
                 *s += *p as f64;
             }
-            *n += 1;
+            *n += 1.0;
         }
     }
 
-    pub fn positives(&self, c: usize) -> u64 {
-        self.n_pos[c]
+    /// Exponentially decay all accumulated mass by `factor` ∈ [0, 1]:
+    /// sums and counts scale together, so the per-bin averages (and
+    /// therefore a finalize'd model) are unchanged until new examples
+    /// arrive — newer labels then dominate older ones.
+    pub fn decay(&mut self, factor: f64) {
+        let factor = factor.clamp(0.0, 1.0);
+        for c in 0..self.colors.len() {
+            for s in self.sum_pos[c].iter_mut().chain(self.sum_neg[c].iter_mut()) {
+                *s *= factor;
+            }
+            self.n_pos[c] *= factor;
+            self.n_neg[c] *= factor;
+        }
     }
 
+    /// Positive-example mass for color `c`, rounded to a whole count
+    /// (exact until the first [`Self::decay`]).
+    pub fn positives(&self, c: usize) -> u64 {
+        self.n_pos[c].round() as u64
+    }
+
+    /// Negative-example mass for color `c`, rounded to a whole count.
     pub fn negatives(&self, c: usize) -> u64 {
-        self.n_neg[c]
+        self.n_neg[c].round() as u64
     }
 
     /// Finalize into a model; `examples` is re-scanned to compute the
     /// normalization constant (max raw utility over training frames).
+    /// A class with zero mass yields an all-zero matrix (and the norm
+    /// guard below keeps utilities finite), so sparse online windows
+    /// can never produce NaN.
     pub fn finalize(
         &self,
         combine: Combine,
@@ -78,11 +104,11 @@ impl TrainerAccumulator {
         let k = self.colors.len();
         let mut colors = Vec::with_capacity(k);
         for c in 0..k {
-            let avg = |sum: &[f64; HIST], n: u64| -> [f32; HIST] {
+            let avg = |sum: &[f64; HIST], n: f64| -> [f32; HIST] {
                 let mut m = [0.0f32; HIST];
-                if n > 0 {
+                if n > 0.0 {
                     for (mi, s) in m.iter_mut().zip(sum.iter()) {
-                        *mi = (*s / n as f64) as f32;
+                        *mi = (*s / n) as f32;
                     }
                 }
                 m
@@ -246,6 +272,72 @@ mod tests {
         // Uniform PF everywhere → M⁺ uniform → utility = 1 after norm.
         let u = model.utility(&mk(true).features).combined;
         assert!((u - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn degenerate_classes_finalize_nan_free() {
+        // Sparse online windows constantly see zero-positive (or
+        // zero-negative) classes; the model must stay finite.
+        let mk = |label: bool| LabeledFeatures {
+            features: FrameFeatures {
+                hf: vec![0.1],
+                pf: vec![[1.0 / HIST as f32; HIST]],
+                fg_frac: 0.2,
+            },
+            labels: vec![label],
+        };
+        for label in [true, false] {
+            let mut acc = TrainerAccumulator::new(&[NamedColor::Red]);
+            acc.add(&mk(label));
+            acc.add(&mk(label));
+            let examples = [mk(label)];
+            let model = acc.finalize(Combine::Single, 25.0, &examples);
+            let cm = &model.colors[0];
+            assert!(cm.m_pos.iter().chain(cm.m_neg.iter()).all(|x| x.is_finite()));
+            assert!(cm.norm.is_finite() && cm.norm > 0.0, "norm {}", cm.norm);
+            let u = model.utility(&mk(label).features).combined;
+            assert!(u.is_finite(), "utility {u}");
+        }
+        // Fully empty accumulator finalizes finite too.
+        let acc = TrainerAccumulator::new(&[NamedColor::Red]);
+        let model = acc.finalize(Combine::Single, 25.0, &[]);
+        assert_eq!(model.colors[0].norm, 1.0);
+        assert_eq!(model.utility(&mk(true).features).combined, 0.0);
+    }
+
+    #[test]
+    fn decay_preserves_averages_then_new_labels_dominate() {
+        let mk = |hot: usize, label: bool| {
+            let mut pf = [0.0f32; HIST];
+            pf[hot] = 1.0;
+            LabeledFeatures {
+                features: FrameFeatures { hf: vec![0.5], pf: vec![pf], fg_frac: 0.2 },
+                labels: vec![label],
+            }
+        };
+        let mut acc = TrainerAccumulator::new(&[NamedColor::Red]);
+        for _ in 0..8 {
+            acc.add(&mk(10, true));
+            acc.add(&mk(20, false));
+        }
+        let before = acc.finalize(Combine::Single, 25.0, &[]);
+        acc.decay(0.5);
+        let after = acc.finalize(Combine::Single, 25.0, &[]);
+        // Decay alone scales sums and counts together: averages intact.
+        assert_eq!(before.colors[0].m_pos, after.colors[0].m_pos);
+        assert_eq!(before.colors[0].m_neg, after.colors[0].m_neg);
+        assert_eq!(acc.positives(0), 4);
+        // A regime change after heavy decay dominates the old bin.
+        acc.decay(0.1);
+        for _ in 0..8 {
+            acc.add(&mk(30, true));
+        }
+        let shifted = acc.finalize(Combine::Single, 25.0, &[]);
+        assert!(
+            shifted.colors[0].m_pos[30] > 10.0 * shifted.colors[0].m_pos[10],
+            "new regime must dominate: {:?}",
+            &shifted.colors[0].m_pos[..]
+        );
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Deterministic content-drift transforms for the synthetic generator.
+//!
+//! A [`DriftPlan`] schedules **virtual-time drift windows** — a global
+//! illumination ramp (day/night), a hue shift (weather / white-balance
+//! drift), a per-camera occlusion mask (lens fouling), and an
+//! object-surge rate multiplier (flash crowds) — that
+//! [`crate::video::Video`] consults at render time. Every transform is a
+//! pure function of the frame's virtual timestamp and the plan's seed,
+//! so a drifted stream renders identically under `SimClock` and
+//! `WallClock`, mirroring [`crate::pipeline::faults::FaultPlan`]'s
+//! window design.
+//!
+//! The **empty plan is the verification mode**: every query
+//! short-circuits on `windows.is_empty()`, so a video built with
+//! `DriftPlan::default()` performs zero extra RNG draws and renders
+//! bit-identical pixels to an undrifted build — pinned by
+//! `rust/tests/drift.rs` the same way `faults.rs` pins the empty
+//! `FaultPlan`.
+//!
+//! Ramp semantics: `IlluminationRamp` and `HueShift` apply their full
+//! magnitude scaled by a triangular profile over the window (0 at the
+//! edges, 1 at the midpoint) — drift arrives and recedes gradually, the
+//! regime the online adaptation loop must track. `Occlusion` and
+//! `ObjectSurge` are step transforms: full effect while covered.
+
+use crate::util::rng::Rng;
+
+/// One drift mode, active over a window's `[start_ms, end_ms)` span.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DriftKind {
+    /// Every channel of every pixel shifts by `delta` (scaled by the
+    /// window's triangular ramp, clamped to [0, 255] after). Negative
+    /// delta darkens (dusk), positive washes out (glare).
+    IlluminationRamp { delta: f32 },
+    /// Every pixel's hue rotates by `degrees` (full degrees, scaled by
+    /// the ramp) around the hue circle; saturation/value are preserved.
+    HueShift { degrees: f32 },
+    /// A seeded dirt patch covers ~`frac` of camera `camera`'s frame
+    /// area; pixels under it blend heavily toward a dark smear while
+    /// ground truth is unchanged — the utility model goes blind there.
+    Occlusion { camera: u32, frac: f64 },
+    /// Extra seeded traffic at `multiplier`× the base vehicle rate
+    /// appears (and counts as ground truth) while the window covers the
+    /// frame — a flash crowd.
+    ObjectSurge { multiplier: f64 },
+}
+
+/// A half-open virtual-time window `[start_ms, end_ms)` of one drift.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftWindow {
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub kind: DriftKind,
+}
+
+impl DriftWindow {
+    /// Is virtual time `t` inside this window?
+    pub fn covers(&self, t: f64) -> bool {
+        t >= self.start_ms && t < self.end_ms
+    }
+
+    /// Triangular ramp profile: 0 at the window edges, 1 at the
+    /// midpoint, 0 outside. Gradual drift is the hard case for an
+    /// online adapter (no sharp change point to detect).
+    pub fn ramp(&self, t: f64) -> f64 {
+        if !self.covers(t) || self.end_ms <= self.start_ms {
+            return 0.0;
+        }
+        let x = (t - self.start_ms) / (self.end_ms - self.start_ms);
+        (1.0 - (2.0 * x - 1.0).abs()).clamp(0.0, 1.0)
+    }
+}
+
+/// A schedule of drift windows. `DriftPlan::default()` is the empty
+/// plan — the verification mode, bit-identical to an undrifted stream.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DriftPlan {
+    windows: Vec<DriftWindow>,
+    has_surge: bool,
+}
+
+impl DriftPlan {
+    pub fn new() -> Self {
+        DriftPlan::default()
+    }
+
+    /// Builder: add a drift window. Windows may overlap freely.
+    pub fn with(mut self, start_ms: f64, end_ms: f64, kind: DriftKind) -> Self {
+        self.push(start_ms, end_ms, kind);
+        self
+    }
+
+    /// Add a drift window in place.
+    pub fn push(&mut self, start_ms: f64, end_ms: f64, kind: DriftKind) {
+        debug_assert!(
+            start_ms.is_finite() && end_ms.is_finite() && start_ms <= end_ms,
+            "drift window must be finite and ordered: [{start_ms}, {end_ms})"
+        );
+        if matches!(kind, DriftKind::ObjectSurge { .. }) {
+            self.has_surge = true;
+        }
+        self.windows.push(DriftWindow { start_ms, end_ms, kind });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn windows(&self) -> &[DriftWindow] {
+        &self.windows
+    }
+
+    /// Summed ramped illumination delta at `t` (0.0 outside every
+    /// illumination window).
+    pub fn illumination_delta(&self, t: f64) -> f32 {
+        if self.windows.is_empty() {
+            return 0.0;
+        }
+        self.windows
+            .iter()
+            .filter_map(|w| match w.kind {
+                DriftKind::IlluminationRamp { delta } => {
+                    Some(delta * w.ramp(t) as f32)
+                }
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Summed ramped hue rotation (full degrees) at `t`.
+    pub fn hue_shift_degrees(&self, t: f64) -> f32 {
+        if self.windows.is_empty() {
+            return 0.0;
+        }
+        self.windows
+            .iter()
+            .filter_map(|w| match w.kind {
+                DriftKind::HueShift { degrees } => Some(degrees * w.ramp(t) as f32),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Occluded area fraction for camera `camera` at `t` (the largest
+    /// covering occlusion wins; 0.0 outside every window).
+    pub fn occlusion_frac(&self, camera: u32, t: f64) -> f64 {
+        if self.windows.is_empty() {
+            return 0.0;
+        }
+        self.windows
+            .iter()
+            .filter_map(|w| match w.kind {
+                DriftKind::Occlusion { camera: c, frac } if c == camera && w.covers(t) => {
+                    Some(frac)
+                }
+                _ => None,
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Object-surge rate multiplier at `t` (the largest covering surge
+    /// wins; 1.0 outside every surge window).
+    pub fn surge_multiplier(&self, t: f64) -> f64 {
+        if !self.has_surge {
+            return 1.0;
+        }
+        self.windows
+            .iter()
+            .filter_map(|w| match w.kind {
+                DriftKind::ObjectSurge { multiplier } if w.covers(t) => Some(multiplier),
+                _ => None,
+            })
+            .fold(1.0, f64::max)
+    }
+
+    /// Does the plan contain any surge window at all? Gates the surge
+    /// trajectory pool so the empty plan draws zero extra RNG.
+    pub fn has_object_surge(&self) -> bool {
+        self.has_surge
+    }
+
+    /// The plan's largest surge multiplier across all windows (1.0 when
+    /// there are none). Sizes the precomputed surge trajectory pool.
+    pub fn peak_surge_multiplier(&self) -> f64 {
+        if !self.has_surge {
+            return 1.0;
+        }
+        self.windows
+            .iter()
+            .filter_map(|w| match w.kind {
+                DriftKind::ObjectSurge { multiplier } => Some(multiplier),
+                _ => None,
+            })
+            .fold(1.0, f64::max)
+    }
+
+    /// Does any window perturb camera `camera`'s *pixels* at `t`?
+    /// Pixel-level transforms break the generator's dirty-rect
+    /// contract, so [`crate::video::Video::dirty_rects_into`] must
+    /// refuse hints while (or adjacent to) an active window. Occlusion
+    /// is camera-scoped; everything else is global.
+    pub fn perturbs(&self, camera: u32, t: f64) -> bool {
+        if self.windows.is_empty() {
+            return false;
+        }
+        self.windows.iter().any(|w| {
+            w.covers(t)
+                && match w.kind {
+                    DriftKind::Occlusion { camera: c, .. } => c == camera,
+                    _ => true,
+                }
+        })
+    }
+
+    /// A seeded random drift schedule over `[0, horizon_ms)` across
+    /// `cameras` cameras: 2–4 windows of uniformly-drawn kinds, each
+    /// starting in `[0.1, 0.6]·horizon` and lasting
+    /// `[0.1, 0.3]·horizon`. Same seed → same plan; the chaos
+    /// composition test overlays many of these on random fault storms.
+    pub fn randomized(seed: u64, horizon_ms: f64, cameras: u32) -> DriftPlan {
+        let mut rng = Rng::new(seed ^ 0xD21F_7000);
+        let mut plan = DriftPlan::new();
+        let n = 2 + rng.below(3);
+        for _ in 0..n {
+            let start = rng.range_f64(0.1, 0.6) * horizon_ms;
+            let dur = rng.range_f64(0.1, 0.3) * horizon_ms;
+            let cam = rng.below(cameras.max(1) as u64) as u32;
+            let kind = match rng.below(4) {
+                0 => DriftKind::IlluminationRamp { delta: rng.range_f64(-90.0, 90.0) as f32 },
+                1 => DriftKind::HueShift { degrees: rng.range_f64(10.0, 60.0) as f32 },
+                2 => DriftKind::Occlusion { camera: cam, frac: rng.range_f64(0.1, 0.4) },
+                _ => DriftKind::ObjectSurge { multiplier: rng.range_f64(2.0, 4.0) },
+            };
+            plan.push(start, start + dur, kind);
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_answers_identity_everywhere() {
+        let p = DriftPlan::default();
+        assert!(p.is_empty());
+        assert_eq!(p.illumination_delta(1e5), 0.0);
+        assert_eq!(p.hue_shift_degrees(0.0), 0.0);
+        assert_eq!(p.occlusion_frac(3, 500.0), 0.0);
+        assert_eq!(p.surge_multiplier(500.0), 1.0);
+        assert!(!p.has_object_surge());
+        assert!(!p.perturbs(0, 500.0));
+    }
+
+    #[test]
+    fn ramp_is_triangular_and_windows_half_open() {
+        let w = DriftWindow {
+            start_ms: 100.0,
+            end_ms: 300.0,
+            kind: DriftKind::IlluminationRamp { delta: -80.0 },
+        };
+        assert_eq!(w.ramp(99.9), 0.0);
+        assert_eq!(w.ramp(100.0), 0.0);
+        assert!((w.ramp(200.0) - 1.0).abs() < 1e-12, "midpoint peaks");
+        assert!((w.ramp(150.0) - 0.5).abs() < 1e-12);
+        assert_eq!(w.ramp(300.0), 0.0, "end is exclusive");
+        assert!(w.covers(100.0) && !w.covers(300.0));
+    }
+
+    #[test]
+    fn queries_are_kind_and_camera_scoped() {
+        let p = DriftPlan::new()
+            .with(0.0, 200.0, DriftKind::IlluminationRamp { delta: -80.0 })
+            .with(0.0, 200.0, DriftKind::HueShift { degrees: 40.0 })
+            .with(100.0, 300.0, DriftKind::Occlusion { camera: 1, frac: 0.2 })
+            .with(100.0, 300.0, DriftKind::Occlusion { camera: 1, frac: 0.35 })
+            .with(400.0, 500.0, DriftKind::ObjectSurge { multiplier: 3.0 });
+        assert!((p.illumination_delta(100.0) - -80.0).abs() < 1e-5);
+        assert!((p.hue_shift_degrees(100.0) - 40.0).abs() < 1e-5);
+        assert_eq!(p.illumination_delta(350.0), 0.0);
+        // The largest covering occlusion wins; camera-scoped.
+        assert_eq!(p.occlusion_frac(1, 150.0), 0.35);
+        assert_eq!(p.occlusion_frac(0, 150.0), 0.0);
+        assert_eq!(p.surge_multiplier(450.0), 3.0);
+        assert_eq!(p.surge_multiplier(399.0), 1.0);
+        assert!(p.has_object_surge());
+        // perturbs: occlusion is camera-scoped, illumination is global,
+        // surge perturbs (extra objects are pixels too).
+        assert!(p.perturbs(0, 50.0));
+        assert!(p.perturbs(1, 250.0));
+        assert!(!p.perturbs(0, 250.0));
+        assert!(p.perturbs(0, 450.0));
+        assert!(!p.perturbs(0, 350.0));
+    }
+
+    #[test]
+    fn randomized_plans_are_seeded_and_bounded() {
+        let a = DriftPlan::randomized(7, 10_000.0, 4);
+        let b = DriftPlan::randomized(7, 10_000.0, 4);
+        assert_eq!(a, b, "same seed, same plan");
+        let c = DriftPlan::randomized(8, 10_000.0, 4);
+        assert_ne!(a, c, "different seeds diverge");
+        assert!((2..=4).contains(&a.windows().len()));
+        for w in a.windows() {
+            assert!(w.start_ms >= 0.0 && w.end_ms <= 0.9 * 10_000.0 + 1e-9);
+            assert!(w.end_ms > w.start_ms);
+            if let DriftKind::Occlusion { camera, frac } = w.kind {
+                assert!(camera < 4);
+                assert!((0.1..=0.4).contains(&frac));
+            }
+        }
+    }
+}

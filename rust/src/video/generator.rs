@@ -3,10 +3,17 @@
 //! Frames are rendered lazily (`render(t)`) and deterministically, so
 //! multi-hour experiment sweeps never materialize full videos in memory.
 
+use super::drift::DriftPlan;
 use super::frame::Frame;
 use super::objects::{spawn_traffic, Kind, TrafficConfig, Trajectory};
 use super::scene::Scene;
+use crate::color::hsv::{hsv_to_rgb, rgb_to_hsv};
+use crate::color::HUE_MAX;
 use crate::util::rng::{splitmix64, Rng};
+
+/// Object-id offset for surge-pool trajectories, so flash-crowd objects
+/// never collide with base-traffic ids.
+const SURGE_ID_OFFSET: u64 = 1_000_000;
 
 /// Configuration of one synthetic camera video.
 #[derive(Debug, Clone)]
@@ -31,6 +38,9 @@ pub struct VideoConfig {
     /// Integer frames take the LUT fast path in `features::fast`; off by
     /// default to keep the seed experiments' pixel streams unchanged.
     pub quantize_u8: bool,
+    /// Scheduled content-drift windows (empty = the undrifted
+    /// verification mode; see [`crate::video::drift`]).
+    pub drift: DriftPlan,
 }
 
 impl VideoConfig {
@@ -47,6 +57,7 @@ impl VideoConfig {
             brightness_jitter: 2.0,
             pixel_noise: 2.5,
             quantize_u8: false,
+            drift: DriftPlan::default(),
         }
     }
 }
@@ -56,6 +67,11 @@ pub struct Video {
     pub config: VideoConfig,
     pub scene: Scene,
     trajectories: Vec<Trajectory>,
+    /// Flash-crowd trajectory pool, drawn (and ground-truthed) only
+    /// while an [`super::drift::DriftKind::ObjectSurge`] window covers
+    /// the frame. Empty unless the drift plan has a surge window, and
+    /// built from an *independent* RNG so base traffic is bit-unchanged.
+    surge_trajectories: Vec<Trajectory>,
     /// Quantized background model (only under `quantize_u8`: a u8 camera's
     /// background-subtraction reference is itself u8).
     background_q: Option<Vec<f32>>,
@@ -67,10 +83,27 @@ impl Video {
         let mut rng = Rng::new(config.traffic_seed ^ xtraffic_u64());
         let trajectories =
             spawn_traffic(&scene, &config.traffic, config.frames, config.fps, &mut rng);
+        let surge_trajectories = if config.drift.has_object_surge() {
+            // Pool sized by the plan's peak multiplier: extra arrivals at
+            // (peak − 1)× the base rates, on a dedicated RNG stream.
+            let extra = (config.drift.peak_surge_multiplier() - 1.0).max(0.0);
+            let mut scfg = config.traffic.clone();
+            scfg.vehicle_rate *= extra;
+            scfg.pedestrian_rate *= extra;
+            let mut srng = Rng::new(config.traffic_seed ^ 0xD21F_7001);
+            let mut surge =
+                spawn_traffic(&scene, &scfg, config.frames, config.fps, &mut srng);
+            for tr in &mut surge {
+                tr.object_id += SURGE_ID_OFFSET;
+            }
+            surge
+        } else {
+            Vec::new()
+        };
         let background_q = config
             .quantize_u8
             .then(|| scene.background().iter().map(|x| x.round()).collect());
-        Video { config, scene, trajectories, background_q }
+        Video { config, scene, trajectories, surge_trajectories, background_q }
     }
 
     pub fn len(&self) -> usize {
@@ -96,6 +129,31 @@ impl Video {
 
     pub fn trajectories(&self) -> &[Trajectory] {
         &self.trajectories
+    }
+
+    /// Is a surge window covering frame `tf` (frames, possibly
+    /// fractional)? False whenever the pool is empty, so undrifted
+    /// videos pay nothing.
+    fn surge_active(&self, tf: f64) -> bool {
+        !self.surge_trajectories.is_empty()
+            && self.config.drift.surge_multiplier(tf / self.config.fps * 1e3) > 1.0
+    }
+
+    /// Deterministic dirt-patch rectangle of ~`frac` of the frame area,
+    /// seeded per (scene, camera) — the same camera fouls in the same
+    /// place every run.
+    fn occlusion_rect(&self, frac: f64) -> (usize, usize, usize, usize) {
+        let (w, h) = (self.config.width, self.config.height);
+        let mut rng = Rng::new(
+            self.config.scene_seed ^ ((self.config.camera_id as u64) << 32) ^ 0x0CC1,
+        );
+        let area = (frac * (w * h) as f64).max(4.0);
+        let side = area.sqrt();
+        let rw = ((side * rng.range_f64(0.8, 1.25)).round() as usize).clamp(2, w);
+        let rh = ((area / rw as f64).round() as usize).clamp(2, h);
+        let x0 = rng.below((w - rw + 1) as u64) as usize;
+        let y0 = rng.below((h - rh + 1) as u64) as usize;
+        (x0, y0, x0 + rw, y0 + rh)
     }
 
     /// Render frame `t` (with ground truth).
@@ -124,6 +182,16 @@ impl Video {
                 frame.truth.push(vis);
             }
         }
+        // Flash-crowd objects: drawn and ground-truthed only while a
+        // surge window covers the frame (keeps truth == rendered truth).
+        if self.surge_active(tf) {
+            for tr in &self.surge_trajectories {
+                if let Some(vis) = tr.visible_at(tf, w, h) {
+                    tr.draw(rgb, tf, w, h);
+                    frame.truth.push(vis);
+                }
+            }
+        }
 
         // Lighting jitter + sensor noise, deterministic per (video, frame).
         let mut state = self.config.traffic_seed ^ (t as u64).wrapping_mul(0x9E37_79B9_97F4_A7C1);
@@ -134,6 +202,46 @@ impl Video {
             for v in rgb.iter_mut() {
                 let noise = (nrng.f32() - 0.5) * 2.0 * amp;
                 *v = (*v + bright + noise).clamp(0.0, 255.0);
+            }
+        }
+        // Content drift: pure functions of the frame's virtual timestamp,
+        // applied after sensor noise and before quantization. The empty
+        // plan skips everything — bit-identical to an undrifted render.
+        if !self.config.drift.is_empty() {
+            let ts_ms = tf / self.config.fps * 1e3;
+            let delta = self.config.drift.illumination_delta(ts_ms);
+            if delta != 0.0 {
+                for v in rgb.iter_mut() {
+                    *v = (*v + delta).clamp(0.0, 255.0);
+                }
+            }
+            let deg = self.config.drift.hue_shift_degrees(ts_ms);
+            if deg != 0.0 {
+                for px in rgb.chunks_exact_mut(3) {
+                    let (h0, s, v) = rgb_to_hsv(px[0], px[1], px[2]);
+                    // Full degrees → OpenCV half-units.
+                    let hue = (h0 + deg * 0.5).rem_euclid(HUE_MAX);
+                    let (r, g, b) = hsv_to_rgb(hue, s, v);
+                    px[0] = r;
+                    px[1] = g;
+                    px[2] = b;
+                }
+            }
+            let frac = self.config.drift.occlusion_frac(self.config.camera_id, ts_ms);
+            if frac > 0.0 {
+                let (x0, y0, x1, y1) = self.occlusion_rect(frac);
+                // Heavy blend toward a dark smear; ground truth is NOT
+                // edited — objects under the dirt stay in `truth`, which
+                // is exactly what blinds a frozen utility model.
+                const DIRT: [f32; 3] = [46.0, 41.0, 34.0];
+                for y in y0..y1 {
+                    for x in x0..x1 {
+                        let i = (y * w + x) * 3;
+                        for c in 0..3 {
+                            rgb[i + c] = rgb[i + c] * 0.12 + DIRT[c] * 0.88;
+                        }
+                    }
+                }
             }
         }
         if self.config.quantize_u8 {
@@ -170,6 +278,19 @@ impl Video {
             || self.config.pixel_noise != 0.0
         {
             return false;
+        }
+        // An active pixel-level drift breaks the rect contract (global
+        // transforms touch every pixel; surge objects are not in the
+        // base trajectory list). Check t−1 too: the frame right after a
+        // window closes still differs from its drifted predecessor.
+        if !self.config.drift.is_empty() {
+            let cam = self.config.camera_id;
+            let ts = |t: usize| t as f64 / self.config.fps * 1e3;
+            if self.config.drift.perturbs(cam, ts(t))
+                || self.config.drift.perturbs(cam, ts(t - 1))
+            {
+                return false;
+            }
         }
         let (w, h) = (self.config.width, self.config.height);
         let (t0, t1) = ((t - 1) as f64, t as f64);
@@ -210,10 +331,19 @@ impl Video {
     /// Ground truth without rendering (fast path for labeling sweeps).
     pub fn truth(&self, t: usize) -> Vec<super::frame::VisibleObject> {
         let tf = t as f64;
-        self.trajectories
+        let mut out: Vec<_> = self
+            .trajectories
             .iter()
             .filter_map(|tr| tr.visible_at(tf, self.config.width, self.config.height))
-            .collect()
+            .collect();
+        if self.surge_active(tf) {
+            out.extend(
+                self.surge_trajectories
+                    .iter()
+                    .filter_map(|tr| tr.visible_at(tf, self.config.width, self.config.height)),
+            );
+        }
+        out
     }
 
     /// Iterator over all frames.
@@ -390,6 +520,134 @@ mod tests {
         cfg.pixel_noise = 0.0;
         cfg.brightness_jitter = 0.0;
         assert!(!Video::new(cfg).dirty_rects_into(0, &mut rects));
+    }
+
+    #[test]
+    fn far_future_drift_is_bit_identical_to_empty_plan() {
+        use crate::video::drift::DriftKind;
+        let base = quick_video(9);
+        let mut cfg = VideoConfig::new(2, 9, 0, 200);
+        // Windows far past the video's horizon: scheduled but never
+        // active — must render bit-identical pixels and truth.
+        let far = 1e9;
+        cfg.drift = crate::video::drift::DriftPlan::new()
+            .with(far, far + 1e3, DriftKind::IlluminationRamp { delta: -80.0 })
+            .with(far, far + 1e3, DriftKind::HueShift { degrees: 40.0 })
+            .with(far, far + 1e3, DriftKind::Occlusion { camera: 0, frac: 0.3 })
+            .with(far, far + 1e3, DriftKind::ObjectSurge { multiplier: 3.0 });
+        let v = Video::new(cfg);
+        for t in [0usize, 37, 123, 199] {
+            let a = base.render(t);
+            let b = v.render(t);
+            assert_eq!(a.rgb, b.rgb, "t={t}");
+            assert_eq!(a.truth, b.truth, "t={t}");
+            assert_eq!(base.truth(t), v.truth(t));
+        }
+    }
+
+    #[test]
+    fn drift_transforms_fire_inside_their_windows() {
+        use crate::video::drift::{DriftKind, DriftPlan};
+        let base = quick_video(9);
+        // 200 frames at 10 fps → ts ∈ [0, 20 000) ms.
+        let mut cfg = VideoConfig::new(2, 9, 0, 200);
+        cfg.drift = DriftPlan::new()
+            .with(2_000.0, 6_000.0, DriftKind::IlluminationRamp { delta: -120.0 })
+            .with(8_000.0, 12_000.0, DriftKind::Occlusion { camera: 0, frac: 0.3 })
+            .with(14_000.0, 18_000.0, DriftKind::ObjectSurge { multiplier: 4.0 });
+        let v = Video::new(cfg);
+        // Before any window: identical.
+        assert_eq!(base.render(5).rgb, v.render(5).rgb);
+        // Illumination midpoint (t=40 → 4 000 ms): darker overall.
+        let (a, b) = (base.render(40), v.render(40));
+        let mean = |f: &Frame| f.rgb.iter().sum::<f32>() / f.rgb.len() as f32;
+        assert!(mean(&b) < mean(&a) - 50.0, "{} vs {}", mean(&a), mean(&b));
+        assert_eq!(a.truth, b.truth, "illumination leaves truth alone");
+        // Occlusion (t=100 → 10 000 ms): pixels differ, truth unchanged.
+        let (a, b) = (base.render(100), v.render(100));
+        assert_ne!(a.rgb, b.rgb);
+        assert_eq!(a.truth, b.truth);
+        // Surge (t=160 → 16 000 ms): strictly more ground-truth objects
+        // somewhere in the window, ids disjoint from base traffic.
+        let extra: usize = (140..180)
+            .map(|t| v.truth(t).len().saturating_sub(base.truth(t).len()))
+            .sum();
+        assert!(extra > 0, "no surge objects appeared");
+        for t in 140..180 {
+            let f = v.render(t);
+            assert_eq!(f.truth, v.truth(t), "render truth == fast truth at t={t}");
+            for o in f.truth.iter().filter(|o| o.object_id >= SURGE_ID_OFFSET) {
+                assert!(
+                    base.truth(t).iter().all(|b| b.object_id != o.object_id),
+                    "surge ids must not collide"
+                );
+            }
+        }
+        // After every window: identical again.
+        assert_eq!(base.render(195).rgb, v.render(195).rgb);
+    }
+
+    #[test]
+    fn hue_shift_rotates_hue_and_preserves_value() {
+        use crate::color::hsv::rgb_to_hsv;
+        use crate::video::drift::{DriftKind, DriftPlan};
+        let mut cfg = VideoConfig::new(2, 9, 0, 200);
+        cfg.pixel_noise = 0.0;
+        cfg.brightness_jitter = 0.0;
+        let base = Video::new(cfg.clone());
+        cfg.drift = DriftPlan::new().with(
+            0.0,
+            20_000.0,
+            DriftKind::HueShift { degrees: 60.0 },
+        );
+        let v = Video::new(cfg);
+        let mut checked = 0;
+        for t in (0..200).step_by(13) {
+            let (a, b) = (base.render(t), v.render(t));
+            // Expected rotation at this frame (half-units), via the plan.
+            let shift = v.config.drift.hue_shift_degrees(t as f64 / 10.0 * 1e3) * 0.5;
+            for (pa, pb) in a.rgb.chunks_exact(3).zip(b.rgb.chunks_exact(3)) {
+                let (ha, sa, va) = rgb_to_hsv(pa[0], pa[1], pa[2]);
+                let (hb, sb, vb) = rgb_to_hsv(pb[0], pb[1], pb[2]);
+                if sa > 40.0 {
+                    let want = (ha + shift).rem_euclid(180.0);
+                    // Circular hue distance (the domain wraps at 180).
+                    let d = (hb - want).rem_euclid(180.0);
+                    let d = d.min(180.0 - d);
+                    assert!(d < 0.1, "t={t}: hue {ha} → {hb}, want {want}");
+                    assert!((sb - sa).abs() < 0.1 && (vb - va).abs() < 0.1);
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 50, "too few saturated pixels checked: {checked}");
+    }
+
+    #[test]
+    fn dirty_rects_refuse_active_drift_windows_only() {
+        use crate::video::drift::{DriftKind, DriftPlan};
+        let mut cfg = VideoConfig::new(3, 17, 0, 120);
+        cfg.pixel_noise = 0.0;
+        cfg.brightness_jitter = 0.0;
+        // 120 frames at 10 fps → ts ∈ [0, 12 000). Drift in [4 000, 6 000).
+        cfg.drift = DriftPlan::new().with(
+            4_000.0,
+            6_000.0,
+            DriftKind::IlluminationRamp { delta: -60.0 },
+        );
+        let v = Video::new(cfg.clone());
+        let mut rects = Vec::new();
+        assert!(v.dirty_rects_into(20, &mut rects), "before the window: hintable");
+        assert!(!v.dirty_rects_into(50, &mut rects), "inside: refused");
+        assert!(
+            !v.dirty_rects_into(60, &mut rects),
+            "first frame after close: t−1 was drifted"
+        );
+        assert!(v.dirty_rects_into(62, &mut rects), "well after: hintable again");
+        // Occlusion on another camera never perturbs this one.
+        cfg.drift =
+            DriftPlan::new().with(0.0, 12_000.0, DriftKind::Occlusion { camera: 7, frac: 0.3 });
+        assert!(Video::new(cfg).dirty_rects_into(50, &mut rects));
     }
 
     #[test]

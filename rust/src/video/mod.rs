@@ -5,6 +5,7 @@
 //! computed exactly. See DESIGN.md §2 for the substitution argument.
 
 pub mod dataset;
+pub mod drift;
 pub mod frame;
 pub mod generator;
 pub mod objects;
@@ -14,6 +15,7 @@ pub mod streamer;
 pub mod wire;
 
 pub use dataset::{build_dataset, DatasetConfig, MIN_TARGET_PX};
+pub use drift::{DriftKind, DriftPlan, DriftWindow};
 pub use frame::{Frame, Paint, VisibleObject};
 pub use generator::{Video, VideoConfig};
 pub use objects::{Kind, TrafficConfig, Trajectory};

@@ -43,6 +43,7 @@ fn sim_cfg(fps: f64, seed: u64) -> SimConfig {
         fps_total: fps,
         transport: uals::pipeline::TransportConfig::default(),
         faults: uals::pipeline::FaultPlan::default(),
+        adaptation: uals::utility::AdaptationConfig::default(),
     }
 }
 

@@ -1,0 +1,270 @@
+//! Content-drift + online-adaptation properties:
+//!
+//! 1. **Off-state bit-identity** — with adaptation disabled (its other
+//!    knobs armed) and a drift schedule that never covers the run, the
+//!    pipeline is bit-identical to the undrifted default-config system:
+//!    decision logs, control series, QoR and byte counts match across
+//!    seeds and policies, and the adaptation counters stay zero.
+//! 2. **Clock invariance** — an active drift schedule with the full
+//!    adaptation loop armed (delayed labels → retrain → shadow →
+//!    swap/rollback → CDF reseed) drives the sim and wall-clock drivers
+//!    to exactly the same decisions and the same adaptation event log,
+//!    because every state transition is keyed to virtual time.
+//! 3. **Chaos composition** — ≥12 seeded random drift schedules overlaid
+//!    on random fault storms ([`FaultPlan::randomized_with_drift`]) with
+//!    adaptation armed: no deadlock, exact extended conservation, finite
+//!    metrics.
+//!
+//! (Pixel-level drift determinism and the rollback-exactness property
+//! are pinned at unit level in `video::generator` and `utility::adapt`.)
+
+use uals::backend::{BackendQuery, CostModel, Detector};
+use uals::color::NamedColor;
+use uals::config::{CostConfig, QueryConfig, ShedderConfig};
+use uals::features::Extractor;
+use uals::pipeline::realtime::{run_realtime, RealtimeConfig};
+use uals::pipeline::{
+    backgrounds_of, run_sim, FaultPlan, Policy, SimConfig, SimReport, TransportConfig,
+};
+use uals::shedder::ArbiterPolicy;
+use uals::utility::{train, AdaptationConfig, AdaptationStats, Combine, UtilityModel};
+use uals::video::{
+    streamer::aggregate_fps, DriftKind, DriftPlan, Streamer, Video, VideoConfig,
+};
+
+fn cameras_with_drift(
+    n: usize,
+    frames: usize,
+    vehicle_rate: f64,
+    seed: u64,
+    drift: &DriftPlan,
+) -> Vec<Video> {
+    (0..n)
+        .map(|i| {
+            let mut vc = VideoConfig::new(0xFA0 ^ seed, seed * 41 + i as u64, i as u32, frames);
+            vc.traffic.vehicle_rate = vehicle_rate;
+            vc.drift = drift.clone();
+            Video::new(vc)
+        })
+        .collect()
+}
+
+fn model_for(videos: &[Video]) -> UtilityModel {
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    train(videos, &idx, &[NamedColor::Red], Combine::Single)
+}
+
+fn sim_cfg(fps: f64, seed: u64, policy: Policy) -> SimConfig {
+    SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: QueryConfig::single(NamedColor::Red).with_latency_bound(1200.0),
+        backend_tokens: 1,
+        policy,
+        seed,
+        fps_total: fps,
+        transport: TransportConfig::default(),
+        faults: FaultPlan::default(),
+        adaptation: AdaptationConfig::default(),
+    }
+}
+
+/// Aggressive adaptation tuning so small integration runs reach the
+/// retrain → shadow → verdict cycle.
+fn fast_adaptation() -> AdaptationConfig {
+    AdaptationConfig {
+        enabled: true,
+        label_delay_ms: 250.0,
+        retrain_every: 16,
+        min_labels: 2,
+        decay: 0.9,
+        shadow_min_labels: 12,
+        swap_margin: 0.01,
+        probation_labels: 12,
+        rollback_margin: 0.1,
+        reseed_window: 128,
+    }
+}
+
+fn run_driver(videos: &[Video], cfg: &SimConfig, model: &UtilityModel) -> SimReport {
+    let extractor = Extractor::native(model.clone());
+    let mut backend = BackendQuery::new(
+        cfg.query.clone(),
+        Detector::native(12, 25.0),
+        CostModel::new(cfg.costs.clone(), cfg.seed),
+        25.0,
+    );
+    run_sim(
+        Streamer::new(videos),
+        &backgrounds_of(videos),
+        cfg,
+        &extractor,
+        &mut backend,
+    )
+    .expect("sim driver")
+}
+
+fn assert_conserved(r: &SimReport) {
+    assert_eq!(
+        r.ingress,
+        r.transmitted + r.shed + r.link_dropped + r.faults.fault_dropped,
+        "conservation: {} != {} + {} + {} + {}",
+        r.ingress,
+        r.transmitted,
+        r.shed,
+        r.link_dropped,
+        r.faults.fault_dropped
+    );
+    assert_eq!(r.decisions.len() as u64, r.ingress, "one decision per ingress frame");
+}
+
+// ---------------------------------------------------------------------------
+// 1. Off-state bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disabled_adaptation_and_far_future_drift_are_bit_identical_to_the_default() {
+    for (seed, policy) in [
+        (0xA1u64, Policy::UtilityControlLoop),
+        (0xA2, Policy::FifoControlLoop),
+        (0xA3, Policy::RandomRate { assumed_proc_q_ms: 120.0 }),
+    ] {
+        let clean = cameras_with_drift(2, 90, 0.4, seed, &DriftPlan::default());
+        let model = model_for(&clean);
+        let base = sim_cfg(aggregate_fps(&clean), seed, policy);
+        let baseline = run_driver(&clean, &base, &model);
+        assert_eq!(baseline.adaptation, AdaptationStats::default());
+
+        // Every drift kind scheduled — a billion virtual seconds away —
+        // and every adaptation knob armed except the master switch. The
+        // run must be bit-identical to the clean default-config system:
+        // no window covers the run, and a disabled adapter is never even
+        // constructed.
+        let far = 1.0e9;
+        let armed_drift = DriftPlan::new()
+            .with(far, far + 1e6, DriftKind::IlluminationRamp { delta: -80.0 })
+            .with(far, far + 1e6, DriftKind::HueShift { degrees: 45.0 })
+            .with(far, far + 1e6, DriftKind::Occlusion { camera: 0, frac: 0.4 })
+            .with(far, far + 1e6, DriftKind::ObjectSurge { multiplier: 3.0 });
+        let drifted = cameras_with_drift(2, 90, 0.4, seed, &armed_drift);
+        let mut armed = base.clone();
+        armed.adaptation = AdaptationConfig {
+            enabled: false,
+            label_delay_ms: 50.0,
+            retrain_every: 4,
+            min_labels: 1,
+            decay: 0.5,
+            shadow_min_labels: 4,
+            swap_margin: 0.0,
+            probation_labels: 4,
+            rollback_margin: 0.0,
+            reseed_window: 16,
+        };
+        let r = run_driver(&drifted, &armed, &model);
+        assert_eq!(baseline.decisions, r.decisions, "seed {seed:x}: decisions diverge");
+        assert_eq!(baseline.control_series, r.control_series, "seed {seed:x}");
+        assert_eq!(baseline.qor.overall(), r.qor.overall());
+        assert_eq!(baseline.bytes_on_wire, r.bytes_on_wire);
+        assert_eq!(baseline.transmitted, r.transmitted);
+        assert_eq!(r.adaptation, AdaptationStats::default());
+        assert_conserved(&r);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Clock invariance of drift + adaptation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn drift_with_adaptation_is_clock_invariant() {
+    // Drift windows over the middle of a 2-camera run, full adaptation
+    // loop armed. The whole design rides on virtual-time keying: render,
+    // labels, retrains, swap verdicts and CDF reseeds must all fire
+    // identically under the discrete-event and wall-clock drivers.
+    let drift = DriftPlan::new()
+        .with(2_000.0, 7_000.0, DriftKind::IlluminationRamp { delta: -70.0 })
+        .with(4_000.0, 8_000.0, DriftKind::Occlusion { camera: 0, frac: 0.3 });
+    let videos = cameras_with_drift(2, 100, 0.4, 0xB4, &drift);
+    let model = model_for(&videos);
+    let mut cfg = sim_cfg(aggregate_fps(&videos), 0xB4, Policy::UtilityControlLoop);
+    cfg.adaptation = fast_adaptation();
+
+    let sim = run_driver(&videos, &cfg, &model);
+    assert!(
+        sim.adaptation.labels_observed > 0,
+        "the adaptation loop must consume labels"
+    );
+
+    let rt = RealtimeConfig {
+        query: cfg.query.clone(),
+        shedder: cfg.shedder.clone(),
+        costs: cfg.costs.clone(),
+        cost_emulation_scale: 0.0,
+        time_scale: 1e-3,
+        backend_tokens: cfg.backend_tokens,
+        use_artifacts: false,
+        policy: cfg.policy.clone(),
+        seed: cfg.seed,
+        arbiter: ArbiterPolicy::Standalone,
+        transport: cfg.transport,
+        faults: cfg.faults.clone(),
+        adaptation: cfg.adaptation.clone(),
+        ..Default::default()
+    };
+    let wall = run_realtime(&videos, &model, &rt).expect("wall driver");
+    assert_eq!(sim.decisions, wall.decisions, "drift+adaptation must be clock-invariant");
+    assert_eq!(
+        sim.adaptation, wall.adaptation,
+        "adaptation event log must be clock-invariant"
+    );
+    assert_eq!(sim.transmitted, wall.transmitted);
+    assert_eq!(sim.bytes_on_wire, wall.bytes_on_wire);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Chaos composition: random drift over random fault storms
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chaos_drift_and_fault_storms_compose_without_losing_frames() {
+    let horizon = 15_000.0;
+    let mut engaged = 0u32;
+    for seed in 0..12u64 {
+        let (faults, drift) = FaultPlan::randomized_with_drift(seed, horizon, 2);
+        assert!(!faults.is_empty() && !drift.is_empty());
+        let videos = cameras_with_drift(2, 150, 0.35, 0xF8 ^ seed, &drift);
+        let model = model_for(&videos);
+        let mut cfg = sim_cfg(aggregate_fps(&videos), 0xF8 ^ seed, Policy::UtilityControlLoop);
+        cfg.shedder.watchdog_ms = 1_000.0;
+        cfg.shedder.camera_liveness_ms = 2_000.0;
+        cfg.faults = faults;
+        cfg.adaptation = fast_adaptation();
+
+        // Completing at all is the no-deadlock property — an adaptation
+        // step stalled on a label that never drains, or an unclosed
+        // window, would hang the event loop instead.
+        let r = run_driver(&videos, &cfg, &model);
+        assert_conserved(&r);
+        assert!(r.end_ms.is_finite() && r.end_ms > 0.0, "seed {seed}");
+        let q = r.qor.overall();
+        assert!((0.0..=1.0).contains(&q), "seed {seed}: QoR {q}");
+        assert!(
+            r.control_series.iter().all(|&(_, th, rate)| th.is_finite() && rate.is_finite()),
+            "seed {seed}: control series must stay finite under drift+faults"
+        );
+        // Reseeds only ever follow a promoted or rolled-back model.
+        assert!(
+            r.adaptation.reseeds <= r.adaptation.swaps + r.adaptation.rollbacks,
+            "seed {seed}: reseeds {} > swaps {} + rollbacks {}",
+            r.adaptation.reseeds,
+            r.adaptation.swaps,
+            r.adaptation.rollbacks
+        );
+        if r.adaptation.labels_observed > 0 {
+            engaged += 1;
+        }
+    }
+    // Faults destroy frames but most storms still transmit plenty, so
+    // the label feedback loop must engage in the large majority.
+    assert!(engaged >= 8, "adaptation engaged in only {engaged}/12 chaos runs");
+}

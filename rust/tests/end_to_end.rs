@@ -44,6 +44,7 @@ fn fig13a_scenario_shape_holds_end_to_end() {
         fps_total: sv.fps(),
         transport: uals::pipeline::TransportConfig::default(),
         faults: uals::pipeline::FaultPlan::default(),
+        adaptation: uals::utility::AdaptationConfig::default(),
     };
     let extractor = Extractor::native(model);
     let mut backend = BackendQuery::new(
@@ -116,6 +117,7 @@ fn composite_or_query_end_to_end() {
         fps_total: 10.0,
         transport: uals::pipeline::TransportConfig::default(),
         faults: uals::pipeline::FaultPlan::default(),
+        adaptation: uals::utility::AdaptationConfig::default(),
     };
     let extractor = Extractor::native(model);
     let mut backend = BackendQuery::new(
@@ -215,6 +217,7 @@ fn sharded_multi_camera_sweep_end_to_end() {
         fps_total: 10.0,
         transport: uals::pipeline::TransportConfig::default(),
         faults: uals::pipeline::FaultPlan::default(),
+        adaptation: uals::utility::AdaptationConfig::default(),
     };
     let (merged, per_camera) =
         uals::pipeline::run_sharded_sim(&videos, &cfg, &model, uals::pipeline::default_threads())

@@ -65,6 +65,7 @@ fn sim_cfg(fps: f64, seed: u64, policy: Policy) -> SimConfig {
         fps_total: fps,
         transport: TransportConfig::default(),
         faults: FaultPlan::default(),
+        adaptation: uals::utility::AdaptationConfig::default(),
     }
 }
 

@@ -213,6 +213,7 @@ fn sweep_cfg() -> SimConfig {
         fps_total: 10.0,
         transport: uals::pipeline::TransportConfig::default(),
         faults: uals::pipeline::FaultPlan::default(),
+        adaptation: uals::utility::AdaptationConfig::default(),
     }
 }
 

@@ -101,6 +101,7 @@ fn run_single(
         fps_total: fps,
         transport: uals::pipeline::TransportConfig::default(),
         faults: uals::pipeline::FaultPlan::default(),
+        adaptation: uals::utility::AdaptationConfig::default(),
     };
     let extractor = Extractor::native(set.query_model(q));
     let mut backend = BackendQuery::new(
@@ -203,7 +204,7 @@ fn shared_pipeline_extracts_exactly_once_per_frame_for_8_queries() {
             fps_total: aggregate_fps(&videos),
             transport: uals::pipeline::TransportConfig::default(),
             faults: uals::pipeline::FaultPlan::default(),
-        faults: uals::pipeline::FaultPlan::default(),
+            adaptation: uals::utility::AdaptationConfig::default(),
         };
         let mut backend = BackendQuery::new(
             cfg.query.clone(),

@@ -74,6 +74,7 @@ fn sim_cfg(fps: f64, seed: u64, policy: Policy) -> SimConfig {
         fps_total: fps,
         transport: TransportConfig::default(),
         faults: uals::pipeline::FaultPlan::default(),
+        adaptation: uals::utility::AdaptationConfig::default(),
     }
 }
 
