@@ -198,6 +198,89 @@ fn main() {
         }
     }
 
+    // --- SIMD kernel pairs (scalar oracle vs dispatched vector path) --------
+    // The same counting kernel and dirty-tile scan at Level::Scalar and at
+    // the host's resolved level, over the four redundancy regimes — the
+    // per-kernel speedup the dispatcher buys, isolated from the rest of
+    // the extraction pipeline.
+    let simd_level = uals::simd::level();
+    {
+        use uals::features::HIST;
+        use uals::simd::{self, Level};
+        let quant_u8 = |src: &[f32]| -> Vec<u8> {
+            let mut v = Vec::new();
+            assert!(
+                simd::quantize(Level::Scalar, src, &mut v),
+                "bench frames must be integer-valued"
+            );
+            v
+        };
+        for (name, frames_set, bg_s) in &scenarios {
+            let frame_q = quant_u8(&frames_set[frames_set.len() / 2]);
+            let bg_q = quant_u8(bg_s);
+            let k = lut2.num_colors();
+            let mut pf = vec![0u32; k * HIST];
+            let mut ic = vec![0u32; k];
+            b.run(&format!("features/count_rect_scalar_{name}_96x96"), || {
+                pf.fill(0);
+                ic.fill(0);
+                std::hint::black_box(simd::count_rect(
+                    Level::Scalar,
+                    &lut2,
+                    &frame_q,
+                    &bg_q,
+                    96,
+                    (0, 0, 96, 96),
+                    k,
+                    &mut pf,
+                    &mut ic,
+                ));
+            });
+            b.run(&format!("features/count_rect_simd_{name}_96x96"), || {
+                pf.fill(0);
+                ic.fill(0);
+                std::hint::black_box(simd::count_rect(
+                    simd_level,
+                    &lut2,
+                    &frame_q,
+                    &bg_q,
+                    96,
+                    (0, 0, 96, 96),
+                    k,
+                    &mut pf,
+                    &mut ic,
+                ));
+            });
+        }
+        // Dirty-tile scan between consecutive sparse frames: the 6×6 grid
+        // of 16-px tiles the delta encoder walks at 96×96.
+        let sparse_q: Vec<Vec<u8>> = scenarios[1].1.iter().map(|f| quant_u8(f)).collect();
+        let scan = |level: Level, cur: &[u8], prev: &[u8]| -> usize {
+            let mut dirty = 0usize;
+            for ty in 0..6 {
+                for tx in 0..6 {
+                    let rect = (tx * 16, ty * 16, tx * 16 + 16, ty * 16 + 16);
+                    if simd::rect_differs(level, cur, prev, 96, rect) {
+                        dirty += 1;
+                    }
+                }
+            }
+            dirty
+        };
+        let mut si = 0usize;
+        b.run("transport/delta_scan_scalar_96x96", || {
+            let next = (si + 1) % sparse_q.len();
+            std::hint::black_box(scan(Level::Scalar, &sparse_q[next], &sparse_q[si]));
+            si = next;
+        });
+        let mut sj = 0usize;
+        b.run("transport/delta_scan_simd_96x96", || {
+            let next = (sj + 1) % sparse_q.len();
+            std::hint::black_box(scan(simd_level, &sparse_q[next], &sparse_q[sj]));
+            sj = next;
+        });
+    }
+
     b.run("backend/foreground_mask+largest_blob", || {
         let m = foreground_mask(&frame.rgb, &bg, 96, 96, 25.0);
         std::hint::black_box(largest_blob(&m));
@@ -493,6 +576,29 @@ fn main() {
                 fast.mean_ms / inc.mean_ms.max(1e-12)
             );
         }
+    }
+    println!("resolved SIMD level: {}", simd_level.name());
+    for name in ["static", "sparse", "dense", "scenecut"] {
+        if let (Some(s), Some(v)) = (
+            b.result(&format!("features/count_rect_scalar_{name}_96x96")),
+            b.result(&format!("features/count_rect_simd_{name}_96x96")),
+        ) {
+            println!(
+                "SIMD count_rect speedup, {} ({name}): {:.2}x",
+                simd_level.name(),
+                s.mean_ms / v.mean_ms.max(1e-12)
+            );
+        }
+    }
+    if let (Some(s), Some(v)) = (
+        b.result("transport/delta_scan_scalar_96x96"),
+        b.result("transport/delta_scan_simd_96x96"),
+    ) {
+        println!(
+            "SIMD delta-scan speedup, {}: {:.2}x",
+            simd_level.name(),
+            s.mean_ms / v.mean_ms.max(1e-12)
+        );
     }
     if let (Some(par), Some(ser)) = (
         b.result("pipeline/sweep_4cams_parallel"),

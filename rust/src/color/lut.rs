@@ -144,6 +144,14 @@ impl ColorLut {
         diff as i32 > self.fg_floor
     }
 
+    /// The integer foreground floor behind [`Self::is_foreground`]
+    /// (`-1..=256`): the SIMD gate broadcasts it into compare vectors.
+    /// Only meaningful when [`Self::is_exact`] holds.
+    #[inline(always)]
+    pub(crate) fn fg_floor(&self) -> i32 {
+        self.fg_floor
+    }
+
     /// Classify one integer pixel: (hue-class bitmask, flat sat/val bin).
     /// Two table reads; no floating point.
     #[inline(always)]

@@ -29,19 +29,12 @@ pub struct QuantScratch {
 
 /// Quantize `src` into `dst`; returns false (dst content unspecified) as
 /// soon as a channel is not exactly representable as u8. Shared with the
-/// incremental tile engine.
+/// incremental tile engine. Dispatches to the resolved SIMD level
+/// ([`crate::simd::level`]); decision- and output-identical to the
+/// scalar loop on every input.
 #[inline]
 pub(crate) fn quantize(src: &[f32], dst: &mut Vec<u8>) -> bool {
-    dst.clear();
-    dst.reserve(src.len());
-    for &x in src {
-        let q = x as u8; // saturating cast; NaN → 0
-        if q as f32 != x {
-            return false;
-        }
-        dst.push(q);
-    }
-    true
+    crate::simd::quantize(crate::simd::level(), src, dst)
 }
 
 /// Compute HF + PF through the LUT fast path, falling back to the
@@ -117,7 +110,12 @@ pub fn compute_features_fast_into(
 /// (`k`) must be zeroed on entry; returns the foreground-pixel count.
 /// u32 counts are exact for any frame below 2³² px (and the final f32
 /// conversion is only exact below 2²⁴ anyway).
+///
+/// Dispatches to the resolved SIMD level ([`crate::simd::level`]); the
+/// scalar loop lives on inside [`crate::simd`] as the property-test
+/// oracle, and every vector path is bit-identical to it.
 #[allow(clippy::too_many_arguments)]
+#[inline]
 pub(crate) fn count_rect(
     lut: &ColorLut,
     frame: &[u8],
@@ -128,31 +126,7 @@ pub(crate) fn count_rect(
     pf: &mut [u32],
     in_color: &mut [u32],
 ) -> u32 {
-    let (x0, y0, x1, y1) = rect;
-    let mut fg = 0u32;
-    for y in y0..y1 {
-        let row = y * width;
-        for x in x0..x1 {
-            let i = 3 * (row + x);
-            let (r, g, b) = (frame[i], frame[i + 1], frame[i + 2]);
-            let diff = r
-                .abs_diff(bg[i])
-                .max(g.abs_diff(bg[i + 1]))
-                .max(b.abs_diff(bg[i + 2]));
-            if !lut.is_foreground(diff) {
-                continue;
-            }
-            fg += 1;
-            let (mask, bin) = lut.classify(r, g, b);
-            // Branchless bump: each color adds 0 or 1 from its mask bit.
-            for c in 0..k {
-                let on = ((mask >> c) & 1) as u32;
-                in_color[c] += on;
-                pf[c * HIST + bin as usize] += on;
-            }
-        }
-    }
-    fg
+    crate::simd::count_rect(crate::simd::level(), lut, frame, bg, width, rect, k, pf, in_color)
 }
 
 /// Convenience allocating wrapper (tests / one-off callers).

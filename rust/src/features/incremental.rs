@@ -373,21 +373,17 @@ impl IncrementalEngine {
         }
     }
 
-    /// Diff `cur` against `prev` tile by tile (row-slice compares, so the
-    /// inner loop is a memcmp). Returns the dirty-tile count.
+    /// Diff `cur` against `prev` tile by tile through the SIMD rect
+    /// compare (scalar level: row-slice memcmps). Returns the dirty-tile
+    /// count.
     fn diff_tiles(&mut self) -> usize {
+        let level = crate::simd::level();
         let mut n_dirty = 0;
-        let w = self.width;
         for ti in 0..self.tiles_x * self.tiles_y {
-            let (x0, y0, x1, y1) = self.tile_rect(ti);
-            for y in y0..y1 {
-                let a = 3 * (y * w + x0);
-                let b = 3 * (y * w + x1);
-                if self.cur[a..b] != self.prev[a..b] {
-                    self.dirty[ti] = true;
-                    n_dirty += 1;
-                    break;
-                }
+            let rect = self.tile_rect(ti);
+            if crate::simd::rect_differs(level, &self.cur, &self.prev, self.width, rect) {
+                self.dirty[ti] = true;
+                n_dirty += 1;
             }
         }
         n_dirty

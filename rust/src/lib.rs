@@ -22,6 +22,7 @@
 //! | [`video`] | synthetic VisualRoad-substitute scene generator + streamer |
 //! | [`runtime`] | PJRT client, AOT artifact loading & execution |
 //! | [`features`] | per-frame feature extraction (artifact-backed + oracle) |
+//! | [`simd`] | runtime-ISA-dispatched vector kernels for the per-pixel hot loops |
 //! | [`utility`] | utility model: training, composition, CDF thresholds |
 //! | [`shedder`] | the Load Shedder: admission control, utility queue, control loop |
 //! | [`backend`] | application query: blob/color filters, detector, sink |
@@ -42,6 +43,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod runtime;
 pub mod shedder;
+pub mod simd;
 pub mod utility;
 pub mod util;
 pub mod video;

@@ -1,0 +1,371 @@
+//! Runtime-dispatched SIMD kernels for the per-pixel hot loops.
+//!
+//! The steady-state cost of the whole stack is three byte loops: the
+//! fused counting kernel behind [`crate::features::fast`] /
+//! [`crate::features::incremental`] (background gate + LUT classify +
+//! histogram bump), the incremental engine's 16×16 tile diff, and the
+//! dirty-tile scan in [`crate::video::wire`]'s delta encoder. This module
+//! gives each an explicit SIMD path behind **runtime ISA detection**:
+//!
+//! * x86_64 — SSE2 unconditionally (part of the architecture baseline),
+//!   AVX2 behind `is_x86_feature_detected!`;
+//! * aarch64 — NEON unconditionally (part of the architecture baseline);
+//! * anything else — the scalar kernels, which are also kept as the
+//!   property-test oracle on every architecture.
+//!
+//! The toolchain is pinned to stable 1.85 (`rust-toolchain.toml`), so the
+//! implementation uses stable `core::arch` intrinsics rather than the
+//! still-unstable `std::simd`.
+//!
+//! ## Exactness
+//!
+//! Every wrapper here is **bit-identical to the scalar path on all
+//! inputs** — the same bar as the LUT fast path and the incremental
+//! engine. That is possible because all three kernels are integer-exact:
+//!
+//! * the counting kernel accumulates `u32` counts (integer adds commute,
+//!   so lane order cannot change any total), and the per-pixel foreground
+//!   gate `max(|Δr|,|Δg|,|Δb|) > floor` is equivalent to the byte-wise
+//!   test `∃ channel: saturating_sub(|Δ|, floor) != 0`, evaluated with
+//!   saturating-subtract/compare vectors;
+//! * the quantizer's accept test ("is this f32 exactly an integer in
+//!   0..=255?") is a truncating convert, a range check, and an exact f32
+//!   compare per lane — any failing lane makes the whole call return
+//!   `false`, exactly like the scalar early-out;
+//! * the tile diff is pure byte equality.
+//!
+//! There is no float accumulation anywhere, so there is no reassociation
+//! escape hatch to hide behind — and none is needed. The equivalence is
+//! property-pinned by `rust/tests/simd.rs` at every [`Level`] available
+//! on the host.
+//!
+//! ## Dispatch
+//!
+//! The [`Level`] is resolved **once** (env override first, then
+//! detection) and cached in a `OnceLock`; hot-path callers go through
+//! [`level`]. Every kernel also takes an explicit `Level` so tests and
+//! benches can pin a path without re-resolving. The `UALS_SIMD`
+//! environment variable (`scalar`, `sse2`, `avx2`, `neon`) forces a
+//! level — for bisecting a regression to an ISA path, or for running the
+//! scalar oracle in CI on any runner. Invalid or unsupported values are
+//! rejected with a clear error instead of being silently ignored.
+//!
+//! ## Tail handling
+//!
+//! Vector loops consume whole 16/32-pixel (or byte) blocks per row of
+//! the target rect; the ragged remainder of each row is delegated to the
+//! scalar kernel on a 1-row sub-rect, so awkward geometries (widths or
+//! rect extents that are not multiples of the vector width, 1-px-wide
+//! rects) share one code path with the oracle by construction.
+
+mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::OnceLock;
+
+use crate::color::ColorLut;
+#[cfg(target_arch = "x86_64")]
+use crate::features::HIST;
+
+/// A dirty/target rectangle in pixels: `(x0, y0, x1, y1)`, half-open.
+pub type Rect = (usize, usize, usize, usize);
+
+/// Instruction-set level a kernel call runs at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// The scalar byte loops — the oracle, available everywhere.
+    Scalar,
+    /// 128-bit x86 vectors; part of the x86_64 baseline.
+    Sse2,
+    /// 256-bit x86 vectors; runtime-detected.
+    Avx2,
+    /// 128-bit ARM vectors; part of the aarch64 baseline.
+    Neon,
+}
+
+impl Level {
+    /// Lowercase name, as accepted by the `UALS_SIMD` override and as
+    /// recorded in `BENCH_micro.json`'s `"isa"` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Sse2 => "sse2",
+            Level::Avx2 => "avx2",
+            Level::Neon => "neon",
+        }
+    }
+
+    /// Parse an override value (case-insensitive). Unknown values are an
+    /// error naming the accepted set.
+    pub fn parse(s: &str) -> Result<Level, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Level::Scalar),
+            "sse2" => Ok(Level::Sse2),
+            "avx2" => Ok(Level::Avx2),
+            "neon" => Ok(Level::Neon),
+            _ => Err(format!(
+                "invalid UALS_SIMD value {s:?}: expected one of scalar|sse2|avx2|neon"
+            )),
+        }
+    }
+
+    /// Can this level actually execute on the current host?
+    pub fn is_supported(self) -> bool {
+        match self {
+            Level::Scalar => true,
+            Level::Sse2 => cfg!(target_arch = "x86_64"),
+            Level::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Level::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// Every level the host can execute, scalar first (test matrices
+    /// iterate this to pin SIMD == scalar at each reachable ISA).
+    pub fn available() -> Vec<Level> {
+        [Level::Scalar, Level::Sse2, Level::Avx2, Level::Neon]
+            .into_iter()
+            .filter(|l| l.is_supported())
+            .collect()
+    }
+
+    /// The best level the host supports.
+    pub fn detect() -> Level {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                Level::Avx2
+            } else {
+                Level::Sse2
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            Level::Neon
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            Level::Scalar
+        }
+    }
+}
+
+/// Resolve the level from an optional `UALS_SIMD` override value:
+/// `None` detects the best supported level; `Some` must name a level the
+/// host supports. Split out of [`level`] so the policy is unit-testable
+/// without touching process environment.
+pub fn resolve(env_override: Option<&str>) -> Result<Level, String> {
+    match env_override {
+        None => Ok(Level::detect()),
+        Some(s) => {
+            let lvl = Level::parse(s)?;
+            if lvl.is_supported() {
+                Ok(lvl)
+            } else {
+                Err(format!(
+                    "UALS_SIMD={s} requested but this host does not support it \
+                     (available: {})",
+                    Level::available()
+                        .iter()
+                        .map(|l| l.name())
+                        .collect::<Vec<_>>()
+                        .join("|")
+                ))
+            }
+        }
+    }
+}
+
+/// The process-wide dispatch level: `UALS_SIMD` override if set (a bad
+/// value aborts with a clear message rather than silently running the
+/// wrong path — regressions must be bisectable to an ISA), otherwise the
+/// best detected level. Resolved once and cached.
+pub fn level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| match resolve(std::env::var("UALS_SIMD").ok().as_deref()) {
+        Ok(l) => l,
+        Err(e) => panic!("{e}"),
+    })
+}
+
+/// The per-pixel counting kernel over `rect` (half-open, row-major frame
+/// of `width` px): background gate + LUT classify + histogram bump.
+/// `pf` (`k*HIST`) and `in_color` (`k`) accumulate in place; returns the
+/// foreground-pixel count. Bit-identical to [`Level::Scalar`] at every
+/// level; panics if `level` is not supported on this host.
+#[allow(clippy::too_many_arguments)]
+pub fn count_rect(
+    level: Level,
+    lut: &ColorLut,
+    frame: &[u8],
+    bg: &[u8],
+    width: usize,
+    rect: Rect,
+    k: usize,
+    pf: &mut [u32],
+    in_color: &mut [u32],
+) -> u32 {
+    assert!(level.is_supported(), "SIMD level {} unsupported on this host", level.name());
+    match level {
+        Level::Scalar => scalar::count_rect(lut, frame, bg, width, rect, k, pf, in_color),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => x86::count_rect_sse2(lut, frame, bg, width, rect, k, pf, in_color),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `is_supported` verified AVX2 via runtime detection.
+        Level::Avx2 => unsafe {
+            x86::count_rect_avx2(lut, frame, bg, width, rect, k, pf, in_color)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => neon::count_rect(lut, frame, bg, width, rect, k, pf, in_color),
+        _ => unreachable!("supported level must have a kernel"),
+    }
+}
+
+/// Quantize `src` into `dst` (cleared first); returns `false` — with
+/// `dst` content unspecified — as soon as any channel is not exactly
+/// representable as u8. Decision-identical to [`Level::Scalar`] at every
+/// level; panics if `level` is not supported on this host.
+pub fn quantize(level: Level, src: &[f32], dst: &mut Vec<u8>) -> bool {
+    assert!(level.is_supported(), "SIMD level {} unsupported on this host", level.name());
+    match level {
+        Level::Scalar => scalar::quantize(src, dst),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => x86::quantize_sse2(src, dst),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `is_supported` verified AVX2 via runtime detection.
+        Level::Avx2 => unsafe { x86::quantize_avx2(src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => neon::quantize(src, dst),
+        _ => unreachable!("supported level must have a kernel"),
+    }
+}
+
+/// Do two frames differ anywhere inside `rect`? The memcmp-grade tile
+/// test shared by the incremental feature engine's diff and the wire
+/// delta encoder's dirty-tile scan. Bit-identical to [`Level::Scalar`]
+/// at every level; panics if `level` is not supported on this host.
+pub fn rect_differs(level: Level, a: &[u8], b: &[u8], width: usize, rect: Rect) -> bool {
+    assert!(level.is_supported(), "SIMD level {} unsupported on this host", level.name());
+    match level {
+        Level::Scalar => scalar::rect_differs(a, b, width, rect),
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => x86::rect_differs_sse2(a, b, width, rect),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `is_supported` verified AVX2 via runtime detection.
+        Level::Avx2 => unsafe { x86::rect_differs_avx2(a, b, width, rect) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => neon::rect_differs(a, b, width, rect),
+        _ => unreachable!("supported level must have a kernel"),
+    }
+}
+
+/// Classify one surviving (foreground) pixel and bump the count vectors.
+/// The scalar kernel's branchless `for c in 0..k` bump and this set-bit
+/// iteration add exactly the same integers to the same slots — the mask
+/// only has bits below `k` set, and `(mask >> c) & 1` is 1 precisely for
+/// the bits iterated here. (Only the x86 kernels iterate survivor
+/// bitmasks; NEON has no movemask and re-runs the scalar kernel on any
+/// block with a foreground byte instead.)
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn classify_survivor(
+    lut: &ColorLut,
+    r: u8,
+    g: u8,
+    b: u8,
+    k: usize,
+    pf: &mut [u32],
+    in_color: &mut [u32],
+) {
+    let (mask, bin) = lut.classify(r, g, b);
+    let mut m = (mask as u32) & ((1u32 << k) - 1);
+    while m != 0 {
+        let c = m.trailing_zeros() as usize;
+        m &= m - 1;
+        in_color[c] += 1;
+        pf[c * HIST + bin as usize] += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_every_level_name() {
+        for (s, l) in [
+            ("scalar", Level::Scalar),
+            ("sse2", Level::Sse2),
+            ("avx2", Level::Avx2),
+            ("neon", Level::Neon),
+            ("SCALAR", Level::Scalar),
+            ("Avx2", Level::Avx2),
+        ] {
+            assert_eq!(Level::parse(s), Ok(l), "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_values_with_a_clear_error() {
+        for bad in ["", "sse", "avx512", "fast", "1"] {
+            let err = Level::parse(bad).unwrap_err();
+            assert!(err.contains("UALS_SIMD"), "error names the env var: {err}");
+            assert!(err.contains("scalar|sse2|avx2|neon"), "error names the options: {err}");
+        }
+    }
+
+    #[test]
+    fn resolve_without_override_detects() {
+        assert_eq!(resolve(None), Ok(Level::detect()));
+        assert!(Level::detect().is_supported());
+    }
+
+    #[test]
+    fn resolve_scalar_override_works_everywhere() {
+        assert_eq!(resolve(Some("scalar")), Ok(Level::Scalar));
+    }
+
+    #[test]
+    fn resolve_rejects_bad_override() {
+        assert!(resolve(Some("bogus")).is_err());
+    }
+
+    #[test]
+    fn resolve_rejects_unsupported_level() {
+        // At least one of sse2/neon is foreign on any single host.
+        let foreign = if cfg!(target_arch = "x86_64") { "neon" } else { "sse2" };
+        let err = resolve(Some(foreign)).unwrap_err();
+        assert!(err.contains("not support"), "{err}");
+        assert!(err.contains("available:"), "{err}");
+    }
+
+    #[test]
+    fn available_starts_with_scalar_and_is_supported() {
+        let levels = Level::available();
+        assert_eq!(levels[0], Level::Scalar);
+        assert!(levels.contains(&Level::detect()));
+        for l in levels {
+            assert!(l.is_supported());
+        }
+    }
+
+    #[test]
+    fn cached_level_is_supported() {
+        // Whatever the process resolved (incl. a UALS_SIMD override set
+        // by the harness), it must be executable here.
+        assert!(level().is_supported());
+        assert_eq!(level(), level(), "resolution is cached and stable");
+    }
+}

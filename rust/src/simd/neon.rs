@@ -1,0 +1,171 @@
+//! aarch64 NEON kernels. NEON is part of the aarch64 baseline, so every
+//! wrapper here is a safe fn.
+//!
+//! The counting kernel uses the same flat-byte trick as the x86 path
+//! (`max(d0,d1,d2) > floor ⇔ ∃i: dᵢ > floor`, no RGB de-interleave),
+//! with one NEON-shaped difference: there is no `movemask`, so blocks
+//! are first screened with a horizontal max (`vmaxvq_u8`) — an
+//! all-background block, the overwhelmingly common case on redundant
+//! streams, is rejected in a handful of instructions — and a block
+//! containing any foreground byte falls through to the scalar oracle
+//! for exactly those 16 pixels.
+
+use core::arch::aarch64::*;
+
+use super::{scalar, Rect};
+use crate::color::ColorLut;
+
+/// NEON counting kernel: 16 pixels (48 bytes) screened per iteration.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn count_rect(
+    lut: &ColorLut,
+    frame: &[u8],
+    bg: &[u8],
+    width: usize,
+    rect: Rect,
+    k: usize,
+    pf: &mut [u32],
+    in_color: &mut [u32],
+) -> u32 {
+    let floor = lut.fg_floor();
+    if floor < 0 {
+        // Every pixel is foreground: nothing for the gate to reject.
+        return scalar::count_rect(lut, frame, bg, width, rect, k, pf, in_color);
+    }
+    let floor_u8 = floor.min(255) as u8;
+    let (x0, y0, x1, y1) = rect;
+    let n = x1.saturating_sub(x0);
+    let mut fg = 0u32;
+    // SAFETY: NEON is part of the aarch64 baseline; loads read 48 bytes
+    // from `off`, in bounds by the `px + 16 <= n` loop condition.
+    unsafe {
+        let floor_v = vdupq_n_u8(floor_u8);
+        for y in y0..y1 {
+            let base = 3 * (y * width + x0);
+            let mut px = 0usize;
+            while px + 16 <= n {
+                let off = base + 3 * px;
+                let mut any = vdupq_n_u8(0);
+                for v in 0..3 {
+                    let f = vld1q_u8(frame.as_ptr().add(off + 16 * v));
+                    let b = vld1q_u8(bg.as_ptr().add(off + 16 * v));
+                    any = vorrq_u8(any, vcgtq_u8(vabdq_u8(f, b), floor_v));
+                }
+                if vmaxvq_u8(any) != 0 {
+                    // Some byte in the block exceeds the floor: classify
+                    // these 16 pixels through the scalar oracle.
+                    fg += scalar::count_rect(
+                        lut,
+                        frame,
+                        bg,
+                        width,
+                        (x0 + px, y, x0 + px + 16, y + 1),
+                        k,
+                        pf,
+                        in_color,
+                    );
+                }
+                px += 16;
+            }
+            if px < n {
+                fg += scalar::count_rect(
+                    lut,
+                    frame,
+                    bg,
+                    width,
+                    (x0 + px, y, x1, y + 1),
+                    k,
+                    pf,
+                    in_color,
+                );
+            }
+        }
+    }
+    fg
+}
+
+/// NEON exact-u8 quantizer: 16 f32 lanes per iteration. `vcvtq_s32_f32`
+/// truncates toward zero (NaN → 0, saturating), so a lane passes iff
+/// the convert round-trips exactly and the integer is in `0..=255` —
+/// the scalar `q as f32 == x` accept test.
+pub(super) fn quantize(src: &[f32], dst: &mut Vec<u8>) -> bool {
+    let n = src.len();
+    dst.clear();
+    dst.resize(n, 0);
+    let mut i = 0usize;
+    // SAFETY: NEON is part of the aarch64 baseline; loads read
+    // `src[i..i+16]`, the store writes `dst[i..i+16]`, in bounds by the
+    // `i + 16 <= n` loop condition.
+    unsafe {
+        let zero = vdupq_n_s32(0);
+        let lim = vdupq_n_s32(255);
+        macro_rules! cvt_ok {
+            ($x:expr) => {{
+                let t = vcvtq_s32_f32($x);
+                let exact = vceqq_f32(vcvtq_f32_s32(t), $x);
+                let range = vandq_u32(vcgeq_s32(t, zero), vcleq_s32(t, lim));
+                (t, vandq_u32(exact, range))
+            }};
+        }
+        while i + 16 <= n {
+            let x0 = vld1q_f32(src.as_ptr().add(i));
+            let x1 = vld1q_f32(src.as_ptr().add(i + 4));
+            let x2 = vld1q_f32(src.as_ptr().add(i + 8));
+            let x3 = vld1q_f32(src.as_ptr().add(i + 12));
+            let (t0, ok0) = cvt_ok!(x0);
+            let (t1, ok1) = cvt_ok!(x1);
+            let (t2, ok2) = cvt_ok!(x2);
+            let (t3, ok3) = cvt_ok!(x3);
+            let all = vandq_u32(vandq_u32(ok0, ok1), vandq_u32(ok2, ok3));
+            if vminvq_u32(all) != u32::MAX {
+                return false;
+            }
+            // Values are proven 0..=255: plain narrowing keeps the low
+            // byte, which IS the value.
+            let s16a = vcombine_s16(vmovn_s32(t0), vmovn_s32(t1));
+            let s16b = vcombine_s16(vmovn_s32(t2), vmovn_s32(t3));
+            let p8 = vcombine_u8(
+                vreinterpret_u8_s8(vmovn_s16(s16a)),
+                vreinterpret_u8_s8(vmovn_s16(s16b)),
+            );
+            vst1q_u8(dst.as_mut_ptr().add(i), p8);
+            i += 16;
+        }
+    }
+    for j in i..n {
+        let x = src[j];
+        let q = x as u8; // saturating cast; NaN → 0
+        if q as f32 != x {
+            return false;
+        }
+        dst[j] = q;
+    }
+    true
+}
+
+/// NEON rect compare: 16-byte XOR + horizontal-max blocks per row,
+/// byte-slice tail.
+pub(super) fn rect_differs(a: &[u8], b: &[u8], width: usize, rect: Rect) -> bool {
+    let (x0, y0, x1, y1) = rect;
+    let len = 3 * x1.saturating_sub(x0);
+    // SAFETY: NEON is part of the aarch64 baseline; loads stay inside
+    // `a[s..s+len]` / `b[s..s+len]` by the `off + 16 <= len` condition.
+    unsafe {
+        for y in y0..y1 {
+            let s = 3 * (y * width + x0);
+            let mut off = 0usize;
+            while off + 16 <= len {
+                let va = vld1q_u8(a.as_ptr().add(s + off));
+                let vb = vld1q_u8(b.as_ptr().add(s + off));
+                if vmaxvq_u8(veorq_u8(va, vb)) != 0 {
+                    return true;
+                }
+                off += 16;
+            }
+            if a[s + off..s + len] != b[s + off..s + len] {
+                return true;
+            }
+        }
+    }
+    false
+}

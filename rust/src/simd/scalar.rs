@@ -1,0 +1,81 @@
+//! The scalar byte loops — the bit-level oracle every SIMD kernel is
+//! property-pinned against (`rust/tests/simd.rs`), and the dispatch
+//! target for [`super::Level::Scalar`] / architectures without a vector
+//! path. The bodies are the pre-SIMD hot loops, kept verbatim.
+
+use super::Rect;
+use crate::color::ColorLut;
+use crate::features::HIST;
+
+/// Background gate + table classify + branchless histogram bump over
+/// `rect` (half-open, in a row-major frame of `width` px per row).
+/// `pf` (`k*HIST`) and `in_color` (`k`) accumulate in place; returns the
+/// foreground-pixel count. u32 counts are exact for any frame below
+/// 2³² px (and the final f32 conversion is only exact below 2²⁴ anyway).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn count_rect(
+    lut: &ColorLut,
+    frame: &[u8],
+    bg: &[u8],
+    width: usize,
+    rect: Rect,
+    k: usize,
+    pf: &mut [u32],
+    in_color: &mut [u32],
+) -> u32 {
+    let (x0, y0, x1, y1) = rect;
+    let mut fg = 0u32;
+    for y in y0..y1 {
+        let row = y * width;
+        for x in x0..x1 {
+            let i = 3 * (row + x);
+            let (r, g, b) = (frame[i], frame[i + 1], frame[i + 2]);
+            let diff = r
+                .abs_diff(bg[i])
+                .max(g.abs_diff(bg[i + 1]))
+                .max(b.abs_diff(bg[i + 2]));
+            if !lut.is_foreground(diff) {
+                continue;
+            }
+            fg += 1;
+            let (mask, bin) = lut.classify(r, g, b);
+            // Branchless bump: each color adds 0 or 1 from its mask bit.
+            for c in 0..k {
+                let on = ((mask >> c) & 1) as u32;
+                in_color[c] += on;
+                pf[c * HIST + bin as usize] += on;
+            }
+        }
+    }
+    fg
+}
+
+/// Quantize `src` into `dst`; returns false (dst content unspecified) as
+/// soon as a channel is not exactly representable as u8.
+pub(super) fn quantize(src: &[f32], dst: &mut Vec<u8>) -> bool {
+    dst.clear();
+    dst.reserve(src.len());
+    for &x in src {
+        let q = x as u8; // saturating cast; NaN → 0
+        if q as f32 != x {
+            return false;
+        }
+        dst.push(q);
+    }
+    true
+}
+
+/// Row-slice compares over the rect, so the inner loop is memcmp-grade —
+/// the pre-SIMD tile-diff strategy of the incremental feature engine and
+/// the wire delta encoder.
+pub(super) fn rect_differs(a: &[u8], b: &[u8], width: usize, rect: Rect) -> bool {
+    let (x0, y0, x1, y1) = rect;
+    for y in y0..y1 {
+        let s = 3 * (y * width + x0);
+        let e = 3 * (y * width + x1);
+        if a[s..e] != b[s..e] {
+            return true;
+        }
+    }
+    false
+}

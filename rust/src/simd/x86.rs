@@ -1,0 +1,313 @@
+//! x86_64 kernels: SSE2 (always available — it is part of the x86_64
+//! baseline, so the wrappers are safe fns) and AVX2 (`unsafe fn`s gated
+//! by runtime detection in the dispatcher).
+//!
+//! The counting kernel's trick: the foreground gate never needs the
+//! per-pixel channel *maximum*, only whether it exceeds the floor — and
+//! `max(d0,d1,d2) > floor ⇔ ∃i: dᵢ > floor`, which is a flat byte-wise
+//! test with no RGB de-interleave. Each 16/32-pixel block produces a
+//! foreground bitmask (one bit per *byte*); surviving pixels — usually
+//! few — are classified scalar via the shared LUT, which keeps the
+//! result bit-identical to the oracle.
+
+use core::arch::x86_64::*;
+
+use super::{classify_survivor, scalar, Rect};
+use crate::color::ColorLut;
+
+/// SSE2 counting kernel: 16 pixels (48 bytes) per iteration.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn count_rect_sse2(
+    lut: &ColorLut,
+    frame: &[u8],
+    bg: &[u8],
+    width: usize,
+    rect: Rect,
+    k: usize,
+    pf: &mut [u32],
+    in_color: &mut [u32],
+) -> u32 {
+    let floor = lut.fg_floor();
+    if floor < 0 {
+        // Every pixel is foreground: the vector gate can reject nothing,
+        // so the scalar kernel (which skips the gate work) is optimal.
+        return scalar::count_rect(lut, frame, bg, width, rect, k, pf, in_color);
+    }
+    let floor_u8 = floor.min(255) as u8;
+    let (x0, y0, x1, y1) = rect;
+    let n = x1.saturating_sub(x0);
+    let mut fg = 0u32;
+    // SAFETY: SSE2 is part of the x86_64 baseline; all loads are
+    // unaligned (`loadu`) and stay in bounds: `off + 48 <= 3*(row+x1)
+    // <= frame.len()` by the `px + 16 <= n` loop condition.
+    unsafe {
+        let floor_v = _mm_set1_epi8(floor_u8 as i8);
+        let zero = _mm_setzero_si128();
+        for y in y0..y1 {
+            let base = 3 * (y * width + x0);
+            let mut px = 0usize;
+            while px + 16 <= n {
+                let off = base + 3 * px;
+                // 48 contiguous bytes → one fg bit per byte; pixel p is
+                // foreground iff any of bits {3p, 3p+1, 3p+2} is set.
+                let mut m = 0u64;
+                for v in 0..3 {
+                    let f = _mm_loadu_si128(frame.as_ptr().add(off + 16 * v) as *const __m128i);
+                    let b = _mm_loadu_si128(bg.as_ptr().add(off + 16 * v) as *const __m128i);
+                    let d = _mm_or_si128(_mm_subs_epu8(f, b), _mm_subs_epu8(b, f));
+                    let gated = _mm_subs_epu8(d, floor_v);
+                    let is_bg = _mm_cmpeq_epi8(gated, zero);
+                    let fg_bits = !(_mm_movemask_epi8(is_bg) as u32) & 0xFFFF;
+                    m |= (fg_bits as u64) << (16 * v);
+                }
+                while m != 0 {
+                    let p = (m.trailing_zeros() / 3) as usize;
+                    m &= !(0b111u64 << (3 * p));
+                    let i = off + 3 * p;
+                    fg += 1;
+                    classify_survivor(lut, frame[i], frame[i + 1], frame[i + 2], k, pf, in_color);
+                }
+                px += 16;
+            }
+            // Scalar tail for the ragged right edge of the rect row.
+            if px < n {
+                fg += scalar::count_rect(
+                    lut,
+                    frame,
+                    bg,
+                    width,
+                    (x0 + px, y, x1, y + 1),
+                    k,
+                    pf,
+                    in_color,
+                );
+            }
+        }
+    }
+    fg
+}
+
+/// AVX2 counting kernel: 32 pixels (96 bytes) per iteration, SSE2 +
+/// scalar on the per-row tail.
+///
+/// # Safety
+///
+/// The host must support AVX2 (`is_x86_feature_detected!("avx2")`).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn count_rect_avx2(
+    lut: &ColorLut,
+    frame: &[u8],
+    bg: &[u8],
+    width: usize,
+    rect: Rect,
+    k: usize,
+    pf: &mut [u32],
+    in_color: &mut [u32],
+) -> u32 {
+    let floor = lut.fg_floor();
+    if floor < 0 {
+        return scalar::count_rect(lut, frame, bg, width, rect, k, pf, in_color);
+    }
+    let floor_u8 = floor.min(255) as u8;
+    let (x0, y0, x1, y1) = rect;
+    let n = x1.saturating_sub(x0);
+    let mut fg = 0u32;
+    let floor_v = _mm256_set1_epi8(floor_u8 as i8);
+    let zero = _mm256_setzero_si256();
+    for y in y0..y1 {
+        let base = 3 * (y * width + x0);
+        let mut px = 0usize;
+        while px + 32 <= n {
+            let off = base + 3 * px;
+            let mut m = 0u128;
+            for v in 0..3 {
+                let f = _mm256_loadu_si256(frame.as_ptr().add(off + 32 * v) as *const __m256i);
+                let b = _mm256_loadu_si256(bg.as_ptr().add(off + 32 * v) as *const __m256i);
+                let d = _mm256_or_si256(_mm256_subs_epu8(f, b), _mm256_subs_epu8(b, f));
+                let gated = _mm256_subs_epu8(d, floor_v);
+                let is_bg = _mm256_cmpeq_epi8(gated, zero);
+                let fg_bits = !(_mm256_movemask_epi8(is_bg) as u32);
+                m |= (fg_bits as u128) << (32 * v);
+            }
+            while m != 0 {
+                let p = (m.trailing_zeros() / 3) as usize;
+                m &= !(0b111u128 << (3 * p));
+                let i = off + 3 * p;
+                fg += 1;
+                classify_survivor(lut, frame[i], frame[i + 1], frame[i + 2], k, pf, in_color);
+            }
+            px += 32;
+        }
+        if px < n {
+            fg += count_rect_sse2(lut, frame, bg, width, (x0 + px, y, x1, y + 1), k, pf, in_color);
+        }
+    }
+    fg
+}
+
+/// SSE2 exact-u8 quantizer: 16 f32 lanes per iteration. A lane passes
+/// iff truncation to i32 round-trips (`cvtepi32_ps(i) == x`, which NaN
+/// and fractions fail) and the integer is in `0..=255` — exactly the
+/// scalar `q as f32 == x` accept test.
+pub(super) fn quantize_sse2(src: &[f32], dst: &mut Vec<u8>) -> bool {
+    let n = src.len();
+    dst.clear();
+    dst.resize(n, 0);
+    let mut i = 0usize;
+    // SAFETY: SSE2 is part of the x86_64 baseline; unaligned loads read
+    // `src[i..i+16]` and the store writes `dst[i..i+16]`, both in bounds
+    // by the `i + 16 <= n` loop condition.
+    unsafe {
+        let neg1 = _mm_set1_epi32(-1);
+        let lim = _mm_set1_epi32(256);
+        while i + 16 <= n {
+            let x0 = _mm_loadu_ps(src.as_ptr().add(i));
+            let x1 = _mm_loadu_ps(src.as_ptr().add(i + 4));
+            let x2 = _mm_loadu_ps(src.as_ptr().add(i + 8));
+            let x3 = _mm_loadu_ps(src.as_ptr().add(i + 12));
+            let t0 = _mm_cvttps_epi32(x0);
+            let t1 = _mm_cvttps_epi32(x1);
+            let t2 = _mm_cvttps_epi32(x2);
+            let t3 = _mm_cvttps_epi32(x3);
+            let ok = |t: __m128i, x: __m128| -> __m128i {
+                let exact = _mm_castps_si128(_mm_cmpeq_ps(_mm_cvtepi32_ps(t), x));
+                let range = _mm_and_si128(_mm_cmpgt_epi32(t, neg1), _mm_cmplt_epi32(t, lim));
+                _mm_and_si128(exact, range)
+            };
+            let all = _mm_and_si128(
+                _mm_and_si128(ok(t0, x0), ok(t1, x1)),
+                _mm_and_si128(ok(t2, x2), ok(t3, x3)),
+            );
+            if _mm_movemask_ps(_mm_castsi128_ps(all)) != 0xF {
+                return false;
+            }
+            let p16a = _mm_packs_epi32(t0, t1);
+            let p16b = _mm_packs_epi32(t2, t3);
+            let p8 = _mm_packus_epi16(p16a, p16b);
+            _mm_storeu_si128(dst.as_mut_ptr().add(i) as *mut __m128i, p8);
+            i += 16;
+        }
+    }
+    for j in i..n {
+        let x = src[j];
+        let q = x as u8; // saturating cast; NaN → 0
+        if q as f32 != x {
+            return false;
+        }
+        dst[j] = q;
+    }
+    true
+}
+
+/// AVX2 exact-u8 quantizer: 32 f32 lanes per iteration (the `packs` /
+/// `packus` lane interleave is undone with `permute4x64(0b11011000)`).
+///
+/// # Safety
+///
+/// The host must support AVX2 (`is_x86_feature_detected!("avx2")`).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn quantize_avx2(src: &[f32], dst: &mut Vec<u8>) -> bool {
+    let n = src.len();
+    dst.clear();
+    dst.resize(n, 0);
+    let mut i = 0usize;
+    let neg1 = _mm256_set1_epi32(-1);
+    let lim = _mm256_set1_epi32(256);
+    while i + 32 <= n {
+        let x0 = _mm256_loadu_ps(src.as_ptr().add(i));
+        let x1 = _mm256_loadu_ps(src.as_ptr().add(i + 8));
+        let x2 = _mm256_loadu_ps(src.as_ptr().add(i + 16));
+        let x3 = _mm256_loadu_ps(src.as_ptr().add(i + 24));
+        let t0 = _mm256_cvttps_epi32(x0);
+        let t1 = _mm256_cvttps_epi32(x1);
+        let t2 = _mm256_cvttps_epi32(x2);
+        let t3 = _mm256_cvttps_epi32(x3);
+        // A macro, not a closure: on Rust 1.85 closures do not inherit
+        // the enclosing fn's #[target_feature], which would block
+        // inlining of the AVX2 intrinsics.
+        macro_rules! lane_ok {
+            ($t:expr, $x:expr) => {{
+                let back = _mm256_cvtepi32_ps($t);
+                let exact = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_EQ_OQ>(back, $x));
+                let ge0 = _mm256_cmpgt_epi32($t, neg1);
+                let le255 = _mm256_cmpgt_epi32(lim, $t);
+                _mm256_and_si256(exact, _mm256_and_si256(ge0, le255))
+            }};
+        }
+        let all = _mm256_and_si256(
+            _mm256_and_si256(lane_ok!(t0, x0), lane_ok!(t1, x1)),
+            _mm256_and_si256(lane_ok!(t2, x2), lane_ok!(t3, x3)),
+        );
+        if _mm256_movemask_ps(_mm256_castsi256_ps(all)) != 0xFF {
+            return false;
+        }
+        let p16a = _mm256_permute4x64_epi64::<0b11011000>(_mm256_packs_epi32(t0, t1));
+        let p16b = _mm256_permute4x64_epi64::<0b11011000>(_mm256_packs_epi32(t2, t3));
+        let p8 = _mm256_permute4x64_epi64::<0b11011000>(_mm256_packus_epi16(p16a, p16b));
+        _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, p8);
+        i += 32;
+    }
+    for j in i..n {
+        let x = src[j];
+        let q = x as u8; // saturating cast; NaN → 0
+        if q as f32 != x {
+            return false;
+        }
+        dst[j] = q;
+    }
+    true
+}
+
+/// SSE2 rect compare: 16-byte equality blocks per row, byte-slice tail.
+pub(super) fn rect_differs_sse2(a: &[u8], b: &[u8], width: usize, rect: Rect) -> bool {
+    let (x0, y0, x1, y1) = rect;
+    let len = 3 * x1.saturating_sub(x0);
+    // SAFETY: SSE2 is part of the x86_64 baseline; loads stay inside
+    // `a[s..s+len]` / `b[s..s+len]` by the `off + 16 <= len` condition.
+    unsafe {
+        for y in y0..y1 {
+            let s = 3 * (y * width + x0);
+            let mut off = 0usize;
+            while off + 16 <= len {
+                let va = _mm_loadu_si128(a.as_ptr().add(s + off) as *const __m128i);
+                let vb = _mm_loadu_si128(b.as_ptr().add(s + off) as *const __m128i);
+                if _mm_movemask_epi8(_mm_cmpeq_epi8(va, vb)) != 0xFFFF {
+                    return true;
+                }
+                off += 16;
+            }
+            if a[s + off..s + len] != b[s + off..s + len] {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// AVX2 rect compare: 32-byte equality blocks per row, byte-slice tail.
+///
+/// # Safety
+///
+/// The host must support AVX2 (`is_x86_feature_detected!("avx2")`).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn rect_differs_avx2(a: &[u8], b: &[u8], width: usize, rect: Rect) -> bool {
+    let (x0, y0, x1, y1) = rect;
+    let len = 3 * x1.saturating_sub(x0);
+    for y in y0..y1 {
+        let s = 3 * (y * width + x0);
+        let mut off = 0usize;
+        while off + 32 <= len {
+            let va = _mm256_loadu_si256(a.as_ptr().add(s + off) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(s + off) as *const __m256i);
+            if _mm256_movemask_epi8(_mm256_cmpeq_epi8(va, vb)) != -1 {
+                return true;
+            }
+            off += 32;
+        }
+        if a[s + off..s + len] != b[s + off..s + len] {
+            return true;
+        }
+    }
+    false
+}

@@ -129,6 +129,7 @@ impl Bench {
         let mut doc = Value::object();
         doc.set("schema", Value::String("uals-microbench-v1".into()))
             .set("unit", Value::String("ns_per_op".into()))
+            .set("isa", Value::String(crate::simd::level().name().into()))
             .set("benches", Value::Array(benches));
         crate::util::json::write_file(path, &doc)
     }
@@ -182,6 +183,12 @@ mod tests {
         b.write_json(&p).unwrap();
         let v = crate::util::json::read_file(&p).unwrap();
         assert_eq!(v.get("schema").unwrap().as_str().unwrap(), "uals-microbench-v1");
+        // The resolved ISA rides along so bench_delta can flag cross-ISA
+        // comparisons.
+        assert_eq!(
+            v.get("isa").unwrap().as_str().unwrap(),
+            crate::simd::level().name()
+        );
         let benches = v.get("benches").unwrap().as_array().unwrap();
         assert_eq!(benches.len(), 2);
         assert_eq!(benches[0].get("name").unwrap().as_str().unwrap(), "fast_thing");

@@ -247,18 +247,14 @@ impl WireEncoder {
         let tiles_x = self.width.div_ceil(tile);
         let tiles_y = self.height.div_ceil(tile);
         let n_tiles = tiles_x * tiles_y;
-        // Tile diff: row-slice compares so the inner loop is memcmp-grade
-        // (the same strategy as the incremental feature engine's).
+        // Tile diff through the SIMD rect compare (shared with the
+        // incremental feature engine, so the two scans cannot drift).
+        let level = crate::simd::level();
         self.dirty.clear();
         for ti in 0..n_tiles {
-            let (x0, y0, x1, y1) = self.tile_rect(ti, tile, tiles_x);
-            for y in y0..y1 {
-                let a = 3 * (y * self.width + x0);
-                let b = 3 * (y * self.width + x1);
-                if self.cur[a..b] != self.prev[a..b] {
-                    self.dirty.push(ti as u32);
-                    break;
-                }
+            let rect = self.tile_rect(ti, tile, tiles_x);
+            if crate::simd::rect_differs(level, &self.cur, &self.prev, self.width, rect) {
+                self.dirty.push(ti as u32);
             }
         }
         if (self.dirty.len() as f64) > max_dirty_frac * n_tiles as f64 {

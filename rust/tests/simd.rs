@@ -1,0 +1,282 @@
+//! Property tests pinning every SIMD kernel **bit-identical** to the
+//! scalar oracle, at every ISA [`Level`] available on the host.
+//!
+//! `Level::available()` always starts with `Scalar`; on x86_64 it adds
+//! `Sse2` (baseline) and, where detected, `Avx2`; on aarch64 it adds
+//! `Neon`. Each kernel is compared against the scalar result over
+//! randomized frames at deliberately awkward geometries — widths and
+//! rect extents that are not multiples of the vector width, 1-px-wide
+//! rects, empty rects — plus the degenerate contents (all-background,
+//! all-foreground) that exercise the gate's early-out structure.
+
+use uals::color::{ColorLut, HueRanges, NamedColor};
+use uals::features::{reference, HIST};
+use uals::simd::{self, Level};
+use uals::util::rng::Rng;
+
+fn random_frame(rng: &mut Rng, n_px: usize) -> Vec<u8> {
+    (0..n_px * 3).map(|_| rng.below(256) as u8).collect()
+}
+
+/// `base` with `n_muts` random pixels replaced — a sparse-foreground
+/// frame relative to `base` as background.
+fn mutate(rng: &mut Rng, base: &[u8], n_muts: usize) -> Vec<u8> {
+    let mut out = base.to_vec();
+    let n_px = base.len() / 3;
+    for _ in 0..n_muts {
+        let p = rng.range(0, n_px);
+        for c in 0..3 {
+            out[3 * p + c] = rng.below(256) as u8;
+        }
+    }
+    out
+}
+
+/// Assert `count_rect` agrees with the scalar oracle at every available
+/// level: foreground count, per-color histograms, and in-color counts.
+fn assert_count_rect_matches(
+    lut: &ColorLut,
+    frame: &[u8],
+    bg: &[u8],
+    width: usize,
+    rect: (usize, usize, usize, usize),
+    k: usize,
+) {
+    let mut want_pf = vec![0u32; k * HIST];
+    let mut want_ic = vec![0u32; k];
+    let want_fg =
+        simd::count_rect(Level::Scalar, lut, frame, bg, width, rect, k, &mut want_pf, &mut want_ic);
+    for level in Level::available() {
+        let mut pf = vec![0u32; k * HIST];
+        let mut ic = vec![0u32; k];
+        let fg = simd::count_rect(level, lut, frame, bg, width, rect, k, &mut pf, &mut ic);
+        assert_eq!(fg, want_fg, "{}: fg count, rect {rect:?} width {width}", level.name());
+        assert_eq!(pf, want_pf, "{}: pf histogram, rect {rect:?} width {width}", level.name());
+        assert_eq!(ic, want_ic, "{}: in_color, rect {rect:?} width {width}", level.name());
+    }
+}
+
+fn two_color_lut() -> ColorLut {
+    ColorLut::new(
+        &[NamedColor::Red.ranges(), NamedColor::Yellow.ranges()],
+        reference::FG_THRESHOLD,
+    )
+}
+
+#[test]
+fn count_rect_matches_scalar_at_awkward_geometries() {
+    let lut = two_color_lut();
+    let mut rng = Rng::new(0x51D0);
+    // Widths straddling the 16- and 32-pixel block sizes; heights small
+    // enough to keep the full sweep cheap.
+    for &(width, height) in &[(17usize, 9usize), (31, 7), (33, 5), (96, 12), (1, 40), (16, 16)] {
+        let bg = random_frame(&mut rng, width * height);
+        let frame = mutate(&mut rng, &bg, (width * height) / 6);
+        // Full frame, interior rect with odd extents, 1-px-wide column,
+        // 1-px-tall row, and an empty rect.
+        let rects = [
+            (0, 0, width, height),
+            (width / 3, height / 3, width, height),
+            (width.saturating_sub(1), 0, width, height),
+            (0, height / 2, width, height / 2 + 1),
+            (width / 2, height / 2, width / 2, height / 2),
+        ];
+        for rect in rects {
+            assert_count_rect_matches(&lut, &frame, &bg, width, rect, lut.num_colors());
+        }
+    }
+}
+
+#[test]
+fn count_rect_matches_scalar_on_degenerate_contents() {
+    let lut = two_color_lut();
+    let mut rng = Rng::new(0xDE6E);
+    let (width, height) = (33usize, 11usize);
+    let bg = random_frame(&mut rng, width * height);
+
+    // All-background: frame == bg, every block rejected by the gate.
+    assert_count_rect_matches(&lut, &bg, &bg, width, (0, 0, width, height), lut.num_colors());
+
+    // Dense foreground: an unrelated random frame.
+    let noise = random_frame(&mut rng, width * height);
+    assert_count_rect_matches(&lut, &noise, &bg, width, (0, 0, width, height), lut.num_colors());
+
+    // All-foreground via a negative threshold (fg_floor = -1): the gate
+    // cannot reject anything, which the vector paths special-case.
+    let lut_all = ColorLut::new(&[NamedColor::Red.ranges()], -3.0);
+    assert_count_rect_matches(
+        &lut_all,
+        &bg,
+        &bg,
+        width,
+        (0, 0, width, height),
+        lut_all.num_colors(),
+    );
+
+    // Threshold 0: any nonzero channel diff is foreground — exercises
+    // the floor_u8 = 0 saturating-subtract edge.
+    let lut_zero = ColorLut::new(&[NamedColor::Yellow.ranges()], 0.0);
+    let frame = mutate(&mut rng, &bg, 40);
+    assert_count_rect_matches(
+        &lut_zero,
+        &frame,
+        &bg,
+        width,
+        (0, 0, width, height),
+        lut_zero.num_colors(),
+    );
+}
+
+#[test]
+fn count_rect_matches_scalar_at_max_colors() {
+    // k = 8 fills the bitmask (the `(1 << k) - 1` edge); overlapping
+    // ranges make several mask bits fire per pixel.
+    let ranges: Vec<HueRanges> = (0..8)
+        .map(|i| {
+            if i % 2 == 0 {
+                NamedColor::Red.ranges()
+            } else {
+                NamedColor::Yellow.ranges()
+            }
+        })
+        .collect();
+    let lut = ColorLut::new(&ranges, 10.0);
+    let mut rng = Rng::new(0x8C);
+    let (width, height) = (31usize, 13usize);
+    let bg = random_frame(&mut rng, width * height);
+    let frame = mutate(&mut rng, &bg, 120);
+    assert_count_rect_matches(&lut, &frame, &bg, width, (0, 0, width, height), 8);
+}
+
+#[test]
+fn quantize_matches_scalar_decision_and_bytes() {
+    let mut rng = Rng::new(0x0AF32);
+    // Integer-valued sources at lengths straddling the 16- and 32-lane
+    // blocks (and the empty source).
+    for &n in &[0usize, 1, 15, 16, 17, 31, 32, 33, 100] {
+        let src: Vec<f32> = (0..n).map(|_| rng.below(256) as f32).collect();
+        let mut want = Vec::new();
+        assert!(simd::quantize(Level::Scalar, &src, &mut want), "len {n}");
+        for level in Level::available() {
+            let mut got = Vec::new();
+            assert!(simd::quantize(level, &src, &mut got), "{}: len {n}", level.name());
+            assert_eq!(got, want, "{}: len {n}", level.name());
+        }
+    }
+}
+
+#[test]
+fn quantize_rejects_exactly_what_scalar_rejects() {
+    // Poison values at the head, inside a vector block, and in the
+    // scalar tail; the decision (not the dst bytes — unspecified on
+    // reject) must match the oracle everywhere.
+    let poisons =
+        [0.5f32, 17.25, -0.25, f32::NAN, f32::INFINITY, -1.0, 256.0, 300.0, -2147483648.0];
+    let mut rng = Rng::new(0xBAD);
+    for &poison in &poisons {
+        for &(n, at) in &[(40usize, 0usize), (40, 20), (40, 39), (17, 16), (33, 32)] {
+            let mut src: Vec<f32> = (0..n).map(|_| rng.below(256) as f32).collect();
+            src[at] = poison;
+            let want = simd::quantize(Level::Scalar, &src, &mut Vec::new());
+            for level in Level::available() {
+                let got = simd::quantize(level, &src, &mut Vec::new());
+                assert_eq!(got, want, "{}: poison {poison} at {at}/{n}", level.name());
+            }
+        }
+    }
+    // Boundary values that must be ACCEPTED: 0.0, -0.0 (== 0.0, q = 0),
+    // and 255.0.
+    let src = [0.0f32, -0.0, 255.0, 1.0];
+    let mut want = Vec::new();
+    assert!(simd::quantize(Level::Scalar, &src, &mut want));
+    assert_eq!(want, vec![0u8, 0, 255, 1]);
+    for level in Level::available() {
+        let mut got = Vec::new();
+        assert!(simd::quantize(level, &src, &mut got), "{}", level.name());
+        assert_eq!(got, want, "{}", level.name());
+    }
+}
+
+#[test]
+fn rect_differs_matches_scalar_everywhere() {
+    let mut rng = Rng::new(0xD1FF);
+    for &(width, height) in &[(96usize, 96usize), (17, 9), (33, 5), (1, 20)] {
+        let a = random_frame(&mut rng, width * height);
+
+        // Identical frames: no rect may report a difference.
+        let tile = 16usize;
+        let tiles_x = width.div_ceil(tile);
+        let tiles_y = height.div_ceil(tile);
+        for ti in 0..tiles_x * tiles_y {
+            let (tx, ty) = (ti % tiles_x, ti / tiles_x);
+            let rect = (
+                tx * tile,
+                ty * tile,
+                (tx * tile + tile).min(width),
+                (ty * tile + tile).min(height),
+            );
+            for level in Level::available() {
+                assert!(
+                    !simd::rect_differs(level, &a, &a, width, rect),
+                    "{}: equal frames, rect {rect:?}",
+                    level.name()
+                );
+            }
+        }
+
+        // Single-byte diffs at positions chosen to land in a vector
+        // block, in a row tail, and at the very last byte of the frame.
+        for _ in 0..30 {
+            let mut b = a.clone();
+            let at = rng.range(0, b.len());
+            b[at] ^= 0x40;
+            for ti in 0..tiles_x * tiles_y {
+                let (tx, ty) = (ti % tiles_x, ti / tiles_x);
+                let rect = (
+                    tx * tile,
+                    ty * tile,
+                    (tx * tile + tile).min(width),
+                    (ty * tile + tile).min(height),
+                );
+                let want = simd::rect_differs(Level::Scalar, &a, &b, width, rect);
+                for level in Level::available() {
+                    assert_eq!(
+                        simd::rect_differs(level, &a, &b, width, rect),
+                        want,
+                        "{}: diff at byte {at}, rect {rect:?} width {width}",
+                        level.name()
+                    );
+                }
+            }
+        }
+
+        // Empty rect never differs.
+        for level in Level::available() {
+            assert!(!simd::rect_differs(level, &a, &a, width, (3, 2, 3, 2)), "{}", level.name());
+        }
+    }
+}
+
+#[test]
+fn dispatched_fast_path_still_matches_reference_oracle() {
+    // End to end through the cached process-wide level: the fused fast
+    // path (quantize + count_rect at `simd::level()`) must stay
+    // bit-identical to the float reference.
+    let ranges = [NamedColor::Red.ranges(), NamedColor::Yellow.ranges()];
+    let lut = ColorLut::new(&ranges, reference::FG_THRESHOLD);
+    let mut rng = Rng::new(0xE2E);
+    for _ in 0..20 {
+        let n_px = 33 * 11;
+        let bg: Vec<f32> = (0..n_px * 3).map(|_| rng.below(256) as f32).collect();
+        let mut rgb = bg.clone();
+        for _ in 0..rng.range(0, 150) {
+            let p = rng.range(0, n_px);
+            for c in 0..3 {
+                rgb[3 * p + c] = rng.below(256) as f32;
+            }
+        }
+        let fast = uals::features::compute_features_fast(&lut, &rgb, &bg);
+        let oracle = reference::compute_features(&rgb, &bg, &ranges, reference::FG_THRESHOLD);
+        assert_eq!(fast, oracle);
+    }
+}

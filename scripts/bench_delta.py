@@ -29,22 +29,27 @@ import sys
 
 
 def load(path):
-    """Read {bench name -> mean ns} from a microbench JSON file.
+    """Read ({bench name -> mean ns}, isa, note) from a microbench JSON file.
 
-    Returns ({}, note) on unreadable/empty input instead of raising.
+    `isa` is the top-level "isa" field (the SIMD level the run resolved,
+    see rust/src/simd) or None for pre-SIMD files that lack it. Returns
+    ({}, None, note) on unreadable/empty input instead of raising.
     """
     try:
         with open(path, "r", encoding="utf-8") as f:
             doc = json.load(f)
     except (OSError, ValueError) as e:
-        return {}, f"could not read {path}: {e}"
+        return {}, None, f"could not read {path}: {e}"
     rows = {}
     for b in doc.get("benches", []):
         name = b.get("name")
         mean = b.get("mean_ns")
         if name is not None and isinstance(mean, (int, float)):
             rows[name] = float(mean)
-    return rows, None
+    isa = doc.get("isa")
+    if not isinstance(isa, str):
+        isa = None
+    return rows, isa, None
 
 
 def fmt_ns(ns):
@@ -128,8 +133,8 @@ def main(argv=None):
     )
     args = ap.parse_args(argv)
 
-    baseline, base_note = load(args.baseline)
-    current, cur_note = load(args.current)
+    baseline, base_isa, base_note = load(args.baseline)
+    current, cur_isa, cur_note = load(args.current)
     mode = "advisory" if args.advisory else f"gating at {args.max_regress:g}%"
     print(f"### Microbench vs committed baseline ({mode})")
     print()
@@ -137,6 +142,18 @@ def main(argv=None):
         print(f"_bench_delta: {base_note}_")
     if cur_note:
         print(f"_bench_delta: {cur_note}_")
+    # Cross-ISA runs (e.g. an avx2 baseline against a neon runner) are
+    # not comparable row by row; warn loudly but leave gating to the
+    # regression threshold — the warning tells the reader why a delta
+    # column may be nonsense.
+    if base_isa and cur_isa and base_isa != cur_isa:
+        print(
+            f"⚠️ _bench_delta: ISA mismatch — baseline `{base_isa}` vs current "
+            f"`{cur_isa}`; cross-ISA deltas are not comparable. Refresh the "
+            "baseline on a matching runner._"
+        )
+    elif baseline and not base_isa:
+        print("_bench_delta: baseline has no `isa` field (pre-SIMD file)._")
     if not current:
         print("_bench_delta: no current bench rows — did `make bench` run?_")
         return 0 if args.advisory else 1

@@ -6,6 +6,8 @@ Run from the repo root with either runner:
     python3 -m pytest scripts/ -q
 """
 
+import contextlib
+import io
 import json
 import os
 import sys
@@ -17,17 +19,20 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import bench_delta  # noqa: E402
 
 
-def doc(rows):
-    return {
+def doc(rows, isa=None):
+    d = {
         "schema": "uals-microbench-v1",
         "unit": "ns_per_op",
         "benches": [{"name": n, "mean_ns": v} for n, v in rows.items()],
     }
+    if isa is not None:
+        d["isa"] = isa
+    return d
 
 
-def write_doc(path, rows):
+def write_doc(path, rows, isa=None):
     with open(path, "w", encoding="utf-8") as f:
-        json.dump(doc(rows), f)
+        json.dump(doc(rows, isa), f)
 
 
 class CompareTests(unittest.TestCase):
@@ -120,5 +125,70 @@ class MainExitCodeTests(unittest.TestCase):
         self.assertEqual(bench_delta.main(["--max-regress", "5", self.base, self.cur]), 0)
 
 
+class IsaFieldTests(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.base = os.path.join(self.dir.name, "base.json")
+        self.cur = os.path.join(self.dir.name, "cur.json")
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def run_main(self, argv):
+        """main() with captured stdout: returns (exit code, output)."""
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            code = bench_delta.main(argv)
+        return code, out.getvalue()
+
+    def test_load_reads_isa_field(self):
+        write_doc(self.cur, {"a": 1.0}, isa="avx2")
+        rows, isa, note = bench_delta.load(self.cur)
+        self.assertEqual(rows, {"a": 1.0})
+        self.assertEqual(isa, "avx2")
+        self.assertIsNone(note)
+
+    def test_load_missing_isa_is_none(self):
+        write_doc(self.cur, {"a": 1.0})
+        _, isa, note = bench_delta.load(self.cur)
+        self.assertIsNone(isa)
+        self.assertIsNone(note)
+
+    def test_isa_mismatch_warns_but_does_not_gate(self):
+        write_doc(self.base, {"a": 100.0}, isa="avx2")
+        write_doc(self.cur, {"a": 100.0}, isa="neon")
+        code, out = self.run_main([self.base, self.cur])
+        self.assertEqual(code, 0, "mismatch alone must not fail the gate")
+        self.assertIn("ISA mismatch", out)
+        self.assertIn("avx2", out)
+        self.assertIn("neon", out)
+
+    def test_matching_isa_is_silent(self):
+        write_doc(self.base, {"a": 100.0}, isa="avx2")
+        write_doc(self.cur, {"a": 100.0}, isa="avx2")
+        code, out = self.run_main([self.base, self.cur])
+        self.assertEqual(code, 0)
+        self.assertNotIn("ISA mismatch", out)
+
+    def test_baseline_without_isa_field_notes_but_passes(self):
+        # A pre-SIMD baseline (no isa field) against a current run that
+        # records one: noted, never a mismatch warning, never a failure.
+        write_doc(self.base, {"a": 100.0})
+        write_doc(self.cur, {"a": 100.0}, isa="sse2")
+        code, out = self.run_main([self.base, self.cur])
+        self.assertEqual(code, 0)
+        self.assertNotIn("ISA mismatch", out)
+        self.assertIn("no `isa` field", out)
+
+    def test_mismatch_plus_regression_still_fails(self):
+        # The warning must not mask a genuine gating failure.
+        write_doc(self.base, {"a": 100.0}, isa="avx2")
+        write_doc(self.cur, {"a": 500.0}, isa="scalar")
+        code, out = self.run_main([self.base, self.cur])
+        self.assertEqual(code, 1)
+        self.assertIn("ISA mismatch", out)
+
+
 if __name__ == "__main__":
     unittest.main()
+
