@@ -1,8 +1,9 @@
 //! Workload-scenario demo for the clock-abstracted streaming core: the
 //! same `ArrivalModel` plugins — bursty Poisson ingress and mid-run
-//! camera churn — run under the discrete-event clock (`run_sim_with`) and
-//! the wall clock (`run_realtime_with`, fast-forwarded), with metrics
-//! reported through the one shared sink either way.
+//! camera churn — run under the discrete-event clock and the wall clock
+//! (fast-forwarded), with metrics reported through the one shared sink
+//! either way. Every run goes through the unified `Pipeline::builder()`
+//! entry point: one config template, different deployment modes.
 //!
 //!     cargo run --release --example scenarios
 //!
@@ -16,16 +17,12 @@
 //! clocks (pinned by rust/tests/multiquery.rs).
 
 use anyhow::Result;
-use uals::backend::{BackendQuery, CostModel, Detector};
 use uals::color::NamedColor;
-use uals::config::{CostConfig, QueryConfig, ShedderConfig};
-use uals::features::Extractor;
-use uals::pipeline::realtime::{run_multi_realtime, run_realtime_with, RealtimeConfig};
+use uals::config::QueryConfig;
 use uals::pipeline::{
-    backgrounds_of, multi_backends, run_multi_sim, run_sim_with, AdaptationConfig, CameraChurn,
-    FaultPlan, MultiSimConfig, PoissonArrivals, Policy, SimConfig, TransportConfig,
+    backgrounds_of, CameraChurn, Pipeline, PoissonArrivals, RealtimeOpts,
 };
-use uals::shedder::{ArbiterPolicy, QuerySet, QuerySpec};
+use uals::shedder::{QuerySet, QuerySpec};
 use uals::utility::{train, Combine};
 use uals::video::{build_dataset, streamer::aggregate_fps, DatasetConfig, Video, VideoConfig};
 
@@ -42,6 +39,7 @@ fn cameras(k: usize, frames: usize) -> Vec<Video> {
 fn main() -> Result<()> {
     let videos = cameras(3, 200);
     let fps = aggregate_fps(&videos);
+    let seed = 0xD0;
     let query = QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0);
 
     let train_videos = build_dataset(&DatasetConfig {
@@ -54,42 +52,21 @@ fn main() -> Result<()> {
     let idx: Vec<usize> = (0..train_videos.len()).collect();
     let model = train(&train_videos, &idx, &query.colors, Combine::Single);
 
-    let cfg = SimConfig {
-        costs: CostConfig::default(),
-        shedder: ShedderConfig::default(),
-        query: query.clone(),
-        backend_tokens: 1,
-        policy: Policy::UtilityControlLoop,
-        seed: 0xD0,
-        fps_total: fps,
-        transport: TransportConfig::default(),
-        faults: FaultPlan::default(),
-        adaptation: AdaptationConfig::default(),
+    // One shared template; `.sim()` / `.realtime()` / `.multi_query()`
+    // below compose it into each deployment.
+    let template = || {
+        Pipeline::builder()
+            .query(query.clone())
+            .seed(seed)
+            .fps_total(fps)
     };
-    let bgs = backgrounds_of(&videos);
-    let extractor = Extractor::native(model.clone());
-    let mk_backend = || {
-        BackendQuery::new(
-            query.clone(),
-            Detector::native(12, 25.0),
-            CostModel::new(cfg.costs.clone(), cfg.seed),
-            25.0,
-        )
-    };
-    let rt_cfg = RealtimeConfig {
-        query: query.clone(),
-        shedder: cfg.shedder.clone(),
-        costs: cfg.costs.clone(),
+    let opts = RealtimeOpts {
         cost_emulation_scale: 0.0, // pure compute speed
         time_scale: 0.01,          // 100× fast-forward
-        backend_tokens: 1,
         use_artifacts: false,
-        policy: Policy::UtilityControlLoop,
-        seed: cfg.seed,
-        arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
-        transport: TransportConfig::default(),
         ..Default::default()
     };
+    let bgs = backgrounds_of(&videos);
 
     println!("scenario        clock     ingress  transmitted  shed   qor    viol%");
     let row = |name: &str, clock: &str, ingress: u64, tx: u64, shed: u64, qor: f64, viol: f64| {
@@ -100,14 +77,9 @@ fn main() -> Result<()> {
     };
 
     // Bursty Poisson ingress under both clocks.
-    let mut backend = mk_backend();
-    let sim = run_sim_with(
-        PoissonArrivals::new(&videos, cfg.seed, 1.0),
-        &bgs,
-        &cfg,
-        &extractor,
-        &mut backend,
-    )?;
+    let sim = template()
+        .sim()
+        .run_model(PoissonArrivals::new(&videos, seed, 1.0), &bgs, &model)?;
     row(
         "bursty-poisson",
         "sim",
@@ -117,12 +89,9 @@ fn main() -> Result<()> {
         sim.qor.overall(),
         sim.latency.violation_rate(),
     );
-    let rt = run_realtime_with(
-        &videos,
-        &model,
-        &rt_cfg,
-        PoissonArrivals::new(&videos, cfg.seed, 1.0),
-    )?;
+    let rt = template()
+        .realtime(opts.clone())
+        .run_with(&videos, &model, PoissonArrivals::new(&videos, seed, 1.0))?;
     row(
         "bursty-poisson",
         "wall",
@@ -139,14 +108,9 @@ fn main() -> Result<()> {
     );
 
     // Mid-run camera churn (staggered joins, 10 s up per camera).
-    let mut backend = mk_backend();
-    let sim = run_sim_with(
-        CameraChurn::staggered(&videos, 5_000.0, 10_000.0),
-        &bgs,
-        &cfg,
-        &extractor,
-        &mut backend,
-    )?;
+    let sim = template()
+        .sim()
+        .run_model(CameraChurn::staggered(&videos, 5_000.0, 10_000.0), &bgs, &model)?;
     row(
         "camera-churn",
         "sim",
@@ -156,12 +120,9 @@ fn main() -> Result<()> {
         sim.qor.overall(),
         sim.latency.violation_rate(),
     );
-    let rt = run_realtime_with(
-        &videos,
-        &model,
-        &rt_cfg,
-        CameraChurn::staggered(&videos, 5_000.0, 10_000.0),
-    )?;
+    let rt = template()
+        .realtime(opts.clone())
+        .run_with(&videos, &model, CameraChurn::staggered(&videos, 5_000.0, 10_000.0))?;
     row(
         "camera-churn",
         "wall",
@@ -189,28 +150,9 @@ fn main() -> Result<()> {
         ),
     ];
     let set = QuerySet::train(&specs, &train_videos, &idx)?;
-    let mcfg = MultiSimConfig {
-        costs: cfg.costs.clone(),
-        shedder: cfg.shedder.clone(),
-        backend_tokens: 1,
-        arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
-        seed: cfg.seed,
-        fps_total: fps,
-        transport: TransportConfig::default(),
-        faults: FaultPlan::default(),
-    };
-    let mq_extractor = Extractor::native(set.union_model().clone());
-    let mut backends = multi_backends(&set, &mcfg.costs, mcfg.seed);
-    let sim = run_multi_sim(
-        uals::video::Streamer::new(&videos),
-        &bgs,
-        &set,
-        &mcfg,
-        &mq_extractor,
-        &mut backends,
-    )?;
+    let sim = template().multi_query(&set).run(&videos)?;
     assert_eq!(sim.extractions, sim.frames, "one extraction per frame");
-    let rt = run_multi_realtime(&videos, &set, &rt_cfg)?;
+    let rt = template().multi_query(&set).realtime(opts).run(&videos)?;
     for (qs, qr) in sim.queries.iter().zip(&rt.queries) {
         row(
             &format!("mq:{}", qs.name),

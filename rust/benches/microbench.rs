@@ -15,8 +15,9 @@ use uals::features::{
     UtilityValues,
 };
 use uals::pipeline::{
-    multi_backend_seed, multi_backends, run_multi_sim, run_sharded_sim, run_sharded_sim_with,
-    MultiSimConfig, Policy, SimConfig, TransportConfig,
+    multi_backend_seed, multi_backends, run_fleet, run_multi_sim, run_sharded_sim,
+    run_sharded_sim_with, AggregatorPolicy, FleetConfig, FleetTopology, MultiSimConfig,
+    PipelineConfig, Policy, SimConfig, TransportConfig,
 };
 use uals::runtime::Engine;
 use uals::shedder::{ArbiterPolicy, QuerySet, UtilityQueue};
@@ -511,6 +512,31 @@ fn main() {
         std::hint::black_box(total);
     });
 
+    // --- two-tier fleet (pipeline::fleet) -----------------------------------
+    // The 64- and 512-camera sets again, but through the hierarchical
+    // driver: multi-query edge nodes of 16 cameras each feeding the
+    // deadline-capacity aggregator in front of an 8-worker cluster.
+    let fleet2_set = QuerySet::train(&mq_specs[..2], &sweep_videos, &[0, 1]).unwrap();
+    let fleet2_cfg = |nodes: usize| {
+        FleetConfig::uniform(
+            PipelineConfig { seed: 0xBE, ..PipelineConfig::default() },
+            FleetTopology {
+                edge_nodes: nodes,
+                workers: 8,
+                threads: fleet_threads,
+                aggregator: AggregatorPolicy::DeadlineCapacity,
+            },
+        )
+    };
+    b.run_n("pipeline/fleet_e2e_64cams_4nodes", 1, 2, || {
+        let r = run_fleet(&fleet64, &fleet2_set, &fleet2_cfg(4)).unwrap();
+        std::hint::black_box(r.frames);
+    });
+    b.run_n("pipeline/fleet_e2e_512cams_32nodes", 1, 2, || {
+        let r = run_fleet(&fleet512, &fleet2_set, &fleet2_cfg(32)).unwrap();
+        std::hint::black_box(r.frames);
+    });
+
     // --- AOT artifact path (PJRT) -------------------------------------------
     if let Ok(engine) = Engine::from_default_artifacts() {
         let art1 = Extractor::artifact(&engine, model1.clone()).unwrap();
@@ -641,6 +667,18 @@ fn main() {
         println!(
             "32-query shared-stream pipeline: {:.0} frames/sec (one extraction per frame)",
             core_frames as f64 / (m.mean_ms.max(1e-12) / 1e3)
+        );
+    }
+    if let Some(m) = b.result("pipeline/fleet_e2e_64cams_4nodes") {
+        println!(
+            "two-tier fleet e2e, 64 cams / 4 nodes / 8 workers: {:.0} frames/sec",
+            fleet64_frames as f64 / (m.mean_ms.max(1e-12) / 1e3)
+        );
+    }
+    if let Some(m) = b.result("pipeline/fleet_e2e_512cams_32nodes") {
+        println!(
+            "two-tier fleet e2e, 512 cams / 32 nodes / 8 workers: {:.0} frames/sec",
+            fleet512_frames as f64 / (m.mean_ms.max(1e-12) / 1e3)
         );
     }
 

@@ -2,13 +2,11 @@
 //! control-loop experiments over the discrete-event pipeline.
 
 use super::common::Scale;
-use crate::backend::{BackendQuery, CostModel, Detector};
 use crate::color::NamedColor;
-use crate::config::{CostConfig, QueryConfig, ShedderConfig};
-use crate::features::Extractor;
+use crate::config::QueryConfig;
 use crate::pipeline::{
-    backgrounds_of, default_threads, parallel_map, run_pipeline, ArrivalModel, BackgroundMap,
-    IterArrivals, Policy, SimClock, SimConfig, SimReport, SyncBackend,
+    backgrounds_of, default_threads, parallel_map, ArrivalModel, BackgroundMap, IterArrivals,
+    Pipeline, Policy, SimConfig, SimReport,
 };
 use crate::util::csv::Table;
 use crate::utility::{train, Combine, UtilityModel};
@@ -39,37 +37,28 @@ fn train_red_model() -> UtilityModel {
 }
 
 fn sim_config(query: QueryConfig, fps_total: f64, policy: Policy) -> SimConfig {
-    SimConfig {
-        costs: CostConfig::default(),
-        shedder: ShedderConfig::default(),
-        query,
-        backend_tokens: 1,
-        policy,
-        seed: 0x13,
-        fps_total,
-        transport: crate::pipeline::TransportConfig::default(),
-        faults: crate::pipeline::FaultPlan::default(),
-        adaptation: crate::utility::AdaptationConfig::default(),
-    }
+    Pipeline::builder()
+        .query(query)
+        .fps_total(fps_total)
+        .policy(policy)
+        .seed(0x13)
+        .build()
+        .into()
 }
 
-/// Run one scenario through the streaming core: SimClock + in-process
-/// backend over any [`ArrivalModel`] workload.
+/// Run one scenario through the unified builder: SimClock + in-process
+/// backend over any [`ArrivalModel`] workload (the historical
+/// extractor/backend construction, now behind `.sim().run_model`).
 pub(crate) fn run_scenario<A: ArrivalModel>(
     arrivals: A,
     backgrounds: &BackgroundMap<'_>,
     cfg: &SimConfig,
     model: &UtilityModel,
 ) -> SimReport {
-    let extractor = Extractor::native(model.clone());
-    let mut backend = BackendQuery::new(
-        cfg.query.clone(),
-        Detector::native(12, 25.0),
-        CostModel::new(cfg.costs.clone(), cfg.seed),
-        25.0,
-    );
-    let mut executor = SyncBackend::new(&mut backend);
-    run_pipeline(arrivals, backgrounds, cfg, &extractor, &mut executor, &mut SimClock)
+    Pipeline::builder()
+        .config(cfg.clone().into())
+        .sim()
+        .run_model(arrivals, backgrounds, model)
         .expect("sim")
 }
 

@@ -36,21 +36,28 @@
 //!   [`crate::utility::adapt`]): how much QoR the frozen model loses to
 //!   each drift mode and how much the adapter claws back.
 //!
+//! * **fleet** — the two-tier fleet ([`crate::pipeline::fleet`]): the
+//!   camera count sweeps 100 → 10k against a fixed backend cluster,
+//!   with cameras sharded across edge nodes (≈16 per node), a modeled
+//!   per-node uplink and a deadline-capacity aggregator in front of 8
+//!   workers: fleet QoR and p99 latency vs scale, per-tier shed/loss
+//!   split, per-hop wire bytes, and the cross-tier conservation check.
+//!
 //! Run via `uals figures --fig scenario-bursty` / `--fig scenario-churn`
 //! / `--fig scenario-multiquery` / `--fig scenario-bandwidth` /
-//! `--fig scenario-faults` / `--fig scenario-drift`.
+//! `--fig scenario-faults` / `--fig scenario-drift` /
+//! `--fig scenario-fleet`.
 
 use super::common::Scale;
 use super::figs_sim::run_scenario;
 use crate::color::NamedColor;
-use crate::config::{CostConfig, QueryConfig, ShedderConfig};
-use crate::features::Extractor;
+use crate::config::QueryConfig;
 use crate::pipeline::{
-    backgrounds_of, multi_backends, run_multi_sim, CameraChurn, FaultKind, FaultPlan,
-    IterArrivals, LinkModel, MultiSimConfig, PoissonArrivals, Policy, PoisonKind, SimConfig,
+    backgrounds_of, default_threads, AggregatorPolicy, CameraChurn, FaultKind, FaultPlan,
+    FleetTopology, IterArrivals, LinkModel, Pipeline, PoissonArrivals, PoisonKind, SimConfig,
     TransportConfig,
 };
-use crate::shedder::{ArbiterPolicy, QuerySet, QuerySpec};
+use crate::shedder::{QuerySet, QuerySpec};
 use crate::util::csv::Table;
 use crate::utility::{train, AdaptationConfig, Combine, UtilityModel};
 use crate::video::{
@@ -89,18 +96,12 @@ fn scenario_model() -> UtilityModel {
 }
 
 fn scenario_config(fps_total: f64) -> SimConfig {
-    SimConfig {
-        costs: CostConfig::default(),
-        shedder: ShedderConfig::default(),
-        query: QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0),
-        backend_tokens: 1,
-        policy: Policy::UtilityControlLoop,
-        seed: 0x5CE,
-        fps_total,
-        transport: TransportConfig::default(),
-        faults: crate::pipeline::FaultPlan::default(),
-        adaptation: crate::utility::AdaptationConfig::default(),
-    }
+    Pipeline::builder()
+        .query(QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0))
+        .seed(0x5CE)
+        .fps_total(fps_total)
+        .build()
+        .into()
 }
 
 /// Bursty-ingress scenario: fixed-fps vs Poisson arrivals at the same
@@ -282,7 +283,6 @@ pub fn scenario_multiquery(scale: Scale) -> Vec<(String, Table)> {
     let frames = scenario_frames(scale);
     let videos = scenario_videos(4, frames);
     let fps = crate::video::streamer::aggregate_fps(&videos);
-    let bgs = backgrounds_of(&videos);
     let train_videos = build_dataset(&DatasetConfig {
         num_seeds: 2,
         videos_per_seed: 2,
@@ -311,27 +311,12 @@ pub fn scenario_multiquery(scale: Scale) -> Vec<(String, Table)> {
     for k in [1usize, 2, 4, 8] {
         let specs: Vec<QuerySpec> = pool[..k].to_vec();
         let set = QuerySet::train(&specs, &train_videos, &train_idx).expect("query set");
-        let cfg = MultiSimConfig {
-            costs: CostConfig::default(),
-            shedder: ShedderConfig::default(),
-            backend_tokens: 1,
-            arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
-            seed: 0x5CE,
-            fps_total: fps,
-            transport: TransportConfig::default(),
-            faults: crate::pipeline::FaultPlan::default(),
-        };
-        let extractor = Extractor::native(set.union_model().clone());
-        let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
-        let report = run_multi_sim(
-            Streamer::new(&videos),
-            &bgs,
-            &set,
-            &cfg,
-            &extractor,
-            &mut backends,
-        )
-        .expect("multi sim");
+        let report = Pipeline::builder()
+            .seed(0x5CE)
+            .fps_total(fps)
+            .multi_query(&set)
+            .run(&videos)
+            .expect("multi sim");
         let mut qor_min = 1.0f64;
         let mut drop_sum = 0.0f64;
         for (qi, q) in report.queries.iter().enumerate() {
@@ -567,6 +552,129 @@ pub fn scenario_drift(scale: Scale) -> Vec<(String, Table)> {
     vec![("scenario_drift".into(), t)]
 }
 
+/// The fleet camera set: the scenario scene/traffic seed family at a
+/// reduced per-camera resolution so 10k backgrounds stay in memory.
+fn fleet_videos(k: usize, frames: usize, dim: usize) -> Vec<Video> {
+    (0..k)
+        .map(|i| {
+            let mut vc =
+                VideoConfig::new(0x5CE + (i as u64 % 3), 0xFEED + i as u64, i as u32, frames);
+            vc.traffic.vehicle_rate = 0.3;
+            vc.width = dim;
+            vc.height = dim;
+            Video::new(vc)
+        })
+        .collect()
+}
+
+/// Fleet-topology scenario: camera count sweeps up to 10k against a
+/// fixed backend cluster of 8 detector workers, cameras sharded ≈16 per
+/// edge node, each node uplinked over a modeled 40 Mbit/s hop and the
+/// aggregator trunked into the cluster at 400 Mbit/s — so as the fleet
+/// grows, the squeeze comes from cluster capacity, which only the
+/// deadline-capacity aggregator can defend.
+///
+/// Columns: camera count, edge-node count, per-camera content length,
+/// mean fleet QoR, p99 cluster-completion latency, and the fate split
+/// of every admitted frame-query (completed / shed at the edge / shed
+/// at the aggregator / lost on a link), per-hop wire megabytes, and the
+/// cross-tier conservation flag (1 = every query's ledger balances).
+pub fn scenario_fleet(scale: Scale) -> Vec<(String, Table)> {
+    use crate::video::WireEncoding;
+    let (camera_counts, frame_budget): (&[usize], usize) = match scale {
+        Scale::Tiny => (&[100, 400, 1600], 6_000),
+        Scale::Small => (&[100, 400, 1600, 6400, 10_000], 60_000),
+        Scale::Paper => (&[100, 400, 1600, 6400, 10_000], 240_000),
+    };
+    let train_videos = build_dataset(&DatasetConfig {
+        num_seeds: 2,
+        videos_per_seed: 2,
+        frames_per_video: 300,
+        base_seed: 0x5CE0,
+        target_boost: 2.0,
+    });
+    let train_idx: Vec<usize> = (0..train_videos.len()).collect();
+    let specs: Vec<QuerySpec> = multiquery_pool()[..2].to_vec();
+    let set = QuerySet::train(&specs, &train_videos, &train_idx).expect("query set");
+
+    let mut t = Table::new(vec![
+        "cameras",
+        "edge_nodes",
+        "frames_per_camera",
+        "qor_mean",
+        "p99_ms",
+        "completed_frac",
+        "edge_shed_frac",
+        "agg_shed_frac",
+        "link_drop_frac",
+        "uplink_mb",
+        "cluster_mb",
+        "conserved",
+    ]);
+    for &k in camera_counts {
+        // Per-camera content shrinks as the fleet grows so the sweep
+        // stays bounded in total frames, and resolution drops once
+        // backgrounds alone would dominate memory (10k × 96×96 ≈ 1 GB).
+        let frames = (frame_budget / k).clamp(3, 60);
+        let dim = if k >= 1000 { 32 } else { 48 };
+        let videos = fleet_videos(k, frames, dim);
+        let edge_nodes = (k / 16).max(1);
+        let topology = FleetTopology {
+            edge_nodes,
+            workers: 8,
+            threads: default_threads(),
+            aggregator: AggregatorPolicy::DeadlineCapacity,
+        };
+        let edge_tier = Pipeline::builder()
+            .seed(0x5CE)
+            .transport(TransportConfig {
+                link: LinkModel::mbps(40.0),
+                encoding: WireEncoding::Raw,
+            })
+            .build();
+        let mut aggregator = edge_tier.clone();
+        aggregator.seed = 0xA66_5CE;
+        aggregator.transport =
+            TransportConfig { link: LinkModel::mbps(400.0), encoding: WireEncoding::Raw };
+        let r = Pipeline::builder()
+            .config(edge_tier)
+            .fleet(topology)
+            .aggregator_config(aggregator)
+            .run(&videos, &set)
+            .expect("fleet");
+
+        let ingress: u64 = r.queries.iter().map(|q| q.report.ingress).sum();
+        let completed: u64 = r.queries.iter().map(|q| q.completed).sum();
+        let edge_shed: u64 = r.queries.iter().map(|q| q.report.shed).sum();
+        let agg_shed: u64 = r.queries.iter().map(|q| q.agg_shed).sum();
+        let link_drop: u64 = r
+            .queries
+            .iter()
+            .map(|q| q.report.link_dropped + q.agg_link_dropped)
+            .sum();
+        let denom = ingress.max(1) as f64;
+        let p99 = r
+            .aggregate()
+            .map(|mut agg| agg.latency.quantile_ms(0.99))
+            .unwrap_or(0.0);
+        t.push(&[
+            k as f64,
+            edge_nodes as f64,
+            frames as f64,
+            r.qor_mean(),
+            p99,
+            completed as f64 / denom,
+            edge_shed as f64 / denom,
+            agg_shed as f64 / denom,
+            link_drop as f64 / denom,
+            r.uplink_bytes as f64 / 1e6,
+            r.cluster_bytes as f64 / 1e6,
+            if r.conserves() { 1.0 } else { 0.0 },
+        ]);
+    }
+    vec![("scenario_fleet".into(), t)]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -723,6 +831,38 @@ mod tests {
         }
         let retrained = adaptive.iter().filter(|r| r[0] > 0.0 && r[6] >= 1.0).count();
         assert!(retrained >= 1, "no drifted adaptive run ever retrained");
+    }
+
+    #[test]
+    fn fleet_scenario_conserves_and_cluster_pressure_grows() {
+        let out = scenario_fleet(Scale::Tiny);
+        let t = &out[0].1;
+        assert_eq!(t.len(), 3, "one row per camera count");
+        let rows: Vec<Vec<f64>> = t
+            .to_csv()
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(|c| c.parse().unwrap()).collect())
+            .collect();
+        for r in &rows {
+            assert!(r[3] >= 0.0 && r[3] <= 1.0, "qor_mean {}", r[3]);
+            // The four fates partition the admitted frame-queries.
+            let fates = r[5] + r[6] + r[7] + r[8];
+            assert!((fates - 1.0).abs() < 1e-9, "fate split sums to {fates}");
+            assert_eq!(r[11], 1.0, "conservation must hold at {} cameras", r[0]);
+        }
+        // The fixed 8-worker cluster must be the binding constraint at
+        // the top of the sweep: the aggregator sheds real traffic there,
+        // and the completed share falls from the smallest fleet.
+        let (first, last) = (&rows[0], &rows[2]);
+        assert!(last[0] > first[0], "sweep must ascend");
+        assert!(last[7] > 0.0, "largest fleet aggregator shed {}", last[7]);
+        assert!(
+            last[5] < first[5],
+            "completed share must fall with scale: {} vs {}",
+            last[5],
+            first[5]
+        );
     }
 
     #[test]

@@ -71,6 +71,21 @@ impl QorTracker {
             *self.kept.entry(id).or_default() += n;
         }
     }
+
+    /// Retract kept-credit for one previously-kept frame containing
+    /// `target_ids`: each object's kept count decrements while its total
+    /// stands. This is the exact Eq. 2/3 correction for a frame a *later*
+    /// tier sheds after an earlier tier already counted it as kept (the
+    /// fleet aggregator's QoR accounting) — equivalent to having observed
+    /// the frame as dropped in the first place, because the tracker holds
+    /// per-object frame counts, not ratios.
+    pub fn demote(&mut self, target_ids: &[u64]) {
+        for &id in target_ids {
+            if let Some(k) = self.kept.get_mut(&id) {
+                *k = k.saturating_sub(1);
+            }
+        }
+    }
 }
 
 /// Frame-drop accounting (observed drop rate).
@@ -130,6 +145,25 @@ mod tests {
             q.observe(&[t % 5], true);
         }
         assert_eq!(q.overall(), 1.0);
+    }
+
+    #[test]
+    fn demote_matches_never_kept() {
+        // Observing kept-then-demoted must equal observing dropped.
+        let mut a = QorTracker::new();
+        a.observe(&[1, 2], true);
+        a.observe(&[1], true);
+        a.demote(&[1, 2]);
+        let mut b = QorTracker::new();
+        b.observe(&[1, 2], false);
+        b.observe(&[1], true);
+        assert_eq!(a.overall(), b.overall());
+        assert_eq!(a.per_object(1), b.per_object(1));
+        assert_eq!(a.per_object(2), b.per_object(2));
+        // Demoting an unseen id is a no-op, and kept never underflows.
+        a.demote(&[99]);
+        a.demote(&[2]);
+        assert_eq!(a.per_object(2), Some(0.0));
     }
 
     #[test]

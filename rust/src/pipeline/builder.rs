@@ -1,0 +1,496 @@
+//! One unified entry point over every deployment driver:
+//! [`Pipeline::builder()`].
+//!
+//! Historically each deployment shape had its own free function —
+//! `run_sim` / `run_sim_with` / `run_multi_sim` / `run_multi_sim_with`
+//! / `run_realtime(_with)` / `run_multi_realtime(_with)` /
+//! `run_sharded_sim(_with)` — an 8-way matrix that forced every caller
+//! to re-assemble the same config literals. The builder replaces the
+//! matrix with one shared [`PipelineConfig`] template plus a mode
+//! selector:
+//!
+//! ```text
+//!   Pipeline::builder()            shared lifecycle knobs
+//!       .seed(..).fps_total(..)    (costs, shedder, transport, …)
+//!       │
+//!       ├─ .sim()                  discrete-event, single query
+//!       ├─ .multi_query(&set)      N queries, shared stream
+//!       │      └─ .realtime(opts)  …under the wall clock
+//!       ├─ .realtime(opts)         wall clock, single query
+//!       ├─ .sharded(threads)       one shard per camera
+//!       └─ .fleet(topology)        edge nodes → aggregator → cluster
+//! ```
+//!
+//! Every terminal `run*` method drives the exact historical
+//! construction (same extractor, same backend seeds, same engine), so
+//! builder runs bit-match the free functions — pinned by
+//! `rust/tests/builder_defaults.rs`. The free functions remain as thin
+//! compatibility wrappers with `Deprecated:` doc pointers here.
+
+use crate::backend::BackendQuery;
+use crate::config::{CostConfig, QueryConfig, ShedderConfig};
+use crate::features::{Extractor, IncrementalConfig};
+use crate::pipeline::core::{backgrounds_of, ArrivalModel, BackgroundMap, PipelineConfig, Policy};
+use crate::pipeline::fleet::{run_fleet, FleetConfig, FleetReport, FleetTopology};
+use crate::pipeline::multi::{multi_backends, MultiPipelineReport, MultiSimConfig};
+use crate::pipeline::realtime::{
+    run_multi_realtime, run_multi_realtime_with, run_realtime, run_realtime_with, RealtimeConfig,
+    RealtimeOpts, RealtimeReport,
+};
+use crate::pipeline::sim::{
+    run_multi_sim, run_multi_sim_with, run_sim, run_sim_with, SimConfig, SimReport,
+};
+use crate::pipeline::transport::TransportConfig;
+use crate::pipeline::{parallel, FaultPlan};
+use crate::shedder::{ArbiterPolicy, QuerySet};
+use crate::utility::{AdaptationConfig, UtilityModel};
+use crate::video::{Frame, Streamer, Video};
+use anyhow::Result;
+
+/// Namespace for the unified pipeline API: [`Pipeline::builder()`] is
+/// the one front door to every deployment driver.
+pub struct Pipeline;
+
+impl Pipeline {
+    /// Start from [`PipelineConfig::default()`] (the historical
+    /// `SimConfig`/`RealtimeConfig` defaults, pinned by test).
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder { cfg: PipelineConfig::default() }
+    }
+}
+
+/// Shared-template stage of the builder: set the lifecycle knobs every
+/// deployment understands, then pick a mode.
+#[derive(Debug, Clone)]
+pub struct PipelineBuilder {
+    cfg: PipelineConfig,
+}
+
+impl PipelineBuilder {
+    /// Replace the whole template (e.g. a tier config pulled from an
+    /// existing run).
+    pub fn config(mut self, cfg: PipelineConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn costs(mut self, v: CostConfig) -> Self {
+        self.cfg.costs = v;
+        self
+    }
+
+    pub fn shedder(mut self, v: ShedderConfig) -> Self {
+        self.cfg.shedder = v;
+        self
+    }
+
+    /// Single-query deployments' query (multi-query deployments take
+    /// theirs from the [`QuerySet`]).
+    pub fn query(mut self, v: QueryConfig) -> Self {
+        self.cfg.query = v;
+        self
+    }
+
+    pub fn backend_tokens(mut self, v: u32) -> Self {
+        self.cfg.backend_tokens = v;
+        self
+    }
+
+    pub fn policy(mut self, v: Policy) -> Self {
+        self.cfg.policy = v;
+        self
+    }
+
+    pub fn seed(mut self, v: u64) -> Self {
+        self.cfg.seed = v;
+        self
+    }
+
+    pub fn fps_total(mut self, v: f64) -> Self {
+        self.cfg.fps_total = v;
+        self
+    }
+
+    pub fn transport(mut self, v: TransportConfig) -> Self {
+        self.cfg.transport = v;
+        self
+    }
+
+    pub fn faults(mut self, v: FaultPlan) -> Self {
+        self.cfg.faults = v;
+        self
+    }
+
+    pub fn adaptation(mut self, v: AdaptationConfig) -> Self {
+        self.cfg.adaptation = v;
+        self
+    }
+
+    /// The assembled template (for composing tiers by hand, e.g.
+    /// [`FleetConfig`]).
+    pub fn build(self) -> PipelineConfig {
+        self.cfg
+    }
+
+    /// Discrete-event simulation, single query (historically
+    /// `run_sim` / `run_sim_with`).
+    pub fn sim(self) -> SimBuilder {
+        SimBuilder { cfg: self.cfg.into() }
+    }
+
+    /// N concurrent queries over one shared stream (historically
+    /// `run_multi_sim` / `run_multi_sim_with`). Defaults to the
+    /// work-conserving weighted fair-share arbiter.
+    pub fn multi_query(self, set: &QuerySet) -> MultiQueryBuilder<'_> {
+        MultiQueryBuilder {
+            cfg: self.cfg,
+            set,
+            arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
+        }
+    }
+
+    /// Wall-clock realtime deployment, single query (historically
+    /// `run_realtime` / `run_realtime_with`).
+    pub fn realtime(self, opts: RealtimeOpts) -> RealtimeBuilder {
+        RealtimeBuilder { cfg: RealtimeConfig::from_pipeline(&self.cfg, opts) }
+    }
+
+    /// One shard per camera across `threads` workers (historically
+    /// `run_sharded_sim(_with)`).
+    pub fn sharded(self, threads: usize) -> ShardedBuilder {
+        ShardedBuilder { cfg: self.cfg.into(), threads, incremental: None }
+    }
+
+    /// Two-tier fleet: the template becomes both tiers via
+    /// [`FleetConfig::uniform`] (override per tier with
+    /// [`FleetBuilder::aggregator_config`]).
+    pub fn fleet(self, topology: FleetTopology) -> FleetBuilder {
+        FleetBuilder { cfg: FleetConfig::uniform(self.cfg, topology) }
+    }
+}
+
+/// Terminal stage for the single-query discrete-event driver.
+pub struct SimBuilder {
+    cfg: SimConfig,
+}
+
+impl SimBuilder {
+    /// Run over a timestamp-ordered frame stream with an explicit
+    /// extractor/backend pair (full control, the `run_sim` shape).
+    pub fn run_frames<I>(
+        &self,
+        frames: I,
+        backgrounds: &BackgroundMap<'_>,
+        extractor: &Extractor,
+        backend: &mut BackendQuery,
+    ) -> Result<SimReport>
+    where
+        I: IntoIterator<Item = Frame>,
+    {
+        run_sim(frames, backgrounds, &self.cfg, extractor, backend)
+    }
+
+    /// Run over any [`ArrivalModel`] (the `run_sim_with` shape).
+    pub fn run_arrivals<A: ArrivalModel>(
+        &self,
+        arrivals: A,
+        backgrounds: &BackgroundMap<'_>,
+        extractor: &Extractor,
+        backend: &mut BackendQuery,
+    ) -> Result<SimReport> {
+        run_sim_with(arrivals, backgrounds, &self.cfg, extractor, backend)
+    }
+
+    /// Run over any [`ArrivalModel`] with the default construction:
+    /// native extractor over `model`, and the standard backend
+    /// (12-blob detector, calibrated cost model seeded with the
+    /// template seed) — the figure harnesses' historical scaffold.
+    pub fn run_model<A: ArrivalModel>(
+        &self,
+        arrivals: A,
+        backgrounds: &BackgroundMap<'_>,
+        model: &UtilityModel,
+    ) -> Result<SimReport> {
+        let extractor = Extractor::native(model.clone());
+        let mut backend = BackendQuery::new(
+            self.cfg.query.clone(),
+            crate::backend::Detector::native(12, 25.0),
+            crate::backend::CostModel::new(self.cfg.costs.clone(), self.cfg.seed),
+            25.0,
+        );
+        run_sim_with(arrivals, backgrounds, &self.cfg, &extractor, &mut backend)
+    }
+
+    /// Stream every video at the template's `fps_total` through
+    /// [`Self::run_model`].
+    pub fn run(&self, videos: &[Video], model: &UtilityModel) -> Result<SimReport> {
+        self.run_model(
+            crate::pipeline::workloads::IterArrivals::new(
+                Streamer::new(videos),
+                self.cfg.fps_total,
+            ),
+            &backgrounds_of(videos),
+            model,
+        )
+    }
+}
+
+/// Terminal stage for the shared-stream multi-query drivers.
+pub struct MultiQueryBuilder<'a> {
+    cfg: PipelineConfig,
+    set: &'a QuerySet,
+    arbiter: ArbiterPolicy,
+}
+
+impl<'a> MultiQueryBuilder<'a> {
+    /// How the measured backend budget splits across queries.
+    pub fn arbiter(mut self, v: ArbiterPolicy) -> Self {
+        self.arbiter = v;
+        self
+    }
+
+    fn multi_cfg(&self) -> MultiSimConfig {
+        MultiSimConfig::from_pipeline(&self.cfg, self.arbiter)
+    }
+
+    /// Run over a frame stream with explicit extractor/backends (the
+    /// `run_multi_sim` shape; `extractor` must match the set's union).
+    pub fn run_frames<I>(
+        &self,
+        frames: I,
+        backgrounds: &BackgroundMap<'_>,
+        extractor: &Extractor,
+        backends: &mut [BackendQuery],
+    ) -> Result<MultiPipelineReport>
+    where
+        I: IntoIterator<Item = Frame>,
+    {
+        run_multi_sim(frames, backgrounds, self.set, &self.multi_cfg(), extractor, backends)
+    }
+
+    /// Run over any [`ArrivalModel`] (the `run_multi_sim_with` shape).
+    pub fn run_arrivals<A: ArrivalModel>(
+        &self,
+        arrivals: A,
+        backgrounds: &BackgroundMap<'_>,
+        extractor: &Extractor,
+        backends: &mut [BackendQuery],
+    ) -> Result<MultiPipelineReport> {
+        run_multi_sim_with(
+            arrivals,
+            backgrounds,
+            self.set,
+            &self.multi_cfg(),
+            extractor,
+            backends,
+        )
+    }
+
+    /// Stream every video with the default construction: a native
+    /// union-model extractor and one standard backend per query
+    /// ([`multi_backends`], seeds decorrelated per query).
+    pub fn run(&self, videos: &[Video]) -> Result<MultiPipelineReport> {
+        let extractor = Extractor::native(self.set.union_model().clone());
+        let mut backends = multi_backends(self.set, &self.cfg.costs, self.cfg.seed);
+        self.run_frames(
+            Streamer::new(videos),
+            &backgrounds_of(videos),
+            &extractor,
+            &mut backends,
+        )
+    }
+
+    /// The same query set under the wall clock (historically
+    /// `run_multi_realtime(_with)`); the builder's arbiter rides along.
+    pub fn realtime(self, opts: RealtimeOpts) -> MultiRealtimeBuilder<'a> {
+        let mut cfg = RealtimeConfig::from_pipeline(&self.cfg, opts);
+        cfg.arbiter = self.arbiter;
+        MultiRealtimeBuilder { cfg, set: self.set }
+    }
+}
+
+/// Terminal stage for the single-query wall-clock driver.
+pub struct RealtimeBuilder {
+    cfg: RealtimeConfig,
+}
+
+impl RealtimeBuilder {
+    /// Stream every video at its native rate (the `run_realtime`
+    /// shape).
+    pub fn run(&self, videos: &[Video], model: &UtilityModel) -> Result<RealtimeReport> {
+        run_realtime(videos, model, &self.cfg)
+    }
+
+    /// Run over any [`ArrivalModel`] (the `run_realtime_with` shape).
+    pub fn run_with<A: ArrivalModel>(
+        &self,
+        videos: &[Video],
+        model: &UtilityModel,
+        arrivals: A,
+    ) -> Result<RealtimeReport> {
+        run_realtime_with(videos, model, &self.cfg, arrivals)
+    }
+}
+
+/// Terminal stage for the multi-query wall-clock driver.
+pub struct MultiRealtimeBuilder<'a> {
+    cfg: RealtimeConfig,
+    set: &'a QuerySet,
+}
+
+impl MultiRealtimeBuilder<'_> {
+    /// Stream every video at its native rate (the `run_multi_realtime`
+    /// shape).
+    pub fn run(&self, videos: &[Video]) -> Result<MultiPipelineReport> {
+        run_multi_realtime(videos, self.set, &self.cfg)
+    }
+
+    /// Run over any [`ArrivalModel`] (the `run_multi_realtime_with`
+    /// shape).
+    pub fn run_with<A: ArrivalModel>(
+        &self,
+        videos: &[Video],
+        arrivals: A,
+    ) -> Result<MultiPipelineReport> {
+        run_multi_realtime_with(videos, self.set, &self.cfg, arrivals)
+    }
+}
+
+/// Terminal stage for the one-shard-per-camera sweep.
+pub struct ShardedBuilder {
+    cfg: SimConfig,
+    threads: usize,
+    incremental: Option<IncrementalConfig>,
+}
+
+impl ShardedBuilder {
+    /// Per-camera incremental feature extraction (bit-identical
+    /// results, less per-frame work).
+    pub fn incremental(mut self, v: IncrementalConfig) -> Self {
+        self.incremental = Some(v);
+        self
+    }
+
+    /// One shard per camera across the builder's thread budget (the
+    /// `run_sharded_sim(_with)` shape).
+    pub fn run(
+        &self,
+        videos: &[Video],
+        model: &UtilityModel,
+    ) -> Result<(SimReport, Vec<(u32, SimReport)>)> {
+        parallel::run_sharded_sim_with(videos, &self.cfg, model, self.threads, self.incremental)
+    }
+}
+
+/// Terminal stage for the two-tier fleet driver.
+pub struct FleetBuilder {
+    cfg: FleetConfig,
+}
+
+impl FleetBuilder {
+    /// Override the aggregator tier's template (hop-B link, seed, …).
+    pub fn aggregator_config(mut self, v: PipelineConfig) -> Self {
+        self.cfg.aggregator = v;
+        self
+    }
+
+    /// Backend-budget split inside each edge node.
+    pub fn edge_arbiter(mut self, v: ArbiterPolicy) -> Self {
+        self.cfg.edge_arbiter = v;
+        self
+    }
+
+    /// The assembled two-tier config.
+    pub fn build(self) -> FleetConfig {
+        self.cfg
+    }
+
+    /// Run the fleet over the cameras for a trained query set.
+    pub fn run(&self, videos: &[Video], set: &QuerySet) -> Result<FleetReport> {
+        run_fleet(videos, set, &self.cfg)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // test assertions
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+    use crate::shedder::QuerySpec;
+    use crate::utility::{train, Combine};
+    use crate::video::VideoConfig;
+
+    fn cameras(n: usize, frames: usize) -> Vec<Video> {
+        (0..n)
+            .map(|i| {
+                let mut vc = VideoConfig::new(11, 0xB111 + i as u64, i as u32, frames);
+                vc.traffic.vehicle_rate = 0.35;
+                Video::new(vc)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn builder_sim_matches_free_function() {
+        let videos = cameras(3, 100);
+        let model = train(&videos, &[0, 1, 2], &[NamedColor::Red], Combine::Single);
+        let b = Pipeline::builder().seed(0x77).fps_total(30.0);
+        let built = b.clone().sim().run(&videos, &model).unwrap();
+
+        let cfg: SimConfig = b.build().into();
+        let extractor = Extractor::native(model.clone());
+        let mut backend = BackendQuery::new(
+            cfg.query.clone(),
+            crate::backend::Detector::native(12, 25.0),
+            crate::backend::CostModel::new(cfg.costs.clone(), cfg.seed),
+            25.0,
+        );
+        let free = run_sim(
+            Streamer::new(&videos),
+            &backgrounds_of(&videos),
+            &cfg,
+            &extractor,
+            &mut backend,
+        )
+        .unwrap();
+
+        assert_eq!(built.ingress, free.ingress);
+        assert_eq!(built.decisions, free.decisions);
+        assert_eq!(built.qor.overall(), free.qor.overall());
+    }
+
+    #[test]
+    fn builder_multi_matches_free_function() {
+        let videos = cameras(2, 80);
+        let specs = vec![
+            QuerySpec::new("red", QueryConfig::single(NamedColor::Red)),
+            QuerySpec::new("yellow", QueryConfig::single(NamedColor::Yellow)),
+        ];
+        let set = QuerySet::train(&specs, &videos, &[0, 1]).unwrap();
+        let fps = crate::video::streamer::aggregate_fps(&videos);
+        let builder = Pipeline::builder().seed(0x42).fps_total(fps);
+        let built = builder.clone().multi_query(&set).run(&videos).unwrap();
+
+        let cfg = MultiSimConfig::from_pipeline(
+            &builder.build(),
+            ArbiterPolicy::WeightedFair { work_conserving: true },
+        );
+        let extractor = Extractor::native(set.union_model().clone());
+        let mut backends = multi_backends(&set, &cfg.costs, cfg.seed);
+        let free = run_multi_sim(
+            Streamer::new(&videos),
+            &backgrounds_of(&videos),
+            &set,
+            &cfg,
+            &extractor,
+            &mut backends,
+        )
+        .unwrap();
+
+        assert_eq!(built.frames, free.frames);
+        for (a, b) in built.queries.iter().zip(&free.queries) {
+            assert_eq!(a.report.decisions, b.report.decisions);
+            assert_eq!(a.report.qor.overall(), b.report.qor.overall());
+        }
+    }
+}

@@ -92,6 +92,115 @@ pub struct SimConfig {
     pub adaptation: AdaptationConfig,
 }
 
+/// The shared lifecycle parameters every driver consumes — the one
+/// config the historical `SimConfig` / `MultiSimConfig` /
+/// `RealtimeConfig` trio used to hand-copy field by field. Each driver
+/// config is now a projection of this template:
+///
+/// * [`SimConfig`] is field-for-field this struct (lossless
+///   [`From`] conversions both ways).
+/// * [`MultiSimConfig`](crate::pipeline::MultiSimConfig) drops the
+///   single-query-only fields (`query`, `policy`, `adaptation`) and adds
+///   the arbiter — see `MultiSimConfig::from_pipeline`.
+/// * [`RealtimeConfig`](crate::pipeline::realtime::RealtimeConfig) adds
+///   the wall-clock extras (pacing, cost emulation, artifact choice,
+///   worker supervision) — see `RealtimeConfig::from_pipeline`.
+/// * The fleet config ([`crate::pipeline::fleet::FleetConfig`]) embeds
+///   one `PipelineConfig` per tier instead of adding a fourth copy.
+///
+/// Construct it through [`Pipeline::builder`](crate::pipeline::Pipeline)
+/// or as a struct literal; [`PipelineConfig::default`] is pinned by
+/// `rust/tests/builder_defaults.rs` to be decision-log-bit-identical to
+/// the historical per-driver defaults.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub costs: CostConfig,
+    pub shedder: ShedderConfig,
+    /// Single-query drivers' query; multi-query drivers keep per-query
+    /// configs in their `QuerySet` and ignore this field.
+    pub query: QueryConfig,
+    /// Backend concurrency (token capacity); the paper's NC6 runs one DNN.
+    pub backend_tokens: u32,
+    /// Shedding policy (single-query drivers; the multi engine always
+    /// runs the utility control loop per query).
+    pub policy: Policy,
+    pub seed: u64,
+    /// Nominal aggregate ingress fps (estimator fallback). Drivers fed by
+    /// an [`ArrivalModel`] override it with `arrivals.fps_total()`.
+    pub fps_total: f64,
+    /// Modeled shedder→backend link + wire encoding (ideal by default).
+    pub transport: TransportConfig,
+    /// Scheduled fault windows (empty by default — bit-identical to a
+    /// faultless pipeline; see [`crate::pipeline::faults`]).
+    pub faults: FaultPlan,
+    /// Online utility-model adaptation (off by default; single-query
+    /// drivers only — see [`crate::utility::adapt`]).
+    pub adaptation: AdaptationConfig,
+}
+
+impl Default for PipelineConfig {
+    /// The historical driver defaults, in one place: the same values
+    /// `RealtimeConfig::default()` has always carried for the shared
+    /// fields (seed `0xB_E`, single red query, one backend token, the
+    /// full utility control loop, ideal link, no faults, no adaptation),
+    /// with `fps_total` at one camera's native 10 fps.
+    fn default() -> Self {
+        PipelineConfig {
+            costs: CostConfig::default(),
+            shedder: ShedderConfig::default(),
+            query: QueryConfig::single(crate::color::NamedColor::Red),
+            backend_tokens: 1,
+            policy: Policy::UtilityControlLoop,
+            seed: 0xB_E,
+            fps_total: 10.0,
+            transport: TransportConfig::default(),
+            faults: FaultPlan::default(),
+            adaptation: AdaptationConfig::default(),
+        }
+    }
+}
+
+impl From<PipelineConfig> for SimConfig {
+    fn from(p: PipelineConfig) -> SimConfig {
+        SimConfig {
+            costs: p.costs,
+            shedder: p.shedder,
+            query: p.query,
+            backend_tokens: p.backend_tokens,
+            policy: p.policy,
+            seed: p.seed,
+            fps_total: p.fps_total,
+            transport: p.transport,
+            faults: p.faults,
+            adaptation: p.adaptation,
+        }
+    }
+}
+
+impl From<SimConfig> for PipelineConfig {
+    fn from(c: SimConfig) -> PipelineConfig {
+        PipelineConfig {
+            costs: c.costs,
+            shedder: c.shedder,
+            query: c.query,
+            backend_tokens: c.backend_tokens,
+            policy: c.policy,
+            seed: c.seed,
+            fps_total: c.fps_total,
+            transport: c.transport,
+            faults: c.faults,
+            adaptation: c.adaptation,
+        }
+    }
+}
+
+impl Default for SimConfig {
+    /// [`PipelineConfig::default`] under the historical name.
+    fn default() -> Self {
+        PipelineConfig::default().into()
+    }
+}
+
 /// The one frame payload carried through admission, queue and dispatch —
 /// replaces the historical `SimFrame` / `WorkItem` / shard-local structs.
 pub struct FramePayload {

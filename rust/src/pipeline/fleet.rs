@@ -1,0 +1,706 @@
+//! Fleet-scale hierarchical shedding: E edge nodes → one regional
+//! aggregator → a load-balanced cluster of M detector workers.
+//!
+//! Two-tier topology (the paper's edge deployment scaled out):
+//!
+//! ```text
+//!   cameras ──► edge node 0 ─┐  (multi-query shedder, hop-A uplink)
+//!   cameras ──► edge node 1 ─┼─► regional aggregator ──► M workers
+//!   cameras ──► edge node E ─┘  (2nd-level shedder,     (min-busy
+//!                                hop-B link)             dispatch)
+//! ```
+//!
+//! Tier 1 reuses the multi-query engine verbatim: each node is an
+//! independent [`run_multi_pipeline`](super::multi::run_multi_pipeline)
+//! run over its camera slice, with its own [`MultiShedder`] and its own
+//! hop-A uplink (the node's `transport` — the shared shedder→backend
+//! link reinterpreted as the edge→aggregator uplink). A
+//! [`DispatchObserver`] tap records every edge dispatch — the
+//! aggregator's ingress stream — without perturbing the engine, so each
+//! node's run stays bit-identical to a standalone deployment.
+//!
+//! Tier 2 replays the recorded dispatches in one deterministic merge
+//! order — `(egress time, node, record index)` — through the
+//! aggregator policy:
+//!
+//! * [`AggregatorPolicy::PassThrough`] forwards everything: no extra
+//!   sheds, no extra delay. A 1-node pass-through fleet over an ideal
+//!   hop-B link **bit-matches** `run_multi_sim` (pinned by
+//!   `rust/tests/fleet.rs`).
+//! * [`AggregatorPolicy::DeadlineCapacity`] re-arbitrates: each
+//!   physical frame crosses the hop-B link **once** (query copies of
+//!   the same frame share the crossing, like the edge tier's shared
+//!   transmission), then the least-busy worker (lowest index on ties)
+//!   is picked and the frame is shed if its projected completion would
+//!   bust the query's latency bound. The edge's `exec_ms` draw is the
+//!   cluster's service demand — the edge runs the same calibrated cost
+//!   model the cluster charges, so its local control loop prices
+//!   downstream work correctly.
+//!
+//! Per-query fleet metrics merge through the existing
+//! [`merge_reports`] path; aggregator-tier sheds and hop-B losses are
+//! applied as exact [`QorTracker::demote`](crate::metrics::QorTracker)
+//! corrections, and under `DeadlineCapacity` the per-query latency is
+//! rebuilt from cluster completions. Conservation holds per query
+//! across tiers (pinned by `conserves()` and the property tests):
+//!
+//! ```text
+//!   ingress == completed + shed(edge) + shed(aggregator)
+//!            + link_dropped(hop A) + link_dropped(hop B)
+//!            + fault_dropped
+//! ```
+//!
+//! Seeds: node 0 keeps the edge seed (the 1-node equivalence above);
+//! node k decorrelates golden-ratio style like shard and per-query
+//! backend seeds. The hop-B link draws from the aggregator tier's own
+//! seed, so both hops' loss processes are independent.
+
+use crate::features::Extractor;
+use crate::metrics::{LatencyTracker, WindowSeries};
+use crate::pipeline::core::{
+    backgrounds_of, FramePayload, PipelineConfig, PipelineReport, SimClock,
+};
+use crate::pipeline::multi::{
+    multi_backends, run_multi_pipeline_observed, DispatchObserver, MultiPipelineReport,
+    MultiSimConfig, MultiSyncBackend,
+};
+use crate::pipeline::parallel::{default_threads, merge_reports, parallel_map};
+use crate::pipeline::transport::{Link, Transmission};
+use crate::pipeline::workloads::IterArrivals;
+use crate::shedder::{ArbiterPolicy, QuerySet};
+use crate::video::streamer::aggregate_fps;
+use crate::video::{raw_wire_size, Streamer, Video};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::ops::Range;
+
+/// How the regional aggregator treats the filtered union stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggregatorPolicy {
+    /// Forward every edge dispatch untouched: no second-level sheds, no
+    /// hop-B delay. The bit-identity mode (a 1-node pass-through fleet
+    /// is exactly `run_multi_sim`).
+    PassThrough,
+    /// Second-level shedder: ship each physical frame once over the
+    /// hop-B link, dispatch to the least-busy of M workers, and shed
+    /// any frame whose projected completion busts its query's latency
+    /// bound (the edge deadline check, re-run against cluster state).
+    DeadlineCapacity,
+}
+
+/// Fleet shape: how many edge nodes the cameras split across, the
+/// backend cluster size, and the driver parallelism.
+#[derive(Debug, Clone)]
+pub struct FleetTopology {
+    /// Edge nodes; cameras partition contiguously across them (the
+    /// first `cameras % edge_nodes` nodes take one extra).
+    pub edge_nodes: usize,
+    /// Detector workers in the backend cluster (used by
+    /// [`AggregatorPolicy::DeadlineCapacity`]).
+    pub workers: usize,
+    /// Worker threads for the tier-1 node sweep (results are
+    /// thread-count invariant, like `run_sharded_sim`).
+    pub threads: usize,
+    pub aggregator: AggregatorPolicy,
+}
+
+impl Default for FleetTopology {
+    fn default() -> Self {
+        FleetTopology {
+            edge_nodes: 1,
+            workers: 1,
+            threads: default_threads(),
+            aggregator: AggregatorPolicy::PassThrough,
+        }
+    }
+}
+
+/// Fleet lifecycle parameters: one shared [`PipelineConfig`] template
+/// per tier, composed rather than flattened — the edge tier's
+/// `transport` is the hop-A uplink, the aggregator tier's `transport`
+/// is the hop-B link and its `seed` drives hop-B loss/jitter.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub edge: PipelineConfig,
+    pub aggregator: PipelineConfig,
+    /// Backend-budget split across queries inside each edge node.
+    pub edge_arbiter: ArbiterPolicy,
+    pub topology: FleetTopology,
+}
+
+impl FleetConfig {
+    /// Both tiers from one template: the aggregator inherits the edge
+    /// tier's knobs with a decorrelated seed (so the two hops' link
+    /// RNGs never share a stream).
+    pub fn uniform(tier: PipelineConfig, topology: FleetTopology) -> FleetConfig {
+        let mut aggregator = tier.clone();
+        aggregator.seed = tier.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xA66);
+        FleetConfig {
+            edge: tier,
+            aggregator,
+            edge_arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
+            topology,
+        }
+    }
+}
+
+/// Edge node seed derivation: node 0 keeps the base seed (so a 1-node
+/// fleet bit-matches `run_multi_sim` under the same seed); later nodes
+/// decorrelate golden-ratio style like
+/// [`multi_backend_seed`](super::multi::multi_backend_seed) and the
+/// sharded-sim per-camera seeds.
+pub fn fleet_node_seed(base: u64, node: usize) -> u64 {
+    base.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(node as u64))
+}
+
+/// What happened to one edge dispatch at the aggregator tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetOutcome {
+    /// Pass-through aggregator: forwarded without re-arbitration.
+    Forwarded,
+    /// Completed on cluster worker `worker`.
+    Completed { worker: usize },
+    /// Shed by the aggregator's deadline-capacity check.
+    AggregatorShed,
+    /// Lost on the hop-B (aggregator→cluster) link.
+    ClusterLinkDrop,
+}
+
+/// One row of the fleet decision log: the tier-2 outcome of an edge
+/// dispatch, in the aggregator's deterministic replay order. Same seed
+/// ⇒ same log, byte for byte, regardless of `threads`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetDecision {
+    pub node: usize,
+    pub query: usize,
+    pub camera: u32,
+    pub capture_ms: f64,
+    pub outcome: FleetOutcome,
+}
+
+/// One query's fleet-wide slice: the merged per-node report with
+/// aggregator-tier corrections applied, plus the tier-2 counters.
+pub struct FleetQueryReport {
+    pub name: String,
+    /// Merged edge-tier report. QoR carries the aggregator demotions;
+    /// under [`AggregatorPolicy::DeadlineCapacity`] the latency
+    /// trackers are rebuilt from cluster completions (the edge-tier
+    /// counters `ingress`/`transmitted`/`shed`/`link_dropped` keep
+    /// their tier-1 meaning: `transmitted` is edge egress).
+    pub report: PipelineReport,
+    /// Frames this query completed on the backend cluster.
+    pub completed: u64,
+    /// Frames shed by the aggregator's second-level deadline check.
+    pub agg_shed: u64,
+    /// Frames lost on the hop-B link.
+    pub agg_link_dropped: u64,
+}
+
+impl FleetQueryReport {
+    /// Cross-tier conservation for this query (see the module docs).
+    pub fn conserves(&self) -> bool {
+        let r = &self.report;
+        r.ingress
+            == self.completed
+                + r.shed
+                + self.agg_shed
+                + r.link_dropped
+                + self.agg_link_dropped
+                + r.faults.fault_dropped
+    }
+}
+
+/// What a fleet run reports: per-query fleet-wide views, per-node
+/// edge-tier reports, the fleet decision log, and both hops' physical
+/// wire accounting.
+pub struct FleetReport {
+    pub queries: Vec<FleetQueryReport>,
+    /// Tier-1 outputs, untouched (node order = camera order).
+    pub nodes: Vec<MultiPipelineReport>,
+    /// Tier-2 outcome log in deterministic replay order.
+    pub decisions: Vec<FleetDecision>,
+    /// Physical frames ingested across all edge nodes.
+    pub frames: u64,
+    /// Feature extractions across all edge nodes (one per frame).
+    pub extractions: u64,
+    /// Hop-A (edge→aggregator) physical frames / bytes / losses,
+    /// summed over nodes.
+    pub uplink_frames: u64,
+    pub uplink_bytes: u64,
+    pub uplink_lost_frames: u64,
+    /// Hop-B (aggregator→cluster) physical frames / bytes / losses
+    /// (zero under [`AggregatorPolicy::PassThrough`]).
+    pub cluster_frames: u64,
+    pub cluster_bytes: u64,
+    pub cluster_lost_frames: u64,
+    /// Frames completed per cluster worker (load-balance visibility;
+    /// empty under [`AggregatorPolicy::PassThrough`]).
+    pub worker_frames: Vec<u64>,
+    pub end_ms: f64,
+}
+
+impl FleetReport {
+    /// Merge the per-query fleet reports into one aggregate view
+    /// through the existing metrics merge (per-query counts sum).
+    pub fn aggregate(&self) -> Option<PipelineReport> {
+        merge_reports(self.queries.iter().map(|q| &q.report))
+    }
+
+    /// Mean per-query fleet QoR (the sweep headline).
+    pub fn qor_mean(&self) -> f64 {
+        if self.queries.is_empty() {
+            return 1.0;
+        }
+        let sum: f64 = self.queries.iter().map(|q| q.report.qor.overall()).sum();
+        sum / self.queries.len() as f64
+    }
+
+    /// Cross-tier conservation across every query.
+    pub fn conserves(&self) -> bool {
+        self.queries.iter().all(FleetQueryReport::conserves)
+    }
+}
+
+/// One recorded edge dispatch: the aggregator's view of a (query,
+/// frame) pair leaving an edge node.
+struct EdgeDispatch {
+    query: usize,
+    camera: u32,
+    capture_ms: f64,
+    ids: Vec<u64>,
+    /// Cluster service demand: the edge's calibrated cost draw.
+    exec_ms: f64,
+    /// When the frame is available at the aggregator: the edge
+    /// dispatch time, or the hop-A delivery time under a modeled
+    /// uplink (whichever is later).
+    egress_ms: f64,
+    /// Physical wire size for the hop-B crossing: the hop-A encoded
+    /// size when the uplink is modeled, the raw wire size otherwise.
+    bytes: u64,
+}
+
+/// The tier-1 tap: records every dispatch, observes nothing back.
+struct RecordingObserver {
+    records: Vec<EdgeDispatch>,
+}
+
+impl DispatchObserver for RecordingObserver {
+    fn on_dispatch(
+        &mut self,
+        query: usize,
+        dispatch_ms: f64,
+        frame: &FramePayload,
+        ids: &[u64],
+        exec_ms: f64,
+        _dnn: bool,
+        transit: Option<&Transmission>,
+        _done_ms: f64,
+    ) {
+        let (egress_ms, bytes) = match transit {
+            Some(tx) => (dispatch_ms.max(tx.arrival_ms), tx.bytes),
+            None => (dispatch_ms, raw_wire_size(frame.width, frame.height) as u64),
+        };
+        self.records.push(EdgeDispatch {
+            query,
+            camera: frame.camera,
+            capture_ms: frame.capture_ms,
+            ids: ids.to_vec(),
+            exec_ms,
+            egress_ms,
+            bytes,
+        });
+    }
+}
+
+/// A node-tagged record in the aggregator's replay order.
+struct TaggedDispatch {
+    node: usize,
+    /// Record index within the node (engine event order): the
+    /// deterministic tiebreak inside one node.
+    idx: usize,
+    rec: EdgeDispatch,
+}
+
+/// Contiguous camera partition: `parts` ranges over `0..n`, first
+/// `n % parts` ranges one longer.
+fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run the two-tier fleet over `videos` (camera order = partition
+/// order) for the query set. `set` is shared by every node —
+/// fleet-wide training, node-local shedding.
+pub fn run_fleet(videos: &[Video], set: &QuerySet, cfg: &FleetConfig) -> Result<FleetReport> {
+    let e = cfg.topology.edge_nodes;
+    if videos.is_empty() {
+        bail!("run_fleet needs at least one camera");
+    }
+    if e == 0 || e > videos.len() {
+        bail!("edge_nodes must be in 1..={} (got {e})", videos.len());
+    }
+    if set.is_empty() {
+        bail!("query set is empty");
+    }
+    let m = cfg.topology.workers;
+    if cfg.topology.aggregator == AggregatorPolicy::DeadlineCapacity && m == 0 {
+        bail!("DeadlineCapacity aggregator needs at least one worker");
+    }
+
+    // --- Tier 1: every edge node is an independent multi-query run
+    // over its camera slice, recorded through the dispatch tap.
+    let parts = partition(videos.len(), e);
+    let node_results = parallel_map(
+        &parts,
+        cfg.topology.threads.max(1),
+        |node, range| -> Result<(MultiPipelineReport, Vec<EdgeDispatch>)> {
+            let node_videos = &videos[range.clone()];
+            let mut tier = cfg.edge.clone();
+            tier.seed = fleet_node_seed(cfg.edge.seed, node);
+            tier.fps_total = aggregate_fps(node_videos);
+            let node_cfg = MultiSimConfig::from_pipeline(&tier, cfg.edge_arbiter);
+            let extractor = Extractor::native(set.union_model().clone());
+            let mut backends = multi_backends(set, &node_cfg.costs, node_cfg.seed);
+            let mut executor = MultiSyncBackend::new(&mut backends);
+            let mut observer = RecordingObserver { records: Vec::new() };
+            let report = run_multi_pipeline_observed(
+                IterArrivals::new(Streamer::new(node_videos), node_cfg.fps_total),
+                &backgrounds_of(node_videos),
+                set,
+                &node_cfg,
+                &extractor,
+                &mut executor,
+                &mut SimClock,
+                &mut observer,
+            )?;
+            Ok((report, observer.records))
+        },
+    );
+
+    let mut nodes = Vec::with_capacity(e);
+    let mut records: Vec<TaggedDispatch> = Vec::new();
+    for (node, res) in node_results.into_iter().enumerate() {
+        let (report, recs) = res?;
+        records.extend(
+            recs.into_iter()
+                .enumerate()
+                .map(|(idx, rec)| TaggedDispatch { node, idx, rec }),
+        );
+        nodes.push(report);
+    }
+    // The aggregator's replay order: arrival time, then node, then the
+    // node's own event order — a deterministic total order independent
+    // of `threads`.
+    records.sort_by(|a, b| {
+        a.rec
+            .egress_ms
+            .total_cmp(&b.rec.egress_ms)
+            .then(a.node.cmp(&b.node))
+            .then(a.idx.cmp(&b.idx))
+    });
+
+    // --- Per-query fleet base: the existing metrics merge over nodes.
+    let k = set.len();
+    let mut merged: Vec<PipelineReport> = Vec::with_capacity(k);
+    for q in 0..k {
+        merged.push(
+            merge_reports(nodes.iter().map(|n| &n.queries[q].report))
+                .ok_or_else(|| anyhow!("fleet has at least one node"))?,
+        );
+    }
+
+    // --- Tier 2: replay the merged dispatch stream through the
+    // aggregator policy.
+    let mut decisions = Vec::with_capacity(records.len());
+    let mut completed = vec![0u64; k];
+    let mut agg_shed = vec![0u64; k];
+    let mut agg_lost = vec![0u64; k];
+    let mut cluster_frames = 0u64;
+    let mut cluster_bytes = 0u64;
+    let mut cluster_lost = 0u64;
+    let mut worker_frames = Vec::new();
+    let mut end_ms = nodes.iter().fold(0.0f64, |acc, n| acc.max(n.end_ms));
+
+    match cfg.topology.aggregator {
+        AggregatorPolicy::PassThrough => {
+            for t in &records {
+                completed[t.rec.query] += 1;
+                decisions.push(FleetDecision {
+                    node: t.node,
+                    query: t.rec.query,
+                    camera: t.rec.camera,
+                    capture_ms: t.rec.capture_ms,
+                    outcome: FleetOutcome::Forwarded,
+                });
+            }
+        }
+        AggregatorPolicy::DeadlineCapacity => {
+            let mut link = Link::new(cfg.aggregator.transport.link, cfg.aggregator.seed);
+            // One hop-B crossing per physical frame: query copies of
+            // the same (node, camera, capture) share the transmission,
+            // exactly like the edge tier's shared link.
+            let mut phys: HashMap<(usize, u32, u64), Transmission> = HashMap::new();
+            let mut busy = vec![0.0f64; m];
+            worker_frames = vec![0u64; m];
+            let mut latency: Vec<LatencyTracker> = set
+                .queries()
+                .iter()
+                .map(|q| LatencyTracker::new(q.config.latency_bound_ms))
+                .collect();
+            let mut latency_windows: Vec<WindowSeries> =
+                (0..k).map(|_| WindowSeries::new(5_000.0)).collect();
+
+            for t in &records {
+                let rec = &t.rec;
+                let q = rec.query;
+                let key = (t.node, rec.camera, rec.capture_ms.to_bits());
+                let tx = match phys.get(&key) {
+                    Some(tx) => *tx,
+                    None => {
+                        let tx = link.transmit_at(rec.egress_ms, rec.bytes, None);
+                        cluster_frames += 1;
+                        cluster_bytes += rec.bytes;
+                        if !tx.delivered {
+                            cluster_lost += 1;
+                        }
+                        phys.insert(key, tx);
+                        tx
+                    }
+                };
+                if !tx.delivered {
+                    agg_lost[q] += 1;
+                    merged[q].qor.demote(&rec.ids);
+                    decisions.push(FleetDecision {
+                        node: t.node,
+                        query: q,
+                        camera: rec.camera,
+                        capture_ms: rec.capture_ms,
+                        outcome: FleetOutcome::ClusterLinkDrop,
+                    });
+                    continue;
+                }
+                // Least-busy worker, lowest index on ties.
+                let (w, w_busy) = busy.iter().enumerate().fold(
+                    (0usize, f64::INFINITY),
+                    |(bi, bv), (i, &v)| if v < bv { (i, v) } else { (bi, bv) },
+                );
+                let done = tx.arrival_ms.max(w_busy) + rec.exec_ms;
+                let bound = set.queries()[q].config.latency_bound_ms;
+                if done - rec.capture_ms > bound {
+                    agg_shed[q] += 1;
+                    merged[q].qor.demote(&rec.ids);
+                    decisions.push(FleetDecision {
+                        node: t.node,
+                        query: q,
+                        camera: rec.camera,
+                        capture_ms: rec.capture_ms,
+                        outcome: FleetOutcome::AggregatorShed,
+                    });
+                    continue;
+                }
+                busy[w] = done;
+                worker_frames[w] += 1;
+                completed[q] += 1;
+                let e2e = done - rec.capture_ms;
+                latency[q].observe(e2e);
+                latency_windows[q].observe(rec.capture_ms, e2e);
+                end_ms = end_ms.max(done);
+                decisions.push(FleetDecision {
+                    node: t.node,
+                    query: q,
+                    camera: rec.camera,
+                    capture_ms: rec.capture_ms,
+                    outcome: FleetOutcome::Completed { worker: w },
+                });
+            }
+            // The fleet latency is the cluster's, not the edge
+            // estimate: swap the rebuilt trackers in.
+            for (r, (lat, win)) in merged
+                .iter_mut()
+                .zip(latency.into_iter().zip(latency_windows))
+            {
+                r.latency = lat;
+                r.latency_windows = win;
+            }
+        }
+    }
+
+    let queries = set
+        .queries()
+        .iter()
+        .zip(merged)
+        .enumerate()
+        .map(|(q, (cq, report))| FleetQueryReport {
+            name: cq.name.clone(),
+            report,
+            completed: completed[q],
+            agg_shed: agg_shed[q],
+            agg_link_dropped: agg_lost[q],
+        })
+        .collect();
+
+    Ok(FleetReport {
+        queries,
+        frames: nodes.iter().map(|n| n.frames).sum(),
+        extractions: nodes.iter().map(|n| n.extractions).sum(),
+        uplink_frames: nodes.iter().map(|n| n.wire_frames).sum(),
+        uplink_bytes: nodes.iter().map(|n| n.bytes_on_wire).sum(),
+        uplink_lost_frames: nodes.iter().map(|n| n.link_lost_frames).sum(),
+        cluster_frames,
+        cluster_bytes,
+        cluster_lost_frames: cluster_lost,
+        worker_frames,
+        nodes,
+        decisions,
+        end_ms,
+    })
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // test assertions
+mod tests {
+    use super::*;
+    use crate::color::NamedColor;
+    use crate::config::QueryConfig;
+    use crate::pipeline::transport::{LinkModel, TransportConfig};
+    use crate::shedder::QuerySpec;
+    use crate::video::wire::WireEncoding;
+    use crate::video::VideoConfig;
+
+    fn cameras(n: usize, frames: usize) -> Vec<Video> {
+        (0..n)
+            .map(|i| {
+                let mut vc = VideoConfig::new(11, 0xF1EE7 + i as u64, i as u32, frames);
+                vc.traffic.vehicle_rate = 0.35;
+                Video::new(vc)
+            })
+            .collect()
+    }
+
+    fn trained_set(videos: &[Video]) -> QuerySet {
+        let specs = vec![
+            QuerySpec::new("red", QueryConfig::single(NamedColor::Red)),
+            QuerySpec::new("yellow", QueryConfig::single(NamedColor::Yellow)),
+        ];
+        let idx: Vec<usize> = (0..videos.len()).collect();
+        QuerySet::train(&specs, videos, &idx).unwrap()
+    }
+
+    fn base_cfg(topology: FleetTopology) -> FleetConfig {
+        let tier = PipelineConfig { seed: 0xF1EE7, ..PipelineConfig::default() };
+        FleetConfig::uniform(tier, topology)
+    }
+
+    #[test]
+    fn pass_through_fleet_conserves_and_is_thread_invariant() {
+        let videos = cameras(4, 80);
+        let set = trained_set(&videos);
+        let mk = |threads| {
+            base_cfg(FleetTopology {
+                edge_nodes: 2,
+                workers: 1,
+                threads,
+                aggregator: AggregatorPolicy::PassThrough,
+            })
+        };
+        let serial = run_fleet(&videos, &set, &mk(1)).unwrap();
+        let parallel = run_fleet(&videos, &set, &mk(4)).unwrap();
+        assert_eq!(serial.frames, 4 * 80);
+        assert!(serial.conserves());
+        assert_eq!(serial.decisions, parallel.decisions);
+        assert_eq!(serial.uplink_bytes, parallel.uplink_bytes);
+        for (a, b) in serial.queries.iter().zip(&parallel.queries) {
+            assert_eq!(a.report.decisions, b.report.decisions);
+            assert_eq!(a.report.qor.overall(), b.report.qor.overall());
+            assert_eq!(a.completed, a.report.transmitted);
+        }
+        // Pass-through adds no second hop.
+        assert_eq!(serial.cluster_frames, 0);
+        assert!(serial.worker_frames.is_empty());
+    }
+
+    #[test]
+    fn deadline_capacity_sheds_when_the_cluster_is_small() {
+        let videos = cameras(6, 80);
+        let set = trained_set(&videos);
+        let mut cfg = base_cfg(FleetTopology {
+            edge_nodes: 3,
+            workers: 1,
+            threads: 2,
+            aggregator: AggregatorPolicy::DeadlineCapacity,
+        });
+        // A thin, lossy hop-B link: some frames miss their deadline or
+        // die on the wire, and conservation must still be exact.
+        cfg.aggregator.transport = TransportConfig {
+            link: LinkModel { loss: 0.05, max_retransmits: 0, ..LinkModel::mbps(4.0) },
+            encoding: WireEncoding::Raw,
+        };
+        let r = run_fleet(&videos, &set, &cfg).unwrap();
+        assert!(r.conserves(), "cross-tier conservation");
+        assert_eq!(r.worker_frames.len(), 1);
+        let total_agg: u64 = r.queries.iter().map(|q| q.agg_shed + q.agg_link_dropped).sum();
+        assert!(total_agg > 0, "one worker behind a thin link must shed");
+        let completed: u64 = r.queries.iter().map(|q| q.completed).sum();
+        assert_eq!(completed, r.worker_frames.iter().sum::<u64>());
+        assert!(r.cluster_frames > 0 && r.cluster_bytes > 0);
+        // Deterministic replay: same seed, same log.
+        let again = run_fleet(&videos, &set, &cfg).unwrap();
+        assert_eq!(r.decisions, again.decisions);
+    }
+
+    #[test]
+    fn worker_scaling_reduces_aggregator_sheds() {
+        let videos = cameras(6, 80);
+        let set = trained_set(&videos);
+        let mk = |workers| {
+            base_cfg(FleetTopology {
+                edge_nodes: 3,
+                workers,
+                threads: 2,
+                aggregator: AggregatorPolicy::DeadlineCapacity,
+            })
+        };
+        let one = run_fleet(&videos, &set, &mk(1)).unwrap();
+        let many = run_fleet(&videos, &set, &mk(8)).unwrap();
+        let sheds = |r: &FleetReport| -> u64 { r.queries.iter().map(|q| q.agg_shed).sum() };
+        assert!(
+            sheds(&many) <= sheds(&one),
+            "more workers cannot shed more ({} vs {})",
+            sheds(&many),
+            sheds(&one)
+        );
+        assert!(many.conserves() && one.conserves());
+    }
+
+    #[test]
+    fn bad_topologies_are_rejected() {
+        let videos = cameras(2, 10);
+        let set = trained_set(&videos);
+        let zero_nodes = base_cfg(FleetTopology { edge_nodes: 0, ..FleetTopology::default() });
+        assert!(run_fleet(&videos, &set, &zero_nodes).is_err());
+        let too_many = base_cfg(FleetTopology { edge_nodes: 3, ..FleetTopology::default() });
+        assert!(run_fleet(&videos, &set, &too_many).is_err());
+        let no_workers = base_cfg(FleetTopology {
+            edge_nodes: 1,
+            workers: 0,
+            threads: 1,
+            aggregator: AggregatorPolicy::DeadlineCapacity,
+        });
+        assert!(run_fleet(&videos, &set, &no_workers).is_err());
+    }
+
+    #[test]
+    fn partition_is_contiguous_and_covers() {
+        assert_eq!(partition(10, 3), vec![0..4, 4..7, 7..10]);
+        assert_eq!(partition(4, 4), vec![0..1, 1..2, 2..3, 3..4]);
+        assert_eq!(partition(5, 1), vec![0..5]);
+    }
+}

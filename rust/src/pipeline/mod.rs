@@ -28,6 +28,14 @@
 //! * [`supervise`] — the supervised worker-thread harness behind the
 //!   realtime backends: restart-on-crash with bounded retries and
 //!   exponential backoff, timeout-bounded rendezvous.
+//! * [`fleet`] — fleet-scale hierarchical shedding: E edge nodes (each
+//!   a multi-query run over its camera slice) feed a regional
+//!   aggregator running a second-level shedder in front of M backend
+//!   workers, with cross-tier conservation and deterministic replay.
+//! * [`builder`] — the unified entry point: [`Pipeline::builder()`]
+//!   composes one [`PipelineConfig`] template into any deployment
+//!   (sim / multi-query / realtime / sharded / fleet), replacing the
+//!   historical free-function matrix (kept as thin wrappers).
 
 // The pipeline is the long-running production surface: a stray panic in
 // it takes the whole edge deployment down, so unwrap/expect must either
@@ -35,8 +43,10 @@
 // justification under `#[allow]` (tests are blanket-allowed).
 #![warn(clippy::unwrap_used, clippy::expect_used)]
 
+pub mod builder;
 pub mod core;
 pub mod faults;
+pub mod fleet;
 pub mod multi;
 pub mod parallel;
 pub mod realtime;
@@ -47,11 +57,19 @@ pub mod workloads;
 
 pub use self::core::{
     backgrounds_of, run_pipeline, ArrivalModel, BackendExecutor, BackgroundMap, Clock,
-    EventClass, FrameDecision, FramePayload, PipelineReport, Policy, SimClock, SimConfig,
-    SyncBackend, WallClock,
+    EventClass, FrameDecision, FramePayload, PipelineConfig, PipelineReport, Policy, SimClock,
+    SimConfig, SyncBackend, WallClock,
+};
+pub use builder::{
+    FleetBuilder, MultiQueryBuilder, MultiRealtimeBuilder, Pipeline, PipelineBuilder,
+    RealtimeBuilder, ShardedBuilder, SimBuilder,
 };
 pub use crate::utility::{AdaptEvent, AdaptEventKind, AdaptationConfig, AdaptationStats};
 pub use faults::{FaultKind, FaultPlan, FaultStats, FaultWindow, PoisonKind};
+pub use fleet::{
+    fleet_node_seed, run_fleet, AggregatorPolicy, FleetConfig, FleetDecision, FleetOutcome,
+    FleetQueryReport, FleetReport, FleetTopology,
+};
 pub use multi::{
     multi_backend_seed, multi_backends, run_multi_pipeline, MultiBackendExecutor,
     MultiPipelineReport, MultiSimConfig, MultiSyncBackend, QueryReport,
@@ -59,6 +77,7 @@ pub use multi::{
 pub use parallel::{
     default_threads, merge_reports, parallel_map, run_sharded_sim, run_sharded_sim_with,
 };
+pub use realtime::{RealtimeConfig, RealtimeOpts, RealtimeReport};
 pub use sim::{run_multi_sim, run_multi_sim_with, run_sim, run_sim_with, SimReport};
 pub use supervise::{Runner, RunnerFactory, SupervisedWorker, SupervisorConfig};
 pub use transport::{Link, LinkModel, Transmission, TransportConfig};

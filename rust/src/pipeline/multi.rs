@@ -37,7 +37,7 @@ use crate::features::{Extractor, FrameFeatures, UtilityValues};
 use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts, WindowSeries};
 use crate::pipeline::core::{
     ArrivalModel, BackgroundMap, Clock, EventClass, EventQueue, FrameDecision, FramePayload,
-    PipelineReport,
+    PipelineConfig, PipelineReport,
 };
 use crate::pipeline::faults::{FaultPlan, FaultStats, PoisonKind};
 use crate::pipeline::transport::{Transmission, TransportConfig, TransportState};
@@ -74,6 +74,28 @@ pub struct MultiSimConfig {
     /// immediately (per-query token buckets make the token-recovery dance
     /// redundant) and there is no watchdog/liveness degraded mode here.
     pub faults: FaultPlan,
+}
+
+impl MultiSimConfig {
+    /// Project the shared lifecycle template
+    /// ([`PipelineConfig`](crate::pipeline::PipelineConfig)) onto the
+    /// multi-query config, adding the one multi-only knob (the arbiter).
+    /// The single-query-only fields don't apply here: per-query
+    /// `QueryConfig`s live in the [`QuerySet`], the multi engine always
+    /// runs the utility control loop, and multi-query adaptation is
+    /// still a roadmap item.
+    pub fn from_pipeline(p: &PipelineConfig, arbiter: ArbiterPolicy) -> Self {
+        MultiSimConfig {
+            costs: p.costs.clone(),
+            shedder: p.shedder.clone(),
+            backend_tokens: p.backend_tokens,
+            arbiter,
+            seed: p.seed,
+            fps_total: p.fps_total,
+            transport: p.transport,
+            faults: p.faults.clone(),
+        }
+    }
 }
 
 /// One query's slice of a multi-query run: the full single-query metrics
@@ -484,11 +506,56 @@ impl MultiFeeder {
     }
 }
 
+/// Per-dispatch observation hook on the multi-query engine: the fleet
+/// tier records every edge dispatch (the aggregator's ingress stream)
+/// without perturbing the engine. The hook only *reads* — the no-op impl
+/// compiles away and [`run_multi_pipeline`] stays bit-identical.
+pub(crate) trait DispatchObserver {
+    /// One (query, frame) dispatch. `dispatch_ms` is the query's virtual
+    /// clock at dispatch, `frame` the shared payload (still alive at the
+    /// tap), `ids` the query's ground-truth target ids (the callback
+    /// fires before they recycle), `exec_ms` the post-slowdown backend
+    /// service demand, `transit` the frame's one shared-link crossing
+    /// (`None` under an ideal link), `done_ms` the completion's virtual
+    /// due time.
+    #[allow(clippy::too_many_arguments)]
+    fn on_dispatch(
+        &mut self,
+        query: usize,
+        dispatch_ms: f64,
+        frame: &FramePayload,
+        ids: &[u64],
+        exec_ms: f64,
+        dnn: bool,
+        transit: Option<&Transmission>,
+        done_ms: f64,
+    );
+}
+
+/// The default observer: observes nothing.
+pub(crate) struct NoopObserver;
+
+impl DispatchObserver for NoopObserver {
+    #[inline]
+    fn on_dispatch(
+        &mut self,
+        _: usize,
+        _: f64,
+        _: &FramePayload,
+        _: &[u64],
+        _: f64,
+        _: bool,
+        _: Option<&Transmission>,
+        _: f64,
+    ) {
+    }
+}
+
 /// Run N queries over one shared stream, under a clock, against a
 /// multi-query backend executor. `extractor` must be built from the
 /// set's union model ([`QuerySet::union_model`]).
 pub fn run_multi_pipeline<A, E, C>(
-    mut arrivals: A,
+    arrivals: A,
     backgrounds: &BackgroundMap<'_>,
     set: &QuerySet,
     cfg: &MultiSimConfig,
@@ -500,6 +567,39 @@ where
     A: ArrivalModel,
     E: MultiBackendExecutor,
     C: Clock,
+{
+    run_multi_pipeline_observed(
+        arrivals,
+        backgrounds,
+        set,
+        cfg,
+        extractor,
+        executor,
+        clock,
+        &mut NoopObserver,
+    )
+}
+
+/// [`run_multi_pipeline`] with a [`DispatchObserver`] tap on the dispatch
+/// path (the fleet edge tier's recording hook). The observer never feeds
+/// back into the engine, so the run is bit-identical to the unobserved
+/// one.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_multi_pipeline_observed<A, E, C, O>(
+    mut arrivals: A,
+    backgrounds: &BackgroundMap<'_>,
+    set: &QuerySet,
+    cfg: &MultiSimConfig,
+    extractor: &Extractor,
+    executor: &mut E,
+    clock: &mut C,
+    observer: &mut O,
+) -> anyhow::Result<MultiPipelineReport>
+where
+    A: ArrivalModel,
+    E: MultiBackendExecutor,
+    C: Clock,
+    O: DispatchObserver,
 {
     let k = set.len();
     if k == 0 {
@@ -743,7 +843,6 @@ where
                     capture_ms: rc.capture_ms,
                     kept: true,
                 });
-                recycle(&mut feeder.id_pool, ids);
                 let capture_ms = rc.capture_ms;
                 if let Some(tx) = transit {
                     st.transmit_ms_total += tx.transfer_ms;
@@ -756,7 +855,6 @@ where
                 // Fault: straggler slowdown (see the single-query engine).
                 let slow = faults.slowdown(now_q);
                 let exec_ms = if slow != 1.0 { exec_ms * slow } else { exec_ms };
-                drop(rc);
                 let st = &mut states[q];
                 st.stages.observe(Stage::BlobFilter, capture_ms);
                 if last_stage >= Stage::ColorFilter {
@@ -777,6 +875,20 @@ where
                     // the frame's one delivery.
                     Some(tx) => st.now.max(tx.arrival_ms) + exec_ms,
                 };
+                observer.on_dispatch(
+                    q,
+                    now_q,
+                    &rc,
+                    &ids,
+                    exec_ms,
+                    dnn,
+                    transit.as_ref(),
+                    done_at,
+                );
+                // Recycled after the observer tap (behavior-neutral: the
+                // pool is only consumed at the next ingress event).
+                recycle(&mut feeder.id_pool, ids);
+                drop(rc);
                 eq.push(
                     done_at,
                     MEvent::Completion { query: q, seq, capture_ms, exec_ms, dnn },

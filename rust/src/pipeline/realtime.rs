@@ -34,7 +34,7 @@ use crate::features::Extractor;
 use crate::metrics::{LatencyTracker, QorTracker, Stage, StageCounts};
 use crate::pipeline::core::{
     backgrounds_of, run_pipeline, ArrivalModel, BackendExecutor, FrameDecision, FramePayload,
-    Policy, SimConfig, WallClock,
+    PipelineConfig, Policy, SimConfig, WallClock,
 };
 use crate::pipeline::faults::{FaultPlan, FaultStats};
 use crate::pipeline::multi::{
@@ -99,23 +99,103 @@ pub struct RealtimeConfig {
 
 impl Default for RealtimeConfig {
     fn default() -> Self {
-        RealtimeConfig {
-            query: QueryConfig::single(crate::color::NamedColor::Red),
-            shedder: ShedderConfig::default(),
-            costs: CostConfig::default(),
+        RealtimeConfig::from_pipeline(&PipelineConfig::default(), RealtimeOpts::default())
+    }
+}
+
+/// The wall-clock-only knobs of a realtime run — everything
+/// [`RealtimeConfig`] carries beyond the shared
+/// [`PipelineConfig`](crate::pipeline::PipelineConfig) slice (pacing,
+/// cost emulation, artifact choice, worker supervision). This is the
+/// argument of the builder's `.realtime(...)` mode selector.
+#[derive(Debug, Clone)]
+pub struct RealtimeOpts {
+    /// See [`RealtimeConfig::cost_emulation_scale`].
+    pub cost_emulation_scale: f64,
+    /// See [`RealtimeConfig::time_scale`].
+    pub time_scale: f64,
+    /// See [`RealtimeConfig::use_artifacts`].
+    pub use_artifacts: bool,
+    /// See [`RealtimeConfig::backend_recv_timeout_ms`].
+    pub backend_recv_timeout_ms: f64,
+    /// See [`RealtimeConfig::worker_restart_max`].
+    pub worker_restart_max: u32,
+    /// See [`RealtimeConfig::worker_restart_backoff_ms`].
+    pub worker_restart_backoff_ms: f64,
+}
+
+impl Default for RealtimeOpts {
+    /// The historical `RealtimeConfig::default()` wall-clock values:
+    /// real-time pacing with cost emulation, the AOT artifact path, a
+    /// 30 s rendezvous timeout and a 2-restart worker budget.
+    fn default() -> Self {
+        RealtimeOpts {
             cost_emulation_scale: 1.0,
             time_scale: 1.0,
-            backend_tokens: 1,
             use_artifacts: true,
-            policy: Policy::UtilityControlLoop,
-            seed: 0xB_E,
-            arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
-            transport: TransportConfig::default(),
             backend_recv_timeout_ms: 30_000.0,
             worker_restart_max: 2,
             worker_restart_backoff_ms: 50.0,
-            faults: FaultPlan::default(),
-            adaptation: crate::utility::AdaptationConfig::default(),
+        }
+    }
+}
+
+impl RealtimeOpts {
+    /// The common test/demo configuration: native oracle (no artifacts),
+    /// no cost emulation, `time_scale`× fast-forward pacing.
+    pub fn fast_forward(time_scale: f64) -> Self {
+        RealtimeOpts {
+            cost_emulation_scale: 0.0,
+            time_scale,
+            use_artifacts: false,
+            ..RealtimeOpts::default()
+        }
+    }
+}
+
+impl RealtimeConfig {
+    /// Compose the shared lifecycle template with the wall-clock extras.
+    /// `p.fps_total` is ignored — the realtime drivers always take the
+    /// rate from the arrival model; the arbiter keeps its default
+    /// (work-conserving weighted fair share) and only matters for the
+    /// multi-query entry points.
+    pub fn from_pipeline(p: &PipelineConfig, opts: RealtimeOpts) -> Self {
+        RealtimeConfig {
+            query: p.query.clone(),
+            shedder: p.shedder.clone(),
+            costs: p.costs.clone(),
+            cost_emulation_scale: opts.cost_emulation_scale,
+            time_scale: opts.time_scale,
+            backend_tokens: p.backend_tokens,
+            use_artifacts: opts.use_artifacts,
+            policy: p.policy.clone(),
+            seed: p.seed,
+            arbiter: ArbiterPolicy::WeightedFair { work_conserving: true },
+            transport: p.transport,
+            backend_recv_timeout_ms: opts.backend_recv_timeout_ms,
+            worker_restart_max: opts.worker_restart_max,
+            worker_restart_backoff_ms: opts.worker_restart_backoff_ms,
+            faults: p.faults.clone(),
+            adaptation: p.adaptation.clone(),
+        }
+    }
+
+    /// The shared lifecycle slice of this config, with `fps_total` from
+    /// the arrival model — what the core engine actually runs on. The
+    /// historical field-by-field hand-copies into `SimConfig` /
+    /// `MultiSimConfig` route through here now.
+    pub fn pipeline(&self, fps_total: f64) -> PipelineConfig {
+        PipelineConfig {
+            costs: self.costs.clone(),
+            shedder: self.shedder.clone(),
+            query: self.query.clone(),
+            backend_tokens: self.backend_tokens,
+            policy: self.policy.clone(),
+            seed: self.seed,
+            fps_total,
+            transport: self.transport,
+            faults: self.faults.clone(),
+            adaptation: self.adaptation.clone(),
         }
     }
 }
@@ -291,6 +371,7 @@ impl BackendExecutor for ThreadedBackend {
 }
 
 /// Run the multi-camera stream through the real-time pipeline.
+#[doc = "Deprecated: use `Pipeline::builder()` (`.realtime(opts).run(videos, model)`); this free function is kept as a thin compatibility wrapper."]
 pub fn run_realtime(
     videos: &[Video],
     model: &UtilityModel,
@@ -307,6 +388,7 @@ pub fn run_realtime(
 
 /// [`run_realtime`] over any [`ArrivalModel`] — the wall-clock driver
 /// against a pluggable workload (bursty Poisson ingress, camera churn, …).
+#[doc = "Deprecated: use `Pipeline::builder()` (`.realtime(opts).run_with(videos, model, arrivals)`); this free function is kept as a thin compatibility wrapper."]
 pub fn run_realtime_with<A: ArrivalModel>(
     videos: &[Video],
     model: &UtilityModel,
@@ -314,18 +396,7 @@ pub fn run_realtime_with<A: ArrivalModel>(
     arrivals: A,
 ) -> Result<RealtimeReport> {
     let start = Instant::now();
-    let core_cfg = SimConfig {
-        costs: cfg.costs.clone(),
-        shedder: cfg.shedder.clone(),
-        query: cfg.query.clone(),
-        backend_tokens: cfg.backend_tokens,
-        policy: cfg.policy.clone(),
-        seed: cfg.seed,
-        fps_total: arrivals.fps_total(),
-        transport: cfg.transport,
-        faults: cfg.faults.clone(),
-        adaptation: cfg.adaptation.clone(),
-    };
+    let core_cfg: SimConfig = cfg.pipeline(arrivals.fps_total()).into();
 
     let extractor = if cfg.use_artifacts {
         let engine = Engine::from_default_artifacts()?;
@@ -524,6 +595,7 @@ impl MultiBackendExecutor for MultiThreadedBackend {
 /// the wall-clock pipeline (the multi-query analogue of
 /// [`run_realtime`]). Decisions are clock-invariant with
 /// [`crate::pipeline::run_multi_sim`] for the same seed and stream.
+#[doc = "Deprecated: use `Pipeline::builder()` (`.multi_query(set).realtime(opts).run(videos)`); this free function is kept as a thin compatibility wrapper."]
 pub fn run_multi_realtime(
     videos: &[Video],
     set: &QuerySet,
@@ -539,22 +611,15 @@ pub fn run_multi_realtime(
 }
 
 /// [`run_multi_realtime`] over any [`ArrivalModel`] workload.
+#[doc = "Deprecated: use `Pipeline::builder()` (`.multi_query(set).realtime(opts).run_with(videos, arrivals)`); this free function is kept as a thin compatibility wrapper."]
 pub fn run_multi_realtime_with<A: ArrivalModel>(
     videos: &[Video],
     set: &QuerySet,
     cfg: &RealtimeConfig,
     arrivals: A,
 ) -> Result<MultiPipelineReport> {
-    let core_cfg = MultiSimConfig {
-        costs: cfg.costs.clone(),
-        shedder: cfg.shedder.clone(),
-        backend_tokens: cfg.backend_tokens,
-        arbiter: cfg.arbiter,
-        seed: cfg.seed,
-        fps_total: arrivals.fps_total(),
-        transport: cfg.transport,
-        faults: cfg.faults.clone(),
-    };
+    let core_cfg =
+        MultiSimConfig::from_pipeline(&cfg.pipeline(arrivals.fps_total()), cfg.arbiter);
     let union = set.union_model();
     let extractor = if cfg.use_artifacts {
         if union.colors.len() > 2 {

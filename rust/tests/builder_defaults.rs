@@ -1,0 +1,163 @@
+//! Defaults audit for the unified builder (`Pipeline::builder()`):
+//!
+//! 1. **Field pin** — `PipelineConfig::default()` carries exactly the
+//!    values the historical per-driver config literals spelled out, so
+//!    replacing a literal with the builder can never silently move a
+//!    knob.
+//! 2. **Run pin** — a builder run touched only where the historical
+//!    code differed from the defaults (fps) bit-matches the fully
+//!    spelled-out `SimConfig` literal through the free function.
+//! 3. **Shared slice** — `RealtimeConfig::default()` embeds the same
+//!    `PipelineConfig` slice plus the documented wall-clock-only knobs.
+
+use uals::backend::{BackendQuery, CostModel, Detector};
+use uals::color::NamedColor;
+use uals::config::{CostConfig, QueryConfig, ShedderConfig};
+use uals::features::Extractor;
+use uals::pipeline::{
+    backgrounds_of, run_sim, FaultPlan, Pipeline, PipelineConfig, Policy, RealtimeConfig,
+    SimConfig, TransportConfig,
+};
+use uals::utility::{train, AdaptationConfig, Combine};
+use uals::video::{
+    streamer::aggregate_fps, Streamer, Video, VideoConfig, WireEncoding, MIN_TARGET_PX,
+};
+
+fn cameras(n: usize, frames: usize) -> Vec<Video> {
+    (0..n)
+        .map(|i| {
+            let mut vc =
+                VideoConfig::new(0xDEF + i as u64 % 2, 0xDEF0 + i as u64, i as u32, frames);
+            vc.traffic.vehicle_rate = 0.35;
+            Video::new(vc)
+        })
+        .collect()
+}
+
+#[test]
+fn pipeline_defaults_pin_the_historical_literals() {
+    let p = PipelineConfig::default();
+
+    // CostConfig: the paper-calibrated stage costs.
+    assert_eq!(p.costs.cam_ms, 30.0);
+    assert_eq!(p.costs.blob_ms, 4.0);
+    assert_eq!(p.costs.color_ms, 1.5);
+    assert_eq!(p.costs.dnn_ms, 120.0);
+    assert_eq!(p.costs.sink_ms, 1.0);
+    assert_eq!(p.costs.net_cam_ls_ms, 5.0);
+    assert_eq!(p.costs.net_ls_q_ms, 5.0);
+    assert_eq!(p.costs.jitter, 0.08);
+
+    // ShedderConfig: §IV-C/D tuning.
+    assert_eq!(p.shedder.history, 600);
+    assert_eq!(p.shedder.update_every, 5);
+    assert_eq!(p.shedder.queue_cap_max, 16);
+    assert_eq!(p.shedder.proc_ewma_alpha, 0.3);
+    assert!(p.shedder.watchdog_ms.is_infinite(), "watchdog off by default");
+    assert!(p.shedder.camera_liveness_ms.is_infinite(), "liveness off by default");
+
+    // Query: single red, paper blob floor, 1 s bound.
+    assert_eq!(p.query.colors, vec![NamedColor::Red]);
+    assert_eq!(p.query.combine, Combine::Single);
+    assert_eq!(p.query.min_blob_px, MIN_TARGET_PX);
+    assert_eq!(p.query.latency_bound_ms, 1000.0);
+
+    // Driver knobs.
+    assert_eq!(p.backend_tokens, 1);
+    assert!(matches!(p.policy, Policy::UtilityControlLoop));
+    assert_eq!(p.seed, 0xB_E);
+    assert_eq!(p.fps_total, 10.0);
+
+    // Transport / faults / adaptation: all off.
+    assert!(p.transport.is_ideal(), "default link must be ideal");
+    assert_eq!(p.transport.encoding, WireEncoding::Raw);
+    assert!(p.faults.is_empty(), "default fault plan must be empty");
+    assert!(!p.adaptation.enabled, "adaptation off by default");
+
+    // The builder with no setters is exactly this default, and the
+    // SimConfig round trip preserves it.
+    let built: SimConfig = Pipeline::builder().build().into();
+    assert_eq!(built.seed, 0xB_E);
+    assert_eq!(built.fps_total, 10.0);
+    assert_eq!(built.query.colors, vec![NamedColor::Red]);
+}
+
+#[test]
+fn builder_default_run_matches_the_spelled_out_literal() {
+    let videos = cameras(3, 140);
+    let fps = aggregate_fps(&videos);
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    let model = train(&videos, &idx, &[NamedColor::Red], Combine::Single);
+
+    // The fully spelled-out historical literal (every field explicit).
+    let cfg = SimConfig {
+        costs: CostConfig::default(),
+        shedder: ShedderConfig::default(),
+        query: QueryConfig::single(NamedColor::Red),
+        backend_tokens: 1,
+        policy: Policy::UtilityControlLoop,
+        seed: 0xB_E,
+        fps_total: fps,
+        transport: TransportConfig::default(),
+        faults: FaultPlan::default(),
+        adaptation: AdaptationConfig::default(),
+    };
+    let extractor = Extractor::native(model.clone());
+    let mut backend = BackendQuery::new(
+        cfg.query.clone(),
+        Detector::native(12, 25.0),
+        CostModel::new(cfg.costs.clone(), cfg.seed),
+        25.0,
+    );
+    let hist = run_sim(
+        Streamer::new(&videos),
+        &backgrounds_of(&videos),
+        &cfg,
+        &extractor,
+        &mut backend,
+    )
+    .expect("literal run");
+
+    // The builder, touching only what the literal changed (fps).
+    let built = Pipeline::builder()
+        .fps_total(fps)
+        .sim()
+        .run(&videos, &model)
+        .expect("builder run");
+
+    assert_eq!(hist.decisions, built.decisions, "decision logs must be bit-identical");
+    assert_eq!(hist.ingress, built.ingress);
+    assert_eq!(hist.transmitted, built.transmitted);
+    assert_eq!(hist.shed, built.shed);
+    assert_eq!(hist.qor.overall(), built.qor.overall());
+    assert_eq!(hist.latency.count(), built.latency.count());
+    assert_eq!(hist.latency.max_ms(), built.latency.max_ms());
+}
+
+#[test]
+fn realtime_default_embeds_the_shared_pipeline_slice() {
+    let rt = RealtimeConfig::default();
+    let p = PipelineConfig::default();
+
+    // Shared slice: identical to PipelineConfig::default().
+    assert_eq!(rt.seed, p.seed);
+    assert_eq!(rt.backend_tokens, p.backend_tokens);
+    assert!(matches!(rt.policy, Policy::UtilityControlLoop));
+    assert_eq!(rt.query.colors, p.query.colors);
+    assert_eq!(rt.query.latency_bound_ms, p.query.latency_bound_ms);
+    assert_eq!(rt.costs.dnn_ms, p.costs.dnn_ms);
+    assert_eq!(rt.costs.jitter, p.costs.jitter);
+    assert_eq!(rt.shedder.history, p.shedder.history);
+    assert_eq!(rt.shedder.queue_cap_max, p.shedder.queue_cap_max);
+    assert!(rt.transport.is_ideal());
+    assert!(rt.faults.is_empty());
+    assert!(!rt.adaptation.enabled);
+
+    // Wall-clock-only knobs: the documented RealtimeOpts defaults.
+    assert_eq!(rt.cost_emulation_scale, 1.0);
+    assert_eq!(rt.time_scale, 1.0);
+    assert!(rt.use_artifacts);
+    assert_eq!(rt.backend_recv_timeout_ms, 30_000.0);
+    assert_eq!(rt.worker_restart_max, 2);
+    assert_eq!(rt.worker_restart_backoff_ms, 50.0);
+}

@@ -1,0 +1,221 @@
+//! Fleet correctness properties:
+//!
+//! 1. **Tier equivalence** — a 1-node pass-through fleet over ideal
+//!    links is *exactly* `run_multi_sim`: per-query decision logs, QoR,
+//!    per-object recall, control series and latency bit-match, so the
+//!    fleet wrapper provably adds nothing to the single-site semantics.
+//! 2. **Deterministic replay** — the fleet decision log is identical
+//!    across repeat runs and across tier-1 thread counts, including
+//!    under a lossy hop-B link and the deadline-capacity aggregator.
+//! 3. **Cross-tier conservation** — under randomized fault storms on
+//!    every edge node, each query's ledger still balances exactly:
+//!    ingress = completed + edge shed + aggregator shed + hop-A losses
+//!    + hop-B losses + fault-destroyed.
+
+use uals::experiments::scenarios::multiquery_pool;
+use uals::pipeline::{
+    run_fleet, run_multi_sim, AggregatorPolicy, FaultPlan, FleetConfig, FleetTopology,
+    LinkModel, MultiSimConfig, Pipeline, PipelineConfig, TransportConfig,
+};
+use uals::features::Extractor;
+use uals::shedder::{ArbiterPolicy, QuerySet};
+use uals::video::{
+    streamer::aggregate_fps, Streamer, Video, VideoConfig, WireEncoding,
+};
+
+fn cameras(n: usize, frames: usize, seed: u64) -> Vec<Video> {
+    (0..n)
+        .map(|i| {
+            let mut vc = VideoConfig::new(0xF1E ^ seed, seed * 41 + i as u64, i as u32, frames);
+            vc.traffic.vehicle_rate = 0.4;
+            Video::new(vc)
+        })
+        .collect()
+}
+
+fn trained_set(videos: &[Video], k: usize) -> QuerySet {
+    let specs = multiquery_pool()[..k].to_vec();
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    QuerySet::train(&specs, videos, &idx).unwrap()
+}
+
+#[test]
+fn one_node_pass_through_fleet_is_exactly_run_multi_sim() {
+    for content_seed in [0x21u64, 0x5A] {
+        let videos = cameras(3, 100, content_seed);
+        let set = trained_set(&videos, 3);
+        let seed = 0xF1EE7;
+
+        // The reference: the plain multi-query engine, default
+        // (jittered) costs, ideal transport — the historical deployment.
+        let tier = PipelineConfig {
+            seed,
+            fps_total: aggregate_fps(&videos),
+            ..PipelineConfig::default()
+        };
+        let mcfg = MultiSimConfig::from_pipeline(
+            &tier,
+            ArbiterPolicy::WeightedFair { work_conserving: true },
+        );
+        let extractor = Extractor::native(set.union_model().clone());
+        let mut backends = uals::pipeline::multi_backends(&set, &mcfg.costs, mcfg.seed);
+        let reference = run_multi_sim(
+            Streamer::new(&videos),
+            &uals::pipeline::backgrounds_of(&videos),
+            &set,
+            &mcfg,
+            &extractor,
+            &mut backends,
+        )
+        .unwrap();
+
+        // The fleet: one edge node, pass-through aggregator, both hops
+        // ideal. Node 0 keeps the base seed, so the engines must agree
+        // bit for bit.
+        let fleet = Pipeline::builder()
+            .seed(seed)
+            .fleet(FleetTopology {
+                edge_nodes: 1,
+                workers: 1,
+                threads: 1,
+                aggregator: AggregatorPolicy::PassThrough,
+            })
+            .run(&videos, &set)
+            .unwrap();
+
+        assert!(fleet.conserves(), "seed {content_seed:x}: conservation");
+        assert_eq!(fleet.frames, reference.frames);
+        assert_eq!(fleet.extractions, reference.extractions);
+        assert_eq!(fleet.uplink_bytes, reference.bytes_on_wire);
+        for (q, (fq, rq)) in fleet.queries.iter().zip(&reference.queries).enumerate() {
+            let label = format!("seed {content_seed:x} query {q} ({})", fq.name);
+            assert_eq!(fq.name, rq.name, "{label}: name");
+            assert_eq!(fq.report.ingress, rq.report.ingress, "{label}: ingress");
+            assert_eq!(fq.report.transmitted, rq.report.transmitted, "{label}: transmitted");
+            assert_eq!(fq.report.shed, rq.report.shed, "{label}: shed");
+            assert_eq!(fq.completed, rq.report.transmitted, "{label}: completed");
+            assert_eq!(fq.agg_shed, 0, "{label}: pass-through never sheds");
+            assert_eq!(fq.agg_link_dropped, 0, "{label}: ideal hop B never drops");
+            assert_eq!(
+                fq.report.decisions.len(),
+                rq.report.decisions.len(),
+                "{label}: decision counts"
+            );
+            for (i, (a, b)) in fq.report.decisions.iter().zip(&rq.report.decisions).enumerate()
+            {
+                assert_eq!(a, b, "{label}: decision {i} diverges");
+            }
+            assert_eq!(fq.report.qor.overall(), rq.report.qor.overall(), "{label}: QoR");
+            assert_eq!(
+                fq.report.qor.per_object_all(),
+                rq.report.qor.per_object_all(),
+                "{label}: per-object QoR"
+            );
+            assert_eq!(
+                fq.report.control_series, rq.report.control_series,
+                "{label}: control series"
+            );
+            assert_eq!(
+                fq.report.latency.count(),
+                rq.report.latency.count(),
+                "{label}: completions"
+            );
+            assert_eq!(
+                fq.report.latency.max_ms(),
+                rq.report.latency.max_ms(),
+                "{label}: max e2e"
+            );
+        }
+    }
+}
+
+#[test]
+fn fleet_decision_log_is_thread_and_replay_invariant() {
+    let videos = cameras(6, 80, 0x7C);
+    let set = trained_set(&videos, 2);
+    let mk = |threads| {
+        let tier = PipelineConfig { seed: 0xACE, ..PipelineConfig::default() };
+        let mut cfg = FleetConfig::uniform(
+            tier,
+            FleetTopology {
+                edge_nodes: 3,
+                workers: 2,
+                threads,
+                aggregator: AggregatorPolicy::DeadlineCapacity,
+            },
+        );
+        // Thin lossy hop B: losses and deadline sheds must replay
+        // identically too.
+        cfg.aggregator.transport = TransportConfig {
+            link: LinkModel { loss: 0.08, max_retransmits: 0, ..LinkModel::mbps(4.0) },
+            encoding: WireEncoding::Raw,
+        };
+        cfg
+    };
+    let serial = run_fleet(&videos, &set, &mk(1)).unwrap();
+    let threaded = run_fleet(&videos, &set, &mk(4)).unwrap();
+    let replay = run_fleet(&videos, &set, &mk(4)).unwrap();
+
+    assert!(serial.conserves());
+    assert_eq!(serial.decisions, threaded.decisions, "thread-count invariance");
+    assert_eq!(threaded.decisions, replay.decisions, "replay determinism");
+    assert_eq!(serial.worker_frames, threaded.worker_frames);
+    assert_eq!(serial.cluster_bytes, threaded.cluster_bytes);
+    for (a, b) in serial.queries.iter().zip(&threaded.queries) {
+        assert_eq!(a.completed, b.completed, "{}", a.name);
+        assert_eq!(a.agg_shed, b.agg_shed, "{}", a.name);
+        assert_eq!(a.agg_link_dropped, b.agg_link_dropped, "{}", a.name);
+        assert_eq!(a.report.qor.overall(), b.report.qor.overall(), "{}", a.name);
+    }
+}
+
+#[test]
+fn conservation_holds_under_randomized_fault_storms() {
+    // Chaos property: seeded random fault storms on every edge node,
+    // a modeled lossy uplink AND a lossy hop-B link — the per-query
+    // ledger must balance exactly in every draw.
+    let videos = cameras(6, 60, 0x99);
+    let set = trained_set(&videos, 2);
+    let horizon = 60.0 / 10.0 * 1e3; // frames / native fps → ms
+    for storm_seed in 0..8u64 {
+        let mut tier = PipelineConfig { seed: 0xC0 + storm_seed, ..PipelineConfig::default() };
+        tier.transport = TransportConfig {
+            link: LinkModel { loss: 0.03, max_retransmits: 0, ..LinkModel::mbps(8.0) },
+            encoding: WireEncoding::Raw,
+        };
+        tier.faults = FaultPlan::randomized(storm_seed, horizon, videos.len() as u32);
+        let mut cfg = FleetConfig::uniform(
+            tier,
+            FleetTopology {
+                edge_nodes: 2,
+                workers: 2,
+                threads: 2,
+                aggregator: AggregatorPolicy::DeadlineCapacity,
+            },
+        );
+        cfg.aggregator.transport = TransportConfig {
+            link: LinkModel { loss: 0.05, max_retransmits: 0, ..LinkModel::mbps(4.0) },
+            encoding: WireEncoding::Raw,
+        };
+        let r = run_fleet(&videos, &set, &cfg).unwrap();
+        for q in &r.queries {
+            let rep = &q.report;
+            assert!(
+                q.conserves(),
+                "storm {storm_seed}: query {} ledger: ingress {} vs completed {} + shed {} \
+                 + agg_shed {} + linkA {} + linkB {} + faults {}",
+                q.name,
+                rep.ingress,
+                q.completed,
+                rep.shed,
+                q.agg_shed,
+                rep.link_dropped,
+                q.agg_link_dropped,
+                rep.faults.fault_dropped
+            );
+        }
+        // The tier-2 log covers exactly the edge egress stream.
+        let egress: u64 = r.queries.iter().map(|q| q.report.transmitted).sum();
+        assert_eq!(r.decisions.len() as u64, egress, "storm {storm_seed}: log coverage");
+    }
+}
