@@ -416,6 +416,31 @@ fn main() {
         std::hint::black_box(r.0.ingress);
     });
 
+    // --- realtime engines: threaded channels vs socket reactor --------------
+    // The same 64-camera stream through both wall-clock drivers
+    // (fast-forwarded, cost emulation off, native oracle): the threaded
+    // worker backend with in-process channels, and the epoll reactor
+    // shipping every frame over real loopback TCP. The gap is the
+    // kernel-socket tax of measured (rather than modeled) transfers.
+    let rt64_cfg = uals::pipeline::realtime::RealtimeConfig {
+        cost_emulation_scale: 0.0,
+        time_scale: 1e-3,
+        use_artifacts: false,
+        seed: 0xBE,
+        ..Default::default()
+    };
+    b.run_n("pipeline/threaded_e2e_64cams", 1, 2, || {
+        let r = uals::pipeline::realtime::run_realtime(&fleet64, &sweep_model, &rt64_cfg)
+            .unwrap();
+        std::hint::black_box(r.ingress);
+    });
+    b.run_n("pipeline/reactor_e2e_64cams", 1, 2, || {
+        let opts = uals::pipeline::ReactorOpts::default()
+            .transport(uals::pipeline::SocketKind::Tcp);
+        let r = uals::pipeline::run_reactor(&fleet64, &sweep_model, &rt64_cfg, &opts).unwrap();
+        std::hint::black_box(r.pipeline.ingress + r.socket.acks_received);
+    });
+
     // --- multi-query shared-stream pipeline ---------------------------------
     // 8 concurrent queries over the same 4-camera stream: ONE extraction
     // per frame + per-query shedding behind the fair-share arbiter,
@@ -667,6 +692,18 @@ fn main() {
         println!(
             "32-query shared-stream pipeline: {:.0} frames/sec (one extraction per frame)",
             core_frames as f64 / (m.mean_ms.max(1e-12) / 1e3)
+        );
+    }
+    if let Some(m) = b.result("pipeline/threaded_e2e_64cams") {
+        println!(
+            "threaded realtime e2e, 64 cams: {:.0} frames/sec (in-process channels)",
+            fleet64_frames as f64 / (m.mean_ms.max(1e-12) / 1e3)
+        );
+    }
+    if let Some(m) = b.result("pipeline/reactor_e2e_64cams") {
+        println!(
+            "reactor realtime e2e, 64 cams: {:.0} frames/sec (loopback TCP, measured transfers)",
+            fleet64_frames as f64 / (m.mean_ms.max(1e-12) / 1e3)
         );
     }
     if let Some(m) = b.result("pipeline/fleet_e2e_64cams_4nodes") {

@@ -36,13 +36,14 @@ pub const ABLATIONS: [&str; 4] = [
 /// `ArrivalModel` plugins, the multi-query shared-stream path, the
 /// bandwidth-constrained transport link, and the fault-injection plan
 /// (beyond the paper's fixed-fps single-query free-network streams).
-pub const SCENARIOS: [&str; 7] = [
+pub const SCENARIOS: [&str; 8] = [
     "scenario-bursty",
     "scenario-churn",
     "scenario-multiquery",
     "scenario-bandwidth",
     "scenario-faults",
     "scenario-drift",
+    "scenario-reactor",
     "scenario-fleet",
 ];
 
@@ -74,6 +75,7 @@ pub fn run_figure(id: &str, scale: Scale) -> Result<Vec<(String, Table)>> {
         "scenario-bandwidth" => scenarios::scenario_bandwidth(scale),
         "scenario-faults" => scenarios::scenario_faults(scale),
         "scenario-drift" => scenarios::scenario_drift(scale),
+        "scenario-reactor" => scenarios::scenario_reactor(scale),
         "scenario-fleet" => scenarios::scenario_fleet(scale),
         other => bail!(
             "unknown figure '{other}' (try one of {ALL_FIGURES:?}, 15, \

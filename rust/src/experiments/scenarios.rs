@@ -36,6 +36,12 @@
 //!   [`crate::utility::adapt`]): how much QoR the frozen model loses to
 //!   each drift mode and how much the adapter claws back.
 //!
+//! * **reactor** — the socket-backed realtime engine
+//!   ([`crate::pipeline::reactor`]): the same camera set shipped over
+//!   real loopback TCP vs Unix-domain sockets, raw vs delta encoding,
+//!   with the measured per-frame transfers feeding the control loop —
+//!   what the wire actually costs, per family and encoding.
+//!
 //! * **fleet** — the two-tier fleet ([`crate::pipeline::fleet`]): the
 //!   camera count sweeps 100 → 10k against a fixed backend cluster,
 //!   with cameras sharded across edge nodes (≈16 per node), a modeled
@@ -46,7 +52,7 @@
 //! Run via `uals figures --fig scenario-bursty` / `--fig scenario-churn`
 //! / `--fig scenario-multiquery` / `--fig scenario-bandwidth` /
 //! `--fig scenario-faults` / `--fig scenario-drift` /
-//! `--fig scenario-fleet`.
+//! `--fig scenario-reactor` / `--fig scenario-fleet`.
 
 use super::common::Scale;
 use super::figs_sim::run_scenario;
@@ -673,6 +679,63 @@ pub fn scenario_fleet(scale: Scale) -> Vec<(String, Table)> {
         ]);
     }
     vec![("scenario_fleet".into(), t)]
+}
+
+/// Reactor scenario: the same camera set driven through the
+/// socket-backed realtime engine ([`crate::pipeline::reactor`]) on both
+/// loopback families × both wire encodings, fast-forwarded with cost
+/// emulation off so the run is socket-bound rather than compute-bound.
+///
+/// Columns: socket family (0 = TCP, 1 = Unix), encoding (0 = raw,
+/// 1 = delta), QoR, latency-violation rate, observed drop rate, frames
+/// that physically crossed the socket, kilobytes on the wire, measured
+/// per-frame transfer mean/max (ms), and the count of measured samples
+/// fed to `ControlLoop::observe_network`.
+pub fn scenario_reactor(scale: Scale) -> Vec<(String, Table)> {
+    use crate::pipeline::{ReactorOpts, RealtimeOpts, SocketKind};
+    use crate::video::WireEncoding;
+    let frames = scenario_frames(scale).min(400);
+    let model = scenario_model();
+    let videos = scenario_videos(2, frames);
+    let mut t = Table::new(vec![
+        "family",
+        "delta",
+        "qor",
+        "viol",
+        "drop",
+        "frames_sent",
+        "wire_kb",
+        "tx_mean_ms",
+        "tx_max_ms",
+        "net_samples",
+    ]);
+    for (fi, family) in [SocketKind::Tcp, SocketKind::Unix].into_iter().enumerate() {
+        for (ei, encoding) in [WireEncoding::Raw, WireEncoding::delta_default()]
+            .into_iter()
+            .enumerate()
+        {
+            let r = Pipeline::builder()
+                .query(QueryConfig::single(NamedColor::Red).with_latency_bound(1000.0))
+                .seed(0x5CE)
+                .realtime(RealtimeOpts::fast_forward(1e-3))
+                .reactor(ReactorOpts::default().transport(family).encoding(encoding))
+                .run(&videos, &model)
+                .expect("reactor scenario");
+            t.push(&[
+                fi as f64,
+                ei as f64,
+                r.pipeline.qor.overall(),
+                r.pipeline.latency.violation_rate(),
+                r.pipeline.observed_drop_rate(),
+                r.socket.frames_sent as f64,
+                r.socket.bytes_sent as f64 / 1e3,
+                r.socket.transfer_ms_mean,
+                r.socket.transfer_ms_max,
+                r.socket.net_samples_fed as f64,
+            ]);
+        }
+    }
+    vec![("scenario_reactor".into(), t)]
 }
 
 #[cfg(test)]

@@ -32,18 +32,36 @@
 //! | [`experiments`] | regenerates every figure of the paper's evaluation |
 //! | [`util`] | offline substrates: json, csv, rng, stats, prop |
 
+// The public-surface documentation contract: the pipeline tree, the SIMD
+// kernels, online adaptation, and the wire/drift layers are fully
+// documented; the remaining modules carry module-level docs and are
+// item-allowed below until their own documentation passes land (tracked
+// in ROADMAP.md).
+#![warn(missing_docs)]
+
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod baseline;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod backend;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod cli;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod color;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod config;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod experiments;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod features;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod metrics;
 pub mod pipeline;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod runtime;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod shedder;
 pub mod simd;
 pub mod utility;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod util;
 pub mod video;

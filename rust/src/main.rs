@@ -55,7 +55,7 @@ fn print_usage() {
          figures  --all | --fig <id>…   [--scale tiny|small|paper] [--out DIR] [--quiet]\n\
          train    --color red[,yellow] [--combine single|or|and] [--out FILE] [--scale S]\n\
          dataset  [--scale S] [--color red]\n\
-         run      --scenario fig13a|smart-city|bursty|churn|multiquery|bandwidth|faults|drift|fleet [--scale S]\n\
+         run      --scenario fig13a|smart-city|bursty|churn|multiquery|bandwidth|faults|drift|reactor|fleet [--scale S]\n\
          overhead [--scale S]\n"
     );
 }
@@ -168,11 +168,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         "faults" => experiments::run_and_save(&["scenario-faults"], scale, &out_dir(args), false),
         "drift" => experiments::run_and_save(&["scenario-drift"], scale, &out_dir(args), false),
+        "reactor" => {
+            experiments::run_and_save(&["scenario-reactor"], scale, &out_dir(args), false)
+        }
         "fleet" => experiments::run_and_save(&["scenario-fleet"], scale, &out_dir(args), false),
         other => {
             bail!(
                 "unknown --scenario '{other}' \
-                 (fig13a|smart-city|bursty|churn|multiquery|bandwidth|faults|drift|fleet)"
+                 (fig13a|smart-city|bursty|churn|multiquery|bandwidth|faults|drift|reactor|fleet)"
             )
         }
     }

@@ -17,6 +17,7 @@
 //!       ├─ .multi_query(&set)      N queries, shared stream
 //!       │      └─ .realtime(opts)  …under the wall clock
 //!       ├─ .realtime(opts)         wall clock, single query
+//!       │      └─ .reactor(ropts)  …over real loopback sockets (epoll)
 //!       ├─ .sharded(threads)       one shard per camera
 //!       └─ .fleet(topology)        edge nodes → aggregator → cluster
 //! ```
@@ -33,6 +34,7 @@ use crate::features::{Extractor, IncrementalConfig};
 use crate::pipeline::core::{backgrounds_of, ArrivalModel, BackgroundMap, PipelineConfig, Policy};
 use crate::pipeline::fleet::{run_fleet, FleetConfig, FleetReport, FleetTopology};
 use crate::pipeline::multi::{multi_backends, MultiPipelineReport, MultiSimConfig};
+use crate::pipeline::reactor::{run_reactor, run_reactor_with, ReactorOpts, ReactorReport};
 use crate::pipeline::realtime::{
     run_multi_realtime, run_multi_realtime_with, run_realtime, run_realtime_with, RealtimeConfig,
     RealtimeOpts, RealtimeReport,
@@ -74,11 +76,13 @@ impl PipelineBuilder {
         self
     }
 
+    /// Per-stage execution/transfer cost distributions (paper Table I).
     pub fn costs(mut self, v: CostConfig) -> Self {
         self.cfg.costs = v;
         self
     }
 
+    /// Load-shedder tuning (admission CDF, queue capacity, control gains).
     pub fn shedder(mut self, v: ShedderConfig) -> Self {
         self.cfg.shedder = v;
         self
@@ -91,36 +95,43 @@ impl PipelineBuilder {
         self
     }
 
+    /// Backend concurrency (token capacity).
     pub fn backend_tokens(mut self, v: u32) -> Self {
         self.cfg.backend_tokens = v;
         self
     }
 
+    /// Shedding policy (the paper's control loop or an ablation).
     pub fn policy(mut self, v: Policy) -> Self {
         self.cfg.policy = v;
         self
     }
 
+    /// Seed for the cost model and policy coin.
     pub fn seed(mut self, v: u64) -> Self {
         self.cfg.seed = v;
         self
     }
 
+    /// Nominal aggregate ingress fps (rate-estimator fallback).
     pub fn fps_total(mut self, v: f64) -> Self {
         self.cfg.fps_total = v;
         self
     }
 
+    /// Modeled shedder→backend link + wire encoding.
     pub fn transport(mut self, v: TransportConfig) -> Self {
         self.cfg.transport = v;
         self
     }
 
+    /// Scheduled fault windows (empty = faultless verification mode).
     pub fn faults(mut self, v: FaultPlan) -> Self {
         self.cfg.faults = v;
         self
     }
 
+    /// Online utility-model adaptation (off by default).
     pub fn adaptation(mut self, v: AdaptationConfig) -> Self {
         self.cfg.adaptation = v;
         self
@@ -329,6 +340,39 @@ impl RealtimeBuilder {
         arrivals: A,
     ) -> Result<RealtimeReport> {
         run_realtime_with(videos, model, &self.cfg, arrivals)
+    }
+
+    /// Reactor mode: the same realtime config, but frames cross **real
+    /// loopback sockets** (TCP or Unix-domain) to a backend worker pool
+    /// behind an epoll reactor, and the measured per-frame transfers —
+    /// not [`LinkModel`](crate::pipeline::transport::LinkModel) samples —
+    /// feed `ControlLoop::observe_network`. Requires the ideal transport
+    /// (the default); see [`crate::pipeline::reactor`].
+    pub fn reactor(self, opts: ReactorOpts) -> ReactorBuilder {
+        ReactorBuilder { cfg: self.cfg, opts }
+    }
+}
+
+/// Terminal stage for the socket-backed reactor driver.
+pub struct ReactorBuilder {
+    cfg: RealtimeConfig,
+    opts: ReactorOpts,
+}
+
+impl ReactorBuilder {
+    /// Stream every video at its native rate (the `run_reactor` shape).
+    pub fn run(&self, videos: &[Video], model: &UtilityModel) -> Result<ReactorReport> {
+        run_reactor(videos, model, &self.cfg, &self.opts)
+    }
+
+    /// Run over any [`ArrivalModel`] (the `run_reactor_with` shape).
+    pub fn run_with<A: ArrivalModel>(
+        &self,
+        videos: &[Video],
+        model: &UtilityModel,
+        arrivals: A,
+    ) -> Result<ReactorReport> {
+        run_reactor_with(videos, model, &self.cfg, &self.opts, arrivals)
     }
 }
 

@@ -68,12 +68,18 @@ pub enum Policy {
 /// Core lifecycle parameters (identical under every clock/driver).
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Per-stage execution/transfer cost distributions (paper Table I).
     pub costs: CostConfig,
+    /// Load-shedder tuning (admission CDF, queue capacity, control gains).
     pub shedder: ShedderConfig,
+    /// The query: colors of interest, filter thresholds, latency bound.
     pub query: QueryConfig,
     /// Backend concurrency (token capacity); the paper's NC6 runs one DNN.
     pub backend_tokens: u32,
+    /// Shedding policy (the paper's control loop or an ablation baseline).
     pub policy: Policy,
+    /// Seed for the cost model and policy coin — the whole run is a
+    /// deterministic function of (seed, stream).
     pub seed: u64,
     /// Nominal aggregate ingress fps (estimator fallback).
     pub fps_total: f64,
@@ -114,7 +120,9 @@ pub struct SimConfig {
 /// the historical per-driver defaults.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
+    /// Per-stage execution/transfer cost distributions (paper Table I).
     pub costs: CostConfig,
+    /// Load-shedder tuning (admission CDF, queue capacity, control gains).
     pub shedder: ShedderConfig,
     /// Single-query drivers' query; multi-query drivers keep per-query
     /// configs in their `QuerySet` and ignore this field.
@@ -124,6 +132,8 @@ pub struct PipelineConfig {
     /// Shedding policy (single-query drivers; the multi engine always
     /// runs the utility control loop per query).
     pub policy: Policy,
+    /// Seed for the cost model and policy coin — the whole run is a
+    /// deterministic function of (seed, stream).
     pub seed: u64,
     /// Nominal aggregate ingress fps (estimator fallback). Drivers fed by
     /// an [`ArrivalModel`] override it with `arrivals.fps_total()`.
@@ -204,6 +214,7 @@ impl Default for SimConfig {
 /// The one frame payload carried through admission, queue and dispatch —
 /// replaces the historical `SimFrame` / `WorkItem` / shard-local structs.
 pub struct FramePayload {
+    /// Source camera id.
     pub camera: u32,
     /// Capture timestamp (ms, stream clock).
     pub capture_ms: f64,
@@ -220,8 +231,11 @@ pub struct FramePayload {
     /// paired with the link's measured shedder→backend transfer when the
     /// transport stage feeds `ControlLoop::observe_network`.
     pub net_cam_ls_ms: f64,
+    /// Interleaved RGB pixels (`width * height * 3` f32s, row-major).
     pub rgb: Vec<f32>,
+    /// Frame width in pixels.
     pub width: usize,
+    /// Frame height in pixels.
     pub height: usize,
     /// The frame's extracted features, carried only when online
     /// adaptation is enabled: the dispatch path turns them into a
@@ -233,15 +247,20 @@ pub struct FramePayload {
 /// Terminal outcome of one ingress frame (shed anywhere vs transmitted).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FrameDecision {
+    /// Source camera id.
     pub camera: u32,
+    /// Capture timestamp (ms, stream clock).
     pub capture_ms: f64,
+    /// `true` = transmitted to the backend, `false` = shed (anywhere).
     pub kept: bool,
 }
 
 /// What every driver reports: the shared metrics sink, aggregated.
 #[derive(Clone)]
 pub struct PipelineReport {
+    /// Quality-of-result accounting (detected vs missed targets).
     pub qor: QorTracker,
+    /// End-to-end frame latency distribution (stream-time ms).
     pub latency: LatencyTracker,
     /// Max-latency time series for the Fig. 13 upper panel (5 s windows).
     pub latency_windows: WindowSeries,
@@ -254,8 +273,11 @@ pub struct PipelineReport {
     /// logs in camera order (see `pipeline::parallel::merge_reports`),
     /// so ordering there is per-camera, not globally chronological.
     pub decisions: Vec<FrameDecision>,
+    /// Frames that arrived at the Load Shedder.
     pub ingress: u64,
+    /// Frames delivered to the backend.
     pub transmitted: u64,
+    /// Frames shed (admission gate, queue eviction, or deadline check).
     pub shed: u64,
     /// Frames dropped *on the link* (lossy transport exhausting its
     /// retransmit budget). `ingress = transmitted + shed + link_dropped`.
@@ -280,6 +302,7 @@ pub struct PipelineReport {
 }
 
 impl PipelineReport {
+    /// Fraction of ingress frames shed (the Eq. 19 output, as realized).
     pub fn observed_drop_rate(&self) -> f64 {
         if self.ingress == 0 {
             0.0
@@ -369,6 +392,8 @@ pub struct WallClock {
 }
 
 impl WallClock {
+    /// Anchor the clock at "now" with the given stream→wall scale
+    /// (completion pacing on — see [`Self::with_completion_pacing`]).
     pub fn new(time_scale: f64) -> Self {
         WallClock { t0: Instant::now(), time_scale, pace_completions: true }
     }
@@ -443,6 +468,18 @@ pub trait BackendExecutor {
     /// executors rendezvous with their worker thread here.
     fn on_complete(&mut self, seq: u64, dnn: bool) -> anyhow::Result<()>;
 
+    /// A **measured** network sample for the frame whose completion just
+    /// rendezvoused: `(camera→shedder ms, shedder→backend ms)`, pulled by
+    /// the core right after [`Self::on_complete`] and fed to
+    /// `ControlLoop::observe_network` in place of a modeled-link sample.
+    /// Only executors that move frames over a real transport return
+    /// `Some` (see [`crate::pipeline::reactor`]); the default `None`
+    /// leaves the control loop untouched, keeping modeled/sync executors
+    /// bit-identical to the pre-hook engine.
+    fn take_network_sample(&mut self, _seq: u64) -> Option<(f64, f64)> {
+        None
+    }
+
     /// Stream ended and every completion has been applied.
     fn finish(&mut self) -> anyhow::Result<()>;
 }
@@ -454,6 +491,7 @@ pub struct SyncBackend<'a> {
 }
 
 impl<'a> SyncBackend<'a> {
+    /// Wrap a backend query for synchronous in-event execution.
     pub fn new(backend: &'a mut BackendQuery) -> Self {
         SyncBackend { backend }
     }
@@ -944,6 +982,13 @@ where
                 };
                 shedder.on_backend_complete(observed_ms);
                 executor.on_complete(seq, dnn)?;
+                // Reactor-mode executors measured this frame's *real*
+                // socket transfer during the rendezvous above; it enters
+                // the Eq. 19/20 budget here, in place of a modeled-link
+                // sample (default executors return None — no-op).
+                if let Some((cam_ms, tx_ms)) = executor.take_network_sample(seq) {
+                    shedder.control.observe_network(cam_ms, tx_ms);
+                }
                 // The detector's verdict becomes ground truth for the
                 // online adapter after the annotation delay.
                 if let (Some(ad), Some((camera, feats, positive))) = (adapter.as_mut(), label) {

@@ -64,8 +64,11 @@ pub enum FaultKind {
 /// A half-open virtual-time window `[start_ms, end_ms)` of one fault.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FaultWindow {
+    /// Window start (virtual ms, inclusive).
     pub start_ms: f64,
+    /// Window end (virtual ms, exclusive).
     pub end_ms: f64,
+    /// The fault active inside the window.
     pub kind: FaultKind,
 }
 
@@ -85,6 +88,7 @@ pub struct FaultPlan {
 }
 
 impl FaultPlan {
+    /// The empty plan (same as `FaultPlan::default()`).
     pub fn new() -> Self {
         FaultPlan::default()
     }
@@ -107,10 +111,12 @@ impl FaultPlan {
         self.windows.push(FaultWindow { start_ms, end_ms, kind });
     }
 
+    /// True when no fault windows are scheduled.
     pub fn is_empty(&self) -> bool {
         self.windows.is_empty()
     }
 
+    /// All scheduled windows, in insertion order.
     pub fn windows(&self) -> &[FaultWindow] {
         &self.windows
     }

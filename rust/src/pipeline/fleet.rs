@@ -101,6 +101,7 @@ pub struct FleetTopology {
     /// Worker threads for the tier-1 node sweep (results are
     /// thread-count invariant, like `run_sharded_sim`).
     pub threads: usize,
+    /// Second-level shedding policy at the regional aggregator.
     pub aggregator: AggregatorPolicy,
 }
 
@@ -121,10 +122,13 @@ impl Default for FleetTopology {
 /// is the hop-B link and its `seed` drives hop-B loss/jitter.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
+    /// Edge-tier template; its `transport` is the hop-A uplink.
     pub edge: PipelineConfig,
+    /// Aggregator-tier template; its `transport` is the hop-B link.
     pub aggregator: PipelineConfig,
     /// Backend-budget split across queries inside each edge node.
     pub edge_arbiter: ArbiterPolicy,
+    /// Node/worker/thread counts and the aggregator policy.
     pub topology: FleetTopology,
 }
 
@@ -171,16 +175,22 @@ pub enum FleetOutcome {
 /// ⇒ same log, byte for byte, regardless of `threads`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetDecision {
+    /// Edge node that dispatched the frame.
     pub node: usize,
+    /// Query index inside the node's multi-query run.
     pub query: usize,
+    /// Source camera id.
     pub camera: u32,
+    /// Capture timestamp (virtual ms).
     pub capture_ms: f64,
+    /// Tier-2 outcome at the aggregator.
     pub outcome: FleetOutcome,
 }
 
 /// One query's fleet-wide slice: the merged per-node report with
 /// aggregator-tier corrections applied, plus the tier-2 counters.
 pub struct FleetQueryReport {
+    /// Query name (from the query config's color spec).
     pub name: String,
     /// Merged edge-tier report. QoR carries the aggregator demotions;
     /// under [`AggregatorPolicy::DeadlineCapacity`] the latency
@@ -214,6 +224,7 @@ impl FleetQueryReport {
 /// edge-tier reports, the fleet decision log, and both hops' physical
 /// wire accounting.
 pub struct FleetReport {
+    /// Per-query fleet-wide views (query order = config order).
     pub queries: Vec<FleetQueryReport>,
     /// Tier-1 outputs, untouched (node order = camera order).
     pub nodes: Vec<MultiPipelineReport>,
@@ -223,19 +234,23 @@ pub struct FleetReport {
     pub frames: u64,
     /// Feature extractions across all edge nodes (one per frame).
     pub extractions: u64,
-    /// Hop-A (edge→aggregator) physical frames / bytes / losses,
-    /// summed over nodes.
+    /// Hop-A (edge→aggregator) physical frames, summed over nodes.
     pub uplink_frames: u64,
+    /// Hop-A bytes on the wire, summed over nodes.
     pub uplink_bytes: u64,
+    /// Hop-A frames lost to link faults/loss, summed over nodes.
     pub uplink_lost_frames: u64,
-    /// Hop-B (aggregator→cluster) physical frames / bytes / losses
-    /// (zero under [`AggregatorPolicy::PassThrough`]).
+    /// Hop-B (aggregator→cluster) physical frames (zero under
+    /// [`AggregatorPolicy::PassThrough`]).
     pub cluster_frames: u64,
+    /// Hop-B bytes on the wire.
     pub cluster_bytes: u64,
+    /// Hop-B frames lost to link faults/loss.
     pub cluster_lost_frames: u64,
     /// Frames completed per cluster worker (load-balance visibility;
     /// empty under [`AggregatorPolicy::PassThrough`]).
     pub worker_frames: Vec<u64>,
+    /// Latest event timestamp across the fleet (virtual ms).
     pub end_ms: f64,
 }
 

@@ -15,6 +15,11 @@
 //!   regenerates the paper's long-running experiments in seconds.
 //! * [`realtime`] — wall-clock driver ([`WallClock`] + worker-thread
 //!   backend with the PJRT artifact path on the hot loop).
+//! * [`reactor`] — socket-backed realtime driver: an epoll reactor ships
+//!   wire-encoded frames over real loopback TCP/Unix sockets to a
+//!   backend worker pool, and the *measured* per-frame transfers feed
+//!   the control loop's network budget (Eq. 19/20) in place of modeled
+//!   [`LinkModel`](transport::LinkModel) samples.
 //! * [`parallel`] — sharded multi-camera sweep engine: one sim-driver
 //!   shard per camera across scoped threads, deterministic metric merge.
 //! * [`transport`] — the modeled shedder→backend network link: FIFO
@@ -49,6 +54,7 @@ pub mod faults;
 pub mod fleet;
 pub mod multi;
 pub mod parallel;
+pub mod reactor;
 pub mod realtime;
 pub mod sim;
 pub mod supervise;
@@ -62,7 +68,7 @@ pub use self::core::{
 };
 pub use builder::{
     FleetBuilder, MultiQueryBuilder, MultiRealtimeBuilder, Pipeline, PipelineBuilder,
-    RealtimeBuilder, ShardedBuilder, SimBuilder,
+    ReactorBuilder, RealtimeBuilder, ShardedBuilder, SimBuilder,
 };
 pub use crate::utility::{AdaptEvent, AdaptEventKind, AdaptationConfig, AdaptationStats};
 pub use faults::{FaultKind, FaultPlan, FaultStats, FaultWindow, PoisonKind};
@@ -76,6 +82,10 @@ pub use multi::{
 };
 pub use parallel::{
     default_threads, merge_reports, parallel_map, run_sharded_sim, run_sharded_sim_with,
+};
+pub use reactor::{
+    run_reactor, run_reactor_with, ReactorBackend, ReactorOpts, ReactorReport, SocketKind,
+    SocketStats,
 };
 pub use realtime::{RealtimeConfig, RealtimeOpts, RealtimeReport};
 pub use sim::{run_multi_sim, run_multi_sim_with, run_sim, run_sim_with, SimReport};

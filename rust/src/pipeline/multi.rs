@@ -51,7 +51,9 @@ use std::time::Instant;
 /// [`QuerySet`]).
 #[derive(Debug, Clone)]
 pub struct MultiSimConfig {
+    /// Stage cost model parameters (shared across queries).
     pub costs: CostConfig,
+    /// Load Shedder parameters (each query gets its own instance).
     pub shedder: ShedderConfig,
     /// Transmission-window tokens **per query** (each query owns its
     /// bucket; aggregate backend capacity is governed by the arbiter's
@@ -59,6 +61,7 @@ pub struct MultiSimConfig {
     pub backend_tokens: u32,
     /// How the measured backend budget splits across queries.
     pub arbiter: ArbiterPolicy,
+    /// Master seed for cost/link RNGs and per-query decorrelation.
     pub seed: u64,
     /// Nominal aggregate ingress fps (shared rate-estimator fallback).
     pub fps_total: f64,
@@ -102,13 +105,16 @@ impl MultiSimConfig {
 /// sink under the query's name.
 #[derive(Clone)]
 pub struct QueryReport {
+    /// Query name (from the query config's color spec).
     pub name: String,
+    /// The query's full single-query metrics sink.
     pub report: PipelineReport,
 }
 
 /// What a multi-query run reports: per-query [`PipelineReport`]s plus the
 /// shared-side aggregates.
 pub struct MultiPipelineReport {
+    /// Per-query reports (query order = [`QuerySet`] order).
     pub queries: Vec<QueryReport>,
     /// Physical frames ingested (each appears once here, N times across
     /// the per-query reports).
@@ -125,6 +131,7 @@ pub struct MultiPipelineReport {
     /// Physical frames lost on the shared link (every admitting query
     /// loses its copy; per-query reports count those per query).
     pub link_lost_frames: u64,
+    /// Latest event timestamp in the run (virtual ms).
     pub end_ms: f64,
     /// Camera-side extraction wall time (ms), shared across queries.
     pub extract_ms_total: f64,
@@ -188,6 +195,7 @@ pub struct MultiSyncBackend<'a> {
 }
 
 impl<'a> MultiSyncBackend<'a> {
+    /// Wrap one [`BackendQuery`] per query (index order = query order).
     pub fn new(backends: &'a mut [BackendQuery]) -> Self {
         MultiSyncBackend { backends }
     }

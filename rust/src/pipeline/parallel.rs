@@ -121,7 +121,11 @@ where
 /// `cfg` is the per-shard template: `fps_total` is overridden with each
 /// camera's rate and the seed is decorrelated per camera. Returns the
 /// merged report plus per-camera reports (camera-id order).
-#[doc = "Deprecated: use `Pipeline::builder()` (`.sharded(threads).run(videos, model)`); this free function is kept as a thin compatibility wrapper."]
+///
+/// Deprecated: use
+/// [`Pipeline::builder()`](crate::pipeline::Pipeline::builder)`.sharded(threads)`
+/// [`.run(videos, model)`](crate::pipeline::ShardedBuilder::run); this
+/// free function is kept as a thin compatibility wrapper.
 pub fn run_sharded_sim(
     videos: &[Video],
     cfg: &SimConfig,
@@ -136,7 +140,12 @@ pub fn run_sharded_sim(
 /// camera, so per-frame classification work shrinks to the dirty tiles.
 /// Extraction stays bit-identical, so every metric matches the
 /// non-incremental run exactly (pinned by `rust/tests/incremental.rs`).
-#[doc = "Deprecated: use `Pipeline::builder()` (`.sharded(threads).incremental(cfg).run(videos, model)`); this free function is kept as a thin compatibility wrapper."]
+///
+/// Deprecated: use
+/// [`Pipeline::builder()`](crate::pipeline::Pipeline::builder)`.sharded(threads)`
+/// [`.incremental(cfg)`](crate::pipeline::ShardedBuilder::incremental)
+/// [`.run(videos, model)`](crate::pipeline::ShardedBuilder::run); this
+/// free function is kept as a thin compatibility wrapper.
 pub fn run_sharded_sim_with(
     videos: &[Video],
     cfg: &SimConfig,

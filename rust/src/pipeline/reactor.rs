@@ -1,0 +1,1049 @@
+//! Event-driven realtime engine over **real loopback sockets**: frames
+//! leave the shedder as [`crate::video::wire`] messages on actual TCP or
+//! Unix-domain connections, and the **measured** per-frame transfer time
+//! — not a [`LinkModel`](crate::pipeline::transport::LinkModel) sample —
+//! feeds [`ControlLoop::observe_network`](crate::shedder::ControlLoop),
+//! so Eq. 19/20's queue sizing and dispatch deadline budget react to real
+//! kernel/socket backpressure.
+//!
+//! Architecture: the module reuses [`run_pipeline`] — the one lifecycle
+//! engine every driver shares — and confines all socket I/O to a new
+//! [`BackendExecutor`]:
+//!
+//! ```text
+//!   [driver: arrivals + extractor + Load Shedder + filter planner
+//!            + reactor (epoll over W non-blocking connections)]
+//!        │ wire-encoded frames (camera % W picks the connection) ▲ acks
+//!        ▼                                                       │
+//!   [worker 0..W: blocking read → WireDecoder → real detector
+//!                 (DNN-bound frames) → (seq, recv_us) ack]
+//! ```
+//!
+//! * **Reactor.** A small epoll loop (raw `epoll_create1`/`epoll_ctl`/
+//!   `epoll_wait` FFI on Linux — no external crates; a degraded
+//!   poll-all-and-sleep fallback elsewhere) multiplexes the W driver-side
+//!   connections: it flushes pending envelope bytes when sockets are
+//!   writable and drains 16-byte acks when they are readable. The driver
+//!   blocks in the reactor only at completion rendezvous, bounded by
+//!   `backend_recv_timeout_ms`.
+//! * **Wire format.** Each frame ships as an envelope
+//!   `[len u32][seq u64][dnn u8][camera u32]` followed by the
+//!   [`WireEncoder`] message (raw or delta mode). Cameras are routed to
+//!   connection `camera % W`, so every per-camera delta stream stays on
+//!   one connection and the worker-side [`WireDecoder`] state matches.
+//!   Decode is exact, so the detector sees bit-identical pixels.
+//! * **Measurement.** Both ends timestamp against one shared
+//!   monotonic epoch ([`std::time::Instant`] is `Copy` and crosses into
+//!   the worker threads). `transfer = recv_us − send_us` spans enqueue,
+//!   kernel socket buffering, transit and the worker's read — the honest
+//!   backpressure signal. With `feed_network` on (the default) each
+//!   sample enters the control loop at that frame's completion event via
+//!   [`BackendExecutor::take_network_sample`].
+//! * **Determinism.** With `feed_network` **off**, frames still cross
+//!   the sockets and transfers are still measured/reported, but the
+//!   control loop never sees them — exactly the ideal-link contract the
+//!   modeled transport keeps. Decisions then bit-match the threaded
+//!   [`WallClock`] driver (`run_realtime`) for the same seed and stream,
+//!   pinned by `rust/tests/reactor_equivalence.rs`. With feed **on**,
+//!   decisions may legitimately diverge: that is the point — the budget
+//!   reacts to measured transfers, which are nondeterministic.
+//!
+//! Reactor mode **supersedes the modeled link**: it requires the ideal
+//! [`TransportConfig`](crate::pipeline::transport::TransportConfig)
+//! (configuring a bandwidth-modeled link alongside real sockets is an
+//! error). Fault windows compose for free — dropout, blackout, crash and
+//! slowdown act on the driver's virtual-time schedule before frames
+//! reach a socket — except `BandwidthCollapse`, which falls back to the
+//! modeled-link path for covered dispatches (the collapse *is* a model).
+//!
+//! Entry points: [`run_reactor`] / [`run_reactor_with`], or
+//! `Pipeline::builder().realtime(opts).reactor(ropts).run(..)`.
+
+use crate::backend::{BackendQuery, CostModel, Detector};
+use crate::color::HueRanges;
+use crate::features::Extractor;
+use crate::metrics::Stage;
+use crate::pipeline::core::{
+    backgrounds_of, run_pipeline, ArrivalModel, BackendExecutor, FramePayload, PipelineReport,
+    SimConfig, WallClock,
+};
+use crate::pipeline::realtime::RealtimeConfig;
+use crate::pipeline::workloads::IterArrivals;
+use crate::runtime::Engine;
+use crate::util::stats::Summary;
+use crate::utility::UtilityModel;
+use crate::video::{Video, WireDecoder, WireEncoder, WireEncoding};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, RawFd};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Envelope header: `[len u32][seq u64][dnn u8][camera u32]`.
+const ENVELOPE_LEN: usize = 4 + 8 + 1 + 4;
+/// Ack: `[seq u64][recv_us u64]`.
+const ACK_LEN: usize = 8 + 8;
+
+// ---------------------------------------------------------------------------
+// Options / stats
+// ---------------------------------------------------------------------------
+
+/// Which kernel socket family carries the shedder→backend frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SocketKind {
+    /// Loopback TCP (`127.0.0.1`, ephemeral port, `TCP_NODELAY`).
+    Tcp,
+    /// Unix-domain stream sockets under the system temp directory.
+    Unix,
+}
+
+impl SocketKind {
+    /// Human-readable name for reports and scenario tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            SocketKind::Tcp => "tcp",
+            SocketKind::Unix => "uds",
+        }
+    }
+}
+
+/// Reactor-mode knobs — the argument of
+/// `Pipeline::builder().realtime(opts).reactor(..)`.
+#[derive(Debug, Clone)]
+pub struct ReactorOpts {
+    /// Socket family for the real shedder→backend hop.
+    pub transport: SocketKind,
+    /// Backend worker threads (one socket pair each; cameras are routed
+    /// to connection `camera % workers`).
+    pub workers: usize,
+    /// Wire encoding for the frames on the socket ([`WireEncoding::Raw`]
+    /// or delta mode — decode is exact either way).
+    pub encoding: WireEncoding,
+    /// Feed each frame's measured socket transfer to
+    /// `ControlLoop::observe_network` at its completion event. Default
+    /// `true`; turn off for the calibration/verification mode whose
+    /// decisions bit-match the threaded driver (frames still cross the
+    /// sockets and transfers are still measured and reported).
+    pub feed_network: bool,
+}
+
+impl Default for ReactorOpts {
+    /// Loopback TCP, two workers, raw encoding, measured-transfer
+    /// feeding on.
+    fn default() -> Self {
+        ReactorOpts {
+            transport: SocketKind::Tcp,
+            workers: 2,
+            encoding: WireEncoding::Raw,
+            feed_network: true,
+        }
+    }
+}
+
+impl ReactorOpts {
+    /// Builder-style: socket family.
+    pub fn transport(mut self, v: SocketKind) -> Self {
+        self.transport = v;
+        self
+    }
+
+    /// Builder-style: backend worker / connection count (min 1).
+    pub fn workers(mut self, v: usize) -> Self {
+        self.workers = v.max(1);
+        self
+    }
+
+    /// Builder-style: wire encoding on the socket.
+    pub fn encoding(mut self, v: WireEncoding) -> Self {
+        self.encoding = v;
+        self
+    }
+
+    /// Builder-style: feed measured transfers to the control loop.
+    pub fn feed_network(mut self, v: bool) -> Self {
+        self.feed_network = v;
+        self
+    }
+}
+
+/// What actually crossed the kernel sockets during a reactor run.
+/// Reported beside (never inside) the modeled-transport byte accounting
+/// in [`PipelineReport`], which stays driver-invariant.
+#[derive(Debug, Clone, Default)]
+pub struct SocketStats {
+    /// Socket family used ("tcp" / "uds").
+    pub transport: &'static str,
+    /// Backend worker threads (= connections).
+    pub workers: usize,
+    /// Frames serialized onto a socket (every transmitted frame).
+    pub frames_sent: u64,
+    /// Envelope + wire-message bytes handed to the kernel.
+    pub bytes_sent: u64,
+    /// Acks drained from the workers (one per frame at stream end).
+    pub acks_received: u64,
+    /// Measured transfers actually fed to `observe_network` (0 when
+    /// `feed_network` is off).
+    pub net_samples_fed: u64,
+    /// Mean measured shedder→backend transfer (ms) across acked frames.
+    pub transfer_ms_mean: f64,
+    /// Worst measured transfer (ms).
+    pub transfer_ms_max: f64,
+    /// Wire messages per mode, summed over the per-camera encoders
+    /// (indexed like `WireEncoder::mode_counts`).
+    pub wire_modes: [u64; 4],
+}
+
+/// Results of a reactor-mode run: the shared lifecycle report plus what
+/// the sockets measured.
+pub struct ReactorReport {
+    /// The full core-engine report (decisions, QoR, latency, stages,
+    /// conservation counters) — same sink as every other driver.
+    pub pipeline: PipelineReport,
+    /// Wall-clock duration of the run.
+    pub wall: Duration,
+    /// Socket-side counters and measured-transfer summary.
+    pub socket: SocketStats,
+}
+
+// ---------------------------------------------------------------------------
+// Readiness poller: epoll on Linux, degraded poll-all fallback elsewhere
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Minimal hand-written epoll FFI. The workspace builds offline with
+    //! vendored stubs only, so the `libc` crate is unavailable — these
+    //! four symbols resolve against the libc `std` already links.
+
+    pub const EPOLL_CLOEXEC: i32 = 0x8_0000;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLOUT: u32 = 0x4;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+
+    /// Kernel `struct epoll_event`. Packed on x86_64 only — the one
+    /// architecture whose kernel ABI declares it `__attribute__((packed))`.
+    #[derive(Clone, Copy)]
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32)
+            -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// One readiness report: `(token, readable, writable)`.
+type Readiness = (u64, bool, bool);
+
+/// Readiness poller over the driver-side connections. On Linux this is a
+/// real epoll instance; elsewhere a degraded fallback that reports every
+/// registered fd ready after a short sleep (callers use non-blocking I/O
+/// and tolerate spurious readiness).
+struct Poller {
+    #[cfg(target_os = "linux")]
+    epfd: RawFd,
+    #[cfg(not(target_os = "linux"))]
+    tokens: Vec<u64>,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    fn new() -> io::Result<Poller> {
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Poller { epfd })
+    }
+
+    fn ctl(&mut self, op: i32, fd: RawFd, token: u64, events: u32) -> io::Result<()> {
+        let mut ev = sys::EpollEvent { events, data: token };
+        if unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` for read readiness under `token`.
+    fn register(&mut self, fd: RawFd, token: u64) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, sys::EPOLLIN)
+    }
+
+    /// Add or drop write-readiness interest (read stays on).
+    fn set_writable_interest(&mut self, fd: RawFd, token: u64, on: bool) -> io::Result<()> {
+        let events = sys::EPOLLIN | if on { sys::EPOLLOUT } else { 0 };
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, events)
+    }
+
+    /// Wait up to `timeout` and append readiness reports to `out`.
+    fn wait(&mut self, timeout: Duration, out: &mut Vec<Readiness>) -> io::Result<()> {
+        let mut evs = [sys::EpollEvent { events: 0, data: 0 }; 32];
+        let timeout_ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        let n = loop {
+            let n = unsafe {
+                sys::epoll_wait(self.epfd, evs.as_mut_ptr(), evs.len() as i32, timeout_ms)
+            };
+            if n >= 0 {
+                break n as usize;
+            }
+            let e = io::Error::last_os_error();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        };
+        for ev in evs.iter().take(n) {
+            // Copy out of the (possibly packed) struct by value.
+            let events = ev.events;
+            let data = ev.data;
+            let err = events & (sys::EPOLLERR | sys::EPOLLHUP) != 0;
+            out.push((data, events & sys::EPOLLIN != 0 || err, events & sys::EPOLLOUT != 0 || err));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Poller {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.epfd) };
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+impl Poller {
+    fn new() -> io::Result<Poller> {
+        Ok(Poller { tokens: Vec::new() })
+    }
+
+    fn register(&mut self, _fd: RawFd, token: u64) -> io::Result<()> {
+        if !self.tokens.contains(&token) {
+            self.tokens.push(token);
+        }
+        Ok(())
+    }
+
+    fn set_writable_interest(&mut self, _fd: RawFd, _token: u64, _on: bool) -> io::Result<()> {
+        Ok(())
+    }
+
+    /// Degraded poll: sleep briefly, then report every registered fd
+    /// ready for both directions (non-blocking callers skip the
+    /// spurious ones with `WouldBlock`).
+    fn wait(&mut self, timeout: Duration, out: &mut Vec<Readiness>) -> io::Result<()> {
+        if !timeout.is_zero() {
+            std::thread::sleep(timeout.min(Duration::from_micros(500)));
+        }
+        out.extend(self.tokens.iter().map(|&t| (t, true, true)));
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Socket plumbing
+// ---------------------------------------------------------------------------
+
+/// A connected stream of either family (both ends use the same type).
+enum Sock {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Sock {
+    fn raw_fd(&self) -> RawFd {
+        match self {
+            Sock::Tcp(s) => s.as_raw_fd(),
+            Sock::Unix(s) => s.as_raw_fd(),
+        }
+    }
+
+    fn set_nonblocking(&self, on: bool) -> io::Result<()> {
+        match self {
+            Sock::Tcp(s) => s.set_nonblocking(on),
+            Sock::Unix(s) => s.set_nonblocking(on),
+        }
+    }
+
+    fn shutdown_write(&self) {
+        let _ = match self {
+            Sock::Tcp(s) => s.shutdown(Shutdown::Write),
+            Sock::Unix(s) => s.shutdown(Shutdown::Write),
+        };
+    }
+}
+
+impl Read for Sock {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Sock::Tcp(s) => s.read(buf),
+            Sock::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Sock {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Sock::Tcp(s) => s.write(buf),
+            Sock::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Sock::Tcp(s) => s.flush(),
+            Sock::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Monotonic counter making Unix socket paths unique within a process
+/// (concurrent reactor runs in one test binary must not collide).
+static UDS_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Open `workers` connected socket pairs of the requested family.
+/// Loopback connect-then-accept is sequential-safe (the listener backlog
+/// absorbs the connect); workers are interchangeable, so pairing order
+/// is irrelevant.
+fn socket_pairs(kind: SocketKind, workers: usize) -> Result<(Vec<Sock>, Vec<Sock>)> {
+    let mut driver = Vec::with_capacity(workers);
+    let mut worker = Vec::with_capacity(workers);
+    match kind {
+        SocketKind::Tcp => {
+            let listener = TcpListener::bind(("127.0.0.1", 0))?;
+            let addr = listener.local_addr()?;
+            for _ in 0..workers {
+                let c = TcpStream::connect(addr)?;
+                let (s, _) = listener.accept()?;
+                // Frames are latency-sensitive and self-contained; never
+                // wait for a fuller segment.
+                c.set_nodelay(true)?;
+                s.set_nodelay(true)?;
+                driver.push(Sock::Tcp(c));
+                worker.push(Sock::Tcp(s));
+            }
+        }
+        SocketKind::Unix => {
+            let path = std::env::temp_dir().join(format!(
+                "uals-reactor-{}-{}.sock",
+                std::process::id(),
+                UDS_COUNTER.fetch_add(1, Ordering::Relaxed),
+            ));
+            // A stale path from a crashed prior run would fail the bind.
+            let _ = std::fs::remove_file(&path);
+            let listener = UnixListener::bind(&path)?;
+            for _ in 0..workers {
+                let c = UnixStream::connect(&path)?;
+                let (s, _) = listener.accept()?;
+                driver.push(Sock::Unix(c));
+                worker.push(Sock::Unix(s));
+            }
+            // All pairs are connected; the filesystem name is no longer
+            // needed (the sockets live on).
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+    for c in &driver {
+        c.set_nonblocking(true)?;
+    }
+    Ok((driver, worker))
+}
+
+/// Read exactly `buf.len()` bytes from a blocking socket. `Ok(false)` on
+/// a clean EOF at a message boundary (the driver hung up).
+fn read_exact_or_eof(sock: &mut Sock, buf: &mut [u8]) -> io::Result<bool> {
+    let mut n = 0;
+    while n < buf.len() {
+        match sock.read(&mut buf[n..]) {
+            Ok(0) if n == 0 => return Ok(false),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-envelope",
+                ))
+            }
+            Ok(k) => n += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Backend worker body: blocking envelope reads, exact wire decode, the
+/// real detector for DNN-bound frames, then a `(seq, recv_us)` ack.
+/// Returns when the driver shuts the connection down.
+fn worker_loop(
+    mut sock: Sock,
+    bgs: Arc<HashMap<u32, Vec<f32>>>,
+    ranges: Arc<Vec<HueRanges>>,
+    use_artifacts: bool,
+    delta_tile: Option<usize>,
+    epoch: Instant,
+) -> Result<()> {
+    // The PJRT client is not `Send`: the detector must be built here, on
+    // the worker thread (same rule as the threaded driver's factory).
+    let detector = if use_artifacts {
+        let engine = Engine::from_default_artifacts()?;
+        Detector::artifact(&engine)?
+    } else {
+        Detector::native(12, 25.0)
+    };
+    let mut decoders: HashMap<u32, WireDecoder> = HashMap::new();
+    let mut header = [0u8; ENVELOPE_LEN];
+    let mut wire: Vec<u8> = Vec::new();
+    let mut rgb: Vec<f32> = Vec::new();
+    loop {
+        if !read_exact_or_eof(&mut sock, &mut header)? {
+            return Ok(()); // orderly shutdown
+        }
+        let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
+        let seq = u64::from_le_bytes([
+            header[4], header[5], header[6], header[7], header[8], header[9], header[10],
+            header[11],
+        ]);
+        let dnn = header[12] != 0;
+        let camera = u32::from_le_bytes([header[13], header[14], header[15], header[16]]);
+        wire.resize(len, 0);
+        if !read_exact_or_eof(&mut sock, &mut wire)? {
+            bail!("connection closed between envelope header and body");
+        }
+        // The frame has fully crossed the socket: timestamp now, against
+        // the epoch shared with the driver (one process, one monotonic
+        // clock).
+        let recv_us = epoch.elapsed().as_micros() as u64;
+        let dec = decoders.entry(camera).or_insert_with(|| {
+            let d = WireDecoder::new();
+            match delta_tile {
+                Some(t) => d.with_tile(t),
+                None => d,
+            }
+        });
+        let h = dec.decode_into(&wire, &mut rgb)?;
+        if dnn {
+            let bg = bgs
+                .get(&h.camera)
+                .ok_or_else(|| anyhow!("no background for camera {}", h.camera))?;
+            let _ = detector.detect(&rgb, bg, h.width, h.height, &ranges)?;
+        }
+        let mut ack = [0u8; ACK_LEN];
+        ack[..8].copy_from_slice(&seq.to_le_bytes());
+        ack[8..].copy_from_slice(&recv_us.to_le_bytes());
+        sock.write_all(&ack)?;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The reactor-side executor
+// ---------------------------------------------------------------------------
+
+/// Per-frame state between enqueue and ack.
+struct Pending {
+    net_cam_ls_ms: f64,
+    send_us: u64,
+}
+
+/// One driver-side connection: a non-blocking socket plus its output
+/// backlog and partially-parsed ack bytes.
+struct Conn {
+    sock: Sock,
+    /// Unflushed envelope bytes (`pos..` is still to write).
+    out: Vec<u8>,
+    pos: usize,
+    /// Whether EPOLLOUT interest is currently registered.
+    want_write: bool,
+    /// Ack bytes read but not yet complete (`< ACK_LEN`).
+    ackbuf: Vec<u8>,
+}
+
+/// Reactor [`BackendExecutor`]: filter stages + cost sampling on the
+/// driver thread (the exact sequence the simulator and the threaded
+/// driver sample), every transmitted frame wire-encoded onto a real
+/// socket, completion rendezvous via the epoll loop, and the measured
+/// transfer surfaced to the core through
+/// [`BackendExecutor::take_network_sample`].
+pub struct ReactorBackend {
+    planner: BackendQuery,
+    encoding: WireEncoding,
+    encoders: HashMap<u32, WireEncoder>,
+    conns: Vec<Conn>,
+    poller: Poller,
+    workers: Vec<JoinHandle<Result<()>>>,
+    epoch: Instant,
+    submit_seq: u64,
+    pending: HashMap<u64, Pending>,
+    acks: HashMap<u64, u64>,
+    /// Samples measured at `on_complete`, awaiting the core's
+    /// `take_network_sample` pull (empty when `feed_network` is off).
+    ready: HashMap<u64, (f64, f64)>,
+    feed_network: bool,
+    recv_timeout: Duration,
+    transport: SocketKind,
+    workers_n: usize,
+    frames_sent: u64,
+    bytes_sent: u64,
+    acks_received: u64,
+    net_samples_fed: u64,
+    transfer: Summary,
+    scratch: Vec<u8>,
+    events: Vec<Readiness>,
+}
+
+impl ReactorBackend {
+    /// Open the socket pairs, spawn the worker pool and register every
+    /// driver-side connection with the poller.
+    pub fn spawn(videos: &[Video], cfg: &RealtimeConfig, opts: &ReactorOpts) -> Result<Self> {
+        let workers_n = opts.workers.max(1);
+        let (driver_socks, worker_socks) = socket_pairs(opts.transport, workers_n)?;
+        let bgs: Arc<HashMap<u32, Vec<f32>>> = Arc::new(
+            videos
+                .iter()
+                .map(|v| (v.camera_id(), v.background().to_vec()))
+                .collect(),
+        );
+        let ranges: Arc<Vec<HueRanges>> =
+            Arc::new(cfg.query.colors.iter().map(|c| c.ranges()).collect());
+        let epoch = Instant::now();
+        let delta_tile = match opts.encoding {
+            WireEncoding::Delta { tile, .. } => Some(tile),
+            WireEncoding::Raw => None,
+        };
+        let use_artifacts = cfg.use_artifacts;
+        let mut workers = Vec::with_capacity(workers_n);
+        for (i, sock) in worker_socks.into_iter().enumerate() {
+            let bgs = Arc::clone(&bgs);
+            let ranges = Arc::clone(&ranges);
+            let handle = std::thread::Builder::new()
+                .name(format!("reactor-worker-{i}"))
+                .spawn(move || worker_loop(sock, bgs, ranges, use_artifacts, delta_tile, epoch))
+                .map_err(|e| anyhow!("failed to spawn reactor worker {i}: {e}"))?;
+            workers.push(handle);
+        }
+        let mut poller = Poller::new().map_err(|e| anyhow!("poller setup failed: {e}"))?;
+        let mut conns = Vec::with_capacity(workers_n);
+        for (i, sock) in driver_socks.into_iter().enumerate() {
+            poller
+                .register(sock.raw_fd(), i as u64)
+                .map_err(|e| anyhow!("poller register failed: {e}"))?;
+            conns.push(Conn {
+                sock,
+                out: Vec::new(),
+                pos: 0,
+                want_write: false,
+                ackbuf: Vec::new(),
+            });
+        }
+        let planner = BackendQuery::new(
+            cfg.query.clone(),
+            Detector::native(12, 25.0),
+            CostModel::new(cfg.costs.clone(), cfg.seed),
+            25.0,
+        );
+        Ok(ReactorBackend {
+            planner,
+            encoding: opts.encoding,
+            encoders: HashMap::new(),
+            conns,
+            poller,
+            workers,
+            epoch,
+            submit_seq: 0,
+            pending: HashMap::new(),
+            acks: HashMap::new(),
+            ready: HashMap::new(),
+            feed_network: opts.feed_network,
+            recv_timeout: Duration::from_secs_f64(
+                (cfg.backend_recv_timeout_ms / 1e3).max(1e-3),
+            ),
+            transport: opts.transport,
+            workers_n,
+            frames_sent: 0,
+            bytes_sent: 0,
+            acks_received: 0,
+            net_samples_fed: 0,
+            transfer: Summary::new(),
+            scratch: Vec::new(),
+            events: Vec::new(),
+        })
+    }
+
+    /// Socket-side counters for the run report.
+    pub fn socket_stats(&self) -> SocketStats {
+        let mut wire_modes = [0u64; 4];
+        for enc in self.encoders.values() {
+            for (acc, n) in wire_modes.iter_mut().zip(enc.mode_counts()) {
+                *acc += n;
+            }
+        }
+        SocketStats {
+            transport: self.transport.name(),
+            workers: self.workers_n,
+            frames_sent: self.frames_sent,
+            bytes_sent: self.bytes_sent,
+            acks_received: self.acks_received,
+            net_samples_fed: self.net_samples_fed,
+            transfer_ms_mean: self.transfer.mean(),
+            transfer_ms_max: if self.transfer.count() == 0 { 0.0 } else { self.transfer.max() },
+            wire_modes,
+        }
+    }
+
+    /// Try to flush connection `ci`'s output backlog; registers (or
+    /// clears) write interest as the kernel buffer fills and drains.
+    fn flush_conn(&mut self, ci: usize) -> Result<()> {
+        let conn = &mut self.conns[ci];
+        while conn.pos < conn.out.len() {
+            match conn.sock.write(&conn.out[conn.pos..]) {
+                Ok(0) => bail!("reactor connection {ci}: kernel accepted zero bytes"),
+                Ok(n) => conn.pos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(anyhow!("reactor connection {ci}: write failed: {e}")),
+            }
+        }
+        let drained = conn.pos >= conn.out.len();
+        if drained {
+            conn.out.clear();
+            conn.pos = 0;
+        }
+        if conn.want_write == drained {
+            // Interest flips: blocked ⇒ wake on writable; drained ⇒ stop.
+            conn.want_write = !drained;
+            let fd = conn.sock.raw_fd();
+            let on = conn.want_write;
+            self.poller
+                .set_writable_interest(fd, ci as u64, on)
+                .map_err(|e| anyhow!("poller interest update failed: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Drain every complete ack buffered on connection `ci` into the
+    /// ledger. An EOF here means a worker died mid-run.
+    fn drain_acks(&mut self, ci: usize) -> Result<()> {
+        let mut buf = [0u8; 4096];
+        loop {
+            let conn = &mut self.conns[ci];
+            match conn.sock.read(&mut buf) {
+                Ok(0) => bail!(
+                    "reactor worker {ci} closed its connection mid-run \
+                     (it may have failed during startup — see the join error)"
+                ),
+                Ok(n) => conn.ackbuf.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(anyhow!("reactor connection {ci}: read failed: {e}")),
+            }
+        }
+        let conn = &mut self.conns[ci];
+        let whole = conn.ackbuf.len() / ACK_LEN * ACK_LEN;
+        for ack in conn.ackbuf[..whole].chunks_exact(ACK_LEN) {
+            let seq = u64::from_le_bytes([
+                ack[0], ack[1], ack[2], ack[3], ack[4], ack[5], ack[6], ack[7],
+            ]);
+            let recv_us = u64::from_le_bytes([
+                ack[8], ack[9], ack[10], ack[11], ack[12], ack[13], ack[14], ack[15],
+            ]);
+            self.acks.insert(seq, recv_us);
+            self.acks_received += 1;
+        }
+        conn.ackbuf.drain(..whole);
+        Ok(())
+    }
+
+    /// One reactor turn: flush pending output, wait up to `timeout` for
+    /// readiness, service readable/writable connections.
+    fn turn(&mut self, timeout: Duration) -> Result<()> {
+        for ci in 0..self.conns.len() {
+            if self.conns[ci].pos < self.conns[ci].out.len() {
+                self.flush_conn(ci)?;
+            }
+        }
+        self.events.clear();
+        let mut events = std::mem::take(&mut self.events);
+        let r = self.poller.wait(timeout, &mut events);
+        // Reinstall the scratch buffer before error handling so a failed
+        // wait doesn't leak its capacity.
+        self.events = events;
+        r.map_err(|e| anyhow!("poller wait failed: {e}"))?;
+        let events = std::mem::take(&mut self.events);
+        for &(token, readable, writable) in &events {
+            let ci = token as usize;
+            if ci >= self.conns.len() {
+                continue;
+            }
+            if writable && self.conns[ci].pos < self.conns[ci].out.len() {
+                self.flush_conn(ci)?;
+            }
+            if readable {
+                self.drain_acks(ci)?;
+            }
+        }
+        self.events = events;
+        Ok(())
+    }
+}
+
+impl BackendExecutor for ReactorBackend {
+    fn submit(&mut self, payload: FramePayload, background: &[f32]) -> Result<(Stage, f64)> {
+        let seq = self.submit_seq;
+        self.submit_seq += 1;
+        // Filter stages + cost sampling in dispatch order — the exact
+        // RNG sequence the sim and threaded drivers draw, so decisions
+        // stay bit-comparable.
+        let r = self
+            .planner
+            .plan(&payload.rgb, background, payload.width, payload.height)?;
+        let dnn = r.last_stage == Stage::Sink;
+        let encoding = self.encoding;
+        let enc = self
+            .encoders
+            .entry(payload.camera)
+            .or_insert_with(|| WireEncoder::new(encoding));
+        enc.encode_into(
+            payload.camera,
+            payload.width,
+            payload.height,
+            &payload.rgb,
+            &mut self.scratch,
+        );
+        let ci = payload.camera as usize % self.conns.len();
+        let conn = &mut self.conns[ci];
+        conn.out.extend_from_slice(&(self.scratch.len() as u32).to_le_bytes());
+        conn.out.extend_from_slice(&seq.to_le_bytes());
+        conn.out.push(u8::from(dnn));
+        conn.out.extend_from_slice(&payload.camera.to_le_bytes());
+        conn.out.extend_from_slice(&self.scratch);
+        // The transfer clock starts at enqueue: backlog the reactor has
+        // not flushed yet is backpressure too.
+        let send_us = self.epoch.elapsed().as_micros() as u64;
+        self.pending
+            .insert(seq, Pending { net_cam_ls_ms: payload.net_cam_ls_ms, send_us });
+        self.frames_sent += 1;
+        self.bytes_sent += (ENVELOPE_LEN + self.scratch.len()) as u64;
+        // Opportunistic turn: start the bytes moving and harvest any
+        // acks already buffered, without blocking.
+        self.turn(Duration::ZERO)?;
+        Ok((r.last_stage, r.exec_ms))
+    }
+
+    fn on_complete(&mut self, seq: u64, _dnn: bool) -> Result<()> {
+        // Every transmitted frame crossed a socket, so every completion
+        // rendezvouses with its ack (not just DNN-bound frames).
+        let deadline = Instant::now() + self.recv_timeout;
+        loop {
+            if let Some(recv_us) = self.acks.remove(&seq) {
+                let p = self
+                    .pending
+                    .remove(&seq)
+                    .ok_or_else(|| anyhow!("ack for unknown dispatch seq {seq}"))?;
+                let transfer_ms = recv_us.saturating_sub(p.send_us) as f64 / 1e3;
+                self.transfer.add(transfer_ms);
+                if self.feed_network {
+                    self.ready.insert(seq, (p.net_cam_ls_ms, transfer_ms));
+                }
+                return Ok(());
+            }
+            if Instant::now() >= deadline {
+                bail!(
+                    "reactor backend unresponsive: no ack for frame {seq} within {:?} \
+                     ({} of {} frames acked)",
+                    self.recv_timeout,
+                    self.acks_received,
+                    self.frames_sent
+                );
+            }
+            self.turn(Duration::from_millis(5))?;
+        }
+    }
+
+    fn take_network_sample(&mut self, seq: u64) -> Option<(f64, f64)> {
+        let s = self.ready.remove(&seq);
+        if s.is_some() {
+            self.net_samples_fed += 1;
+        }
+        s
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        // Every submit was acked (the core applies all completions before
+        // finishing), so the only work left is an orderly hang-up.
+        for conn in self.conns.drain(..) {
+            conn.sock.shutdown_write();
+        }
+        let mut first_err = None;
+        for (i, h) in self.workers.drain(..).enumerate() {
+            let r = match h.join() {
+                Ok(r) => r,
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "opaque panic payload".to_string());
+                    Err(anyhow!("reactor worker {i} panicked: {msg}"))
+                }
+            };
+            if let Err(e) = r {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ReactorBackend {
+    /// Error-path cleanup: hang up so blocked workers see EOF, then join
+    /// them (results discarded — the run already failed). The success
+    /// path drains both vectors in `finish`, making this a no-op.
+    fn drop(&mut self) {
+        for conn in self.conns.drain(..) {
+            conn.sock.shutdown_write();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+/// Run the multi-camera stream through the reactor-mode realtime
+/// pipeline (frames over real loopback sockets; see the module docs).
+pub fn run_reactor(
+    videos: &[Video],
+    model: &UtilityModel,
+    cfg: &RealtimeConfig,
+    opts: &ReactorOpts,
+) -> Result<ReactorReport> {
+    let fps_total = crate::video::streamer::aggregate_fps(videos);
+    run_reactor_with(
+        videos,
+        model,
+        cfg,
+        opts,
+        IterArrivals::new(crate::video::Streamer::new(videos), fps_total),
+    )
+}
+
+/// [`run_reactor`] over any [`ArrivalModel`] workload (bursty Poisson
+/// ingress, camera churn, …).
+pub fn run_reactor_with<A: ArrivalModel>(
+    videos: &[Video],
+    model: &UtilityModel,
+    cfg: &RealtimeConfig,
+    opts: &ReactorOpts,
+    arrivals: A,
+) -> Result<ReactorReport> {
+    if !cfg.transport.link.is_ideal() {
+        bail!(
+            "reactor mode replaces the modeled link with real sockets: \
+             configure TransportConfig::default() (ideal link), not a \
+             bandwidth-modeled one"
+        );
+    }
+    let start = Instant::now();
+    let core_cfg: SimConfig = cfg.pipeline(arrivals.fps_total()).into();
+
+    let extractor = if cfg.use_artifacts {
+        let engine = Engine::from_default_artifacts()?;
+        Extractor::artifact(&engine, model.clone())?
+    } else {
+        Extractor::native(model.clone())
+    };
+
+    let backgrounds = backgrounds_of(videos);
+    let mut executor = ReactorBackend::spawn(videos, cfg, opts)?;
+    let mut clock =
+        WallClock::new(cfg.time_scale).with_completion_pacing(cfg.cost_emulation_scale > 0.0);
+    let report = run_pipeline(
+        arrivals,
+        &backgrounds,
+        &core_cfg,
+        &extractor,
+        &mut executor,
+        &mut clock,
+    )?;
+    Ok(ReactorReport {
+        pipeline: report,
+        wall: start.elapsed(),
+        socket: executor.socket_stats(),
+    })
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)] // test assertions
+mod tests {
+    use super::*;
+
+    #[test]
+    fn socket_pairs_connect_and_carry_bytes_both_families() {
+        for kind in [SocketKind::Tcp, SocketKind::Unix] {
+            let (mut driver, mut worker) = socket_pairs(kind, 2).unwrap();
+            // Driver sockets are non-blocking: flip one back for a
+            // simple blocking echo check.
+            driver[0].set_nonblocking(false).unwrap();
+            driver[0].write_all(b"ping").unwrap();
+            let mut buf = [0u8; 4];
+            worker[0].read_exact(&mut buf).unwrap();
+            assert_eq!(&buf, b"ping", "{} pair 0 carries bytes", kind.name());
+            worker[0].write_all(b"pong").unwrap();
+            driver[0].read_exact(&mut buf).unwrap();
+            assert_eq!(&buf, b"pong");
+            // Hanging up the second pair produces a clean EOF.
+            driver[1].shutdown_write();
+            let mut h = [0u8; ENVELOPE_LEN];
+            assert!(!read_exact_or_eof(&mut worker[1], &mut h).unwrap());
+        }
+    }
+
+    #[test]
+    fn poller_reports_readable_connection() {
+        let (mut driver, mut worker) = socket_pairs(SocketKind::Tcp, 1).unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.register(driver[0].raw_fd(), 7).unwrap();
+        worker[0].write_all(&[1u8; ACK_LEN]).unwrap();
+        let mut events = Vec::new();
+        // The loopback delivery is asynchronous; poll until it lands.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while events.iter().all(|&(t, r, _)| t != 7 || !r) {
+            assert!(Instant::now() < deadline, "readable event never arrived");
+            events.clear();
+            poller.wait(Duration::from_millis(50), &mut events).unwrap();
+        }
+        let mut buf = [0u8; ACK_LEN];
+        driver[0].set_nonblocking(false).unwrap();
+        driver[0].read_exact(&mut buf).unwrap();
+        assert_eq!(buf, [1u8; ACK_LEN]);
+    }
+
+    #[test]
+    fn reactor_opts_builder_clamps_workers() {
+        let o = ReactorOpts::default()
+            .workers(0)
+            .transport(SocketKind::Unix)
+            .feed_network(false);
+        assert_eq!(o.workers, 1);
+        assert_eq!(o.transport, SocketKind::Unix);
+        assert!(!o.feed_network);
+    }
+}

@@ -55,8 +55,11 @@ use std::time::{Duration, Instant};
 
 /// Real-time run parameters.
 pub struct RealtimeConfig {
+    /// The query: colors of interest, filter thresholds, latency bound.
     pub query: QueryConfig,
+    /// Load-shedder tuning (admission CDF, queue capacity, control gains).
     pub shedder: ShedderConfig,
+    /// Per-stage execution/transfer cost distributions (paper Table I).
     pub costs: CostConfig,
     /// Emulate the heavy-DNN latency by pacing backend completions to
     /// their virtual due time. 0.0 disables cost emulation (pure compute
@@ -66,6 +69,7 @@ pub struct RealtimeConfig {
     /// fast-forward). Cost emulation scales identically so the control
     /// loop sees a consistent world.
     pub time_scale: f64,
+    /// Backend concurrency (token capacity).
     pub backend_tokens: u32,
     /// Use the AOT artifact path (false = native oracle; for A/B benches).
     pub use_artifacts: bool,
@@ -213,13 +217,19 @@ fn supervisor_cfg(cfg: &RealtimeConfig) -> SupervisorConfig {
 
 /// Results of a real-time run.
 pub struct RealtimeReport {
+    /// Quality-of-result accounting (detected vs missed targets).
     pub qor: QorTracker,
+    /// Measured end-to-end frame latency distribution (stream-time ms).
     pub latency: LatencyTracker,
+    /// Per-stage frame counts.
     pub stages: StageCounts,
     /// Terminal shed/transmit decision per ingress frame (event order).
     pub decisions: Vec<FrameDecision>,
+    /// Frames that arrived at the Load Shedder.
     pub ingress: u64,
+    /// Frames delivered to the backend.
     pub transmitted: u64,
+    /// Frames shed (admission gate, queue eviction, or deadline check).
     pub shed: u64,
     /// Frames lost on the modeled link (0 under the ideal default).
     pub link_dropped: u64,
@@ -371,7 +381,11 @@ impl BackendExecutor for ThreadedBackend {
 }
 
 /// Run the multi-camera stream through the real-time pipeline.
-#[doc = "Deprecated: use `Pipeline::builder()` (`.realtime(opts).run(videos, model)`); this free function is kept as a thin compatibility wrapper."]
+///
+/// Deprecated: use
+/// [`Pipeline::builder()`](crate::pipeline::Pipeline::builder)`.realtime(opts)`
+/// [`.run(videos, model)`](crate::pipeline::RealtimeBuilder::run); this
+/// free function is kept as a thin compatibility wrapper.
 pub fn run_realtime(
     videos: &[Video],
     model: &UtilityModel,
@@ -388,7 +402,11 @@ pub fn run_realtime(
 
 /// [`run_realtime`] over any [`ArrivalModel`] — the wall-clock driver
 /// against a pluggable workload (bursty Poisson ingress, camera churn, …).
-#[doc = "Deprecated: use `Pipeline::builder()` (`.realtime(opts).run_with(videos, model, arrivals)`); this free function is kept as a thin compatibility wrapper."]
+///
+/// Deprecated: use
+/// [`Pipeline::builder()`](crate::pipeline::Pipeline::builder)`.realtime(opts)`
+/// [`.run_with(videos, model, arrivals)`](crate::pipeline::RealtimeBuilder::run_with);
+/// this free function is kept as a thin compatibility wrapper.
 pub fn run_realtime_with<A: ArrivalModel>(
     videos: &[Video],
     model: &UtilityModel,
@@ -595,7 +613,11 @@ impl MultiBackendExecutor for MultiThreadedBackend {
 /// the wall-clock pipeline (the multi-query analogue of
 /// [`run_realtime`]). Decisions are clock-invariant with
 /// [`crate::pipeline::run_multi_sim`] for the same seed and stream.
-#[doc = "Deprecated: use `Pipeline::builder()` (`.multi_query(set).realtime(opts).run(videos)`); this free function is kept as a thin compatibility wrapper."]
+///
+/// Deprecated: use
+/// [`Pipeline::builder()`](crate::pipeline::Pipeline::builder)`.multi_query(set).realtime(opts)`
+/// [`.run(videos)`](crate::pipeline::MultiRealtimeBuilder::run); this
+/// free function is kept as a thin compatibility wrapper.
 pub fn run_multi_realtime(
     videos: &[Video],
     set: &QuerySet,
@@ -611,7 +633,11 @@ pub fn run_multi_realtime(
 }
 
 /// [`run_multi_realtime`] over any [`ArrivalModel`] workload.
-#[doc = "Deprecated: use `Pipeline::builder()` (`.multi_query(set).realtime(opts).run_with(videos, arrivals)`); this free function is kept as a thin compatibility wrapper."]
+///
+/// Deprecated: use
+/// [`Pipeline::builder()`](crate::pipeline::Pipeline::builder)`.multi_query(set).realtime(opts)`
+/// [`.run_with(videos, arrivals)`](crate::pipeline::MultiRealtimeBuilder::run_with);
+/// this free function is kept as a thin compatibility wrapper.
 pub fn run_multi_realtime_with<A: ArrivalModel>(
     videos: &[Video],
     set: &QuerySet,

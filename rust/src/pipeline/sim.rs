@@ -35,7 +35,11 @@ pub type SimReport = crate::pipeline::core::PipelineReport;
 ///
 /// `backgrounds` maps camera id → borrowed background model (H*W*3);
 /// build it with [`backgrounds_of`].
-#[doc = "Deprecated: use `Pipeline::builder()` (`.sim().run_frames(frames, backgrounds, extractor, backend)`); this free function is kept as a thin compatibility wrapper."]
+///
+/// Deprecated: use
+/// [`Pipeline::builder()`](crate::pipeline::Pipeline::builder)`.sim()`
+/// [`.run_frames(frames, backgrounds, extractor, backend)`](crate::pipeline::SimBuilder::run_frames);
+/// this free function is kept as a thin compatibility wrapper.
 pub fn run_sim<I>(
     frames: I,
     backgrounds: &BackgroundMap<'_>,
@@ -57,7 +61,11 @@ where
 
 /// [`run_sim`] over any [`ArrivalModel`] (bursty Poisson ingress, camera
 /// churn, …): the discrete-event clock against a pluggable workload.
-#[doc = "Deprecated: use `Pipeline::builder()` (`.sim().run_arrivals(arrivals, backgrounds, extractor, backend)`); this free function is kept as a thin compatibility wrapper."]
+///
+/// Deprecated: use
+/// [`Pipeline::builder()`](crate::pipeline::Pipeline::builder)`.sim()`
+/// [`.run_arrivals(arrivals, backgrounds, extractor, backend)`](crate::pipeline::SimBuilder::run_arrivals);
+/// this free function is kept as a thin compatibility wrapper.
 pub fn run_sim_with<A: ArrivalModel>(
     arrivals: A,
     backgrounds: &BackgroundMap<'_>,
@@ -74,7 +82,11 @@ pub fn run_sim_with<A: ArrivalModel>(
 /// in-process [`BackendQuery`] per query (see
 /// [`crate::pipeline::multi_backends`] for the default construction).
 /// `extractor` must be built from `set`'s union model.
-#[doc = "Deprecated: use `Pipeline::builder()` (`.multi_query(set).run_frames(...)`); this free function is kept as a thin compatibility wrapper."]
+///
+/// Deprecated: use
+/// [`Pipeline::builder()`](crate::pipeline::Pipeline::builder)`.multi_query(set)`
+/// [`.run_frames(...)`](crate::pipeline::MultiQueryBuilder::run_frames);
+/// this free function is kept as a thin compatibility wrapper.
 pub fn run_multi_sim<I>(
     frames: I,
     backgrounds: &BackgroundMap<'_>,
@@ -97,7 +109,11 @@ where
 }
 
 /// [`run_multi_sim`] over any [`ArrivalModel`] workload.
-#[doc = "Deprecated: use `Pipeline::builder()` (`.multi_query(set).run_arrivals(...)`); this free function is kept as a thin compatibility wrapper."]
+///
+/// Deprecated: use
+/// [`Pipeline::builder()`](crate::pipeline::Pipeline::builder)`.multi_query(set)`
+/// [`.run_arrivals(...)`](crate::pipeline::MultiQueryBuilder::run_arrivals);
+/// this free function is kept as a thin compatibility wrapper.
 pub fn run_multi_sim_with<A: ArrivalModel>(
     arrivals: A,
     backgrounds: &BackgroundMap<'_>,

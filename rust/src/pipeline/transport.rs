@@ -107,10 +107,12 @@ pub struct Link {
 }
 
 impl Link {
+    /// A fresh idle link with its own seeded jitter/loss RNG.
     pub fn new(model: LinkModel, seed: u64) -> Link {
         Link { model, rng: Rng::new(seed ^ 0x71A5), busy_until_ms: 0.0 }
     }
 
+    /// The static model this link instance samples from.
     pub fn model(&self) -> &LinkModel {
         &self.model
     }
@@ -200,7 +202,9 @@ impl Link {
 /// encoding that determines each frame's serialized size.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TransportConfig {
+    /// The modeled shedder→backend link.
     pub link: LinkModel,
+    /// Wire encoding that sets each frame's serialized size.
     pub encoding: WireEncoding,
 }
 
@@ -218,6 +222,7 @@ impl TransportConfig {
         TransportConfig { link: LinkModel::mbps(bandwidth_mbps), encoding }
     }
 
+    /// True when the link is ideal (infinite bandwidth, no delay/loss).
     pub fn is_ideal(&self) -> bool {
         self.link.is_ideal()
     }

@@ -25,6 +25,7 @@ pub struct IterArrivals<I> {
 }
 
 impl<I: Iterator<Item = Frame>> IterArrivals<I> {
+    /// Wrap a ts-ordered frame iterator with its nominal aggregate fps.
     pub fn new(iter: I, fps_total: f64) -> Self {
         IterArrivals { iter, fps_total }
     }
@@ -122,6 +123,7 @@ pub struct ChurnWindow {
 }
 
 impl ChurnWindow {
+    /// A camera present for the whole run (join at 0, never leave).
     pub fn always() -> Self {
         ChurnWindow { join_ms: 0.0, leave_ms: f64::INFINITY }
     }

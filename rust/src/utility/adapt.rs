@@ -108,8 +108,11 @@ pub enum AdaptEventKind {
 /// (virtual time ⇒ identical under sim and wall clocks).
 #[derive(Debug, Clone, PartialEq)]
 pub struct AdaptEvent {
+    /// Label time (virtual ms) that triggered the decision.
     pub t_ms: f64,
+    /// Camera whose label stream drove the event.
     pub camera: u32,
+    /// What the adapter decided.
     pub kind: AdaptEventKind,
     /// The model version the event concerns: the candidate for
     /// `Retrain`/`ShadowReject`, the new live version for `Swap`, the
@@ -122,13 +125,18 @@ pub struct AdaptEvent {
 pub struct AdaptationStats {
     /// Delayed ground-truth labels the adapter consumed.
     pub labels_observed: u64,
+    /// Candidates finalized into shadow evaluation.
     pub retrains: u64,
+    /// Candidates promoted to live.
     pub swaps: u64,
+    /// Post-swap regressions that restored the previous version.
     pub rollbacks: u64,
+    /// Candidates discarded by their shadow-window verdict.
     pub shadow_rejected: u64,
     /// Admission-CDF reseeds the engine performed (one per swap or
     /// rollback it acted on).
     pub reseeds: u64,
+    /// Time-ordered event log of every adaptation decision.
     pub events: Vec<AdaptEvent>,
 }
 
@@ -235,6 +243,7 @@ pub struct OnlineAdapter {
 }
 
 impl OnlineAdapter {
+    /// A fresh adapter: every camera starts on the `base` model.
     pub fn new(cfg: AdaptationConfig, base: UtilityModel) -> Self {
         let colors: Vec<NamedColor> = base.colors.iter().map(|c| c.color).collect();
         OnlineAdapter {
@@ -248,10 +257,12 @@ impl OnlineAdapter {
         }
     }
 
+    /// The adaptation knobs this adapter runs under.
     pub fn config(&self) -> &AdaptationConfig {
         &self.cfg
     }
 
+    /// Counters + event log accumulated so far.
     pub fn stats(&self) -> &AdaptationStats {
         &self.stats
     }

@@ -48,8 +48,11 @@ pub enum DriftKind {
 /// A half-open virtual-time window `[start_ms, end_ms)` of one drift.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DriftWindow {
+    /// Window start (virtual ms, inclusive).
     pub start_ms: f64,
+    /// Window end (virtual ms, exclusive).
     pub end_ms: f64,
+    /// The drift active inside the window.
     pub kind: DriftKind,
 }
 
@@ -80,6 +83,7 @@ pub struct DriftPlan {
 }
 
 impl DriftPlan {
+    /// The empty plan (same as `DriftPlan::default()`).
     pub fn new() -> Self {
         DriftPlan::default()
     }
@@ -102,10 +106,12 @@ impl DriftPlan {
         self.windows.push(DriftWindow { start_ms, end_ms, kind });
     }
 
+    /// True when no drift windows are scheduled.
     pub fn is_empty(&self) -> bool {
         self.windows.is_empty()
     }
 
+    /// All scheduled windows, in insertion order.
     pub fn windows(&self) -> &[DriftWindow] {
         &self.windows
     }

@@ -4,13 +4,20 @@
 //! (object ids, paints, bounding boxes) so QoR (paper Eq. 2/3) can be
 //! computed exactly. See DESIGN.md §2 for the substitution argument.
 
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod dataset;
 pub mod drift;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod frame;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod generator;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod objects;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod scene;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod segments;
+#[allow(missing_docs)] // item docs pending; module docs present
 pub mod streamer;
 pub mod wire;
 

@@ -80,9 +80,13 @@ impl WireEncoding {
 /// What one encoded message actually was (stats / tests).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WireMode {
+    /// Quantized full frame (every pixel exactly u8-representable).
     RawU8 = 0,
+    /// Lossless f32 full frame (fallback for unquantizable pixels).
     RawF32 = 1,
+    /// Delta-stream keyframe: a full frame that (re)sets the reference.
     Key = 2,
+    /// Delta frame: only the dirty tiles against the reference.
     Delta = 3,
 }
 
@@ -101,9 +105,13 @@ impl WireMode {
 /// Decoded message header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WireHeader {
+    /// How the payload was encoded.
     pub mode: WireMode,
+    /// Source camera id.
     pub camera: u32,
+    /// Frame width in pixels.
     pub width: usize,
+    /// Frame height in pixels.
     pub height: usize,
 }
 
@@ -148,6 +156,8 @@ pub struct WireEncoder {
 }
 
 impl WireEncoder {
+    /// A fresh encoder with no delta reference (first delta-mode frame
+    /// will be a keyframe).
     pub fn new(encoding: WireEncoding) -> WireEncoder {
         if let WireEncoding::Delta { tile, .. } = encoding {
             assert!(tile > 0, "tile size must be positive");
@@ -316,6 +326,7 @@ pub struct WireDecoder {
 }
 
 impl WireDecoder {
+    /// A fresh decoder with no reconstructed reference frame.
     pub fn new() -> WireDecoder {
         WireDecoder::default()
     }

@@ -1,0 +1,201 @@
+//! Socket-transparency property of the reactor driver: shipping every
+//! frame across a real loopback socket (TCP or Unix-domain) must not
+//! change a single shedding decision. With measured-transfer feeding
+//! off, the reactor and the threaded `WallClock` driver see the same
+//! virtual-time event order on the same seed and stream, so their
+//! per-frame decision logs must be **bit-identical** — the reactor's
+//! epoll loop, wire encoding and ack rendezvous are pure plumbing.
+//!
+//! Plus the measurement property (feeding on actually reaches the
+//! control loop) and a fault-composition smoke (a randomized fault
+//! storm in reactor mode still satisfies the conservation ledger).
+
+use uals::color::NamedColor;
+use uals::config::{CostConfig, QueryConfig, ShedderConfig};
+use uals::pipeline::realtime::{run_realtime, RealtimeConfig};
+use uals::pipeline::{
+    run_reactor, FaultPlan, FrameDecision, Pipeline, Policy, ReactorOpts, SocketKind,
+};
+use uals::utility::{train, Combine, UtilityModel};
+use uals::video::{Video, VideoConfig, WireEncoding};
+
+fn cameras(n: usize, frames: usize, vehicle_rate: f64, seed: u64) -> Vec<Video> {
+    (0..n)
+        .map(|i| {
+            let mut vc = VideoConfig::new(0xE01 ^ seed, seed * 31 + i as u64, i as u32, frames);
+            vc.traffic.vehicle_rate = vehicle_rate;
+            Video::new(vc)
+        })
+        .collect()
+}
+
+fn model_for(videos: &[Video]) -> UtilityModel {
+    let idx: Vec<usize> = (0..videos.len()).collect();
+    train(videos, &idx, &[NamedColor::Red], Combine::Single)
+}
+
+/// Ideal-conditions realtime config: cost emulation off, 1000×
+/// fast-forward, native oracle — the `core_equivalence.rs` recipe.
+fn rt_cfg(seed: u64, policy: Policy) -> RealtimeConfig {
+    RealtimeConfig {
+        query: QueryConfig::single(NamedColor::Red).with_latency_bound(1200.0),
+        shedder: ShedderConfig::default(),
+        costs: CostConfig::default(),
+        cost_emulation_scale: 0.0,
+        time_scale: 1e-3,
+        backend_tokens: 1,
+        use_artifacts: false,
+        policy,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn assert_decisions_equal(wall: &[FrameDecision], reactor: &[FrameDecision], label: &str) {
+    assert_eq!(wall.len(), reactor.len(), "{label}: decision counts differ");
+    for (i, (a, b)) in wall.iter().zip(reactor).enumerate() {
+        assert_eq!(a, b, "{label}: decision {i} diverges");
+    }
+}
+
+#[test]
+fn reactor_matches_threaded_wallclock_across_seeds_policies_and_sockets() {
+    // Property over (seed, policy, socket family): the socket hop is
+    // decision-transparent when measured feeding is off.
+    for (seed, policy) in [
+        (0x61u64, Policy::UtilityControlLoop),
+        (0x62, Policy::FifoControlLoop),
+    ] {
+        let videos = cameras(2, 30, 0.35, seed);
+        let model = model_for(&videos);
+        let cfg = rt_cfg(seed, policy.clone());
+
+        let wall = run_realtime(&videos, &model, &cfg).expect("wall driver");
+
+        for kind in [SocketKind::Tcp, SocketKind::Unix] {
+            let opts = ReactorOpts::default().transport(kind).feed_network(false);
+            let label = format!("seed {seed:x} / {policy:?} / {}", kind.name());
+            let r = run_reactor(&videos, &model, &cfg, &opts).expect("reactor driver");
+
+            assert_eq!(r.pipeline.ingress, 60, "{label}");
+            assert_eq!(wall.ingress, r.pipeline.ingress, "{label}");
+            assert_eq!(wall.transmitted, r.pipeline.transmitted, "{label}");
+            assert_eq!(wall.shed, r.pipeline.shed, "{label}");
+            assert_decisions_equal(&wall.decisions, &r.pipeline.decisions, &label);
+            assert_eq!(wall.qor.overall(), r.pipeline.qor.overall(), "{label}");
+
+            // Every transmitted frame physically crossed the socket and
+            // came back acked, and each ack yielded one measured sample
+            // (recorded in the stats even though feeding is off).
+            assert_eq!(r.socket.frames_sent, wall.transmitted, "{label}");
+            assert_eq!(r.socket.acks_received, wall.transmitted, "{label}");
+            assert_eq!(r.socket.net_samples_fed, 0, "{label}: feed is off");
+            assert!(r.socket.bytes_sent > 0, "{label}");
+            if wall.transmitted > 0 {
+                assert!(
+                    r.socket.transfer_ms_mean >= 0.0 && r.socket.transfer_ms_max >= 0.0,
+                    "{label}: transfer summary"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn reactor_builder_leaf_matches_free_function() {
+    let videos = cameras(2, 24, 0.3, 0x71);
+    let model = model_for(&videos);
+    let cfg = rt_cfg(0x71, Policy::UtilityControlLoop);
+    let opts = ReactorOpts::default()
+        .transport(SocketKind::Unix)
+        .feed_network(false);
+
+    let direct = run_reactor(&videos, &model, &cfg, &opts).expect("free function");
+    let built = Pipeline::builder()
+        .query(cfg.query.clone())
+        .seed(cfg.seed)
+        .realtime(uals::pipeline::RealtimeOpts::fast_forward(1e-3))
+        .reactor(opts)
+        .run(&videos, &model)
+        .expect("builder leaf");
+
+    assert_eq!(direct.pipeline.transmitted, built.pipeline.transmitted);
+    assert_eq!(direct.pipeline.shed, built.pipeline.shed);
+    assert_decisions_equal(&direct.pipeline.decisions, &built.pipeline.decisions, "builder");
+}
+
+#[test]
+fn reactor_feeds_measured_transfers_to_the_control_loop() {
+    let videos = cameras(2, 30, 0.35, 0x65);
+    let model = model_for(&videos);
+    let cfg = rt_cfg(0x65, Policy::UtilityControlLoop);
+
+    // Delta encoding on a Unix socket, measured feeding ON: every ack
+    // becomes an observe_network sample.
+    let opts = ReactorOpts::default()
+        .transport(SocketKind::Unix)
+        .encoding(WireEncoding::delta_default())
+        .workers(3);
+    let r = run_reactor(&videos, &model, &cfg, &opts).expect("reactor driver");
+
+    assert!(r.pipeline.transmitted > 0, "stream must transmit something");
+    assert_eq!(
+        r.socket.net_samples_fed, r.pipeline.transmitted,
+        "every completed frame feeds one measured sample"
+    );
+    assert_eq!(r.socket.frames_sent, r.pipeline.transmitted);
+    // Delta mode emitted keyframes first, then deltas.
+    let keys = r.socket.wire_modes[2];
+    let deltas = r.socket.wire_modes[3];
+    assert!(keys >= 2, "one keyframe per camera, got {keys}");
+    assert!(keys + deltas > 0);
+    // Conservation is untouched by feeding.
+    assert_eq!(
+        r.pipeline.ingress,
+        r.pipeline.transmitted + r.pipeline.shed
+    );
+}
+
+#[test]
+fn reactor_survives_randomized_fault_storm_with_conservation() {
+    // Fault composition smoke: a randomized storm (camera dropout /
+    // freeze, worker crash, slowdown, poisoned observations) over the
+    // reactor's real sockets still completes and conserves frames.
+    let videos = cameras(2, 60, 0.35, 0x8F);
+    let model = model_for(&videos);
+    let mut cfg = rt_cfg(0x8F, Policy::UtilityControlLoop);
+    cfg.faults = FaultPlan::randomized(7, 4_000.0, 2);
+    assert!(!cfg.faults.is_empty());
+
+    let opts = ReactorOpts::default().transport(SocketKind::Tcp);
+    let r = run_reactor(&videos, &model, &cfg, &opts).expect("reactor under faults");
+    let p = &r.pipeline;
+    assert_eq!(
+        p.ingress,
+        p.transmitted + p.shed + p.link_dropped + p.faults.fault_dropped,
+        "conservation ledger under faults"
+    );
+    assert!(p.end_ms.is_finite() && p.end_ms > 0.0);
+    let q = p.qor.overall();
+    assert!((0.0..=1.0).contains(&q), "QoR {q}");
+    // Frames that reached dispatch crossed the socket and were acked.
+    assert_eq!(r.socket.acks_received, r.socket.frames_sent);
+}
+
+#[test]
+fn reactor_rejects_modeled_link_contention() {
+    // The reactor replaces the modeled link with real sockets; asking
+    // for both at once is a config error, not silent double-counting.
+    let videos = cameras(1, 8, 0.3, 0x99);
+    let model = model_for(&videos);
+    let mut cfg = rt_cfg(0x99, Policy::UtilityControlLoop);
+    cfg.transport =
+        uals::pipeline::TransportConfig::constrained(8.0, WireEncoding::Raw);
+
+    let err = run_reactor(&videos, &model, &cfg, &ReactorOpts::default())
+        .expect_err("non-ideal link must be rejected");
+    assert!(
+        err.to_string().contains("ideal"),
+        "error should name the ideal-link requirement: {err}"
+    );
+}
